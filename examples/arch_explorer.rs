@@ -1,0 +1,101 @@
+//! Architecture explorer — sweep the five TCU microarchitectures across
+//! sizes and variants, printing the area/power grid (Fig 6) and the
+//! efficiency up-ratios (Fig 7) plus the cost breakdown per component.
+//!
+//! Run: `cargo run --release --example arch_explorer [-- --json]`
+
+use ent::arch::{Scale, Tcu, ALL_ARCHS, ALL_SCALES};
+use ent::pe::{Variant, ALL_VARIANTS};
+use ent::util::json::Json;
+use ent::util::table::{f, pct, Table};
+
+fn main() {
+    let json_mode = std::env::args().any(|a| a == "--json");
+    let mut json_rows = Vec::new();
+
+    for arch in ALL_ARCHS {
+        let mut t = Table::new(format!("\n=== {} ===", arch.name())).header(&[
+            "size", "variant", "area mm2", "power mW", "GOPS", "GOPS/mm2", "GOPS/W",
+            "Δarea-eff", "Δenergy-eff",
+        ]);
+        for scale in ALL_SCALES {
+            let s = arch.size_for_scale(scale);
+            let base = Tcu::new(arch, s, Variant::Baseline);
+            for variant in ALL_VARIANTS {
+                let tcu = Tcu::new(arch, s, variant);
+                let c = tcu.cost().total();
+                let d_ae = tcu.area_efficiency() / base.area_efficiency() - 1.0;
+                let d_ee = tcu.energy_efficiency() / base.energy_efficiency() - 1.0;
+                t.row(vec![
+                    format!("{s}"),
+                    variant.name().into(),
+                    f(c.area_um2 / 1e6, 3),
+                    f(c.power_uw / 1e3, 1),
+                    f(tcu.gops(), 0),
+                    f(tcu.area_efficiency(), 0),
+                    f(tcu.energy_efficiency(), 0),
+                    pct(d_ae),
+                    pct(d_ee),
+                ]);
+                json_rows.push(Json::obj(vec![
+                    ("arch", Json::str(arch.short_name())),
+                    ("size", Json::num(s as f64)),
+                    ("variant", Json::str(variant.name())),
+                    ("area_um2", Json::num(c.area_um2)),
+                    ("power_uw", Json::num(c.power_uw)),
+                    ("d_area_eff", Json::num(d_ae)),
+                    ("d_energy_eff", Json::num(d_ee)),
+                ]));
+            }
+        }
+        if !json_mode {
+            print!("{}", t.render());
+        }
+    }
+
+    if json_mode {
+        println!("{}", Json::Arr(json_rows));
+        return;
+    }
+
+    // Fig 7-style summary: average up-ratio per scale for EN-T(Ours).
+    let mut t = Table::new("\n=== Fig 7 summary: EN-T(Ours) average up-ratios ===")
+        .header(&["scale", "avg Δarea-eff", "avg Δenergy-eff"]);
+    for scale in ALL_SCALES {
+        let (mut sa, mut se) = (0.0, 0.0);
+        for arch in ALL_ARCHS {
+            let s = arch.size_for_scale(scale);
+            let b = Tcu::new(arch, s, Variant::Baseline);
+            let e = Tcu::new(arch, s, Variant::EntOurs);
+            sa += e.area_efficiency() / b.area_efficiency() - 1.0;
+            se += e.energy_efficiency() / b.energy_efficiency() - 1.0;
+        }
+        t.row(vec![
+            scale.name().into(),
+            pct(sa / ALL_ARCHS.len() as f64),
+            pct(se / ALL_ARCHS.len() as f64),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("\npaper: area +8.7%/+12.2%/+11.0%, energy +13.0%/+17.5%/+15.5%");
+
+    // Component breakdown at the SoC's 1-TOPS operating point.
+    let mut t = Table::new("\n=== Cost breakdown @1 TOPS, EN-T(Ours) ===").header(&[
+        "arch", "mults", "regs", "accs", "trees", "encoders", "routing", "total mm2",
+    ]);
+    for arch in ALL_ARCHS {
+        let s = arch.size_for_scale(Scale::Tops1);
+        let c = Tcu::new(arch, s, Variant::EntOurs).cost();
+        t.row(vec![
+            arch.name().into(),
+            f(c.mults.area_um2 / 1e6, 3),
+            f(c.registers.area_um2 / 1e6, 3),
+            f(c.accumulators.area_um2 / 1e6, 3),
+            f(c.adder_trees.area_um2 / 1e6, 3),
+            f(c.encoders.area_um2 / 1e6, 4),
+            f(c.routing.area_um2 / 1e6, 3),
+            f(c.total().area_um2 / 1e6, 3),
+        ]);
+    }
+    print!("{}", t.render());
+}

@@ -1,0 +1,81 @@
+//! Quickstart — the 60-second tour of the EN-T library.
+//!
+//! 1. Encode a value with the paper's carry-chain encoding (Eq. 7–17).
+//! 2. Multiply through the encoder-hoisted (RME) datapath, bit-exact.
+//! 3. Run a matmul through an EN-T systolic array and check it.
+//! 4. Compare baseline vs EN-T TCU cost at the paper's 1-TOPS point.
+//! 5. If `make artifacts` has run: execute the AOT-compiled Pallas GEMM
+//!    through PJRT and cross-check it against the rust datapath.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use ent::arch::{gemm_ref, ArchKind, Tcu};
+use ent::arith::multiplier::{MultKind, Multiplier};
+use ent::encoding::ent::encode_signed;
+use ent::pe::Variant;
+use ent::runtime::{default_artifact_dir, Runtime};
+use ent::sim::tiled_matmul;
+use ent::util::prng::Rng;
+
+fn main() -> ent::Result<()> {
+    // 1. The paper's worked example: Encode(78) = {0, 1, 1, -1, 2}.
+    let code = encode_signed(78, 8);
+    println!(
+        "Encode(78): sign={} digits(LSB→MSB)={:?} → {} wire bits",
+        code.sign as u8,
+        code.mag.digits,
+        9
+    );
+    assert_eq!(code.mag.digits, vec![2, -1, 1, 1]);
+
+    // 2. Multiply through the hoisted-encoder datapath.
+    let rme = Multiplier::new(MultKind::EntRme, 8);
+    let product = rme.mul_encoded(&code, -55);
+    println!("78 × -55 through the EN-T PE datapath = {product}");
+    assert_eq!(product, 78 * -55);
+
+    // 3. A matmul through the EN-T output-stationary systolic array.
+    let tcu = Tcu::new(ArchKind::SystolicOs, 16, Variant::EntOurs);
+    let mut rng = Rng::new(1);
+    let (m, k, n) = (24, 40, 24);
+    let a = rng.i8_vec(m * k);
+    let b = rng.i8_vec(k * n);
+    let c = tiled_matmul(&tcu, &a, &b, m, k, n);
+    assert_eq!(c, gemm_ref(&a, &b, m, k, n));
+    println!("{}x{}x{} GEMM exact through the EN-T systolic dataflow", m, k, n);
+
+    // 4. What EN-T buys at the paper's SoC operating point.
+    let base = Tcu::new(ArchKind::SystolicOs, 32, Variant::Baseline);
+    let ours = Tcu::new(ArchKind::SystolicOs, 32, Variant::EntOurs);
+    println!(
+        "1-TOPS systolic TCU: area {:.3} → {:.3} mm², power {:.0} → {:.0} mW \
+         (Δ area-eff {:+.1}%, Δ energy-eff {:+.1}%)",
+        base.cost().total().area_um2 / 1e6,
+        ours.cost().total().area_um2 / 1e6,
+        base.cost().total().power_uw / 1e3,
+        ours.cost().total().power_uw / 1e3,
+        (ours.area_efficiency() / base.area_efficiency() - 1.0) * 100.0,
+        (ours.energy_efficiency() / base.energy_efficiency() - 1.0) * 100.0,
+    );
+
+    // 5. Cross-layer: the Pallas-kernel artifact through PJRT.
+    let dir = default_artifact_dir();
+    if dir.join("gemm_32x32x32.hlo.txt").exists() {
+        let mut rt = Runtime::cpu()?;
+        rt.load_file("gemm", &dir.join("gemm_32x32x32.hlo.txt"))?;
+        let a = rng.i8_vec(32 * 32);
+        let b = rng.i8_vec(32 * 32);
+        let via_pjrt = rt.gemm_i8("gemm", &a, &b, 32, 32, 32)?;
+        let reference = gemm_ref(&a, &b, 32, 32, 32);
+        assert!(via_pjrt
+            .iter()
+            .zip(&reference)
+            .all(|(&x, &y)| x as i64 == y));
+        println!("AOT Pallas GEMM through PJRT matches the rust datapath exactly");
+    } else {
+        println!("(artifacts not built — run `make artifacts` for the PJRT demo)");
+    }
+
+    println!("quickstart: OK");
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Serving demo with a live load generator: open-loop arrivals at a
+//! configurable rate against the coordinator, demonstrating the dynamic
+//! batcher forming larger batches as pressure grows.
+//!
+//! Run: `cargo run --release --example serve [-- <req_per_sec> <seconds>]`
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use ent::coordinator::{Config, Coordinator, InferRequest};
+use ent::util::prng::Rng;
+
+fn main() -> ent::Result<()> {
+    let rate: f64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200.0);
+    let seconds: f64 = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3.0);
+
+    let coord = Coordinator::start(Config::default())?;
+    let input_len = coord.model().input_len();
+    println!("open-loop load: {rate:.0} req/s for {seconds:.0}s");
+
+    let inflight = AtomicUsize::new(0);
+    let completed = AtomicUsize::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        // Load generator: fires requests on a steady clock, each handled
+        // by a short-lived waiter thread (open loop — arrivals don't
+        // wait for completions).
+        let coord_ref = &coord;
+        let inflight_ref = &inflight;
+        let completed_ref = &completed;
+        scope.spawn(move || {
+            let mut rng = Rng::new(0x10AD);
+            let period = Duration::from_secs_f64(1.0 / rate);
+            let mut next = Instant::now();
+            while t0.elapsed().as_secs_f64() < seconds {
+                let img = rng.i8_vec(input_len);
+                let rx = coord_ref.submit(InferRequest { image: img });
+                inflight_ref.fetch_add(1, Ordering::Relaxed);
+                scope.spawn(move || {
+                    let _ = rx.recv();
+                    inflight_ref.fetch_sub(1, Ordering::Relaxed);
+                    completed_ref.fetch_add(1, Ordering::Relaxed);
+                });
+                next += period;
+                if let Some(sleep) = next.checked_duration_since(Instant::now()) {
+                    std::thread::sleep(sleep);
+                }
+            }
+        });
+        // Progress reporter.
+        scope.spawn(move || {
+            while t0.elapsed().as_secs_f64() < seconds + 0.5 {
+                std::thread::sleep(Duration::from_millis(500));
+                let m = coord_ref.metrics();
+                println!(
+                    "t={:>4.1}s  done {:>5}  inflight {:>3}  mean batch {:.2}",
+                    t0.elapsed().as_secs_f64(),
+                    completed_ref.load(Ordering::Relaxed),
+                    inflight_ref.load(Ordering::Relaxed),
+                    m.mean_batch
+                );
+            }
+        });
+    });
+
+    let m = coord.metrics();
+    println!(
+        "\nfinal: {} requests, {} errors, mean batch {:.2}",
+        m.requests, m.errors, m.mean_batch
+    );
+    if let Some(lat) = m.latency_us {
+        println!(
+            "latency µs: mean {:.0}  p50 {:.0}  p95 {:.0}  p99 {:.0}",
+            lat.mean, lat.median, lat.p95, lat.p99
+        );
+    }
+    coord.shutdown();
+    Ok(())
+}

@@ -1,0 +1,114 @@
+"""AOT compile path: lower the L2/L1 graphs to HLO **text** artifacts.
+
+HLO text — NOT ``lowered.compile()`` or serialized protos — is the
+interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit
+instruction ids which the rust side's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts (written to --out, default ../artifacts):
+
+    tinynet_b{1,2,4,8}.hlo.txt   quantized CNN forward, per batch size
+    gemm_{M}x{K}x{N}.hlo.txt     EN-T encoded GEMM tiles for serving
+    encode8.hlo.txt              standalone encoder (wire-bit contract)
+
+Usage:  python -m compile.aot [--out DIR] [--report]
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ent
+
+# GEMM tile family exported for the serving/runtime path.
+GEMM_SHAPES = [(32, 32, 32), (64, 128, 64), (128, 256, 128)]
+BATCH_SIZES = [1, 2, 4, 8]
+
+
+def to_hlo_text(lowered):
+    """StableHLO → XlaComputation → HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_tinynet(batch):
+    spec = jax.ShapeDtypeStruct((batch, 3, 32, 32), jnp.int8)
+    weights = model.make_weights()
+
+    def fwd(x):
+        return (model.tinynet_forward(x, weights),)
+
+    return jax.jit(fwd).lower(spec)
+
+
+def lower_gemm(m, k, n):
+    sa = jax.ShapeDtypeStruct((m, k), jnp.int8)
+    sb = jax.ShapeDtypeStruct((k, n), jnp.int8)
+
+    def g(a, b):
+        return (model.gemm_ent(a, b),)
+
+    return jax.jit(g).lower(sa, sb)
+
+
+def lower_encoder(length=256):
+    spec = jax.ShapeDtypeStruct((length,), jnp.int8)
+
+    def e(a):
+        return (ent.ent_encode(a),)
+
+    return jax.jit(e).lower(spec)
+
+
+def write(path, text):
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+
+def structural_report():
+    """L1 perf deliverable: VMEM footprint + reuse ratio per tile shape
+    (interpret mode has no meaningful wallclock; structure is the
+    optimization target — DESIGN.md §7/§9)."""
+    print("\n== L1 structural report (EN-T kernel tiles) ==")
+    print(f"{'bm':>4} {'bk':>5} {'bn':>5} {'VMEM KiB':>9} {'reuse/enc':>9}")
+    for bm, bk, bn in [(8, 27, 128), (8, 144, 128), (8, 288, 128),
+                       (32, 32, 32), (64, 128, 64), (128, 256, 128)]:
+        fp = ent.tile_footprint_bytes(bm, bk, bn)
+        print(f"{bm:>4} {bk:>5} {bn:>5} {fp / 1024:>9.1f} {bn:>9}")
+    print("reuse/enc = B-columns sharing one A-tile encode (ASIC row reuse analogue)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--report", action="store_true", help="print the L1 structural report")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    for b in BATCH_SIZES:
+        write(os.path.join(args.out, f"tinynet_b{b}.hlo.txt"), to_hlo_text(lower_tinynet(b)))
+    for m, k, n in GEMM_SHAPES:
+        write(
+            os.path.join(args.out, f"gemm_{m}x{k}x{n}.hlo.txt"),
+            to_hlo_text(lower_gemm(m, k, n)),
+        )
+    write(os.path.join(args.out, "encode8.hlo.txt"), to_hlo_text(lower_encoder()))
+
+    if args.report:
+        structural_report()
+    # Stamp for make's dependency tracking.
+    with open(os.path.join(args.out, ".stamp"), "w") as f:
+        f.write("ok\n")
+
+
+if __name__ == "__main__":
+    main()

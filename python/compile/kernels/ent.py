@@ -1,0 +1,129 @@
+"""Layer-1: EN-T Pallas kernels.
+
+The paper's compute hot-spot — the encoded multiply-accumulate datapath —
+rethought for the TPU memory hierarchy (DESIGN.md §Hardware-Adaptation):
+
+* the ASIC hoists the radix-4 carry-chain encoder out of every PE and
+  reuses the encoded multiplicand across an array row;
+* the TPU analogue encodes the stationary operand (the weights) ONCE per
+  (bm × bk) tile held in VMEM, then reuses the digit planes for every
+  column tile of B — the same reuse ratio per encode the ASIC row gets.
+
+The encoded product is computed digit-plane by digit-plane:
+
+    A·B = Σ_{i<4} 4^i · (s ⊙ wᵢ) @ B        (wᵢ ∈ {-1,0,1,2}, s = sign A)
+
+so the kernel is pure int32 shift-add over four small matmuls — exactly
+the paper's Eq. 5 with the Cin term vanishing for |A| ≤ 128 (int8
+magnitudes; proven exhaustively in the rust model and asserted here).
+
+All kernels run with ``interpret=True``: real-TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Number of radix-4 digits for int8 operands.
+N_DIGITS = 4
+
+
+def encode_digit_planes(a):
+    """Carry-chain encode int8 ``a`` (paper Eq. 7/8/16/17).
+
+    Returns ``(sign, [w0..w3], cin)`` where ``sign`` is ±1 (int32), each
+    ``wᵢ`` is an int32 plane with values in {-1, 0, 1, 2}, and ``cin`` is
+    the final carry (always 0 for int8 magnitudes — kept for the
+    width-generic tests).
+    """
+    a = a.astype(jnp.int32)
+    sign = jnp.where(a < 0, -1, 1)
+    mag = jnp.abs(a)
+    planes = []
+    carry = jnp.zeros_like(mag)
+    for i in range(N_DIGITS):
+        a_i = (mag >> (2 * i)) & 3
+        a_prime = a_i + carry
+        w = jnp.where(a_prime <= 2, a_prime, a_prime - 4)
+        carry = (a_prime >= 3).astype(jnp.int32)
+        planes.append(w)
+    return sign, planes, carry
+
+
+def encode_wire_bits(a):
+    """The transmitted n+1-bit pattern (sign<<8 | 2-bit digit fields) —
+    the cross-layer contract checked against the rust ``EntCode``."""
+    sign, planes, _cin = encode_digit_planes(a)
+    bits = jnp.zeros(a.shape, jnp.int32)
+    for i, w in enumerate(planes):
+        bits = bits | ((w & 3) << (2 * i))
+    return jnp.where(sign < 0, bits | (1 << 8), bits)
+
+
+def _ent_matmul_kernel(a_ref, b_ref, o_ref):
+    """One (bm × bn) output tile: encode the A tile once, reuse the digit
+    planes across the whole B tile (the EN-T reuse, in VMEM)."""
+    a = a_ref[...]
+    b = b_ref[...].astype(jnp.int32)
+    sign, planes, _cin = encode_digit_planes(a)
+    acc = jnp.zeros(o_ref.shape, jnp.int32)
+    for i, w in enumerate(planes):
+        signed_digit = sign * w  # ∈ {-2,-1,0,1,2}
+        acc = acc + (jnp.dot(signed_digit, b) << (2 * i))
+    o_ref[...] = acc
+
+
+def ent_matmul(a, b, *, bm=None, bn=None):
+    """C[m,n] = A[m,k] · B[k,n] through the EN-T encoded datapath.
+
+    ``a``/``b`` are int8; the result is int32. Tiles: (bm × k) of A and
+    (k × bn) of B per grid step; bm/bn default to the full problem
+    (callers pad to multiples — see ``model.pad2``).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"shape mismatch {a.shape} @ {b.shape}"
+    assert a.dtype == jnp.int8 and b.dtype == jnp.int8
+    bm = bm or m
+    bn = bn or n
+    assert m % bm == 0 and n % bn == 0, f"tile {bm}x{bn} must divide {m}x{n}"
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _ent_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(a, b)
+
+
+def _encode_kernel(a_ref, o_ref):
+    o_ref[...] = encode_wire_bits(a_ref[...])
+
+
+def ent_encode(a):
+    """Standalone encoder kernel: int8 → packed wire bits (int32)."""
+    return pl.pallas_call(
+        _encode_kernel,
+        out_shape=jax.ShapeDtypeStruct(a.shape, jnp.int32),
+        interpret=True,
+    )(a)
+
+
+@functools.lru_cache(maxsize=None)
+def tile_footprint_bytes(bm, bk, bn):
+    """Estimated VMEM bytes for one grid step (DESIGN.md §9): the int8 A
+    tile, its four int32 digit planes + sign, the int8 B tile, and the
+    int32 accumulator."""
+    a = bm * bk
+    planes = (N_DIGITS + 1) * bm * bk * 4
+    b = bk * bn
+    acc = bm * bn * 4
+    return a + planes + b + acc

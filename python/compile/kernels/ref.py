@@ -1,0 +1,56 @@
+"""Pure-jnp/python correctness oracles for the EN-T kernels.
+
+``matmul_ref`` is the ground truth the Pallas kernel must match exactly
+(integer arithmetic — no tolerance). ``encode_ref`` is a direct, scalar
+transcription of the paper's Eq. 7/8/16/17, independent of the kernel's
+vectorized implementation, used to cross-check digit planes and the wire
+format shared with the rust model.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    """Exact int32 GEMM oracle."""
+    return a.astype(jnp.int32) @ b.astype(jnp.int32)
+
+
+def encode_ref(value, width=8):
+    """Scalar EN-T encode of ``abs(value)`` per the paper's recursion.
+
+    Returns ``(sign, digits, cin)`` with digits LSB-first in
+    {-1, 0, 1, 2}; mirrors rust `encoding::ent::encode_signed`.
+    """
+    assert -(1 << (width - 1)) <= value <= (1 << (width - 1)) - 1
+    sign = value < 0
+    mag = abs(value)
+    digits = []
+    carry = 0
+    for i in range(width // 2):
+        a_i = (mag >> (2 * i)) & 3
+        a_prime = a_i + carry
+        if a_prime <= 2:
+            digits.append(a_prime)
+            carry = 0
+        else:
+            digits.append(a_prime - 4)
+            carry = 1
+    return sign, digits, carry
+
+
+def decode_ref(sign, digits, cin):
+    """Inverse of ``encode_ref`` — Σ wᵢ·4ⁱ + cin·4^N, sign applied."""
+    mag = sum(w * (4**i) for i, w in enumerate(digits))
+    mag += cin * (4 ** len(digits))
+    return -mag if sign else mag
+
+
+def wire_bits_ref(value, width=8):
+    """Packed wire pattern: sign<<width | 2-bit digit fields."""
+    sign, digits, _cin = encode_ref(value, width)
+    bits = 0
+    for i, w in enumerate(digits):
+        bits |= (w & 3) << (2 * i)
+    if sign:
+        bits |= 1 << width
+    return bits

@@ -1,0 +1,102 @@
+"""Layer-2: the quantized CNN ("TinyNet") whose convolutions run through
+the EN-T encoded-matmul Pallas kernel.
+
+Architecture (must stay in sync with rust `nn::zoo::tinynet`):
+
+    conv1 3→16  3×3 s1 p1   (32×32)
+    conv2 16→32 3×3 s2 p1   (→16×16)
+    conv3 32→64 3×3 s2 p1   (→8×8)
+    global average pool → fc 64→10 → f32 logits
+
+Everything on the conv path is INT8 with INT32 accumulation and a
+right-shift requantization — the arithmetic the paper's TCUs execute.
+Weights are deterministic pseudo-random int8 baked into the graph at
+lowering time (seeded; the rust side never sees Python).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ent
+
+
+def pad2(x, mult0, mult1):
+    """Zero-pad a 2-D array so each dim is a multiple of the given
+    tile multiples (zeros do not change the GEMM result)."""
+    p0 = (-x.shape[0]) % mult0
+    p1 = (-x.shape[1]) % mult1
+    if p0 == 0 and p1 == 0:
+        return x
+    return jnp.pad(x, ((0, p0), (0, p1)))
+
+
+def im2col(x, kernel, stride, pad):
+    """NCHW int8 → (C·k², N·H'·W') patch matrix (the SoC's img2col)."""
+    n, c, h, w = x.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x.astype(jnp.float32),
+        filter_shape=(kernel, kernel),
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+    )  # (N, C*k*k, H', W')
+    _, ck2, ho, wo = patches.shape
+    cols = patches.astype(jnp.int8).transpose(1, 0, 2, 3).reshape(ck2, n * ho * wo)
+    return cols, (ho, wo)
+
+
+def conv_ent(x, w, stride, pad, shift=7):
+    """INT8 convolution through the EN-T kernel.
+
+    ``x``: (N, Cin, H, W) int8; ``w``: (Cout, Cin, k, k) int8.
+    Returns (N, Cout, H', W') int8 after ReLU + right-shift requant.
+    """
+    cout, cin, k, _ = w.shape
+    n = x.shape[0]
+    cols, (ho, wo) = im2col(x, k, stride, pad)  # (cin*k², N·ho·wo)
+    wmat = w.reshape(cout, cin * k * k)
+
+    # Pad to kernel-tile multiples; the EN-T reuse lives inside the tile.
+    bm, bn = 8, 128
+    wmat_p = pad2(wmat, bm, 1)
+    cols_p = pad2(cols, 1, bn)
+    acc = ent.ent_matmul(wmat_p, cols_p, bm=bm, bn=bn)
+    acc = acc[:cout, : n * ho * wo]
+
+    out = jnp.maximum(acc, 0) >> shift  # ReLU + requantize
+    out = jnp.clip(out, -128, 127).astype(jnp.int8)
+    return out.reshape(cout, n, ho, wo).transpose(1, 0, 2, 3)
+
+
+def make_weights(seed=0x0EA7):
+    """Deterministic int8 weights (clipped unit-normal × 32)."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+
+    def w(k, shape):
+        v = jax.random.normal(k, shape) * 32.0
+        return jnp.clip(jnp.round(v), -127, 127).astype(jnp.int8)
+
+    return {
+        "conv1": w(ks[0], (16, 3, 3, 3)),
+        "conv2": w(ks[1], (32, 16, 3, 3)),
+        "conv3": w(ks[2], (64, 32, 3, 3)),
+        "fc": w(ks[3], (10, 64)),
+    }
+
+
+def tinynet_forward(x, weights=None):
+    """Forward pass: (N, 3, 32, 32) int8 → (N, 10) f32 logits."""
+    w = weights if weights is not None else make_weights()
+    h = conv_ent(x, w["conv1"], stride=1, pad=1)
+    h = conv_ent(h, w["conv2"], stride=2, pad=1)
+    h = conv_ent(h, w["conv3"], stride=2, pad=1)
+    # Global average pool in int32, then the classifier head in f32.
+    pooled = h.astype(jnp.int32).mean(axis=(2, 3))  # (N, 64)
+    logits = pooled.astype(jnp.float32) @ w["fc"].T.astype(jnp.float32)
+    return logits / 128.0
+
+
+def gemm_ent(a, b):
+    """Plain EN-T GEMM entry point for the serving tiles (aot exports a
+    family of fixed shapes)."""
+    return ent.ent_matmul(a, b)

@@ -1,0 +1,118 @@
+"""L1 correctness: the EN-T Pallas kernel vs the pure-jnp oracle.
+
+Integer arithmetic ⇒ exact equality (assert_array_equal, no tolerance).
+Hypothesis sweeps shapes and value distributions including the int8
+extremes; dedicated tests pin the corner cases the encoding is most
+likely to break on (-128, carry-chain saturation at 255-like patterns).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ent, ref
+
+
+def np_i8(rng, shape):
+    return rng.integers(-128, 128, size=shape, dtype=np.int8)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [(1, 1, 1), (2, 3, 4), (8, 8, 8), (16, 27, 32), (32, 64, 16), (8, 144, 128)],
+)
+def test_matmul_matches_ref_fixed_shapes(m, k, n):
+    rng = np.random.default_rng(42)
+    a = jnp.asarray(np_i8(rng, (m, k)))
+    b = jnp.asarray(np_i8(rng, (k, n)))
+    got = ent.ent_matmul(a, b)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_matmul_extreme_operands():
+    # -128 is the operand whose magnitude (128) exercises the top digit.
+    for fill_a, fill_b in [(-128, -128), (-128, 127), (127, -128), (-1, -1)]:
+        a = jnp.full((4, 8), fill_a, jnp.int8)
+        b = jnp.full((8, 4), fill_b, jnp.int8)
+        got = ent.ent_matmul(a, b)
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(ref.matmul_ref(a, b))
+        )
+
+
+def test_matmul_tiled_grid_equals_untiled():
+    rng = np.random.default_rng(7)
+    a = jnp.asarray(np_i8(rng, (16, 32)))
+    b = jnp.asarray(np_i8(rng, (32, 256)))
+    whole = ent.ent_matmul(a, b)
+    tiled = ent.ent_matmul(a, b, bm=8, bn=64)
+    np.testing.assert_array_equal(np.asarray(whole), np.asarray(tiled))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 12),
+    k=st.integers(1, 24),
+    n=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis_sweep(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(np_i8(rng, (m, k)))
+    b = jnp.asarray(np_i8(rng, (k, n)))
+    got = ent.ent_matmul(a, b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.matmul_ref(a, b)))
+
+
+@settings(max_examples=60, deadline=None)
+@given(vals=st.lists(st.integers(-128, 127), min_size=1, max_size=64))
+def test_encode_wire_bits_match_scalar_ref(vals):
+    a = jnp.asarray(np.array(vals, dtype=np.int8))
+    got = np.asarray(ent.ent_encode(a))
+    want = np.array([ref.wire_bits_ref(int(v)) for v in vals], dtype=np.int32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_encode_digit_planes_decode_all_int8():
+    a = jnp.arange(-128, 128, dtype=jnp.int8)
+    sign, planes, cin = ent.encode_digit_planes(a)
+    sign = np.asarray(sign)
+    planes = [np.asarray(p) for p in planes]
+    cin = np.asarray(cin)
+    assert np.all(cin == 0), "int8 magnitudes never produce a final carry"
+    for p in planes:
+        assert p.min() >= -1 and p.max() <= 2, "digit set violation"
+    mag = sum(p.astype(np.int64) * 4**i for i, p in enumerate(planes))
+    np.testing.assert_array_equal(sign * mag, np.arange(-128, 128))
+
+
+def test_paper_example_78():
+    # Encode(78) = {0, 1, 1, -1, 2}: sign 0, digits (LSB-first) 2,-1,1,1.
+    sign, digits, cin = ref.encode_ref(78)
+    assert sign is False or sign == 0
+    assert digits == [2, -1, 1, 1]
+    assert cin == 0
+    assert ref.decode_ref(sign, digits, cin) == 78
+
+
+def test_encode_ref_roundtrip_exhaustive():
+    for v in range(-128, 128):
+        s, d, c = ref.encode_ref(v)
+        assert ref.decode_ref(s, d, c) == v, v
+        assert all(-1 <= w <= 2 for w in d), v
+
+
+def test_tile_footprint_fits_vmem():
+    # Every exported tile must fit a 16 MiB VMEM budget comfortably.
+    for bm, bk, bn in [(8, 288, 128), (128, 256, 128)]:
+        assert ent.tile_footprint_bytes(bm, bk, bn) < 16 * 1024 * 1024
+
+
+def test_bad_tile_divisibility_rejected():
+    a = jnp.zeros((10, 8), jnp.int8)
+    b = jnp.zeros((8, 10), jnp.int8)
+    with pytest.raises(AssertionError):
+        ent.ent_matmul(a, b, bm=4, bn=4)  # 10 % 4 != 0

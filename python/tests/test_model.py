@@ -1,0 +1,103 @@
+"""L2 correctness: the quantized CNN built on the EN-T kernel."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand_images(batch, seed=3):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(-128, 128, size=(batch, 3, 32, 32), dtype=np.int8))
+
+
+def test_forward_shapes_and_dtype():
+    x = rand_images(2)
+    logits = model.tinynet_forward(x)
+    assert logits.shape == (2, 10)
+    assert logits.dtype == jnp.float32
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_forward_deterministic():
+    x = rand_images(1)
+    a = model.tinynet_forward(x)
+    b = model.tinynet_forward(x)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_batch_consistency():
+    """Each sample's logits must not depend on its batch companions —
+    the property the coordinator's padding-based batching relies on."""
+    x = rand_images(4, seed=11)
+    full = np.asarray(model.tinynet_forward(x))
+    for i in range(4):
+        solo = np.asarray(model.tinynet_forward(x[i : i + 1]))
+        np.testing.assert_array_equal(full[i : i + 1], solo, err_msg=f"sample {i}")
+
+
+def test_conv_ent_matches_float_conv_reference():
+    """conv_ent (im2col + EN-T kernel + requant) vs lax.conv on the same
+    integers with identical requantization."""
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.integers(-128, 128, size=(2, 3, 8, 8), dtype=np.int8))
+    w = jnp.asarray(rng.integers(-64, 64, size=(4, 3, 3, 3), dtype=np.int8))
+    got = model.conv_ent(x, w, stride=1, pad=1)
+
+    acc = jax.lax.conv_general_dilated(
+        x.astype(jnp.int32),
+        w.astype(jnp.int32),
+        window_strides=(1, 1),
+        padding=((1, 1), (1, 1)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    want = jnp.clip(jnp.maximum(acc, 0) >> 7, -128, 127).astype(jnp.int8)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_im2col_patch_count():
+    x = rand_images(1)
+    cols, (ho, wo) = model.im2col(x, kernel=3, stride=2, pad=1)
+    assert (ho, wo) == (16, 16)
+    assert cols.shape == (3 * 9, 1 * 16 * 16)
+
+
+def test_pad2_is_value_preserving():
+    a = jnp.arange(6, dtype=jnp.int8).reshape(2, 3)
+    p = model.pad2(a, 8, 4)
+    assert p.shape == (8, 4)
+    np.testing.assert_array_equal(np.asarray(p[:2, :3]), np.asarray(a))
+    assert int(jnp.abs(p).sum()) == int(jnp.abs(a).sum())
+    # GEMM padding invariance end-to-end:
+    b = jnp.ones((3, 5), jnp.int8)
+    want = np.asarray(ref.matmul_ref(a, b))
+    from compile.kernels import ent
+
+    got = np.asarray(ent.ent_matmul(model.pad2(a, 8, 1), model.pad2(b, 1, 8)))
+    np.testing.assert_array_equal(got[:2, :5], want)
+
+
+def test_weights_are_deterministic_across_processes():
+    w1 = model.make_weights()
+    w2 = model.make_weights()
+    for k in w1:
+        np.testing.assert_array_equal(np.asarray(w1[k]), np.asarray(w2[k]))
+    # Not all-zero / not saturated.
+    c1 = np.asarray(w1["conv1"])
+    assert c1.std() > 1.0
+    assert (np.abs(c1) == 127).mean() < 0.2
+
+
+@pytest.mark.parametrize("batch", [1, 2])
+def test_jit_lowering_round_trip(batch):
+    """The exact lowering path aot.py uses must produce parseable HLO
+    text with the right entry signature."""
+    from compile import aot
+
+    text = aot.to_hlo_text(aot.lower_tinynet(batch))
+    assert "ENTRY" in text
+    assert f"s8[{batch},3,32,32]" in text

@@ -1,0 +1,9 @@
+//! Bench target for **Fig 10** — single-frame SoC inference energy for
+//! the eight networks × five architectures × three variants.
+
+use ent::util::bench::header;
+
+fn main() {
+    header("Fig 10 — single-frame SoC energy");
+    print!("{}", ent::report::fig10());
+}

@@ -1,0 +1,33 @@
+//! Bench target for **Fig 11** — SoC inference-energy reduction ratio of
+//! EN-T(Ours) vs baseline per architecture, with the per-network detail
+//! the paper plots.
+
+use ent::arch::ALL_ARCHS;
+use ent::nn::zoo;
+use ent::soc::energy;
+use ent::util::bench::header;
+use ent::util::table::{pct, Table};
+
+fn main() {
+    header("Fig 11 — SoC energy reduction ratios");
+    print!("{}", ent::report::fig11());
+
+    // Per-network detail (the bars behind the ranges).
+    let mut t = Table::new("\nper-network detail").header(&[
+        "network", "2D Matrix", "SA (OS)", "SA (WS)", "1D/2D", "Cube",
+    ]);
+    for net in zoo::paper_networks() {
+        let mut row = vec![net.name.to_string()];
+        for arch in [
+            ALL_ARCHS[0], // matrix2d
+            ALL_ARCHS[2], // sa_os
+            ALL_ARCHS[3], // sa_ws
+            ALL_ARCHS[1], // array1d2d
+            ALL_ARCHS[4], // cube3d
+        ] {
+            row.push(pct(energy::reduction_ratio(arch, &net)));
+        }
+        t.row(row);
+    }
+    print!("{}", t.render());
+}

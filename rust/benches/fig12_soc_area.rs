@@ -1,0 +1,9 @@
+//! Bench target for **Fig 12** — area efficiency of the SoC: TCU-level
+//! improvement vs SoC-level (diluted by SRAM/controller/SIMD).
+
+use ent::util::bench::header;
+
+fn main() {
+    header("Fig 12 — SoC area efficiency");
+    print!("{}", ent::report::fig12());
+}

@@ -1,0 +1,33 @@
+//! Bench target for **Fig 6** — the TCU area (a–c) and power (d–f) grid:
+//! five architectures × three sizes × three variants, plus a timing of
+//! the array cost roll-up itself.
+
+use ent::arch::{Tcu, ALL_ARCHS, ALL_SCALES};
+use ent::pe::Variant;
+use ent::util::bench::{black_box, header, Suite};
+
+fn main() {
+    header("Fig 6 — TCU area/power grid");
+    print!("{}", ent::report::fig6());
+
+    header("cost-model roll-up microbenchmarks");
+    let mut suite = Suite::new();
+    suite.bench("tcu_cost_full_grid_45_instances", || {
+        let mut acc = 0.0;
+        for arch in ALL_ARCHS {
+            for scale in ALL_SCALES {
+                let s = arch.size_for_scale(scale);
+                for v in ent::pe::ALL_VARIANTS {
+                    acc += Tcu::new(arch, s, v).cost().total().area_um2;
+                }
+            }
+        }
+        black_box(acc);
+    });
+    suite.bench_val("tcu_cost_single_64x64", || {
+        Tcu::new(ent::arch::ArchKind::SystolicOs, 64, Variant::EntOurs)
+            .cost()
+            .total()
+            .area_um2
+    });
+}

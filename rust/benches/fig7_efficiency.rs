@@ -1,0 +1,28 @@
+//! Bench target for **Fig 7** — area-/energy-efficiency up-ratios per
+//! computational scale (256 GOPS / 1 TOPS / 4 TOPS), with the paper's
+//! averages printed alongside for comparison.
+
+use ent::arch::{Tcu, ALL_ARCHS, ALL_SCALES};
+use ent::pe::Variant;
+use ent::util::bench::{black_box, header, Suite};
+
+fn main() {
+    header("Fig 7 — efficiency up-ratios");
+    print!("{}", ent::report::fig7());
+
+    header("efficiency evaluation microbenchmark");
+    let mut suite = Suite::new();
+    suite.bench("fig7_full_sweep", || {
+        let mut acc = 0.0;
+        for arch in ALL_ARCHS {
+            for scale in ALL_SCALES {
+                let s = arch.size_for_scale(scale);
+                let b = Tcu::new(arch, s, Variant::Baseline);
+                let e = Tcu::new(arch, s, Variant::EntOurs);
+                acc += e.area_efficiency() / b.area_efficiency();
+                acc += e.energy_efficiency() / b.energy_efficiency();
+            }
+        }
+        black_box(acc);
+    });
+}

@@ -1,0 +1,31 @@
+//! Bench target for **Fig 9** — normalized SoC energy fractions under
+//! the baseline TCU, per network, for each of three representative
+//! architecture panels (the paper's (a)(b)(c) sub-figures), plus the
+//! frame-simulation throughput.
+
+use ent::arch::ArchKind;
+use ent::nn::zoo;
+use ent::pe::Variant;
+use ent::soc::{energy, Soc};
+use ent::util::bench::{black_box, header, Suite};
+
+fn main() {
+    header("Fig 9 — SoC energy fraction (baseline TCU)");
+    for arch in [ArchKind::SystolicOs, ArchKind::Matrix2d, ArchKind::Cube3d] {
+        print!("{}", ent::report::fig9(arch));
+    }
+
+    header("frame-energy simulation throughput");
+    let mut suite = Suite::new();
+    let soc = Soc::paper_config(ArchKind::SystolicOs, Variant::Baseline);
+    let resnet50 = zoo::by_name("resnet50").unwrap();
+    let r = suite.bench("frame_energy_resnet50", || {
+        black_box(energy::frame_energy(&soc, &resnet50).0.total_pj());
+    });
+    let macs = resnet50.total_macs() as f64;
+    println!(
+        "simulator rate: {:.0} frames/s ≈ {:.1} G MAC-events modelled per second",
+        r.throughput(),
+        macs * r.throughput() / 1e9
+    );
+}

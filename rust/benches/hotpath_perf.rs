@@ -1,0 +1,119 @@
+//! Hot-path performance benchmark (deliverable (e) — EXPERIMENTS.md
+//! §Perf). Covers every layer the request path touches:
+//!
+//! * L3 functional models: encoded MAC, bit-level datapath, tiled GEMM;
+//! * L3 analytics: dataflow stats + SoC frame simulation (the "digital
+//!   twin" that runs per request);
+//! * runtime: PJRT artifact execution (gated on `make artifacts`);
+//! * coordinator: end-to-end request round-trip incl. dynamic batching.
+
+use ent::arch::{ArchKind, Tcu};
+use ent::coordinator::{Config, Coordinator, InferRequest};
+use ent::encoding::ent::encode_signed;
+use ent::nn::zoo;
+use ent::pe::Variant;
+use ent::runtime::{default_artifact_dir, Runtime};
+use ent::sim::{gemm_stats, tiled_matmul, GemmShape};
+use ent::soc::{energy, Soc};
+use ent::util::bench::{black_box, header, Suite};
+use ent::util::prng::Rng;
+
+fn main() {
+    header("hot-path performance");
+    let mut suite = Suite::new();
+    let mut rng = Rng::new(0xF00D);
+
+    // --- L3 functional datapath ---
+    let codes: Vec<_> = (0..256).map(|i| encode_signed(i - 128, 8)).collect();
+    let m = ent::arith::multiplier::Multiplier::new(
+        ent::arith::multiplier::MultKind::EntRme,
+        8,
+    );
+    let mut i = 0usize;
+    suite.bench("mac_encoded_bitlevel", || {
+        i = (i + 1) & 255;
+        black_box(m.mul_encoded(&codes[i], (i as i64) - 128));
+    });
+
+    let tcu = Tcu::new(ArchKind::SystolicOs, 16, Variant::EntOurs);
+    let a = rng.i8_vec(32 * 48);
+    let b = rng.i8_vec(48 * 32);
+    suite.bench("tiled_matmul_32x48x32_bitlevel", || {
+        black_box(tiled_matmul(&tcu, &a, &b, 32, 48, 32));
+    });
+
+    // --- L3 analytics (per-request digital twin work) ---
+    let tcu32 = Tcu::new(ArchKind::SystolicOs, 32, Variant::EntOurs);
+    suite.bench("gemm_stats_resnet_layer", || {
+        black_box(gemm_stats(&tcu32, GemmShape::new(256, 2304, 196)));
+    });
+    let soc = Soc::paper_config(ArchKind::SystolicOs, Variant::EntOurs);
+    let resnet50 = zoo::by_name("resnet50").unwrap();
+    let r = suite.bench("frame_energy_resnet50", || {
+        black_box(energy::frame_energy(&soc, &resnet50).0.total_pj());
+    });
+    println!(
+        "  -> digital-twin rate: {:.0} resnet50-frames/s ({:.1} G MACs modelled/s)",
+        r.throughput(),
+        resnet50.total_macs() as f64 * r.throughput() / 1e9
+    );
+
+    // --- runtime + coordinator (artifact-gated) ---
+    if default_artifact_dir().join("gemm_64x128x64.hlo.txt").exists() {
+        let mut rt = Runtime::cpu().expect("pjrt");
+        rt.load_file(
+            "gemm_64x128x64",
+            &default_artifact_dir().join("gemm_64x128x64.hlo.txt"),
+        )
+        .expect("load");
+        let ga = rng.i8_vec(64 * 128);
+        let gb = rng.i8_vec(128 * 64);
+        suite.bench("pjrt_gemm_64x128x64", || {
+            black_box(rt.gemm_i8("gemm_64x128x64", &ga, &gb, 64, 128, 64).unwrap());
+        });
+
+        // Direct model execution (no coordinator) — the denominator for
+        // the coordinator-overhead target (< 10 %, DESIGN.md §7).
+        rt.load_file(
+            "tinynet_b1",
+            &default_artifact_dir().join("tinynet_b1.hlo.txt"),
+        )
+        .expect("load tinynet");
+        let img_direct = rng.i8_vec(3 * 32 * 32);
+        let direct = suite.bench("pjrt_tinynet_b1_direct", || {
+            black_box(
+                rt.cnn_forward("tinynet_b1", &img_direct, 1, (3, 32, 32))
+                    .unwrap(),
+            );
+        });
+        let direct_ns = direct.ns_per_iter.mean;
+
+        let coord = Coordinator::start(Config::default()).expect("coordinator");
+        let img = rng.i8_vec(3 * 32 * 32);
+        let rr = suite.bench("coordinator_round_trip_b1", || {
+            black_box(
+                coord
+                    .infer(InferRequest { image: img.clone() })
+                    .expect("infer"),
+            );
+        });
+        println!(
+            "  -> serving throughput (unbatched lower bound): {:.0} req/s",
+            rr.throughput()
+        );
+        println!(
+            "  -> coordinator overhead vs direct execute: {:+.1}% (target < 10%)",
+            (rr.ns_per_iter.mean / direct_ns - 1.0) * 100.0
+        );
+        let snap = coord.metrics();
+        if let Some(lat) = snap.latency_us {
+            println!(
+                "  -> request latency µs: mean {:.0} p95 {:.0}",
+                lat.mean, lat.p95
+            );
+        }
+        coord.shutdown();
+    } else {
+        println!("(artifacts not built — runtime/coordinator benches skipped; run `make artifacts`)");
+    }
+}

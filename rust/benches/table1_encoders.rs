@@ -1,0 +1,56 @@
+//! Bench target for **Table 1** — regenerates all three sub-tables
+//! (single-encoder gates, high-bit encoder sweep, INT8 multiplier
+//! comparison) and micro-benchmarks the functional encoder/multiplier
+//! models that produce them.
+
+use ent::arith::multiplier::{MultKind, Multiplier};
+use ent::encoding::ent::{encode_signed, encode_unsigned};
+use ent::encoding::mbe::booth_digits;
+use ent::util::bench::{black_box, header, Suite};
+use ent::util::prng::Rng;
+
+fn main() {
+    header("Table 1 — encoder & multiplier comparison");
+    print!("{}", ent::report::table1());
+
+    header("functional-model microbenchmarks");
+    let mut suite = Suite::new();
+    let mut rng = Rng::new(1);
+    let vals: Vec<i64> = (0..4096).map(|_| rng.range_i64(-128, 127)).collect();
+    let uvals: Vec<i64> = (0..4096).map(|_| rng.range_i64(0, 255)).collect();
+
+    let mut i = 0;
+    suite.bench("ent_encode_signed_int8", || {
+        i = (i + 1) & 4095;
+        black_box(encode_signed(vals[i], 8));
+    });
+    let mut j = 0;
+    suite.bench("ent_encode_unsigned_16bit", || {
+        j = (j + 1) & 4095;
+        black_box(encode_unsigned(uvals[j] * 256 + 17, 16));
+    });
+    let mut k = 0;
+    suite.bench("mbe_booth_digits_int8", || {
+        k = (k + 1) & 4095;
+        black_box(booth_digits(vals[k], 8));
+    });
+
+    for kind in [MultKind::MbeInternal, MultKind::EntInternal, MultKind::EntRme] {
+        let m = Multiplier::new(kind, 8);
+        let mut x = 0;
+        suite.bench(&format!("mul_{}", kind.name().replace(' ', "_")), || {
+            x = (x + 1) & 4095;
+            black_box(m.mul(vals[x], vals[4095 - x]));
+        });
+    }
+
+    // Cost-model evaluation itself (used in hot loops by fig6/fig7).
+    suite.bench_val("encoder_cost_model_sweep", || {
+        use ent::encoding::{ent::Ent, mbe::Mbe, Encoding};
+        let mut acc = 0.0;
+        for n in [8usize, 16, 24, 32] {
+            acc += Mbe.encoder_cost(n).area_um2 + Ent.encoder_cost(n).area_um2;
+        }
+        acc
+    });
+}

@@ -1,0 +1,16 @@
+//! Bench target for **Table 2 / Fig 8** — the benchmark SoC's component
+//! parameters, assembled from our calibrated models and compared against
+//! the paper's published values.
+
+use ent::util::bench::header;
+
+fn main() {
+    header("Table 2 — SoC benchmark parameters");
+    print!("{}", ent::report::table2());
+    println!(
+        "\npaper Table 2: GB 256KB 614400 µm² (r 0.0205 W / w 0.04515 W); \
+         A/W buffer 64KB 153600 µm² (r 0.0146 / w 0.0322); \
+         SIMD 32×TF32 126481 µm² 0.0951 W; \
+         Controller×2 83679 µm² 0.0632 W; Encoder×32 1895.36 µm²"
+    );
+}

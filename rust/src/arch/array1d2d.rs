@@ -1,0 +1,186 @@
+//! 1D/2D Array architecture (Fig 2(b), DaDianNao-class).
+//!
+//! S dot-product units, each: S multipliers feeding an adder tree
+//! directly — "with no PEs, multipliers and multiplicands are not
+//! pipelined to the adder tree" (§4.3). The input vector is broadcast to
+//! all units; weights stream from SRAM.
+//!
+//! This is where the paper reports EN-T's largest win (+20.2 % area
+//! efficiency, +20.5 % energy efficiency at 1 TOPS): with no pipeline
+//! boundary between multiplier and tree, hoisting the encoder *and*
+//! fusing the multiplier's final adder into the (carry-save) tree both
+//! apply — the conclusion's "combines the multiplier and adder
+//! calculation … from a more fine-grained perspective".
+
+use super::trees::{self, with_activity};
+use super::{CellSpec, Tcu, OPERAND_BITS};
+use crate::arith::adders::{Accumulator, Cla};
+use crate::arith::multiplier::{MultKind, Multiplier};
+use crate::arith::pp::{rows_for_digit, unwrap};
+use crate::arith::wallace::reduce;
+use crate::encoding::ent::encode_signed;
+use crate::gates::{Cost, Gate};
+use crate::pe::Variant;
+
+pub fn cells(s: usize, variant: Variant) -> CellSpec {
+    let n = OPERAND_BITS;
+    let mult_base = Variant::Baseline.mult_cost(n);
+    let mcand_bits = variant.multiplicand_bits(n);
+
+    // EN-T variants: redundant product output — the multiplier's final
+    // carry-propagate adder fuses into the tree.
+    let (mult, tree) = match variant {
+        Variant::Baseline => (mult_base, trees::cla_tree(s, 2 * n)),
+        Variant::EntMbe | Variant::EntOurs => {
+            let credit = trees::fused_adder_credit();
+            let m = variant.mult_cost(n);
+            (
+                Cost::new(
+                    m.area_um2 - credit.area_um2,
+                    m.power_uw - credit.power_uw,
+                    m.delay_ns - credit.delay_ns,
+                ),
+                trees::redundant_tree(s, 2 * n),
+            )
+        }
+    };
+
+    let edge_regs = Gate::DffBit.cost().replicate(mcand_bits).replicate(s);
+    let acc = with_activity(Accumulator::for_array(s).cost(), trees::ACC_ACTIVITY);
+
+    CellSpec {
+        mults: mult.replicate(s * s),
+        registers: edge_regs,
+        accumulators: acc.replicate(s),
+        adder_trees: tree.replicate(s),
+        encoders: variant.column_encoder_cost(n).replicate(if variant.external_encoder() {
+            s
+        } else {
+            0
+        }),
+        // Per-multiplier wire crossing: broadcast multiplicand + weight
+        // stream (n) + product lane (2n, doubled when redundant).
+        path_bits: (mcand_bits
+            + n
+            + if variant == Variant::Baseline { 2 * n } else { 2 * n + 4 })
+            as f64,
+        path_bits_baseline: (n + n + 2 * n) as f64,
+        pe_area: mult.area_um2,
+        pe_area_baseline: mult_base.area_um2,
+    }
+}
+
+/// Functional dataflow. For EN-T variants the fusion is modelled
+/// faithfully: every multiplier emits its partial products *unresolved*,
+/// one shared compressor tree reduces all of a unit's rows, and a single
+/// root CLA resolves the dot product.
+pub fn matmul(tcu: &Tcu, a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i64> {
+    let s = tcu.size;
+    assert!(k <= s && n <= s, "tile {k}x{n} exceeds array {s}");
+    let mut c = vec![0i64; m * n];
+    // Window wide enough for a dot product of k int8 products.
+    let w = 2 * OPERAND_BITS + 4 + (usize::BITS - k.leading_zeros()) as usize;
+    for mi in 0..m {
+        for j in 0..n {
+            match tcu.variant {
+                Variant::Baseline => {
+                    let mul = Multiplier::new(MultKind::DwIp, OPERAND_BITS);
+                    for p in 0..k {
+                        c[mi * n + j] += mul.mul(a[mi * k + p] as i64, b[p * n + j] as i64);
+                    }
+                }
+                Variant::EntMbe | Variant::EntOurs => {
+                    // Fused path: gather every multiplier's PP rows into
+                    // one carry-save tree, resolve once.
+                    let mut rows = Vec::new();
+                    for p in 0..k {
+                        let a_val = a[mi * k + p] as i64;
+                        let b_val = b[p * n + j] as i64;
+                        let digits: Vec<i8> = match tcu.variant {
+                            Variant::EntMbe => {
+                                crate::encoding::mbe::booth_digits(a_val, OPERAND_BITS)
+                            }
+                            _ => {
+                                let code = encode_signed(a_val, OPERAND_BITS);
+                                let mut d = code.mag.digits.clone();
+                                if code.mag.cin {
+                                    d.push(1);
+                                }
+                                // Sign applies to the selected multiple.
+                                if code.sign {
+                                    d.iter_mut().for_each(|x| *x = -*x);
+                                }
+                                d
+                            }
+                        };
+                        for (i, &d) in digits.iter().enumerate() {
+                            rows.extend(rows_for_digit(d, b_val, i, w));
+                        }
+                    }
+                    let red = reduce(&rows, w);
+                    let (bits, _) = Cla::new(w).add(red.sum, red.carry, false);
+                    c[mi * n + j] += unwrap(bits, w);
+                }
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{gemm_ref, ArchKind};
+    use crate::pe::ALL_VARIANTS;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn matmul_matches_reference_all_variants() {
+        let mut rng = Rng::new(0xA2);
+        for variant in ALL_VARIANTS {
+            let tcu = Tcu::new(ArchKind::Array1d2d, 16, variant);
+            let (m, k, n) = (4, 16, 16);
+            let a = rng.i8_vec(m * k);
+            let b = rng.i8_vec(k * n);
+            assert_eq!(
+                tcu.matmul(&a, &b, m, k, n),
+                gemm_ref(&a, &b, m, k, n),
+                "{}",
+                variant.name()
+            );
+        }
+    }
+
+    #[test]
+    fn fused_path_handles_extremes() {
+        let tcu = Tcu::new(ArchKind::Array1d2d, 4, Variant::EntOurs);
+        let a = vec![-128i8; 4]; // 1×4 row of the nastiest operand
+        let b = vec![-128i8; 4]; // 4×1
+        assert_eq!(tcu.matmul(&a, &b, 1, 4, 1), vec![4 * 16384]);
+    }
+
+    #[test]
+    fn this_arch_has_the_largest_ent_gain() {
+        // §4.3: the 1D/2D array benefits most from EN-T.
+        use crate::arch::ALL_ARCHS;
+        let gain = |arch| {
+            let s = 32;
+            let size = if arch == ArchKind::Cube3d { 8 } else { s };
+            let b = Tcu::new(arch, size, Variant::Baseline).area_efficiency();
+            let e = Tcu::new(arch, size, Variant::EntOurs).area_efficiency();
+            e / b - 1.0
+        };
+        let a1d2d = gain(ArchKind::Array1d2d);
+        for arch in ALL_ARCHS {
+            if arch != ArchKind::Array1d2d {
+                assert!(
+                    a1d2d >= gain(arch),
+                    "{} gain {} > 1D/2D {}",
+                    arch.name(),
+                    gain(arch),
+                    a1d2d
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! 3D Cube architecture (Fig 2(e), Ascend/NVIDIA-class).
+//!
+//! An s×s×s cube of multipliers computes a full s×s×s matmul fragment
+//! per cycle: multiplier (m,k,n) forms A[m][k]·B[k][n]; per-(m,n) adder
+//! trees reduce over k; s² accumulators integrate across tiles.
+//!
+//! Operands broadcast along one cube axis each, with one register stage
+//! at the entry faces. EN-T overlay: the multiplicand face needs **s²
+//! encoders** — the structural reason §4.4 finds the cube benefits least
+//! (a 1024-GOPS cube of two 8³ arrays needs 128 encoders and saves only
+//! 896, vs 32 saving 992 for a 32×32 2D array).
+
+use super::trees::{self, with_activity};
+use super::{CellSpec, Tcu, OPERAND_BITS};
+use crate::arith::adders::Accumulator;
+use crate::arith::multiplier::{MultKind, Multiplier};
+use crate::encoding::ent::encode_signed;
+use crate::gates::Gate;
+use crate::pe::Variant;
+
+pub fn cells(s: usize, variant: Variant) -> CellSpec {
+    let n = OPERAND_BITS;
+    let mult = variant.mult_cost(n);
+    let mult_base = Variant::Baseline.mult_cost(n);
+    let mcand_bits = variant.multiplicand_bits(n);
+    // Reduction length is the cube edge: accumulator width 16 + log₂(s).
+    let acc = with_activity(Accumulator::for_array(s).cost(), trees::ACC_ACTIVITY);
+
+    // Face registers: A face s²×(encoded width), B face s²×n.
+    let face_regs = Gate::DffBit.cost().replicate(mcand_bits + n).replicate(s * s);
+
+    CellSpec {
+        mults: mult.replicate(s * s * s),
+        registers: face_regs,
+        accumulators: acc.replicate(s * s),
+        adder_trees: trees::cla_tree(s, 2 * n).replicate(s * s),
+        encoders: variant.column_encoder_cost(n).replicate(if variant.external_encoder() {
+            s * s
+        } else {
+            0
+        }),
+        // Per-multiplier wire crossing inside the cube: broadcast
+        // multiplicand + multiplier + product lane to the k-tree.
+        path_bits: (mcand_bits + n + 2 * n) as f64,
+        path_bits_baseline: (n + n + 2 * n) as f64,
+        pe_area: mult.area_um2,
+        pe_area_baseline: mult_base.area_um2,
+    }
+}
+
+/// Functional dataflow: one s×s×s fragment per "cycle"; A[m][k] is
+/// encoded once at the face and broadcast along the n axis (reused by s
+/// multipliers), trees reduce over k.
+pub fn matmul(tcu: &Tcu, a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i64> {
+    let s = tcu.size;
+    assert!(m <= s && k <= s && n <= s, "tile {m}x{k}x{n} exceeds cube {s}");
+    let mult = Multiplier::new(tcu.variant.mult_kind(), OPERAND_BITS);
+    let mut c = vec![0i64; m * n];
+    for mi in 0..m {
+        for p in 0..k {
+            let a_val = a[mi * k + p] as i64;
+            match tcu.variant {
+                Variant::EntOurs => {
+                    let code = encode_signed(a_val, OPERAND_BITS); // face encoder, once
+                    for j in 0..n {
+                        c[mi * n + j] += mult.mul_encoded(&code, b[p * n + j] as i64);
+                    }
+                }
+                Variant::EntMbe => {
+                    let mul = Multiplier::new(MultKind::MbeInternal, OPERAND_BITS);
+                    for j in 0..n {
+                        c[mi * n + j] += mul.mul(a_val, b[p * n + j] as i64);
+                    }
+                }
+                Variant::Baseline => {
+                    let mul = Multiplier::new(MultKind::DwIp, OPERAND_BITS);
+                    for j in 0..n {
+                        c[mi * n + j] += mul.mul(a_val, b[p * n + j] as i64);
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{gemm_ref, ArchKind};
+    use crate::pe::ALL_VARIANTS;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn matmul_matches_reference_all_variants() {
+        let mut rng = Rng::new(0xA6);
+        for variant in ALL_VARIANTS {
+            let tcu = Tcu::new(ArchKind::Cube3d, 8, variant);
+            let (m, k, n) = (8, 8, 8);
+            let a = rng.i8_vec(m * k);
+            let b = rng.i8_vec(k * n);
+            assert_eq!(
+                tcu.matmul(&a, &b, m, k, n),
+                gemm_ref(&a, &b, m, k, n),
+                "{}",
+                variant.name()
+            );
+        }
+    }
+
+    #[test]
+    fn encoder_overhead_is_quadratic_in_edge() {
+        let c8 = Tcu::new(ArchKind::Cube3d, 8, Variant::EntOurs);
+        assert_eq!(c8.encoder_blocks(), 64);
+        let c16 = Tcu::new(ArchKind::Cube3d, 16, Variant::EntOurs);
+        assert_eq!(c16.encoder_blocks(), 256);
+    }
+
+    #[test]
+    fn cube_pays_most_encoder_overhead_per_gops() {
+        // §4.4's structural argument: the cube needs s² encoders per s³
+        // multipliers — 8× the per-multiplier encoder overhead of a
+        // 32-wide 2D array at the same 1024-GOPS scale. (The paper's
+        // "cube benefits least" claim is made at SoC level, Fig 11; the
+        // SoC tests assert that ordering.)
+        use crate::arch::{ArchKind, ALL_ARCHS, Scale};
+        let overhead = |arch: ArchKind| {
+            let size = arch.size_for_scale(Scale::Tops1);
+            let t = Tcu::new(arch, size, Variant::EntOurs);
+            t.encoder_blocks() as f64 / t.num_macs() as f64
+        };
+        let cube = overhead(ArchKind::Cube3d);
+        for arch in ALL_ARCHS {
+            if arch != ArchKind::Cube3d {
+                assert!(
+                    cube > 3.0 * overhead(arch),
+                    "{} overhead {:.4} vs cube {:.4}",
+                    arch.name(),
+                    overhead(arch),
+                    cube
+                );
+            }
+        }
+        // And the benefit from EN-T is still positive for the cube.
+        let c8 = Tcu::new(ArchKind::Cube3d, 8, Variant::EntOurs);
+        let b8 = Tcu::new(ArchKind::Cube3d, 8, Variant::Baseline);
+        assert!(c8.energy_efficiency() > b8.energy_efficiency());
+    }
+}

@@ -1,0 +1,154 @@
+//! 2D Matrix architecture (Fig 2(a), DianNao-class).
+//!
+//! S×S multipliers; the multiplicand of each array row is **broadcast**
+//! combinationally to all S columns (no per-PE pipeline registers on the
+//! operand path — the property that makes this architecture friendly to
+//! EN-T even with MBE's wide encoding, §4.3). Each column PE holds a
+//! stationary weight; per-row adder trees reduce S products, and a
+//! per-row accumulator integrates over the temporal (output-row) loop.
+//!
+//! EN-T overlay: S encoders on the broadcast multiplicand pathway; every
+//! PE multiplier drops its internal encoder.
+
+use super::trees::{self, with_activity};
+use super::{CellSpec, Tcu, OPERAND_BITS};
+use crate::arith::adders::Accumulator;
+use crate::arith::multiplier::{MultKind, Multiplier};
+use crate::encoding::ent::encode_signed;
+use crate::gates::Gate;
+use crate::pe::Variant;
+
+/// Stationary (weight) registers barely toggle; flowing operands toggle
+/// every cycle (the DFF power constant is calibrated at transfer
+/// activity).
+const STATIONARY_REG_ACTIVITY: f64 = 0.1;
+
+pub fn cells(s: usize, variant: Variant) -> CellSpec {
+    let n = OPERAND_BITS;
+    let mult = variant.mult_cost(n);
+    let mult_base = Variant::Baseline.mult_cost(n);
+    let mcand_bits = variant.multiplicand_bits(n);
+
+    let pe_regs = with_activity(
+        Gate::DffBit.cost().replicate(n), // stationary weight per PE
+        STATIONARY_REG_ACTIVITY,
+    );
+    let edge_regs = Gate::DffBit.cost().replicate(mcand_bits).replicate(s);
+    let acc = with_activity(Accumulator::for_array(s).cost(), trees::ACC_ACTIVITY);
+
+    let pe_area = mult.area_um2 + pe_regs.area_um2;
+    let pe_area_baseline = mult_base.area_um2 + pe_regs.area_um2;
+
+    CellSpec {
+        mults: mult.replicate(s * s),
+        registers: pe_regs.replicate(s * s) + edge_regs,
+        accumulators: acc.replicate(s),
+        adder_trees: trees::cla_tree(s, 2 * n).replicate(s),
+        encoders: variant.column_encoder_cost(n).replicate(if variant.external_encoder() {
+            s
+        } else {
+            0
+        }),
+        // Wires crossing one PE pitch: the broadcast multiplicand plus
+        // the 16-bit product lane into the row tree.
+        path_bits: (mcand_bits + 2 * n) as f64,
+        path_bits_baseline: (n + 2 * n) as f64,
+        pe_area,
+        pe_area_baseline,
+    }
+}
+
+/// Functional dataflow: weights B stationary (K rows × N cols), output
+/// rows of A stream; each streamed multiplicand element is encoded once
+/// per row and broadcast to all N column multipliers.
+pub fn matmul(tcu: &Tcu, a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i64> {
+    let s = tcu.size;
+    assert!(k <= s && n <= s, "tile {k}x{n} exceeds array {s}");
+    let mult = Multiplier::new(tcu.variant.mult_kind(), OPERAND_BITS);
+    let mut c = vec![0i64; m * n];
+    for mi in 0..m {
+        // One broadcast wave: row tree sums S products per column lane.
+        for p in 0..k {
+            let a_val = a[mi * k + p] as i64;
+            match tcu.variant {
+                Variant::Baseline | Variant::EntMbe => {
+                    let mul = Multiplier::new(
+                        if tcu.variant == Variant::Baseline {
+                            MultKind::DwIp
+                        } else {
+                            MultKind::MbeInternal
+                        },
+                        OPERAND_BITS,
+                    );
+                    for j in 0..n {
+                        c[mi * n + j] += mul.mul(a_val, b[p * n + j] as i64);
+                    }
+                }
+                Variant::EntOurs => {
+                    // Encode ONCE at the row edge; reuse across columns —
+                    // the paper's reuse insight made explicit.
+                    let code = encode_signed(a_val, OPERAND_BITS);
+                    for j in 0..n {
+                        c[mi * n + j] += mult.mul_encoded(&code, b[p * n + j] as i64);
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{gemm_ref, ArchKind};
+    use crate::pe::ALL_VARIANTS;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn matmul_matches_reference_all_variants() {
+        let mut rng = Rng::new(0xA1);
+        for variant in ALL_VARIANTS {
+            let tcu = Tcu::new(ArchKind::Matrix2d, 16, variant);
+            let (m, k, n) = (5, 16, 13);
+            let a = rng.i8_vec(m * k);
+            let b = rng.i8_vec(k * n);
+            assert_eq!(
+                tcu.matmul(&a, &b, m, k, n),
+                gemm_ref(&a, &b, m, k, n),
+                "{}",
+                variant.name()
+            );
+        }
+    }
+
+    #[test]
+    fn ent_reduces_area_and_power() {
+        let base = Tcu::new(ArchKind::Matrix2d, 32, Variant::Baseline).cost();
+        let ours = Tcu::new(ArchKind::Matrix2d, 32, Variant::EntOurs).cost();
+        assert!(ours.total().area_um2 < base.total().area_um2);
+        assert!(ours.total().power_uw < base.total().power_uw);
+    }
+
+    #[test]
+    fn broadcast_arch_tolerates_mbe() {
+        // §4.3: on broadcast archs the removed logic compensates MBE's
+        // wire width — EN-T(MBE) must not lose area vs baseline here.
+        let base = Tcu::new(ArchKind::Matrix2d, 32, Variant::Baseline).cost();
+        let mbe = Tcu::new(ArchKind::Matrix2d, 32, Variant::EntMbe).cost();
+        assert!(mbe.total().area_um2 < base.total().area_um2);
+    }
+
+    #[test]
+    fn no_per_pe_register_growth_under_ent() {
+        // The multiplicand path is combinational broadcast: register
+        // area must not grow with the encoded width beyond the S edge
+        // registers.
+        let base = cells(32, Variant::Baseline);
+        let ours = cells(32, Variant::EntOurs);
+        let edge_delta = ours.registers.area_um2 - base.registers.area_um2;
+        // Only the edge registers widen: 32 × 1 extra bit.
+        let expect = 32.0 * 1.0 * crate::gates::calib::constants().dff_um2_per_bit;
+        assert!((edge_delta - expect).abs() < 1.0, "delta {edge_delta}");
+    }
+}

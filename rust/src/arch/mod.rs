@@ -1,0 +1,399 @@
+//! The five mainstream TCU microarchitectures of the paper's Fig 2, each
+//! with:
+//!
+//! * a **cell composition** — what multipliers / registers / adder trees
+//!   / accumulators the array instantiates for a given size and variant;
+//! * a **functional dataflow** — a bit-accurate matmul through the
+//!   array's actual data movement (broadcast, systolic flow, cube
+//!   reduction), used to prove EN-T changes nothing functionally;
+//! * the **EN-T overlay** — external column encoders, widened operand
+//!   paths, and the per-PE multiplier swap (see [`crate::pe::Variant`]).
+//!
+//! Array cost = cells × routing overhead ([`crate::hw::wiring`]).
+
+pub mod array1d2d;
+pub mod cube3d;
+pub mod matrix2d;
+pub mod systolic;
+pub mod trees;
+
+use crate::gates::Cost;
+use crate::hw::wiring::{self, RoutingFit};
+use crate::pe::Variant;
+
+/// Operand precision used by every TCU experiment in the paper (§4.3).
+pub const OPERAND_BITS: usize = 8;
+
+/// The five microarchitectures of Fig 2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArchKind {
+    /// Fig 2(a) — DianNao-style 2D matrix: row-broadcast multiplicand,
+    /// per-row adder tree.
+    Matrix2d,
+    /// Fig 2(b) — DaDianNao-style 1D/2D array: multipliers feed adder
+    /// trees directly, with no PE pipeline registers.
+    Array1d2d,
+    /// Fig 2(c) — output-stationary systolic array (TPU-style grid,
+    /// psums accumulate in place).
+    SystolicOs,
+    /// Fig 2(d) — weight-stationary systolic array (psums flow).
+    SystolicWs,
+    /// Fig 2(e) — Ascend/NVIDIA-style 3D cube (S³ multipliers, trees
+    /// over the contraction dimension).
+    Cube3d,
+}
+
+pub const ALL_ARCHS: [ArchKind; 5] = [
+    ArchKind::Matrix2d,
+    ArchKind::Array1d2d,
+    ArchKind::SystolicOs,
+    ArchKind::SystolicWs,
+    ArchKind::Cube3d,
+];
+
+impl ArchKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ArchKind::Matrix2d => "2D Matrix",
+            ArchKind::Array1d2d => "1D/2D Array",
+            ArchKind::SystolicOs => "Systolic Array (OS)",
+            ArchKind::SystolicWs => "Systolic Array (WS)",
+            ArchKind::Cube3d => "3D Cube",
+        }
+    }
+
+    pub fn short_name(self) -> &'static str {
+        match self {
+            ArchKind::Matrix2d => "matrix2d",
+            ArchKind::Array1d2d => "array1d2d",
+            ArchKind::SystolicOs => "sa_os",
+            ArchKind::SystolicWs => "sa_ws",
+            ArchKind::Cube3d => "cube3d",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ArchKind> {
+        ALL_ARCHS.iter().copied().find(|a| a.short_name() == s)
+    }
+
+    /// Does the multiplicand move through per-PE pipeline registers
+    /// (systolic/cube) rather than combinational broadcast?
+    pub fn pipelined_transfer(self) -> bool {
+        matches!(
+            self,
+            ArchKind::SystolicOs | ArchKind::SystolicWs | ArchKind::Cube3d
+        )
+    }
+
+    /// The array size (linear dimension; cube edge for [`ArchKind::Cube3d`])
+    /// that realises a computational scale, per the paper's §4.3 grid:
+    /// 2D archs at 16²/32²/64², cube at 4³/8³/16³.
+    pub fn size_for_scale(self, scale: Scale) -> usize {
+        match (self, scale) {
+            (ArchKind::Cube3d, Scale::Gops256) => 4,
+            (ArchKind::Cube3d, Scale::Tops1) => 8,
+            (ArchKind::Cube3d, Scale::Tops4) => 16,
+            (_, Scale::Gops256) => 16,
+            (_, Scale::Tops1) => 32,
+            (_, Scale::Tops4) => 64,
+        }
+    }
+
+    /// Fitted routing coefficients (see `hw::wiring` docs; fitted once
+    /// against Fig 6/7 endpoints, residuals in EXPERIMENTS.md).
+    pub fn routing_fit(self) -> RoutingFit {
+        match self {
+            // Broadcast archs pay long row wires and strong drivers, so
+            // their interconnect power fraction is the largest.
+            ArchKind::Matrix2d => RoutingFit {
+                area_frac: 0.42,
+                power_frac: 0.60,
+            },
+            ArchKind::Array1d2d => RoutingFit {
+                area_frac: 0.38,
+                power_frac: 0.45,
+            },
+            // Systolic grids route neighbour-to-neighbour but carry wide
+            // drain/psum buses.
+            ArchKind::SystolicOs => RoutingFit {
+                area_frac: 0.36,
+                power_frac: 0.45,
+            },
+            ArchKind::SystolicWs => RoutingFit {
+                area_frac: 0.36,
+                power_frac: 0.42,
+            },
+            // 3D topology folded onto a 2D die routes worst.
+            ArchKind::Cube3d => RoutingFit {
+                area_frac: 0.45,
+                power_frac: 0.48,
+            },
+        }
+    }
+}
+
+/// The paper's three computational scales (Fig 7 x-axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Gops256,
+    Tops1,
+    Tops4,
+}
+
+pub const ALL_SCALES: [Scale; 3] = [Scale::Gops256, Scale::Tops1, Scale::Tops4];
+
+impl Scale {
+    pub fn name(self) -> &'static str {
+        match self {
+            Scale::Gops256 => "256 GOPS",
+            Scale::Tops1 => "1 TOPS",
+            Scale::Tops4 => "4 TOPS",
+        }
+    }
+
+    pub fn gops(self) -> f64 {
+        match self {
+            Scale::Gops256 => 256.0,
+            Scale::Tops1 => 1024.0,
+            Scale::Tops4 => 4096.0,
+        }
+    }
+}
+
+/// Cost breakdown of one TCU instance.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TcuCost {
+    pub mults: Cost,
+    pub registers: Cost,
+    pub accumulators: Cost,
+    pub adder_trees: Cost,
+    pub encoders: Cost,
+    /// Routing overhead added on top of the cells.
+    pub routing: Cost,
+}
+
+impl TcuCost {
+    pub fn cells(&self) -> Cost {
+        self.mults + self.registers + self.accumulators + self.adder_trees + self.encoders
+    }
+
+    pub fn total(&self) -> Cost {
+        self.cells() + self.routing
+    }
+}
+
+/// Cell composition + path widths an architecture reports to the shared
+/// roll-up.
+#[derive(Clone, Copy, Debug)]
+pub struct CellSpec {
+    pub mults: Cost,
+    pub registers: Cost,
+    pub accumulators: Cost,
+    pub adder_trees: Cost,
+    pub encoders: Cost,
+    /// Inter-PE path bits crossing one PE pitch (variant-dependent).
+    pub path_bits: f64,
+    /// Same for the baseline variant (routing ratio denominator).
+    pub path_bits_baseline: f64,
+    /// Per-PE cell area of this variant and of baseline (routing ratio).
+    pub pe_area: f64,
+    pub pe_area_baseline: f64,
+}
+
+/// One concrete TCU instance.
+#[derive(Clone, Copy, Debug)]
+pub struct Tcu {
+    pub kind: ArchKind,
+    /// Linear array dimension (cube edge for 3D Cube).
+    pub size: usize,
+    pub variant: Variant,
+}
+
+impl Tcu {
+    pub fn new(kind: ArchKind, size: usize, variant: Variant) -> Tcu {
+        assert!(size.is_power_of_two() && size >= 2, "bad array size {size}");
+        Tcu {
+            kind,
+            size,
+            variant,
+        }
+    }
+
+    /// Number of multipliers.
+    pub fn num_macs(&self) -> usize {
+        match self.kind {
+            ArchKind::Cube3d => self.size * self.size * self.size,
+            _ => self.size * self.size,
+        }
+    }
+
+    /// Peak INT8 throughput in GOPS (2 ops per MAC) at 500 MHz.
+    pub fn gops(&self) -> f64 {
+        self.num_macs() as f64 * 2.0 * crate::CLOCK_MHZ / 1000.0
+    }
+
+    /// External encoder blocks (§4.4: one per column of the multiplicand
+    /// pathway — S for the 2D architectures, S² per cube).
+    pub fn encoder_blocks(&self) -> usize {
+        if !self.variant.external_encoder() {
+            return 0;
+        }
+        match self.kind {
+            ArchKind::Cube3d => self.size * self.size,
+            _ => self.size,
+        }
+    }
+
+    /// Encoder blocks *removed* relative to baseline (one per multiplier
+    /// minus the external ones) — the quantity §4.4 discusses for the
+    /// cube's disadvantage.
+    pub fn encoders_saved(&self) -> usize {
+        if !self.variant.external_encoder() {
+            return 0;
+        }
+        self.num_macs() - self.encoder_blocks()
+    }
+
+    /// Full cost breakdown: arch cells + routing overlay.
+    pub fn cost(&self) -> TcuCost {
+        let spec = match self.kind {
+            ArchKind::Matrix2d => matrix2d::cells(self.size, self.variant),
+            ArchKind::Array1d2d => array1d2d::cells(self.size, self.variant),
+            ArchKind::SystolicOs => systolic::cells_os(self.size, self.variant),
+            ArchKind::SystolicWs => systolic::cells_ws(self.size, self.variant),
+            ArchKind::Cube3d => cube3d::cells(self.size, self.variant),
+        };
+        let cells = spec.mults
+            + spec.registers
+            + spec.accumulators
+            + spec.adder_trees
+            + spec.encoders;
+        let (a_mult, p_mult) = wiring::overhead(
+            self.kind.routing_fit(),
+            spec.pe_area / spec.pe_area_baseline,
+            spec.path_bits / spec.path_bits_baseline,
+        );
+        let routing = Cost::new(
+            cells.area_um2 * (a_mult - 1.0),
+            cells.power_uw * (p_mult - 1.0),
+            0.0,
+        );
+        TcuCost {
+            mults: spec.mults,
+            registers: spec.registers,
+            accumulators: spec.accumulators,
+            adder_trees: spec.adder_trees,
+            encoders: spec.encoders,
+            routing,
+        }
+    }
+
+    /// Area efficiency in GOPS/mm².
+    pub fn area_efficiency(&self) -> f64 {
+        self.gops() / (self.cost().total().area_um2 / 1e6)
+    }
+
+    /// Energy efficiency in GOPS/W (power in µW → W).
+    pub fn energy_efficiency(&self) -> f64 {
+        self.gops() / (self.cost().total().power_uw / 1e6)
+    }
+
+    /// Functional matmul through the architecture's dataflow:
+    /// `a` is M×K row-major, `b` is K×N row-major; returns M×N (i64).
+    /// Dimensions must fit one tile (≤ array capacity); the scheduler in
+    /// [`crate::sim`] handles larger problems.
+    pub fn matmul(&self, a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i64> {
+        assert_eq!(a.len(), m * k, "A shape");
+        assert_eq!(b.len(), k * n, "B shape");
+        match self.kind {
+            ArchKind::Matrix2d => matrix2d::matmul(self, a, b, m, k, n),
+            ArchKind::Array1d2d => array1d2d::matmul(self, a, b, m, k, n),
+            ArchKind::SystolicOs => systolic::matmul_os(self, a, b, m, k, n),
+            ArchKind::SystolicWs => systolic::matmul_ws(self, a, b, m, k, n),
+            ArchKind::Cube3d => cube3d::matmul(self, a, b, m, k, n),
+        }
+    }
+
+    /// Maximum (m, k, n) tile this instance accepts in one pass.
+    pub fn tile_caps(&self) -> (usize, usize, usize) {
+        let s = self.size;
+        match self.kind {
+            // Broadcast/tree archs: K unrolls over rows (tree length),
+            // N over columns, M streams temporally (unbounded).
+            ArchKind::Matrix2d | ArchKind::Array1d2d => (usize::MAX, s, s),
+            // Systolic grids: M×N outputs resident (OS) or M streaming
+            // (WS); K streams (OS) / K is the row dim (WS).
+            ArchKind::SystolicOs => (s, usize::MAX, s),
+            ArchKind::SystolicWs => (usize::MAX, s, s),
+            ArchKind::Cube3d => (s, s, s),
+        }
+    }
+}
+
+/// Reference GEMM for the functional tests.
+pub fn gemm_ref(a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i64> {
+    let mut c = vec![0i64; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p] as i64;
+            if av == 0 {
+                continue;
+            }
+            for j in 0..n {
+                c[i * n + j] += av * b[p * n + j] as i64;
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gops_matches_paper_grid() {
+        // §4.3: 16² = 256 GOPS, 32² = 1 TOPS, 64² = 4 TOPS @500 MHz.
+        for (arch, scale) in [
+            (ArchKind::SystolicOs, Scale::Gops256),
+            (ArchKind::Matrix2d, Scale::Tops1),
+            (ArchKind::Array1d2d, Scale::Tops4),
+        ] {
+            let s = arch.size_for_scale(scale);
+            let t = Tcu::new(arch, s, Variant::Baseline);
+            assert_eq!(t.gops(), scale.gops(), "{} {}", arch.name(), scale.name());
+        }
+        // Cube tiers 4³/8³/16³; 16³ exactly hits 4 TOPS.
+        let c16 = Tcu::new(ArchKind::Cube3d, 16, Variant::Baseline);
+        assert_eq!(c16.gops(), 4096.0);
+    }
+
+    #[test]
+    fn encoder_counts_match_paper_prose() {
+        // §4.4: "a 32×32 array requires 32 encoders, saving 992"; an 8³
+        // cube needs 64 (two of them: 128, saving 896).
+        let t = Tcu::new(ArchKind::SystolicOs, 32, Variant::EntOurs);
+        assert_eq!(t.encoder_blocks(), 32);
+        assert_eq!(t.encoders_saved(), 992);
+        let c = Tcu::new(ArchKind::Cube3d, 8, Variant::EntOurs);
+        assert_eq!(c.encoder_blocks(), 64);
+        assert_eq!(c.encoders_saved(), 512 - 64);
+        let b = Tcu::new(ArchKind::SystolicOs, 32, Variant::Baseline);
+        assert_eq!(b.encoder_blocks(), 0);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for a in ALL_ARCHS {
+            assert_eq!(ArchKind::parse(a.short_name()), Some(a));
+        }
+        assert_eq!(ArchKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn gemm_ref_sanity() {
+        let a = [1i8, 2, 3, 4]; // 2×2
+        let b = [5i8, 6, 7, 8];
+        assert_eq!(gemm_ref(&a, &b, 2, 2, 2), vec![19, 22, 43, 50]);
+    }
+}

@@ -1,0 +1,280 @@
+//! Systolic arrays (Fig 2(c)(d), TPU-class) in both stationarities.
+//!
+//! * **Output-stationary (OS)**: A flows east, B flows south, each PE
+//!   accumulates its C element in place for K cycles, then drains.
+//! * **Weight-stationary (WS)**: B is pre-loaded (one weight per PE); A
+//!   flows east while partial sums flow south through the column.
+//!
+//! These are the "pipelined transfer" architectures of §4.3: the
+//! multiplicand moves through a per-PE register each hop, so EN-T's
+//! encoded width lands directly on register (and wire) count — +4 bits
+//! for MBE, +1 bit for Ours. This is the structural reason Fig 6 shows
+//! EN-T(MBE) sometimes *increasing* systolic area while EN-T(Ours)
+//! reduces it.
+//!
+//! EN-T overlay: OS encodes the flowing multiplicand at the S row
+//! edges; WS encodes the stationary weights at load time (exactly the
+//! paper's SoC placement: encoders on the Weight Buffer readout).
+
+use super::trees::{self, with_activity};
+use super::{CellSpec, Tcu, OPERAND_BITS};
+use crate::arith::adders::{Accumulator, Cla};
+use crate::arith::multiplier::{MultKind, Multiplier};
+use crate::encoding::ent::encode_signed;
+use crate::gates::Gate;
+use crate::pe::{Pe, Variant};
+
+const STATIONARY_REG_ACTIVITY: f64 = 0.1;
+
+fn mult_for(variant: Variant) -> Multiplier {
+    Multiplier::new(variant.mult_kind(), OPERAND_BITS)
+}
+
+/// Output-stationary cell composition.
+pub fn cells_os(s: usize, variant: Variant) -> CellSpec {
+    let n = OPERAND_BITS;
+    let mult = variant.mult_cost(n);
+    let mult_base = Variant::Baseline.mult_cost(n);
+    let mcand_bits = variant.multiplicand_bits(n);
+    let acc_w = Accumulator::for_array(s).width;
+
+    // Per-PE: flowing A register (encoded width), flowing B register,
+    // in-place accumulator.
+    let flow_regs = Gate::DffBit.cost().replicate(mcand_bits + n);
+    let flow_regs_base = Gate::DffBit.cost().replicate(n + n);
+    let acc = with_activity(Accumulator::for_array(s).cost(), trees::ACC_ACTIVITY);
+
+    let pe_area = mult.area_um2 + flow_regs.area_um2 + acc.area_um2;
+    let pe_area_baseline = mult_base.area_um2 + flow_regs_base.area_um2 + acc.area_um2;
+
+    CellSpec {
+        mults: mult.replicate(s * s),
+        registers: flow_regs.replicate(s * s),
+        accumulators: acc.replicate(s * s),
+        adder_trees: crate::gates::Cost::ZERO,
+        encoders: variant.column_encoder_cost(n).replicate(if variant.external_encoder() {
+            s
+        } else {
+            0
+        }),
+        // Wires crossing a PE pitch: A east (mcand), B south (n), drain
+        // bus (acc_w shared per column).
+        path_bits: (mcand_bits + n + acc_w) as f64,
+        path_bits_baseline: (n + n + acc_w) as f64,
+        pe_area,
+        pe_area_baseline,
+    }
+}
+
+/// Weight-stationary cell composition.
+pub fn cells_ws(s: usize, variant: Variant) -> CellSpec {
+    let n = OPERAND_BITS;
+    let mult = variant.mult_cost(n);
+    let mult_base = Variant::Baseline.mult_cost(n);
+    let mcand_bits = variant.multiplicand_bits(n);
+    let acc_w = Accumulator::for_array(s).width;
+
+    // Per-PE: stationary (encoded) weight register, flowing activation
+    // register, flowing psum register + psum adder.
+    let w_reg = with_activity(
+        Gate::DffBit.cost().replicate(mcand_bits),
+        STATIONARY_REG_ACTIVITY,
+    );
+    let w_reg_base = with_activity(
+        Gate::DffBit.cost().replicate(n),
+        STATIONARY_REG_ACTIVITY,
+    );
+    let a_reg = Gate::DffBit.cost().replicate(n);
+    let psum_reg = Gate::DffBit.cost().replicate(acc_w);
+    let psum_adder = with_activity(Cla::new(acc_w).cost(), trees::ACC_ACTIVITY);
+
+    let regs = w_reg + a_reg + psum_reg;
+    let regs_base = w_reg_base + a_reg + psum_reg;
+    let pe_area = mult.area_um2 + regs.area_um2 + psum_adder.area_um2;
+    let pe_area_baseline = mult_base.area_um2 + regs_base.area_um2 + psum_adder.area_um2;
+
+    CellSpec {
+        mults: mult.replicate(s * s),
+        registers: regs.replicate(s * s),
+        accumulators: psum_adder.replicate(s * s)
+            + with_activity(Accumulator::for_array(s).cost(), trees::ACC_ACTIVITY)
+                .replicate(s), // column-bottom output accumulators
+        adder_trees: crate::gates::Cost::ZERO,
+        encoders: variant.column_encoder_cost(n).replicate(if variant.external_encoder() {
+            s
+        } else {
+            0
+        }),
+        // Wires per pitch: activation east (n), psum south (acc_w),
+        // weight-load bus (encoded width, time-multiplexed).
+        path_bits: (n + acc_w + mcand_bits) as f64,
+        path_bits_baseline: (n + acc_w + n) as f64,
+        pe_area,
+        pe_area_baseline,
+    }
+}
+
+/// Output-stationary functional dataflow, cycle-accurate skewed flow:
+/// PE(i,j) consumes A[i][p] and B[p][j] at cycle t = p + i + j.
+pub fn matmul_os(tcu: &Tcu, a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i64> {
+    let s = tcu.size;
+    assert!(m <= s && n <= s, "tile {m}x{n} exceeds array {s}");
+    let mut pes: Vec<Pe> = (0..m * n)
+        .map(|_| Pe::new(tcu.variant, OPERAND_BITS, s))
+        .collect();
+    // Row-edge encoders (EN-T): encode each A element ONCE as it enters
+    // the array; the code then flows east, reused by every column —
+    // exactly one encode per multiplicand element (M·K total), the
+    // paper's reuse claim made literal.
+    let codes: Option<Vec<_>> = match tcu.variant {
+        Variant::EntOurs => Some(
+            a.iter()
+                .map(|&v| encode_signed(v as i64, OPERAND_BITS))
+                .collect(),
+        ),
+        _ => None,
+    };
+    let total_cycles = k + m + n; // fill + stream + drain
+    for t in 0..total_cycles {
+        for i in 0..m {
+            for j in 0..n {
+                let p = t as i64 - i as i64 - j as i64;
+                if p < 0 || p >= k as i64 {
+                    continue;
+                }
+                let p = p as usize;
+                let a_val = a[i * k + p] as i64;
+                let b_val = b[p * n + j] as i64;
+                match &codes {
+                    Some(cs) => pes[i * n + j].mac_encoded(&cs[i * k + p], b_val),
+                    None => pes[i * n + j].mac(a_val, b_val),
+                }
+            }
+        }
+    }
+    // Drain the output-stationary accumulators.
+    (0..m * n).map(|idx| pes[idx].acc()).collect()
+}
+
+/// Weight-stationary functional dataflow: weights encoded once at load
+/// (the Weight Buffer readout encoders), activations stream.
+pub fn matmul_ws(tcu: &Tcu, a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i64> {
+    let s = tcu.size;
+    assert!(k <= s && n <= s, "tile {k}x{n} exceeds array {s}");
+    let mult = mult_for(tcu.variant);
+    // Load phase: encode the stationary operand once per PE.
+    let codes: Option<Vec<_>> = match tcu.variant {
+        Variant::EntOurs => Some(
+            (0..k * n)
+                .map(|idx| encode_signed(b[idx] as i64, OPERAND_BITS))
+                .collect(),
+        ),
+        _ => None,
+    };
+    let mut c = vec![0i64; m * n];
+    // Stream phase: activation row mi enters row p at cycle mi + p; the
+    // psum for C[mi][j] exits after k hops. Skew does not change values;
+    // we iterate in dependency order.
+    for mi in 0..m {
+        for j in 0..n {
+            let mut psum = 0i64;
+            for p in 0..k {
+                let a_val = a[mi * k + p] as i64;
+                psum += match (&codes, tcu.variant) {
+                    (Some(cs), Variant::EntOurs) => mult.mul_encoded(&cs[p * n + j], a_val),
+                    (_, Variant::EntMbe) => {
+                        Multiplier::new(MultKind::MbeInternal, OPERAND_BITS)
+                            .mul(b[p * n + j] as i64, a_val)
+                    }
+                    _ => Multiplier::new(MultKind::DwIp, OPERAND_BITS)
+                        .mul(b[p * n + j] as i64, a_val),
+                };
+            }
+            c[mi * n + j] = psum;
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{gemm_ref, ArchKind};
+    use crate::pe::ALL_VARIANTS;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn os_matches_reference_all_variants() {
+        let mut rng = Rng::new(0xA3);
+        for variant in ALL_VARIANTS {
+            let tcu = Tcu::new(ArchKind::SystolicOs, 16, variant);
+            let (m, k, n) = (16, 9, 11);
+            let a = rng.i8_vec(m * k);
+            let b = rng.i8_vec(k * n);
+            assert_eq!(
+                tcu.matmul(&a, &b, m, k, n),
+                gemm_ref(&a, &b, m, k, n),
+                "OS {}",
+                variant.name()
+            );
+        }
+    }
+
+    #[test]
+    fn ws_matches_reference_all_variants() {
+        let mut rng = Rng::new(0xA4);
+        for variant in ALL_VARIANTS {
+            let tcu = Tcu::new(ArchKind::SystolicWs, 16, variant);
+            let (m, k, n) = (7, 16, 16);
+            let a = rng.i8_vec(m * k);
+            let b = rng.i8_vec(k * n);
+            assert_eq!(
+                tcu.matmul(&a, &b, m, k, n),
+                gemm_ref(&a, &b, m, k, n),
+                "WS {}",
+                variant.name()
+            );
+        }
+    }
+
+    #[test]
+    fn mbe_register_penalty_on_pipelined_arch() {
+        // §4.3: MBE's 12-bit encoding costs S² extra 4-bit registers on
+        // systolic arrays; Ours costs only 1 extra bit.
+        let base = cells_os(32, Variant::Baseline);
+        let mbe = cells_os(32, Variant::EntMbe);
+        let ours = cells_os(32, Variant::EntOurs);
+        let dff = crate::gates::calib::constants().dff_um2_per_bit;
+        let mbe_delta = mbe.registers.area_um2 - base.registers.area_um2;
+        let ours_delta = ours.registers.area_um2 - base.registers.area_um2;
+        assert!((mbe_delta - 32.0 * 32.0 * 4.0 * dff).abs() < 1.0);
+        assert!((ours_delta - 32.0 * 32.0 * 1.0 * dff).abs() < 1.0);
+    }
+
+    #[test]
+    fn ent_ours_beats_ent_mbe_on_systolic() {
+        // The paper's central Fig 6 contrast.
+        for s in [16usize, 32, 64] {
+            let mbe = Tcu::new(ArchKind::SystolicOs, s, Variant::EntMbe);
+            let ours = Tcu::new(ArchKind::SystolicOs, s, Variant::EntOurs);
+            assert!(
+                ours.cost().total().area_um2 < mbe.cost().total().area_um2,
+                "S={s}"
+            );
+            assert!(
+                ours.cost().total().power_uw < mbe.cost().total().power_uw,
+                "S={s}"
+            );
+        }
+    }
+
+    #[test]
+    fn os_partial_tiles_work() {
+        let tcu = Tcu::new(ArchKind::SystolicOs, 8, Variant::EntOurs);
+        let (m, k, n) = (3, 20, 5); // K streams beyond the array size
+        let mut rng = Rng::new(0xA5);
+        let a = rng.i8_vec(m * k);
+        let b = rng.i8_vec(k * n);
+        assert_eq!(tcu.matmul(&a, &b, m, k, n), gemm_ref(&a, &b, m, k, n));
+    }
+}

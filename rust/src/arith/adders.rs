@@ -1,0 +1,196 @@
+//! Final adders (paper §3.1 step 3): carry-lookahead and carry-select
+//! functional models with structural cost, plus the accumulator used by
+//! the PEs (width 16 + log₂S per §4.3).
+
+use crate::gates::{Cost, Gate};
+
+/// Bit-accurate carry-lookahead adder over a `width`-bit window.
+///
+/// Functionally an adder is an adder; what the CLA changes is delay
+/// (O(log n) vs O(n)) and area. We compute the sum exactly and expose the
+/// structural cost of a 4-bit-group CLA.
+#[derive(Clone, Copy, Debug)]
+pub struct Cla {
+    pub width: usize,
+}
+
+impl Cla {
+    pub fn new(width: usize) -> Cla {
+        assert!((1..=64).contains(&width));
+        Cla { width }
+    }
+
+    /// (sum mod 2^width, carry-out).
+    pub fn add(&self, a: u64, b: u64, cin: bool) -> (u64, bool) {
+        let mask = if self.width == 64 {
+            u64::MAX
+        } else {
+            (1u64 << self.width) - 1
+        };
+        let (a, b) = (a & mask, b & mask);
+        let full = (a as u128) + (b as u128) + (cin as u128);
+        ((full as u64) & mask, full >> self.width & 1 == 1)
+    }
+
+    /// Structural cost: per bit one P/G stage (XOR + AND) and one sum
+    /// XOR; per 4-bit group a lookahead block (≈ 5 AND + 4 OR).
+    pub fn cost(&self) -> Cost {
+        let n = self.width;
+        let groups = n.div_ceil(4);
+        let per_bit = Gate::Xor2.cost().replicate(2 * n) + Gate::And2.cost().replicate(n);
+        let lookahead =
+            (Gate::And2.cost().replicate(5) + Gate::Or2.cost().replicate(4)).replicate(groups);
+        let mut c = per_bit + lookahead;
+        // Delay: PG stage + log₂(groups) lookahead levels + sum XOR.
+        let levels = 2 + (groups.max(1) as f64).log2().ceil() as usize + 1;
+        c.delay_ns = Gate::Xor2.delay_ns() * levels as f64;
+        c
+    }
+}
+
+/// Carry-select adder: duplicated upper blocks + mux, faster but larger.
+/// Provided for the ablation of final-adder choice.
+#[derive(Clone, Copy, Debug)]
+pub struct CarrySelect {
+    pub width: usize,
+    pub block: usize,
+}
+
+impl CarrySelect {
+    pub fn new(width: usize, block: usize) -> CarrySelect {
+        assert!(block >= 1 && block <= width);
+        CarrySelect { width, block }
+    }
+
+    pub fn add(&self, a: u64, b: u64, cin: bool) -> (u64, bool) {
+        Cla::new(self.width).add(a, b, cin) // same function, different structure
+    }
+
+    pub fn cost(&self) -> Cost {
+        let nblocks = self.width.div_ceil(self.block);
+        // Each non-first block duplicated (carry 0/1) + mux per bit.
+        let rca_bit = Gate::FullAdder.cost();
+        let base = rca_bit.replicate(self.width);
+        let dup = rca_bit.replicate(self.width.saturating_sub(self.block));
+        let muxes = Gate::Mux2.cost().replicate(self.width.saturating_sub(self.block) + nblocks);
+        let mut c = base + dup + muxes;
+        c.delay_ns = Gate::FullAdder.delay_ns() * self.block as f64
+            + Gate::Mux2.delay_ns() * (nblocks.saturating_sub(1)) as f64;
+        c
+    }
+}
+
+/// The PE accumulator: an adder plus an output register, at the paper's
+/// width of `16 + log₂S` for array size S (§4.3).
+#[derive(Clone, Copy, Debug)]
+pub struct Accumulator {
+    pub width: usize,
+}
+
+impl Accumulator {
+    /// Accumulator width for array size `s` (§4.3: "the accumulator width
+    /// is 16 + log₂S").
+    pub fn for_array(s: usize) -> Accumulator {
+        assert!(s.is_power_of_two(), "array size {s} not a power of two");
+        Accumulator {
+            width: 16 + s.trailing_zeros() as usize,
+        }
+    }
+
+    /// One accumulate step: acc' = (acc + x) within the window, matching
+    /// hardware wrap-around semantics.
+    pub fn step(&self, acc: i64, x: i64) -> i64 {
+        let mask_width = self.width;
+        let wrapped = super::pp::wrap(acc.wrapping_add(x), mask_width);
+        super::pp::unwrap(wrapped, mask_width)
+    }
+
+    pub fn cost(&self) -> Cost {
+        let adder = Cla::new(self.width).cost();
+        let reg = Gate::DffBit.cost().replicate(self.width);
+        Cost {
+            area_um2: adder.area_um2 + reg.area_um2,
+            power_uw: adder.power_uw + reg.power_uw,
+            delay_ns: adder.delay_ns + reg.delay_ns,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{check, Config};
+
+    #[test]
+    fn cla_adds_exactly() {
+        let cla = Cla::new(16);
+        check("cla-add", Config::default(), |rng| {
+            let a = rng.below(1 << 16);
+            let b = rng.below(1 << 16);
+            let cin = rng.chance(0.5);
+            let (s, cout) = cla.add(a, b, cin);
+            let full = a + b + cin as u64;
+            if s == full & 0xFFFF && cout == (full >> 16 & 1 == 1) {
+                Ok(())
+            } else {
+                Err(format!("a={a} b={b} cin={cin}"))
+            }
+        });
+    }
+
+    #[test]
+    fn cla_carry_out_edges() {
+        let cla = Cla::new(8);
+        assert_eq!(cla.add(255, 0, true), (0, true));
+        assert_eq!(cla.add(255, 255, true), (255, true));
+        assert_eq!(cla.add(0, 0, false), (0, false));
+    }
+
+    #[test]
+    fn cla_delay_sublinear() {
+        let d8 = Cla::new(8).cost().delay_ns;
+        let d32 = Cla::new(32).cost().delay_ns;
+        assert!(d32 < 4.0 * d8, "CLA delay must be sub-linear: {d8} vs {d32}");
+    }
+
+    #[test]
+    fn carry_select_faster_but_larger_than_ripple_depth() {
+        let cla = Cla::new(32).cost();
+        let csel = CarrySelect::new(32, 8).cost();
+        assert!(csel.area_um2 > cla.area_um2 * 0.5);
+        assert!(csel.delay_ns > 0.0);
+        // functional equivalence
+        let (s1, c1) = Cla::new(32).add(0xDEADBEEF, 0x12345678, false);
+        let (s2, c2) = CarrySelect::new(32, 8).add(0xDEADBEEF, 0x12345678, false);
+        assert_eq!((s1, c1), (s2, c2));
+    }
+
+    #[test]
+    fn accumulator_width_follows_paper_formula() {
+        assert_eq!(Accumulator::for_array(16).width, 20);
+        assert_eq!(Accumulator::for_array(32).width, 21);
+        assert_eq!(Accumulator::for_array(64).width, 22);
+    }
+
+    #[test]
+    fn accumulator_steps_and_wraps() {
+        let acc = Accumulator { width: 8 };
+        assert_eq!(acc.step(100, 27), 127);
+        assert_eq!(acc.step(100, 28), -128); // wraparound, like hardware
+        assert_eq!(acc.step(-100, -29), 127);
+    }
+
+    #[test]
+    fn accumulator_cost_scales_with_width() {
+        let a20 = Accumulator { width: 20 }.cost();
+        let a22 = Accumulator { width: 22 }.cost();
+        assert!(a22.area_um2 > a20.area_um2);
+        assert!(a22.power_uw > a20.power_uw);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a power of two")]
+    fn accumulator_rejects_non_pow2() {
+        Accumulator::for_array(48);
+    }
+}

@@ -1,0 +1,18 @@
+//! The multiplier datapath below the encoder (paper §3.1, Fig. 4):
+//!
+//! 1. [`pp`] — Booth selectors generate partial-product rows from the
+//!    encoded multiplicand digits and the multiplier B;
+//! 2. [`wallace`] — a 3:2-compressor (full-adder) tree reduces the rows
+//!    to a final sum row and carry row;
+//! 3. [`adders`] — a carry-lookahead adder merges sum and carry;
+//! 4. [`multiplier`] — the four assemblies of Table 1c (DW-IP-like
+//!    baseline, MBE, Ours, and RME = encoder-removed Ours) as
+//!    bit-accurate functional models + calibrated costs.
+//!
+//! All functional models are exact: INT8×INT8 is verified exhaustively
+//! (65 536 products) against native multiplication for every assembly.
+
+pub mod adders;
+pub mod multiplier;
+pub mod pp;
+pub mod wallace;

@@ -1,0 +1,291 @@
+//! Multiplier assemblies of Table 1c, as bit-accurate functional models
+//! plus calibrated costs.
+//!
+//! * [`MultKind::DwIp`] — the Synopsys DesignWare-IP-class baseline used
+//!   for the paper's baseline PEs (encoder inside, opaque block);
+//! * [`MultKind::MbeInternal`] — Modified Booth multiplier, encoders
+//!   inside the PE;
+//! * [`MultKind::EntInternal`] — the paper's encoding, encoders inside
+//!   (the "Ours" row of Table 1c);
+//! * [`MultKind::EntRme`] — "RME_Ours": the EN-T PE datapath after the
+//!   encoders are hoisted out of the array; it consumes a pre-encoded
+//!   multiplicand.
+//!
+//! Every kind computes exact products; INT8×INT8 is tested exhaustively.
+
+use crate::arith::adders::Cla;
+use crate::arith::pp::{rows_for_digit, unwrap, PpRow};
+use crate::arith::wallace::{reduce, Reduction};
+use crate::encoding::ent::{encode_signed, SignedEntCode};
+use crate::encoding::mbe::booth_digits;
+use crate::encoding::{fits_signed, Encoding};
+use crate::gates::{calib, Cost};
+
+/// The four assemblies of Table 1c.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MultKind {
+    DwIp,
+    MbeInternal,
+    EntInternal,
+    EntRme,
+}
+
+impl MultKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            MultKind::DwIp => "DW IP",
+            MultKind::MbeInternal => "MBE",
+            MultKind::EntInternal => "Ours",
+            MultKind::EntRme => "RME_Ours",
+        }
+    }
+}
+
+/// An n-bit signed multiplier of a given assembly.
+#[derive(Clone, Copy, Debug)]
+pub struct Multiplier {
+    pub kind: MultKind,
+    pub width: usize,
+}
+
+impl Multiplier {
+    pub fn new(kind: MultKind, width: usize) -> Multiplier {
+        crate::encoding::check_width(width);
+        Multiplier { kind, width }
+    }
+
+    /// Window width used for the internal rows: product (2n bits) plus
+    /// slack for the negation corrections and the Cin row.
+    fn window(&self) -> usize {
+        2 * self.width + 4
+    }
+
+    /// Multiply two signed `width`-bit values through the assembly's
+    /// actual datapath (encode → select → compress → CLA).
+    pub fn mul(&self, a: i64, b: i64) -> i64 {
+        let n = self.width;
+        assert!(fits_signed(a, n) && fits_signed(b, n), "{a}×{b} @{n}b");
+        match self.kind {
+            // The DW IP block is opaque; its functional contract is exact
+            // multiplication.
+            MultKind::DwIp => a * b,
+            MultKind::MbeInternal => {
+                let digits = booth_digits(a, n);
+                self.sum_digit_rows(&digits, b, false)
+            }
+            MultKind::EntInternal => {
+                let code = encode_signed(a, n);
+                self.mul_encoded(&code, b)
+            }
+            MultKind::EntRme => {
+                // In the real array the encoded multiplicand arrives on
+                // the wires; model that hand-off explicitly.
+                let code = encode_signed(a, n);
+                let wire = code.mag.wire_bits();
+                let recovered = crate::encoding::ent::EntCode::from_wire_bits(wire, n);
+                self.mul_encoded(
+                    &SignedEntCode {
+                        sign: code.sign,
+                        mag: recovered,
+                    },
+                    b,
+                )
+            }
+        }
+    }
+
+    /// RME entry point: multiply a *pre-encoded* multiplicand by b —
+    /// what a PE does once the encoder lives outside the array.
+    ///
+    /// This is the verification hot path, so it uses the allocation-free
+    /// row buffer and the bitwise carry-save reduction
+    /// ([`crate::arith::wallace::reduce_rows_fast`]), which is
+    /// property-tested equivalent to the structural Wallace model (see
+    /// EXPERIMENTS.md §Perf for the before/after).
+    pub fn mul_encoded(&self, code: &SignedEntCode, b: i64) -> i64 {
+        let n = self.width;
+        assert!(fits_signed(b, n));
+        let b_eff = if code.sign { -b } else { b };
+        let w = self.window();
+        // ≤ 2 rows per digit + 2 for the Cin row; widths ≤ 64 ⇒ ≤ 33
+        // digits — 72 is comfortably worst-case.
+        let mut rows = [0u64; 72];
+        let mut nr = 0;
+        for (i, &d) in code.mag.digits.iter().enumerate() {
+            crate::arith::pp::push_rows_for_digit(d, b_eff, i, w, &mut rows, &mut nr);
+        }
+        if code.mag.cin {
+            crate::arith::pp::push_rows_for_digit(
+                1,
+                b_eff,
+                code.mag.digits.len(),
+                w,
+                &mut rows,
+                &mut nr,
+            );
+        }
+        let (s, c) = crate::arith::wallace::reduce_rows_fast(&rows[..nr], w);
+        let cla = Cla::new(w);
+        let (bits, _) = cla.add(s, c, false);
+        unwrap(bits, w)
+    }
+
+    fn sum_digit_rows(&self, digits: &[i8], b: i64, _ent: bool) -> i64 {
+        let w = self.window();
+        let mut rows: Vec<PpRow> = Vec::new();
+        for (i, &d) in digits.iter().enumerate() {
+            rows.extend(rows_for_digit(d, b, i, w));
+        }
+        let red: Reduction = reduce(&rows, w);
+        let cla = Cla::new(w);
+        let (bits, _) = cla.add(red.sum, red.carry, false);
+        unwrap(bits, w)
+    }
+
+    /// Calibrated cost (Table 1c for INT8; quadratic-in-width
+    /// extrapolation of the encoder-free remainder elsewhere — only INT8
+    /// is used by the paper's TCU experiments).
+    pub fn cost(&self) -> Cost {
+        let c = calib::constants();
+        let n = self.width as f64;
+        let scale = (n / 8.0) * (n / 8.0);
+        let rme = Cost::new(
+            c.rme_area_um2 * scale,
+            c.rme_power_uw * scale,
+            c.rme_delay_ns * (1.0 + (n / 8.0).log2() * 0.25),
+        );
+        match self.kind {
+            MultKind::DwIp => Cost::new(
+                c.dw_mult_area_um2 * scale,
+                c.dw_mult_power_uw * scale,
+                c.dw_mult_delay_ns * (1.0 + (n / 8.0).log2() * 0.25),
+            ),
+            MultKind::MbeInternal => {
+                let enc = crate::encoding::mbe::Mbe.encoder_cost(self.width);
+                rme.then(Cost::new(enc.area_um2, enc.power_uw, enc.delay_ns))
+            }
+            MultKind::EntInternal => {
+                let enc = crate::encoding::ent::Ent.encoder_cost(self.width);
+                rme.then(Cost::new(enc.area_um2, enc.power_uw, enc.delay_ns))
+            }
+            MultKind::EntRme => rme,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{check, Config};
+
+    /// Exhaustive INT8×INT8 for every assembly — 4 × 65 536 products.
+    #[test]
+    fn exhaustive_int8_all_kinds() {
+        for kind in [
+            MultKind::DwIp,
+            MultKind::MbeInternal,
+            MultKind::EntInternal,
+            MultKind::EntRme,
+        ] {
+            let m = Multiplier::new(kind, 8);
+            for a in -128i64..=127 {
+                for b in -128i64..=127 {
+                    assert_eq!(m.mul(a, b), a * b, "{} {a}×{b}", kind.name());
+                }
+            }
+        }
+    }
+
+    /// Random sweep at wider widths.
+    #[test]
+    fn prop_wide_widths() {
+        check("mult-wide", Config { cases: 400, ..Default::default() }, |rng| {
+            let n = *rng.pick(&[10usize, 12, 16, 24]);
+            let kind = *rng.pick(&[
+                MultKind::MbeInternal,
+                MultKind::EntInternal,
+                MultKind::EntRme,
+            ]);
+            let lo = -(1i64 << (n - 1));
+            let hi = (1i64 << (n - 1)) - 1;
+            let (a, b) = (rng.range_i64(lo, hi), rng.range_i64(lo, hi));
+            let m = Multiplier::new(kind, n);
+            if m.mul(a, b) == a * b {
+                Ok(())
+            } else {
+                Err(format!("{} n={n} {a}×{b} got {}", kind.name(), m.mul(a, b)))
+            }
+        });
+    }
+
+    /// RME consumes wire bits: encoding → wire → decode → multiply is the
+    /// exact hand-off used between the column encoder and the PE.
+    #[test]
+    fn rme_consumes_pre_encoded_operand() {
+        let m = Multiplier::new(MultKind::EntRme, 8);
+        for a in [-128i64, -77, -1, 0, 1, 78, 127] {
+            let code = encode_signed(a, 8);
+            for b in [-128i64, -3, 0, 5, 127] {
+                assert_eq!(m.mul_encoded(&code, b), a * b, "{a}×{b}");
+            }
+        }
+    }
+
+    /// Table 1c calibrated costs, INT8.
+    #[test]
+    fn table1c_costs() {
+        let rows: [(MultKind, f64, f64, f64); 4] = [
+            (MultKind::DwIp, 291.6, 1.87, 211.4),
+            (MultKind::MbeInternal, 292.7, 1.86, 212.2),
+            (MultKind::EntInternal, 290.4, 1.99, 210.3),
+            (MultKind::EntRme, 264.4, 1.63, 188.9),
+        ];
+        for (kind, area, delay, power) in rows {
+            let c = Multiplier::new(kind, 8).cost();
+            assert!(
+                (c.area_um2 - area).abs() / area < 0.005,
+                "{} area {} vs {area}",
+                kind.name(),
+                c.area_um2
+            );
+            assert!(
+                (c.power_uw - power).abs() / power < 0.005,
+                "{} power {} vs {power}",
+                kind.name(),
+                c.power_uw
+            );
+            assert!(
+                (c.delay_ns - delay).abs() < 0.01,
+                "{} delay {} vs {delay}",
+                kind.name(),
+                c.delay_ns
+            );
+        }
+    }
+
+    /// The headline Table 1c contrast: hoisting the encoder out (RME)
+    /// saves area, power, and delay relative to every internal-encoder
+    /// assembly.
+    #[test]
+    fn rme_dominates_internal_assemblies() {
+        let rme = Multiplier::new(MultKind::EntRme, 8).cost();
+        for kind in [MultKind::DwIp, MultKind::MbeInternal, MultKind::EntInternal] {
+            let c = Multiplier::new(kind, 8).cost();
+            assert!(rme.area_um2 < c.area_um2, "{}", kind.name());
+            assert!(rme.power_uw < c.power_uw, "{}", kind.name());
+            assert!(rme.delay_ns < c.delay_ns, "{}", kind.name());
+        }
+    }
+
+    /// int8 corner cases exercised explicitly (beyond the exhaustive
+    /// sweep, these document the hairy ones).
+    #[test]
+    fn corner_cases() {
+        let m = Multiplier::new(MultKind::EntRme, 8);
+        assert_eq!(m.mul(-128, -128), 16384);
+        assert_eq!(m.mul(-128, 127), -16256);
+        assert_eq!(m.mul(0, -128), 0);
+        assert_eq!(m.mul(-1, -1), 1);
+        assert_eq!(m.mul(78, -1), -78); // the paper's example value
+    }
+}

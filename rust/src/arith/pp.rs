@@ -1,0 +1,167 @@
+//! Partial-product generation (Booth selectors).
+//!
+//! A selector receives the multiplier B and one encoded digit d of the
+//! multiplicand and emits d·B as a bit row. Negative multiples are formed
+//! the way hardware forms them: bitwise inversion plus a +1 correction
+//! term carried as a separate single-bit row (so the compressor tree sees
+//! exactly what a real Booth array sees).
+//!
+//! Rows live in a fixed two's-complement window of `width` bits; all
+//! arithmetic is modulo 2^width, which is exact as long as the true
+//! product fits (guaranteed by the callers' width choice of 2n+2).
+
+/// One partial-product row: a raw bit pattern within a window.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PpRow {
+    /// Bit pattern, window-wrapped two's complement.
+    pub bits: u64,
+}
+
+/// Window-wrap a signed value into `width` bits.
+pub fn wrap(v: i64, width: usize) -> u64 {
+    debug_assert!(width <= 64);
+    if width == 64 {
+        v as u64
+    } else {
+        (v as u64) & ((1u64 << width) - 1)
+    }
+}
+
+/// Sign-interpret a window value.
+pub fn unwrap(bits: u64, width: usize) -> i64 {
+    let shift = 64 - width as u32;
+    ((bits << shift) as i64) >> shift
+}
+
+/// Generate the rows for digit `d` (∈ {−2,−1,0,1,2}) of weight 4^i
+/// multiplying `b` (signed, window width `width`).
+///
+/// Negative digits produce two rows: the inverted shifted pattern and the
+/// +1 correction bit at the row's LSB — exactly the hardware trick, so
+/// the compressor row count matches the real array.
+pub fn rows_for_digit(d: i8, b: i64, i: usize, width: usize) -> Vec<PpRow> {
+    assert!((-2..=2).contains(&d), "digit {d} out of range");
+    let shift = 2 * i;
+    let mask = if width == 64 {
+        u64::MAX
+    } else {
+        (1u64 << width) - 1
+    };
+    match d {
+        0 => vec![],
+        1 | 2 => {
+            let mag = (b as u64).wrapping_shl((shift + (d as u32 as usize - 1)) as u32) & mask;
+            vec![PpRow { bits: mag }]
+        }
+        -1 | -2 => {
+            let sh = shift + ((-d) as usize - 1);
+            let pattern = (b as u64).wrapping_shl(sh as u32);
+            // ~(B << sh) + (1 << sh) == (-B) << sh in two's complement,
+            // provided the low `sh` bits of the inverted pattern are
+            // corrected: ~(B<<sh) sets those low bits to 1, so the +1
+            // correction must be at bit 0 of the *shifted* row, i.e. we
+            // invert only the shifted window and add 1<<sh... Hardware
+            // instead inverts B then shifts and adds the correction at
+            // bit `sh`; both are ~(B)<<sh has zeros below sh. Use that:
+            let inv_shifted = ((!(b as u64)).wrapping_shl(sh as u32)) & mask;
+            let _ = pattern;
+            vec![
+                PpRow { bits: inv_shifted },
+                PpRow {
+                    bits: (1u64 << sh) & mask,
+                },
+            ]
+        }
+        _ => unreachable!(),
+    }
+}
+
+/// Allocation-free variant of [`rows_for_digit`] for the verification
+/// hot path: appends the row bit patterns into a caller-provided buffer.
+#[inline]
+pub fn push_rows_for_digit(d: i8, b: i64, i: usize, width: usize, out: &mut [u64], n: &mut usize) {
+    debug_assert!((-2..=2).contains(&d));
+    let mask = if width == 64 {
+        u64::MAX
+    } else {
+        (1u64 << width) - 1
+    };
+    let shift = 2 * i;
+    match d {
+        0 => {}
+        1 | 2 => {
+            let sh = (shift + (d as usize - 1)) as u32;
+            out[*n] = (b as u64).wrapping_shl(sh) & mask;
+            *n += 1;
+        }
+        _ => {
+            let sh = (shift + ((-d) as usize - 1)) as u32;
+            out[*n] = ((!(b as u64)).wrapping_shl(sh)) & mask;
+            out[*n + 1] = (1u64 << sh) & mask;
+            *n += 2;
+        }
+    }
+}
+
+/// Sum a set of rows within the window (reference semantics for tests;
+/// the real reduction path is `wallace::reduce`).
+pub fn sum_rows(rows: &[PpRow], width: usize) -> u64 {
+    let mask = if width == 64 {
+        u64::MAX
+    } else {
+        (1u64 << width) - 1
+    };
+    rows.iter().fold(0u64, |acc, r| acc.wrapping_add(r.bits)) & mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const W: usize = 20;
+
+    fn digit_value(rows: &[PpRow]) -> i64 {
+        unwrap(sum_rows(rows, W), W)
+    }
+
+    #[test]
+    fn positive_digits_single_row() {
+        for b in [-128i64, -1, 0, 1, 77, 127] {
+            for i in 0..4 {
+                assert_eq!(digit_value(&rows_for_digit(1, b, i, W)), b << (2 * i));
+                assert_eq!(digit_value(&rows_for_digit(2, b, i, W)), 2 * b << (2 * i));
+            }
+        }
+    }
+
+    #[test]
+    fn negative_digits_invert_plus_one() {
+        for b in [-128i64, -3, 0, 1, 77, 127] {
+            for i in 0..4 {
+                let m1 = rows_for_digit(-1, b, i, W);
+                assert_eq!(m1.len(), 2, "neg digit must be 2 rows");
+                assert_eq!(digit_value(&m1), -b << (2 * i), "b={b} i={i}");
+                let m2 = rows_for_digit(-2, b, i, W);
+                assert_eq!(digit_value(&m2), -2 * b << (2 * i), "b={b} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_digit_no_rows() {
+        assert!(rows_for_digit(0, 123, 2, W).is_empty());
+    }
+
+    #[test]
+    fn wrap_unwrap_roundtrip() {
+        for v in [-(1i64 << 18), -1, 0, 1, (1i64 << 18) - 1] {
+            assert_eq!(unwrap(wrap(v, W), W), v);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "digit 3 out of range")]
+    fn bad_digit_panics() {
+        rows_for_digit(3, 1, 0, W);
+    }
+}

@@ -1,0 +1,279 @@
+//! Wallace-tree / compressor-tree reduction (paper §3.1 step 2).
+//!
+//! Reduces a set of partial-product rows to two rows (sums and carries)
+//! using column-wise 3:2 (full adder) and 2:2 (half adder) compression —
+//! the classical Wallace construction. The model is bit-accurate *and*
+//! structural: it reports how many FA/HA cells and how many levels the
+//! reduction used, which feeds the cost sanity checks.
+
+use super::pp::PpRow;
+use crate::gates::{Cost, Gate};
+
+/// Result of reducing rows to a redundant (sum, carry) pair.
+#[derive(Clone, Debug)]
+pub struct Reduction {
+    pub sum: u64,
+    pub carry: u64,
+    /// Full adders consumed.
+    pub fa_count: usize,
+    /// Half adders consumed.
+    pub ha_count: usize,
+    /// Reduction depth in compressor levels.
+    pub levels: usize,
+    width: usize,
+}
+
+impl Reduction {
+    /// Final value: (sum + carry) mod 2^width.
+    pub fn value_bits(&self) -> u64 {
+        let mask = if self.width == 64 {
+            u64::MAX
+        } else {
+            (1u64 << self.width) - 1
+        };
+        self.sum.wrapping_add(self.carry) & mask
+    }
+
+    /// Structural cost of the compressors used (the final CLA is costed
+    /// separately in `adders`).
+    pub fn compressor_cost(&self) -> Cost {
+        Gate::FullAdder.cost().replicate(self.fa_count)
+            + Gate::HalfAdder.cost().replicate(self.ha_count)
+    }
+}
+
+/// Reduce `rows` (bit patterns in a `width`-bit window) to sum+carry.
+///
+/// Works on per-column bit lists; each level compresses every column's
+/// bits with FAs (3→1 + carry) and at most one HA, until every column
+/// holds ≤ 2 bits.
+pub fn reduce(rows: &[PpRow], width: usize) -> Reduction {
+    assert!(width <= 64);
+    // columns[c] = number of one-bits... we need actual bits, not counts,
+    // to stay bit-accurate: keep a list of bit values per column.
+    let mut cols: Vec<Vec<bool>> = vec![Vec::new(); width];
+    for r in rows {
+        for (c, col) in cols.iter_mut().enumerate() {
+            if (r.bits >> c) & 1 == 1 {
+                col.push(true);
+            } else {
+                // Zero bits are not wires in a real array; skip them.
+            }
+        }
+    }
+
+    let mut fa_count = 0;
+    let mut ha_count = 0;
+    let mut levels = 0;
+
+    while cols.iter().any(|c| c.len() > 2) {
+        levels += 1;
+        let mut next: Vec<Vec<bool>> = vec![Vec::new(); width];
+        for c in 0..width {
+            let bits = &cols[c];
+            let mut i = 0;
+            // Greedily take triples into FAs.
+            while bits.len() - i >= 3 {
+                let (a, b, d) = (bits[i], bits[i + 1], bits[i + 2]);
+                i += 3;
+                fa_count += 1;
+                let s = a ^ b ^ d;
+                let cy = (a && b) || (a && d) || (b && d);
+                if s {
+                    next[c].push(true);
+                }
+                if cy && c + 1 < width {
+                    next[c + 1].push(true);
+                }
+            }
+            // One HA for a remaining pair (only when it helps convergence).
+            if bits.len() - i == 2 {
+                let (a, b) = (bits[i], bits[i + 1]);
+                i += 2;
+                ha_count += 1;
+                if a ^ b {
+                    next[c].push(true);
+                }
+                if a && b && c + 1 < width {
+                    next[c + 1].push(true);
+                }
+            }
+            // Pass through a single leftover bit.
+            while i < bits.len() {
+                if bits[i] {
+                    next[c].push(true);
+                }
+                i += 1;
+            }
+        }
+        cols = next;
+    }
+
+    // Assemble the final two rows.
+    let mut sum = 0u64;
+    let mut carry = 0u64;
+    for (c, col) in cols.iter().enumerate() {
+        if !col.is_empty() && col[0] {
+            sum |= 1u64 << c;
+        }
+        if col.len() == 2 && col[1] {
+            carry |= 1u64 << c;
+        }
+    }
+    Reduction {
+        sum,
+        carry,
+        fa_count,
+        ha_count,
+        levels,
+        width,
+    }
+}
+
+/// Fast row-wise reduction: applies 3:2 compression *bitwise across
+/// whole rows* (`sum = a⊕b⊕c`, `carry = majority(a,b,c) << 1`) until two
+/// rows remain. This is the same carry-save algebra as [`reduce`] —
+/// every step replaces three addends with two having the same sum mod
+/// 2^width — but runs in O(rows) word operations with no per-column
+/// bookkeeping. Used on the verification hot path; equivalence with the
+/// structural model is property-tested.
+pub fn reduce_rows_fast(rows: &[u64], width: usize) -> (u64, u64) {
+    let mask = if width == 64 {
+        u64::MAX
+    } else {
+        (1u64 << width) - 1
+    };
+    // Zero-allocation CSA accumulator chain: fold each row into the
+    // redundant (sum, carry) pair with one bitwise full-adder step.
+    let mut s = 0u64;
+    let mut c = 0u64;
+    for &r in rows {
+        let r = r & mask;
+        let new_s = s ^ c ^ r;
+        let new_c = (((s & c) | (s & r) | (c & r)) << 1) & mask;
+        s = new_s;
+        c = new_c;
+    }
+    (s & mask, c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::pp::{sum_rows, wrap, PpRow};
+    use crate::util::check::{check, Config};
+    use crate::util::prng::Rng;
+
+    const W: usize = 24;
+
+    fn rand_rows(rng: &mut Rng, n: usize) -> Vec<PpRow> {
+        (0..n)
+            .map(|_| PpRow {
+                bits: rng.next_u64() & ((1 << W) - 1),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn reduces_to_reference_sum() {
+        let mut rng = Rng::new(1);
+        for nrows in 1..12 {
+            for _ in 0..50 {
+                let rows = rand_rows(&mut rng, nrows);
+                let red = reduce(&rows, W);
+                assert_eq!(
+                    red.value_bits(),
+                    sum_rows(&rows, W),
+                    "nrows={nrows} rows={rows:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_single_row_edge_cases() {
+        let red = reduce(&[], W);
+        assert_eq!(red.value_bits(), 0);
+        assert_eq!(red.fa_count + red.ha_count, 0);
+        let one = [PpRow { bits: wrap(-5, W) }];
+        let red = reduce(&one, W);
+        assert_eq!(red.value_bits(), wrap(-5, W));
+        assert_eq!(red.levels, 0);
+    }
+
+    #[test]
+    fn two_rows_need_no_compression() {
+        let rows = [PpRow { bits: 0b1010 }, PpRow { bits: 0b0110 }];
+        let red = reduce(&rows, W);
+        assert_eq!(red.levels, 0);
+        assert_eq!(red.value_bits(), 0b1010 + 0b0110);
+    }
+
+    #[test]
+    fn level_count_grows_logarithmically() {
+        let rng = Rng::new(2);
+        // Dense rows (all ones) force worst-case column heights.
+        let mk = |n: usize| -> Vec<PpRow> {
+            (0..n)
+                .map(|_| PpRow {
+                    bits: (1u64 << W) - 1,
+                })
+                .collect()
+        };
+        let l4 = reduce(&mk(4), W).levels;
+        let l8 = reduce(&mk(8), W).levels;
+        let l16 = reduce(&mk(16), W).levels;
+        assert!(l4 <= l8 && l8 <= l16);
+        // Wallace bound: 16 rows reduce in ≤ 6 levels (Dadda sequence).
+        assert!(l16 <= 6, "l16={l16}");
+        let _ = rng;
+    }
+
+    #[test]
+    fn compressor_cost_positive_when_used() {
+        let rows: Vec<PpRow> = (0..5).map(|i| PpRow { bits: 0b111 << i }).collect();
+        let red = reduce(&rows, W);
+        assert!(red.fa_count > 0);
+        assert!(red.compressor_cost().area_um2 > 0.0);
+    }
+
+    #[test]
+    fn prop_matches_reference() {
+        check("wallace-vs-sum", Config::default(), |rng| {
+            let n = rng.range(0, 16);
+            let rows = rand_rows(rng, n);
+            let red = reduce(&rows, W);
+            if red.value_bits() == sum_rows(&rows, W) {
+                Ok(())
+            } else {
+                Err(format!("n={n}"))
+            }
+        });
+    }
+
+    /// The fast bitwise 3:2 path is carry-save-equivalent to both the
+    /// structural model and the plain sum.
+    #[test]
+    fn prop_fast_reduction_equivalent() {
+        check("fast-vs-structural", Config::default(), |rng| {
+            let n = rng.range(0, 16);
+            let rows = rand_rows(rng, n);
+            let bits: Vec<u64> = rows.iter().map(|r| r.bits).collect();
+            let (s, c) = reduce_rows_fast(&bits, W);
+            let fast = s.wrapping_add(c) & ((1 << W) - 1);
+            if fast == sum_rows(&rows, W) && fast == reduce(&rows, W).value_bits() {
+                Ok(())
+            } else {
+                Err(format!("n={n}"))
+            }
+        });
+    }
+
+    #[test]
+    fn fast_reduction_edges() {
+        assert_eq!(reduce_rows_fast(&[], W), (0, 0));
+        assert_eq!(reduce_rows_fast(&[wrap(-9, W)], W).0, wrap(-9, W));
+        let (s, c) = reduce_rows_fast(&[5, 9], W);
+        assert_eq!(s.wrapping_add(c) & ((1 << W) - 1), 14);
+    }
+}

@@ -1,0 +1,105 @@
+//! Dynamic batching policy.
+//!
+//! The executor takes the first queued request, then waits up to
+//! `max_wait_us` for companions, capped at the largest compiled batch
+//! size. The policy balances latency (short window) against array
+//! utilization (full batches) — the same trade every serving router
+//! makes, scaled down to the artifact batch sizes AOT compilation fixed
+//! in advance.
+
+use super::ModelSpec;
+
+/// Batching knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// How long the batcher waits for companions after the first
+    /// request, microseconds (only once a second request has shown up —
+    /// see `grace_us`).
+    pub max_wait_us: u64,
+    /// Adaptive grace: how long a *solo* request waits before executing
+    /// unbatched. Keeps idle-load latency near the raw execute time
+    /// (coordinator-overhead target < 10 %, DESIGN.md §7) while still
+    /// forming full batches under pressure, where companions arrive well
+    /// inside the grace window.
+    pub grace_us: u64,
+    /// Optional cap below the largest compiled batch (0 = no cap).
+    pub batch_cap: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_wait_us: 500,
+            grace_us: 50,
+            batch_cap: 0,
+        }
+    }
+}
+
+impl BatchPolicy {
+    /// Effective maximum batch for a model.
+    pub fn max_batch(&self, model: &ModelSpec) -> usize {
+        let largest = *model.batch_sizes.last().unwrap_or(&1);
+        if self.batch_cap == 0 {
+            largest
+        } else {
+            self.batch_cap.min(largest)
+        }
+    }
+
+    /// Pick the artifact batch size for `queued` pending requests.
+    pub fn pick_batch(&self, model: &ModelSpec, queued: usize) -> usize {
+        let cap = self.max_batch(model);
+        let want = queued.clamp(1, cap);
+        *model
+            .batch_sizes
+            .iter()
+            .find(|&&b| b >= want)
+            .unwrap_or(model.batch_sizes.last().unwrap())
+    }
+
+    /// Padding waste for a given grouping — exposed for the ablation
+    /// bench (batching policy vs padding overhead).
+    pub fn padding_waste(&self, model: &ModelSpec, queued: usize) -> f64 {
+        let b = self.pick_batch(model, queued);
+        let used = queued.min(b);
+        (b - used) as f64 / b as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> ModelSpec {
+        ModelSpec::tinynet() // batch sizes 1,2,4,8
+    }
+
+    #[test]
+    fn picks_smallest_fitting_batch() {
+        let p = BatchPolicy::default();
+        assert_eq!(p.pick_batch(&model(), 1), 1);
+        assert_eq!(p.pick_batch(&model(), 2), 2);
+        assert_eq!(p.pick_batch(&model(), 3), 4);
+        assert_eq!(p.pick_batch(&model(), 5), 8);
+        assert_eq!(p.pick_batch(&model(), 100), 8);
+    }
+
+    #[test]
+    fn batch_cap_applies() {
+        let p = BatchPolicy {
+            batch_cap: 4,
+            ..Default::default()
+        };
+        assert_eq!(p.max_batch(&model()), 4);
+        assert_eq!(p.pick_batch(&model(), 100), 4);
+    }
+
+    #[test]
+    fn padding_waste_accounting() {
+        let p = BatchPolicy::default();
+        assert_eq!(p.padding_waste(&model(), 4), 0.0);
+        assert_eq!(p.padding_waste(&model(), 3), 0.25);
+        assert_eq!(p.padding_waste(&model(), 1), 0.0);
+    }
+}

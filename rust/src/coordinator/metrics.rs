@@ -1,0 +1,94 @@
+//! Serving metrics: request latencies, batch-size mix, error counts.
+
+use std::sync::Mutex;
+
+use crate::util::stats::Summary;
+
+/// Shared metrics aggregate (executor writes, callers snapshot).
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    latencies_us: Vec<f64>,
+    batch_sizes: Vec<usize>,
+    errors: u64,
+}
+
+/// Point-in-time view of the aggregates.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub requests: usize,
+    pub errors: u64,
+    pub latency_us: Option<Summary>,
+    pub mean_batch: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    pub fn record(&self, latency_us: u64, batch: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.latencies_us.push(latency_us as f64);
+        g.batch_sizes.push(batch);
+    }
+
+    pub fn record_error(&self) {
+        self.inner.lock().unwrap().errors += 1;
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let g = self.inner.lock().unwrap();
+        Snapshot {
+            requests: g.latencies_us.len(),
+            errors: g.errors,
+            latency_us: if g.latencies_us.is_empty() {
+                None
+            } else {
+                Some(Summary::of(&g.latencies_us))
+            },
+            mean_batch: if g.batch_sizes.is_empty() {
+                0.0
+            } else {
+                g.batch_sizes.iter().sum::<usize>() as f64 / g.batch_sizes.len() as f64
+            },
+        }
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record(100, 2);
+        m.record(300, 4);
+        m.record_error();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.mean_batch, 3.0);
+        assert_eq!(s.latency_us.unwrap().mean, 200.0);
+    }
+
+    #[test]
+    fn empty_snapshot() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.requests, 0);
+        assert!(s.latency_us.is_none());
+        assert_eq!(s.mean_batch, 0.0);
+    }
+}

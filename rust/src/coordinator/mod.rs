@@ -1,0 +1,385 @@
+//! The serving coordinator — Layer 3's request path.
+//!
+//! The paper's contribution lives at the PE/array level, so the
+//! coordinator is the NPU *software stack* around it: a request router
+//! with a dynamic batcher (vLLM-router-style) in front of the PJRT
+//! runtime, plus a digital twin of the §4.4 SoC that attaches
+//! energy/latency estimates to every response.
+//!
+//! Threading: PJRT handles are not `Send`, so the runtime lives inside a
+//! single executor thread; requests arrive over an mpsc channel and are
+//! grouped by the batching policy ([`batcher`]); responses return
+//! through per-request channels. Metrics ([`metrics`]) are lock-guarded
+//! aggregates shared with the caller.
+
+pub mod batcher;
+pub mod metrics;
+
+use std::path::PathBuf;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::arch::ArchKind;
+use crate::nn::zoo;
+use crate::pe::Variant;
+use crate::runtime::Runtime;
+use crate::soc::{energy, Soc};
+use batcher::BatchPolicy;
+use metrics::{Metrics, Snapshot};
+
+/// Model served by the coordinator. Must match what `aot.py` exported.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    /// Artifact base name; batch-B executable is `<name>_b<B>`.
+    pub name: String,
+    /// Input (C, H, W).
+    pub chw: (usize, usize, usize),
+    /// Output classes.
+    pub classes: usize,
+    /// Batch sizes with compiled artifacts, ascending.
+    pub batch_sizes: Vec<usize>,
+}
+
+impl ModelSpec {
+    /// The quickstart CNN exported by `python/compile/aot.py`.
+    pub fn tinynet() -> ModelSpec {
+        ModelSpec {
+            name: "tinynet".into(),
+            chw: (3, 32, 32),
+            classes: 10,
+            batch_sizes: vec![1, 2, 4, 8],
+        }
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.chw.0 * self.chw.1 * self.chw.2
+    }
+
+    pub fn artifact(&self, batch: usize) -> String {
+        format!("{}_b{}", self.name, batch)
+    }
+}
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub model: ModelSpec,
+    pub artifact_dir: PathBuf,
+    pub policy: BatchPolicy,
+    /// SoC digital-twin configuration for the energy estimates.
+    pub twin_arch: ArchKind,
+    pub twin_variant: Variant,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            model: ModelSpec::tinynet(),
+            artifact_dir: crate::runtime::default_artifact_dir(),
+            policy: BatchPolicy::default(),
+            twin_arch: ArchKind::SystolicOs,
+            twin_variant: Variant::EntOurs,
+        }
+    }
+}
+
+/// One inference request: a flattened int8 CHW image.
+#[derive(Clone, Debug)]
+pub struct InferRequest {
+    pub image: Vec<i8>,
+}
+
+/// The response: logits plus serving + digital-twin metadata.
+#[derive(Clone, Debug)]
+pub struct InferResponse {
+    pub logits: Vec<f32>,
+    /// Wall-clock latency from enqueue to response.
+    pub latency_us: u64,
+    /// Batch this request was grouped into.
+    pub batch_size: usize,
+    /// Digital-twin estimate: energy one frame costs on the modelled SoC.
+    pub sim_energy_uj: f64,
+    /// Digital-twin estimate: frame latency on the modelled SoC (ms).
+    pub sim_latency_ms: f64,
+}
+
+struct Job {
+    image: Vec<i8>,
+    enqueued: Instant,
+    respond: Sender<std::result::Result<InferResponse, String>>,
+}
+
+enum Msg {
+    Job(Job),
+    Shutdown,
+}
+
+/// The running coordinator.
+pub struct Coordinator {
+    tx: Sender<Msg>,
+    metrics: Arc<Metrics>,
+    handle: Option<JoinHandle<()>>,
+    model: ModelSpec,
+}
+
+impl Coordinator {
+    /// Start the executor thread; compiles all artifacts up front.
+    /// Fails fast (before returning) if any artifact is missing.
+    pub fn start(cfg: Config) -> Result<Coordinator> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let metrics = Arc::new(Metrics::new());
+        let m2 = metrics.clone();
+        let model = cfg.model.clone();
+        // Report load errors synchronously through a hand-shake channel.
+        let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
+        let handle = std::thread::Builder::new()
+            .name("ent-executor".into())
+            .spawn(move || executor_thread(cfg, rx, m2, ready_tx))
+            .context("spawning executor")?;
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(Coordinator {
+                tx,
+                metrics,
+                handle: Some(handle),
+                model,
+            }),
+            Ok(Err(e)) => {
+                let _ = handle.join();
+                bail!("coordinator startup failed: {e}")
+            }
+            Err(_) => {
+                let _ = handle.join();
+                bail!("coordinator executor died during startup")
+            }
+        }
+    }
+
+    /// Submit one request; returns a receiver for the response.
+    pub fn submit(&self, req: InferRequest) -> Receiver<std::result::Result<InferResponse, String>> {
+        let (tx, rx) = mpsc::channel();
+        let job = Job {
+            image: req.image,
+            enqueued: Instant::now(),
+            respond: tx,
+        };
+        // If the executor is gone the receiver will simply disconnect.
+        let _ = self.tx.send(Msg::Job(job));
+        rx
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn infer(&self, req: InferRequest) -> Result<InferResponse> {
+        let rx = self.submit(req);
+        match rx.recv() {
+            Ok(Ok(r)) => Ok(r),
+            Ok(Err(e)) => bail!("inference failed: {e}"),
+            Err(_) => bail!("coordinator shut down"),
+        }
+    }
+
+    pub fn metrics(&self) -> Snapshot {
+        self.metrics.snapshot()
+    }
+
+    pub fn model(&self) -> &ModelSpec {
+        &self.model
+    }
+
+    /// Graceful shutdown; drains nothing (pending jobs get disconnects).
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn executor_thread(
+    cfg: Config,
+    rx: Receiver<Msg>,
+    metrics: Arc<Metrics>,
+    ready: Sender<std::result::Result<(), String>>,
+) {
+    // Build the runtime and compile every batch-size artifact.
+    let mut rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            let _ = ready.send(Err(format!("PJRT client: {e}")));
+            return;
+        }
+    };
+    for &b in &cfg.model.batch_sizes {
+        let name = cfg.model.artifact(b);
+        let path = cfg.artifact_dir.join(format!("{name}.hlo.txt"));
+        if let Err(e) = rt.load_file(&name, &path) {
+            let _ = ready.send(Err(format!("loading {name}: {e}")));
+            return;
+        }
+    }
+    // Digital twin: per-frame energy of the serving model on the
+    // modelled SoC (precomputed once).
+    let twin = Soc::paper_config(cfg.twin_arch, cfg.twin_variant);
+    let net = zoo::by_name(&cfg.model.name).unwrap_or_else(|| zoo::tinynet());
+    let (frame, _) = energy::frame_energy(&twin, &net);
+    let sim_energy_uj = frame.total_pj() / 1e6;
+    let sim_latency_ms = frame.latency_ms();
+
+    let _ = ready.send(Ok(()));
+
+    let input_len = cfg.model.input_len();
+    let classes = cfg.model.classes;
+    loop {
+        // Block for the first job.
+        let first = match rx.recv() {
+            Ok(Msg::Job(j)) => j,
+            Ok(Msg::Shutdown) | Err(_) => return,
+        };
+        let mut batch = vec![first];
+        // Dynamic batching window: a solo request only waits the short
+        // grace period; once a companion shows up (load exists) the full
+        // window applies.
+        let now = Instant::now();
+        let grace_deadline = now + Duration::from_micros(cfg.policy.grace_us);
+        let deadline = now + Duration::from_micros(cfg.policy.max_wait_us);
+        while batch.len() < cfg.policy.max_batch(&cfg.model) {
+            let effective = if batch.len() == 1 { grace_deadline } else { deadline };
+            let left = effective.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(left) {
+                Ok(Msg::Job(j)) => batch.push(j),
+                Ok(Msg::Shutdown) => {
+                    run_batch(&rt, &cfg, &metrics, batch, input_len, classes, sim_energy_uj, sim_latency_ms);
+                    return;
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    run_batch(&rt, &cfg, &metrics, batch, input_len, classes, sim_energy_uj, sim_latency_ms);
+                    return;
+                }
+            }
+        }
+        run_batch(&rt, &cfg, &metrics, batch, input_len, classes, sim_energy_uj, sim_latency_ms);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_batch(
+    rt: &Runtime,
+    cfg: &Config,
+    metrics: &Metrics,
+    batch: Vec<Job>,
+    input_len: usize,
+    classes: usize,
+    sim_energy_uj: f64,
+    sim_latency_ms: f64,
+) {
+    // Validate inputs; reject malformed ones individually.
+    let mut valid = Vec::with_capacity(batch.len());
+    for job in batch {
+        if job.image.len() != input_len {
+            metrics.record_error();
+            let _ = job.respond.send(Err(format!(
+                "bad input: {} elements, expected {input_len}",
+                job.image.len()
+            )));
+        } else {
+            valid.push(job);
+        }
+    }
+    if valid.is_empty() {
+        return;
+    }
+    // Pick the smallest compiled batch size that fits, padding with the
+    // last image (discarded on output).
+    let got = valid.len();
+    let bsize = *cfg
+        .model
+        .batch_sizes
+        .iter()
+        .find(|&&b| b >= got)
+        .unwrap_or(cfg.model.batch_sizes.last().unwrap());
+    let take = got.min(bsize);
+    let (now, rest) = valid.split_at(take);
+
+    let mut flat = Vec::with_capacity(bsize * input_len);
+    for job in now {
+        flat.extend_from_slice(&job.image);
+    }
+    for _ in take..bsize {
+        flat.extend_from_slice(&now.last().unwrap().image); // pad
+    }
+
+    let result = rt.cnn_forward(&cfg.model.artifact(bsize), &flat, bsize, cfg.model.chw);
+    match result {
+        Ok(logits) => {
+            for (i, job) in now.iter().enumerate() {
+                let latency_us = job.enqueued.elapsed().as_micros() as u64;
+                metrics.record(latency_us, bsize);
+                let _ = job.respond.send(Ok(InferResponse {
+                    logits: logits[i * classes..(i + 1) * classes].to_vec(),
+                    latency_us,
+                    batch_size: bsize,
+                    sim_energy_uj,
+                    sim_latency_ms,
+                }));
+            }
+        }
+        Err(e) => {
+            for job in now {
+                metrics.record_error();
+                let _ = job.respond.send(Err(format!("execute: {e}")));
+            }
+        }
+    }
+    // Any overflow beyond the largest artifact batch recurses.
+    if !rest.is_empty() {
+        run_batch(rt, cfg, metrics, rest.to_vec(), input_len, classes, sim_energy_uj, sim_latency_ms);
+    }
+}
+
+impl Clone for Job {
+    fn clone(&self) -> Job {
+        Job {
+            image: self.image.clone(),
+            enqueued: self.enqueued,
+            respond: self.respond.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn startup_fails_cleanly_without_artifacts() {
+        let cfg = Config {
+            artifact_dir: std::env::temp_dir().join("ent-no-such-artifacts"),
+            ..Default::default()
+        };
+        let msg = match Coordinator::start(cfg) {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("startup should fail without artifacts"),
+        };
+        assert!(msg.contains("startup failed"), "{msg}");
+    }
+
+    #[test]
+    fn model_spec_artifact_names() {
+        let m = ModelSpec::tinynet();
+        assert_eq!(m.artifact(4), "tinynet_b4");
+        assert_eq!(m.input_len(), 3 * 32 * 32);
+    }
+}

@@ -1,0 +1,452 @@
+//! The EN-T carry-chain encoding (the paper's §3.3, Eq. 4–17).
+//!
+//! An n-bit **unsigned** magnitude Q = Σ aᵢ·4ⁱ (aᵢ the radix-4 digits) is
+//! rewritten with digit set wᵢ ∈ {0, 1, 2, −1} plus one final carry bit:
+//!
+//! ```text
+//!   Q = Cin_N·4^N + Σ_{i<N} wᵢ·4ⁱ,          N = n/2
+//!   a'ᵢ = aᵢ + cᵢ             (c₀ = 0)
+//!   wᵢ  = a'ᵢ        if a'ᵢ ∈ {0,1,2}
+//!         a'ᵢ − 4    if a'ᵢ ∈ {3,4}
+//!   cᵢ₊₁ = [a'ᵢ ≥ 3]
+//! ```
+//!
+//! Each wᵢ is transmitted as its 2-bit two's-complement pattern, which by
+//! Eq. 8/12/17 equals `[aᵢ]₂ + cᵢ (mod 4)` — so digit 0 needs **no
+//! encoder** (its pattern is the raw input bits) and only n/2 − 1 unit
+//! encoders are required. Total encoded width: n/2·2 + 1 = **n+1 bits**,
+//! versus MBE's 3n/2.
+//!
+//! Signed operands (the paper's §3.3.1 closing remark): the sign of A is
+//! carried as one extra line and the Booth selectors substitute −B for B;
+//! the magnitude |A| is what gets encoded. For int8, |A| ≤ 128 keeps
+//! Cin_N = 0, which is why the paper writes Encode(78) with a leading
+//! sign 0 in a 9-bit budget.
+
+use super::{check_width, fits_unsigned, Encoding, EncoderShape};
+use crate::gates::{calib, Cost, Gate, GateList};
+
+/// The EN-T encoding scheme.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Ent;
+
+/// Result of encoding one unsigned magnitude.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EntCode {
+    /// Operand width n (even).
+    pub width: usize,
+    /// wᵢ digits, LSB-first, each in {−1, 0, 1, 2}; len = n/2.
+    pub digits: Vec<i8>,
+    /// Final carry Cin_N with weight 4^(n/2).
+    pub cin: bool,
+}
+
+impl EntCode {
+    /// Reconstruct the unsigned value: Σ wᵢ·4ⁱ + Cin·4^N.
+    pub fn decode(&self) -> i64 {
+        let n = self.digits.len();
+        let mut v: i64 = if self.cin { 1i64 << (2 * n) } else { 0 };
+        for (i, &w) in self.digits.iter().enumerate() {
+            v += (w as i64) << (2 * i);
+        }
+        v
+    }
+
+    /// The transmitted bit pattern: digit i as 2-bit two's complement at
+    /// bits [2i+1:2i], Cin at bit n. Total n+1 bits.
+    pub fn wire_bits(&self) -> u64 {
+        let mut bits: u64 = 0;
+        for (i, &w) in self.digits.iter().enumerate() {
+            let two_bit = (w as i64 & 0b11) as u64;
+            bits |= two_bit << (2 * i);
+        }
+        if self.cin {
+            bits |= 1u64 << (2 * self.digits.len());
+        }
+        bits
+    }
+
+    /// Inverse of [`EntCode::wire_bits`].
+    pub fn from_wire_bits(bits: u64, n: usize) -> EntCode {
+        check_width(n);
+        let digits = (0..n / 2)
+            .map(|i| {
+                let two = (bits >> (2 * i)) & 0b11;
+                // 2-bit two's complement: 0b11 → −1.
+                if two == 0b11 {
+                    -1
+                } else {
+                    two as i8
+                }
+            })
+            .collect();
+        EntCode {
+            width: n,
+            digits,
+            cin: (bits >> n) & 1 == 1,
+        }
+    }
+}
+
+/// Encode an unsigned n-bit value per Eq. 7/8/16/17.
+pub fn encode_unsigned(q: i64, n: usize) -> EntCode {
+    check_width(n);
+    assert!(fits_unsigned(q, n), "{q} does not fit in {n} unsigned bits");
+    let mut digits = Vec::with_capacity(n / 2);
+    let mut carry: i64 = 0;
+    for i in 0..n / 2 {
+        let a_i = (q >> (2 * i)) & 0b11;
+        let a_prime = a_i + carry; // ∈ {0..4}
+        let (w, c) = if a_prime <= 2 {
+            (a_prime, 0)
+        } else {
+            (a_prime - 4, 1)
+        };
+        digits.push(w as i8);
+        carry = c;
+    }
+    EntCode {
+        width: n,
+        digits,
+        cin: carry == 1,
+    }
+}
+
+/// A signed EN-T code: sign line + magnitude code (§3.3.1 closing
+/// paragraph — the hardware feeds −B to the selectors when A < 0).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SignedEntCode {
+    pub sign: bool,
+    pub mag: EntCode,
+}
+
+impl SignedEntCode {
+    pub fn decode(&self) -> i64 {
+        let m = self.mag.decode();
+        if self.sign {
+            -m
+        } else {
+            m
+        }
+    }
+}
+
+/// Encode a signed n-bit value: sign + EN-T code of |A|.
+///
+/// |A| ≤ 2^(n−1) always fits the unsigned encoder, and for that range the
+/// final carry is provably 0 (asserted), which is why the paper's int8
+/// example spends the (n+1)-th bit on the sign instead.
+pub fn encode_signed(a: i64, n: usize) -> SignedEntCode {
+    check_width(n);
+    assert!(
+        super::fits_signed(a, n),
+        "{a} does not fit in {n} signed bits"
+    );
+    let mag = encode_unsigned(a.unsigned_abs() as i64, n);
+    debug_assert!(!mag.cin, "|A| ≤ 2^(n-1) cannot produce a final carry");
+    SignedEntCode { sign: a < 0, mag }
+}
+
+/// Gate-level inventory of one EN-T unit encoder — Table 1a's published
+/// row: 1 AND, 3 NAND, 2 XNOR (the XORs produce the 2-bit sum of
+/// `[aᵢ]₂ + cᵢ`; the AND/NANDs produce the carry per Eq. 17).
+pub fn unit_encoder_gates() -> GateList {
+    GateList::new(
+        vec![(Gate::And2, 1), (Gate::Nand2, 3), (Gate::Xnor2, 2)],
+        2,
+    )
+}
+
+impl Encoding for Ent {
+    fn name(&self) -> &'static str {
+        "Ours"
+    }
+
+    fn shape(&self, n: usize) -> EncoderShape {
+        check_width(n);
+        EncoderShape {
+            width: n,
+            encoders: n / 2 - 1,
+            encoded_bits: n + 1,
+        }
+    }
+
+    fn encoder_cost(&self, n: usize) -> Cost {
+        let shape = self.shape(n);
+        let c = calib::constants();
+        let k = shape.encoders as f64;
+        Cost::new(
+            c.ent_enc_area_um2 * k,
+            c.ent_enc_power_uw * k + c.ent_enc_power_fixed_uw,
+            // Carry ripples through the chain: delay grows with k.
+            c.ent_enc_delay_slope_ns * k + c.ent_enc_delay_offset_ns,
+        )
+    }
+
+    fn digits(&self, value: i64, n: usize) -> Vec<i8> {
+        // Signed digit view used by the functional multiplier: the sign is
+        // applied by the selector, so expose |A|'s digits.
+        encode_signed(value, n).mag.digits
+    }
+}
+
+/// Future-work extension (paper §4.2 names the carry-chain delay as the
+/// method's drawback): segment the chain into `seg`-encoder blocks with a
+/// speculative carry per block, trading `seg`-fold delay reduction for one
+/// extra mux level per block. Functionally identical to [`encode_unsigned`]
+/// (tested); cost model adds a mux per segment boundary.
+pub mod segmented {
+    use super::*;
+
+    /// Encode with a segmented carry chain. Functionality is unchanged —
+    /// segmentation is a timing transformation — so this delegates to the
+    /// reference encoder and exists to carry the cost model.
+    pub fn encode_unsigned(q: i64, n: usize, seg: usize) -> EntCode {
+        assert!(seg >= 1);
+        super::encode_unsigned(q, n)
+    }
+
+    /// Cost with carry-select segmentation: delay is per-segment, area
+    /// and power pay one 2-bit mux per boundary (both carry polarities
+    /// are precomputed — classic carry-select).
+    pub fn encoder_cost(n: usize, seg: usize) -> Cost {
+        assert!(seg >= 1);
+        let base = Ent.encoder_cost(n);
+        let k = Ent.shape(n).encoders;
+        if seg >= k {
+            return base;
+        }
+        let c = calib::constants();
+        let nseg = k.div_ceil(seg);
+        let boundaries = nseg - 1;
+        // Each non-first segment is duplicated (carry-0 and carry-1
+        // speculation) plus a 3-bit mux (2 digit bits + carry).
+        let dup = (k - seg) as f64 * c.ent_enc_area_um2;
+        let mux_area = boundaries as f64 * 3.0 * c.mux2_um2;
+        Cost::new(
+            base.area_um2 + dup + mux_area,
+            base.power_uw
+                + (dup + mux_area) * c.logic_uw_per_um2,
+            c.ent_enc_delay_slope_ns * seg as f64
+                + c.ent_enc_delay_offset_ns
+                + boundaries as f64 * Gate::Mux2.delay_ns(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{check, Config};
+
+    /// Exhaustive: every uint8 round-trips and uses only {−1,0,1,2}.
+    #[test]
+    fn roundtrip_all_uint8() {
+        for q in 0i64..256 {
+            let code = encode_unsigned(q, 8);
+            assert_eq!(code.digits.len(), 4);
+            assert!(code.digits.iter().all(|&w| (-1..=2).contains(&w)), "{q}");
+            assert_eq!(code.decode(), q, "q={q} code={code:?}");
+        }
+    }
+
+    /// Exhaustive: every uint16 round-trips.
+    #[test]
+    fn roundtrip_all_uint16() {
+        for q in 0i64..65536 {
+            assert_eq!(encode_unsigned(q, 16).decode(), q);
+        }
+    }
+
+    /// Exhaustive: every int8 round-trips through the signed encoder.
+    #[test]
+    fn roundtrip_all_int8_signed() {
+        for a in -128i64..=127 {
+            let code = encode_signed(a, 8);
+            assert_eq!(code.decode(), a, "a={a}");
+        }
+    }
+
+    /// The paper's worked example: Encode(78) = {0, 1, 1, −1, 2}
+    /// (sign, w₃, w₂, w₁, w₀) → B·4³ + B·4² − B·4 + 2B.
+    #[test]
+    fn paper_example_78() {
+        let code = encode_signed(78, 8);
+        assert!(!code.sign);
+        assert!(!code.mag.cin);
+        // digits LSB-first: w0=2, w1=-1, w2=1, w3=1.
+        assert_eq!(code.mag.digits, vec![2, -1, 1, 1]);
+    }
+
+    /// Digit 0's wire pattern equals the raw low 2 input bits (Eq. 8) —
+    /// the structural reason the lowest digit needs no encoder.
+    #[test]
+    fn lowest_digit_is_passthrough() {
+        for q in 0i64..256 {
+            let code = encode_unsigned(q, 8);
+            assert_eq!(code.wire_bits() & 0b11, (q & 0b11) as u64, "q={q}");
+        }
+    }
+
+    /// Wire pattern is n+1 bits and round-trips.
+    #[test]
+    fn wire_bits_roundtrip() {
+        for q in 0i64..256 {
+            let code = encode_unsigned(q, 8);
+            let bits = code.wire_bits();
+            assert!(bits < (1 << 9), "9-bit budget violated: {bits:#b}");
+            assert_eq!(EntCode::from_wire_bits(bits, 8), code);
+        }
+    }
+
+    /// Eq. 12/17: the transmitted 2-bit pattern of digit i equals
+    /// [aᵢ]₂ + cᵢ mod 4 — verified against an independent carry recompute.
+    #[test]
+    fn encoded_bits_are_digit_plus_carry() {
+        for q in 0i64..256 {
+            let code = encode_unsigned(q, 8);
+            let wire = code.wire_bits();
+            let mut carry = 0i64;
+            for i in 0..4 {
+                let a_i = (q >> (2 * i)) & 0b11;
+                let expect = (a_i + carry) & 0b11;
+                let got = (wire >> (2 * i)) & 0b11;
+                assert_eq!(got as i64, expect, "q={q} i={i}");
+                carry = if a_i + carry >= 3 { 1 } else { 0 };
+            }
+        }
+    }
+
+    /// Final carry only appears for values ≥ 4^N − ... — specifically the
+    /// all-digits-high patterns; check the documented extremes.
+    #[test]
+    fn cin_extremes() {
+        assert!(!encode_unsigned(0, 8).cin);
+        assert!(!encode_unsigned(128, 8).cin); // |i8::MIN| stays carry-free
+        assert!(encode_unsigned(255, 8).cin); // 255 = 256 - 1 needs the 4^4 term
+        assert_eq!(encode_unsigned(255, 8).decode(), 255);
+    }
+
+    /// Property: round-trip at all widths, random values.
+    #[test]
+    fn prop_roundtrip_wide() {
+        check("ent-roundtrip", Config::default(), |rng| {
+            let n = *rng.pick(&[4usize, 8, 10, 12, 16, 24, 32]);
+            let q = rng.range_i64(0, (1i64 << n) - 1);
+            let code = encode_unsigned(q, n);
+            if code.digits.iter().any(|&w| !(-1..=2).contains(&w)) {
+                return Err(format!("digit set violation n={n} q={q}"));
+            }
+            if code.decode() != q {
+                return Err(format!("n={n} q={q} decoded {}", code.decode()));
+            }
+            Ok(())
+        });
+    }
+
+    /// Table 1 "Number" / "En-Width" columns for Ours.
+    #[test]
+    fn table1_shape_columns() {
+        let e = Ent;
+        for (n, encoders, width) in [
+            (8, 3, 9),
+            (10, 4, 11),
+            (12, 5, 13),
+            (14, 6, 15),
+            (16, 7, 17),
+            (18, 8, 19),
+            (20, 9, 21),
+            (24, 11, 25),
+            (32, 15, 33),
+        ] {
+            let s = e.shape(n);
+            assert_eq!(s.encoders, encoders, "n={n}");
+            assert_eq!(s.encoded_bits, width, "n={n}");
+        }
+    }
+
+    /// Table 1 high-bit encoder rows for Ours. The 12- and 14-bit area
+    /// entries in the paper (42.22, 50.86) sit 1.0 µm² below the paper's
+    /// own per-unit-encoder trend (8.6433·k, which all other rows follow
+    /// to <0.1 %); we test those two at a 3 % tolerance and the rest at
+    /// 1 %.
+    #[test]
+    fn table1_highbit_cost() {
+        let e = Ent;
+        for (n, area, delay, power, tol) in [
+            (8, 25.93, 0.36, 21.47, 0.01),
+            (10, 34.57, 0.45, 28.47, 0.01),
+            (12, 42.22, 0.54, 35.49, 0.03),
+            (14, 50.86, 0.63, 42.45, 0.03),
+            (16, 60.51, 0.71, 49.40, 0.01),
+            (18, 69.15, 0.80, 56.36, 0.01),
+            (24, 95.08, 1.06, 77.23, 0.01),
+            (32, 129.65, 1.41, 105.14, 0.01),
+        ] {
+            let c = e.encoder_cost(n);
+            assert!(
+                (c.area_um2 - area).abs() / area < tol,
+                "n={n} area {} vs {area}",
+                c.area_um2
+            );
+            assert!(
+                (c.power_uw - power).abs() / power < tol,
+                "n={n} power {} vs {power}",
+                c.power_uw
+            );
+            assert!(
+                (c.delay_ns - delay).abs() < 0.035,
+                "n={n} delay {} vs {delay}",
+                c.delay_ns
+            );
+        }
+    }
+
+    /// Crossover claim (§4.2): "our method only exhibits advantages in
+    /// terms of area … when the encoding bit width is less than 14 bits".
+    /// On the per-unit-encoder trend the crossover sits between 10 and 14
+    /// bits (the paper's own 12-bit "Ours" row is 1.0 µm² below its own
+    /// trend, which is what places the paper's crossover exactly at 14).
+    #[test]
+    fn area_crossover_near_14_bits() {
+        use super::super::mbe::Mbe;
+        let (m, e) = (Mbe, Ent);
+        assert!(e.encoder_cost(8).area_um2 < m.encoder_cost(8).area_um2);
+        assert!(e.encoder_cost(10).area_um2 < m.encoder_cost(10).area_um2);
+        assert!(e.encoder_cost(14).area_um2 > m.encoder_cost(14).area_um2);
+        assert!(e.encoder_cost(16).area_um2 > m.encoder_cost(16).area_um2);
+        assert!(e.encoder_cost(32).area_um2 > m.encoder_cost(32).area_um2);
+    }
+
+    /// Table 1a gate inventory and its area.
+    #[test]
+    fn unit_encoder_gate_area() {
+        let gl = unit_encoder_gates();
+        assert_eq!(gl.count(Gate::And2), 1);
+        assert_eq!(gl.count(Gate::Nand2), 3);
+        assert_eq!(gl.count(Gate::Xnor2), 2);
+        let a = gl.cost().area_um2;
+        assert!((a - 8.64).abs() < 0.01, "area {a}");
+    }
+
+    /// Segmented variant: functionally identical, faster at wide widths,
+    /// never cheaper in area.
+    #[test]
+    fn segmented_tradeoff() {
+        for q in [0i64, 1, 77, 255, 65535, 12345] {
+            if q < 65536 {
+                assert_eq!(
+                    segmented::encode_unsigned(q.min(65535), 16, 4).decode(),
+                    q.min(65535)
+                );
+            }
+        }
+        let base = Ent.encoder_cost(32);
+        let seg = segmented::encoder_cost(32, 4);
+        assert!(seg.delay_ns < base.delay_ns);
+        assert!(seg.area_um2 > base.area_um2);
+        // seg ≥ chain length degenerates to the base design.
+        let degenerate = segmented::encoder_cost(8, 100);
+        assert_eq!(degenerate.area_um2, Ent.encoder_cost(8).area_um2);
+    }
+}

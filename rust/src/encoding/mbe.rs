@@ -1,0 +1,277 @@
+//! Modified Booth Encoding (the paper's Eq. 1–3 and Fig. 4).
+//!
+//! Radix-4 Booth recoding of a signed n-bit multiplicand A into n/2 digits
+//! mᵢ ∈ {−2,−1,0,1,2} by overlapped 3-bit scanning:
+//!
+//! ```text
+//!   mᵢ = −2·a_{2i+1} + a_{2i} + a_{2i−1},   a_{−1} = 0
+//! ```
+//!
+//! Each digit is transmitted as 3 control lines (NEG / ONE / TWO), so an
+//! n-bit operand becomes ⌈n/2⌉·3 encoded bits — the interconnect blow-up
+//! that motivates the paper's replacement encoding.
+//!
+//! Note on Eq. 3 as printed: the paper's `SE`/`CE` expressions are
+//! garbled in the text (the `CE` line mixes a selector enable into an
+//! XOR). We implement the standard, behaviour-defining form — ONE selects
+//! ±B, TWO selects ±2B, NEG negates — and *verify* it exhaustively
+//! against the arithmetic definition of mᵢ (see `tests::control_lines`).
+
+use super::{check_width, fits_signed, Encoding, EncoderShape};
+use crate::gates::{calib, Cost, Gate, GateList};
+
+/// Modified Booth Encoding scheme.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Mbe;
+
+/// Control lines for one Booth digit — what one encoder emits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BoothLines {
+    /// Select ±1·B.
+    pub one: bool,
+    /// Select ±2·B.
+    pub two: bool,
+    /// Negate the selected multiple.
+    pub neg: bool,
+}
+
+impl BoothLines {
+    /// The digit value these lines represent.
+    pub fn digit(self) -> i8 {
+        let mag = if self.two {
+            2
+        } else if self.one {
+            1
+        } else {
+            0
+        };
+        if self.neg {
+            -mag
+        } else {
+            mag
+        }
+    }
+}
+
+/// Booth-recode a signed `n`-bit value into n/2 digits (LSB-first).
+pub fn booth_digits(a: i64, n: usize) -> Vec<i8> {
+    check_width(n);
+    assert!(fits_signed(a, n), "{a} does not fit in {n} signed bits");
+    let bits = a as u64; // two's complement bit pattern
+    let bit = |i: isize| -> i64 {
+        if i < 0 {
+            0
+        } else {
+            ((bits >> i) & 1) as i64
+        }
+    };
+    (0..n / 2)
+        .map(|i| {
+            let j = 2 * i as isize;
+            (-2 * bit(j + 1) + bit(j) + bit(j - 1)) as i8
+        })
+        .collect()
+}
+
+/// Control lines for each digit — the actual encoder outputs.
+pub fn booth_lines(a: i64, n: usize) -> Vec<BoothLines> {
+    check_width(n);
+    assert!(fits_signed(a, n));
+    let bits = a as u64;
+    let bit = |i: isize| -> bool {
+        if i < 0 {
+            false
+        } else {
+            (bits >> i) & 1 == 1
+        }
+    };
+    (0..n / 2)
+        .map(|i| {
+            let j = 2 * i as isize;
+            let (b2, b1, b0) = (bit(j + 1), bit(j), bit(j - 1));
+            BoothLines {
+                one: b1 ^ b0,
+                two: (b2 && !b1 && !b0) || (!b2 && b1 && b0),
+                neg: b2 && !(b1 && b0),
+            }
+        })
+        .collect()
+}
+
+/// Reconstruct the value from Booth digits: Σ mᵢ·4ⁱ.
+pub fn decode(digits: &[i8]) -> i64 {
+    digits
+        .iter()
+        .enumerate()
+        .map(|(i, &d)| (d as i64) << (2 * i))
+        .sum()
+}
+
+/// Gate-level inventory of one MBE unit encoder — Table 1a's published
+/// row: 2 AND, 2 NAND, 1 NOR, 1 XNOR, two logic levels deep.
+pub fn unit_encoder_gates() -> GateList {
+    GateList::new(
+        vec![
+            (Gate::And2, 2),
+            (Gate::Nand2, 2),
+            (Gate::Nor2, 1),
+            (Gate::Xnor2, 1),
+        ],
+        2,
+    )
+}
+
+impl Encoding for Mbe {
+    fn name(&self) -> &'static str {
+        "MBE"
+    }
+
+    fn shape(&self, n: usize) -> EncoderShape {
+        check_width(n);
+        EncoderShape {
+            width: n,
+            encoders: n / 2,
+            encoded_bits: n / 2 * 3,
+        }
+    }
+
+    fn encoder_cost(&self, n: usize) -> Cost {
+        let shape = self.shape(n);
+        let c = calib::constants();
+        Cost::new(
+            c.mbe_enc_area_um2 * shape.encoders as f64,
+            c.mbe_enc_power_uw * shape.encoders as f64,
+            // All encoders operate in parallel: flat delay.
+            c.mbe_enc_delay_ns,
+        )
+    }
+
+    fn digits(&self, value: i64, n: usize) -> Vec<i8> {
+        booth_digits(value, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{check, Config};
+
+    /// Exhaustive: Booth digits reconstruct every int8.
+    #[test]
+    fn digits_reconstruct_all_int8() {
+        for a in -128i64..=127 {
+            let d = booth_digits(a, 8);
+            assert_eq!(d.len(), 4);
+            assert!(d.iter().all(|&x| (-2..=2).contains(&x)));
+            assert_eq!(decode(&d), a, "a={a} digits={d:?}");
+        }
+    }
+
+    /// Exhaustive: int16 reconstruction.
+    #[test]
+    fn digits_reconstruct_all_int16() {
+        for a in i16::MIN as i64..=i16::MAX as i64 {
+            assert_eq!(decode(&booth_digits(a, 16)), a);
+        }
+    }
+
+    /// The control lines and the arithmetic digit definition agree for
+    /// every int8 and every digit position.
+    #[test]
+    fn control_lines_match_digits() {
+        for a in -128i64..=127 {
+            let d = booth_digits(a, 8);
+            let l = booth_lines(a, 8);
+            for (i, (&di, li)) in d.iter().zip(&l).enumerate() {
+                assert_eq!(li.digit(), di, "a={a} digit {i}");
+                // ONE and TWO are mutually exclusive.
+                assert!(!(li.one && li.two), "a={a} digit {i}");
+            }
+        }
+    }
+
+    /// Paper's example of the digit set: all digits in {-2..2}; the -2
+    /// digit and +2 digit are both actually exercised.
+    #[test]
+    fn digit_set_fully_exercised() {
+        let mut seen = std::collections::HashSet::new();
+        for a in -128i64..=127 {
+            for d in booth_digits(a, 8) {
+                seen.insert(d);
+            }
+        }
+        assert_eq!(seen.len(), 5, "digit set {seen:?}");
+    }
+
+    /// Property: reconstruction holds at all supported widths.
+    #[test]
+    fn prop_reconstruction_wide() {
+        check("mbe-reconstruct", Config::default(), |rng| {
+            let n = *rng.pick(&[4usize, 8, 10, 12, 16, 24, 32]);
+            let lo = -(1i64 << (n - 1));
+            let hi = (1i64 << (n - 1)) - 1;
+            let a = rng.range_i64(lo, hi);
+            let got = decode(&booth_digits(a, n));
+            if got == a {
+                Ok(())
+            } else {
+                Err(format!("n={n} a={a} got={got}"))
+            }
+        });
+    }
+
+    /// Table 1 "Number" / "En-Width" columns for MBE.
+    #[test]
+    fn table1_shape_columns() {
+        let m = Mbe;
+        for (n, encoders, width) in [
+            (8, 4, 12),
+            (10, 5, 15),
+            (12, 6, 18),
+            (14, 7, 21),
+            (16, 8, 24),
+            (18, 9, 27),
+            (20, 10, 30),
+            (24, 12, 36),
+            (32, 16, 48),
+        ] {
+            let s = m.shape(n);
+            assert_eq!(s.encoders, encoders, "n={n}");
+            assert_eq!(s.encoded_bits, width, "n={n}");
+        }
+    }
+
+    /// Table 1 high-bit encoder area/power/delay for MBE, within 1 %.
+    #[test]
+    fn table1_highbit_cost() {
+        let m = Mbe;
+        for (n, area, delay, power) in [
+            (8, 28.22, 0.23, 24.06),
+            (10, 35.28, 0.23, 30.07),
+            (12, 42.34, 0.23, 36.03),
+            (14, 49.39, 0.23, 42.03),
+            (16, 56.45, 0.23, 48.05),
+            (18, 63.50, 0.23, 54.01),
+            (20, 70.56, 0.23, 60.00),
+            (24, 84.67, 0.23, 71.96),
+            (32, 112.90, 0.23, 95.89),
+        ] {
+            let c = m.encoder_cost(n);
+            assert!((c.area_um2 - area).abs() / area < 0.01, "n={n} area {c:?}");
+            assert!((c.power_uw - power).abs() / power < 0.01, "n={n} power {c:?}");
+            assert!((c.delay_ns - delay).abs() < 1e-9, "n={n} delay {c:?}");
+        }
+    }
+
+    /// Table 1a gate inventory and its area.
+    #[test]
+    fn unit_encoder_gate_area() {
+        let gl = unit_encoder_gates();
+        assert_eq!(gl.count(Gate::And2), 2);
+        assert_eq!(gl.count(Gate::Nand2), 2);
+        assert_eq!(gl.count(Gate::Nor2), 1);
+        assert_eq!(gl.count(Gate::Xnor2), 1);
+        let a = gl.cost().area_um2;
+        assert!((a - 7.06).abs() < 0.01, "area {a}");
+    }
+}

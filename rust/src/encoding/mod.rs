@@ -1,0 +1,97 @@
+//! Multiplicand encodings — the heart of the paper.
+//!
+//! * [`mbe`] — Modified Booth Encoding (Eq. 1–3): radix-4 digit set
+//!   {−2,−1,0,1,2}, ⌈n/2⌉·3 encoded bits, n/2 parallel encoders.
+//! * [`ent`] — the paper's carry-chain encoding (Eq. 4–17): radix-4 digit
+//!   set {0,1,2,−1}, n+1 encoded bits, n/2−1 chained encoders.
+//!
+//! Both provide a bit-accurate `encode`/`decode` pair, the control-line /
+//! encoded-bit patterns the hardware would transmit, and a calibrated
+//! [`Cost`](crate::gates::Cost) model per operand width.
+
+pub mod ent;
+pub mod mbe;
+
+use crate::gates::Cost;
+
+/// An encoding scheme's interconnect-relevant shape at operand width `n`
+/// — what Table 1's "Number" and "En-Width" columns report.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EncoderShape {
+    /// Operand width in bits.
+    pub width: usize,
+    /// Number of unit encoders required.
+    pub encoders: usize,
+    /// Encoded (transmitted) bit width.
+    pub encoded_bits: usize,
+}
+
+/// Interface shared by the two encodings; used by the architecture models
+/// to stay generic over the encoder choice.
+pub trait Encoding {
+    /// Human name as used in the paper's tables.
+    fn name(&self) -> &'static str;
+
+    /// Encoder count / encoded width at operand width `n` (n even, ≥ 2).
+    fn shape(&self, n: usize) -> EncoderShape;
+
+    /// Cost of the encoder *block* for one n-bit operand (all unit
+    /// encoders, excluding any output register).
+    fn encoder_cost(&self, n: usize) -> Cost;
+
+    /// Radix-4 digit decomposition of a **signed** n-bit value such that
+    /// `value == Σ dᵢ·4^i` (plus, for EN-T, a separated sign handled by
+    /// the selector). Used by the functional multiplier models.
+    fn digits(&self, value: i64, n: usize) -> Vec<i8>;
+}
+
+/// Check that `n` is a supported operand width.
+pub(crate) fn check_width(n: usize) {
+    assert!(n >= 4 && n % 2 == 0 && n <= 64, "unsupported width {n}");
+}
+
+/// Sign-extend the low `n` bits of `v` (two's complement).
+pub fn sext(v: i64, n: usize) -> i64 {
+    let shift = 64 - n as u32;
+    (v << shift) >> shift
+}
+
+/// Does `v` fit in `n` signed bits?
+pub fn fits_signed(v: i64, n: usize) -> bool {
+    let lo = -(1i64 << (n - 1));
+    let hi = (1i64 << (n - 1)) - 1;
+    (lo..=hi).contains(&v)
+}
+
+/// Does `v` fit in `n` unsigned bits?
+pub fn fits_unsigned(v: i64, n: usize) -> bool {
+    v >= 0 && v < (1i64 << n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sext_works() {
+        assert_eq!(sext(0xFF, 8), -1);
+        assert_eq!(sext(0x80, 8), -128);
+        assert_eq!(sext(0x7F, 8), 127);
+        assert_eq!(sext(0b1010, 4), -6);
+    }
+
+    #[test]
+    fn fits_ranges() {
+        assert!(fits_signed(-128, 8));
+        assert!(!fits_signed(128, 8));
+        assert!(fits_unsigned(255, 8));
+        assert!(!fits_unsigned(256, 8));
+        assert!(!fits_unsigned(-1, 8));
+    }
+
+    #[test]
+    #[should_panic(expected = "unsupported width")]
+    fn odd_width_rejected() {
+        check_width(7);
+    }
+}

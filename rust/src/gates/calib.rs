@@ -1,0 +1,173 @@
+//! Calibration constants — every value is tied to a number published in
+//! the paper (Table 1, Table 2, or §4.3 prose). This module is the single
+//! source of truth; unit tests in `encoding`/`arith` assert that the
+//! composed models reproduce the published tables.
+//!
+//! ## Derivations
+//!
+//! **Gate areas** (µm², SMIC 40 nm class). Table 1's single-encoder rows
+//! give two equations in the gate-area unknowns:
+//!
+//! ```text
+//!   MBE : 2·AND + 2·NAND + 1·NOR + 1·XNOR = 7.06
+//!   Ours: 1·AND + 3·NAND + 0·NOR + 2·XNOR = 8.64
+//! ```
+//!
+//! Fixing NAND = NOR = 0.88 µm² (a standard SMIC40 NAND2 footprint) the
+//! system solves to AND = 0.9467, XNOR = 2.5267 µm² — both plausible
+//! std-cell ratios (AND = NAND+INV, XNOR ≈ 2.9× NAND).
+//!
+//! **Register bit.** §4.3: "the additional power consumption for
+//! transferring 4-bit registers is approximately 15.13 µW" → 3.7825
+//! µW/bit at 500 MHz. Table 2's encoder row (32 encoders = 1895.36 µm² =
+//! 32 × (25.93 encoder + 9-bit output register)) back-solves the DFF area
+//! to (1895.36/32 − 25.93)/9 = 3.70 µm²/bit.
+//!
+//! **Encoder blocks** (per unit encoder, fitted across Table 1's width
+//! sweep 8→32 bit; residuals < 1 % except the paper's own inconsistent
+//! 12/14-bit "Ours" area rows, which are 1.0 µm² off their own per-unit
+//! trend — see `encoding::tests::table1_highbit`):
+//!
+//! ```text
+//!   MBE : area 7.056/enc, power 6.009/enc, delay 0.23 ns (parallel)
+//!   Ours: area 8.6433/enc, power 6.9725/enc + 0.5525 fixed (the Cin₁
+//!         AND of the unencoded low digit), delay 0.0875·k + 0.0975 ns
+//!         (carry chain through k encoders)
+//! ```
+//!
+//! **Multiplier remainder** (Booth selectors + compressor tree + final
+//! adder, i.e. the multiplier minus its encoders): Table 1c's RME_Ours
+//! row = 264.4 µm² / 188.9 µW / 1.63 ns. Compositionality check (tested):
+//! remainder + 4 MBE encoders = 292.6 (paper: 292.7); remainder + 3 Ours
+//! encoders = 290.3 (paper: 290.4); delays 1.63+0.23 = 1.86 and
+//! 1.63+0.36 = 1.99 — exact.
+
+/// All fitted cell-level constants.
+#[derive(Clone, Copy, Debug)]
+pub struct CellConstants {
+    // --- gate areas, µm² ---
+    pub and2_um2: f64,
+    pub nand2_um2: f64,
+    pub nor2_um2: f64,
+    pub xnor2_um2: f64,
+    pub mux2_um2: f64,
+    pub fa_um2: f64,
+    pub dff_um2_per_bit: f64,
+
+    // --- power ---
+    /// Dynamic power density of random logic at 500 MHz, typical
+    /// activity: fitted from the MBE encoder (24.06 µW / 28.22 µm²).
+    pub logic_uw_per_um2: f64,
+    pub dff_uw_per_bit: f64,
+
+    // --- delay ---
+    /// Base gate delay unit (ns); XNOR-class ≈ 1.2×, NAND ≈ 0.6×.
+    pub gate_delay_ns: f64,
+    pub dff_clk_q_ns: f64,
+
+    // --- calibrated encoder blocks (per unit encoder) ---
+    pub mbe_enc_area_um2: f64,
+    pub mbe_enc_power_uw: f64,
+    pub mbe_enc_delay_ns: f64,
+    pub ent_enc_area_um2: f64,
+    pub ent_enc_power_uw: f64,
+    /// Fixed power of the unencoded low digit's carry AND (Eq. 8).
+    pub ent_enc_power_fixed_uw: f64,
+    /// Carry-chain delay: `slope·k + offset` for k chained encoders.
+    pub ent_enc_delay_slope_ns: f64,
+    pub ent_enc_delay_offset_ns: f64,
+
+    // --- calibrated multiplier blocks (INT8, Table 1c) ---
+    /// Synopsys DesignWare IP multiplier (the paper's baseline PE core).
+    pub dw_mult_area_um2: f64,
+    pub dw_mult_power_uw: f64,
+    pub dw_mult_delay_ns: f64,
+    /// Multiplier remainder after encoder removal (RME_Ours row):
+    /// selectors + compressor tree + final adder.
+    pub rme_area_um2: f64,
+    pub rme_power_uw: f64,
+    pub rme_delay_ns: f64,
+}
+
+/// The calibrated constants (const-fn style singleton).
+pub const fn constants() -> CellConstants {
+    CellConstants {
+        and2_um2: 0.946_666_666_666_667,
+        nand2_um2: 0.88,
+        nor2_um2: 0.88,
+        xnor2_um2: 2.526_666_666_666_666,
+        mux2_um2: 1.8,
+        fa_um2: 4.5,
+        dff_um2_per_bit: 3.70,
+
+        logic_uw_per_um2: 0.8526,
+        dff_uw_per_bit: 3.7825,
+
+        gate_delay_ns: 0.096,
+        dff_clk_q_ns: 0.15,
+
+        mbe_enc_area_um2: 7.056,
+        mbe_enc_power_uw: 6.009,
+        mbe_enc_delay_ns: 0.23,
+        ent_enc_area_um2: 8.6433,
+        ent_enc_power_uw: 6.9725,
+        ent_enc_power_fixed_uw: 0.5525,
+        ent_enc_delay_slope_ns: 0.0875,
+        ent_enc_delay_offset_ns: 0.0975,
+
+        dw_mult_area_um2: 291.6,
+        dw_mult_power_uw: 211.4,
+        dw_mult_delay_ns: 1.87,
+        rme_area_um2: 264.4,
+        rme_power_uw: 188.9,
+        rme_delay_ns: 1.63,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The two Table-1a gate-count equations must be satisfied exactly by
+    /// the solved gate areas.
+    #[test]
+    fn gate_areas_reproduce_table1a() {
+        let c = constants();
+        let mbe = 2.0 * c.and2_um2 + 2.0 * c.nand2_um2 + c.nor2_um2 + c.xnor2_um2;
+        let ours = c.and2_um2 + 3.0 * c.nand2_um2 + 2.0 * c.xnor2_um2;
+        assert!((mbe - 7.06).abs() < 5e-3, "MBE encoder area {mbe}");
+        assert!((ours - 8.64).abs() < 5e-3, "Ours encoder area {ours}");
+    }
+
+    /// DFF area back-solved from Table 2's encoder row.
+    #[test]
+    fn dff_area_matches_table2_encoder_row() {
+        let c = constants();
+        let per_encoder = c.ent_enc_area_um2 * 3.0 + 9.0 * c.dff_um2_per_bit;
+        let table2 = 1895.36 / 32.0;
+        assert!(
+            (per_encoder - table2).abs() / table2 < 0.01,
+            "per-encoder {per_encoder} vs table2 {table2}"
+        );
+    }
+
+    /// §4.3 register power: 4 bits ≈ 15.13 µW.
+    #[test]
+    fn dff_power_matches_prose() {
+        let c = constants();
+        assert!((4.0 * c.dff_uw_per_bit - 15.13).abs() < 1e-9);
+    }
+
+    /// Multiplier compositionality (Table 1c).
+    #[test]
+    fn multiplier_composition() {
+        let c = constants();
+        let mbe_mult = c.rme_area_um2 + 4.0 * c.mbe_enc_area_um2;
+        let ours_mult = c.rme_area_um2 + 3.0 * c.ent_enc_area_um2;
+        assert!((mbe_mult - 292.7).abs() < 0.5, "MBE mult {mbe_mult}");
+        assert!((ours_mult - 290.4).abs() < 0.5, "Ours mult {ours_mult}");
+        // Delay composition is exact.
+        assert!((c.rme_delay_ns + 0.23 - 1.86).abs() < 1e-9);
+        assert!((c.rme_delay_ns + 0.36 - 1.99).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,275 @@
+//! Standard-cell gate library with an analytical area/power/delay model.
+//!
+//! The paper implements everything in SMIC 40 nm (NLL-HS-RVT) and reports
+//! synthesized component costs in Table 1. We have no PDK, so this module
+//! provides the *calibrated equivalent*: per-gate area constants solved
+//! from the paper's own published encoder totals, plus a dynamic-power
+//! density fitted to the published power numbers (see [`calib`] for every
+//! constant ↔ paper-number pairing).
+//!
+//! Composition is bottom-up exactly as in the paper: an encoder is a gate
+//! list, a multiplier is encoders + selectors + compressor tree + final
+//! adder, a PE is a multiplier + accumulator + pipeline registers, an
+//! array is PEs + column encoders + wiring.
+
+pub mod calib;
+
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Mul};
+
+/// Area (µm²), dynamic power (µW @ 500 MHz, typical activity), and
+/// critical-path delay (ns) of a hardware block.
+///
+/// `Add` composes blocks in parallel **data**paths (areas and powers add;
+/// delay takes the max). Use [`Cost::then`] for series (pipeline-stage)
+/// composition where delays add.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct Cost {
+    pub area_um2: f64,
+    pub power_uw: f64,
+    pub delay_ns: f64,
+}
+
+impl Cost {
+    pub const ZERO: Cost = Cost {
+        area_um2: 0.0,
+        power_uw: 0.0,
+        delay_ns: 0.0,
+    };
+
+    pub fn new(area_um2: f64, power_uw: f64, delay_ns: f64) -> Cost {
+        Cost {
+            area_um2,
+            power_uw,
+            delay_ns,
+        }
+    }
+
+    /// Series composition: areas/powers add, delays add (combinational
+    /// chain through both blocks).
+    pub fn then(self, other: Cost) -> Cost {
+        Cost {
+            area_um2: self.area_um2 + other.area_um2,
+            power_uw: self.power_uw + other.power_uw,
+            delay_ns: self.delay_ns + other.delay_ns,
+        }
+    }
+
+    /// Scale area and power by a replication count; delay unchanged
+    /// (replicas operate in parallel).
+    pub fn replicate(self, n: usize) -> Cost {
+        Cost {
+            area_um2: self.area_um2 * n as f64,
+            power_uw: self.power_uw * n as f64,
+            delay_ns: self.delay_ns,
+        }
+    }
+
+    /// Energy per clock cycle in picojoules at the global 500 MHz clock.
+    pub fn energy_pj_per_cycle(self) -> f64 {
+        // P[µW] × T[ns] = 1e-6 W × 1e-9 s = 1e-15 J = fJ; /1000 → pJ.
+        self.power_uw * crate::CLOCK_NS / 1000.0
+    }
+}
+
+impl Add for Cost {
+    type Output = Cost;
+    fn add(self, rhs: Cost) -> Cost {
+        Cost {
+            area_um2: self.area_um2 + rhs.area_um2,
+            power_uw: self.power_uw + rhs.power_uw,
+            delay_ns: self.delay_ns.max(rhs.delay_ns),
+        }
+    }
+}
+
+impl AddAssign for Cost {
+    fn add_assign(&mut self, rhs: Cost) {
+        *self = *self + rhs;
+    }
+}
+
+impl Mul<f64> for Cost {
+    type Output = Cost;
+    /// Scale area/power continuously (used by the wiring model); delay
+    /// unchanged.
+    fn mul(self, k: f64) -> Cost {
+        Cost {
+            area_um2: self.area_um2 * k,
+            power_uw: self.power_uw * k,
+            delay_ns: self.delay_ns,
+        }
+    }
+}
+
+impl Sum for Cost {
+    fn sum<I: Iterator<Item = Cost>>(iter: I) -> Cost {
+        iter.fold(Cost::ZERO, |a, b| a + b)
+    }
+}
+
+/// Gate kinds used by the paper's Table 1 decomposition plus the larger
+/// cells our structural models need.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Gate {
+    And2,
+    Nand2,
+    Nor2,
+    Or2,
+    Xor2,
+    Xnor2,
+    Inv,
+    Mux2,
+    /// Half adder (sum + carry from 2 inputs).
+    HalfAdder,
+    /// Full adder (3:2 compressor) — the workhorse of the Wallace tree.
+    FullAdder,
+    /// One bit of a D flip-flop (pipeline/output register).
+    DffBit,
+}
+
+impl Gate {
+    /// Area in µm² (see [`calib`] for how each constant is derived).
+    pub fn area_um2(self) -> f64 {
+        let c = calib::constants();
+        match self {
+            Gate::And2 => c.and2_um2,
+            Gate::Nand2 => c.nand2_um2,
+            Gate::Nor2 => c.nor2_um2,
+            Gate::Or2 => c.and2_um2, // OR2 ≈ AND2 in std-cell libraries
+            Gate::Xor2 => c.xnor2_um2,
+            Gate::Xnor2 => c.xnor2_um2,
+            Gate::Inv => c.nand2_um2 * 0.6,
+            Gate::Mux2 => c.mux2_um2,
+            Gate::HalfAdder => c.xnor2_um2 + c.and2_um2,
+            Gate::FullAdder => c.fa_um2,
+            Gate::DffBit => c.dff_um2_per_bit,
+        }
+    }
+
+    /// Typical-activity dynamic power in µW at 500 MHz.
+    pub fn power_uw(self) -> f64 {
+        let c = calib::constants();
+        match self {
+            Gate::DffBit => c.dff_uw_per_bit,
+            g => g.area_um2() * c.logic_uw_per_um2,
+        }
+    }
+
+    /// Intrinsic propagation delay in ns (used for combinational chains;
+    /// calibrated so the fitted encoder/multiplier paths match Table 1).
+    pub fn delay_ns(self) -> f64 {
+        let c = calib::constants();
+        match self {
+            Gate::Inv => 0.4 * c.gate_delay_ns,
+            Gate::Nand2 | Gate::Nor2 => 0.6 * c.gate_delay_ns,
+            Gate::And2 | Gate::Or2 => c.gate_delay_ns,
+            Gate::Xor2 | Gate::Xnor2 | Gate::Mux2 => 1.2 * c.gate_delay_ns,
+            Gate::HalfAdder => 1.2 * c.gate_delay_ns,
+            Gate::FullAdder => 2.0 * c.gate_delay_ns,
+            Gate::DffBit => c.dff_clk_q_ns,
+        }
+    }
+
+    pub fn cost(self) -> Cost {
+        Cost::new(self.area_um2(), self.power_uw(), self.delay_ns())
+    }
+}
+
+/// A bag of gates — the unit in which the paper reports its encoders
+/// ("2 AND, 2 NAND, 1 NOR, 1 XNOR"). Costs compose additively in
+/// area/power; the delay is the max single-gate delay times the stated
+/// logic depth.
+#[derive(Clone, Debug, Default)]
+pub struct GateList {
+    pub gates: Vec<(Gate, usize)>,
+    /// Logic depth in gate levels along the critical path.
+    pub depth_levels: usize,
+}
+
+impl GateList {
+    pub fn new(gates: Vec<(Gate, usize)>, depth_levels: usize) -> GateList {
+        GateList {
+            gates,
+            depth_levels,
+        }
+    }
+
+    pub fn count(&self, g: Gate) -> usize {
+        self.gates
+            .iter()
+            .filter(|(k, _)| *k == g)
+            .map(|(_, n)| n)
+            .sum()
+    }
+
+    pub fn total_gates(&self) -> usize {
+        self.gates.iter().map(|(_, n)| n).sum()
+    }
+
+    pub fn cost(&self) -> Cost {
+        let mut area = 0.0;
+        let mut power = 0.0;
+        let mut max_gate_delay: f64 = 0.0;
+        for &(g, n) in &self.gates {
+            area += g.area_um2() * n as f64;
+            power += g.power_uw() * n as f64;
+            max_gate_delay = max_gate_delay.max(g.delay_ns());
+        }
+        Cost::new(area, power, max_gate_delay * self.depth_levels as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_add_is_parallel() {
+        let a = Cost::new(1.0, 2.0, 3.0);
+        let b = Cost::new(10.0, 20.0, 1.0);
+        let c = a + b;
+        assert_eq!(c.area_um2, 11.0);
+        assert_eq!(c.power_uw, 22.0);
+        assert_eq!(c.delay_ns, 3.0); // max, not sum
+    }
+
+    #[test]
+    fn cost_then_is_series() {
+        let a = Cost::new(1.0, 2.0, 3.0);
+        let b = Cost::new(10.0, 20.0, 1.0);
+        let c = a.then(b);
+        assert_eq!(c.delay_ns, 4.0);
+    }
+
+    #[test]
+    fn replicate_scales_area_power_not_delay() {
+        let c = Cost::new(2.0, 3.0, 0.5).replicate(4);
+        assert_eq!(c.area_um2, 8.0);
+        assert_eq!(c.power_uw, 12.0);
+        assert_eq!(c.delay_ns, 0.5);
+    }
+
+    #[test]
+    fn energy_per_cycle_at_500mhz() {
+        // 1000 µW for one 2 ns cycle = 2 pJ.
+        let c = Cost::new(0.0, 1000.0, 0.0);
+        assert!((c.energy_pj_per_cycle() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gatelist_counts_and_costs() {
+        let gl = GateList::new(vec![(Gate::And2, 2), (Gate::Nand2, 2)], 2);
+        assert_eq!(gl.count(Gate::And2), 2);
+        assert_eq!(gl.total_gates(), 4);
+        let c = gl.cost();
+        assert!(c.area_um2 > 0.0);
+        assert!((c.delay_ns - 2.0 * Gate::And2.delay_ns()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sum_over_iterator() {
+        let total: Cost = (0..3).map(|_| Cost::new(1.0, 1.0, 1.0)).sum();
+        assert_eq!(total.area_um2, 3.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Array- and SoC-level hardware cost modelling on top of [`crate::gates`]:
+//!
+//! * [`sram`] — the SoC's buffer hierarchy priced from the paper's
+//!   Table 2 (ARM memory-compiler outputs);
+//! * [`wiring`] — the layout/interconnect model that turns per-PE cell
+//!   costs into array costs. Its fitted coefficients are the only free
+//!   parameters in the whole reproduction (see DESIGN.md §4 and the
+//!   module docs for what they absorb).
+
+pub mod sram;
+pub mod wiring;
+
+pub use crate::gates::{calib, Cost};

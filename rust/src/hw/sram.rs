@@ -1,0 +1,133 @@
+//! On-chip SRAM models, priced verbatim from the paper's Table 2 (ARM
+//! Memory Compiler outputs at SMIC 40 nm, 500 MHz).
+//!
+//! Table 2 reports sustained read/write *power* (W) at full access rate;
+//! energy per access follows as P/f. Accesses are modelled as 128-bit
+//! (16-byte) lines, the natural word for a 32-lane INT8 array port.
+
+use crate::gates::Cost;
+
+/// Bytes per SRAM access (one line).
+pub const LINE_BYTES: usize = 16;
+
+/// One SRAM instance.
+#[derive(Clone, Copy, Debug)]
+pub struct Sram {
+    pub name: &'static str,
+    pub kbytes: usize,
+    pub area_um2: f64,
+    pub read_w: f64,
+    pub write_w: f64,
+}
+
+impl Sram {
+    /// Table 2 row: 256 KB Global Buffer.
+    pub fn global_buffer() -> Sram {
+        Sram {
+            name: "Global Buffer",
+            kbytes: 256,
+            area_um2: 614_400.0,
+            read_w: 0.0205,
+            write_w: 0.04515,
+        }
+    }
+
+    /// Table 2 row: 64 KB Activation Buffer.
+    pub fn activation_buffer() -> Sram {
+        Sram {
+            name: "Activation Buffer",
+            kbytes: 64,
+            area_um2: 153_600.0,
+            read_w: 0.0146,
+            write_w: 0.0322,
+        }
+    }
+
+    /// Table 2 row: 64 KB Weight Buffer (same macro as the activation
+    /// buffer — the paper prices "Activation and Weight Buffer" as one
+    /// 64 KB entry each).
+    pub fn weight_buffer() -> Sram {
+        Sram {
+            name: "Weight Buffer",
+            kbytes: 64,
+            ..Sram::activation_buffer()
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.kbytes * 1024
+    }
+
+    /// Energy of one line read, picojoules (P/f at 500 MHz).
+    pub fn read_pj_per_line(&self) -> f64 {
+        self.read_w / crate::CLOCK_MHZ / 1e6 * 1e12
+    }
+
+    /// Energy of one line write, picojoules.
+    pub fn write_pj_per_line(&self) -> f64 {
+        self.write_w / crate::CLOCK_MHZ / 1e6 * 1e12
+    }
+
+    /// Energy to read `bytes` bytes (whole lines), picojoules.
+    pub fn read_pj(&self, bytes: u64) -> f64 {
+        (bytes.div_ceil(LINE_BYTES as u64)) as f64 * self.read_pj_per_line()
+    }
+
+    /// Energy to write `bytes` bytes (whole lines), picojoules.
+    pub fn write_pj(&self, bytes: u64) -> f64 {
+        (bytes.div_ceil(LINE_BYTES as u64)) as f64 * self.write_pj_per_line()
+    }
+
+    /// Static cost entry for area roll-ups (power column reports the
+    /// read-side sustained power; energy accounting uses the per-access
+    /// methods instead).
+    pub fn cost(&self) -> Cost {
+        Cost::new(self.area_um2, self.read_w * 1e6, 0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_values() {
+        let gb = Sram::global_buffer();
+        assert_eq!(gb.bytes(), 262_144);
+        assert_eq!(gb.area_um2, 614_400.0);
+        let awb = Sram::activation_buffer();
+        assert_eq!(awb.kbytes, 64);
+        assert_eq!(awb.area_um2, 153_600.0);
+        // Table 2 density consistency: both macros ≈ 2.4 µm²/byte.
+        let d_gb = gb.area_um2 / gb.bytes() as f64;
+        let d_awb = awb.area_um2 / awb.bytes() as f64;
+        assert!((d_gb - d_awb).abs() < 0.01, "{d_gb} vs {d_awb}");
+    }
+
+    #[test]
+    fn energy_per_line_from_power() {
+        let gb = Sram::global_buffer();
+        // 0.0205 W / 500 MHz = 41 pJ per line.
+        assert!((gb.read_pj_per_line() - 41.0).abs() < 1e-9);
+        assert!((gb.write_pj_per_line() - 90.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn partial_lines_round_up() {
+        let gb = Sram::global_buffer();
+        assert_eq!(gb.read_pj(1), gb.read_pj(16));
+        assert_eq!(gb.read_pj(17), 2.0 * gb.read_pj_per_line());
+        assert_eq!(gb.read_pj(0), 0.0);
+    }
+
+    #[test]
+    fn write_costs_more_than_read() {
+        for s in [
+            Sram::global_buffer(),
+            Sram::activation_buffer(),
+            Sram::weight_buffer(),
+        ] {
+            assert!(s.write_pj_per_line() > s.read_pj_per_line(), "{}", s.name);
+        }
+    }
+}

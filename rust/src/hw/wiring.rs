@@ -1,0 +1,139 @@
+//! Layout / interconnect model — PE cells → placed-and-routed array.
+//!
+//! The paper's area and power results come from Synopsys DC place &
+//! route; Fig 1(b) shows layout wiring as a first-class consumer of die
+//! area, and §3.1/§4.3 attribute a large share of EN-T's gain to the
+//! array becoming "more efficient and compact" (shorter inter-PE paths →
+//! less routing area and less data-movement power). Without the PDK we
+//! model routing as a multiplicative overhead on cell area/power:
+//!
+//! ```text
+//!   A_array = A_cells · (1 + Rₐ · f),   f = r_pe^γ · r_bits^δ
+//!   P_array = P_cells · (1 + Rₚ · f)
+//! ```
+//!
+//! where `r_pe` is the PE cell area relative to the baseline PE of the
+//! same architecture (captures wire *length*: hop length scales with the
+//! PE pitch, √area) and `r_bits` is the inter-PE path bit count relative
+//! to baseline (captures wire *count* — this is the term that punishes
+//! MBE's 12-bit encoded operand on pipelined architectures and barely
+//! touches our 9-bit one).
+//!
+//! **Fitted parameters** (the only free parameters in the repo): the
+//! per-architecture baseline routing fractions `Rₐ`, `Rₚ`. They absorb
+//! what we cannot re-derive without the SMIC 40 nm PDK — routing
+//! congestion and P&R density response — and are fitted once against the
+//! paper's Fig 6/7 endpoints (residuals in EXPERIMENTS.md).
+//!
+//! Because this conservative physical model cannot capture the full
+//! layout compaction the paper's P&R flow reports, the reproduced
+//! improvement magnitudes land at roughly half the paper's percentages
+//! while preserving every qualitative contrast (per-arch ordering, the
+//! MBE-on-pipelined regression, the scale trend). EXPERIMENTS.md
+//! quantifies the per-figure gap.
+
+/// Routing-overhead coefficients for one architecture.
+#[derive(Clone, Copy, Debug)]
+pub struct RoutingFit {
+    /// Baseline routing area fraction Rₐ.
+    pub area_frac: f64,
+    /// Baseline interconnect power fraction Rₚ.
+    pub power_frac: f64,
+}
+
+/// Shared fit exponents.
+#[derive(Clone, Copy, Debug)]
+pub struct RoutingExponents {
+    /// Sensitivity of routing to PE cell area (placement density).
+    pub gamma: f64,
+    /// Sensitivity of routing to inter-PE path width.
+    pub delta: f64,
+}
+
+/// The shared exponents. γ = 0.5 is the physical wire-length scaling
+/// (hop length ∝ √cell-area); δ = 1 is wire count. These are *not*
+/// fitted — only the per-arch fractions are.
+pub const EXPONENTS: RoutingExponents = RoutingExponents {
+    gamma: 0.5,
+    delta: 1.0,
+};
+
+/// Routing multipliers for an array variant.
+///
+/// * `r_pe`  — PE cell area ratio variant/baseline (≤ 1 for EN-T(Ours));
+/// * `r_bits` — inter-PE path bits ratio variant/baseline (≥ 1).
+///
+/// Returns `(area_multiplier, power_multiplier)` to apply to cell cost.
+///
+/// Area tracks both wire count and wire length (`r_bits·√r_pe`); power
+/// tracks only wire length (`√r_pe`): interconnect power is dominated by
+/// the drivers and the clock tree, whose switched capacitance follows
+/// the PE pitch, while the *extra* encoded-operand wires toggle at the
+/// operand rate already priced into the DFF transfer power. This is
+/// consistent with the paper's own per-PE accounting (§4.3: MBE's 4
+/// register bits cost 15.13 µW against the 24.07 µW encoder saved —
+/// power improves on systolic even as area regresses).
+pub fn overhead(fit: RoutingFit, r_pe: f64, r_bits: f64) -> (f64, f64) {
+    assert!(r_pe > 0.0 && r_bits > 0.0);
+    let f_area = r_pe.powf(EXPONENTS.gamma) * r_bits.powf(EXPONENTS.delta);
+    let f_power = r_pe.powf(EXPONENTS.gamma);
+    (1.0 + fit.area_frac * f_area, 1.0 + fit.power_frac * f_power)
+}
+
+/// Baseline multipliers (r = 1) for reference reporting.
+pub fn baseline_overhead(fit: RoutingFit) -> (f64, f64) {
+    overhead(fit, 1.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FIT: RoutingFit = RoutingFit {
+        area_frac: 0.35,
+        power_frac: 0.30,
+    };
+
+    #[test]
+    fn baseline_is_one_plus_fraction() {
+        let (a, p) = baseline_overhead(FIT);
+        assert!((a - 1.35).abs() < 1e-12);
+        assert!((p - 1.30).abs() < 1e-12);
+    }
+
+    #[test]
+    fn smaller_pe_shrinks_routing() {
+        let (a_small, _) = overhead(FIT, 0.95, 1.0);
+        let (a_base, _) = baseline_overhead(FIT);
+        assert!(a_small < a_base);
+    }
+
+    #[test]
+    fn wider_path_grows_routing_area_not_power() {
+        let (a_wide, p_wide) = overhead(FIT, 1.0, 1.5);
+        let (a_base, p_base) = baseline_overhead(FIT);
+        assert!(a_wide > a_base);
+        assert!((p_wide - p_base).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mbe_vs_ours_contrast() {
+        // The structural story of Fig 6 on pipelined archs: MBE's wide
+        // path (12/8 = 1.5× on the operand, ~1.11× on the whole pitch)
+        // clearly exceeds baseline routing, while Ours (9/8 ⇒ ~1.03×)
+        // stays within 1 % of it — the PE shrink absorbs most of the one
+        // extra wire.
+        let (mbe_a, _) = overhead(FIT, 0.985, 41.0 / 37.0);
+        let (ours_a, _) = overhead(FIT, 0.961, 38.0 / 37.0);
+        let (base_a, _) = baseline_overhead(FIT);
+        assert!(mbe_a > base_a * 1.02);
+        assert!(ours_a < mbe_a);
+        assert!((ours_a - base_a).abs() / base_a < 0.01);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_nonpositive_ratio() {
+        overhead(FIT, 0.0, 1.0);
+    }
+}

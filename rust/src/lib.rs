@@ -1,0 +1,54 @@
+//! # EN-T — encoder-based tensor computing engine optimization
+//!
+//! Full-system reproduction of *EN-T: Optimizing Tensor Computing Engines
+//! Performance via Encoder-Based Methodology* (Wu et al., cs.AR 2024).
+//!
+//! The paper hoists the Booth-style encoder of the multiplicand out of
+//! every processing element of a tensor computing unit (TCU) and replaces
+//! Modified Booth Encoding with a carry-chain radix-4 encoding that maps an
+//! n-bit operand to n+1 bits (digit set {0, 1, 2, -1}), so the *encoded*
+//! multiplicand can flow/broadcast through the array with minimal
+//! interconnect cost.
+//!
+//! This crate is the Layer-3 of a three-layer stack (see DESIGN.md):
+//!
+//! * [`gates`], [`encoding`], [`arith`], [`pe`] — bit-accurate functional
+//!   models of the paper's hardware building blocks with an analytical
+//!   area/power/delay cost model calibrated to the paper's Table 1;
+//! * [`arch`], [`sim`] — the five TCU microarchitectures (2D Matrix,
+//!   1D/2D Array, Systolic OS/WS, 3D Cube) as cycle-level dataflow
+//!   simulators, with the EN-T transformation applied as an overlay;
+//! * [`nn`], [`soc`] — the benchmark SoC of the paper's §4.4 and the eight
+//!   CNN workloads it evaluates;
+//! * [`runtime`], [`coordinator`] — the PJRT runtime that loads the
+//!   AOT-compiled JAX/Pallas artifacts and the serving coordinator that
+//!   schedules real inference jobs onto the modelled NPU;
+//! * [`report`] — emitters that regenerate every table and figure of the
+//!   paper's evaluation section.
+//!
+//! Python (JAX + Pallas) is used only at build time to author and lower
+//! the numerics; it never runs on the request path.
+
+pub mod arch;
+pub mod arith;
+pub mod coordinator;
+pub mod encoding;
+pub mod gates;
+pub mod hw;
+pub mod nn;
+pub mod pe;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod soc;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Operating clock of every experiment in the paper (§4.1: "all test on
+/// 500MHz").
+pub const CLOCK_MHZ: f64 = 500.0;
+
+/// Clock period in nanoseconds at [`CLOCK_MHZ`].
+pub const CLOCK_NS: f64 = 1000.0 / CLOCK_MHZ;

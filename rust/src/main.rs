@@ -1,0 +1,425 @@
+//! `ent` — the EN-T reproduction CLI (Layer-3 leader entrypoint).
+//!
+//! ```text
+//! ent report <all|fig1|table1|fig6|fig7|table2|fig9|fig10|fig11|fig12>
+//! ent simulate --arch sa_os --size 32 --variant ours --m 64 --k 128 --n 64
+//! ent soc --net resnet50 [--arch sa_os] [--json]
+//! ent serve --requests 64 [--artifacts DIR]
+//! ent sweep --ablation <encoder|accwidth|segmented|batching>
+//! ent selftest
+//! ```
+
+use std::process::ExitCode;
+
+use ent::arch::{ArchKind, Tcu, ALL_ARCHS};
+use ent::coordinator::{Config, Coordinator, InferRequest};
+use ent::nn::zoo;
+use ent::pe::Variant;
+use ent::report;
+use ent::soc::{energy, Soc};
+use ent::util::cli::{help, Args, OptSpec};
+use ent::util::json::Json;
+use ent::util::prng::Rng;
+use ent::util::table::{f, pct, Table};
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("ent: error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn usage() -> String {
+    "ent — EN-T tensor-engine reproduction\n\
+     \n\
+     subcommands:\n\
+     \x20 report <id>      regenerate a paper table/figure (all, fig1, table1,\n\
+     \x20                  fig6, fig7, table2, fig9, fig10, fig11, fig12)\n\
+     \x20 simulate         run a GEMM through an architecture model\n\
+     \x20 soc              single-frame SoC energy for a network\n\
+     \x20 serve            start the serving coordinator on synthetic load\n\
+     \x20 sweep            ablation sweeps (encoder, accwidth, segmented, batching)\n\
+     \x20 selftest         quick datapath equivalence check\n"
+        .into()
+}
+
+fn run(argv: &[String]) -> ent::Result<()> {
+    let Some(cmd) = argv.first() else {
+        print!("{}", usage());
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "report" => cmd_report(rest),
+        "simulate" => cmd_simulate(rest),
+        "soc" => cmd_soc(rest),
+        "serve" => cmd_serve(rest),
+        "sweep" => cmd_sweep(rest),
+        "selftest" => cmd_selftest(),
+        "help" | "--help" | "-h" => {
+            print!("{}", usage());
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand '{other}'\n{}", usage()),
+    }
+}
+
+fn parse_variant(s: &str) -> ent::Result<Variant> {
+    Ok(match s {
+        "baseline" => Variant::Baseline,
+        "mbe" => Variant::EntMbe,
+        "ours" => Variant::EntOurs,
+        _ => anyhow::bail!("variant must be baseline|mbe|ours"),
+    })
+}
+
+fn parse_arch(s: &str) -> ent::Result<ArchKind> {
+    ArchKind::parse(s).ok_or_else(|| {
+        anyhow::anyhow!("arch must be one of matrix2d|array1d2d|sa_os|sa_ws|cube3d")
+    })
+}
+
+fn cmd_report(argv: &[String]) -> ent::Result<()> {
+    let which = argv.first().map(|s| s.as_str()).unwrap_or("all");
+    let out = match which {
+        "all" => report::all_reports(),
+        "fig1" => report::fig1::fig1(),
+        "table1" => report::table1(),
+        "fig6" => report::fig6(),
+        "fig7" => report::fig7(),
+        "table2" => report::table2(),
+        "fig9" => report::fig9(ArchKind::SystolicOs),
+        "fig10" => report::fig10(),
+        "fig11" => report::fig11(),
+        "fig12" => report::fig12(),
+        other => anyhow::bail!("unknown report '{other}'"),
+    };
+    print!("{out}");
+    Ok(())
+}
+
+fn cmd_simulate(argv: &[String]) -> ent::Result<()> {
+    let specs = [
+        OptSpec { name: "arch", takes_value: true, help: "matrix2d|array1d2d|sa_os|sa_ws|cube3d" },
+        OptSpec { name: "size", takes_value: true, help: "array size (default 32; cube edge)" },
+        OptSpec { name: "variant", takes_value: true, help: "baseline|mbe|ours" },
+        OptSpec { name: "m", takes_value: true, help: "GEMM M (default 64)" },
+        OptSpec { name: "k", takes_value: true, help: "GEMM K (default 128)" },
+        OptSpec { name: "n", takes_value: true, help: "GEMM N (default 64)" },
+        OptSpec { name: "verify", takes_value: false, help: "bit-accurate functional check" },
+        OptSpec { name: "json", takes_value: false, help: "JSON output" },
+        OptSpec { name: "help", takes_value: false, help: "show help" },
+    ];
+    let args = Args::parse(argv, &specs)?;
+    if args.flag("help") {
+        print!("{}", help("ent simulate", "run a GEMM through an architecture model", &specs));
+        return Ok(());
+    }
+    let arch = parse_arch(args.get_or("arch", "sa_os"))?;
+    let size = args.get_usize("size", if arch == ArchKind::Cube3d { 8 } else { 32 })?;
+    let variant = parse_variant(args.get_or("variant", "ours"))?;
+    let (m, k, n) = (
+        args.get_usize("m", 64)?,
+        args.get_usize("k", 128)?,
+        args.get_usize("n", 64)?,
+    );
+    let tcu = Tcu::new(arch, size, variant);
+    let stats = ent::sim::gemm_stats(&tcu, ent::sim::GemmShape::new(m, k, n));
+    let cost = tcu.cost().total();
+
+    if args.flag("verify") {
+        let mut rng = Rng::new(7);
+        let a = rng.i8_vec(m * k);
+        let b = rng.i8_vec(k * n);
+        let got = ent::sim::tiled_matmul(&tcu, &a, &b, m, k, n);
+        let want = ent::arch::gemm_ref(&a, &b, m, k, n);
+        anyhow::ensure!(got == want, "functional mismatch!");
+        println!("verify: OK ({}x{}x{} exact through {} dataflow)", m, k, n, arch.name());
+    }
+
+    if args.flag("json") {
+        println!(
+            "{}",
+            Json::obj(vec![
+                ("arch", Json::str(arch.short_name())),
+                ("variant", Json::str(variant.name())),
+                ("size", Json::num(size as f64)),
+                ("macs", Json::num(stats.macs as f64)),
+                ("cycles", Json::num(stats.cycles as f64)),
+                ("utilization", Json::num(stats.utilization)),
+                ("area_um2", Json::num(cost.area_um2)),
+                ("power_uw", Json::num(cost.power_uw)),
+            ])
+        );
+    } else {
+        let mut t = Table::new(format!(
+            "GEMM {m}x{k}x{n} on {} {size} ({})",
+            arch.name(),
+            variant.name()
+        ))
+        .header(&["metric", "value"]);
+        t.row(vec!["MACs".into(), stats.macs.to_string()]);
+        t.row(vec!["cycles".into(), stats.cycles.to_string()]);
+        t.row(vec!["utilization".into(), f(stats.utilization, 3)]);
+        t.row(vec!["latency µs".into(), f(stats.cycles as f64 * ent::CLOCK_NS / 1e3, 2)]);
+        t.row(vec!["TCU area mm²".into(), f(cost.area_um2 / 1e6, 3)]);
+        t.row(vec!["TCU power mW".into(), f(cost.power_uw / 1e3, 1)]);
+        t.row(vec!["weight-port reads".into(), stats.a_reads.to_string()]);
+        t.row(vec!["act-port reads".into(), stats.b_reads.to_string()]);
+        t.row(vec!["encoder activations".into(), stats.encodes.to_string()]);
+        print!("{}", t.render());
+    }
+    Ok(())
+}
+
+fn cmd_soc(argv: &[String]) -> ent::Result<()> {
+    let specs = [
+        OptSpec { name: "net", takes_value: true, help: "network name (default resnet50)" },
+        OptSpec { name: "arch", takes_value: true, help: "TCU architecture (default sa_os)" },
+        OptSpec { name: "variant", takes_value: true, help: "baseline|mbe|ours (default ours)" },
+        OptSpec { name: "layers", takes_value: false, help: "print the per-layer trace" },
+        OptSpec { name: "json", takes_value: false, help: "JSON output" },
+        OptSpec { name: "help", takes_value: false, help: "show help" },
+    ];
+    let args = Args::parse(argv, &specs)?;
+    if args.flag("help") {
+        print!("{}", help("ent soc", "single-frame SoC energy", &specs));
+        return Ok(());
+    }
+    let net = zoo::by_name(args.get_or("net", "resnet50"))
+        .ok_or_else(|| anyhow::anyhow!("unknown network"))?;
+    let arch = parse_arch(args.get_or("arch", "sa_os"))?;
+    let variant = parse_variant(args.get_or("variant", "ours"))?;
+    let soc = Soc::paper_config(arch, variant);
+    let (e, trace) = energy::frame_energy(&soc, &net);
+
+    if args.flag("json") {
+        println!(
+            "{}",
+            Json::obj(vec![
+                ("network", Json::str(net.name)),
+                ("arch", Json::str(arch.short_name())),
+                ("variant", Json::str(variant.name())),
+                ("total_mj", Json::num(e.total_mj())),
+                ("sram_read_mj", Json::num(e.sram_read_pj / 1e9)),
+                ("sram_write_mj", Json::num(e.sram_write_pj / 1e9)),
+                ("tcu_mj", Json::num(e.tcu_pj / 1e9)),
+                ("simd_mj", Json::num(e.simd_pj / 1e9)),
+                ("latency_ms", Json::num(e.latency_ms())),
+                ("compute_fraction", Json::num(e.compute_fraction())),
+            ])
+        );
+        return Ok(());
+    }
+    let mut t = Table::new(format!(
+        "{} single-frame on {} ({})",
+        net.name,
+        arch.name(),
+        variant.name()
+    ))
+    .header(&["metric", "value"]);
+    t.row(vec!["total energy mJ".into(), f(e.total_mj(), 3)]);
+    t.row(vec!["  sram read mJ".into(), f(e.sram_read_pj / 1e9, 3)]);
+    t.row(vec!["  sram write mJ".into(), f(e.sram_write_pj / 1e9, 3)]);
+    t.row(vec!["  TCU mJ".into(), f(e.tcu_pj / 1e9, 3)]);
+    t.row(vec!["  SIMD mJ".into(), f(e.simd_pj / 1e9, 3)]);
+    t.row(vec!["  controller mJ".into(), f(e.controller_pj / 1e9, 3)]);
+    t.row(vec!["compute fraction".into(), f(e.compute_fraction(), 3)]);
+    t.row(vec!["latency ms".into(), f(e.latency_ms(), 2)]);
+    t.row(vec!["GMACs".into(), f(e.macs as f64 / 1e9, 2)]);
+    print!("{}", t.render());
+
+    if args.flag("layers") {
+        let mut t = Table::new("\nper-layer trace").header(&["layer", "mJ", "cycles", "compute frac"]);
+        for l in trace {
+            t.row(vec![
+                l.name.clone(),
+                f(l.energy.total_mj(), 4),
+                l.energy.cycles.to_string(),
+                f(l.energy.compute_fraction(), 2),
+            ]);
+        }
+        print!("{}", t.render());
+    }
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> ent::Result<()> {
+    let specs = [
+        OptSpec { name: "requests", takes_value: true, help: "synthetic requests to send (default 64)" },
+        OptSpec { name: "artifacts", takes_value: true, help: "artifact directory" },
+        OptSpec { name: "concurrency", takes_value: true, help: "client threads (default 4)" },
+        OptSpec { name: "help", takes_value: false, help: "show help" },
+    ];
+    let args = Args::parse(argv, &specs)?;
+    if args.flag("help") {
+        print!("{}", help("ent serve", "serving coordinator on synthetic load", &specs));
+        return Ok(());
+    }
+    let n_requests = args.get_usize("requests", 64)?;
+    let concurrency = args.get_usize("concurrency", 4)?.max(1);
+    let mut cfg = Config::default();
+    if let Some(dir) = args.get("artifacts") {
+        cfg.artifact_dir = dir.into();
+    }
+    let input_len = cfg.model.input_len();
+    let coordinator = Coordinator::start(cfg)?;
+    println!("coordinator up; sending {n_requests} requests from {concurrency} client threads");
+
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..concurrency {
+            let coord = &coordinator;
+            scope.spawn(move || {
+                let mut rng = Rng::new(0x5E + c as u64);
+                for _ in 0..n_requests / concurrency {
+                    let img = rng.i8_vec(input_len);
+                    match coord.infer(InferRequest { image: img }) {
+                        Ok(r) => {
+                            assert_eq!(r.logits.len(), 10);
+                        }
+                        Err(e) => eprintln!("request failed: {e}"),
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    let m = coordinator.metrics();
+    println!("done in {:.1} ms", wall.as_secs_f64() * 1e3);
+    println!(
+        "requests {} errors {} mean batch {:.2}",
+        m.requests, m.errors, m.mean_batch
+    );
+    if let Some(lat) = m.latency_us {
+        println!(
+            "latency µs: mean {:.0} p50 {:.0} p95 {:.0} p99 {:.0}",
+            lat.mean, lat.median, lat.p95, lat.p99
+        );
+    }
+    println!(
+        "throughput {:.0} req/s",
+        m.requests as f64 / wall.as_secs_f64()
+    );
+    coordinator.shutdown();
+    Ok(())
+}
+
+fn cmd_sweep(argv: &[String]) -> ent::Result<()> {
+    let specs = [
+        OptSpec { name: "ablation", takes_value: true, help: "encoder|accwidth|segmented|batching" },
+        OptSpec { name: "help", takes_value: false, help: "show help" },
+    ];
+    let args = Args::parse(argv, &specs)?;
+    if args.flag("help") {
+        print!("{}", help("ent sweep", "ablation sweeps", &specs));
+        return Ok(());
+    }
+    match args.get_or("ablation", "encoder") {
+        "encoder" => {
+            // The paper's central contrast: external MBE vs external Ours
+            // per architecture.
+            let mut t = Table::new("Ablation — encoder choice at 1 TOPS")
+                .header(&["arch", "Δarea (MBE)", "Δarea (Ours)", "Δpower (MBE)", "Δpower (Ours)"]);
+            for arch in ALL_ARCHS {
+                let s = arch.size_for_scale(ent::arch::Scale::Tops1);
+                let b = Tcu::new(arch, s, Variant::Baseline).cost().total();
+                let m = Tcu::new(arch, s, Variant::EntMbe).cost().total();
+                let o = Tcu::new(arch, s, Variant::EntOurs).cost().total();
+                t.row(vec![
+                    arch.name().into(),
+                    pct(m.area_um2 / b.area_um2 - 1.0),
+                    pct(o.area_um2 / b.area_um2 - 1.0),
+                    pct(m.power_uw / b.power_uw - 1.0),
+                    pct(o.power_uw / b.power_uw - 1.0),
+                ]);
+            }
+            print!("{}", t.render());
+        }
+        "accwidth" => {
+            // 16+log2 S (paper) vs fixed 24-bit accumulators.
+            use ent::arith::adders::Accumulator;
+            let mut t = Table::new("Ablation — accumulator width policy (SA-OS)")
+                .header(&["S", "16+log2S bits", "area/PE", "fixed-24 area/PE", "penalty"]);
+            for s in [16usize, 32, 64] {
+                let paper = Accumulator::for_array(s).cost();
+                let fixed = Accumulator { width: 24 }.cost();
+                t.row(vec![
+                    s.to_string(),
+                    Accumulator::for_array(s).width.to_string(),
+                    f(paper.area_um2, 1),
+                    f(fixed.area_um2, 1),
+                    pct(fixed.area_um2 / paper.area_um2 - 1.0),
+                ]);
+            }
+            print!("{}", t.render());
+        }
+        "segmented" => {
+            use ent::encoding::ent::segmented;
+            let mut t = Table::new("Ablation — segmented carry chain (width 32)")
+                .header(&["segment", "area µm²", "delay ns", "power µW"]);
+            for seg in [1usize, 2, 4, 8, 15] {
+                let c = segmented::encoder_cost(32, seg);
+                t.row(vec![
+                    seg.to_string(),
+                    f(c.area_um2, 1),
+                    f(c.delay_ns, 2),
+                    f(c.power_uw, 1),
+                ]);
+            }
+            print!("{}", t.render());
+        }
+        "batching" => {
+            use ent::coordinator::batcher::BatchPolicy;
+            use ent::coordinator::ModelSpec;
+            let model = ModelSpec::tinynet();
+            let p = BatchPolicy::default();
+            let mut t = Table::new("Ablation — batching policy padding waste")
+                .header(&["queued", "picked batch", "padding waste"]);
+            for q in 1..=10usize {
+                t.row(vec![
+                    q.to_string(),
+                    p.pick_batch(&model, q).to_string(),
+                    pct(p.padding_waste(&model, q)),
+                ]);
+            }
+            print!("{}", t.render());
+        }
+        other => anyhow::bail!("unknown ablation '{other}'"),
+    }
+    Ok(())
+}
+
+fn cmd_selftest() -> ent::Result<()> {
+    use ent::arith::multiplier::{MultKind, Multiplier};
+    // Exhaustive INT8 through the RME (hot-path) datapath.
+    let m = Multiplier::new(MultKind::EntRme, 8);
+    for a in -128i64..=127 {
+        for b in -128i64..=127 {
+            anyhow::ensure!(m.mul(a, b) == a * b, "mismatch at {a}x{b}");
+        }
+    }
+    println!("selftest: 65,536 exhaustive INT8 products exact through EN-T datapath");
+    // One tiled matmul per arch.
+    let mut rng = Rng::new(1);
+    for arch in ALL_ARCHS {
+        let size = if arch == ArchKind::Cube3d { 4 } else { 8 };
+        let tcu = Tcu::new(arch, size, Variant::EntOurs);
+        let (mm, kk, nn) = (9, 17, 11);
+        let a = rng.i8_vec(mm * kk);
+        let b = rng.i8_vec(kk * nn);
+        anyhow::ensure!(
+            ent::sim::tiled_matmul(&tcu, &a, &b, mm, kk, nn)
+                == ent::arch::gemm_ref(&a, &b, mm, kk, nn),
+            "tiled matmul mismatch on {}",
+            arch.name()
+        );
+        println!("selftest: {} dataflow exact", arch.name());
+    }
+    println!("selftest: PASS");
+    Ok(())
+}

@@ -1,0 +1,135 @@
+//! DenseNet-121/161 (Huang et al.) — densely connected blocks with
+//! 1×1 bottlenecks and transition layers. These are the paper's
+//! memory-intensive benchmarks (Fig 9(c)): many small convs over
+//! ever-growing concatenated feature maps.
+
+use super::{conv, Layer, Network};
+
+/// One dense layer: BN→1×1 (4k bottleneck) → BN→3×3 (k outputs).
+fn dense_layer(layers: &mut Vec<Layer>, id: String, cin: usize, growth: usize, hw: usize) {
+    layers.push(conv(format!("{id}.bottleneck"), cin, 4 * growth, 1, 1, 0, hw));
+    layers.push(conv(format!("{id}.conv"), 4 * growth, growth, 3, 1, 1, hw));
+    layers.push(Layer::Concat {
+        name: format!("{id}.cat"),
+        ch: cin + growth,
+        hw,
+    });
+}
+
+/// Transition: 1×1 halving channels + 2×2 avg pool.
+fn transition(layers: &mut Vec<Layer>, id: String, cin: usize, hw: usize) -> (usize, usize) {
+    let cout = cin / 2;
+    layers.push(conv(format!("{id}.conv"), cin, cout, 1, 1, 0, hw));
+    layers.push(Layer::Pool {
+        name: format!("{id}.pool"),
+        ch: cout,
+        kernel: 2,
+        stride: 2,
+        in_hw: hw,
+    });
+    (cout, hw / 2)
+}
+
+fn densenet(
+    name: &'static str,
+    init_ch: usize,
+    growth: usize,
+    blocks: [usize; 4],
+) -> Network {
+    let mut layers = Vec::new();
+    layers.push(conv("conv0", 3, init_ch, 7, 2, 3, 224));
+    layers.push(Layer::Pool {
+        name: "pool0".into(),
+        ch: init_ch,
+        kernel: 3,
+        stride: 2,
+        in_hw: 112,
+    });
+    let mut ch = init_ch;
+    let mut hw = 56;
+    for (bi, &nlayers) in blocks.iter().enumerate() {
+        for li in 0..nlayers {
+            dense_layer(&mut layers, format!("block{}.{}", bi + 1, li), ch, growth, hw);
+            ch += growth;
+        }
+        if bi + 1 < blocks.len() {
+            let (c2, h2) = transition(&mut layers, format!("trans{}", bi + 1), ch, hw);
+            ch = c2;
+            hw = h2;
+        }
+    }
+    layers.push(Layer::GlobalPool {
+        name: "avgpool".into(),
+        ch,
+        in_hw: hw,
+    });
+    layers.push(Layer::Fc {
+        name: "fc".into(),
+        cin: ch,
+        cout: 1000,
+    });
+    Network {
+        name,
+        input_hw: 224,
+        layers,
+    }
+}
+
+pub fn densenet121() -> Network {
+    densenet("DenseNet121", 64, 32, [6, 12, 24, 16])
+}
+
+pub fn densenet161() -> Network {
+    densenet("DenseNet161", 96, 48, [6, 12, 36, 24])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn densenet121_parameters_and_macs() {
+        let n = densenet121();
+        let p = n.total_params_m();
+        // Torchvision 7.98 M incl. BN (~0.3 M); weights-only ≈ 7.7 M.
+        assert!((p - 7.7).abs() / 7.7 < 0.05, "params {p}M");
+        let g = n.total_macs() as f64 / 1e9;
+        assert!((g - 2.87).abs() / 2.87 < 0.05, "GMACs {g}");
+    }
+
+    #[test]
+    fn densenet161_parameters() {
+        let p = densenet161().total_params_m();
+        // Torchvision 28.68 M incl. BN; weights-only ≈ 28.0 M.
+        assert!((p - 28.0).abs() / 28.0 < 0.05, "params {p}M");
+    }
+
+    #[test]
+    fn final_channel_counts() {
+        // DenseNet121 ends at 1024 channels, 161 at 2208.
+        let last_fc = |n: &Network| {
+            n.layers
+                .iter()
+                .find_map(|l| match l {
+                    Layer::Fc { cin, .. } => Some(*cin),
+                    _ => None,
+                })
+                .unwrap()
+        };
+        assert_eq!(last_fc(&densenet121()), 1024);
+        assert_eq!(last_fc(&densenet161()), 2208);
+    }
+
+    #[test]
+    fn memory_intensity_exceeds_resnet() {
+        // The paper's Fig 9(c) point: DenseNet moves more activation
+        // bytes per MAC than ResNet.
+        let act_per_mac = |n: &Network| {
+            let acts: u64 = n.layers.iter().map(|l| l.out_bytes()).sum();
+            acts as f64 / n.total_macs() as f64
+        };
+        let d = act_per_mac(&densenet121());
+        let r = act_per_mac(&super::super::resnet::resnet50());
+        assert!(d > 1.4 * r, "densenet {d} vs resnet {r}");
+    }
+}

@@ -1,0 +1,217 @@
+//! Inception_V3 (Szegedy et al.), torchvision topology at 299×299,
+//! auxiliary classifier excluded (inference).
+
+use super::{conv, conv_rect, Layer, Network};
+
+fn pool_branch_conv(layers: &mut Vec<Layer>, id: &str, cin: usize, cout: usize, hw: usize) {
+    // 3×3 stride-1 avg pool feeding a 1×1 conv.
+    layers.push(Layer::Pool {
+        name: format!("{id}.pool"),
+        ch: cin,
+        kernel: 3,
+        stride: 1,
+        in_hw: hw + 2, // same-padded stride-1 window: output hw preserved
+    });
+    layers.push(conv(format!("{id}.pool_proj"), cin, cout, 1, 1, 0, hw));
+}
+
+/// InceptionA (35²): returns output channels.
+fn block_a(layers: &mut Vec<Layer>, id: &str, cin: usize, pool_features: usize, hw: usize) -> usize {
+    layers.push(conv(format!("{id}.b1x1"), cin, 64, 1, 1, 0, hw));
+    layers.push(conv(format!("{id}.b5x5_1"), cin, 48, 1, 1, 0, hw));
+    layers.push(conv(format!("{id}.b5x5_2"), 48, 64, 5, 1, 2, hw));
+    layers.push(conv(format!("{id}.b3x3dbl_1"), cin, 64, 1, 1, 0, hw));
+    layers.push(conv(format!("{id}.b3x3dbl_2"), 64, 96, 3, 1, 1, hw));
+    layers.push(conv(format!("{id}.b3x3dbl_3"), 96, 96, 3, 1, 1, hw));
+    pool_branch_conv(layers, id, cin, pool_features, hw);
+    let out = 64 + 64 + 96 + pool_features;
+    layers.push(Layer::Concat {
+        name: format!("{id}.cat"),
+        ch: out,
+        hw,
+    });
+    out
+}
+
+/// InceptionB (35→17 reduction).
+fn block_b(layers: &mut Vec<Layer>, id: &str, cin: usize, hw: usize) -> usize {
+    layers.push(conv(format!("{id}.b3x3"), cin, 384, 3, 2, 0, hw));
+    layers.push(conv(format!("{id}.b3x3dbl_1"), cin, 64, 1, 1, 0, hw));
+    layers.push(conv(format!("{id}.b3x3dbl_2"), 64, 96, 3, 1, 1, hw));
+    layers.push(conv(format!("{id}.b3x3dbl_3"), 96, 96, 3, 2, 0, hw));
+    layers.push(Layer::Pool {
+        name: format!("{id}.pool"),
+        ch: cin,
+        kernel: 3,
+        stride: 2,
+        in_hw: hw,
+    });
+    let out = 384 + 96 + cin;
+    layers.push(Layer::Concat {
+        name: format!("{id}.cat"),
+        ch: out,
+        hw: (hw - 3) / 2 + 1,
+    });
+    out
+}
+
+/// InceptionC (17², factorised 7×7).
+fn block_c(layers: &mut Vec<Layer>, id: &str, cin: usize, c7: usize, hw: usize) -> usize {
+    layers.push(conv(format!("{id}.b1x1"), cin, 192, 1, 1, 0, hw));
+    layers.push(conv(format!("{id}.b7x7_1"), cin, c7, 1, 1, 0, hw));
+    layers.push(conv_rect(format!("{id}.b7x7_2"), c7, c7, 1, 7, hw));
+    layers.push(conv_rect(format!("{id}.b7x7_3"), c7, 192, 7, 1, hw));
+    layers.push(conv(format!("{id}.b7x7dbl_1"), cin, c7, 1, 1, 0, hw));
+    layers.push(conv_rect(format!("{id}.b7x7dbl_2"), c7, c7, 7, 1, hw));
+    layers.push(conv_rect(format!("{id}.b7x7dbl_3"), c7, c7, 1, 7, hw));
+    layers.push(conv_rect(format!("{id}.b7x7dbl_4"), c7, c7, 7, 1, hw));
+    layers.push(conv_rect(format!("{id}.b7x7dbl_5"), c7, 192, 1, 7, hw));
+    pool_branch_conv(layers, id, cin, 192, hw);
+    layers.push(Layer::Concat {
+        name: format!("{id}.cat"),
+        ch: 768,
+        hw,
+    });
+    768
+}
+
+/// InceptionD (17→8 reduction).
+fn block_d(layers: &mut Vec<Layer>, id: &str, cin: usize, hw: usize) -> usize {
+    layers.push(conv(format!("{id}.b3x3_1"), cin, 192, 1, 1, 0, hw));
+    layers.push(conv(format!("{id}.b3x3_2"), 192, 320, 3, 2, 0, hw));
+    layers.push(conv(format!("{id}.b7x7x3_1"), cin, 192, 1, 1, 0, hw));
+    layers.push(conv_rect(format!("{id}.b7x7x3_2"), 192, 192, 1, 7, hw));
+    layers.push(conv_rect(format!("{id}.b7x7x3_3"), 192, 192, 7, 1, hw));
+    layers.push(conv(format!("{id}.b7x7x3_4"), 192, 192, 3, 2, 0, hw));
+    layers.push(Layer::Pool {
+        name: format!("{id}.pool"),
+        ch: cin,
+        kernel: 3,
+        stride: 2,
+        in_hw: hw,
+    });
+    let out = 320 + 192 + cin;
+    layers.push(Layer::Concat {
+        name: format!("{id}.cat"),
+        ch: out,
+        hw: (hw - 3) / 2 + 1,
+    });
+    out
+}
+
+/// InceptionE (8²).
+fn block_e(layers: &mut Vec<Layer>, id: &str, cin: usize, hw: usize) -> usize {
+    layers.push(conv(format!("{id}.b1x1"), cin, 320, 1, 1, 0, hw));
+    layers.push(conv(format!("{id}.b3x3_1"), cin, 384, 1, 1, 0, hw));
+    layers.push(conv_rect(format!("{id}.b3x3_2a"), 384, 384, 1, 3, hw));
+    layers.push(conv_rect(format!("{id}.b3x3_2b"), 384, 384, 3, 1, hw));
+    layers.push(conv(format!("{id}.b3x3dbl_1"), cin, 448, 1, 1, 0, hw));
+    layers.push(conv(format!("{id}.b3x3dbl_2"), 448, 384, 3, 1, 1, hw));
+    layers.push(conv_rect(format!("{id}.b3x3dbl_3a"), 384, 384, 1, 3, hw));
+    layers.push(conv_rect(format!("{id}.b3x3dbl_3b"), 384, 384, 3, 1, hw));
+    pool_branch_conv(layers, id, cin, 192, hw);
+    layers.push(Layer::Concat {
+        name: format!("{id}.cat"),
+        ch: 2048,
+        hw,
+    });
+    2048
+}
+
+pub fn inception_v3() -> Network {
+    let mut layers = Vec::new();
+    // Stem.
+    layers.push(conv("Conv2d_1a_3x3", 3, 32, 3, 2, 0, 299)); // → 149
+    layers.push(conv("Conv2d_2a_3x3", 32, 32, 3, 1, 0, 149)); // → 147
+    layers.push(conv("Conv2d_2b_3x3", 32, 64, 3, 1, 1, 147)); // → 147
+    layers.push(Layer::Pool {
+        name: "maxpool1".into(),
+        ch: 64,
+        kernel: 3,
+        stride: 2,
+        in_hw: 147,
+    }); // → 73
+    layers.push(conv("Conv2d_3b_1x1", 64, 80, 1, 1, 0, 73));
+    layers.push(conv("Conv2d_4a_3x3", 80, 192, 3, 1, 0, 73)); // → 71
+    layers.push(Layer::Pool {
+        name: "maxpool2".into(),
+        ch: 192,
+        kernel: 3,
+        stride: 2,
+        in_hw: 71,
+    }); // → 35
+
+    let mut ch = 192;
+    ch = block_a(&mut layers, "Mixed_5b", ch, 32, 35);
+    ch = block_a(&mut layers, "Mixed_5c", ch, 64, 35);
+    ch = block_a(&mut layers, "Mixed_5d", ch, 64, 35);
+    ch = block_b(&mut layers, "Mixed_6a", ch, 35); // → 17
+    ch = block_c(&mut layers, "Mixed_6b", ch, 128, 17);
+    ch = block_c(&mut layers, "Mixed_6c", ch, 160, 17);
+    ch = block_c(&mut layers, "Mixed_6d", ch, 160, 17);
+    ch = block_c(&mut layers, "Mixed_6e", ch, 192, 17);
+    ch = block_d(&mut layers, "Mixed_7a", ch, 17); // → 8
+    ch = block_e(&mut layers, "Mixed_7b", ch, 8);
+    ch = block_e(&mut layers, "Mixed_7c", ch, 8);
+
+    layers.push(Layer::GlobalPool {
+        name: "avgpool".into(),
+        ch,
+        in_hw: 8,
+    });
+    layers.push(Layer::Fc {
+        name: "fc".into(),
+        cin: 2048,
+        cout: 1000,
+    });
+    Network {
+        name: "Inception_V3",
+        input_hw: 299,
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parameter_count() {
+        // Torchvision (aux_logits excluded): 23.83 M incl. BN; weights
+        // only ≈ 23.6 M.
+        let p = inception_v3().total_params_m();
+        assert!((p - 23.6).abs() / 23.6 < 0.03, "params {p}M");
+    }
+
+    #[test]
+    fn mac_count() {
+        // ≈ 5.7 GMAC at 299².
+        let g = inception_v3().total_macs() as f64 / 1e9;
+        assert!((g - 5.7).abs() / 5.7 < 0.06, "GMACs {g}");
+    }
+
+    #[test]
+    fn block_channel_progression() {
+        let n = inception_v3();
+        // Mixed_5b..5d produce 256, 288, 288; Mixed_6a → 768; 7a → 1280.
+        let cats: Vec<usize> = n
+            .layers
+            .iter()
+            .filter_map(|l| match l {
+                Layer::Concat { ch, .. } => Some(*ch),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(cats, vec![256, 288, 288, 768, 768, 768, 768, 768, 1280, 2048, 2048]);
+    }
+
+    #[test]
+    fn rect_convs_preserve_resolution() {
+        let n = inception_v3();
+        for l in &n.layers {
+            if let Layer::Conv { kw: Some(_), in_hw, .. } = l {
+                assert_eq!(l.out_hw(), *in_hw, "{}", l.name());
+            }
+        }
+    }
+}

@@ -1,0 +1,97 @@
+//! MobileNetV1 (Howard et al.) — depthwise-separable stacks. Not one of
+//! the paper's eight headline networks, but §4.4 name-checks it for the
+//! Fig 9(c) observation that depthwise-heavy nets push the memory share
+//! of SoC energy up (while staying ≤ 25 %).
+
+use super::{conv, Layer, Network};
+
+fn dw_separable(
+    layers: &mut Vec<Layer>,
+    id: &str,
+    cin: usize,
+    cout: usize,
+    stride: usize,
+    hw: usize,
+) -> usize {
+    layers.push(Layer::Conv {
+        name: format!("{id}.dw"),
+        cin,
+        cout: cin,
+        kernel: 3,
+        stride,
+        pad: 1,
+        in_hw: hw,
+        groups: cin,
+        relu: true,
+        kw: None,
+    });
+    let hw2 = layers.last().unwrap().out_hw();
+    layers.push(conv(format!("{id}.pw"), cin, cout, 1, 1, 0, hw2));
+    hw2
+}
+
+pub fn mobilenet_v1() -> Network {
+    let mut layers = Vec::new();
+    layers.push(conv("conv0", 3, 32, 3, 2, 1, 224)); // → 112
+    let mut hw = 112;
+    let plan: [(usize, usize, usize); 13] = [
+        (32, 64, 1),
+        (64, 128, 2),
+        (128, 128, 1),
+        (128, 256, 2),
+        (256, 256, 1),
+        (256, 512, 2),
+        (512, 512, 1),
+        (512, 512, 1),
+        (512, 512, 1),
+        (512, 512, 1),
+        (512, 512, 1),
+        (512, 1024, 2),
+        (1024, 1024, 1),
+    ];
+    for (i, &(cin, cout, stride)) in plan.iter().enumerate() {
+        hw = dw_separable(&mut layers, &format!("sep{}", i + 1), cin, cout, stride, hw);
+    }
+    layers.push(Layer::GlobalPool {
+        name: "avgpool".into(),
+        ch: 1024,
+        in_hw: hw,
+    });
+    layers.push(Layer::Fc {
+        name: "fc".into(),
+        cin: 1024,
+        cout: 1000,
+    });
+    Network {
+        name: "MobileNetV1",
+        input_hw: 224,
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parameter_count() {
+        // Reference: 4.23 M incl. BN; weights-only ≈ 4.2 M.
+        let p = mobilenet_v1().total_params_m();
+        assert!((p - 4.2).abs() / 4.2 < 0.03, "params {p}M");
+    }
+
+    #[test]
+    fn mac_count() {
+        // ≈ 0.57 GMAC at 224².
+        let g = mobilenet_v1().total_macs() as f64 / 1e9;
+        assert!((g - 0.57).abs() / 0.57 < 0.05, "GMACs {g}");
+    }
+
+    #[test]
+    fn depthwise_fraction_is_small_in_macs() {
+        // Depthwise convs are ~3 % of MACs but a large share of traffic —
+        // the structural reason MobileNet is memory-lean on compute.
+        let f = mobilenet_v1().grouped_mac_fraction();
+        assert!(f > 0.01 && f < 0.10, "dw mac fraction {f}");
+    }
+}

@@ -1,0 +1,348 @@
+//! Neural-network layer IR and the eight benchmark networks of §4.4
+//! (ResNet34/50/101, Inception_V3, DenseNet121/161, Vgg13/19), plus
+//! MobileNetV1 for the Fig 9(c) depthwise-separable remark.
+//!
+//! Layers carry everything the SoC simulator needs: the im2col-lowered
+//! GEMM shape, operand byte counts, and the post-processing (SIMD) op
+//! count. Batch-norm is folded into the preceding convolution
+//! (inference-time), contributing one scale+shift SIMD op per output
+//! element.
+
+pub mod densenet;
+pub mod inception;
+pub mod mobilenet;
+pub mod resnet;
+pub mod vgg;
+pub mod zoo;
+
+use crate::sim::GemmShape;
+
+/// One inference-relevant layer.
+#[derive(Clone, Debug)]
+pub enum Layer {
+    /// 2D convolution (+folded BN +activation), im2col-lowered.
+    Conv {
+        name: String,
+        cin: usize,
+        cout: usize,
+        kernel: usize,
+        stride: usize,
+        pad: usize,
+        /// Input spatial size (H = W assumed; all eight nets are square).
+        in_hw: usize,
+        /// Channel groups (1 = dense, cin = depthwise).
+        groups: usize,
+        /// Activation applied by the SIMD engine afterwards.
+        relu: bool,
+        /// Rectangular kernel width for Inception's 1×7 / 7×1 factorised
+        /// convs: `Some(kw)` means the kernel is `kernel × kw`, stride 1,
+        /// "same" padding (output size preserved).
+        kw: Option<usize>,
+    },
+    /// Fully connected.
+    Fc {
+        name: String,
+        cin: usize,
+        cout: usize,
+    },
+    /// Max/avg pooling (runs on the SIMD vector engine).
+    Pool {
+        name: String,
+        ch: usize,
+        kernel: usize,
+        stride: usize,
+        in_hw: usize,
+    },
+    /// Global average pool.
+    GlobalPool { name: String, ch: usize, in_hw: usize },
+    /// Residual elementwise add (SIMD).
+    Eltwise { name: String, ch: usize, hw: usize },
+    /// Channel concatenation (free at the buffer level, listed so the
+    /// layer walk is complete).
+    Concat { name: String, ch: usize, hw: usize },
+}
+
+impl Layer {
+    pub fn name(&self) -> &str {
+        match self {
+            Layer::Conv { name, .. }
+            | Layer::Fc { name, .. }
+            | Layer::Pool { name, .. }
+            | Layer::GlobalPool { name, .. }
+            | Layer::Eltwise { name, .. }
+            | Layer::Concat { name, .. } => name,
+        }
+    }
+
+    /// Output spatial size.
+    pub fn out_hw(&self) -> usize {
+        match self {
+            Layer::Conv {
+                kernel,
+                stride,
+                pad,
+                in_hw,
+                kw,
+                ..
+            } => {
+                if kw.is_some() {
+                    // Rectangular factorised convs are stride-1,
+                    // same-padded by construction.
+                    *in_hw
+                } else {
+                    (in_hw + 2 * pad - kernel) / stride + 1
+                }
+            }
+            Layer::Pool {
+                kernel,
+                stride,
+                in_hw,
+                ..
+            } => (in_hw - kernel) / stride + 1,
+            Layer::GlobalPool { .. } => 1,
+            Layer::Eltwise { hw, .. } | Layer::Concat { hw, .. } => *hw,
+            Layer::Fc { .. } => 1,
+        }
+    }
+
+    /// Output channels.
+    pub fn out_ch(&self) -> usize {
+        match self {
+            Layer::Conv { cout, .. } => *cout,
+            Layer::Fc { cout, .. } => *cout,
+            Layer::Pool { ch, .. }
+            | Layer::GlobalPool { ch, .. }
+            | Layer::Eltwise { ch, .. }
+            | Layer::Concat { ch, .. } => *ch,
+        }
+    }
+
+    /// The im2col-lowered GEMM shape, if this layer runs on the TCU.
+    pub fn gemm(&self) -> Option<GemmShape> {
+        match self {
+            Layer::Conv {
+                cin,
+                cout,
+                kernel,
+                groups,
+                kw,
+                ..
+            } => {
+                let hw = self.out_hw();
+                let kw = kw.unwrap_or(*kernel);
+                Some(GemmShape::new(
+                    cout / groups.min(cout),
+                    (cin / groups) * kernel * kw,
+                    hw * hw,
+                ))
+            }
+            Layer::Fc { cin, cout, .. } => Some(GemmShape::new(*cout, *cin, 1)),
+            _ => None,
+        }
+    }
+
+    /// For grouped convs the GEMM repeats once per group.
+    pub fn gemm_repeats(&self) -> u64 {
+        match self {
+            Layer::Conv { groups, .. } => *groups as u64,
+            _ => 1,
+        }
+    }
+
+    /// Exact MAC count.
+    pub fn macs(&self) -> u64 {
+        self.gemm()
+            .map(|g| g.macs() * self.gemm_repeats())
+            .unwrap_or(0)
+    }
+
+    /// Weight bytes (INT8).
+    pub fn weight_bytes(&self) -> u64 {
+        match self {
+            Layer::Conv {
+                cin,
+                cout,
+                kernel,
+                groups,
+                kw,
+                ..
+            } => (cout * (cin / groups) * kernel * kw.unwrap_or(*kernel)) as u64,
+            Layer::Fc { cin, cout, .. } => (cin * cout) as u64,
+            _ => 0,
+        }
+    }
+
+    /// Input activation bytes (INT8, pre-im2col).
+    pub fn in_bytes(&self) -> u64 {
+        match self {
+            Layer::Conv { cin, in_hw, .. } => (cin * in_hw * in_hw) as u64,
+            Layer::Fc { cin, .. } => *cin as u64,
+            Layer::Pool { ch, in_hw, .. } | Layer::GlobalPool { ch, in_hw, .. } => {
+                (ch * in_hw * in_hw) as u64
+            }
+            Layer::Eltwise { ch, hw, .. } => 2 * (ch * hw * hw) as u64,
+            Layer::Concat { ch, hw, .. } => (ch * hw * hw) as u64,
+        }
+    }
+
+    /// Output activation bytes (INT8 after requantization).
+    pub fn out_bytes(&self) -> u64 {
+        (self.out_ch() * self.out_hw() * self.out_hw()) as u64
+    }
+
+    /// SIMD vector-engine ops: requantization + activation for TCU
+    /// layers, window reductions for pooling, adds for eltwise.
+    pub fn simd_ops(&self) -> u64 {
+        match self {
+            Layer::Conv { relu, .. } => {
+                // Requantize (scale+shift) each output + optional ReLU.
+                self.out_bytes() * if *relu { 3 } else { 2 }
+            }
+            Layer::Fc { .. } => self.out_bytes() * 2,
+            Layer::Pool { kernel, .. } => self.out_bytes() * (kernel * kernel) as u64,
+            Layer::GlobalPool { ch, in_hw, .. } => (ch * in_hw * in_hw) as u64,
+            Layer::Eltwise { ch, hw, .. } => (ch * hw * hw) as u64,
+            Layer::Concat { .. } => 0,
+        }
+    }
+}
+
+/// A full network: ordered layers over a (3, H, W) input frame.
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub name: &'static str,
+    /// Input spatial resolution (square frames, 3 channels — the paper's
+    /// single-frame benchmark is (1, 3, 224, 224); Inception uses 299).
+    pub input_hw: usize,
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    pub fn total_weight_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.weight_bytes()).sum()
+    }
+
+    pub fn total_params_m(&self) -> f64 {
+        self.total_weight_bytes() as f64 / 1e6
+    }
+
+    /// Fraction of MACs in depthwise/grouped convolutions — what drives
+    /// the paper's Fig 9(c) memory-share remark.
+    pub fn grouped_mac_fraction(&self) -> f64 {
+        let grouped: u64 = self
+            .layers
+            .iter()
+            .filter(|l| matches!(l, Layer::Conv { groups, .. } if *groups > 1))
+            .map(|l| l.macs())
+            .sum();
+        grouped as f64 / self.total_macs() as f64
+    }
+}
+
+/// Helper used by the family builders.
+pub(crate) fn conv(
+    name: impl Into<String>,
+    cin: usize,
+    cout: usize,
+    kernel: usize,
+    stride: usize,
+    pad: usize,
+    in_hw: usize,
+) -> Layer {
+    Layer::Conv {
+        name: name.into(),
+        cin,
+        cout,
+        kernel,
+        stride,
+        pad,
+        in_hw,
+        groups: 1,
+        relu: true,
+        kw: None,
+    }
+}
+
+/// Rectangular (kh × kw) stride-1 same-padded convolution — Inception's
+/// factorised 1×7 / 7×1 / 1×3 / 3×1 layers.
+pub(crate) fn conv_rect(
+    name: impl Into<String>,
+    cin: usize,
+    cout: usize,
+    kh: usize,
+    kw: usize,
+    in_hw: usize,
+) -> Layer {
+    Layer::Conv {
+        name: name.into(),
+        cin,
+        cout,
+        kernel: kh,
+        stride: 1,
+        pad: 0,
+        in_hw,
+        groups: 1,
+        relu: true,
+        kw: Some(kw),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shapes() {
+        let c = conv("c1", 3, 64, 7, 2, 3, 224);
+        assert_eq!(c.out_hw(), 112);
+        let g = c.gemm().unwrap();
+        assert_eq!((g.m, g.k, g.n), (64, 147, 112 * 112));
+        assert_eq!(c.macs(), 64 * 147 * 112 * 112);
+        assert_eq!(c.weight_bytes(), 64 * 3 * 49);
+    }
+
+    #[test]
+    fn depthwise_conv_shapes() {
+        let dw = Layer::Conv {
+            name: "dw".into(),
+            cin: 32,
+            cout: 32,
+            kernel: 3,
+            stride: 1,
+            pad: 1,
+            in_hw: 112,
+            groups: 32,
+            relu: true,
+            kw: None,
+        };
+        let g = dw.gemm().unwrap();
+        assert_eq!((g.m, g.k, g.n), (1, 9, 112 * 112));
+        assert_eq!(dw.gemm_repeats(), 32);
+        assert_eq!(dw.macs(), 32 * 9 * 112 * 112);
+        assert_eq!(dw.weight_bytes(), 32 * 9);
+    }
+
+    #[test]
+    fn fc_and_pool_shapes() {
+        let fc = Layer::Fc {
+            name: "fc".into(),
+            cin: 2048,
+            cout: 1000,
+        };
+        assert_eq!(fc.macs(), 2048 * 1000);
+        let pool = Layer::Pool {
+            name: "p".into(),
+            ch: 64,
+            kernel: 2,
+            stride: 2,
+            in_hw: 112,
+        };
+        assert_eq!(pool.out_hw(), 56);
+        assert_eq!(pool.macs(), 0);
+        assert!(pool.simd_ops() > 0);
+    }
+}

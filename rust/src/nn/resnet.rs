@@ -1,0 +1,168 @@
+//! ResNet-34/50/101 (He et al.) — basic and bottleneck residual stacks.
+
+use super::{conv, Layer, Network};
+
+fn stem(layers: &mut Vec<Layer>) {
+    layers.push(conv("conv1", 3, 64, 7, 2, 3, 224));
+    layers.push(Layer::Pool {
+        name: "maxpool".into(),
+        ch: 64,
+        kernel: 3,
+        stride: 2,
+        in_hw: 112, // effective 3x3/2 pool of the 112² stem output
+    });
+}
+
+/// Basic block: two 3×3 convs (ResNet-18/34).
+fn basic_block(layers: &mut Vec<Layer>, id: String, cin: usize, cout: usize, stride: usize, hw: usize) -> usize {
+    layers.push(conv(format!("{id}.conv1"), cin, cout, 3, stride, 1, hw));
+    let hw2 = layers.last().unwrap().out_hw();
+    layers.push(conv(format!("{id}.conv2"), cout, cout, 3, 1, 1, hw2));
+    if stride != 1 || cin != cout {
+        layers.push(conv(format!("{id}.down"), cin, cout, 1, stride, 0, hw));
+    }
+    layers.push(Layer::Eltwise {
+        name: format!("{id}.add"),
+        ch: cout,
+        hw: hw2,
+    });
+    hw2
+}
+
+/// Bottleneck block: 1×1 reduce, 3×3, 1×1 expand ×4 (ResNet-50/101/152).
+fn bottleneck(layers: &mut Vec<Layer>, id: String, cin: usize, width: usize, stride: usize, hw: usize) -> usize {
+    let cout = width * 4;
+    layers.push(conv(format!("{id}.conv1"), cin, width, 1, 1, 0, hw));
+    layers.push(conv(format!("{id}.conv2"), width, width, 3, stride, 1, hw));
+    let hw2 = layers.last().unwrap().out_hw();
+    layers.push(conv(format!("{id}.conv3"), width, cout, 1, 1, 0, hw2));
+    if stride != 1 || cin != cout {
+        layers.push(conv(format!("{id}.down"), cin, cout, 1, stride, 0, hw));
+    }
+    layers.push(Layer::Eltwise {
+        name: format!("{id}.add"),
+        ch: cout,
+        hw: hw2,
+    });
+    hw2
+}
+
+fn tail(layers: &mut Vec<Layer>, ch: usize, hw: usize) {
+    layers.push(Layer::GlobalPool {
+        name: "avgpool".into(),
+        ch,
+        in_hw: hw,
+    });
+    layers.push(Layer::Fc {
+        name: "fc".into(),
+        cin: ch,
+        cout: 1000,
+    });
+}
+
+pub fn resnet34() -> Network {
+    let mut layers = Vec::new();
+    stem(&mut layers);
+    let mut hw = 56;
+    let mut cin = 64;
+    for (stage, (&blocks, &width)) in [3usize, 4, 6, 3].iter().zip(&[64usize, 128, 256, 512]).enumerate() {
+        for b in 0..blocks {
+            let stride = if b == 0 && stage > 0 { 2 } else { 1 };
+            hw = basic_block(
+                &mut layers,
+                format!("layer{}.{}", stage + 1, b),
+                cin,
+                width,
+                stride,
+                hw,
+            );
+            cin = width;
+        }
+    }
+    tail(&mut layers, 512, hw);
+    Network {
+        name: "ResNet34",
+        input_hw: 224,
+        layers,
+    }
+}
+
+fn resnet_bottleneck(name: &'static str, blocks: [usize; 4]) -> Network {
+    let mut layers = Vec::new();
+    stem(&mut layers);
+    let mut hw = 56;
+    let mut cin = 64;
+    for (stage, (&nblocks, &width)) in blocks.iter().zip(&[64usize, 128, 256, 512]).enumerate() {
+        for b in 0..nblocks {
+            let stride = if b == 0 && stage > 0 { 2 } else { 1 };
+            hw = bottleneck(
+                &mut layers,
+                format!("layer{}.{}", stage + 1, b),
+                cin,
+                width,
+                stride,
+                hw,
+            );
+            cin = width * 4;
+        }
+    }
+    tail(&mut layers, 2048, hw);
+    Network {
+        name,
+        input_hw: 224,
+        layers,
+    }
+}
+
+pub fn resnet50() -> Network {
+    resnet_bottleneck("ResNet50", [3, 4, 6, 3])
+}
+
+pub fn resnet101() -> Network {
+    resnet_bottleneck("ResNet101", [3, 4, 23, 3])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet50_parameters_and_macs() {
+        let n = resnet50();
+        let p = n.total_params_m();
+        // Torchvision 25.56 M incl. BN/bias; weights-only ≈ 25.45 M.
+        assert!((p - 25.5).abs() / 25.5 < 0.02, "params {p}M");
+        let g = n.total_macs() as f64 / 1e9;
+        assert!((g - 4.1).abs() / 4.1 < 0.05, "GMACs {g}");
+    }
+
+    #[test]
+    fn resnet34_parameters_and_macs() {
+        let n = resnet34();
+        let p = n.total_params_m();
+        assert!((p - 21.8).abs() / 21.8 < 0.02, "params {p}M");
+        let g = n.total_macs() as f64 / 1e9;
+        assert!((g - 3.6).abs() / 3.6 < 0.05, "GMACs {g}");
+    }
+
+    #[test]
+    fn resnet101_parameters() {
+        let p = resnet101().total_params_m();
+        assert!((p - 44.5).abs() / 44.5 < 0.02, "params {p}M");
+    }
+
+    #[test]
+    fn stage_resolutions() {
+        // Final feature map must be 7×7 before global pooling.
+        for net in [resnet34(), resnet50(), resnet101()] {
+            let last_conv_hw = net
+                .layers
+                .iter()
+                .filter(|l| matches!(l, Layer::Conv { .. }))
+                .next_back()
+                .unwrap()
+                .out_hw();
+            assert_eq!(last_conv_hw, 7, "{}", net.name);
+        }
+    }
+}

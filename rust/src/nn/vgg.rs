@@ -1,0 +1,106 @@
+//! VGG-13 and VGG-19 (Simonyan & Zisserman) — the all-3×3 plain stacks.
+
+use super::{conv, Layer, Network};
+
+/// Build a VGG variant from the per-stage conv counts.
+fn vgg(name: &'static str, convs_per_stage: [usize; 5]) -> Network {
+    let widths = [64usize, 128, 256, 512, 512];
+    let mut layers = Vec::new();
+    let mut hw = 224usize;
+    let mut cin = 3usize;
+    for (stage, (&reps, &width)) in convs_per_stage.iter().zip(&widths).enumerate() {
+        for r in 0..reps {
+            layers.push(conv(
+                format!("conv{}_{}", stage + 1, r + 1),
+                cin,
+                width,
+                3,
+                1,
+                1,
+                hw,
+            ));
+            cin = width;
+        }
+        layers.push(Layer::Pool {
+            name: format!("pool{}", stage + 1),
+            ch: width,
+            kernel: 2,
+            stride: 2,
+            in_hw: hw,
+        });
+        hw /= 2;
+    }
+    layers.push(Layer::Fc {
+        name: "fc6".into(),
+        cin: 512 * 7 * 7,
+        cout: 4096,
+    });
+    layers.push(Layer::Fc {
+        name: "fc7".into(),
+        cin: 4096,
+        cout: 4096,
+    });
+    layers.push(Layer::Fc {
+        name: "fc8".into(),
+        cin: 4096,
+        cout: 1000,
+    });
+    Network {
+        name,
+        input_hw: 224,
+        layers,
+    }
+}
+
+pub fn vgg13() -> Network {
+    vgg("Vgg13", [2, 2, 2, 2, 2])
+}
+
+pub fn vgg19() -> Network {
+    vgg("Vgg19", [2, 2, 4, 4, 4])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg19_parameter_count() {
+        // Torchvision: 143.67 M params (weights incl. fc biases ≈ 143.65 M
+        // weights-only; we count weights only — within 1 %).
+        let n = vgg19();
+        let p = n.total_params_m();
+        assert!((p - 143.6).abs() / 143.6 < 0.01, "params {p}M");
+    }
+
+    #[test]
+    fn vgg13_parameter_count() {
+        // Torchvision: 133.05 M.
+        let p = vgg13().total_params_m();
+        assert!((p - 133.0).abs() / 133.0 < 0.01, "params {p}M");
+    }
+
+    #[test]
+    fn vgg19_mac_count() {
+        // ≈ 19.6 GMAC at 224².
+        let g = vgg19().total_macs() as f64 / 1e9;
+        assert!((g - 19.6).abs() / 19.6 < 0.03, "GMACs {g}");
+    }
+
+    #[test]
+    fn layer_chain_is_consistent() {
+        // Every conv's input HW must equal the previous producer's
+        // output HW.
+        let n = vgg19();
+        let mut hw = 224;
+        for l in &n.layers {
+            if let Layer::Conv { in_hw, .. } = l {
+                assert_eq!(*in_hw, hw, "layer {}", l.name());
+            }
+            if matches!(l, Layer::Conv { .. } | Layer::Pool { .. }) {
+                hw = l.out_hw();
+            }
+        }
+        assert_eq!(hw, 7);
+    }
+}

@@ -1,0 +1,102 @@
+//! The model zoo: the paper's eight benchmark networks (§4.4) plus
+//! MobileNetV1 for the Fig 9(c) remark.
+
+use super::{densenet, inception, mobilenet, resnet, vgg, Network};
+
+/// The eight networks of Figs 9–12, in the paper's listing order.
+pub fn paper_networks() -> Vec<Network> {
+    vec![
+        resnet::resnet34(),
+        resnet::resnet50(),
+        resnet::resnet101(),
+        inception::inception_v3(),
+        densenet::densenet121(),
+        densenet::densenet161(),
+        vgg::vgg13(),
+        vgg::vgg19(),
+    ]
+}
+
+/// All networks including the depthwise-separable extra.
+pub fn all_networks() -> Vec<Network> {
+    let mut v = paper_networks();
+    v.push(mobilenet::mobilenet_v1());
+    v
+}
+
+/// The quickstart/serving CNN — must stay in sync with the JAX model in
+/// `python/compile/model.py` (the L2 layer AOT-exports it; the
+/// coordinator's digital twin estimates its energy with this table).
+pub fn tinynet() -> Network {
+    use super::{conv, Layer};
+    let layers = vec![
+        conv("conv1", 3, 16, 3, 1, 1, 32),
+        conv("conv2", 16, 32, 3, 2, 1, 32),
+        conv("conv3", 32, 64, 3, 2, 1, 16),
+        Layer::GlobalPool {
+            name: "avgpool".into(),
+            ch: 64,
+            in_hw: 8,
+        },
+        Layer::Fc {
+            name: "fc".into(),
+            cin: 64,
+            cout: 10,
+        },
+    ];
+    Network {
+        name: "tinynet",
+        input_hw: 32,
+        layers,
+    }
+}
+
+/// Look a network up by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<Network> {
+    let lower = name.to_lowercase();
+    if lower == "tinynet" {
+        return Some(tinynet());
+    }
+    all_networks()
+        .into_iter()
+        .find(|n| n.name.to_lowercase() == lower)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eight_paper_networks_in_order() {
+        let names: Vec<&str> = paper_networks().iter().map(|n| n.name).collect();
+        assert_eq!(
+            names,
+            vec![
+                "ResNet34",
+                "ResNet50",
+                "ResNet101",
+                "Inception_V3",
+                "DenseNet121",
+                "DenseNet161",
+                "Vgg13",
+                "Vgg19"
+            ]
+        );
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(by_name("resnet50").is_some());
+        assert!(by_name("VGG19").is_some());
+        assert!(by_name("nonexistent").is_none());
+    }
+
+    #[test]
+    fn every_network_has_nonzero_work() {
+        for n in all_networks() {
+            assert!(n.total_macs() > 100_000_000, "{}", n.name);
+            assert!(n.total_weight_bytes() > 1_000_000, "{}", n.name);
+            assert!(!n.layers.is_empty());
+        }
+    }
+}

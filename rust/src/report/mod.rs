@@ -1,0 +1,339 @@
+//! Report emitters — one function per table/figure of the paper's
+//! evaluation section. Each returns the rendered text (and the CLI adds
+//! `--json` mode on top). The `cargo bench` targets print exactly these,
+//! so "regenerate Table 1" is a single call.
+
+pub mod fig1;
+
+use crate::arch::{ArchKind, Tcu, ALL_ARCHS, ALL_SCALES};
+use crate::arith::multiplier::{MultKind, Multiplier};
+use crate::encoding::{ent::Ent, mbe::Mbe, Encoding};
+use crate::nn::zoo;
+use crate::pe::{Variant, ALL_VARIANTS};
+use crate::soc::{energy, Soc};
+use crate::util::table::{f, pct, Table};
+
+/// Table 1 — encoder and multiplier comparison (all three sub-tables).
+pub fn table1() -> String {
+    let mut out = String::new();
+
+    let mut t = Table::new("Table 1a — Single Encoder Comparison")
+        .header(&["Method", "AND", "NAND", "NOR", "XNOR", "Area/µm²"]);
+    let mbe = crate::encoding::mbe::unit_encoder_gates();
+    let ours = crate::encoding::ent::unit_encoder_gates();
+    use crate::gates::Gate::*;
+    for (name, gl) in [("MBE", mbe), ("Ours", ours)] {
+        t.row(vec![
+            name.into(),
+            gl.count(And2).to_string(),
+            gl.count(Nand2).to_string(),
+            gl.count(Nor2).to_string(),
+            gl.count(Xnor2).to_string(),
+            f(gl.cost().area_um2, 2),
+        ]);
+    }
+    out.push_str(&t.render());
+
+    let mut t = Table::new("\nTable 1b — Comparison of High Bit Encoders").header(&[
+        "Width", "Method", "Area/µm²", "Delay/ns", "Power/µW", "Number", "En-Width",
+    ]);
+    for width in [8usize, 10, 12, 14, 16, 18, 20, 24, 32] {
+        for (name, cost, shape) in [
+            ("MBE", Mbe.encoder_cost(width), Mbe.shape(width)),
+            ("Ours", Ent.encoder_cost(width), Ent.shape(width)),
+        ] {
+            t.row(vec![
+                width.to_string(),
+                name.into(),
+                f(cost.area_um2, 2),
+                f(cost.delay_ns, 2),
+                f(cost.power_uw, 2),
+                shape.encoders.to_string(),
+                shape.encoded_bits.to_string(),
+            ]);
+        }
+    }
+    out.push_str(&t.render());
+
+    let mut t = Table::new("\nTable 1c — Multiplier Performance Comparison (INT8)")
+        .header(&["Method", "Area/µm²", "Delay/ns", "Power/µW"]);
+    for kind in [
+        MultKind::DwIp,
+        MultKind::MbeInternal,
+        MultKind::EntInternal,
+        MultKind::EntRme,
+    ] {
+        let c = Multiplier::new(kind, 8).cost();
+        t.row(vec![
+            kind.name().into(),
+            f(c.area_um2, 1),
+            f(c.delay_ns, 2),
+            f(c.power_uw, 1),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push_str(
+        "\npaper Table 1c: DW IP 291.6/1.87/211.4  MBE 292.7/1.86/212.2  \
+         Ours 290.4/1.99/210.3  RME_Ours 264.4/1.63/188.9\n",
+    );
+    out
+}
+
+/// Fig 6 — TCU area (a–c) and power (d–f) across archs × sizes × variants.
+pub fn fig6() -> String {
+    let mut out = String::new();
+    for scale in ALL_SCALES {
+        let mut t = Table::new(format!("\nFig 6 — {} (area mm² / power mW)", scale.name()))
+            .header(&["arch", "variant", "area mm²", "Δarea", "power mW", "Δpower"]);
+        for arch in ALL_ARCHS {
+            let s = arch.size_for_scale(scale);
+            let base = Tcu::new(arch, s, Variant::Baseline).cost().total();
+            for variant in ALL_VARIANTS {
+                let c = Tcu::new(arch, s, variant).cost().total();
+                t.row(vec![
+                    arch.name().into(),
+                    variant.name().into(),
+                    f(c.area_um2 / 1e6, 3),
+                    pct(c.area_um2 / base.area_um2 - 1.0),
+                    f(c.power_uw / 1e3, 1),
+                    pct(c.power_uw / base.power_uw - 1.0),
+                ]);
+            }
+        }
+        out.push_str(&t.render());
+    }
+    out
+}
+
+/// Fig 7 — area/energy efficiency up-ratios vs computational scale.
+pub fn fig7() -> String {
+    let mut out = String::new();
+    for (metric, paper_avg) in [
+        ("area efficiency", [8.7, 12.2, 11.0]),
+        ("energy efficiency", [13.0, 17.5, 15.5]),
+    ] {
+        let mut t = Table::new(format!("\nFig 7 — {metric} up-ratio (EN-T Ours vs baseline)"))
+            .header(&["arch", "256 GOPS", "1 TOPS", "4 TOPS"]);
+        let mut avgs = [0.0f64; 3];
+        for arch in ALL_ARCHS {
+            let mut row = vec![arch.name().to_string()];
+            for (i, scale) in ALL_SCALES.iter().enumerate() {
+                let s = arch.size_for_scale(*scale);
+                let b = Tcu::new(arch, s, Variant::Baseline);
+                let e = Tcu::new(arch, s, Variant::EntOurs);
+                let up = if metric == "area efficiency" {
+                    e.area_efficiency() / b.area_efficiency() - 1.0
+                } else {
+                    e.energy_efficiency() / b.energy_efficiency() - 1.0
+                };
+                avgs[i] += up / ALL_ARCHS.len() as f64;
+                row.push(pct(up));
+            }
+            t.row(row);
+        }
+        t.row(vec![
+            "AVERAGE".into(),
+            pct(avgs[0]),
+            pct(avgs[1]),
+            pct(avgs[2]),
+        ]);
+        t.row(vec![
+            "paper avg".into(),
+            format!("+{}%", paper_avg[0]),
+            format!("+{}%", paper_avg[1]),
+            format!("+{}%", paper_avg[2]),
+        ]);
+        out.push_str(&t.render());
+    }
+    out
+}
+
+/// Table 2 — SoC component parameters (our model vs the paper).
+pub fn table2() -> String {
+    let soc = Soc::paper_config(ArchKind::SystolicOs, Variant::EntOurs);
+    let mut t = Table::new("Table 2 — On-chip Parameters of the SoC Benchmark")
+        .header(&["Component", "Config", "Area/µm²", "Power/W"]);
+    t.row(vec![
+        "Global Buffer".into(),
+        "256 KB".into(),
+        f(soc.global_buffer.area_um2, 0),
+        format!("r {} / w {}", soc.global_buffer.read_w, soc.global_buffer.write_w),
+    ]);
+    t.row(vec![
+        "Act/Weight Buffer".into(),
+        "64 KB ×2".into(),
+        f(soc.act_buffer.area_um2, 0),
+        format!("r {} / w {}", soc.act_buffer.read_w, soc.act_buffer.write_w),
+    ]);
+    t.row(vec![
+        "SIMD Vector Engine".into(),
+        "32 ALU TF32".into(),
+        f(soc.simd.area_um2, 0),
+        f(soc.simd.power_w, 4),
+    ]);
+    t.row(vec![
+        "Controller+Img2col".into(),
+        "×2".into(),
+        f(soc.controller.area_um2, 0),
+        f(soc.controller.power_w, 4),
+    ]);
+    let enc = Variant::EntOurs.column_encoder_cost(8);
+    t.row(vec![
+        "Encoder".into(),
+        "×32 (reg out)".into(),
+        f(enc.area_um2 * 32.0, 2),
+        f(enc.power_uw * 32.0 / 1e6, 5),
+    ]);
+    let tcu = soc.tcu_cost();
+    t.row(vec![
+        "TCU (SA-OS 32×32)".into(),
+        "1024 GOPS".into(),
+        f(tcu.area_um2, 0),
+        f(tcu.power_uw / 1e6, 4),
+    ]);
+    let mut s = t.render();
+    s.push_str("\npaper encoder row: 32 × → 1895.36 µm², 0.00089 W (our register-output model: activity-dependent)\n");
+    s
+}
+
+/// Fig 9 — normalized SoC energy fraction under the baseline TCU.
+pub fn fig9(arch: ArchKind) -> String {
+    let soc = Soc::paper_config(arch, Variant::Baseline);
+    let mut t = Table::new(format!(
+        "\nFig 9 — SoC energy fraction, baseline {} TCU",
+        arch.name()
+    ))
+    .header(&["network", "sram read", "sram write", "engines", "compute frac"]);
+    for net in zoo::all_networks() {
+        let (e, _) = energy::frame_energy(&soc, &net);
+        let tot = e.total_pj();
+        t.row(vec![
+            net.name.into(),
+            pct(e.sram_read_pj / tot),
+            pct(e.sram_write_pj / tot),
+            pct(e.compute_pj() / tot),
+            f(e.compute_fraction(), 3),
+        ]);
+    }
+    let mut s = t.render();
+    s.push_str("paper: engines take 80–94% across the eight CNNs; memory-heavy nets stay ≤ 25% memory\n");
+    s
+}
+
+/// Fig 10 — single-frame SoC inference energy, baseline vs EN-T.
+pub fn fig10() -> String {
+    let mut t = Table::new("\nFig 10 — Single-frame SoC energy (mJ)").header(&[
+        "network", "arch", "Baseline", "EN-T(MBE)", "EN-T(Ours)",
+    ]);
+    for net in zoo::paper_networks() {
+        for arch in ALL_ARCHS {
+            let mut row = vec![net.name.to_string(), arch.name().to_string()];
+            for variant in ALL_VARIANTS {
+                let soc = Soc::paper_config(arch, variant);
+                let (e, _) = energy::frame_energy(&soc, &net);
+                row.push(f(e.total_mj(), 2));
+            }
+            t.row(row);
+        }
+    }
+    t.render()
+}
+
+/// Fig 11 — SoC energy-reduction ratio of EN-T(Ours) vs baseline.
+pub fn fig11() -> String {
+    let mut t = Table::new("\nFig 11 — SoC energy reduction (EN-T Ours vs baseline)")
+        .header(&["arch", "min", "max", "paper range"]);
+    let paper = [
+        (ArchKind::Matrix2d, "15.1–15.9%"),
+        (ArchKind::SystolicOs, "11.3–12.8%"),
+        (ArchKind::SystolicWs, "10.2–11.7%"),
+        (ArchKind::Array1d2d, "14.0–16.0%"),
+        (ArchKind::Cube3d, "5.0–6.0%"),
+    ];
+    for (arch, prange) in paper {
+        let mut lo = f64::MAX;
+        let mut hi = f64::MIN;
+        for net in zoo::paper_networks() {
+            let r = energy::reduction_ratio(arch, &net);
+            lo = lo.min(r);
+            hi = hi.max(r);
+        }
+        t.row(vec![
+            arch.name().into(),
+            pct(lo),
+            pct(hi),
+            prange.into(),
+        ]);
+    }
+    t.render()
+}
+
+/// Fig 12 — area efficiency at TCU level vs SoC level.
+pub fn fig12() -> String {
+    let mut t = Table::new("\nFig 12 — Area-efficiency improvement: TCU vs SoC level")
+        .header(&["arch", "TCU-level", "SoC-level"]);
+    for arch in ALL_ARCHS {
+        let base = Soc::paper_config(arch, Variant::Baseline);
+        let ours = Soc::paper_config(arch, Variant::EntOurs);
+        let tcu_up = (base.tcu_cost().area_um2 / ours.tcu_cost().area_um2) - 1.0;
+        let soc_up = ours.area_efficiency() / base.area_efficiency() - 1.0;
+        t.row(vec![arch.name().into(), pct(tcu_up), pct(soc_up)]);
+    }
+    let mut s = t.render();
+    s.push_str(
+        "paper: SoC-level area benefit is diluted by SRAM/controller/SIMD — \
+         the main SoC advantage is the 10–16% inference-power reduction\n",
+    );
+    s
+}
+
+/// Everything at once (the `ent report all` target).
+pub fn all_reports() -> String {
+    let mut s = String::new();
+    s.push_str(&fig1::fig1());
+    s.push_str(&table1());
+    s.push_str(&fig6());
+    s.push_str(&fig7());
+    s.push_str(&table2());
+    s.push_str(&fig9(ArchKind::SystolicOs));
+    s.push_str(&fig10());
+    s.push_str(&fig11());
+    s.push_str(&fig12());
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_mentions_all_methods() {
+        let s = table1();
+        for m in ["MBE", "Ours", "DW IP", "RME_Ours"] {
+            assert!(s.contains(m), "missing {m}");
+        }
+    }
+
+    #[test]
+    fn fig7_has_average_rows() {
+        let s = fig7();
+        assert!(s.contains("AVERAGE"));
+        assert!(s.contains("paper avg"));
+    }
+
+    #[test]
+    fn fig11_covers_all_archs() {
+        let s = fig11();
+        for arch in ALL_ARCHS {
+            assert!(s.contains(arch.name()), "missing {}", arch.name());
+        }
+    }
+
+    #[test]
+    fn fig9_reports_every_network() {
+        let s = fig9(ArchKind::SystolicWs);
+        for net in zoo::paper_networks() {
+            assert!(s.contains(net.name), "missing {}", net.name);
+        }
+    }
+}

@@ -1,0 +1,184 @@
+//! PJRT runtime — loads the AOT-compiled JAX/Pallas artifacts and runs
+//! them on the request path. Python is never involved here: the
+//! interchange format is HLO **text** (see `python/compile/aot.py`;
+//! serialized protos from jax ≥ 0.5 carry 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects, while the text parser reassigns ids).
+//!
+//! One [`Runtime`] owns a PJRT CPU client and a name → compiled
+//! executable cache. Executables compile once at load and are reused for
+//! every request.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Name → artifact path registry with compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a runtime on the PJRT CPU client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            exes: HashMap::new(),
+        })
+    }
+
+    /// Platform string (for logs/metrics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile one HLO-text artifact under `name`.
+    pub fn load_file(&mut self, name: &str, path: &Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Load every `*.hlo.txt` in a directory; artifact name = file stem
+    /// without the `.hlo` suffix. Returns the loaded names.
+    pub fn load_dir(&mut self, dir: &Path) -> Result<Vec<String>> {
+        let mut names = Vec::new();
+        let entries = std::fs::read_dir(dir)
+            .with_context(|| format!("reading artifact dir {}", dir.display()))?;
+        let mut paths: Vec<PathBuf> = entries
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.to_string_lossy().ends_with(".hlo.txt"))
+            .collect();
+        paths.sort();
+        for p in paths {
+            let stem = p
+                .file_name()
+                .unwrap()
+                .to_string_lossy()
+                .trim_end_matches(".hlo.txt")
+                .to_string();
+            self.load_file(&stem, &p)?;
+            names.push(stem);
+        }
+        Ok(names)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.exes.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        self.exes
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not loaded (run `make artifacts`?)"))
+    }
+
+    /// Execute an INT8 GEMM artifact: `a` is m×k, `b` is k×n, result is
+    /// m×n INT32. The artifact must have been lowered for exactly this
+    /// shape (one executable per tile shape, as AOT requires).
+    pub fn gemm_i8(&self, name: &str, a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Result<Vec<i32>> {
+        if a.len() != m * k || b.len() != k * n {
+            bail!("gemm_i8 {name}: operand shapes {m}x{k}, {k}x{n} vs lens {} {}", a.len(), b.len());
+        }
+        let la = lit_i8(a, &[m, k])?;
+        let lb = lit_i8(b, &[k, n])?;
+        let out = self.exe(name)?.execute::<xla::Literal>(&[la, lb])?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        let out = out.to_tuple1()?;
+        Ok(out.to_vec::<i32>()?)
+    }
+
+    /// Execute the quantized-CNN artifact on a batch of int8 images
+    /// (N×C×H×W flattened); returns N×classes f32 logits.
+    pub fn cnn_forward(&self, name: &str, images: &[i8], batch: usize, chw: (usize, usize, usize)) -> Result<Vec<f32>> {
+        let (c, h, w) = chw;
+        if images.len() != batch * c * h * w {
+            bail!("cnn_forward {name}: {} elems for batch {batch}×{c}×{h}×{w}", images.len());
+        }
+        let lit = lit_i8(images, &[batch, c, h, w])?;
+        let out = self.exe(name)?.execute::<xla::Literal>(&[lit])?[0][0]
+            .to_literal_sync()?;
+        let out = out.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Execute the standalone encoder artifact: int8 vector → int32
+    /// digit codes (used by the cross-layer equivalence test).
+    pub fn encode_i8(&self, name: &str, values: &[i8]) -> Result<Vec<i32>> {
+        let lit = lit_i8(values, &[values.len()])?;
+        let out = self.exe(name)?.execute::<xla::Literal>(&[lit])?[0][0]
+            .to_literal_sync()?;
+        let out = out.to_tuple1()?;
+        Ok(out.to_vec::<i32>()?)
+    }
+}
+
+/// Build an S8 literal from int8 data (the crate's `vec1` only covers
+/// the 32/64-bit native types; S8 goes through the untyped-data path).
+fn lit_i8(data: &[i8], dims: &[usize]) -> Result<xla::Literal> {
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
+    let lit =
+        xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S8, dims, bytes)?;
+    Ok(lit)
+}
+
+/// Default artifact directory (relative to the repo root).
+pub fn default_artifact_dir() -> PathBuf {
+    // Honour an override for tests and deployments.
+    if let Ok(dir) = std::env::var("ENT_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = Runtime::cpu().expect("PJRT CPU client");
+        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+        assert!(rt.names().is_empty());
+    }
+
+    #[test]
+    fn missing_artifact_errors_cleanly() {
+        let rt = Runtime::cpu().unwrap();
+        let err = rt.gemm_i8("nope", &[0; 4], &[0; 4], 2, 2, 2).unwrap_err();
+        assert!(err.to_string().contains("not loaded"));
+    }
+
+    #[test]
+    fn load_dir_on_empty_dir() {
+        let dir = std::env::temp_dir().join("ent-empty-artifacts");
+        let _ = std::fs::create_dir_all(&dir);
+        let mut rt = Runtime::cpu().unwrap();
+        assert!(rt.load_dir(&dir).unwrap().is_empty());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let rt = Runtime::cpu().unwrap();
+        let err = rt.gemm_i8("x", &[0; 3], &[0; 4], 2, 2, 2).unwrap_err();
+        assert!(err.to_string().contains("operand shapes"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Cycle-level dataflow simulation: tiling, utilization, event counts.
+//!
+//! [`dataflow`] maps a GEMM (or im2col-lowered convolution) onto a
+//! [`Tcu`](crate::arch::Tcu) instance and reports the event counts the
+//! energy model consumes — cycles, MACs, SRAM port traffic, encoder
+//! activations — plus a tiled bit-accurate matmul for problems larger
+//! than one array tile.
+
+pub mod dataflow;
+
+pub use dataflow::{gemm_stats, tiled_matmul, GemmShape, GemmStats};

@@ -1,0 +1,168 @@
+//! The benchmark SoC of §4.4 / Fig 8: a basic NPU with a 256 KB Global
+//! Buffer, 64 KB Activation and Weight Buffers, a 1024-GOPS TCU (one
+//! 32×32 2D array, or two 8³ cubes), 32 weight-path encoders, a 32-lane
+//! TF32 SIMD vector engine, and a controller with img2col.
+//!
+//! [`energy`] walks a network layer-by-layer through this SoC and
+//! decomposes the single-frame inference energy into the paper's Fig 9
+//! buckets (SRAM read / SRAM write / compute engines).
+
+pub mod energy;
+
+use crate::arch::{ArchKind, Tcu};
+use crate::gates::Cost;
+use crate::hw::sram::Sram;
+use crate::pe::Variant;
+
+/// SIMD vector engine (Table 2: 32 ALUs, TF32, 126 481 µm², 0.0951 W).
+#[derive(Clone, Copy, Debug)]
+pub struct SimdEngine {
+    pub lanes: usize,
+    pub area_um2: f64,
+    pub power_w: f64,
+}
+
+impl SimdEngine {
+    pub fn table2() -> SimdEngine {
+        SimdEngine {
+            lanes: 32,
+            area_um2: 126_481.0,
+            power_w: 0.0951,
+        }
+    }
+
+    /// Energy per vector-lane operation, picojoules.
+    pub fn pj_per_op(&self) -> f64 {
+        self.power_w / (self.lanes as f64 * crate::CLOCK_MHZ * 1e6) * 1e12
+    }
+
+    /// Cycles to execute `ops` lane-operations.
+    pub fn cycles(&self, ops: u64) -> u64 {
+        ops.div_ceil(self.lanes as u64)
+    }
+}
+
+/// Controller + img2col (Table 2: ×2, 83 679 µm², 0.0632 W total).
+#[derive(Clone, Copy, Debug)]
+pub struct Controller {
+    pub area_um2: f64,
+    pub power_w: f64,
+}
+
+impl Controller {
+    pub fn table2() -> Controller {
+        Controller {
+            area_um2: 83_679.0,
+            power_w: 0.0632,
+        }
+    }
+}
+
+/// The full SoC configuration.
+#[derive(Clone, Debug)]
+pub struct Soc {
+    pub variant: Variant,
+    pub kind: ArchKind,
+    /// One 32×32 array, or two 8³ cubes (both 1024 GOPS — §4.4).
+    pub tcus: Vec<Tcu>,
+    pub global_buffer: Sram,
+    pub act_buffer: Sram,
+    pub weight_buffer: Sram,
+    pub simd: SimdEngine,
+    pub controller: Controller,
+}
+
+impl Soc {
+    /// The paper's §4.4 configuration for a given architecture/variant.
+    pub fn paper_config(kind: ArchKind, variant: Variant) -> Soc {
+        let tcus = match kind {
+            ArchKind::Cube3d => vec![Tcu::new(kind, 8, variant), Tcu::new(kind, 8, variant)],
+            _ => vec![Tcu::new(kind, 32, variant)],
+        };
+        Soc {
+            variant,
+            kind,
+            tcus,
+            global_buffer: Sram::global_buffer(),
+            act_buffer: Sram::activation_buffer(),
+            weight_buffer: Sram::weight_buffer(),
+            simd: SimdEngine::table2(),
+            controller: Controller::table2(),
+        }
+    }
+
+    /// Total peak GOPS (must be 1024 for the paper config).
+    pub fn gops(&self) -> f64 {
+        self.tcus.iter().map(|t| t.gops()).sum()
+    }
+
+    /// External encoder blocks across the TCUs (Table 2 prices 32 for
+    /// the 2D configs; two cubes carry 128).
+    pub fn encoder_blocks(&self) -> usize {
+        self.tcus.iter().map(|t| t.encoder_blocks()).sum()
+    }
+
+    /// TCU cost (all instances).
+    pub fn tcu_cost(&self) -> Cost {
+        self.tcus.iter().map(|t| t.cost().total()).sum()
+    }
+
+    /// Whole-SoC area in µm² (Table 2 components + TCU).
+    pub fn area_um2(&self) -> f64 {
+        self.tcu_cost().area_um2
+            + self.global_buffer.area_um2
+            + self.act_buffer.area_um2
+            + self.weight_buffer.area_um2
+            + self.simd.area_um2
+            + self.controller.area_um2
+    }
+
+    /// SoC-level area efficiency, GOPS/mm².
+    pub fn area_efficiency(&self) -> f64 {
+        self.gops() / (self.area_um2() / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ALL_ARCHS;
+
+    #[test]
+    fn paper_configs_are_1024_gops() {
+        for kind in ALL_ARCHS {
+            let soc = Soc::paper_config(kind, Variant::EntOurs);
+            assert_eq!(soc.gops(), 1024.0, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn encoder_counts_match_section_4_4() {
+        let soc2d = Soc::paper_config(ArchKind::SystolicOs, Variant::EntOurs);
+        assert_eq!(soc2d.encoder_blocks(), 32);
+        let cube = Soc::paper_config(ArchKind::Cube3d, Variant::EntOurs);
+        assert_eq!(cube.encoder_blocks(), 128);
+        let base = Soc::paper_config(ArchKind::SystolicOs, Variant::Baseline);
+        assert_eq!(base.encoder_blocks(), 0);
+    }
+
+    #[test]
+    fn simd_energy_per_op_from_table2() {
+        let simd = SimdEngine::table2();
+        // 0.0951 W / (32 × 500 MHz) ≈ 5.94 pJ/op.
+        assert!((simd.pj_per_op() - 5.94375).abs() < 1e-3);
+        assert_eq!(simd.cycles(33), 2);
+        assert_eq!(simd.cycles(32), 1);
+    }
+
+    #[test]
+    fn sram_dominates_soc_area_alongside_tcu() {
+        // §4.4/Fig 12 observation: on-chip SRAM area is comparable to
+        // the computing modules.
+        let soc = Soc::paper_config(ArchKind::SystolicOs, Variant::Baseline);
+        let sram = soc.global_buffer.area_um2 + soc.act_buffer.area_um2
+            + soc.weight_buffer.area_um2;
+        let tcu = soc.tcu_cost().area_um2;
+        assert!(sram > 0.5 * tcu && sram < 2.0 * tcu, "sram {sram} tcu {tcu}");
+    }
+}

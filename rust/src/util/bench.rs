@@ -1,0 +1,204 @@
+//! Micro-benchmark harness (offline substitute for `criterion`).
+//!
+//! Every `cargo bench` target in this repo is a `harness = false` binary
+//! built on this module. The protocol per benchmark:
+//!
+//! 1. warm up for `warmup` wall-clock time;
+//! 2. run timed batches until `measure` wall-clock time has elapsed,
+//!    recording per-iteration time for each batch;
+//! 3. report mean / median / p95 and derived throughput.
+//!
+//! A `black_box` re-export guards against the optimizer deleting the
+//! benched computation.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+pub use std::hint::black_box;
+
+/// One benchmark's timing configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    /// Minimum number of measured batches even if `measure` elapses first.
+    pub min_batches: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            min_batches: 10,
+        }
+    }
+}
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time in nanoseconds.
+    pub ns_per_iter: Summary,
+    /// Total iterations measured.
+    pub iters: u64,
+}
+
+impl BenchResult {
+    /// Iterations per second at the mean per-iteration time.
+    pub fn throughput(&self) -> f64 {
+        1e9 / self.ns_per_iter.mean
+    }
+
+    /// One human line, criterion-style.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>12}  median {:>12}  p95 {:>12}  ({} iters)",
+            self.name,
+            fmt_ns(self.ns_per_iter.mean),
+            fmt_ns(self.ns_per_iter.median),
+            fmt_ns(self.ns_per_iter.p95),
+            self.iters
+        )
+    }
+}
+
+/// Format a nanosecond quantity with an adaptive unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// A bench suite accumulates results and prints a footer.
+pub struct Suite {
+    pub config: BenchConfig,
+    pub results: Vec<BenchResult>,
+}
+
+impl Suite {
+    pub fn new() -> Self {
+        // `cargo bench -- --quick` style knob via env for CI smoke runs.
+        let quick = std::env::var("ENT_BENCH_QUICK").is_ok();
+        let config = if quick {
+            BenchConfig {
+                warmup: Duration::from_millis(20),
+                measure: Duration::from_millis(80),
+                min_batches: 3,
+            }
+        } else {
+            BenchConfig::default()
+        };
+        Suite {
+            config,
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark `f`, printing the result line immediately.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        let r = run_bench(name, self.config, &mut f);
+        println!("{}", r.line());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// Benchmark returning a value (guarded by black_box).
+    pub fn bench_val<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        self.bench(name, || {
+            black_box(f());
+        })
+    }
+}
+
+impl Default for Suite {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn run_bench<F: FnMut()>(name: &str, cfg: BenchConfig, f: &mut F) -> BenchResult {
+    // Warmup and initial calibration of batch size.
+    let warm_start = Instant::now();
+    let mut calib_iters: u64 = 0;
+    while warm_start.elapsed() < cfg.warmup {
+        f();
+        calib_iters += 1;
+    }
+    let per_iter_est = cfg.warmup.as_nanos() as f64 / calib_iters.max(1) as f64;
+    // Aim for ~5ms batches so Instant overhead is negligible.
+    let batch = ((5e6 / per_iter_est).ceil() as u64).clamp(1, 1 << 24);
+
+    let mut samples = Vec::new();
+    let mut iters = 0u64;
+    let t0 = Instant::now();
+    while t0.elapsed() < cfg.measure || samples.len() < cfg.min_batches {
+        let bstart = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let dt = bstart.elapsed().as_nanos() as f64 / batch as f64;
+        samples.push(dt);
+        iters += batch;
+        if samples.len() > 10_000 {
+            break; // safety valve for pathologically fast bodies
+        }
+    }
+    BenchResult {
+        name: name.to_string(),
+        ns_per_iter: Summary::of(&samples),
+        iters,
+    }
+}
+
+/// Print the standard bench header used by all targets.
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            min_batches: 3,
+        };
+        let mut acc = 0u64;
+        let r = run_bench("spin", cfg, &mut || {
+            acc = acc.wrapping_add(black_box(1));
+        });
+        assert!(r.iters > 0);
+        assert!(r.ns_per_iter.mean > 0.0);
+        assert!(r.ns_per_iter.n >= 3);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("µs"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(2e9).ends_with('s'));
+    }
+
+    #[test]
+    fn throughput_inverse_of_mean() {
+        let r = BenchResult {
+            name: "x".into(),
+            ns_per_iter: Summary::of(&[100.0, 100.0]),
+            iters: 2,
+        };
+        assert!((r.throughput() - 1e7).abs() < 1.0);
+    }
+}

@@ -1,0 +1,136 @@
+//! Property-based testing helper (offline substitute for `proptest`).
+//!
+//! A property is a closure from a [`Rng`]-driven generated input to
+//! `Result<(), String>`. [`check`] runs it for a configurable number of
+//! cases; on failure it reports the seed and case index so the exact
+//! failing input can be replayed, and for integer-vector inputs
+//! [`check_shrink`] additionally bisects toward a minimal failing length.
+
+use super::prng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    /// Number of random cases to run.
+    pub cases: usize,
+    /// Base seed; case `i` uses seed `seed + i` so failures name a
+    /// single-case reproduction seed.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 256, seed: 0xEC0DE }
+    }
+}
+
+/// Run `prop` for `cfg.cases` random cases. Panics (test failure) with the
+/// reproduction seed on the first counterexample.
+pub fn check<F>(name: &str, cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case} (replay seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Run a property over a generated `Vec<i64>` whose length is in
+/// `[1, max_len]`, shrinking the failing vector by halving before
+/// reporting. The property receives the candidate slice.
+pub fn check_shrink<G, F>(name: &str, cfg: Config, max_len: usize, gen_elem: G, mut prop: F)
+where
+    G: Fn(&mut Rng) -> i64,
+    F: FnMut(&[i64]) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let len = rng.range(1, max_len);
+        let input: Vec<i64> = (0..len).map(|_| gen_elem(&mut rng)).collect();
+        if let Err(first_msg) = prop(&input) {
+            // Shrink: repeatedly try dropping the front/back half while the
+            // property still fails.
+            let mut cur = input.clone();
+            let mut msg = first_msg;
+            loop {
+                let n = cur.len();
+                if n <= 1 {
+                    break;
+                }
+                let halves = [cur[..n / 2].to_vec(), cur[n / 2..].to_vec()];
+                let mut shrunk = false;
+                for h in halves {
+                    if let Err(m) = prop(&h) {
+                        cur = h;
+                        msg = m;
+                        shrunk = true;
+                        break;
+                    }
+                }
+                if !shrunk {
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed at case {case} (replay seed {seed:#x}); \
+                 minimal input ({} elems): {:?}: {msg}",
+                cur.len(),
+                &cur[..cur.len().min(16)]
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("x+0==x", Config::default(), |rng| {
+            let x = rng.range_i64(-1000, 1000);
+            if x + 0 == x {
+                Ok(())
+            } else {
+                Err(format!("x={x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            "always-fails",
+            Config { cases: 4, seed: 1 },
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal input (1 elems)")]
+    fn shrinking_reaches_minimal_input() {
+        // Property: "no element equals 7" — fails whenever a 7 is present;
+        // the minimal counterexample is a single-element vector.
+        check_shrink(
+            "no-sevens",
+            Config { cases: 64, seed: 3 },
+            64,
+            |rng| rng.range_i64(0, 8),
+            |xs| {
+                if xs.contains(&7) {
+                    Err("found 7".into())
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,191 @@
+//! Tiny declarative command-line parser (offline substitute for `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments, with typed accessors and automatic `--help` text.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// Declaration of one accepted option, used for help text and validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+/// Error from argument parsing.
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    Unknown(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1}")]
+    BadValue(String, String),
+}
+
+impl Args {
+    /// Parse `argv` (without the program/subcommand name) against `specs`.
+    pub fn parse(argv: &[String], specs: &[OptSpec]) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| CliError::Unknown(name.clone()))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(name.clone()))?
+                        }
+                    };
+                    out.opts.insert(name, v);
+                } else {
+                    if inline.is_some() {
+                        return Err(CliError::BadValue(name, "flag takes no value".into()));
+                    }
+                    out.flags.push(name);
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::BadValue(name.into(), v.into())),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::BadValue(name.into(), v.into())),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Render help text for a subcommand.
+pub fn help(cmd: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut s = format!("{cmd} — {about}\n\noptions:\n");
+    for spec in specs {
+        let arg = if spec.takes_value {
+            format!("--{} <v>", spec.name)
+        } else {
+            format!("--{}", spec.name)
+        };
+        s.push_str(&format!("  {arg:<24} {}\n", spec.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "size", takes_value: true, help: "array size" },
+            OptSpec { name: "json", takes_value: false, help: "json output" },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_key_value_both_styles() {
+        let a = Args::parse(&sv(&["--size", "32"]), &specs()).unwrap();
+        assert_eq!(a.get("size"), Some("32"));
+        let b = Args::parse(&sv(&["--size=64"]), &specs()).unwrap();
+        assert_eq!(b.get_usize("size", 0).unwrap(), 64);
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = Args::parse(&sv(&["run", "--json", "extra"]), &specs()).unwrap();
+        assert!(a.flag("json"));
+        assert_eq!(a.positional(), &["run".to_string(), "extra".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(matches!(
+            Args::parse(&sv(&["--nope"]), &specs()),
+            Err(CliError::Unknown(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(
+            Args::parse(&sv(&["--size"]), &specs()),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn bad_numeric_value() {
+        let a = Args::parse(&sv(&["--size", "abc"]), &specs()).unwrap();
+        assert!(a.get_usize("size", 0).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&[], &specs()).unwrap();
+        assert_eq!(a.get_usize("size", 16).unwrap(), 16);
+        assert_eq!(a.get_or("size", "x"), "x");
+        assert!(!a.flag("json"));
+    }
+
+    #[test]
+    fn help_mentions_all_options() {
+        let h = help("ent fig6", "area/power grid", &specs());
+        assert!(h.contains("--size"));
+        assert!(h.contains("--json"));
+    }
+}

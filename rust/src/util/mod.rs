@@ -1,0 +1,20 @@
+//! Small self-contained substrates that replace crates unavailable in the
+//! offline build environment (see DESIGN.md §2):
+//!
+//! * [`prng`] — deterministic xorshift256** PRNG (no `rand`);
+//! * [`check`] — property-based testing helper (no `proptest`);
+//! * [`bench`] — warmup/iterate/stats micro-benchmark harness
+//!   (no `criterion`); all `cargo bench` targets use it;
+//! * [`stats`] — summary statistics used by `bench` and the reports;
+//! * [`json`] — minimal JSON writer + parser for configs and reports
+//!   (no `serde`);
+//! * [`cli`] — tiny declarative argument parser (no `clap`);
+//! * [`table`] — aligned text tables matching the paper's layout.
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,140 @@
+//! Aligned text tables, used by every report/bench target so the output
+//! visually matches the paper's tables.
+
+/// A simple column-aligned table builder.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: Option<String>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>) -> Table {
+        Table {
+            title: Some(title.into()),
+            ..Default::default()
+        }
+    }
+
+    pub fn header(mut self, cols: &[&str]) -> Table {
+        self.header = cols.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn row(&mut self, cols: Vec<String>) -> &mut Table {
+        assert!(
+            self.header.is_empty() || cols.len() == self.header.len(),
+            "row width {} != header width {}",
+            cols.len(),
+            self.header.len()
+        );
+        self.rows.push(cols);
+        self
+    }
+
+    /// Convenience: row from display values.
+    pub fn rowd(&mut self, cols: &[&dyn std::fmt::Display]) -> &mut Table {
+        self.row(cols.iter().map(|c| c.to_string()).collect())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self
+            .header
+            .len()
+            .max(self.rows.iter().map(|r| r.len()).max().unwrap_or(0));
+        let mut widths = vec![0usize; ncols];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = widths[i].max(h.chars().count());
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        let fmt_row = |cols: &[String]| -> String {
+            let mut line = String::new();
+            for (i, c) in cols.iter().enumerate() {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                let pad = widths[i] - c.chars().count();
+                // Right-align things that look numeric, left-align text.
+                let numeric = c
+                    .chars()
+                    .next()
+                    .map(|ch| ch.is_ascii_digit() || ch == '-' || ch == '+')
+                    .unwrap_or(false);
+                if numeric {
+                    line.push_str(&" ".repeat(pad));
+                    line.push_str(c);
+                } else {
+                    line.push_str(c);
+                    line.push_str(&" ".repeat(pad));
+                }
+            }
+            line.trim_end().to_string()
+        };
+        if !self.header.is_empty() {
+            out.push_str(&fmt_row(&self.header));
+            out.push('\n');
+            out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+            out.push('\n');
+        }
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a float with `digits` decimals.
+pub fn f(x: f64, digits: usize) -> String {
+    format!("{x:.digits$}")
+}
+
+/// Format a ratio as a signed percentage with one decimal.
+pub fn pct(x: f64) -> String {
+    format!("{:+.1}%", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("Demo").header(&["Method", "Area"]);
+        t.row(vec!["MBE".into(), "7.06".into()]);
+        t.row(vec!["Ours".into(), "8.64".into()]);
+        let s = t.render();
+        assert!(s.contains("Demo"));
+        assert!(s.contains("Method"));
+        let lines: Vec<&str> = s.lines().collect();
+        // header + separator + 2 rows + title
+        assert_eq!(lines.len(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn row_width_mismatch_panics() {
+        let mut t = Table::new("x").header(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn pct_formats_sign() {
+        assert_eq!(pct(0.122), "+12.2%");
+        assert_eq!(pct(-0.05), "-5.0%");
+    }
+}

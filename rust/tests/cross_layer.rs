@@ -1,0 +1,94 @@
+//! Cross-layer integration: the AOT-compiled JAX/Pallas artifacts,
+//! loaded and executed by the rust PJRT runtime, must agree exactly with
+//! the rust bit-accurate RTL-functional models on the same inputs.
+//!
+//! These tests are gated on `artifacts/` existing (run `make artifacts`
+//! first); they fail loudly if artifacts are present but wrong, and skip
+//! politely when the build hasn't produced them yet.
+
+use ent::arch::{gemm_ref, ArchKind, Tcu};
+use ent::encoding::ent::encode_signed;
+use ent::pe::Variant;
+use ent::runtime::{default_artifact_dir, Runtime};
+use ent::sim::tiled_matmul;
+use ent::util::prng::Rng;
+
+fn runtime_with_artifacts() -> Option<Runtime> {
+    let dir = default_artifact_dir();
+    if !dir.join("encode8.hlo.txt").exists() {
+        eprintln!("SKIP: artifacts not built ({})", dir.display());
+        return None;
+    }
+    let mut rt = Runtime::cpu().expect("PJRT CPU client");
+    let names = rt.load_dir(&dir).expect("loading artifacts");
+    assert!(!names.is_empty());
+    Some(rt)
+}
+
+#[test]
+fn gemm_artifacts_match_rust_datapath() {
+    let Some(rt) = runtime_with_artifacts() else {
+        return;
+    };
+    let mut rng = Rng::new(0xC0FFEE);
+    for (m, k, n) in [(32usize, 32usize, 32usize), (64, 128, 64), (128, 256, 128)] {
+        let name = format!("gemm_{m}x{k}x{n}");
+        if !rt.has(&name) {
+            continue;
+        }
+        let a = rng.i8_vec(m * k);
+        let b = rng.i8_vec(k * n);
+        // Python/Pallas path (through PJRT).
+        let via_pjrt = rt.gemm_i8(&name, &a, &b, m, k, n).expect("execute");
+        // Rust RTL-functional path (through the EN-T array dataflow).
+        let tcu = Tcu::new(ArchKind::SystolicOs, 32, Variant::EntOurs);
+        let via_rust = tiled_matmul(&tcu, &a, &b, m, k, n);
+        // And the plain reference.
+        let reference = gemm_ref(&a, &b, m, k, n);
+        assert_eq!(via_rust, reference, "{name}: rust datapath vs ref");
+        let via_pjrt_i64: Vec<i64> = via_pjrt.iter().map(|&x| x as i64).collect();
+        assert_eq!(via_pjrt_i64, reference, "{name}: pjrt artifact vs ref");
+    }
+}
+
+#[test]
+fn encoder_artifact_matches_rust_wire_format() {
+    let Some(rt) = runtime_with_artifacts() else {
+        return;
+    };
+    // The artifact encodes a length-256 int8 vector; feed every value.
+    let values: Vec<i8> = (-128..=127).collect();
+    let wire = rt.encode_i8("encode8", &values).expect("encode");
+    for (v, &bits) in values.iter().zip(&wire) {
+        let code = encode_signed(*v as i64, 8);
+        let expect = code.mag.wire_bits() as i32 | if code.sign { 1 << 8 } else { 0 };
+        assert_eq!(bits, expect, "value {v}");
+    }
+}
+
+#[test]
+fn tinynet_artifact_runs_and_is_batch_consistent() {
+    let Some(rt) = runtime_with_artifacts() else {
+        return;
+    };
+    let mut rng = Rng::new(0xBEEF);
+    let img: Vec<i8> = rng.i8_vec(3 * 32 * 32);
+    let solo = rt
+        .cnn_forward("tinynet_b1", &img, 1, (3, 32, 32))
+        .expect("b1");
+    assert_eq!(solo.len(), 10);
+    assert!(solo.iter().all(|x| x.is_finite()));
+
+    // The same image replicated in a batch of 4 must produce identical
+    // logits per sample (padding-safe batching invariant).
+    let mut batch = Vec::new();
+    for _ in 0..4 {
+        batch.extend_from_slice(&img);
+    }
+    let quad = rt
+        .cnn_forward("tinynet_b4", &batch, 4, (3, 32, 32))
+        .expect("b4");
+    for s in 0..4 {
+        assert_eq!(&quad[s * 10..(s + 1) * 10], &solo[..], "sample {s}");
+    }
+}

@@ -1,0 +1,94 @@
+//! End-to-end serving integration: coordinator + dynamic batcher + PJRT
+//! runtime under concurrent load, including failure injection.
+//! Gated on built artifacts (like `cross_layer`).
+
+use ent::coordinator::{Config, Coordinator, InferRequest};
+use ent::runtime::default_artifact_dir;
+use ent::util::prng::Rng;
+
+fn coordinator() -> Option<Coordinator> {
+    if !default_artifact_dir().join("tinynet_b1.hlo.txt").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return None;
+    }
+    Some(Coordinator::start(Config::default()).expect("coordinator up"))
+}
+
+#[test]
+fn serves_concurrent_requests_with_batching() {
+    let Some(coord) = coordinator() else { return };
+    let input_len = coord.model().input_len();
+    let n_clients = 4;
+    let per_client = 8;
+    std::thread::scope(|scope| {
+        for c in 0..n_clients {
+            let coord = &coord;
+            scope.spawn(move || {
+                let mut rng = Rng::new(100 + c as u64);
+                for _ in 0..per_client {
+                    let resp = coord
+                        .infer(InferRequest {
+                            image: rng.i8_vec(input_len),
+                        })
+                        .expect("inference");
+                    assert_eq!(resp.logits.len(), 10);
+                    assert!(resp.logits.iter().all(|x| x.is_finite()));
+                    assert!(resp.batch_size >= 1 && resp.batch_size <= 8);
+                    assert!(resp.sim_energy_uj > 0.0);
+                }
+            });
+        }
+    });
+    let m = coord.metrics();
+    assert_eq!(m.requests, n_clients * per_client);
+    assert_eq!(m.errors, 0);
+    assert!(m.mean_batch >= 1.0);
+    coord.shutdown();
+}
+
+#[test]
+fn identical_inputs_get_identical_logits_across_batches() {
+    let Some(coord) = coordinator() else { return };
+    let input_len = coord.model().input_len();
+    let mut rng = Rng::new(55);
+    let img = rng.i8_vec(input_len);
+    let first = coord
+        .infer(InferRequest { image: img.clone() })
+        .expect("first");
+    // Concurrent duplicates force different batch groupings.
+    std::thread::scope(|scope| {
+        for _ in 0..6 {
+            let coord = &coord;
+            let img = img.clone();
+            let expect = first.logits.clone();
+            scope.spawn(move || {
+                let r = coord.infer(InferRequest { image: img }).expect("dup");
+                assert_eq!(r.logits, expect, "batching must not change results");
+            });
+        }
+    });
+    coord.shutdown();
+}
+
+#[test]
+fn malformed_request_rejected_without_poisoning_the_batch() {
+    let Some(coord) = coordinator() else { return };
+    let input_len = coord.model().input_len();
+    // Bad request (wrong length) concurrent with good ones.
+    let bad = coord.submit(InferRequest {
+        image: vec![0i8; 17],
+    });
+    let mut rng = Rng::new(77);
+    let good = coord
+        .infer(InferRequest {
+            image: rng.i8_vec(input_len),
+        })
+        .expect("good request must survive");
+    assert_eq!(good.logits.len(), 10);
+    let bad_result = bad.recv().expect("bad response arrives");
+    let err = bad_result.expect_err("bad request must error");
+    assert!(err.contains("bad input"), "{err}");
+    let m = coord.metrics();
+    assert!(m.errors >= 1);
+    coord.shutdown();
+}
