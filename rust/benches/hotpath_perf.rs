@@ -1,30 +1,38 @@
 //! Hot-path performance benchmark (deliverable (e) — EXPERIMENTS.md
 //! §Perf). Covers every layer the request path touches:
 //!
-//! * L3 functional models: encoded MAC, bit-level datapath, tiled GEMM;
-//! * L3 analytics: dataflow stats + SoC frame simulation (the "digital
+//! * L3 functional models: encoded MAC (packed LUT), bit-level datapath,
+//!   tiled GEMM through every `TcuEngine` (arch × variant grid at the
+//!   32×32 scale), and the parallel row-band path on a larger GEMM;
+//! * L3 analytics: planner stats + SoC frame simulation (the "digital
 //!   twin" that runs per request);
-//! * runtime: PJRT artifact execution (gated on `make artifacts`);
-//! * coordinator: end-to-end request round-trip incl. dynamic batching.
+//! * serving: coordinator round-trip on the native engine-shard backend
+//!   (plus the artifact path when `make artifacts` has run).
+//!
+//! Emits `BENCH_hotpath.json` next to the CWD — machine-readable GEMM/s
+//! and ns/MAC per arch × variant — so the perf trajectory is tracked
+//! across PRs.
 
-use ent::arch::{ArchKind, Tcu};
+use ent::arch::{ArchKind, Scale, Tcu, TcuEngine, ALL_ARCHS};
 use ent::coordinator::{Config, Coordinator, InferRequest};
-use ent::encoding::ent::encode_signed;
+use ent::encoding::packed::lut_i8;
 use ent::nn::zoo;
-use ent::pe::Variant;
+use ent::pe::{Variant, ALL_VARIANTS};
 use ent::runtime::{default_artifact_dir, Runtime};
 use ent::sim::{gemm_stats, tiled_matmul, GemmShape};
 use ent::soc::{energy, Soc};
-use ent::util::bench::{black_box, header, Suite};
+use ent::util::bench::{black_box, header, BenchResult, Suite};
+use ent::util::json::Json;
 use ent::util::prng::Rng;
 
 fn main() {
     header("hot-path performance");
     let mut suite = Suite::new();
     let mut rng = Rng::new(0xF00D);
+    let mut json_rows: Vec<Json> = Vec::new();
 
     // --- L3 functional datapath ---
-    let codes: Vec<_> = (0..256).map(|i| encode_signed(i - 128, 8)).collect();
+    let codes: Vec<_> = (0..256).map(|i| lut_i8((i - 128) as i8)).collect();
     let m = ent::arith::multiplier::Multiplier::new(
         ent::arith::multiplier::MultKind::EntRme,
         8,
@@ -32,7 +40,7 @@ fn main() {
     let mut i = 0usize;
     suite.bench("mac_encoded_bitlevel", || {
         i = (i + 1) & 255;
-        black_box(m.mul_encoded(&codes[i], (i as i64) - 128));
+        black_box(m.mul_packed(codes[i], (i as i64) - 128));
     });
 
     let tcu = Tcu::new(ArchKind::SystolicOs, 16, Variant::EntOurs);
@@ -41,6 +49,42 @@ fn main() {
     suite.bench("tiled_matmul_32x48x32_bitlevel", || {
         black_box(tiled_matmul(&tcu, &a, &b, 32, 48, 32));
     });
+
+    // --- arch × variant GEMM grid at the 32×32 (256 GOPS) scale ---
+    // 32³ GEMM per iteration → GEMM/s and ns/MAC per engine.
+    let (gm, gk, gn) = (32usize, 32usize, 32usize);
+    let ga = rng.i8_vec(gm * gk);
+    let gb = rng.i8_vec(gk * gn);
+    let macs = (gm * gk * gn) as f64;
+    for arch in ALL_ARCHS {
+        for variant in ALL_VARIANTS {
+            let size = arch.size_for_scale(Scale::Gops256);
+            let eng = Tcu::new(arch, size, variant).engine();
+            let name = format!("gemm32_{}_{}", arch.short_name(), variant.name());
+            let r = suite.bench(&name, || {
+                black_box(eng.matmul(&ga, &gb, gm, gk, gn));
+            });
+            json_rows.push(grid_row(arch, variant, gm, gk, gn, macs, r));
+        }
+    }
+
+    // --- parallel row-band path on a larger bit-level GEMM ---
+    let (pm, pk, pn) = (96usize, 64usize, 48usize);
+    let pa = rng.i8_vec(pm * pk);
+    let pb = rng.i8_vec(pk * pn);
+    let peng = Tcu::new(ArchKind::SystolicOs, 16, Variant::EntOurs).engine();
+    let r = suite.bench("gemm96x64x48_parallel_bands", || {
+        black_box(peng.matmul(&pa, &pb, pm, pk, pn));
+    });
+    json_rows.push(grid_row(
+        ArchKind::SystolicOs,
+        Variant::EntOurs,
+        pm,
+        pk,
+        pn,
+        (pm * pk * pn) as f64,
+        r,
+    ));
 
     // --- L3 analytics (per-request digital twin work) ---
     let tcu32 = Tcu::new(ArchKind::SystolicOs, 32, Variant::EntOurs);
@@ -58,9 +102,40 @@ fn main() {
         resnet50.total_macs() as f64 * r.throughput() / 1e9
     );
 
+    // --- serving: native engine-shard backend (always available) ---
+    {
+        // Direct model execution on one engine — the denominator for
+        // the coordinator-overhead target (< 10 %, DESIGN.md §7).
+        let model = ent::nn::forward::QuantCnn::tiny_native();
+        let eng = Tcu::new(ArchKind::SystolicOs, 16, Variant::EntOurs).engine();
+        let img = rng.i8_vec(3 * 32 * 32);
+        let direct = suite.bench("native_forward_direct", || {
+            black_box(model.forward(&eng, &img));
+        });
+        let direct_ns = direct.ns_per_iter.mean;
+
+        let coord = Coordinator::start(Config::native(4)).expect("native coordinator");
+        let rr = suite.bench("coordinator_native_round_trip", || {
+            black_box(
+                coord
+                    .infer(InferRequest { image: img.clone() })
+                    .expect("native infer"),
+            );
+        });
+        println!(
+            "  -> native serving throughput (unbatched lower bound): {:.0} req/s",
+            rr.throughput()
+        );
+        println!(
+            "  -> coordinator overhead vs direct execute: {:+.1}% (target < 10%)",
+            (rr.ns_per_iter.mean / direct_ns - 1.0) * 100.0
+        );
+        coord.shutdown();
+    }
+
     // --- runtime + coordinator (artifact-gated) ---
     if default_artifact_dir().join("gemm_64x128x64.hlo.txt").exists() {
-        let mut rt = Runtime::cpu().expect("pjrt");
+        let mut rt = Runtime::cpu().expect("runtime");
         rt.load_file(
             "gemm_64x128x64",
             &default_artifact_dir().join("gemm_64x128x64.hlo.txt"),
@@ -68,25 +143,9 @@ fn main() {
         .expect("load");
         let ga = rng.i8_vec(64 * 128);
         let gb = rng.i8_vec(128 * 64);
-        suite.bench("pjrt_gemm_64x128x64", || {
+        suite.bench("runtime_gemm_64x128x64", || {
             black_box(rt.gemm_i8("gemm_64x128x64", &ga, &gb, 64, 128, 64).unwrap());
         });
-
-        // Direct model execution (no coordinator) — the denominator for
-        // the coordinator-overhead target (< 10 %, DESIGN.md §7).
-        rt.load_file(
-            "tinynet_b1",
-            &default_artifact_dir().join("tinynet_b1.hlo.txt"),
-        )
-        .expect("load tinynet");
-        let img_direct = rng.i8_vec(3 * 32 * 32);
-        let direct = suite.bench("pjrt_tinynet_b1_direct", || {
-            black_box(
-                rt.cnn_forward("tinynet_b1", &img_direct, 1, (3, 32, 32))
-                    .unwrap(),
-            );
-        });
-        let direct_ns = direct.ns_per_iter.mean;
 
         let coord = Coordinator::start(Config::default()).expect("coordinator");
         let img = rng.i8_vec(3 * 32 * 32);
@@ -98,12 +157,8 @@ fn main() {
             );
         });
         println!(
-            "  -> serving throughput (unbatched lower bound): {:.0} req/s",
+            "  -> artifact serving throughput (unbatched lower bound): {:.0} req/s",
             rr.throughput()
-        );
-        println!(
-            "  -> coordinator overhead vs direct execute: {:+.1}% (target < 10%)",
-            (rr.ns_per_iter.mean / direct_ns - 1.0) * 100.0
         );
         let snap = coord.metrics();
         if let Some(lat) = snap.latency_us {
@@ -114,6 +169,42 @@ fn main() {
         }
         coord.shutdown();
     } else {
-        println!("(artifacts not built — runtime/coordinator benches skipped; run `make artifacts`)");
+        println!("(artifacts not built — artifact-path benches skipped; run `make artifacts`)");
     }
+
+    // --- machine-readable trajectory file ---
+    let out = Json::obj(vec![
+        ("bench", Json::str("hotpath_perf")),
+        ("unit", Json::str("ns_per_iter / gemms_per_s / ns_per_mac")),
+        ("results", Json::arr(json_rows)),
+    ]);
+    // Cargo runs benches with cwd = the package dir (rust/); anchor the
+    // output at the workspace root so CI finds it deterministically.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
+    match std::fs::write(path, format!("{out}\n")) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\ncould not write {path}: {e}"),
+    }
+}
+
+fn grid_row(
+    arch: ArchKind,
+    variant: Variant,
+    m: usize,
+    k: usize,
+    n: usize,
+    macs: f64,
+    r: &BenchResult,
+) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(r.name.clone())),
+        ("arch", Json::str(arch.short_name())),
+        ("variant", Json::str(variant.name())),
+        ("m", Json::num(m as f64)),
+        ("k", Json::num(k as f64)),
+        ("n", Json::num(n as f64)),
+        ("ns_per_iter", Json::num(r.ns_per_iter.mean)),
+        ("gemms_per_s", Json::num(r.throughput())),
+        ("ns_per_mac", Json::num(r.ns_per_iter.mean / macs)),
+    ])
 }

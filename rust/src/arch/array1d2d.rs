@@ -12,13 +12,13 @@
 //! apply — the conclusion's "combines the multiplier and adder
 //! calculation … from a more fine-grained perspective".
 
+use super::engine::{dot_window, Datapath, TcuEngine};
 use super::trees::{self, with_activity};
-use super::{CellSpec, Tcu, OPERAND_BITS};
+use super::{ArchKind, CellSpec, Tcu, OPERAND_BITS};
 use crate::arith::adders::{Accumulator, Cla};
-use crate::arith::multiplier::{MultKind, Multiplier};
-use crate::arith::pp::{rows_for_digit, unwrap};
-use crate::arith::wallace::reduce;
-use crate::encoding::ent::encode_signed;
+use crate::arith::pp::{push_booth_rows, push_rows_for_digit, unwrap};
+use crate::arith::wallace::reduce_rows_fast;
+use crate::encoding::packed::lut_i8;
 use crate::gates::{Cost, Gate};
 use crate::pe::Variant;
 
@@ -70,61 +70,129 @@ pub fn cells(s: usize, variant: Variant) -> CellSpec {
     }
 }
 
-/// Functional dataflow. For EN-T variants the fusion is modelled
-/// faithfully: every multiplier emits its partial products *unresolved*,
-/// one shared compressor tree reduces all of a unit's rows, and a single
-/// root CLA resolves the dot product.
-pub fn matmul(tcu: &Tcu, a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i64> {
-    let s = tcu.size;
-    assert!(k <= s && n <= s, "tile {k}x{n} exceeds array {s}");
-    let mut c = vec![0i64; m * n];
-    // Window wide enough for a dot product of k int8 products.
-    let w = 2 * OPERAND_BITS + 4 + (usize::BITS - k.leading_zeros()) as usize;
-    for mi in 0..m {
-        for j in 0..n {
-            match tcu.variant {
-                Variant::Baseline => {
-                    let mul = Multiplier::new(MultKind::DwIp, OPERAND_BITS);
+/// Products fused per compressor-tree reduction. Tiles never exceed the
+/// array size, but the engine stays correct for any K by resolving one
+/// chunk of the tree at a time (chunk boundaries are exact integer adds,
+/// so chunking cannot change the result).
+const FUSE_CHUNK: usize = 64;
+
+/// Worst-case partial-product rows per fused product: n/2 digits + the
+/// Cin slot, ≤ 2 rows each.
+const ROWS_PER_PRODUCT: usize = OPERAND_BITS + 2;
+
+/// The 1D/2D Array dataflow as a [`TcuEngine`]. For EN-T variants the
+/// fusion is modelled faithfully: every multiplier emits its partial
+/// products *unresolved* into a stack row buffer, one shared carry-save
+/// tree reduces all of a unit's rows, and a single root CLA resolves the
+/// dot product — with zero heap allocations (digits come straight off
+/// the packed LUT code / the on-the-fly Booth recode).
+#[derive(Clone, Copy, Debug)]
+pub struct Array1d2dEngine {
+    tcu: Tcu,
+    dp: Datapath,
+}
+
+impl Array1d2dEngine {
+    pub fn new(tcu: Tcu) -> Array1d2dEngine {
+        assert_eq!(tcu.kind, ArchKind::Array1d2d);
+        Array1d2dEngine {
+            tcu,
+            dp: Datapath::new(tcu.variant, OPERAND_BITS),
+        }
+    }
+}
+
+impl TcuEngine for Array1d2dEngine {
+    fn tcu(&self) -> &Tcu {
+        &self.tcu
+    }
+
+    fn execute_tile(
+        &self,
+        a: &[i8],
+        lda: usize,
+        b: &[i8],
+        ldb: usize,
+        c: &mut [i64],
+        ldc: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        let s = self.tcu.size;
+        assert!(k <= s && n <= s, "tile {k}x{n} exceeds array {s}");
+        if matches!(self.dp, Datapath::Exact) {
+            for mi in 0..m {
+                for j in 0..n {
+                    let mut acc = 0i64;
                     for p in 0..k {
-                        c[mi * n + j] += mul.mul(a[mi * k + p] as i64, b[p * n + j] as i64);
+                        acc += a[mi * lda + p] as i64 * b[p * ldb + j] as i64;
                     }
+                    c[mi * ldc + j] += acc;
                 }
-                Variant::EntMbe | Variant::EntOurs => {
+            }
+            return;
+        }
+        // Window wide enough for a dot product of one chunk of int8
+        // products.
+        let w = dot_window(k.min(FUSE_CHUNK));
+        let mut rows = [0u64; ROWS_PER_PRODUCT * FUSE_CHUNK];
+        for mi in 0..m {
+            for j in 0..n {
+                let mut acc = 0i64;
+                let mut p0 = 0;
+                while p0 < k {
+                    let pk = FUSE_CHUNK.min(k - p0);
                     // Fused path: gather every multiplier's PP rows into
-                    // one carry-save tree, resolve once.
-                    let mut rows = Vec::new();
-                    for p in 0..k {
-                        let a_val = a[mi * k + p] as i64;
-                        let b_val = b[p * n + j] as i64;
-                        let digits: Vec<i8> = match tcu.variant {
-                            Variant::EntMbe => {
-                                crate::encoding::mbe::booth_digits(a_val, OPERAND_BITS)
+                    // one carry-save tree, resolve once per chunk.
+                    let mut nr = 0;
+                    for p in p0..p0 + pk {
+                        let a_val = a[mi * lda + p];
+                        let b_val = b[p * ldb + j] as i64;
+                        match &self.dp {
+                            Datapath::EntLut(_) => {
+                                let code = lut_i8(a_val);
+                                let neg = code.sign();
+                                for i in 0..code.ndigits() {
+                                    let d = code.digit(i);
+                                    let d = if neg { -d } else { d };
+                                    push_rows_for_digit(d, b_val, i, w, &mut rows, &mut nr);
+                                }
+                                if code.cin() {
+                                    let d = if neg { -1 } else { 1 };
+                                    push_rows_for_digit(
+                                        d,
+                                        b_val,
+                                        code.ndigits(),
+                                        w,
+                                        &mut rows,
+                                        &mut nr,
+                                    );
+                                }
                             }
                             _ => {
-                                let code = encode_signed(a_val, OPERAND_BITS);
-                                let mut d = code.mag.digits.clone();
-                                if code.mag.cin {
-                                    d.push(1);
-                                }
-                                // Sign applies to the selected multiple.
-                                if code.sign {
-                                    d.iter_mut().for_each(|x| *x = -*x);
-                                }
-                                d
+                                // Booth digits recoded on the fly
+                                // (EN-T(MBE) keeps MBE selectors).
+                                push_booth_rows(
+                                    a_val as i64,
+                                    OPERAND_BITS,
+                                    b_val,
+                                    w,
+                                    &mut rows,
+                                    &mut nr,
+                                );
                             }
-                        };
-                        for (i, &d) in digits.iter().enumerate() {
-                            rows.extend(rows_for_digit(d, b_val, i, w));
                         }
                     }
-                    let red = reduce(&rows, w);
-                    let (bits, _) = Cla::new(w).add(red.sum, red.carry, false);
-                    c[mi * n + j] += unwrap(bits, w);
+                    let (sv, cv) = reduce_rows_fast(&rows[..nr], w);
+                    let (sum, _) = Cla::new(w).add(sv, cv, false);
+                    acc += unwrap(sum, w);
+                    p0 += pk;
                 }
+                c[mi * ldc + j] += acc;
             }
         }
     }
-    c
 }
 
 #[cfg(test)]

@@ -10,11 +10,11 @@
 //! (a 1024-GOPS cube of two 8³ arrays needs 128 encoders and saves only
 //! 896, vs 32 saving 992 for a 32×32 2D array).
 
+use super::engine::{Datapath, TcuEngine};
 use super::trees::{self, with_activity};
-use super::{CellSpec, Tcu, OPERAND_BITS};
+use super::{ArchKind, CellSpec, Tcu, OPERAND_BITS};
 use crate::arith::adders::Accumulator;
-use crate::arith::multiplier::{MultKind, Multiplier};
-use crate::encoding::ent::encode_signed;
+use crate::encoding::packed::lut_i8;
 use crate::gates::Gate;
 use crate::pe::Variant;
 
@@ -48,40 +48,65 @@ pub fn cells(s: usize, variant: Variant) -> CellSpec {
     }
 }
 
-/// Functional dataflow: one s×s×s fragment per "cycle"; A[m][k] is
-/// encoded once at the face and broadcast along the n axis (reused by s
-/// multipliers), trees reduce over k.
-pub fn matmul(tcu: &Tcu, a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i64> {
-    let s = tcu.size;
-    assert!(m <= s && k <= s && n <= s, "tile {m}x{k}x{n} exceeds cube {s}");
-    let mult = Multiplier::new(tcu.variant.mult_kind(), OPERAND_BITS);
-    let mut c = vec![0i64; m * n];
-    for mi in 0..m {
-        for p in 0..k {
-            let a_val = a[mi * k + p] as i64;
-            match tcu.variant {
-                Variant::EntOurs => {
-                    let code = encode_signed(a_val, OPERAND_BITS); // face encoder, once
-                    for j in 0..n {
-                        c[mi * n + j] += mult.mul_encoded(&code, b[p * n + j] as i64);
+/// The 3D Cube dataflow as a [`TcuEngine`]: one s×s×s fragment per
+/// "cycle"; A[m][k] is encoded once at the face (one LUT lookup) and
+/// broadcast along the n axis (reused by s multipliers), trees reduce
+/// over k.
+#[derive(Clone, Copy, Debug)]
+pub struct Cube3dEngine {
+    tcu: Tcu,
+    dp: Datapath,
+}
+
+impl Cube3dEngine {
+    pub fn new(tcu: Tcu) -> Cube3dEngine {
+        assert_eq!(tcu.kind, ArchKind::Cube3d);
+        Cube3dEngine {
+            tcu,
+            dp: Datapath::new(tcu.variant, OPERAND_BITS),
+        }
+    }
+}
+
+impl TcuEngine for Cube3dEngine {
+    fn tcu(&self) -> &Tcu {
+        &self.tcu
+    }
+
+    fn execute_tile(
+        &self,
+        a: &[i8],
+        lda: usize,
+        b: &[i8],
+        ldb: usize,
+        c: &mut [i64],
+        ldc: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        let s = self.tcu.size;
+        assert!(m <= s && k <= s && n <= s, "tile {m}x{k}x{n} exceeds cube {s}");
+        for mi in 0..m {
+            for p in 0..k {
+                let a_val = a[mi * lda + p];
+                match &self.dp {
+                    Datapath::EntLut(_) => {
+                        let code = lut_i8(a_val); // face encoder, once
+                        for j in 0..n {
+                            c[mi * ldc + j] += self.dp.mul_code(code, b[p * ldb + j] as i64);
+                        }
                     }
-                }
-                Variant::EntMbe => {
-                    let mul = Multiplier::new(MultKind::MbeInternal, OPERAND_BITS);
-                    for j in 0..n {
-                        c[mi * n + j] += mul.mul(a_val, b[p * n + j] as i64);
-                    }
-                }
-                Variant::Baseline => {
-                    let mul = Multiplier::new(MultKind::DwIp, OPERAND_BITS);
-                    for j in 0..n {
-                        c[mi * n + j] += mul.mul(a_val, b[p * n + j] as i64);
+                    dp => {
+                        let av = a_val as i64;
+                        for j in 0..n {
+                            c[mi * ldc + j] += dp.mul(av, b[p * ldb + j] as i64);
+                        }
                     }
                 }
             }
         }
     }
-    c
 }
 
 #[cfg(test)]

@@ -1,0 +1,441 @@
+//! The [`TcuEngine`] trait — one interface over the five TCU dataflows.
+//!
+//! The paper's central claim (Fig 2) is that the EN-T transformation is
+//! functionally transparent across all five mainstream TCU
+//! microarchitectures. This module makes that claim structural: every
+//! architecture implements [`TcuEngine::execute_tile`] — its bit-accurate
+//! in-array dataflow over one tile — and everything else (M/K/N
+//! blocking, psum recombination, cycle/event accounting, parallelism) is
+//! shared:
+//!
+//! * the tile grid comes from the shared planner
+//!   ([`crate::sim::planner::TilePlan`]);
+//! * [`TcuEngine::matmul_into`] walks it allocation-free over strided
+//!   operand views, splitting independent output **row bands** across
+//!   scoped threads when the problem is large enough to amortise them;
+//! * [`TcuEngine::stats`] reports the event counts the energy model
+//!   consumes.
+//!
+//! The same engine object therefore serves functional verification
+//! (`matmul` vs `gemm_ref`), cycle/energy reporting (`stats` feeding
+//! [`crate::soc::energy`]), and the serving path (the coordinator's
+//! native backend shards batches across engines).
+//!
+//! The per-MAC hot path is [`Datapath`]: baseline PEs multiply exactly
+//! (the DW-IP contract), EN-T(MBE) Booth-recodes on the fly, and
+//! EN-T(Ours) encodes by one lookup in the packed LUT
+//! ([`crate::encoding::packed::INT8_LUT`]) — zero heap allocations per
+//! operand on every route.
+
+use crate::arch::{ArchKind, Tcu, OPERAND_BITS};
+use crate::arith::multiplier::{MultKind, Multiplier};
+use crate::encoding::packed::{lut_i8, PackedCode};
+use crate::pe::Variant;
+use crate::sim::dataflow::{GemmShape, GemmStats};
+use crate::sim::planner::TilePlan;
+
+/// The per-MAC functional route a variant's PEs implement.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum Datapath {
+    /// Baseline DW-IP multiplier: opaque block, exact product.
+    Exact,
+    /// EN-T(MBE): Booth digits recoded on the fly, carry-save reduced.
+    Mbe(Multiplier),
+    /// EN-T(Ours): packed-LUT encoded multiplicand through the RME core.
+    EntLut(Multiplier),
+}
+
+impl Datapath {
+    pub fn new(variant: Variant, n: usize) -> Datapath {
+        match variant {
+            Variant::Baseline => Datapath::Exact,
+            Variant::EntMbe => Datapath::Mbe(Multiplier::new(MultKind::MbeInternal, n)),
+            Variant::EntOurs => Datapath::EntLut(Multiplier::new(MultKind::EntRme, n)),
+        }
+    }
+
+    /// One multiply with the multiplicand `a` entering the array fresh.
+    #[inline]
+    pub fn mul(&self, a: i64, b: i64) -> i64 {
+        match self {
+            Datapath::Exact => a * b,
+            Datapath::Mbe(m) => m.mul_mbe_fast(a, b),
+            Datapath::EntLut(m) => m.mul_packed(lut_i8(a as i8), b),
+        }
+    }
+
+    /// One multiply with a pre-encoded (already-looked-up) multiplicand —
+    /// the reuse path for broadcast/stationary operands.
+    #[inline]
+    pub fn mul_code(&self, code: PackedCode, b: i64) -> i64 {
+        match self {
+            Datapath::EntLut(m) => m.mul_packed(code, b),
+            // Non-EN-T variants never receive packed codes.
+            _ => unreachable!("mul_code on a non-EN-T datapath"),
+        }
+    }
+}
+
+/// A tensor computing engine: one of the five Fig 2 microarchitectures,
+/// executable tile-by-tile and schedulable through the shared planner.
+pub trait TcuEngine: Send + Sync {
+    /// The instance this engine drives.
+    fn tcu(&self) -> &Tcu;
+
+    /// Run one in-array tile pass through the architecture's dataflow,
+    /// **accumulating** `C[i][j] += Σ_p A[i][p]·B[p][j]` for the m×k×n
+    /// tile. Operands are strided row-major views: element `A[i][p]` is
+    /// `a[i*lda + p]`, `B[p][j]` is `b[p*ldb + j]`, `C[i][j]` is
+    /// `c[i*ldc + j]`. The tile must respect [`Tcu::tile_caps`].
+    #[allow(clippy::too_many_arguments)]
+    fn execute_tile(
+        &self,
+        a: &[i8],
+        lda: usize,
+        b: &[i8],
+        ldb: usize,
+        c: &mut [i64],
+        ldc: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+    );
+
+    /// Bit-accurate GEMM `C = A×B` (`a` M×K, `b` K×N row-major, `c` M×N
+    /// overwritten), tiled by the shared planner. Independent output row
+    /// bands run on scoped threads when the problem is large enough;
+    /// results are identical either way (exact integer accumulation over
+    /// disjoint outputs).
+    fn matmul_into(&self, a: &[i8], b: &[i8], c: &mut [i64], m: usize, k: usize, n: usize) {
+        assert_eq!(a.len(), m * k, "A shape");
+        assert_eq!(b.len(), k * n, "B shape");
+        assert_eq!(c.len(), m * n, "C shape");
+        c.fill(0);
+        if m == 0 || k == 0 || n == 0 {
+            return;
+        }
+        let plan = TilePlan::new(self.tcu(), GemmShape::new(m, k, n));
+        let bands = par_bands(self.tcu(), plan.shape.macs(), m);
+        if bands <= 1 {
+            run_band(self, a, b, c, 0, m, k, n, &plan);
+            return;
+        }
+        let rows_per = m.div_ceil(bands);
+        std::thread::scope(|scope| {
+            for (bi, band) in c.chunks_mut(rows_per * n).enumerate() {
+                let plan = &plan;
+                scope.spawn(move || {
+                    let rows = band.len() / n;
+                    run_band(self, a, b, band, bi * rows_per, rows, k, n, plan);
+                });
+            }
+        });
+    }
+
+    /// Allocating convenience over [`TcuEngine::matmul_into`].
+    fn matmul(&self, a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i64> {
+        let mut c = vec![0i64; m * n];
+        self.matmul_into(a, b, &mut c, m, k, n);
+        c
+    }
+
+    /// Event counts (cycles, port traffic, psum spills, encoder
+    /// activations) for a GEMM on this engine, via the shared planner.
+    fn stats(&self, g: GemmShape) -> GemmStats {
+        TilePlan::new(self.tcu(), g).stats()
+    }
+}
+
+/// How many parallel row bands are worth spawning: none unless the
+/// problem comfortably exceeds the per-band grain (bit-level MACs cost
+/// hundreds of ns, exact baseline MACs ~1 ns — thresholds differ by
+/// variant), then at most one band per hardware thread and per row.
+fn par_bands(tcu: &Tcu, macs: u64, m: usize) -> usize {
+    let grain: u64 = match tcu.variant {
+        Variant::Baseline => 1 << 22,
+        _ => 1 << 16,
+    };
+    if macs < 2 * grain || m < 2 {
+        return 1;
+    }
+    let hw = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    hw.min((macs / grain) as usize).min(m).max(1)
+}
+
+/// Walk the planner's tile grid over one output row band, calling the
+/// architecture's `execute_tile` per tile. `r0` is the band's first row
+/// in the full problem; `c_band` holds `rows` full output rows.
+#[allow(clippy::too_many_arguments)]
+fn run_band<E: TcuEngine + ?Sized>(
+    eng: &E,
+    a: &[i8],
+    b: &[i8],
+    c_band: &mut [i64],
+    r0: usize,
+    rows: usize,
+    k: usize,
+    n: usize,
+    plan: &TilePlan,
+) {
+    let (tm, tk, tn) = (plan.tm, plan.tk, plan.tn);
+    let mut mi = 0;
+    while mi < rows {
+        let mm = tm.min(rows - mi);
+        let mut ki = 0;
+        while ki < k {
+            let kk = tk.min(k - ki);
+            let mut ni = 0;
+            while ni < n {
+                let nn = tn.min(n - ni);
+                eng.execute_tile(
+                    &a[(r0 + mi) * k + ki..],
+                    k,
+                    &b[ki * n + ni..],
+                    n,
+                    &mut c_band[mi * n + ni..],
+                    n,
+                    mm,
+                    kk,
+                    nn,
+                );
+                ni += nn;
+            }
+            ki += kk;
+        }
+        mi += mm;
+    }
+}
+
+/// Zero-cost enum dispatch over the five engines (so callers that know
+/// the [`Tcu`] at runtime avoid boxing; `dyn TcuEngine` works too).
+#[derive(Clone, Copy, Debug)]
+pub enum AnyEngine {
+    Matrix2d(super::matrix2d::Matrix2dEngine),
+    Array1d2d(super::array1d2d::Array1d2dEngine),
+    SystolicOs(super::systolic::SystolicOsEngine),
+    SystolicWs(super::systolic::SystolicWsEngine),
+    Cube3d(super::cube3d::Cube3dEngine),
+}
+
+/// Build the engine for a TCU instance.
+pub fn engine_for(tcu: Tcu) -> AnyEngine {
+    match tcu.kind {
+        ArchKind::Matrix2d => AnyEngine::Matrix2d(super::matrix2d::Matrix2dEngine::new(tcu)),
+        ArchKind::Array1d2d => AnyEngine::Array1d2d(super::array1d2d::Array1d2dEngine::new(tcu)),
+        ArchKind::SystolicOs => AnyEngine::SystolicOs(super::systolic::SystolicOsEngine::new(tcu)),
+        ArchKind::SystolicWs => AnyEngine::SystolicWs(super::systolic::SystolicWsEngine::new(tcu)),
+        ArchKind::Cube3d => AnyEngine::Cube3d(super::cube3d::Cube3dEngine::new(tcu)),
+    }
+}
+
+impl TcuEngine for AnyEngine {
+    fn tcu(&self) -> &Tcu {
+        match self {
+            AnyEngine::Matrix2d(e) => e.tcu(),
+            AnyEngine::Array1d2d(e) => e.tcu(),
+            AnyEngine::SystolicOs(e) => e.tcu(),
+            AnyEngine::SystolicWs(e) => e.tcu(),
+            AnyEngine::Cube3d(e) => e.tcu(),
+        }
+    }
+
+    fn execute_tile(
+        &self,
+        a: &[i8],
+        lda: usize,
+        b: &[i8],
+        ldb: usize,
+        c: &mut [i64],
+        ldc: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        match self {
+            AnyEngine::Matrix2d(e) => e.execute_tile(a, lda, b, ldb, c, ldc, m, k, n),
+            AnyEngine::Array1d2d(e) => e.execute_tile(a, lda, b, ldb, c, ldc, m, k, n),
+            AnyEngine::SystolicOs(e) => e.execute_tile(a, lda, b, ldb, c, ldc, m, k, n),
+            AnyEngine::SystolicWs(e) => e.execute_tile(a, lda, b, ldb, c, ldc, m, k, n),
+            AnyEngine::Cube3d(e) => e.execute_tile(a, lda, b, ldb, c, ldc, m, k, n),
+        }
+    }
+}
+
+/// Shared helper for the per-MAC window of a dot-product reduction over
+/// at most `k` int8 products (2n product bits + negation slack + tree
+/// growth).
+pub(crate) fn dot_window(k: usize) -> usize {
+    2 * OPERAND_BITS + 4 + (usize::BITS - k.leading_zeros()) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{gemm_ref, ALL_ARCHS};
+    use crate::pe::ALL_VARIANTS;
+    use crate::util::prng::Rng;
+
+    /// The acceptance-criterion equivalence: every architecture ×
+    /// variant computes the exact reference GEMM **through the trait**,
+    /// on shapes that exercise multi-tile blocking in all three dims.
+    #[test]
+    fn trait_matmul_matches_reference_all_arch_variants() {
+        let mut rng = Rng::new(0xE6);
+        for arch in ALL_ARCHS {
+            let size = if arch == ArchKind::Cube3d { 4 } else { 8 };
+            for variant in ALL_VARIANTS {
+                let eng = engine_for(Tcu::new(arch, size, variant));
+                let (m, k, n) = (11, 19, 9);
+                let a = rng.i8_vec(m * k);
+                let b = rng.i8_vec(k * n);
+                assert_eq!(
+                    eng.matmul(&a, &b, m, k, n),
+                    gemm_ref(&a, &b, m, k, n),
+                    "{} {}",
+                    arch.name(),
+                    variant.name()
+                );
+            }
+        }
+    }
+
+    /// Strided tile views: running a tile out of the middle of a larger
+    /// matrix must equal the gathered-copy result.
+    #[test]
+    fn execute_tile_respects_strides() {
+        let mut rng = Rng::new(0xE7);
+        let (big_m, big_k, big_n) = (10, 12, 11);
+        let a = rng.i8_vec(big_m * big_k);
+        let b = rng.i8_vec(big_k * big_n);
+        let (m0, k0, n0) = (3, 5, 2); // tile origin
+        let (m, k, n) = (4, 6, 7);
+        for arch in ALL_ARCHS {
+            let eng = engine_for(Tcu::new(arch, 8, Variant::EntOurs));
+            let mut c = vec![0i64; m * n];
+            eng.execute_tile(
+                &a[m0 * big_k + k0..],
+                big_k,
+                &b[k0 * big_n + n0..],
+                big_n,
+                &mut c,
+                n,
+                m,
+                k,
+                n,
+            );
+            // Gathered reference.
+            let mut at = Vec::new();
+            for i in 0..m {
+                at.extend_from_slice(&a[(m0 + i) * big_k + k0..(m0 + i) * big_k + k0 + k]);
+            }
+            let mut bt = Vec::new();
+            for p in 0..k {
+                bt.extend_from_slice(&b[(k0 + p) * big_n + n0..(k0 + p) * big_n + n0 + n]);
+            }
+            assert_eq!(c, gemm_ref(&at, &bt, m, k, n), "{}", arch.name());
+        }
+    }
+
+    /// `execute_tile` accumulates: two passes double the result.
+    #[test]
+    fn execute_tile_accumulates() {
+        let mut rng = Rng::new(0xE8);
+        let (m, k, n) = (4, 8, 5);
+        let a = rng.i8_vec(m * k);
+        let b = rng.i8_vec(k * n);
+        let eng = engine_for(Tcu::new(ArchKind::SystolicOs, 8, Variant::EntOurs));
+        let mut c = vec![0i64; m * n];
+        eng.execute_tile(&a, k, &b, n, &mut c, n, m, k, n);
+        eng.execute_tile(&a, k, &b, n, &mut c, n, m, k, n);
+        let reference = gemm_ref(&a, &b, m, k, n);
+        let doubled: Vec<i64> = reference.iter().map(|x| 2 * x).collect();
+        assert_eq!(c, doubled);
+    }
+
+    /// The parallel band split is bit-identical to the serial walk (the
+    /// shapes here exceed the bit-level parallel threshold, so
+    /// `matmul` takes the threaded path on multi-core hosts).
+    #[test]
+    fn parallel_bands_match_serial() {
+        let mut rng = Rng::new(0xE9);
+        let (m, k, n) = (96, 64, 48); // 294912 MACs > 2·2^16
+        let a = rng.i8_vec(m * k);
+        let b = rng.i8_vec(k * n);
+        for arch in [ArchKind::SystolicOs, ArchKind::Matrix2d] {
+            let eng = engine_for(Tcu::new(arch, 16, Variant::EntOurs));
+            assert_eq!(
+                eng.matmul(&a, &b, m, k, n),
+                gemm_ref(&a, &b, m, k, n),
+                "{}",
+                arch.name()
+            );
+        }
+    }
+
+    /// Band-offset arithmetic, exercised deterministically (independent
+    /// of `available_parallelism`): splitting the output rows into
+    /// uneven bands and walking each with `run_band` must reproduce the
+    /// whole-problem result exactly.
+    #[test]
+    fn explicit_band_split_reproduces_whole_problem() {
+        let mut rng = Rng::new(0xEB);
+        let (m, k, n) = (13, 20, 9);
+        let a = rng.i8_vec(m * k);
+        let b = rng.i8_vec(k * n);
+        for arch in ALL_ARCHS {
+            let size = if arch == ArchKind::Cube3d { 4 } else { 8 };
+            let eng = engine_for(Tcu::new(arch, size, Variant::EntOurs));
+            let plan = TilePlan::new(eng.tcu(), GemmShape::new(m, k, n));
+            let mut c = vec![0i64; m * n];
+            // Three uneven bands: rows [0,5), [5,6), [6,13).
+            for (r0, rows) in [(0usize, 5usize), (5, 1), (6, 7)] {
+                run_band(
+                    &eng,
+                    &a,
+                    &b,
+                    &mut c[r0 * n..(r0 + rows) * n],
+                    r0,
+                    rows,
+                    k,
+                    n,
+                    &plan,
+                );
+            }
+            assert_eq!(c, gemm_ref(&a, &b, m, k, n), "{}", arch.name());
+        }
+    }
+
+    /// Engines are usable as trait objects (the serving path boxes
+    /// them).
+    #[test]
+    fn dyn_engine_works() {
+        let eng: Box<dyn TcuEngine> = Box::new(engine_for(Tcu::new(
+            ArchKind::Cube3d,
+            4,
+            Variant::EntOurs,
+        )));
+        let mut rng = Rng::new(0xEA);
+        let (m, k, n) = (5, 9, 6);
+        let a = rng.i8_vec(m * k);
+        let b = rng.i8_vec(k * n);
+        assert_eq!(eng.matmul(&a, &b, m, k, n), gemm_ref(&a, &b, m, k, n));
+        let st = eng.stats(GemmShape::new(64, 64, 64));
+        assert_eq!(st.macs, 64 * 64 * 64);
+    }
+
+    /// The trait's stats equal the planner's (and the legacy free
+    /// function's) numbers.
+    #[test]
+    fn stats_via_trait_match_planner() {
+        let tcu = Tcu::new(ArchKind::SystolicWs, 32, Variant::EntOurs);
+        let eng = engine_for(tcu);
+        let g = GemmShape::new(64, 576, 196);
+        let via_trait = eng.stats(g);
+        let via_planner = TilePlan::new(&tcu, g).stats();
+        assert_eq!(via_trait.cycles, via_planner.cycles);
+        assert_eq!(via_trait.encodes, via_planner.encodes);
+        assert_eq!(via_trait.psum_spills, via_planner.psum_spills);
+    }
+}

@@ -10,11 +10,11 @@
 //! EN-T overlay: S encoders on the broadcast multiplicand pathway; every
 //! PE multiplier drops its internal encoder.
 
+use super::engine::{Datapath, TcuEngine};
 use super::trees::{self, with_activity};
-use super::{CellSpec, Tcu, OPERAND_BITS};
+use super::{ArchKind, CellSpec, Tcu, OPERAND_BITS};
 use crate::arith::adders::Accumulator;
-use crate::arith::multiplier::{MultKind, Multiplier};
-use crate::encoding::ent::encode_signed;
+use crate::encoding::packed::lut_i8;
 use crate::gates::Gate;
 use crate::pe::Variant;
 
@@ -58,44 +58,70 @@ pub fn cells(s: usize, variant: Variant) -> CellSpec {
     }
 }
 
-/// Functional dataflow: weights B stationary (K rows × N cols), output
-/// rows of A stream; each streamed multiplicand element is encoded once
-/// per row and broadcast to all N column multipliers.
-pub fn matmul(tcu: &Tcu, a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i64> {
-    let s = tcu.size;
-    assert!(k <= s && n <= s, "tile {k}x{n} exceeds array {s}");
-    let mult = Multiplier::new(tcu.variant.mult_kind(), OPERAND_BITS);
-    let mut c = vec![0i64; m * n];
-    for mi in 0..m {
-        // One broadcast wave: row tree sums S products per column lane.
-        for p in 0..k {
-            let a_val = a[mi * k + p] as i64;
-            match tcu.variant {
-                Variant::Baseline | Variant::EntMbe => {
-                    let mul = Multiplier::new(
-                        if tcu.variant == Variant::Baseline {
-                            MultKind::DwIp
-                        } else {
-                            MultKind::MbeInternal
-                        },
-                        OPERAND_BITS,
-                    );
-                    for j in 0..n {
-                        c[mi * n + j] += mul.mul(a_val, b[p * n + j] as i64);
+/// The 2D Matrix dataflow as a [`TcuEngine`]: weights B stationary
+/// (K rows × N cols), output rows of A stream; each streamed multiplicand
+/// element is encoded once at the row edge (one LUT lookup, no heap) and
+/// broadcast to all N column multipliers — the paper's reuse insight made
+/// explicit.
+#[derive(Clone, Copy, Debug)]
+pub struct Matrix2dEngine {
+    tcu: Tcu,
+    dp: Datapath,
+}
+
+impl Matrix2dEngine {
+    pub fn new(tcu: Tcu) -> Matrix2dEngine {
+        assert_eq!(tcu.kind, ArchKind::Matrix2d);
+        Matrix2dEngine {
+            tcu,
+            dp: Datapath::new(tcu.variant, OPERAND_BITS),
+        }
+    }
+}
+
+impl TcuEngine for Matrix2dEngine {
+    fn tcu(&self) -> &Tcu {
+        &self.tcu
+    }
+
+    fn execute_tile(
+        &self,
+        a: &[i8],
+        lda: usize,
+        b: &[i8],
+        ldb: usize,
+        c: &mut [i64],
+        ldc: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        let s = self.tcu.size;
+        assert!(k <= s && n <= s, "tile {k}x{n} exceeds array {s}");
+        for mi in 0..m {
+            // One broadcast wave: row tree sums S products per column
+            // lane.
+            for p in 0..k {
+                let a_val = a[mi * lda + p];
+                match &self.dp {
+                    Datapath::EntLut(_) => {
+                        // Encode ONCE at the row edge; the code is reused
+                        // by every column multiplier.
+                        let code = lut_i8(a_val);
+                        for j in 0..n {
+                            c[mi * ldc + j] += self.dp.mul_code(code, b[p * ldb + j] as i64);
+                        }
                     }
-                }
-                Variant::EntOurs => {
-                    // Encode ONCE at the row edge; reuse across columns —
-                    // the paper's reuse insight made explicit.
-                    let code = encode_signed(a_val, OPERAND_BITS);
-                    for j in 0..n {
-                        c[mi * n + j] += mult.mul_encoded(&code, b[p * n + j] as i64);
+                    dp => {
+                        let av = a_val as i64;
+                        for j in 0..n {
+                            c[mi * ldc + j] += dp.mul(av, b[p * ldb + j] as i64);
+                        }
                     }
                 }
             }
         }
     }
-    c
 }
 
 #[cfg(test)]

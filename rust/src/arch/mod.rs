@@ -3,19 +3,26 @@
 //!
 //! * a **cell composition** — what multipliers / registers / adder trees
 //!   / accumulators the array instantiates for a given size and variant;
-//! * a **functional dataflow** — a bit-accurate matmul through the
-//!   array's actual data movement (broadcast, systolic flow, cube
-//!   reduction), used to prove EN-T changes nothing functionally;
+//! * a **functional dataflow** — a bit-accurate [`engine::TcuEngine`]
+//!   implementation driving the array's actual data movement (broadcast,
+//!   systolic flow, cube reduction), used to prove EN-T changes nothing
+//!   functionally;
 //! * the **EN-T overlay** — external column encoders, widened operand
 //!   paths, and the per-PE multiplier swap (see [`crate::pe::Variant`]).
 //!
-//! Array cost = cells × routing overhead ([`crate::hw::wiring`]).
+//! The engines share one tile planner and hot path (see [`engine`]):
+//! each arch file contributes only its per-tile dataflow
+//! (`execute_tile`) and its cell composition (`cells*`). Array cost =
+//! cells × routing overhead ([`crate::hw::wiring`]).
 
 pub mod array1d2d;
 pub mod cube3d;
+pub mod engine;
 pub mod matrix2d;
 pub mod systolic;
 pub mod trees;
+
+pub use engine::{engine_for, AnyEngine, TcuEngine};
 
 use crate::gates::Cost;
 use crate::hw::wiring::{self, RoutingFit};
@@ -298,20 +305,18 @@ impl Tcu {
         self.gops() / (self.cost().total().power_uw / 1e6)
     }
 
+    /// The [`TcuEngine`] driving this instance's dataflow (enum-dispatch,
+    /// zero-cost to build).
+    pub fn engine(&self) -> AnyEngine {
+        engine_for(*self)
+    }
+
     /// Functional matmul through the architecture's dataflow:
     /// `a` is M×K row-major, `b` is K×N row-major; returns M×N (i64).
-    /// Dimensions must fit one tile (≤ array capacity); the scheduler in
-    /// [`crate::sim`] handles larger problems.
+    /// Any shape is accepted — the engine's shared planner blocks
+    /// problems larger than one array tile.
     pub fn matmul(&self, a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i64> {
-        assert_eq!(a.len(), m * k, "A shape");
-        assert_eq!(b.len(), k * n, "B shape");
-        match self.kind {
-            ArchKind::Matrix2d => matrix2d::matmul(self, a, b, m, k, n),
-            ArchKind::Array1d2d => array1d2d::matmul(self, a, b, m, k, n),
-            ArchKind::SystolicOs => systolic::matmul_os(self, a, b, m, k, n),
-            ArchKind::SystolicWs => systolic::matmul_ws(self, a, b, m, k, n),
-            ArchKind::Cube3d => cube3d::matmul(self, a, b, m, k, n),
-        }
+        self.engine().matmul(a, b, m, k, n)
     }
 
     /// Maximum (m, k, n) tile this instance accepts in one pass.

@@ -16,19 +16,15 @@
 //! edges; WS encodes the stationary weights at load time (exactly the
 //! paper's SoC placement: encoders on the Weight Buffer readout).
 
+use super::engine::{Datapath, TcuEngine};
 use super::trees::{self, with_activity};
-use super::{CellSpec, Tcu, OPERAND_BITS};
+use super::{ArchKind, CellSpec, Tcu, OPERAND_BITS};
 use crate::arith::adders::{Accumulator, Cla};
-use crate::arith::multiplier::{MultKind, Multiplier};
-use crate::encoding::ent::encode_signed;
+use crate::encoding::packed::lut_i8;
 use crate::gates::Gate;
-use crate::pe::{Pe, Variant};
+use crate::pe::Variant;
 
 const STATIONARY_REG_ACTIVITY: f64 = 0.1;
-
-fn mult_for(variant: Variant) -> Multiplier {
-    Multiplier::new(variant.mult_kind(), OPERAND_BITS)
-}
 
 /// Output-stationary cell composition.
 pub fn cells_os(s: usize, variant: Variant) -> CellSpec {
@@ -114,86 +110,127 @@ pub fn cells_ws(s: usize, variant: Variant) -> CellSpec {
     }
 }
 
-/// Output-stationary functional dataflow, cycle-accurate skewed flow:
-/// PE(i,j) consumes A[i][p] and B[p][j] at cycle t = p + i + j.
-pub fn matmul_os(tcu: &Tcu, a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i64> {
-    let s = tcu.size;
-    assert!(m <= s && n <= s, "tile {m}x{n} exceeds array {s}");
-    let mut pes: Vec<Pe> = (0..m * n)
-        .map(|_| Pe::new(tcu.variant, OPERAND_BITS, s))
-        .collect();
-    // Row-edge encoders (EN-T): encode each A element ONCE as it enters
-    // the array; the code then flows east, reused by every column —
-    // exactly one encode per multiplicand element (M·K total), the
-    // paper's reuse claim made literal.
-    let codes: Option<Vec<_>> = match tcu.variant {
-        Variant::EntOurs => Some(
-            a.iter()
-                .map(|&v| encode_signed(v as i64, OPERAND_BITS))
-                .collect(),
-        ),
-        _ => None,
-    };
-    let total_cycles = k + m + n; // fill + stream + drain
-    for t in 0..total_cycles {
-        for i in 0..m {
-            for j in 0..n {
-                let p = t as i64 - i as i64 - j as i64;
-                if p < 0 || p >= k as i64 {
-                    continue;
-                }
-                let p = p as usize;
-                let a_val = a[i * k + p] as i64;
-                let b_val = b[p * n + j] as i64;
-                match &codes {
-                    Some(cs) => pes[i * n + j].mac_encoded(&cs[i * k + p], b_val),
-                    None => pes[i * n + j].mac(a_val, b_val),
-                }
-            }
-        }
-    }
-    // Drain the output-stationary accumulators.
-    (0..m * n).map(|idx| pes[idx].acc()).collect()
+/// Output-stationary dataflow as a [`TcuEngine`], cycle-accurate skewed
+/// flow: PE(i,j) consumes A[i][p] and B[p][j] at cycle t = p + i + j and
+/// accumulates its C element in place (the output slice *is* the
+/// output-stationary register file).
+///
+/// Row-edge encoders (EN-T): each A element is encoded ONCE as it enters
+/// the array (one LUT lookup); the code then flows east, reused by every
+/// column — exactly one encode per multiplicand element (M·K total), the
+/// paper's reuse claim made literal.
+#[derive(Clone, Copy, Debug)]
+pub struct SystolicOsEngine {
+    tcu: Tcu,
+    dp: Datapath,
 }
 
-/// Weight-stationary functional dataflow: weights encoded once at load
-/// (the Weight Buffer readout encoders), activations stream.
-pub fn matmul_ws(tcu: &Tcu, a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i64> {
-    let s = tcu.size;
-    assert!(k <= s && n <= s, "tile {k}x{n} exceeds array {s}");
-    let mult = mult_for(tcu.variant);
-    // Load phase: encode the stationary operand once per PE.
-    let codes: Option<Vec<_>> = match tcu.variant {
-        Variant::EntOurs => Some(
-            (0..k * n)
-                .map(|idx| encode_signed(b[idx] as i64, OPERAND_BITS))
-                .collect(),
-        ),
-        _ => None,
-    };
-    let mut c = vec![0i64; m * n];
-    // Stream phase: activation row mi enters row p at cycle mi + p; the
-    // psum for C[mi][j] exits after k hops. Skew does not change values;
-    // we iterate in dependency order.
-    for mi in 0..m {
-        for j in 0..n {
-            let mut psum = 0i64;
-            for p in 0..k {
-                let a_val = a[mi * k + p] as i64;
-                psum += match (&codes, tcu.variant) {
-                    (Some(cs), Variant::EntOurs) => mult.mul_encoded(&cs[p * n + j], a_val),
-                    (_, Variant::EntMbe) => {
-                        Multiplier::new(MultKind::MbeInternal, OPERAND_BITS)
-                            .mul(b[p * n + j] as i64, a_val)
-                    }
-                    _ => Multiplier::new(MultKind::DwIp, OPERAND_BITS)
-                        .mul(b[p * n + j] as i64, a_val),
-                };
-            }
-            c[mi * n + j] = psum;
+impl SystolicOsEngine {
+    pub fn new(tcu: Tcu) -> SystolicOsEngine {
+        assert_eq!(tcu.kind, ArchKind::SystolicOs);
+        SystolicOsEngine {
+            tcu,
+            dp: Datapath::new(tcu.variant, OPERAND_BITS),
         }
     }
-    c
+}
+
+impl TcuEngine for SystolicOsEngine {
+    fn tcu(&self) -> &Tcu {
+        &self.tcu
+    }
+
+    fn execute_tile(
+        &self,
+        a: &[i8],
+        lda: usize,
+        b: &[i8],
+        ldb: usize,
+        c: &mut [i64],
+        ldc: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        let s = self.tcu.size;
+        assert!(m <= s && n <= s, "tile {m}x{n} exceeds array {s}");
+        let total_cycles = k + m + n; // fill + stream + drain
+        for t in 0..total_cycles {
+            for i in 0..m {
+                for j in 0..n {
+                    let p = t as i64 - i as i64 - j as i64;
+                    if p < 0 || p >= k as i64 {
+                        continue;
+                    }
+                    let p = p as usize;
+                    let a_val = a[i * lda + p];
+                    let b_val = b[p * ldb + j] as i64;
+                    c[i * ldc + j] += match &self.dp {
+                        Datapath::EntLut(_) => self.dp.mul_code(lut_i8(a_val), b_val),
+                        dp => dp.mul(a_val as i64, b_val),
+                    };
+                }
+            }
+        }
+    }
+}
+
+/// Weight-stationary dataflow as a [`TcuEngine`]: weights encoded once
+/// at load (the Weight Buffer readout encoders — one LUT lookup per
+/// resident weight), activations stream east while psums flow south.
+/// Skew does not change values; the loop iterates in dependency order.
+#[derive(Clone, Copy, Debug)]
+pub struct SystolicWsEngine {
+    tcu: Tcu,
+    dp: Datapath,
+}
+
+impl SystolicWsEngine {
+    pub fn new(tcu: Tcu) -> SystolicWsEngine {
+        assert_eq!(tcu.kind, ArchKind::SystolicWs);
+        SystolicWsEngine {
+            tcu,
+            dp: Datapath::new(tcu.variant, OPERAND_BITS),
+        }
+    }
+}
+
+impl TcuEngine for SystolicWsEngine {
+    fn tcu(&self) -> &Tcu {
+        &self.tcu
+    }
+
+    fn execute_tile(
+        &self,
+        a: &[i8],
+        lda: usize,
+        b: &[i8],
+        ldb: usize,
+        c: &mut [i64],
+        ldc: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        let s = self.tcu.size;
+        assert!(k <= s && n <= s, "tile {k}x{n} exceeds array {s}");
+        for mi in 0..m {
+            for j in 0..n {
+                let mut psum = 0i64;
+                for p in 0..k {
+                    let a_val = a[mi * lda + p] as i64;
+                    let b_val = b[p * ldb + j];
+                    psum += match &self.dp {
+                        // Stationary weight's code is the LUT entry —
+                        // encoded once per residency in the real array.
+                        Datapath::EntLut(_) => self.dp.mul_code(lut_i8(b_val), a_val),
+                        dp => dp.mul(b_val as i64, a_val),
+                    };
+                }
+                c[mi * ldc + j] += psum;
+            }
+        }
+    }
 }
 
 #[cfg(test)]

@@ -14,12 +14,18 @@
 //! Every kind computes exact products; INT8×INT8 is tested exhaustively.
 
 use crate::arith::adders::Cla;
-use crate::arith::pp::{rows_for_digit, unwrap, PpRow};
-use crate::arith::wallace::{reduce, Reduction};
+use crate::arith::pp::{push_booth_rows, push_rows_for_digit, rows_for_digit, unwrap, PpRow};
+use crate::arith::wallace::{reduce, reduce_rows_fast, Reduction};
 use crate::encoding::ent::{encode_signed, SignedEntCode};
 use crate::encoding::mbe::booth_digits;
+use crate::encoding::packed::PackedCode;
 use crate::encoding::{fits_signed, Encoding};
 use crate::gates::{calib, Cost};
+
+/// Worst-case partial-product row count for one operand: ≤ 2 rows per
+/// digit for ≤ 16 digits (widths ≤ 32) plus the Cin row — 72 is
+/// comfortable slack shared by all the stack-buffered hot paths.
+pub(crate) const MAX_PP_ROWS: usize = 72;
 
 /// The four assemblies of Table 1c.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -79,17 +85,10 @@ impl Multiplier {
             }
             MultKind::EntRme => {
                 // In the real array the encoded multiplicand arrives on
-                // the wires; model that hand-off explicitly.
-                let code = encode_signed(a, n);
-                let wire = code.mag.wire_bits();
-                let recovered = crate::encoding::ent::EntCode::from_wire_bits(wire, n);
-                self.mul_encoded(
-                    &SignedEntCode {
-                        sign: code.sign,
-                        mag: recovered,
-                    },
-                    b,
-                )
+                // the wires; [`PackedCode`] *is* the wire format (plus
+                // the sign line), so the hand-off is modelled with no
+                // intermediate expansion.
+                self.mul_packed(PackedCode::encode_signed(a, n), b)
             }
         }
     }
@@ -124,10 +123,53 @@ impl Multiplier {
                 &mut nr,
             );
         }
-        let (s, c) = crate::arith::wallace::reduce_rows_fast(&rows[..nr], w);
+        let (s, c) = reduce_rows_fast(&rows[..nr], w);
         let cla = Cla::new(w);
         let (bits, _) = cla.add(s, c, false);
         unwrap(bits, w)
+    }
+
+    /// RME hot path on the packed wire format: multiply a pre-encoded
+    /// multiplicand (one LUT lookup upstream for int8) by `b` with zero
+    /// heap allocations — digits are peeled straight off the packed
+    /// word, rows live in a stack buffer, and the reduction is the
+    /// bitwise carry-save fold.
+    #[inline]
+    pub fn mul_packed(&self, code: PackedCode, b: i64) -> i64 {
+        let n = self.width;
+        debug_assert_eq!(code.width(), n);
+        debug_assert!(fits_signed(b, n));
+        let b_eff = if code.sign() { -b } else { b };
+        let w = self.window();
+        let mut rows = [0u64; MAX_PP_ROWS];
+        let mut nr = 0;
+        for i in 0..code.ndigits() {
+            push_rows_for_digit(code.digit(i), b_eff, i, w, &mut rows, &mut nr);
+        }
+        if code.cin() {
+            push_rows_for_digit(1, b_eff, code.ndigits(), w, &mut rows, &mut nr);
+        }
+        let (s, c) = reduce_rows_fast(&rows[..nr], w);
+        let (bits, _) = Cla::new(w).add(s, c, false);
+        unwrap(bits, w)
+    }
+
+    /// MBE hot path: Booth-recode `a` digit-by-digit on the fly (no
+    /// digit vector) and reduce through the same stack-buffered
+    /// carry-save path. Bit-exact with [`MultKind::MbeInternal`]'s
+    /// structural route; used by the array dataflows so the EN-T(MBE)
+    /// variant is also allocation-free per MAC.
+    #[inline]
+    pub fn mul_mbe_fast(&self, a: i64, b: i64) -> i64 {
+        let n = self.width;
+        debug_assert!(fits_signed(a, n) && fits_signed(b, n));
+        let w = self.window();
+        let mut rows = [0u64; MAX_PP_ROWS];
+        let mut nr = 0;
+        push_booth_rows(a, n, b, w, &mut rows, &mut nr);
+        let (s, c) = reduce_rows_fast(&rows[..nr], w);
+        let (sum, _) = Cla::new(w).add(s, c, false);
+        unwrap(sum, w)
     }
 
     fn sum_digit_rows(&self, digits: &[i8], b: i64, _ent: bool) -> i64 {
@@ -275,6 +317,51 @@ mod tests {
             assert!(rme.power_uw < c.power_uw, "{}", kind.name());
             assert!(rme.delay_ns < c.delay_ns, "{}", kind.name());
         }
+    }
+
+    /// The packed-LUT hot path is exact for every int8 product and
+    /// agrees with the expanded-code route.
+    #[test]
+    fn exhaustive_int8_packed_path() {
+        use crate::encoding::packed::lut_i8;
+        let m = Multiplier::new(MultKind::EntRme, 8);
+        for a in -128i64..=127 {
+            let code = lut_i8(a as i8);
+            let expanded = code.to_signed_code();
+            for b in -128i64..=127 {
+                assert_eq!(m.mul_packed(code, b), a * b, "{a}×{b}");
+                assert_eq!(m.mul_encoded(&expanded, b), a * b, "{a}×{b} expanded");
+            }
+        }
+    }
+
+    /// The on-the-fly MBE hot path is exact for every int8 product.
+    #[test]
+    fn exhaustive_int8_mbe_fast_path() {
+        let m = Multiplier::new(MultKind::MbeInternal, 8);
+        for a in -128i64..=127 {
+            for b in -128i64..=127 {
+                assert_eq!(m.mul_mbe_fast(a, b), a * b, "{a}×{b}");
+            }
+        }
+    }
+
+    /// Wide-width agreement between the packed and vector-digit routes.
+    #[test]
+    fn prop_packed_wide_widths() {
+        check("mult-packed-wide", Config { cases: 400, ..Default::default() }, |rng| {
+            let n = *rng.pick(&[10usize, 12, 16, 24]);
+            let lo = -(1i64 << (n - 1));
+            let hi = (1i64 << (n - 1)) - 1;
+            let (a, b) = (rng.range_i64(lo, hi), rng.range_i64(lo, hi));
+            let m = Multiplier::new(MultKind::EntRme, n);
+            let code = crate::encoding::packed::PackedCode::encode_signed(a, n);
+            if m.mul_packed(code, b) == a * b && m.mul_mbe_fast(a, b) == a * b {
+                Ok(())
+            } else {
+                Err(format!("n={n} {a}×{b}"))
+            }
+        });
     }
 
     /// int8 corner cases exercised explicitly (beyond the exhaustive

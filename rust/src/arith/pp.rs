@@ -103,6 +103,23 @@ pub fn push_rows_for_digit(d: i8, b: i64, i: usize, width: usize, out: &mut [u64
     }
 }
 
+/// Booth-recode the signed `n`-bit multiplicand `a` on the fly (radix-4
+/// digit recurrence mᵢ = −2·a_{2i+1} + a_{2i} + a_{2i−1}) and push
+/// dᵢ·B rows for every digit — the shared allocation-free MBE route
+/// used by both the multiplier hot path and the fused array dataflow.
+#[inline]
+pub fn push_booth_rows(a: i64, n: usize, b: i64, width: usize, out: &mut [u64], nr: &mut usize) {
+    let bits = a as u64;
+    let mut prev = 0i64; // a_{-1} = 0
+    for i in 0..n / 2 {
+        let b0 = ((bits >> (2 * i)) & 1) as i64;
+        let b1 = ((bits >> (2 * i + 1)) & 1) as i64;
+        let d = (-2 * b1 + b0 + prev) as i8;
+        push_rows_for_digit(d, b, i, width, out, nr);
+        prev = b1;
+    }
+}
+
 /// Sum a set of rows within the window (reference semantics for tests;
 /// the real reduction path is `wallace::reduce`).
 pub fn sum_rows(rows: &[PpRow], width: usize) -> u64 {

@@ -6,11 +6,22 @@
 //! runtime, plus a digital twin of the §4.4 SoC that attaches
 //! energy/latency estimates to every response.
 //!
-//! Threading: PJRT handles are not `Send`, so the runtime lives inside a
-//! single executor thread; requests arrive over an mpsc channel and are
-//! grouped by the batching policy ([`batcher`]); responses return
-//! through per-request channels. Metrics ([`metrics`]) are lock-guarded
-//! aggregates shared with the caller.
+//! Threading: the runtime lives inside a single executor thread;
+//! requests arrive over an mpsc channel and are grouped by the batching
+//! policy ([`batcher`]); responses return through per-request channels.
+//! Metrics ([`metrics`]) are lock-guarded aggregates shared with the
+//! caller.
+//!
+//! Two backends serve a batch:
+//!
+//! * [`Backend::Artifacts`] — the AOT artifact registry
+//!   ([`crate::runtime::Runtime`]); startup fails fast if artifacts are
+//!   missing;
+//! * [`Backend::Native`] — no artifacts: a shard pool of
+//!   [`TcuEngine`](crate::arch::TcuEngine)s executes the quantized CNN
+//!   directly, splitting each batch's images across shards on scoped
+//!   threads. This is the zero-setup serving path (and what `ent serve
+//!   --native` runs).
 
 pub mod batcher;
 pub mod metrics;
@@ -21,13 +32,14 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
-
-use crate::arch::ArchKind;
+use crate::arch::{AnyEngine, ArchKind, Tcu};
+use crate::bail;
+use crate::nn::forward::QuantCnn;
 use crate::nn::zoo;
 use crate::pe::Variant;
 use crate::runtime::Runtime;
 use crate::soc::{energy, Soc};
+use crate::util::error::{Context, Result};
 use batcher::BatchPolicy;
 use metrics::{Metrics, Snapshot};
 
@@ -64,13 +76,25 @@ impl ModelSpec {
     }
 }
 
+/// Which executor serves the batches.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Load AOT artifacts from `artifact_dir`; fail fast if missing.
+    Artifacts,
+    /// Execute natively on `shards` parallel TCU engines — no artifacts
+    /// needed. Each batch's images are split across the shard pool.
+    Native { shards: usize },
+}
+
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
 pub struct Config {
     pub model: ModelSpec,
     pub artifact_dir: PathBuf,
     pub policy: BatchPolicy,
-    /// SoC digital-twin configuration for the energy estimates.
+    pub backend: Backend,
+    /// SoC digital-twin configuration for the energy estimates (also the
+    /// arch/variant of the native backend's engine shards).
     pub twin_arch: ArchKind,
     pub twin_variant: Variant,
 }
@@ -81,8 +105,21 @@ impl Default for Config {
             model: ModelSpec::tinynet(),
             artifact_dir: crate::runtime::default_artifact_dir(),
             policy: BatchPolicy::default(),
+            backend: Backend::Artifacts,
             twin_arch: ArchKind::SystolicOs,
             twin_variant: Variant::EntOurs,
+        }
+    }
+}
+
+impl Config {
+    /// Artifact-free native serving on `shards` engine shards.
+    pub fn native(shards: usize) -> Config {
+        Config {
+            backend: Backend::Native {
+                shards: shards.max(1),
+            },
+            ..Default::default()
         }
     }
 }
@@ -207,28 +244,117 @@ impl Drop for Coordinator {
     }
 }
 
+/// The executor's serving backend, built once at startup.
+enum Executor {
+    Artifacts(Runtime),
+    Native {
+        model: QuantCnn,
+        shards: Vec<AnyEngine>,
+    },
+}
+
+impl Executor {
+    /// Run one padded batch of images, returning batch×classes logits.
+    fn cnn_forward(
+        &self,
+        cfg: &Config,
+        flat: &[i8],
+        bsize: usize,
+    ) -> std::result::Result<Vec<f32>, String> {
+        match self {
+            Executor::Artifacts(rt) => rt
+                .cnn_forward(&cfg.model.artifact(bsize), flat, bsize, cfg.model.chw)
+                .map_err(|e| e.to_string()),
+            Executor::Native { model, shards } => {
+                let per = model.input_len();
+                let classes = model.classes;
+                let nshards = shards.len().max(1);
+                // Shard the batch: image i runs on engine shard i mod
+                // nshards; shards work in parallel on scoped threads and
+                // results are reassembled in order (so batching/sharding
+                // never changes logits).
+                let mut outs: Vec<Option<Vec<f32>>> = vec![None; bsize];
+                std::thread::scope(|scope| {
+                    let mut handles = Vec::new();
+                    for (si, eng) in shards.iter().enumerate() {
+                        handles.push(scope.spawn(move || {
+                            let mut mine = Vec::new();
+                            let mut i = si;
+                            while i < bsize {
+                                mine.push((i, model.forward(eng, &flat[i * per..(i + 1) * per])));
+                                i += nshards;
+                            }
+                            mine
+                        }));
+                    }
+                    for h in handles {
+                        for (i, l) in h.join().expect("shard thread") {
+                            outs[i] = Some(l);
+                        }
+                    }
+                });
+                let mut logits = Vec::with_capacity(bsize * classes);
+                for (i, o) in outs.into_iter().enumerate() {
+                    logits.extend(o.ok_or_else(|| format!("shard dropped image {i}"))?);
+                }
+                Ok(logits)
+            }
+        }
+    }
+}
+
 fn executor_thread(
     cfg: Config,
     rx: Receiver<Msg>,
     metrics: Arc<Metrics>,
     ready: Sender<std::result::Result<(), String>>,
 ) {
-    // Build the runtime and compile every batch-size artifact.
-    let mut rt = match Runtime::cpu() {
-        Ok(rt) => rt,
-        Err(e) => {
-            let _ = ready.send(Err(format!("PJRT client: {e}")));
-            return;
+    // Build the backend: artifact registry, or native engine shards.
+    let exec = match &cfg.backend {
+        Backend::Artifacts => {
+            let mut rt = match Runtime::cpu() {
+                Ok(rt) => rt,
+                Err(e) => {
+                    let _ = ready.send(Err(format!("runtime: {e}")));
+                    return;
+                }
+            };
+            let mut failed = None;
+            for &b in &cfg.model.batch_sizes {
+                let name = cfg.model.artifact(b);
+                let path = cfg.artifact_dir.join(format!("{name}.hlo.txt"));
+                if let Err(e) = rt.load_file(&name, &path) {
+                    failed = Some(format!("loading {name}: {e}"));
+                    break;
+                }
+            }
+            if let Some(e) = failed {
+                let _ = ready.send(Err(e));
+                return;
+            }
+            Executor::Artifacts(rt)
+        }
+        Backend::Native { shards } => {
+            let model = QuantCnn::tiny_native();
+            // The native model's geometry is fixed; a mismatched
+            // ModelSpec would slice batches at the wrong offsets, so
+            // fail startup instead.
+            if cfg.model.chw != model.chw || cfg.model.classes != model.classes {
+                let _ = ready.send(Err(format!(
+                    "native backend serves {:?}/{} classes, config asks {:?}/{}",
+                    model.chw, model.classes, cfg.model.chw, cfg.model.classes
+                )));
+                return;
+            }
+            let size = if cfg.twin_arch == ArchKind::Cube3d { 8 } else { 16 };
+            Executor::Native {
+                model,
+                shards: (0..(*shards).max(1))
+                    .map(|_| Tcu::new(cfg.twin_arch, size, cfg.twin_variant).engine())
+                    .collect(),
+            }
         }
     };
-    for &b in &cfg.model.batch_sizes {
-        let name = cfg.model.artifact(b);
-        let path = cfg.artifact_dir.join(format!("{name}.hlo.txt"));
-        if let Err(e) = rt.load_file(&name, &path) {
-            let _ = ready.send(Err(format!("loading {name}: {e}")));
-            return;
-        }
-    }
     // Digital twin: per-frame energy of the serving model on the
     // modelled SoC (precomputed once).
     let twin = Soc::paper_config(cfg.twin_arch, cfg.twin_variant);
@@ -260,23 +386,23 @@ fn executor_thread(
             match rx.recv_timeout(left) {
                 Ok(Msg::Job(j)) => batch.push(j),
                 Ok(Msg::Shutdown) => {
-                    run_batch(&rt, &cfg, &metrics, batch, input_len, classes, sim_energy_uj, sim_latency_ms);
+                    run_batch(&exec, &cfg, &metrics, batch, input_len, classes, sim_energy_uj, sim_latency_ms);
                     return;
                 }
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => {
-                    run_batch(&rt, &cfg, &metrics, batch, input_len, classes, sim_energy_uj, sim_latency_ms);
+                    run_batch(&exec, &cfg, &metrics, batch, input_len, classes, sim_energy_uj, sim_latency_ms);
                     return;
                 }
             }
         }
-        run_batch(&rt, &cfg, &metrics, batch, input_len, classes, sim_energy_uj, sim_latency_ms);
+        run_batch(&exec, &cfg, &metrics, batch, input_len, classes, sim_energy_uj, sim_latency_ms);
     }
 }
 
 #[allow(clippy::too_many_arguments)]
 fn run_batch(
-    rt: &Runtime,
+    exec: &Executor,
     cfg: &Config,
     metrics: &Metrics,
     batch: Vec<Job>,
@@ -301,15 +427,21 @@ fn run_batch(
     if valid.is_empty() {
         return;
     }
-    // Pick the smallest compiled batch size that fits, padding with the
-    // last image (discarded on output).
+    // Pick the execution batch size. Artifacts are compiled for fixed
+    // shapes, so take the smallest that fits and pad with the last
+    // image (discarded on output); the native engines run any shape,
+    // so execute exactly what's queued — padding would pay a full
+    // bit-level forward per discarded image.
     let got = valid.len();
-    let bsize = *cfg
-        .model
-        .batch_sizes
-        .iter()
-        .find(|&&b| b >= got)
-        .unwrap_or(cfg.model.batch_sizes.last().unwrap());
+    let bsize = match exec {
+        Executor::Native { .. } => got.min(cfg.policy.max_batch(&cfg.model)),
+        Executor::Artifacts(_) => *cfg
+            .model
+            .batch_sizes
+            .iter()
+            .find(|&&b| b >= got)
+            .unwrap_or(cfg.model.batch_sizes.last().unwrap()),
+    };
     let take = got.min(bsize);
     let (now, rest) = valid.split_at(take);
 
@@ -321,7 +453,7 @@ fn run_batch(
         flat.extend_from_slice(&now.last().unwrap().image); // pad
     }
 
-    let result = rt.cnn_forward(&cfg.model.artifact(bsize), &flat, bsize, cfg.model.chw);
+    let result = exec.cnn_forward(cfg, &flat, bsize);
     match result {
         Ok(logits) => {
             for (i, job) in now.iter().enumerate() {
@@ -345,7 +477,7 @@ fn run_batch(
     }
     // Any overflow beyond the largest artifact batch recurses.
     if !rest.is_empty() {
-        run_batch(rt, cfg, metrics, rest.to_vec(), input_len, classes, sim_energy_uj, sim_latency_ms);
+        run_batch(exec, cfg, metrics, rest.to_vec(), input_len, classes, sim_energy_uj, sim_latency_ms);
     }
 }
 
@@ -381,5 +513,49 @@ mod tests {
         let m = ModelSpec::tinynet();
         assert_eq!(m.artifact(4), "tinynet_b4");
         assert_eq!(m.input_len(), 3 * 32 * 32);
+    }
+
+    #[test]
+    fn native_backend_serves_without_artifacts() {
+        use crate::util::prng::Rng;
+        let coord = Coordinator::start(Config::native(2)).expect("native coordinator");
+        let input_len = coord.model().input_len();
+        let mut rng = Rng::new(0x17);
+        let img = rng.i8_vec(input_len);
+        let first = coord
+            .infer(InferRequest { image: img.clone() })
+            .expect("native inference");
+        assert_eq!(first.logits.len(), 10);
+        assert!(first.logits.iter().all(|x| x.is_finite()));
+        assert!(first.sim_energy_uj > 0.0);
+        // Batching/sharding must not change logits: duplicates submitted
+        // concurrently land in different batch groupings and shards.
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let coord = &coord;
+                let img = img.clone();
+                let expect = first.logits.clone();
+                scope.spawn(move || {
+                    let r = coord.infer(InferRequest { image: img }).expect("dup");
+                    assert_eq!(r.logits, expect, "sharding changed logits");
+                });
+            }
+        });
+        let m = coord.metrics();
+        assert_eq!(m.requests, 5);
+        assert_eq!(m.errors, 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn native_backend_rejects_malformed_inputs() {
+        let coord = Coordinator::start(Config::native(1)).expect("native coordinator");
+        let bad = coord.submit(InferRequest {
+            image: vec![0i8; 5],
+        });
+        let err = bad.recv().expect("response").expect_err("must reject");
+        assert!(err.contains("bad input"), "{err}");
+        assert!(coord.metrics().errors >= 1);
+        coord.shutdown();
     }
 }

@@ -8,9 +8,15 @@
 //! Both provide a bit-accurate `encode`/`decode` pair, the control-line /
 //! encoded-bit patterns the hardware would transmit, and a calibrated
 //! [`Cost`](crate::gates::Cost) model per operand width.
+//!
+//! [`packed`] holds the hot-path representation: the EN-T wire format
+//! packed into one `u64` (plus the sign line), with a compile-time
+//! 256-entry LUT for int8 so encoding an operand is one table lookup and
+//! zero heap allocations.
 
 pub mod ent;
 pub mod mbe;
+pub mod packed;
 
 use crate::gates::Cost;
 

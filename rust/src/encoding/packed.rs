@@ -1,0 +1,262 @@
+//! Packed EN-T codes — the allocation-free hot-path representation.
+//!
+//! [`EntCode`](super::ent::EntCode) models the encoding faithfully but
+//! heap-allocates its digit vector, which made the bit-accurate GEMM
+//! dataflows pay one allocation per encoded operand. A [`PackedCode`]
+//! packs the exact same information into one `u64`:
+//!
+//! ```text
+//!   bit 0 .. n-1   digit wᵢ as 2-bit two's complement at [2i+1:2i]
+//!   bit n          final carry Cin_N (weight 4^(n/2))
+//!   bit n+1        sign of the original signed operand
+//! ```
+//!
+//! Bits `0..=n` are **identical** to
+//! [`EntCode::wire_bits`](super::ent::EntCode::wire_bits) of the
+//! magnitude code — the packed form *is* the wire format plus the sign
+//! line the paper's §3.3.1 routes to the Booth selectors. The
+//! equivalence is property-tested exhaustively for int8 and randomly for
+//! wider operands (see the tests below, and
+//! `multiplier::tests` for the product-level equivalence).
+//!
+//! For int8 — the width every TCU experiment uses — encoding is a single
+//! table lookup in [`INT8_LUT`], built at compile time. Wider operands
+//! use [`PackedCode::encode_signed`], which runs the §3.3 carry chain
+//! directly into the packed word: branch-light, and no heap allocation
+//! either way.
+
+use super::ent::{EntCode, SignedEntCode};
+
+/// Maximum operand width the packed form supports (wire bits + carry +
+/// sign must fit a `u64`).
+pub const MAX_PACKED_WIDTH: usize = 32;
+
+/// One EN-T-encoded signed operand, packed into a word. `Copy`, no heap.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PackedCode {
+    /// Wire bits (low `n+1` bits) plus the sign at bit `n+1`.
+    pub bits: u64,
+    /// Operand width n (even, ≤ [`MAX_PACKED_WIDTH`]).
+    pub width: u8,
+}
+
+impl PackedCode {
+    /// Encode a signed `n`-bit value: the §3.3 carry chain over |a|,
+    /// sign on the side. `const` so the int8 table is built at compile
+    /// time. Panics (compile error in const context) if the value does
+    /// not fit.
+    pub const fn encode_signed(a: i64, n: usize) -> PackedCode {
+        assert!(n >= 4 && n % 2 == 0 && n <= MAX_PACKED_WIDTH);
+        assert!(a >= -(1i64 << (n - 1)) && a < (1i64 << (n - 1)));
+        // (Not `unsigned_abs`: plain negation keeps this callable in
+        // const context on older toolchains; |a| < 2^31 so it is exact.)
+        let mag = if a < 0 { (-a) as u64 } else { a as u64 };
+        // One carry chain for both entry points: |a| through the
+        // unsigned encoder, sign on the extra line (§3.3.1). |a| ≤
+        // 2^(n-1) keeps the final carry at 0.
+        let mut code = PackedCode::encode_unsigned(mag, n);
+        if a < 0 {
+            code.bits |= 1u64 << (n + 1);
+        }
+        code
+    }
+
+    /// Encode an unsigned `n`-bit magnitude (sign bit left clear) — the
+    /// packed counterpart of [`super::ent::encode_unsigned`].
+    pub const fn encode_unsigned(q: u64, n: usize) -> PackedCode {
+        assert!(n >= 4 && n % 2 == 0 && n <= MAX_PACKED_WIDTH);
+        assert!(q < (1u64 << n));
+        let mut bits: u64 = 0;
+        let mut carry: u64 = 0;
+        let mut i = 0;
+        while i < n / 2 {
+            let a_i = (q >> (2 * i)) & 0b11;
+            let a_prime = a_i + carry;
+            bits |= (a_prime & 0b11) << (2 * i);
+            carry = if a_prime >= 3 { 1 } else { 0 };
+            i += 1;
+        }
+        bits |= carry << n;
+        PackedCode {
+            bits,
+            width: n as u8,
+        }
+    }
+
+    /// Operand width n.
+    #[inline]
+    pub fn width(self) -> usize {
+        self.width as usize
+    }
+
+    /// Number of radix-4 digits (n/2).
+    #[inline]
+    pub fn ndigits(self) -> usize {
+        self.width as usize / 2
+    }
+
+    /// Sign of the original signed operand.
+    #[inline]
+    pub fn sign(self) -> bool {
+        (self.bits >> (self.width as usize + 1)) & 1 == 1
+    }
+
+    /// Final carry Cin_N (weight 4^(n/2)).
+    #[inline]
+    pub fn cin(self) -> bool {
+        (self.bits >> self.width as usize) & 1 == 1
+    }
+
+    /// The transmitted wire pattern — bit-identical to
+    /// [`EntCode::wire_bits`] of the magnitude code (n+1 bits).
+    #[inline]
+    pub fn wire_bits(self) -> u64 {
+        self.bits & ((1u64 << (self.width as usize + 1)) - 1)
+    }
+
+    /// Digit i ∈ {−1, 0, 1, 2}, decoded from its 2-bit two's-complement
+    /// field without a branch.
+    #[inline]
+    pub fn digit(self, i: usize) -> i8 {
+        let two = (self.bits >> (2 * i)) & 0b11;
+        (((two + 1) & 0b11) as i8) - 1
+    }
+
+    /// Reconstruct the signed value: ±(Σ wᵢ·4ⁱ + Cin·4^N).
+    pub fn decode(self) -> i64 {
+        let mut v: i64 = if self.cin() {
+            1i64 << self.width as usize
+        } else {
+            0
+        };
+        for i in 0..self.ndigits() {
+            v += (self.digit(i) as i64) << (2 * i);
+        }
+        if self.sign() {
+            -v
+        } else {
+            v
+        }
+    }
+
+    /// Expand into the reference [`SignedEntCode`] (tests / interop).
+    pub fn to_signed_code(self) -> SignedEntCode {
+        SignedEntCode {
+            sign: self.sign(),
+            mag: EntCode::from_wire_bits(self.wire_bits(), self.width as usize),
+        }
+    }
+}
+
+/// Compile-time packed-code table for every int8 value, indexed by the
+/// operand's two's-complement bit pattern (`a as u8`). This is the
+/// column encoder of the EN-T array reduced to its functional essence:
+/// one lookup per multiplicand element entering the array, zero heap.
+pub static INT8_LUT: [PackedCode; 256] = build_int8_lut();
+
+const fn build_int8_lut() -> [PackedCode; 256] {
+    let mut lut = [PackedCode { bits: 0, width: 8 }; 256];
+    let mut pat: usize = 0;
+    while pat < 256 {
+        // Interpret the index as the int8 bit pattern.
+        let a = pat as u8 as i8 as i64;
+        lut[pat] = PackedCode::encode_signed(a, 8);
+        pat += 1;
+    }
+    lut
+}
+
+/// Encode one int8 operand by table lookup.
+#[inline]
+pub fn lut_i8(a: i8) -> PackedCode {
+    INT8_LUT[a as u8 as usize]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::ent::{encode_signed, encode_unsigned};
+    use crate::util::check::{check, Config};
+
+    /// Satellite property: the packed-LUT encode agrees with the
+    /// reference `EntCode` bit-accurate encode — wire bits *and* decoded
+    /// value — for all 256 int8 values.
+    #[test]
+    fn lut_matches_reference_all_int8() {
+        for a in -128i64..=127 {
+            let packed = lut_i8(a as i8);
+            let reference = encode_signed(a, 8);
+            assert_eq!(
+                packed.wire_bits(),
+                reference.mag.wire_bits(),
+                "wire bits diverge at {a}"
+            );
+            assert_eq!(packed.sign(), reference.sign, "sign diverges at {a}");
+            assert_eq!(packed.cin(), reference.mag.cin, "cin diverges at {a}");
+            assert_eq!(packed.decode(), a, "decode diverges at {a}");
+            // Digit-by-digit too.
+            for (i, &d) in reference.mag.digits.iter().enumerate() {
+                assert_eq!(packed.digit(i), d, "digit {i} of {a}");
+            }
+            assert_eq!(packed.to_signed_code(), reference, "expansion of {a}");
+        }
+    }
+
+    /// Same agreement for random 16-bit operands through the on-the-fly
+    /// packed encoder (signed and unsigned views).
+    #[test]
+    fn prop_packed_matches_reference_16bit() {
+        check("packed-vs-ent-16bit", Config::default(), |rng| {
+            let a = rng.range_i64(-(1 << 15), (1 << 15) - 1);
+            let packed = PackedCode::encode_signed(a, 16);
+            let reference = encode_signed(a, 16);
+            if packed.wire_bits() != reference.mag.wire_bits() {
+                return Err(format!("wire bits diverge at {a}"));
+            }
+            if packed.decode() != a {
+                return Err(format!("decode {} != {a}", packed.decode()));
+            }
+            let q = rng.range_i64(0, (1 << 16) - 1);
+            let pu = PackedCode::encode_unsigned(q as u64, 16);
+            let ru = encode_unsigned(q, 16);
+            if pu.wire_bits() != ru.wire_bits() {
+                return Err(format!("unsigned wire bits diverge at {q}"));
+            }
+            if pu.decode() != q {
+                return Err(format!("unsigned decode {} != {q}", pu.decode()));
+            }
+            Ok(())
+        });
+    }
+
+    /// Spot-check the packed layout against independently computed words.
+    #[test]
+    fn packed_layout_golden_values() {
+        assert_eq!(PackedCode::encode_signed(78, 8).bits, 0x5e);
+        assert_eq!(PackedCode::encode_signed(-77, 8).bits, 0x25d);
+        assert_eq!(PackedCode::encode_signed(-128, 8).bits, 0x280);
+        assert_eq!(PackedCode::encode_signed(0, 8).bits, 0x0);
+    }
+
+    /// The digit set stays {−1, 0, 1, 2} and the branchless extractor
+    /// matches the 2-bit two's-complement reading.
+    #[test]
+    fn digit_extractor_is_twos_complement() {
+        for q in 0u64..256 {
+            let p = PackedCode::encode_unsigned(q, 8);
+            for i in 0..4 {
+                let two = (p.bits >> (2 * i)) & 0b11;
+                let expect = if two == 0b11 { -1 } else { two as i8 };
+                assert_eq!(p.digit(i), expect, "q={q} i={i}");
+            }
+        }
+    }
+
+    /// Unsigned extremes exercise the final-carry slot.
+    #[test]
+    fn unsigned_carry_slot() {
+        assert!(PackedCode::encode_unsigned(255, 8).cin());
+        assert_eq!(PackedCode::encode_unsigned(255, 8).decode(), 255);
+        assert!(!PackedCode::encode_unsigned(128, 8).cin());
+    }
+}

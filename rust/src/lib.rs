@@ -20,11 +20,18 @@
 //!   simulators, with the EN-T transformation applied as an overlay;
 //! * [`nn`], [`soc`] — the benchmark SoC of the paper's §4.4 and the eight
 //!   CNN workloads it evaluates;
-//! * [`runtime`], [`coordinator`] — the PJRT runtime that loads the
-//!   AOT-compiled JAX/Pallas artifacts and the serving coordinator that
-//!   schedules real inference jobs onto the modelled NPU;
+//! * [`runtime`], [`coordinator`] — the artifact runtime and the serving
+//!   coordinator that schedules real inference jobs onto the modelled NPU;
 //! * [`report`] — emitters that regenerate every table and figure of the
 //!   paper's evaluation section.
+//!
+//! Every architecture is driven through one interface: the
+//! [`arch::engine::TcuEngine`] trait, whose shared tile planner
+//! ([`sim::planner`]) owns M/K/N blocking and whose hot path is
+//! allocation-free (the packed [`encoding::packed`] LUT) and parallel
+//! over independent output tiles. The same engine object serves
+//! functional verification, cycle/energy reporting, and the serving
+//! path — see DESIGN.md.
 //!
 //! Python (JAX + Pallas) is used only at build time to author and lower
 //! the numerics; it never runs on the request path.
@@ -43,8 +50,8 @@ pub mod sim;
 pub mod soc;
 pub mod util;
 
-/// Crate-wide result type.
-pub type Result<T> = anyhow::Result<T>;
+/// Crate-wide result type (see [`util::error`]).
+pub type Result<T> = util::error::Result<T>;
 
 /// Operating clock of every experiment in the paper (§4.1: "all test on
 /// 500MHz").

@@ -64,7 +64,7 @@ fn run(argv: &[String]) -> ent::Result<()> {
             print!("{}", usage());
             Ok(())
         }
-        other => anyhow::bail!("unknown subcommand '{other}'\n{}", usage()),
+        other => ent::bail!("unknown subcommand '{other}'\n{}", usage()),
     }
 }
 
@@ -73,13 +73,13 @@ fn parse_variant(s: &str) -> ent::Result<Variant> {
         "baseline" => Variant::Baseline,
         "mbe" => Variant::EntMbe,
         "ours" => Variant::EntOurs,
-        _ => anyhow::bail!("variant must be baseline|mbe|ours"),
+        _ => ent::bail!("variant must be baseline|mbe|ours"),
     })
 }
 
 fn parse_arch(s: &str) -> ent::Result<ArchKind> {
     ArchKind::parse(s).ok_or_else(|| {
-        anyhow::anyhow!("arch must be one of matrix2d|array1d2d|sa_os|sa_ws|cube3d")
+        ent::err!("arch must be one of matrix2d|array1d2d|sa_os|sa_ws|cube3d")
     })
 }
 
@@ -96,7 +96,7 @@ fn cmd_report(argv: &[String]) -> ent::Result<()> {
         "fig10" => report::fig10(),
         "fig11" => report::fig11(),
         "fig12" => report::fig12(),
-        other => anyhow::bail!("unknown report '{other}'"),
+        other => ent::bail!("unknown report '{other}'"),
     };
     print!("{out}");
     Ok(())
@@ -137,7 +137,7 @@ fn cmd_simulate(argv: &[String]) -> ent::Result<()> {
         let b = rng.i8_vec(k * n);
         let got = ent::sim::tiled_matmul(&tcu, &a, &b, m, k, n);
         let want = ent::arch::gemm_ref(&a, &b, m, k, n);
-        anyhow::ensure!(got == want, "functional mismatch!");
+        ent::ensure!(got == want, "functional mismatch!");
         println!("verify: OK ({}x{}x{} exact through {} dataflow)", m, k, n, arch.name());
     }
 
@@ -191,7 +191,7 @@ fn cmd_soc(argv: &[String]) -> ent::Result<()> {
         return Ok(());
     }
     let net = zoo::by_name(args.get_or("net", "resnet50"))
-        .ok_or_else(|| anyhow::anyhow!("unknown network"))?;
+        .ok_or_else(|| ent::err!("unknown network"))?;
     let arch = parse_arch(args.get_or("arch", "sa_os"))?;
     let variant = parse_variant(args.get_or("variant", "ours"))?;
     let soc = Soc::paper_config(arch, variant);
@@ -253,6 +253,8 @@ fn cmd_serve(argv: &[String]) -> ent::Result<()> {
         OptSpec { name: "requests", takes_value: true, help: "synthetic requests to send (default 64)" },
         OptSpec { name: "artifacts", takes_value: true, help: "artifact directory" },
         OptSpec { name: "concurrency", takes_value: true, help: "client threads (default 4)" },
+        OptSpec { name: "native", takes_value: false, help: "serve on native engine shards (no artifacts)" },
+        OptSpec { name: "shards", takes_value: true, help: "native engine shards (default 4)" },
         OptSpec { name: "help", takes_value: false, help: "show help" },
     ];
     let args = Args::parse(argv, &specs)?;
@@ -262,7 +264,11 @@ fn cmd_serve(argv: &[String]) -> ent::Result<()> {
     }
     let n_requests = args.get_usize("requests", 64)?;
     let concurrency = args.get_usize("concurrency", 4)?.max(1);
-    let mut cfg = Config::default();
+    let mut cfg = if args.flag("native") {
+        Config::native(args.get_usize("shards", 4)?)
+    } else {
+        Config::default()
+    };
     if let Some(dir) = args.get("artifacts") {
         cfg.artifact_dir = dir.into();
     }
@@ -389,7 +395,7 @@ fn cmd_sweep(argv: &[String]) -> ent::Result<()> {
             }
             print!("{}", t.render());
         }
-        other => anyhow::bail!("unknown ablation '{other}'"),
+        other => ent::bail!("unknown ablation '{other}'"),
     }
     Ok(())
 }
@@ -400,7 +406,7 @@ fn cmd_selftest() -> ent::Result<()> {
     let m = Multiplier::new(MultKind::EntRme, 8);
     for a in -128i64..=127 {
         for b in -128i64..=127 {
-            anyhow::ensure!(m.mul(a, b) == a * b, "mismatch at {a}x{b}");
+            ent::ensure!(m.mul(a, b) == a * b, "mismatch at {a}x{b}");
         }
     }
     println!("selftest: 65,536 exhaustive INT8 products exact through EN-T datapath");
@@ -412,7 +418,7 @@ fn cmd_selftest() -> ent::Result<()> {
         let (mm, kk, nn) = (9, 17, 11);
         let a = rng.i8_vec(mm * kk);
         let b = rng.i8_vec(kk * nn);
-        anyhow::ensure!(
+        ent::ensure!(
             ent::sim::tiled_matmul(&tcu, &a, &b, mm, kk, nn)
                 == ent::arch::gemm_ref(&a, &b, mm, kk, nn),
             "tiled matmul mismatch on {}",

@@ -1,0 +1,209 @@
+//! Quantized CNN forward passes executed **through a TCU engine** — the
+//! layer that ties the nn IR to the bit-accurate dataflows.
+//!
+//! Convolutions are im2col-lowered to GEMMs and run through
+//! [`TcuEngine::matmul_into`], so a forward pass exercises the exact
+//! same array dataflow (and EN-T encode path) as the verification and
+//! energy layers. Because every engine computes exact integer GEMMs, the
+//! logits are bit-identical across all five architectures and all three
+//! variants — the paper's functional-transparency claim at network
+//! scope (see `tests::logits_identical_across_engines`).
+//!
+//! The weights are synthetic (seeded PRNG): the serving path needs a
+//! deterministic, finite, batch-consistent model, not an accurate one.
+//! Real trained weights would drop in through the same structs.
+
+use crate::arch::TcuEngine;
+use crate::util::prng::Rng;
+
+/// One conv layer's hyper-parameters (square kernel, zero padding).
+#[derive(Clone, Copy, Debug)]
+pub struct ConvSpec {
+    pub cin: usize,
+    pub cout: usize,
+    pub kernel: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub relu: bool,
+}
+
+impl ConvSpec {
+    fn out_hw(&self, in_hw: usize) -> usize {
+        (in_hw + 2 * self.pad - self.kernel) / self.stride + 1
+    }
+
+    fn weight_len(&self) -> usize {
+        self.cout * self.cin * self.kernel * self.kernel
+    }
+}
+
+/// A small int8 CNN: conv stack + one fully-connected head, with
+/// power-of-two requantization between layers.
+#[derive(Clone, Debug)]
+pub struct QuantCnn {
+    pub name: &'static str,
+    /// Input (C, H, W).
+    pub chw: (usize, usize, usize),
+    pub classes: usize,
+    convs: Vec<(ConvSpec, Vec<i8>)>,
+    /// FC weights, classes × feature-length row-major.
+    fc: Vec<i8>,
+    feat: usize,
+    /// Right-shift applied to conv accumulators before clamping to int8.
+    shift: u32,
+}
+
+impl QuantCnn {
+    /// The native serving model: a light 3×32×32 → 10 CNN (two strided
+    /// convs + FC) whose whole forward pass is ~50k MACs, small enough
+    /// to run bit-accurately per request.
+    pub fn tiny_native() -> QuantCnn {
+        let convs_spec = [
+            ConvSpec { cin: 3, cout: 4, kernel: 3, stride: 2, pad: 1, relu: true },
+            ConvSpec { cin: 4, cout: 8, kernel: 3, stride: 2, pad: 1, relu: true },
+        ];
+        let mut rng = Rng::new(0x5EED);
+        let mut convs = Vec::new();
+        let mut hw = 32;
+        let mut feat_ch = 3;
+        for spec in convs_spec {
+            assert_eq!(spec.cin, feat_ch);
+            convs.push((spec, rng.i8_vec(spec.weight_len())));
+            hw = spec.out_hw(hw);
+            feat_ch = spec.cout;
+        }
+        let feat = feat_ch * hw * hw;
+        let classes = 10;
+        QuantCnn {
+            name: "tinynet",
+            chw: (3, 32, 32),
+            classes,
+            convs,
+            fc: rng.i8_vec(classes * feat),
+            feat,
+            shift: 5,
+        }
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.chw.0 * self.chw.1 * self.chw.2
+    }
+
+    /// Run one image (flattened C×H×W int8) through `eng`, returning
+    /// `classes` f32 logits. Exact integer arithmetic end to end; the
+    /// only float is the final scale.
+    pub fn forward<E: TcuEngine + ?Sized>(&self, eng: &E, image: &[i8]) -> Vec<f32> {
+        assert_eq!(image.len(), self.input_len(), "input length");
+        let mut x = image.to_vec();
+        let mut hw = self.chw.1;
+        for (spec, weights) in &self.convs {
+            x = conv_layer(eng, spec, weights, &x, hw, self.shift);
+            hw = spec.out_hw(hw);
+        }
+        assert_eq!(x.len(), self.feat, "feature length");
+        // FC head: (classes × feat) × (feat × 1).
+        let mut out = vec![0i64; self.classes];
+        eng.matmul_into(&self.fc, &x, &mut out, self.classes, self.feat, 1);
+        out.iter().map(|&v| v as f32 / 256.0).collect()
+    }
+}
+
+/// im2col + engine GEMM + requantize for one conv layer. Input and
+/// output are flattened C×H×W int8.
+fn conv_layer<E: TcuEngine + ?Sized>(
+    eng: &E,
+    spec: &ConvSpec,
+    weights: &[i8],
+    x: &[i8],
+    in_hw: usize,
+    shift: u32,
+) -> Vec<i8> {
+    let out_hw = spec.out_hw(in_hw);
+    let k = spec.cin * spec.kernel * spec.kernel;
+    let n = out_hw * out_hw;
+    // im2col: B[p][j] = input pixel feeding kernel tap p at output j.
+    let mut b = vec![0i8; k * n];
+    for ci in 0..spec.cin {
+        for ky in 0..spec.kernel {
+            for kx in 0..spec.kernel {
+                let p = (ci * spec.kernel + ky) * spec.kernel + kx;
+                for oy in 0..out_hw {
+                    let iy = (oy * spec.stride + ky) as isize - spec.pad as isize;
+                    if iy < 0 || iy >= in_hw as isize {
+                        continue; // zero padding
+                    }
+                    for ox in 0..out_hw {
+                        let ix = (ox * spec.stride + kx) as isize - spec.pad as isize;
+                        if ix < 0 || ix >= in_hw as isize {
+                            continue;
+                        }
+                        b[p * n + oy * out_hw + ox] =
+                            x[(ci * in_hw + iy as usize) * in_hw + ix as usize];
+                    }
+                }
+            }
+        }
+    }
+    let mut acc = vec![0i64; spec.cout * n];
+    eng.matmul_into(weights, &b, &mut acc, spec.cout, k, n);
+    // Requantize: power-of-two scale, clamp, optional ReLU.
+    acc.iter()
+        .map(|&v| {
+            let q = (v >> shift).clamp(-128, 127) as i8;
+            if spec.relu {
+                q.max(0)
+            } else {
+                q
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ArchKind, Tcu, ALL_ARCHS};
+    use crate::pe::{Variant, ALL_VARIANTS};
+
+    #[test]
+    fn forward_is_deterministic_and_finite() {
+        let model = QuantCnn::tiny_native();
+        let mut rng = Rng::new(7);
+        let img = rng.i8_vec(model.input_len());
+        let eng = Tcu::new(ArchKind::SystolicOs, 16, Variant::EntOurs).engine();
+        let a = model.forward(&eng, &img);
+        let b = model.forward(&eng, &img);
+        assert_eq!(a.len(), 10);
+        assert!(a.iter().all(|x| x.is_finite()));
+        assert_eq!(a, b);
+        // Not degenerate: logits differ across classes for a random
+        // image.
+        assert!(a.iter().any(|&x| x != a[0]));
+    }
+
+    /// Functional transparency at network scope: every arch × variant
+    /// produces bit-identical logits.
+    #[test]
+    fn logits_identical_across_engines() {
+        let model = QuantCnn::tiny_native();
+        let mut rng = Rng::new(9);
+        let img = rng.i8_vec(model.input_len());
+        let reference = model.forward(
+            &Tcu::new(ArchKind::Matrix2d, 16, Variant::Baseline).engine(),
+            &img,
+        );
+        for arch in ALL_ARCHS {
+            let size = if arch == ArchKind::Cube3d { 4 } else { 8 };
+            for variant in ALL_VARIANTS {
+                let eng = Tcu::new(arch, size, variant).engine();
+                assert_eq!(
+                    model.forward(&eng, &img),
+                    reference,
+                    "{} {}",
+                    arch.name(),
+                    variant.name()
+                );
+            }
+        }
+    }
+}

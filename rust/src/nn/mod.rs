@@ -9,6 +9,7 @@
 //! element.
 
 pub mod densenet;
+pub mod forward;
 pub mod inception;
 pub mod mobilenet;
 pub mod resnet;

@@ -1,51 +1,113 @@
-//! PJRT runtime — loads the AOT-compiled JAX/Pallas artifacts and runs
-//! them on the request path. Python is never involved here: the
-//! interchange format is HLO **text** (see `python/compile/aot.py`;
-//! serialized protos from jax ≥ 0.5 carry 64-bit instruction ids that
-//! xla_extension 0.5.1 rejects, while the text parser reassigns ids).
+//! Artifact runtime — executes the AOT-exported artifacts natively
+//! through the bit-accurate [`TcuEngine`](crate::arch::TcuEngine).
 //!
-//! One [`Runtime`] owns a PJRT CPU client and a name → compiled
-//! executable cache. Executables compile once at load and are reused for
-//! every request.
+//! Earlier revisions loaded HLO-text artifacts through a PJRT CPU client
+//! (the `xla` crate). That dependency cannot be fetched in the offline
+//! CI image, so the runtime now *interprets* the artifact set natively:
+//! artifact names carry their semantics (`gemm_MxKxN`, `tinynet_bB`,
+//! `encode8` — exactly what `python/compile/aot.py` exports), and
+//! execution goes through the same engine object the verification and
+//! energy layers use. The PJRT path can return behind a vendored `xla`
+//! crate without changing this module's API — see DESIGN.md §5.
+//!
+//! One [`Runtime`] owns an engine and a name → artifact registry.
+//! Artifacts "compile" once at load (the registry parse + model build)
+//! and are reused for every request.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::arch::{ArchKind, AnyEngine, Tcu, TcuEngine};
+use crate::nn::forward::QuantCnn;
+use crate::pe::Variant;
+use crate::util::error::{Context, Result};
+use crate::{bail, err};
 
-/// Name → artifact path registry with compiled-executable cache.
+/// What one loaded artifact executes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum Artifact {
+    /// `gemm_MxKxN`: int8 GEMM of exactly that shape.
+    Gemm { m: usize, k: usize, n: usize },
+    /// `tinynet_bB`: the native quantized CNN at batch B.
+    Cnn { batch: usize },
+    /// `encode8`: the standalone int8 EN-T encoder (wire bits + sign).
+    Encode8,
+    /// Present on disk but not natively executable.
+    Opaque,
+}
+
+fn parse_artifact(stem: &str) -> Artifact {
+    if let Some(dims) = stem.strip_prefix("gemm_") {
+        let parts: Vec<_> = dims.split('x').collect();
+        if parts.len() == 3 {
+            if let (Ok(m), Ok(k), Ok(n)) = (
+                parts[0].parse::<usize>(),
+                parts[1].parse::<usize>(),
+                parts[2].parse::<usize>(),
+            ) {
+                return Artifact::Gemm { m, k, n };
+            }
+        }
+    }
+    if let Some(b) = stem.strip_prefix("tinynet_b") {
+        if let Ok(batch) = b.parse::<usize>() {
+            return Artifact::Cnn { batch };
+        }
+    }
+    if stem == "encode8" {
+        return Artifact::Encode8;
+    }
+    Artifact::Opaque
+}
+
+/// Name → artifact registry with a native execution engine.
 pub struct Runtime {
-    client: xla::PjRtClient,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    engine: AnyEngine,
+    model: QuantCnn,
+    exes: HashMap<String, Artifact>,
 }
 
 impl Runtime {
-    /// Create a runtime on the PJRT CPU client.
+    /// Create a runtime on the native engine backend (the name `cpu` is
+    /// kept from the PJRT era; execution is the bit-accurate EN-T
+    /// systolic dataflow).
     pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime {
-            client,
+        Ok(Runtime::on_engine(
+            Tcu::new(ArchKind::SystolicOs, 32, Variant::EntOurs).engine(),
+        ))
+    }
+
+    /// Create a runtime executing on a specific engine.
+    pub fn on_engine(engine: AnyEngine) -> Runtime {
+        Runtime {
+            engine,
+            model: QuantCnn::tiny_native(),
             exes: HashMap::new(),
-        })
+        }
     }
 
     /// Platform string (for logs/metrics).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        format!(
+            "native-sim ({} {})",
+            self.engine.tcu().kind.short_name(),
+            self.engine.tcu().size
+        )
     }
 
-    /// Load and compile one HLO-text artifact under `name`.
+    /// Load one artifact under `name`. The file must exist (artifacts
+    /// are produced by `make artifacts`); its semantics are parsed from
+    /// the file stem.
     pub fn load_file(&mut self, name: &str, path: &Path) -> Result<()> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        self.exes.insert(name.to_string(), exe);
+        std::fs::metadata(path)
+            .with_context(|| format!("loading artifact {}", path.display()))?;
+        let stem = path
+            .file_name()
+            .ok_or_else(|| err!("artifact path has no file name: {}", path.display()))?
+            .to_string_lossy()
+            .trim_end_matches(".hlo.txt")
+            .to_string();
+        self.exes.insert(name.to_string(), parse_artifact(&stem));
         Ok(())
     }
 
@@ -83,61 +145,93 @@ impl Runtime {
         v
     }
 
-    fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+    fn exe(&self, name: &str) -> Result<&Artifact> {
         self.exes
             .get(name)
-            .ok_or_else(|| anyhow!("artifact '{name}' not loaded (run `make artifacts`?)"))
+            .ok_or_else(|| err!("artifact '{name}' not loaded (run `make artifacts`?)"))
     }
 
     /// Execute an INT8 GEMM artifact: `a` is m×k, `b` is k×n, result is
-    /// m×n INT32. The artifact must have been lowered for exactly this
-    /// shape (one executable per tile shape, as AOT requires).
-    pub fn gemm_i8(&self, name: &str, a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Result<Vec<i32>> {
+    /// m×n INT32. The artifact must have been exported for exactly this
+    /// shape.
+    pub fn gemm_i8(
+        &self,
+        name: &str,
+        a: &[i8],
+        b: &[i8],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> Result<Vec<i32>> {
         if a.len() != m * k || b.len() != k * n {
-            bail!("gemm_i8 {name}: operand shapes {m}x{k}, {k}x{n} vs lens {} {}", a.len(), b.len());
+            bail!(
+                "gemm_i8 {name}: operand shapes {m}x{k}, {k}x{n} vs lens {} {}",
+                a.len(),
+                b.len()
+            );
         }
-        let la = lit_i8(a, &[m, k])?;
-        let lb = lit_i8(b, &[k, n])?;
-        let out = self.exe(name)?.execute::<xla::Literal>(&[la, lb])?[0][0]
-            .to_literal_sync()?;
-        // aot.py lowers with return_tuple=True.
-        let out = out.to_tuple1()?;
-        Ok(out.to_vec::<i32>()?)
+        match self.exe(name)? {
+            Artifact::Gemm { m: am, k: ak, n: an } => {
+                if (*am, *ak, *an) != (m, k, n) {
+                    bail!("gemm_i8 {name}: artifact shape {am}x{ak}x{an}, called with {m}x{k}x{n}");
+                }
+            }
+            other => bail!("artifact '{name}' is not a GEMM ({other:?})"),
+        }
+        let c = self.engine.matmul(a, b, m, k, n);
+        Ok(c.iter().map(|&v| v as i32).collect())
     }
 
     /// Execute the quantized-CNN artifact on a batch of int8 images
     /// (N×C×H×W flattened); returns N×classes f32 logits.
-    pub fn cnn_forward(&self, name: &str, images: &[i8], batch: usize, chw: (usize, usize, usize)) -> Result<Vec<f32>> {
+    pub fn cnn_forward(
+        &self,
+        name: &str,
+        images: &[i8],
+        batch: usize,
+        chw: (usize, usize, usize),
+    ) -> Result<Vec<f32>> {
         let (c, h, w) = chw;
         if images.len() != batch * c * h * w {
-            bail!("cnn_forward {name}: {} elems for batch {batch}×{c}×{h}×{w}", images.len());
+            bail!(
+                "cnn_forward {name}: {} elems for batch {batch}×{c}×{h}×{w}",
+                images.len()
+            );
         }
-        let lit = lit_i8(images, &[batch, c, h, w])?;
-        let out = self.exe(name)?.execute::<xla::Literal>(&[lit])?[0][0]
-            .to_literal_sync()?;
-        let out = out.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
+        match self.exe(name)? {
+            Artifact::Cnn { batch: ab } => {
+                if *ab != batch {
+                    bail!("cnn_forward {name}: artifact batch {ab}, called with {batch}");
+                }
+            }
+            other => bail!("artifact '{name}' is not a CNN ({other:?})"),
+        }
+        if chw != self.model.chw {
+            bail!("cnn_forward {name}: model expects {:?}, got {chw:?}", self.model.chw);
+        }
+        let per = self.model.input_len();
+        let mut logits = Vec::with_capacity(batch * self.model.classes);
+        for i in 0..batch {
+            logits.extend(self.model.forward(&self.engine, &images[i * per..(i + 1) * per]));
+        }
+        Ok(logits)
     }
 
     /// Execute the standalone encoder artifact: int8 vector → int32
-    /// digit codes (used by the cross-layer equivalence test).
+    /// codes (wire bits | sign << 8 — the cross-layer test's format).
     pub fn encode_i8(&self, name: &str, values: &[i8]) -> Result<Vec<i32>> {
-        let lit = lit_i8(values, &[values.len()])?;
-        let out = self.exe(name)?.execute::<xla::Literal>(&[lit])?[0][0]
-            .to_literal_sync()?;
-        let out = out.to_tuple1()?;
-        Ok(out.to_vec::<i32>()?)
+        match self.exe(name)? {
+            Artifact::Encode8 => {}
+            other => bail!("artifact '{name}' is not an encoder ({other:?})"),
+        }
+        Ok(values
+            .iter()
+            .map(|&v| {
+                let code = crate::encoding::packed::lut_i8(v);
+                code.wire_bits() as i32 | if code.sign() { 1 << 8 } else { 0 }
+            })
+            .collect())
     }
-}
-
-/// Build an S8 literal from int8 data (the crate's `vec1` only covers
-/// the 32/64-bit native types; S8 goes through the untyped-data path).
-fn lit_i8(data: &[i8], dims: &[usize]) -> Result<xla::Literal> {
-    let bytes: &[u8] =
-        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
-    let lit =
-        xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S8, dims, bytes)?;
-    Ok(lit)
 }
 
 /// Default artifact directory (relative to the repo root).
@@ -155,8 +249,8 @@ mod tests {
 
     #[test]
     fn cpu_client_comes_up() {
-        let rt = Runtime::cpu().expect("PJRT CPU client");
-        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+        let rt = Runtime::cpu().expect("native runtime");
+        assert!(!rt.platform().is_empty());
         assert!(rt.names().is_empty());
     }
 
@@ -180,5 +274,54 @@ mod tests {
         let rt = Runtime::cpu().unwrap();
         let err = rt.gemm_i8("x", &[0; 3], &[0; 4], 2, 2, 2).unwrap_err();
         assert!(err.to_string().contains("operand shapes"));
+    }
+
+    #[test]
+    fn artifact_names_parse() {
+        assert_eq!(
+            parse_artifact("gemm_64x128x64"),
+            Artifact::Gemm { m: 64, k: 128, n: 64 }
+        );
+        assert_eq!(parse_artifact("tinynet_b4"), Artifact::Cnn { batch: 4 });
+        assert_eq!(parse_artifact("encode8"), Artifact::Encode8);
+        assert_eq!(parse_artifact("mystery_thing"), Artifact::Opaque);
+        assert_eq!(parse_artifact("gemm_64x128"), Artifact::Opaque);
+    }
+
+    #[test]
+    fn native_gemm_executes_loaded_artifact() {
+        use crate::util::prng::Rng;
+        let dir = std::env::temp_dir().join("ent-native-artifacts");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("gemm_8x8x8.hlo.txt");
+        std::fs::write(&path, "// native artifact marker\n").unwrap();
+        let mut rt = Runtime::cpu().unwrap();
+        rt.load_file("gemm_8x8x8", &path).unwrap();
+        let mut rng = Rng::new(3);
+        let a = rng.i8_vec(64);
+        let b = rng.i8_vec(64);
+        let got = rt.gemm_i8("gemm_8x8x8", &a, &b, 8, 8, 8).unwrap();
+        let want = crate::arch::gemm_ref(&a, &b, 8, 8, 8);
+        assert!(got.iter().zip(&want).all(|(&x, &y)| x as i64 == y));
+        // Wrong shape against the artifact is rejected.
+        let err = rt.gemm_i8("gemm_8x8x8", &a[..32], &b, 4, 8, 8).unwrap_err();
+        assert!(err.to_string().contains("artifact shape"), "{err}");
+    }
+
+    #[test]
+    fn native_encoder_matches_wire_format() {
+        let dir = std::env::temp_dir().join("ent-native-artifacts");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("encode8.hlo.txt");
+        std::fs::write(&path, "// native artifact marker\n").unwrap();
+        let mut rt = Runtime::cpu().unwrap();
+        rt.load_file("encode8", &path).unwrap();
+        let values: Vec<i8> = (-128..=127).collect();
+        let wire = rt.encode_i8("encode8", &values).unwrap();
+        for (v, &bits) in values.iter().zip(&wire) {
+            let code = crate::encoding::ent::encode_signed(*v as i64, 8);
+            let expect = code.mag.wire_bits() as i32 | if code.sign { 1 << 8 } else { 0 };
+            assert_eq!(bits, expect, "value {v}");
+        }
     }
 }

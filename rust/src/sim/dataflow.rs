@@ -6,7 +6,7 @@
 //! (N = H_out·W_out) — so the *A path carries the encoded multiplicand*,
 //! matching the paper's SoC which encodes on the Weight Buffer readout.
 
-use crate::arch::{ArchKind, Tcu};
+use crate::arch::Tcu;
 
 /// Problem shape for one GEMM.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -64,129 +64,22 @@ impl GemmStats {
     }
 }
 
-fn div_up(a: usize, b: usize) -> usize {
-    a.div_ceil(b)
-}
-
-/// Map a GEMM onto the array and count events.
+/// Map a GEMM onto the array and count events — delegate to the shared
+/// tile planner ([`crate::sim::planner::TilePlan::stats`]).
 pub fn gemm_stats(tcu: &Tcu, g: GemmShape) -> GemmStats {
-    let s = tcu.size;
-    let peak = tcu.num_macs() as u64;
-    let (m, k, n) = (g.m, g.k, g.n);
-
-    let mut st = GemmStats {
-        macs: g.macs(),
-        ..Default::default()
-    };
-
-    match tcu.kind {
-        // Broadcast + adder-tree archs: K unrolls over the S tree inputs,
-        // N over the S lanes; output rows of A stream one per cycle.
-        ArchKind::Matrix2d | ArchKind::Array1d2d => {
-            let tiles = div_up(k, s) * div_up(n, s);
-            // One wave per output row + 2-cycle tree fill per tile.
-            st.cycles = (tiles * (m + 2)) as u64;
-            // B (weights here live in the PE latches): loaded once per
-            // tile; A (the streamed multiplicand) re-broadcast per tile.
-            st.b_reads = (k * n) as u64;
-            st.a_reads = (m * k) as u64 * div_up(n, s) as u64;
-            // K-split partials accumulate in the per-tree output
-            // register file (DianNao's NBout role) — outputs leave the
-            // array exactly once, post-accumulation.
-            st.c_writes = (m * n) as u64;
-            st.psum_spills = 0;
-            st.encodes = st.a_reads;
-        }
-        // Output-stationary grid: M×N outputs resident, K streams.
-        ArchKind::SystolicOs => {
-            let tiles = div_up(m, s) * div_up(n, s);
-            // Each tile: K beats + skew fill/drain (2S).
-            st.cycles = (tiles * (k + 2 * s)) as u64;
-            st.a_reads = (m * k) as u64 * div_up(n, s) as u64;
-            st.b_reads = (k * n) as u64 * div_up(m, s) as u64;
-            st.c_writes = (m * n) as u64;
-            st.psum_spills = 0; // K accumulates in place
-            st.encodes = st.a_reads;
-        }
-        // Weight-stationary grid: K×N weights resident, M streams.
-        ArchKind::SystolicWs => {
-            let tiles = div_up(k, s) * div_up(n, s);
-            // Each tile: S-cycle weight load + M beats + skew (2S).
-            st.cycles = (tiles * (s + m + 2 * s)) as u64;
-            st.a_reads = (m * k) as u64 * div_up(n, s) as u64;
-            st.b_reads = (k * n) as u64; // loaded once per tile
-            st.c_writes = (m * n) as u64;
-            st.psum_spills = (m * n) as u64 * (div_up(k, s) as u64 - 1);
-            // WS encodes the *stationary* operand at load time — weights
-            // pass the encoder once per tile residency.
-            st.encodes = st.b_reads;
-        }
-        // Cube: one s×s×s fragment per beat.
-        ArchKind::Cube3d => {
-            let tiles = div_up(m, s) * div_up(k, s) * div_up(n, s);
-            // One beat per fragment + tree pipeline depth per tile batch.
-            let depth = s.trailing_zeros() as usize + 2;
-            st.cycles = (tiles + depth) as u64;
-            st.a_reads = (m * k) as u64 * div_up(n, s) as u64;
-            st.b_reads = (k * n) as u64 * div_up(m, s) as u64;
-            st.c_writes = (m * n) as u64;
-            st.psum_spills = (m * n) as u64 * (div_up(k, s) as u64 - 1);
-            st.encodes = st.a_reads;
-        }
-    }
-
-    st.utilization = st.macs as f64 / (st.cycles as f64 * peak as f64);
-    if !tcu.variant.external_encoder() {
-        // Baseline: every MAC re-encodes inside its PE.
-        st.encodes = st.macs;
-    }
-    st
+    super::planner::TilePlan::new(tcu, g).stats()
 }
 
 /// Bit-accurate tiled matmul for problems larger than one array tile —
-/// the functional path the runtime verification uses. Splits (m, k, n)
-/// into arch-legal tiles, runs each through the architecture's dataflow,
-/// and recombines partial products exactly.
+/// the functional path the runtime verification uses. Delegate to the
+/// instance's [`TcuEngine`](crate::arch::TcuEngine), whose shared
+/// planner splits (m, k, n) into arch-legal tiles, runs each through the
+/// architecture's dataflow over strided views (no gather copies), and
+/// recombines partial products exactly — in parallel row bands when the
+/// problem is large.
 pub fn tiled_matmul(tcu: &Tcu, a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i64> {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), k * n);
-    let (cap_m, cap_k, cap_n) = tcu.tile_caps();
-    let tm = m.min(cap_m);
-    let tk = k.min(cap_k);
-    let tn = n.min(cap_n);
-
-    let mut c = vec![0i64; m * n];
-    let mut mi = 0;
-    while mi < m {
-        let mm = tm.min(m - mi);
-        let mut ki = 0;
-        while ki < k {
-            let kk = tk.min(k - ki);
-            let mut ni = 0;
-            while ni < n {
-                let nn = tn.min(n - ni);
-                // Gather the tile operands.
-                let mut at = Vec::with_capacity(mm * kk);
-                for i in 0..mm {
-                    at.extend_from_slice(&a[(mi + i) * k + ki..(mi + i) * k + ki + kk]);
-                }
-                let mut bt = Vec::with_capacity(kk * nn);
-                for p in 0..kk {
-                    bt.extend_from_slice(&b[(ki + p) * n + ni..(ki + p) * n + ni + nn]);
-                }
-                let ct = tcu.matmul(&at, &bt, mm, kk, nn);
-                for i in 0..mm {
-                    for j in 0..nn {
-                        c[(mi + i) * n + ni + j] += ct[i * nn + j];
-                    }
-                }
-                ni += nn;
-            }
-            ki += kk;
-        }
-        mi += mm;
-    }
-    c
+    use crate::arch::TcuEngine;
+    tcu.engine().matmul(a, b, m, k, n)
 }
 
 #[cfg(test)]

@@ -1,11 +1,17 @@
 //! Cycle-level dataflow simulation: tiling, utilization, event counts.
 //!
-//! [`dataflow`] maps a GEMM (or im2col-lowered convolution) onto a
-//! [`Tcu`](crate::arch::Tcu) instance and reports the event counts the
-//! energy model consumes — cycles, MACs, SRAM port traffic, encoder
-//! activations — plus a tiled bit-accurate matmul for problems larger
-//! than one array tile.
+//! [`planner`] owns the M/K/N blocking of a GEMM (or im2col-lowered
+//! convolution) onto a [`Tcu`](crate::arch::Tcu) instance — one
+//! [`planner::TilePlan`] drives both the event accounting the energy
+//! model consumes (cycles, MACs, SRAM port traffic, encoder activations)
+//! and the bit-accurate tiled execution in
+//! [`crate::arch::engine::TcuEngine::matmul_into`].
+//!
+//! [`dataflow`] keeps the shape/stat types and the legacy free-function
+//! entry points (`gemm_stats`, `tiled_matmul`), now thin delegates.
 
 pub mod dataflow;
+pub mod planner;
 
 pub use dataflow::{gemm_stats, tiled_matmul, GemmShape, GemmStats};
+pub use planner::TilePlan;

@@ -1,0 +1,247 @@
+//! The shared tile planner — one owner for M/K/N blocking, pipeline
+//! fill/drain accounting, and psum-spill counting across all five TCU
+//! dataflows.
+//!
+//! Before the `TcuEngine` refactor every architecture re-implemented its
+//! tiling loop and `gemm_stats` carried a five-way match of the same
+//! blocking arithmetic. [`TilePlan`] centralises both: the engine trait's
+//! default `matmul_into` walks [`TilePlan`]'s tile grid (parallelising
+//! independent output row bands), and [`TilePlan::stats`] reproduces the
+//! event counts — cycle-for-cycle identical to the pre-refactor
+//! `gemm_stats` (locked by `tests::stats_match_pre_refactor_numbers`).
+//!
+//! Blocking policy per architecture (from [`Tcu::tile_caps`]):
+//!
+//! | arch        | M tile | K tile | N tile | psum spills            |
+//! |-------------|--------|--------|--------|------------------------|
+//! | 2D Matrix   | stream |   S    |   S    | none (NBout in-array)  |
+//! | 1D/2D Array | stream |   S    |   S    | none                   |
+//! | Systolic OS |   S    | stream |   S    | none (K in place)      |
+//! | Systolic WS | stream |   S    |   S    | M·N·(⌈K/S⌉−1)          |
+//! | 3D Cube     |   S    |   S    |   S    | M·N·(⌈K/S⌉−1)          |
+
+use super::dataflow::{GemmShape, GemmStats};
+use crate::arch::{ArchKind, Tcu};
+
+fn div_up(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+/// The blocking of one GEMM onto one TCU instance.
+#[derive(Clone, Copy, Debug)]
+pub struct TilePlan {
+    /// Problem shape.
+    pub shape: GemmShape,
+    /// Tile extents (clamped problem-side: `tm ≤ m`, etc.).
+    pub tm: usize,
+    pub tk: usize,
+    pub tn: usize,
+    tcu: Tcu,
+}
+
+impl TilePlan {
+    /// Block `g` onto `tcu` using the architecture's tile capacities.
+    pub fn new(tcu: &Tcu, g: GemmShape) -> TilePlan {
+        let (cap_m, cap_k, cap_n) = tcu.tile_caps();
+        TilePlan {
+            shape: g,
+            tm: g.m.min(cap_m),
+            tk: g.k.min(cap_k),
+            tn: g.n.min(cap_n),
+            tcu: *tcu,
+        }
+    }
+
+    /// Tile counts along (M, K, N).
+    pub fn tiles(&self) -> (usize, usize, usize) {
+        (
+            div_up(self.shape.m, self.tm),
+            div_up(self.shape.k, self.tk),
+            div_up(self.shape.n, self.tn),
+        )
+    }
+
+    /// Total number of array tile passes.
+    pub fn tile_passes(&self) -> usize {
+        let (a, b, c) = self.tiles();
+        a * b * c
+    }
+
+    /// Event counts for the planned GEMM — cycles (including pipeline
+    /// fill/drain and tile edges), port traffic, psum spills, encoder
+    /// activations. Bit-for-bit the pre-refactor `gemm_stats` numbers.
+    pub fn stats(&self) -> GemmStats {
+        let tcu = &self.tcu;
+        let g = self.shape;
+        let s = tcu.size;
+        let peak = tcu.num_macs() as u64;
+        let (m, k, n) = (g.m, g.k, g.n);
+
+        let mut st = GemmStats {
+            macs: g.macs(),
+            ..Default::default()
+        };
+
+        match tcu.kind {
+            // Broadcast + adder-tree archs: K unrolls over the S tree
+            // inputs, N over the S lanes; output rows of A stream one per
+            // cycle.
+            ArchKind::Matrix2d | ArchKind::Array1d2d => {
+                let tiles = div_up(k, s) * div_up(n, s);
+                // One wave per output row + 2-cycle tree fill per tile.
+                st.cycles = (tiles * (m + 2)) as u64;
+                // B (weights here live in the PE latches): loaded once per
+                // tile; A (the streamed multiplicand) re-broadcast per
+                // tile.
+                st.b_reads = (k * n) as u64;
+                st.a_reads = (m * k) as u64 * div_up(n, s) as u64;
+                // K-split partials accumulate in the per-tree output
+                // register file (DianNao's NBout role) — outputs leave
+                // the array exactly once, post-accumulation.
+                st.c_writes = (m * n) as u64;
+                st.psum_spills = 0;
+                st.encodes = st.a_reads;
+            }
+            // Output-stationary grid: M×N outputs resident, K streams.
+            ArchKind::SystolicOs => {
+                let tiles = div_up(m, s) * div_up(n, s);
+                // Each tile: K beats + skew fill/drain (2S).
+                st.cycles = (tiles * (k + 2 * s)) as u64;
+                st.a_reads = (m * k) as u64 * div_up(n, s) as u64;
+                st.b_reads = (k * n) as u64 * div_up(m, s) as u64;
+                st.c_writes = (m * n) as u64;
+                st.psum_spills = 0; // K accumulates in place
+                st.encodes = st.a_reads;
+            }
+            // Weight-stationary grid: K×N weights resident, M streams.
+            ArchKind::SystolicWs => {
+                let tiles = div_up(k, s) * div_up(n, s);
+                // Each tile: S-cycle weight load + M beats + skew (2S).
+                st.cycles = (tiles * (s + m + 2 * s)) as u64;
+                st.a_reads = (m * k) as u64 * div_up(n, s) as u64;
+                st.b_reads = (k * n) as u64; // loaded once per tile
+                st.c_writes = (m * n) as u64;
+                st.psum_spills = (m * n) as u64 * (div_up(k, s) as u64 - 1);
+                // WS encodes the *stationary* operand at load time —
+                // weights pass the encoder once per tile residency.
+                st.encodes = st.b_reads;
+            }
+            // Cube: one s×s×s fragment per beat.
+            ArchKind::Cube3d => {
+                let tiles = div_up(m, s) * div_up(k, s) * div_up(n, s);
+                // One beat per fragment + tree pipeline depth per tile
+                // batch.
+                let depth = s.trailing_zeros() as usize + 2;
+                st.cycles = (tiles + depth) as u64;
+                st.a_reads = (m * k) as u64 * div_up(n, s) as u64;
+                st.b_reads = (k * n) as u64 * div_up(m, s) as u64;
+                st.c_writes = (m * n) as u64;
+                st.psum_spills = (m * n) as u64 * (div_up(k, s) as u64 - 1);
+                st.encodes = st.a_reads;
+            }
+        }
+
+        st.utilization = st.macs as f64 / (st.cycles as f64 * peak as f64);
+        if !tcu.variant.external_encoder() {
+            // Baseline: every MAC re-encodes inside its PE.
+            st.encodes = st.macs;
+        }
+        st
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ArchKind, Tcu, ALL_ARCHS};
+    use crate::pe::Variant;
+
+    fn plan(kind: ArchKind, s: usize, m: usize, k: usize, n: usize) -> TilePlan {
+        TilePlan::new(&Tcu::new(kind, s, Variant::EntOurs), GemmShape::new(m, k, n))
+    }
+
+    /// Odd shapes (no dimension a multiple of the array size): the event
+    /// counts must match the pre-refactor `gemm_stats` numbers exactly.
+    /// Expected values were computed from the seed formulas.
+    #[test]
+    fn stats_match_pre_refactor_numbers() {
+        // (kind, s, cycles, a_reads, b_reads, c_writes, spills, encodes)
+        let cases = [
+            (ArchKind::Matrix2d, 8, 90u64, 546u64, 210u64, 130u64, 0u64, 546u64),
+            (ArchKind::Array1d2d, 8, 90, 546, 210, 130, 0, 546),
+            (ArchKind::SystolicOs, 8, 148, 546, 420, 130, 0, 546),
+            (ArchKind::SystolicWs, 8, 222, 546, 210, 130, 260, 210),
+            (ArchKind::Cube3d, 4, 76, 819, 840, 130, 650, 819),
+        ];
+        for (kind, s, cycles, a, b, c, spills, enc) in cases {
+            let st = plan(kind, s, 13, 21, 10).stats();
+            assert_eq!(st.macs, 13 * 21 * 10, "{}", kind.name());
+            assert_eq!(st.cycles, cycles, "{} cycles", kind.name());
+            assert_eq!(st.a_reads, a, "{} a_reads", kind.name());
+            assert_eq!(st.b_reads, b, "{} b_reads", kind.name());
+            assert_eq!(st.c_writes, c, "{} c_writes", kind.name());
+            assert_eq!(st.psum_spills, spills, "{} spills", kind.name());
+            assert_eq!(st.encodes, enc, "{} encodes", kind.name());
+        }
+    }
+
+    /// Size-1 edges: a 1×1×1 GEMM still pays fill/drain but nothing
+    /// else, on every architecture.
+    #[test]
+    fn size_one_edges() {
+        let expect_cycles = [
+            (ArchKind::Matrix2d, 8, 3u64),   // 1 row + 2 tree fill
+            (ArchKind::Array1d2d, 8, 3),
+            (ArchKind::SystolicOs, 8, 17),   // 1 beat + 2·S skew
+            (ArchKind::SystolicWs, 8, 25),   // S load + 1 beat + 2·S skew
+            (ArchKind::Cube3d, 4, 5),        // 1 fragment + depth 4
+        ];
+        for (kind, s, cycles) in expect_cycles {
+            let st = plan(kind, s, 1, 1, 1).stats();
+            assert_eq!(st.macs, 1, "{}", kind.name());
+            assert_eq!(st.cycles, cycles, "{} cycles", kind.name());
+            assert_eq!(st.a_reads, 1, "{}", kind.name());
+            assert_eq!(st.b_reads, 1, "{}", kind.name());
+            assert_eq!(st.c_writes, 1, "{}", kind.name());
+            assert_eq!(st.psum_spills, 0, "{}", kind.name());
+            assert!(st.utilization > 0.0 && st.utilization <= 1.0);
+        }
+    }
+
+    /// Psum-spill counting on the K-splitting architectures: spills only
+    /// appear when K exceeds one tile, and scale as M·N·(⌈K/S⌉−1).
+    #[test]
+    fn psum_spill_counting() {
+        // WS, S=32, 5×100×7: ⌈100/32⌉ = 4 K-tiles → 3 spill round-trips
+        // per output element.
+        let st = plan(ArchKind::SystolicWs, 32, 5, 100, 7).stats();
+        assert_eq!(st.psum_spills, 5 * 7 * 3);
+        assert_eq!(st.cycles, 404); // 4 tiles × (32 + 5 + 64)
+        assert_eq!(st.encodes, 700); // stationary weights, once each
+        // Cube, S=8, 10×30×9: ⌈30/8⌉ = 4 K-tiles → 270 spills.
+        let st = plan(ArchKind::Cube3d, 8, 10, 30, 9).stats();
+        assert_eq!(st.psum_spills, 270);
+        assert_eq!(st.cycles, 21); // 16 fragments + depth 5
+        // K within one tile → no spills anywhere.
+        for kind in ALL_ARCHS {
+            let s = if kind == ArchKind::Cube3d { 8 } else { 32 };
+            let st = plan(kind, s, 40, s, 40).stats();
+            assert_eq!(st.psum_spills, 0, "{}", kind.name());
+        }
+    }
+
+    /// The plan's tile extents respect the per-arch capacities and cover
+    /// the problem.
+    #[test]
+    fn tile_extents_respect_caps() {
+        let p = plan(ArchKind::SystolicOs, 8, 13, 21, 10);
+        assert_eq!((p.tm, p.tk, p.tn), (8, 21, 8)); // K streams on OS
+        assert_eq!(p.tiles(), (2, 1, 2));
+        assert_eq!(p.tile_passes(), 4);
+        let p = plan(ArchKind::Cube3d, 4, 13, 21, 10);
+        assert_eq!((p.tm, p.tk, p.tn), (4, 4, 4));
+        assert_eq!(p.tiles(), (4, 6, 3));
+        let p = plan(ArchKind::Matrix2d, 8, 13, 21, 10);
+        assert_eq!((p.tm, p.tk, p.tn), (13, 8, 8)); // M streams
+    }
+}

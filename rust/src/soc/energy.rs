@@ -1,15 +1,17 @@
 //! Single-frame inference energy simulation (Figs 9, 10, 11).
 //!
-//! Walks a network layer by layer: TCU layers run through the dataflow
-//! event counter ([`crate::sim::gemm_stats`]); pooling/eltwise run on
-//! the SIMD engine; every byte moved through the buffer hierarchy is
-//! charged Table 2's per-access energy. Buckets follow the paper's
-//! Fig 9 decomposition: SRAM read, SRAM write, computing engines (TCU +
-//! SIMD; the controller is part of the engines bucket).
+//! Walks a network layer by layer: TCU layers run through the engine's
+//! event counter ([`crate::arch::TcuEngine::stats`], backed by the
+//! shared tile planner); pooling/eltwise run on the SIMD engine; every
+//! byte moved through the buffer hierarchy is charged Table 2's
+//! per-access energy. Buckets follow the paper's Fig 9 decomposition:
+//! SRAM read, SRAM write, computing engines (TCU + SIMD; the controller
+//! is part of the engines bucket).
 
 use super::Soc;
+use crate::arch::TcuEngine;
 use crate::nn::{Layer, Network};
-use crate::sim::{gemm_stats, GemmShape, GemmStats};
+use crate::sim::{GemmShape, GemmStats};
 
 /// Energy decomposition of one frame, all in picojoules.
 #[derive(Clone, Copy, Debug, Default)]
@@ -86,14 +88,14 @@ fn accumulate(t: &mut FrameEnergy, e: &FrameEnergy) {
 /// split the N dimension; a single array takes the whole problem).
 fn soc_gemm_stats(soc: &Soc, g: GemmShape) -> GemmStats {
     if soc.tcus.len() == 1 {
-        return gemm_stats(&soc.tcus[0], g);
+        return soc.tcus[0].engine().stats(g);
     }
     // Split N across instances; cycles overlap (max), traffic adds.
     let per = GemmShape::new(g.m, g.k, g.n.div_ceil(soc.tcus.len()));
     let mut agg = GemmStats::default();
     let mut max_cycles = 0;
     for tcu in &soc.tcus {
-        let st = gemm_stats(tcu, per);
+        let st = tcu.engine().stats(per);
         max_cycles = max_cycles.max(st.cycles);
         agg.merge(&st);
     }

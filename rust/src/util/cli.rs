@@ -22,15 +22,24 @@ pub struct OptSpec {
 }
 
 /// Error from argument parsing.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum CliError {
-    #[error("unknown option --{0}")]
     Unknown(String),
-    #[error("option --{0} requires a value")]
     MissingValue(String),
-    #[error("invalid value for --{0}: {1}")]
     BadValue(String, String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Unknown(n) => write!(f, "unknown option --{n}"),
+            CliError::MissingValue(n) => write!(f, "option --{n} requires a value"),
+            CliError::BadValue(n, v) => write!(f, "invalid value for --{n}: {v}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse `argv` (without the program/subcommand name) against `specs`.

@@ -9,11 +9,13 @@
 //! * [`json`] — minimal JSON writer + parser for configs and reports
 //!   (no `serde`);
 //! * [`cli`] — tiny declarative argument parser (no `clap`);
+//! * [`error`] — message-style error + context trait (no `anyhow`);
 //! * [`table`] — aligned text tables matching the paper's layout.
 
 pub mod bench;
 pub mod check;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod prng;
 pub mod stats;

@@ -1,6 +1,8 @@
-//! End-to-end serving integration: coordinator + dynamic batcher + PJRT
-//! runtime under concurrent load, including failure injection.
-//! Gated on built artifacts (like `cross_layer`).
+//! End-to-end serving integration: coordinator + dynamic batcher +
+//! artifact runtime under concurrent load, including failure injection.
+//! The artifact-backed tests gate on built artifacts (like
+//! `cross_layer`); the native-backend tests at the bottom always run —
+//! they serve straight through the engine shards.
 
 use ent::coordinator::{Config, Coordinator, InferRequest};
 use ent::runtime::default_artifact_dir;
@@ -90,5 +92,38 @@ fn malformed_request_rejected_without_poisoning_the_batch() {
     assert!(err.contains("bad input"), "{err}");
     let m = coord.metrics();
     assert!(m.errors >= 1);
+    coord.shutdown();
+}
+
+/// Native backend: the full serving path (dynamic batcher → engine
+/// shards → digital twin) with zero artifacts, under concurrent load.
+#[test]
+fn native_shards_serve_concurrent_requests() {
+    let coord = Coordinator::start(Config::native(3)).expect("native coordinator");
+    let input_len = coord.model().input_len();
+    let n_clients = 3;
+    let per_client = 3;
+    std::thread::scope(|scope| {
+        for c in 0..n_clients {
+            let coord = &coord;
+            scope.spawn(move || {
+                let mut rng = Rng::new(400 + c as u64);
+                for _ in 0..per_client {
+                    let resp = coord
+                        .infer(InferRequest {
+                            image: rng.i8_vec(input_len),
+                        })
+                        .expect("native inference");
+                    assert_eq!(resp.logits.len(), 10);
+                    assert!(resp.logits.iter().all(|x| x.is_finite()));
+                    assert!(resp.batch_size >= 1 && resp.batch_size <= 8);
+                    assert!(resp.sim_energy_uj > 0.0);
+                }
+            });
+        }
+    });
+    let m = coord.metrics();
+    assert_eq!(m.requests, n_clients * per_client);
+    assert_eq!(m.errors, 0);
     coord.shutdown();
 }
