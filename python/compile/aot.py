@@ -11,6 +11,8 @@ Artifacts (written to --out, default ../artifacts):
     tinynet_b{1,2,4,8}.hlo.txt   quantized CNN forward, per batch size
     gemm_{M}x{K}x{N}.hlo.txt     EN-T encoded GEMM tiles for serving
     encode8.hlo.txt              standalone encoder (wire-bit contract)
+    tinyformer.hlo.txt           registry marker: the int8 transformer is
+                                 executed natively by rust nn::transformer
 
 Usage:  python -m compile.aot [--out DIR] [--report]
 """
@@ -102,6 +104,13 @@ def main():
             to_hlo_text(lower_gemm(m, k, n)),
         )
     write(os.path.join(args.out, "encode8.hlo.txt"), to_hlo_text(lower_encoder()))
+    # No JAX lowering for the transformer: weights and datapath live in
+    # rust (nn::transformer, seeded identically everywhere); the marker
+    # registers the artifact so the artifacts backend serves tokens.
+    write(
+        os.path.join(args.out, "tinyformer.hlo.txt"),
+        "// native transformer marker: executed by rust nn::transformer\n",
+    )
 
     if args.report:
         structural_report()

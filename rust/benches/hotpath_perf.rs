@@ -1,5 +1,5 @@
-//! Hot-path performance benchmark (deliverable (e) — EXPERIMENTS.md
-//! §Perf). Covers every layer the request path touches:
+//! Hot-path performance benchmark — covers every layer the request
+//! path touches:
 //!
 //! * L3 functional models: encoded MAC (packed LUT), bit-level datapath,
 //!   tiled GEMM through every `TcuEngine` (arch × variant grid at the

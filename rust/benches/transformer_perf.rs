@@ -1,0 +1,103 @@
+//! Transformer workload benchmark — wall-clock prefill and KV-cache
+//! decode throughput of the bit-accurate int8 encoder stack on every
+//! architecture × variant (256 GOPS scale), plus the decode-vs-recompute
+//! contrast that motivates the KV cache.
+//!
+//! Emits `BENCH_transformer.json` at the workspace root — tokens/s and
+//! ns/MAC per arch × variant, prefill vs decode — so the transformer
+//! perf trajectory is tracked across PRs alongside `BENCH_hotpath.json`.
+
+use ent::arch::{ArchKind, Scale, Tcu, ALL_ARCHS};
+use ent::nn::transformer::QuantTransformer;
+use ent::pe::{Variant, ALL_VARIANTS};
+use ent::util::bench::{black_box, header, BenchResult, Suite};
+use ent::util::json::Json;
+
+/// Prompt length for the prefill phase (and the decode context).
+const SEQ: usize = 16;
+
+fn main() {
+    header("transformer workload performance");
+    let mut suite = Suite::new();
+    let model = QuantTransformer::tiny_native();
+    let spec = model.spec;
+    let prompt: Vec<u16> = (0..SEQ).map(|i| ((i * 11 + 2) % spec.vocab) as u16).collect();
+    let prefill_macs = spec.prefill_network(SEQ).total_macs() as f64;
+    let decode_macs = spec.decode_network(SEQ + 1).total_macs() as f64;
+    let recompute_macs = spec.prefill_network(SEQ + 1).total_macs() as f64;
+    println!(
+        "  model: {}L d_model {} heads {} d_ff {}  |  prefill({SEQ}) {} MACs, decode {} MACs \
+         (recompute would be {} — KV cache saves {:.1}%)",
+        spec.layers,
+        spec.d_model,
+        spec.heads,
+        spec.d_ff,
+        prefill_macs,
+        decode_macs,
+        recompute_macs,
+        (1.0 - decode_macs / recompute_macs) * 100.0
+    );
+
+    let mut json_rows: Vec<Json> = Vec::new();
+    for arch in ALL_ARCHS {
+        for variant in ALL_VARIANTS {
+            let size = arch.size_for_scale(Scale::Gops256);
+            let eng = Tcu::new(arch, size, variant).engine();
+
+            // Prefill: the whole prompt from a cold cache per iteration.
+            let name = format!("prefill{SEQ}_{}_{}", arch.short_name(), variant.name());
+            let r = suite.bench(&name, || {
+                let mut caches = model.empty_caches();
+                black_box(model.prefill(&eng, &prompt, &mut caches));
+            });
+            json_rows.push(row(arch, variant, "prefill", SEQ, prefill_macs, r));
+
+            // Decode: one token against a warm cache, rewound each
+            // iteration so every step attends over the same context.
+            let mut caches = model.empty_caches();
+            model.prefill(&eng, &prompt, &mut caches);
+            let name = format!("decode_{}_{}", arch.short_name(), variant.name());
+            let r = suite.bench(&name, || {
+                for c in caches.iter_mut() {
+                    c.truncate(SEQ);
+                }
+                black_box(model.decode(&eng, 7, &mut caches));
+            });
+            json_rows.push(row(arch, variant, "decode", 1, decode_macs, r));
+        }
+    }
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("transformer_perf")),
+        ("unit", Json::str("tokens_per_s / ns_per_mac")),
+        ("seq", Json::num(SEQ as f64)),
+        ("kv_mac_saving", Json::num(1.0 - decode_macs / recompute_macs)),
+        ("results", Json::arr(json_rows)),
+    ]);
+    // Cargo runs benches with cwd = the package dir (rust/); anchor the
+    // output at the workspace root so CI finds it deterministically.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_transformer.json");
+    match std::fs::write(path, format!("{out}\n")) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\ncould not write {path}: {e}"),
+    }
+}
+
+fn row(
+    arch: ArchKind,
+    variant: Variant,
+    phase: &str,
+    tokens_per_iter: usize,
+    macs: f64,
+    r: &BenchResult,
+) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(r.name.clone())),
+        ("arch", Json::str(arch.short_name())),
+        ("variant", Json::str(variant.name())),
+        ("phase", Json::str(phase)),
+        ("tokens_per_s", Json::num(tokens_per_iter as f64 * r.throughput())),
+        ("ns_per_iter", Json::num(r.ns_per_iter.mean)),
+        ("ns_per_mac", Json::num(r.ns_per_iter.mean / macs)),
+    ])
+}

@@ -107,7 +107,8 @@ impl ArchKind {
     }
 
     /// Fitted routing coefficients (see `hw::wiring` docs; fitted once
-    /// against Fig 6/7 endpoints, residuals in EXPERIMENTS.md).
+    /// against Fig 6/7 endpoints — `ent report fig6`/`fig7` show the
+    /// residuals).
     pub fn routing_fit(self) -> RoutingFit {
         match self {
             // Broadcast archs pay long row wires and strong drivers, so

@@ -99,8 +99,8 @@ impl Multiplier {
     /// This is the verification hot path, so it uses the allocation-free
     /// row buffer and the bitwise carry-save reduction
     /// ([`crate::arith::wallace::reduce_rows_fast`]), which is
-    /// property-tested equivalent to the structural Wallace model (see
-    /// EXPERIMENTS.md §Perf for the before/after).
+    /// property-tested equivalent to the structural Wallace model (the
+    /// before/after is tracked by `cargo bench --bench hotpath_perf`).
     pub fn mul_encoded(&self, code: &SignedEntCode, b: i64) -> i64 {
         let n = self.width;
         assert!(fits_signed(b, n));

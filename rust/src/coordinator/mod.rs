@@ -22,6 +22,14 @@
 //!   directly, splitting each batch's images across shards on scoped
 //!   threads. This is the zero-setup serving path (and what `ent serve
 //!   --native` runs).
+//!
+//! Two request kinds share the batching window: CNN image requests
+//! ([`InferRequest`]) and transformer token requests ([`TokenRequest`],
+//! served by the int8 encoder stack in [`crate::nn::transformer`]).
+//! Token sequences are sharded whole across the native engine pool;
+//! every shard builds identical weights and every engine computes exact
+//! integer GEMMs, so batching and sharding never change logits — the
+//! same invariant as the CNN path.
 
 pub mod batcher;
 pub mod metrics;
@@ -35,6 +43,7 @@ use std::time::{Duration, Instant};
 use crate::arch::{AnyEngine, ArchKind, Tcu};
 use crate::bail;
 use crate::nn::forward::QuantCnn;
+use crate::nn::transformer::QuantTransformer;
 use crate::nn::zoo;
 use crate::pe::Variant;
 use crate::runtime::Runtime;
@@ -130,6 +139,24 @@ pub struct InferRequest {
     pub image: Vec<i8>,
 }
 
+/// One transformer request: a token-id sequence to prefill; the
+/// response carries next-token logits for the last position.
+#[derive(Clone, Debug)]
+pub struct TokenRequest {
+    pub tokens: Vec<u16>,
+}
+
+/// Response to a [`TokenRequest`].
+#[derive(Clone, Debug)]
+pub struct TokenResponse {
+    /// Next-token logits (vocabulary-sized).
+    pub logits: Vec<f32>,
+    /// Wall-clock latency from enqueue to response.
+    pub latency_us: u64,
+    /// Token jobs grouped into the same execution batch.
+    pub batch_size: usize,
+}
+
 /// The response: logits plus serving + digital-twin metadata.
 #[derive(Clone, Debug)]
 pub struct InferResponse {
@@ -150,10 +177,21 @@ struct Job {
     respond: Sender<std::result::Result<InferResponse, String>>,
 }
 
+struct TokenJob {
+    tokens: Vec<u16>,
+    enqueued: Instant,
+    respond: Sender<std::result::Result<TokenResponse, String>>,
+}
+
 enum Msg {
     Job(Job),
+    Tokens(TokenJob),
     Shutdown,
 }
+
+/// Token jobs grouped into one execution batch (sharded across the
+/// native engine pool in one scoped-thread pass).
+const TOKEN_BATCH_CAP: usize = 8;
 
 /// The running coordinator.
 pub struct Coordinator {
@@ -218,6 +256,33 @@ impl Coordinator {
         }
     }
 
+    /// Submit one transformer token request; returns a receiver for the
+    /// response.
+    pub fn submit_tokens(
+        &self,
+        req: TokenRequest,
+    ) -> Receiver<std::result::Result<TokenResponse, String>> {
+        let (tx, rx) = mpsc::channel();
+        let job = TokenJob {
+            tokens: req.tokens,
+            enqueued: Instant::now(),
+            respond: tx,
+        };
+        let _ = self.tx.send(Msg::Tokens(job));
+        rx
+    }
+
+    /// Blocking convenience: submit a token sequence and wait for
+    /// next-token logits.
+    pub fn infer_tokens(&self, req: TokenRequest) -> Result<TokenResponse> {
+        let rx = self.submit_tokens(req);
+        match rx.recv() {
+            Ok(Ok(r)) => Ok(r),
+            Ok(Err(e)) => bail!("token inference failed: {e}"),
+            Err(_) => bail!("coordinator shut down"),
+        }
+    }
+
     pub fn metrics(&self) -> Snapshot {
         self.metrics.snapshot()
     }
@@ -249,6 +314,7 @@ enum Executor {
     Artifacts(Runtime),
     Native {
         model: QuantCnn,
+        lm: QuantTransformer,
         shards: Vec<AnyEngine>,
     },
 }
@@ -265,7 +331,7 @@ impl Executor {
             Executor::Artifacts(rt) => rt
                 .cnn_forward(&cfg.model.artifact(bsize), flat, bsize, cfg.model.chw)
                 .map_err(|e| e.to_string()),
-            Executor::Native { model, shards } => {
+            Executor::Native { model, shards, .. } => {
                 let per = model.input_len();
                 let classes = model.classes;
                 let nshards = shards.len().max(1);
@@ -332,6 +398,16 @@ fn executor_thread(
                 let _ = ready.send(Err(e));
                 return;
             }
+            // The transformer artifact is optional: token requests fail
+            // per-request (not at startup) when it is absent. A
+            // present-but-unloadable artifact is worth a log line, since
+            // per-request errors would only say "not loaded".
+            let tf = cfg.artifact_dir.join("tinyformer.hlo.txt");
+            if tf.exists() {
+                if let Err(e) = rt.load_file("tinyformer", &tf) {
+                    eprintln!("coordinator: tinyformer artifact present but unloadable: {e}");
+                }
+            }
             Executor::Artifacts(rt)
         }
         Backend::Native { shards } => {
@@ -349,6 +425,7 @@ fn executor_thread(
             let size = if cfg.twin_arch == ArchKind::Cube3d { 8 } else { 16 };
             Executor::Native {
                 model,
+                lm: QuantTransformer::tiny_native(),
                 shards: (0..(*shards).max(1))
                     .map(|_| Tcu::new(cfg.twin_arch, size, cfg.twin_variant).engine())
                     .collect(),
@@ -368,35 +445,120 @@ fn executor_thread(
     let input_len = cfg.model.input_len();
     let classes = cfg.model.classes;
     loop {
-        // Block for the first job.
-        let first = match rx.recv() {
-            Ok(Msg::Job(j)) => j,
+        // Block for the first job of either kind.
+        let mut images: Vec<Job> = Vec::new();
+        let mut tokens: Vec<TokenJob> = Vec::new();
+        match rx.recv() {
+            Ok(Msg::Job(j)) => images.push(j),
+            Ok(Msg::Tokens(t)) => tokens.push(t),
             Ok(Msg::Shutdown) | Err(_) => return,
-        };
-        let mut batch = vec![first];
+        }
         // Dynamic batching window: a solo request only waits the short
         // grace period; once a companion shows up (load exists) the full
-        // window applies.
+        // window applies. Image and token jobs share the window but
+        // execute as separate batches. The window closes as soon as
+        // EITHER kind fills its cap: under mixed load this can dispatch
+        // the other kind's batch below capacity, but it never makes an
+        // at-cap batch idle-wait for stragglers of the other kind —
+        // latency is the design goal here (DESIGN.md §7), batches are
+        // opportunistic.
         let now = Instant::now();
         let grace_deadline = now + Duration::from_micros(cfg.policy.grace_us);
         let deadline = now + Duration::from_micros(cfg.policy.max_wait_us);
-        while batch.len() < cfg.policy.max_batch(&cfg.model) {
-            let effective = if batch.len() == 1 { grace_deadline } else { deadline };
+        let img_cap = cfg.policy.max_batch(&cfg.model);
+        let mut shutdown = false;
+        while images.len() < img_cap && tokens.len() < TOKEN_BATCH_CAP {
+            let effective = if images.len() + tokens.len() == 1 {
+                grace_deadline
+            } else {
+                deadline
+            };
             let left = effective.saturating_duration_since(Instant::now());
             match rx.recv_timeout(left) {
-                Ok(Msg::Job(j)) => batch.push(j),
-                Ok(Msg::Shutdown) => {
-                    run_batch(&exec, &cfg, &metrics, batch, input_len, classes, sim_energy_uj, sim_latency_ms);
-                    return;
+                Ok(Msg::Job(j)) => images.push(j),
+                Ok(Msg::Tokens(t)) => tokens.push(t),
+                Ok(Msg::Shutdown) | Err(RecvTimeoutError::Disconnected) => {
+                    shutdown = true;
+                    break;
                 }
                 Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => {
-                    run_batch(&exec, &cfg, &metrics, batch, input_len, classes, sim_energy_uj, sim_latency_ms);
-                    return;
-                }
             }
         }
-        run_batch(&exec, &cfg, &metrics, batch, input_len, classes, sim_energy_uj, sim_latency_ms);
+        run_token_batch(&exec, &metrics, tokens);
+        if !images.is_empty() {
+            run_batch(&exec, &cfg, &metrics, images, input_len, classes, sim_energy_uj, sim_latency_ms);
+        }
+        if shutdown {
+            return;
+        }
+    }
+}
+
+/// Serve one batch of transformer token jobs. On the native backend,
+/// whole sequences are sharded round-robin across the engine pool on
+/// scoped threads; results are reassembled in order, so batch grouping
+/// and shard count never change logits (every engine computes exact
+/// integer GEMMs over identical weights). On the artifacts backend the
+/// `tinyformer` artifact serves the batch sequentially.
+fn run_token_batch(exec: &Executor, metrics: &Metrics, batch: Vec<TokenJob>) {
+    if batch.is_empty() {
+        return;
+    }
+    let bsize = batch.len();
+    let mut outs: Vec<Option<std::result::Result<Vec<f32>, String>>> = vec![None; bsize];
+    match exec {
+        Executor::Native { lm, shards, .. } => {
+            let nshards = shards.len().max(1);
+            std::thread::scope(|scope| {
+                let mut handles = Vec::new();
+                for (si, eng) in shards.iter().enumerate() {
+                    let batch = &batch;
+                    handles.push(scope.spawn(move || {
+                        let mut mine = Vec::new();
+                        let mut i = si;
+                        while i < bsize {
+                            let r = match lm.check_tokens(&batch[i].tokens) {
+                                Ok(()) => Ok(lm.logits(eng, &batch[i].tokens)),
+                                Err(e) => Err(e),
+                            };
+                            mine.push((i, r));
+                            i += nshards;
+                        }
+                        mine
+                    }));
+                }
+                for h in handles {
+                    for (i, r) in h.join().expect("token shard thread") {
+                        outs[i] = Some(r);
+                    }
+                }
+            });
+        }
+        Executor::Artifacts(rt) => {
+            for (i, job) in batch.iter().enumerate() {
+                outs[i] = Some(
+                    rt.transformer_logits("tinyformer", &job.tokens)
+                        .map_err(|e| e.to_string()),
+                );
+            }
+        }
+    }
+    for (job, out) in batch.into_iter().zip(outs) {
+        let latency_us = job.enqueued.elapsed().as_micros() as u64;
+        match out.unwrap_or_else(|| Err("shard dropped token job".into())) {
+            Ok(logits) => {
+                metrics.record(latency_us, bsize);
+                let _ = job.respond.send(Ok(TokenResponse {
+                    logits,
+                    latency_us,
+                    batch_size: bsize,
+                }));
+            }
+            Err(e) => {
+                metrics.record_error();
+                let _ = job.respond.send(Err(e));
+            }
+        }
     }
 }
 
@@ -544,6 +706,41 @@ mod tests {
         let m = coord.metrics();
         assert_eq!(m.requests, 5);
         assert_eq!(m.errors, 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn native_backend_serves_transformer_requests() {
+        let coord = Coordinator::start(Config::native(2)).expect("native coordinator");
+        let toks = vec![3u16, 1, 4, 1, 5];
+        let first = coord
+            .infer_tokens(TokenRequest { tokens: toks.clone() })
+            .expect("token inference");
+        assert_eq!(first.logits.len(), 64); // tiny vocab
+        assert!(first.logits.iter().all(|x| x.is_finite()));
+        // Batching/sharding must not change logits (same invariant as
+        // the CNN path): concurrent duplicates land in different batch
+        // groupings and shards.
+        std::thread::scope(|scope| {
+            for _ in 0..3 {
+                let coord = &coord;
+                let toks = toks.clone();
+                let expect = first.logits.clone();
+                scope.spawn(move || {
+                    let r = coord
+                        .infer_tokens(TokenRequest { tokens: toks })
+                        .expect("dup token request");
+                    assert_eq!(r.logits, expect, "sharding changed transformer logits");
+                });
+            }
+        });
+        // Malformed sequences are rejected individually.
+        let bad = coord
+            .submit_tokens(TokenRequest { tokens: vec![9999] })
+            .recv()
+            .expect("response")
+            .expect_err("must reject");
+        assert!(bad.contains("out of vocab"), "{bad}");
         coord.shutdown();
     }
 

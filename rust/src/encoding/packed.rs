@@ -24,6 +24,17 @@
 //! use [`PackedCode::encode_signed`], which runs the §3.3 carry chain
 //! directly into the packed word: branch-light, and no heap allocation
 //! either way.
+//!
+//! ```
+//! use ent::encoding::packed::lut_i8;
+//!
+//! // One table lookup encodes an int8 operand into the n+1-bit EN-T
+//! // wire format (plus the sign line) — and decodes back exactly.
+//! let code = lut_i8(-57);
+//! assert!(code.sign());
+//! assert_eq!(code.decode(), -57);
+//! assert_eq!(lut_i8(0).wire_bits(), 0);
+//! ```
 
 use super::ent::{EntCode, SignedEntCode};
 

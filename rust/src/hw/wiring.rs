@@ -23,14 +23,16 @@
 //! per-architecture baseline routing fractions `Rₐ`, `Rₚ`. They absorb
 //! what we cannot re-derive without the SMIC 40 nm PDK — routing
 //! congestion and P&R density response — and are fitted once against the
-//! paper's Fig 6/7 endpoints (residuals in EXPERIMENTS.md).
+//! paper's Fig 6/7 endpoints (`ent report fig6` prints the residuals
+//! next to the paper numbers).
 //!
 //! Because this conservative physical model cannot capture the full
 //! layout compaction the paper's P&R flow reports, the reproduced
 //! improvement magnitudes land at roughly half the paper's percentages
 //! while preserving every qualitative contrast (per-arch ordering, the
-//! MBE-on-pipelined regression, the scale trend). EXPERIMENTS.md
-//! quantifies the per-figure gap.
+//! MBE-on-pipelined regression, the scale trend). The per-figure gap
+//! is visible in `ent report all`, which prints the paper's numbers
+//! alongside ours.
 
 /// Routing-overhead coefficients for one architecture.
 #[derive(Clone, Copy, Debug)]

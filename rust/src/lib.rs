@@ -18,12 +18,13 @@
 //! * [`arch`], [`sim`] — the five TCU microarchitectures (2D Matrix,
 //!   1D/2D Array, Systolic OS/WS, 3D Cube) as cycle-level dataflow
 //!   simulators, with the EN-T transformation applied as an overlay;
-//! * [`nn`], [`soc`] — the benchmark SoC of the paper's §4.4 and the eight
-//!   CNN workloads it evaluates;
+//! * [`nn`], [`soc`] — the benchmark SoC of the paper's §4.4 and its
+//!   workloads: the eight evaluation CNNs plus an int8 transformer
+//!   encoder stack with KV-cache decode ([`nn::transformer`]);
 //! * [`runtime`], [`coordinator`] — the artifact runtime and the serving
 //!   coordinator that schedules real inference jobs onto the modelled NPU;
 //! * [`report`] — emitters that regenerate every table and figure of the
-//!   paper's evaluation section.
+//!   paper's evaluation section (plus the transformer efficiency table).
 //!
 //! Every architecture is driven through one interface: the
 //! [`arch::engine::TcuEngine`] trait, whose shared tile planner
@@ -32,6 +33,17 @@
 //! over independent output tiles. The same engine object serves
 //! functional verification, cycle/energy reporting, and the serving
 //! path — see DESIGN.md.
+//!
+//! ```
+//! use ent::arch::{ArchKind, Tcu, TcuEngine};
+//! use ent::pe::Variant;
+//!
+//! // An EN-T(Ours) output-stationary systolic array, driven through the
+//! // shared engine trait: bit-exact integer GEMMs on any shape.
+//! let eng = Tcu::new(ArchKind::SystolicOs, 8, Variant::EntOurs).engine();
+//! let c = eng.matmul(&[1, 2, 3, 4], &[5, 6, 7, 8], 2, 2, 2);
+//! assert_eq!(c, vec![19, 22, 43, 50]);
+//! ```
 //!
 //! Python (JAX + Pallas) is used only at build time to author and lower
 //! the numerics; it never runs on the request path.

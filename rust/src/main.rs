@@ -1,10 +1,11 @@
 //! `ent` — the EN-T reproduction CLI (Layer-3 leader entrypoint).
 //!
 //! ```text
-//! ent report <all|fig1|table1|fig6|fig7|table2|fig9|fig10|fig11|fig12>
+//! ent report <all|fig1|table1|fig6|fig7|table2|fig9|fig10|fig11|fig12|transformer>
 //! ent simulate --arch sa_os --size 32 --variant ours --m 64 --k 128 --n 64
 //! ent soc --net resnet50 [--arch sa_os] [--json]
-//! ent serve --requests 64 [--artifacts DIR]
+//! ent transformer --prompt 12 --gen 4 [--arch sa_os] [--variant ours] [--json]
+//! ent serve --requests 64 [--native] [--tokens] [--artifacts DIR]
 //! ent sweep --ablation <encoder|accwidth|segmented|batching>
 //! ent selftest
 //! ```
@@ -12,7 +13,8 @@
 use std::process::ExitCode;
 
 use ent::arch::{ArchKind, Tcu, ALL_ARCHS};
-use ent::coordinator::{Config, Coordinator, InferRequest};
+use ent::coordinator::{Config, Coordinator, InferRequest, TokenRequest};
+use ent::nn::transformer::QuantTransformer;
 use ent::nn::zoo;
 use ent::pe::Variant;
 use ent::report;
@@ -33,18 +35,34 @@ fn main() -> ExitCode {
     }
 }
 
+/// Every subcommand with its one-line description — the single source
+/// for `ent --help`. Keep in sync with the `run()` dispatch match;
+/// `tests/cli_help.rs` asserts the known names appear in the help text.
+const SUBCOMMANDS: [(&str, &str); 8] = [
+    (
+        "report",
+        "regenerate a paper table/figure (all, fig1, table1, fig6, fig7, table2, fig9, fig10, fig11, fig12, transformer)",
+    ),
+    ("simulate", "run one GEMM through an architecture dataflow model"),
+    ("soc", "single-frame SoC energy/latency for a CNN workload"),
+    (
+        "transformer",
+        "int8 transformer inference demo (prefill + KV-cache decode) on one engine",
+    ),
+    ("serve", "start the serving coordinator on synthetic load (CNN and/or token requests)"),
+    ("sweep", "ablation sweeps (encoder, accwidth, segmented, batching)"),
+    ("selftest", "quick datapath equivalence check"),
+    ("help", "show this help (or `ent <subcommand> --help` for options)"),
+];
+
 fn usage() -> String {
-    "ent — EN-T tensor-engine reproduction\n\
-     \n\
-     subcommands:\n\
-     \x20 report <id>      regenerate a paper table/figure (all, fig1, table1,\n\
-     \x20                  fig6, fig7, table2, fig9, fig10, fig11, fig12)\n\
-     \x20 simulate         run a GEMM through an architecture model\n\
-     \x20 soc              single-frame SoC energy for a network\n\
-     \x20 serve            start the serving coordinator on synthetic load\n\
-     \x20 sweep            ablation sweeps (encoder, accwidth, segmented, batching)\n\
-     \x20 selftest         quick datapath equivalence check\n"
-        .into()
+    let mut s = String::from(
+        "ent — EN-T tensor-engine reproduction\n\nusage: ent <subcommand> [options]\n\nsubcommands:\n",
+    );
+    for (name, about) in SUBCOMMANDS {
+        s.push_str(&format!("  {name:<12} {about}\n"));
+    }
+    s
 }
 
 fn run(argv: &[String]) -> ent::Result<()> {
@@ -57,6 +75,7 @@ fn run(argv: &[String]) -> ent::Result<()> {
         "report" => cmd_report(rest),
         "simulate" => cmd_simulate(rest),
         "soc" => cmd_soc(rest),
+        "transformer" => cmd_transformer(rest),
         "serve" => cmd_serve(rest),
         "sweep" => cmd_sweep(rest),
         "selftest" => cmd_selftest(),
@@ -96,6 +115,7 @@ fn cmd_report(argv: &[String]) -> ent::Result<()> {
         "fig10" => report::fig10(),
         "fig11" => report::fig11(),
         "fig12" => report::fig12(),
+        "transformer" => report::transformer(),
         other => ent::bail!("unknown report '{other}'"),
     };
     print!("{out}");
@@ -248,6 +268,94 @@ fn cmd_soc(argv: &[String]) -> ent::Result<()> {
     Ok(())
 }
 
+fn cmd_transformer(argv: &[String]) -> ent::Result<()> {
+    let specs = [
+        OptSpec { name: "arch", takes_value: true, help: "matrix2d|array1d2d|sa_os|sa_ws|cube3d" },
+        OptSpec { name: "size", takes_value: true, help: "array size (default 16; cube edge 8)" },
+        OptSpec { name: "variant", takes_value: true, help: "baseline|mbe|ours" },
+        OptSpec { name: "prompt", takes_value: true, help: "prompt length to prefill (default 12)" },
+        OptSpec { name: "gen", takes_value: true, help: "tokens to decode autoregressively (default 4)" },
+        OptSpec { name: "json", takes_value: false, help: "JSON output" },
+        OptSpec { name: "help", takes_value: false, help: "show help" },
+    ];
+    let args = Args::parse(argv, &specs)?;
+    if args.flag("help") {
+        print!("{}", help("ent transformer", "int8 transformer prefill + KV-cache decode", &specs));
+        return Ok(());
+    }
+    let arch = parse_arch(args.get_or("arch", "sa_os"))?;
+    let size = args.get_usize("size", if arch == ArchKind::Cube3d { 8 } else { 16 })?;
+    let variant = parse_variant(args.get_or("variant", "ours"))?;
+
+    let model = QuantTransformer::tiny_native();
+    let spec = model.spec;
+    let prompt_len = args.get_usize("prompt", 12)?.clamp(1, spec.max_seq - 1);
+    let gen_len = args.get_usize("gen", 4)?.min(spec.max_seq - prompt_len);
+    let mut rng = Rng::new(0x70C);
+    let prompt: Vec<u16> = (0..prompt_len)
+        .map(|_| rng.below(spec.vocab as u64) as u16)
+        .collect();
+
+    let eng = Tcu::new(arch, size, variant).engine();
+    let mut caches = model.empty_caches();
+    let t0 = std::time::Instant::now();
+    let mut logits = model.prefill(&eng, &prompt, &mut caches);
+    let prefill_s = t0.elapsed().as_secs_f64();
+    let mut generated = Vec::new();
+    let t1 = std::time::Instant::now();
+    for _ in 0..gen_len {
+        let next = QuantTransformer::argmax(&logits);
+        generated.push(next);
+        logits = model.decode(&eng, next, &mut caches);
+    }
+    let decode_s = t1.elapsed().as_secs_f64();
+
+    // Digital twin: planner MACs + Table 2 energies for the same shapes.
+    let soc = Soc::paper_config(arch, variant);
+    let (pre_e, _) = energy::frame_energy(&soc, &spec.prefill_network(prompt_len));
+    let (dec_e, _) = energy::frame_energy(&soc, &spec.decode_network(prompt_len + 1));
+    let prefill_tps = prompt_len as f64 / prefill_s.max(1e-9);
+    let decode_tps = gen_len as f64 / decode_s.max(1e-9);
+
+    if args.flag("json") {
+        println!(
+            "{}",
+            Json::obj(vec![
+                ("arch", Json::str(arch.short_name())),
+                ("variant", Json::str(variant.name())),
+                ("prompt_len", Json::num(prompt_len as f64)),
+                ("generated", Json::arr(generated.iter().map(|&t| Json::num(t as f64)))),
+                ("prefill_tokens_per_s", Json::num(prefill_tps)),
+                ("decode_tokens_per_s", Json::num(decode_tps)),
+                ("prefill_macs", Json::num(pre_e.macs as f64)),
+                ("decode_macs_per_token", Json::num(dec_e.macs as f64)),
+                ("sim_prefill_uj_per_token", Json::num(pre_e.total_pj() / 1e6 / prompt_len as f64)),
+                ("sim_decode_uj_per_token", Json::num(dec_e.total_pj() / 1e6)),
+            ])
+        );
+        return Ok(());
+    }
+    let mut t = Table::new(format!(
+        "transformer ({}L d{} h{}) on {} {size} ({})",
+        spec.layers,
+        spec.d_model,
+        spec.heads,
+        arch.name(),
+        variant.name()
+    ))
+    .header(&["metric", "value"]);
+    t.row(vec!["prompt tokens".into(), prompt_len.to_string()]);
+    t.row(vec!["generated".into(), format!("{generated:?}")]);
+    t.row(vec!["prefill tok/s (bit-level)".into(), f(prefill_tps, 1)]);
+    t.row(vec!["decode tok/s (bit-level)".into(), f(decode_tps, 1)]);
+    t.row(vec!["prefill MACs".into(), pre_e.macs.to_string()]);
+    t.row(vec!["decode MACs/token (KV cache)".into(), dec_e.macs.to_string()]);
+    t.row(vec!["twin prefill µJ/token".into(), f(pre_e.total_pj() / 1e6 / prompt_len as f64, 3)]);
+    t.row(vec!["twin decode µJ/token".into(), f(dec_e.total_pj() / 1e6, 3)]);
+    print!("{}", t.render());
+    Ok(())
+}
+
 fn cmd_serve(argv: &[String]) -> ent::Result<()> {
     let specs = [
         OptSpec { name: "requests", takes_value: true, help: "synthetic requests to send (default 64)" },
@@ -255,6 +363,8 @@ fn cmd_serve(argv: &[String]) -> ent::Result<()> {
         OptSpec { name: "concurrency", takes_value: true, help: "client threads (default 4)" },
         OptSpec { name: "native", takes_value: false, help: "serve on native engine shards (no artifacts)" },
         OptSpec { name: "shards", takes_value: true, help: "native engine shards (default 4)" },
+        OptSpec { name: "tokens", takes_value: false, help: "send transformer token requests instead of CNN images" },
+        OptSpec { name: "prompt", takes_value: true, help: "token prompt length with --tokens (default 12)" },
         OptSpec { name: "help", takes_value: false, help: "show help" },
     ];
     let args = Args::parse(argv, &specs)?;
@@ -264,6 +374,10 @@ fn cmd_serve(argv: &[String]) -> ent::Result<()> {
     }
     let n_requests = args.get_usize("requests", 64)?;
     let concurrency = args.get_usize("concurrency", 4)?.max(1);
+    let tokens = args.flag("tokens");
+    // The served transformer's geometry bounds the synthetic token load.
+    let lm_spec = ent::nn::transformer::TransformerSpec::tiny();
+    let prompt_len = args.get_usize("prompt", 12)?.clamp(1, lm_spec.max_seq);
     let mut cfg = if args.flag("native") {
         Config::native(args.get_usize("shards", 4)?)
     } else {
@@ -274,7 +388,8 @@ fn cmd_serve(argv: &[String]) -> ent::Result<()> {
     }
     let input_len = cfg.model.input_len();
     let coordinator = Coordinator::start(cfg)?;
-    println!("coordinator up; sending {n_requests} requests from {concurrency} client threads");
+    let kind = if tokens { "token" } else { "image" };
+    println!("coordinator up; sending {n_requests} {kind} requests from {concurrency} client threads");
 
     let t0 = std::time::Instant::now();
     std::thread::scope(|scope| {
@@ -283,12 +398,24 @@ fn cmd_serve(argv: &[String]) -> ent::Result<()> {
             scope.spawn(move || {
                 let mut rng = Rng::new(0x5E + c as u64);
                 for _ in 0..n_requests / concurrency {
-                    let img = rng.i8_vec(input_len);
-                    match coord.infer(InferRequest { image: img }) {
-                        Ok(r) => {
-                            assert_eq!(r.logits.len(), 10);
+                    if tokens {
+                        let toks: Vec<u16> = (0..prompt_len)
+                            .map(|_| rng.below(lm_spec.vocab as u64) as u16)
+                            .collect();
+                        match coord.infer_tokens(TokenRequest { tokens: toks }) {
+                            Ok(r) => {
+                                assert!(!r.logits.is_empty());
+                            }
+                            Err(e) => eprintln!("token request failed: {e}"),
                         }
-                        Err(e) => eprintln!("request failed: {e}"),
+                    } else {
+                        let img = rng.i8_vec(input_len);
+                        match coord.infer(InferRequest { image: img }) {
+                            Ok(r) => {
+                                assert_eq!(r.logits.len(), 10);
+                            }
+                            Err(e) => eprintln!("request failed: {e}"),
+                        }
                     }
                 }
             });

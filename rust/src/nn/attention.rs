@@ -1,0 +1,402 @@
+//! Quantized int8 multi-head attention executed **through a TCU
+//! engine** — the attention half of the transformer workload.
+//!
+//! Every GEMM in the block — the Q/K/V projections, each head's Q·Kᵀ
+//! score matrix, each head's softmax·V contraction, and the output
+//! projection — is lowered onto
+//! [`TcuEngine::matmul_into`](crate::arch::TcuEngine::matmul_into), so
+//! attention exercises the exact same array dataflow (and EN-T encode
+//! path) as the CNN, verification, and energy layers. Everything between
+//! the GEMMs is integer arithmetic the SoC's SIMD vector engine would
+//! run:
+//!
+//! * **softmax** is fixed-point: per score row, `d = (max − s) >> shift`
+//!   indexes [`EXP_Q15`] (a compile-time e^(−d/8) table in Q15), and
+//!   probabilities requantize to int8 as `p = e·127 / Σe` — all integer,
+//!   so logits stay bit-identical across every architecture × variant;
+//! * **residual + layernorm** accumulate in i32 ([`add_norm`]) with an
+//!   integer Newton square root ([`isqrt`]) for the variance;
+//! * the **KV-cache** ([`KvCache`]) holds requantized int8 K/V rows so
+//!   autoregressive decode attends over prior positions without
+//!   recomputing their projections.
+//!
+//! Scale management is power-of-two requantization throughout (the same
+//! convention as [`crate::nn::forward`]): probabilities carry a fixed
+//! ×127 scale which the softmax·V GEMM removes with a 7-bit shift.
+
+use crate::arch::TcuEngine;
+use crate::util::prng::Rng;
+
+/// Right-shift applied to Q/K/V and output-projection accumulators
+/// (contraction over `d_model` int8 products) before clamping to int8.
+pub const QKV_SHIFT: u32 = 9;
+
+/// Right-shift applied to raw Q·Kᵀ scores before they index the softmax
+/// exponential table — the fixed-point temperature.
+pub const SCORE_SHIFT: u32 = 10;
+
+/// Right-shift removing the ×127 probability scale after the softmax·V
+/// GEMM (`127 ≈ 2^7`).
+pub const PV_SHIFT: u32 = 7;
+
+/// Fixed-point exponential table: `EXP_Q15[d] = round(2^15 · e^(−d/8))`,
+/// built at compile time from the Q16 ratio `e^(−1/8) ≈ 57835/65536`.
+/// Entry 0 is exactly 2^15; entry 63 is still nonzero, so a softmax row
+/// always has a positive normalizer.
+pub static EXP_Q15: [u16; 64] = build_exp_lut();
+
+const EXP_STEP_Q16: u64 = 57835; // round(e^(-1/8) · 2^16)
+
+const fn build_exp_lut() -> [u16; 64] {
+    let mut lut = [0u16; 64];
+    let mut e: u64 = 1 << 15;
+    let mut d = 0;
+    while d < 64 {
+        lut[d] = e as u16;
+        e = (e * EXP_STEP_Q16) >> 16;
+        d += 1;
+    }
+    lut
+}
+
+/// Fixed-point int8 softmax over `scores[..valid]`, writing int8
+/// probabilities with a ×127 scale into `out` (entries `valid..` are
+/// zeroed — masked positions contribute nothing to the softmax·V GEMM).
+///
+/// `shift` is the score temperature: `d = (max − s) >> shift`, clamped
+/// to the [`EXP_Q15`] range, so one `d` unit is 1/8 nat.
+pub fn softmax_i8(scores: &[i64], valid: usize, shift: u32, out: &mut [i8]) {
+    assert!(valid > 0 && valid <= scores.len() && out.len() >= scores.len());
+    let max = scores[..valid].iter().copied().max().unwrap();
+    let mut sum: u64 = 0;
+    for &s in &scores[..valid] {
+        let d = (((max - s) >> shift) as usize).min(EXP_Q15.len() - 1);
+        sum += EXP_Q15[d] as u64;
+    }
+    for (o, &s) in out.iter_mut().zip(scores).take(valid) {
+        let d = (((max - s) >> shift) as usize).min(EXP_Q15.len() - 1);
+        *o = ((EXP_Q15[d] as u64 * 127) / sum) as i8;
+    }
+    for o in out.iter_mut().take(scores.len()).skip(valid) {
+        *o = 0;
+    }
+}
+
+/// Integer square root (Newton's method, converging from above).
+pub fn isqrt(x: u64) -> u64 {
+    if x < 2 {
+        return x;
+    }
+    let mut r = 1u64 << ((64 - x.leading_zeros()) / 2 + 1);
+    loop {
+        let next = (r + x / r) / 2;
+        if next >= r {
+            return r;
+        }
+        r = next;
+    }
+}
+
+/// Residual add + layernorm, all in i32/i64: per position (row of `d`
+/// elements), `y = (a + b − mean) · 64 / std`, clamped to int8. Each
+/// row normalizes independently — the statistics of one position never
+/// depend on its neighbours, which is what keeps single-row decode
+/// bit-identical to multi-row prefill. The sums, means, and variances
+/// never leave integer arithmetic, so the result is bit-identical on
+/// every engine.
+pub fn add_norm(a: &[i8], b: &[i8], d: usize) -> Vec<i8> {
+    assert_eq!(a.len(), b.len());
+    assert!(d > 0 && a.len() % d == 0, "rows of width d");
+    let mut out = Vec::with_capacity(a.len());
+    let mut sums = vec![0i64; d]; // one row buffer, reused across rows
+    for (ra, rb) in a.chunks_exact(d).zip(b.chunks_exact(d)) {
+        for (s, (&x, &y)) in sums.iter_mut().zip(ra.iter().zip(rb)) {
+            *s = x as i64 + y as i64;
+        }
+        let mean = sums.iter().sum::<i64>().div_euclid(d as i64);
+        let var = sums.iter().map(|&s| (s - mean) * (s - mean)).sum::<i64>() / d as i64;
+        let std = isqrt(var as u64).max(1) as i64;
+        out.extend(
+            sums.iter()
+                .map(|&s| (((s - mean) * 64) / std).clamp(-128, 127) as i8),
+        );
+    }
+    out
+}
+
+/// Requantize a block of GEMM accumulators to int8 with a power-of-two
+/// scale.
+pub fn requant(acc: &[i64], shift: u32) -> Vec<i8> {
+    acc.iter()
+        .map(|&v| (v >> shift).clamp(-128, 127) as i8)
+        .collect()
+}
+
+/// Per-layer key/value cache: requantized int8 K and V rows
+/// (`d_model` wide) for every position already processed, so each
+/// autoregressive decode step projects only its own token and attends
+/// over cached history.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    d: usize,
+    max_seq: usize,
+    k: Vec<i8>,
+    v: Vec<i8>,
+    len: usize,
+}
+
+impl KvCache {
+    pub fn new(d: usize, max_seq: usize) -> KvCache {
+        KvCache {
+            d,
+            max_seq,
+            k: vec![0; d * max_seq],
+            v: vec![0; d * max_seq],
+            len: 0,
+        }
+    }
+
+    /// Positions currently cached.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.max_seq
+    }
+
+    /// Drop cached positions beyond `len` (no-op if already shorter) —
+    /// rewinds a speculative decode or resets a benchmark iteration.
+    pub fn truncate(&mut self, len: usize) {
+        self.len = self.len.min(len);
+    }
+
+    fn append(&mut self, k_rows: &[i8], v_rows: &[i8], rows: usize) {
+        assert!(self.len + rows <= self.max_seq, "KV cache overflow");
+        let at = self.len * self.d;
+        self.k[at..at + rows * self.d].copy_from_slice(&k_rows[..rows * self.d]);
+        self.v[at..at + rows * self.d].copy_from_slice(&v_rows[..rows * self.d]);
+        self.len += rows;
+    }
+}
+
+/// Weights of one multi-head attention block, stored ready for the
+/// engine GEMM orientation: activations are the M×K operand, weights the
+/// K×N operand (`d_model × d_model`, row-major, input-major).
+#[derive(Clone, Debug)]
+pub struct MhaWeights {
+    pub d: usize,
+    pub heads: usize,
+    wq: Vec<i8>,
+    wk: Vec<i8>,
+    wv: Vec<i8>,
+    wo: Vec<i8>,
+}
+
+impl MhaWeights {
+    /// Synthetic seeded weights (the serving path needs a deterministic
+    /// model, not an accurate one — same convention as
+    /// [`crate::nn::forward::QuantCnn`]).
+    pub fn new(d: usize, heads: usize, rng: &mut Rng) -> MhaWeights {
+        assert!(heads > 0 && d % heads == 0, "heads must divide d_model");
+        MhaWeights {
+            d,
+            heads,
+            wq: rng.i8_vec(d * d),
+            wk: rng.i8_vec(d * d),
+            wv: rng.i8_vec(d * d),
+            wo: rng.i8_vec(d * d),
+        }
+    }
+
+    /// Run `rows` new positions (flattened `rows × d` int8) through the
+    /// attention block on `eng`, appending their K/V to `cache` and
+    /// attending causally over everything cached (prior positions plus
+    /// the new ones). Returns the `rows × d` int8 block output
+    /// (pre-residual).
+    ///
+    /// Prefill is `rows = seq` on an empty cache; autoregressive decode
+    /// is `rows = 1` on a warm cache — the arithmetic is identical, so
+    /// decode reproduces prefill logits bit-for-bit.
+    pub fn forward<E: TcuEngine + ?Sized>(
+        &self,
+        eng: &E,
+        x: &[i8],
+        rows: usize,
+        cache: &mut KvCache,
+    ) -> Vec<i8> {
+        let d = self.d;
+        let dh = d / self.heads;
+        assert_eq!(x.len(), rows * d, "attention input shape");
+        assert_eq!(cache.d, d, "cache width");
+        let offset = cache.len(); // positions already cached
+
+        // Q/K/V projections: one engine GEMM each, requantized to int8.
+        let mut acc = vec![0i64; rows * d];
+        eng.matmul_into(x, &self.wq, &mut acc, rows, d, d);
+        let q = requant(&acc, QKV_SHIFT);
+        eng.matmul_into(x, &self.wk, &mut acc, rows, d, d);
+        let k_new = requant(&acc, QKV_SHIFT);
+        eng.matmul_into(x, &self.wv, &mut acc, rows, d, d);
+        let v_new = requant(&acc, QKV_SHIFT);
+        cache.append(&k_new, &v_new, rows);
+        let kv = cache.len();
+
+        // Per-head: scores = Q_h · K_hᵀ, int8 softmax, then softmax · V_h.
+        let mut out = vec![0i8; rows * d];
+        let mut qh = vec![0i8; rows * dh];
+        let mut kht = vec![0i8; dh * kv];
+        let mut vh = vec![0i8; kv * dh];
+        let mut scores = vec![0i64; rows * kv];
+        let mut probs = vec![0i8; rows * kv];
+        let mut oh = vec![0i64; rows * dh];
+        for h in 0..self.heads {
+            let c0 = h * dh;
+            for i in 0..rows {
+                qh[i * dh..(i + 1) * dh].copy_from_slice(&q[i * d + c0..i * d + c0 + dh]);
+            }
+            for p in 0..kv {
+                for j in 0..dh {
+                    kht[j * kv + p] = cache.k[p * d + c0 + j];
+                }
+                vh[p * dh..(p + 1) * dh].copy_from_slice(&cache.v[p * d + c0..p * d + c0 + dh]);
+            }
+            eng.matmul_into(&qh, &kht, &mut scores, rows, dh, kv);
+            // Causal mask: row i (absolute position offset + i) may
+            // attend to positions 0..=offset+i. Masked probabilities are
+            // zero, so the engine GEMM over the full kv extent is exact.
+            for i in 0..rows {
+                let valid = offset + i + 1;
+                softmax_i8(
+                    &scores[i * kv..(i + 1) * kv],
+                    valid.min(kv),
+                    SCORE_SHIFT,
+                    &mut probs[i * kv..(i + 1) * kv],
+                );
+            }
+            eng.matmul_into(&probs, &vh, &mut oh, rows, kv, dh);
+            for i in 0..rows {
+                for j in 0..dh {
+                    out[i * d + c0 + j] = (oh[i * dh + j] >> PV_SHIFT).clamp(-128, 127) as i8;
+                }
+            }
+        }
+
+        // Output projection.
+        eng.matmul_into(&out, &self.wo, &mut acc, rows, d, d);
+        requant(&acc, QKV_SHIFT)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ArchKind, Tcu};
+    use crate::pe::Variant;
+
+    #[test]
+    fn exp_lut_is_monotone_and_positive() {
+        for w in EXP_Q15.windows(2) {
+            assert!(w[0] > w[1], "EXP_Q15 must strictly decrease");
+        }
+        assert_eq!(EXP_Q15[0], 1 << 15);
+        assert!(EXP_Q15[63] > 0);
+    }
+
+    #[test]
+    fn softmax_rows_are_normalized_and_masked() {
+        let scores = vec![900i64 << SCORE_SHIFT, 0, -(400i64 << SCORE_SHIFT), 12345];
+        let mut out = vec![0i8; 4];
+        softmax_i8(&scores, 3, SCORE_SHIFT, &mut out);
+        assert_eq!(out[3], 0, "masked position must be zero");
+        assert!(out[0] >= out[1] && out[1] >= out[2], "order preserved");
+        let sum: i64 = out.iter().map(|&p| p as i64).sum();
+        assert!(sum > 0 && sum <= 127, "sum {sum}");
+        // A dominant score takes (nearly) all the mass.
+        assert!(out[0] > 120, "{out:?}");
+    }
+
+    #[test]
+    fn softmax_uniform_when_scores_equal() {
+        let scores = vec![42i64; 8];
+        let mut out = vec![0i8; 8];
+        softmax_i8(&scores, 8, SCORE_SHIFT, &mut out);
+        assert!(out.iter().all(|&p| p == 127 / 8), "{out:?}");
+    }
+
+    #[test]
+    fn isqrt_exact_on_squares_and_floors_between() {
+        assert_eq!(isqrt(0), 0);
+        assert_eq!(isqrt(1), 1);
+        assert_eq!(isqrt(2), 1);
+        assert_eq!(isqrt(3), 1);
+        for r in 1u64..200 {
+            assert_eq!(isqrt(r * r), r);
+            assert_eq!(isqrt(r * r + 1), r);
+            assert_eq!(isqrt(r * r + 2 * r), r); // last value before (r+1)²
+        }
+        assert_eq!(isqrt(u64::MAX), (1 << 32) - 1);
+    }
+
+    #[test]
+    fn add_norm_centers_and_scales() {
+        // Alternating ±20 on top of a constant offset: mean removal
+        // drops the offset, and a 1σ deviation maps to the ±64 gain.
+        let a = vec![7i8; 16];
+        let b: Vec<i8> = (0..16).map(|i| if i % 2 == 0 { 20 } else { -20 }).collect();
+        let y = add_norm(&a, &b, 16);
+        assert!(y.iter().step_by(2).all(|&v| v == 64), "{y:?}");
+        assert!(y.iter().skip(1).step_by(2).all(|&v| v == -64), "{y:?}");
+    }
+
+    #[test]
+    fn add_norm_rows_are_independent() {
+        // Two rows of width 4: normalizing them together must equal
+        // normalizing each alone — the decode ≡ prefill precondition.
+        let a = vec![10i8, -10, 30, -30, 5, 6, 7, 8];
+        let b = vec![0i8; 8];
+        let both = add_norm(&a, &b, 4);
+        let first = add_norm(&a[..4], &b[..4], 4);
+        let second = add_norm(&a[4..], &b[4..], 4);
+        assert_eq!(&both[..4], &first[..]);
+        assert_eq!(&both[4..], &second[..]);
+    }
+
+    #[test]
+    fn kv_cache_append_and_truncate() {
+        let mut c = KvCache::new(4, 8);
+        assert!(c.is_empty());
+        c.append(&[1, 2, 3, 4, 5, 6, 7, 8], &[8, 7, 6, 5, 4, 3, 2, 1], 2);
+        assert_eq!(c.len(), 2);
+        assert_eq!(&c.k[..4], &[1, 2, 3, 4]);
+        c.truncate(1);
+        assert_eq!(c.len(), 1);
+        c.truncate(5); // no-op beyond current length
+        assert_eq!(c.len(), 1);
+    }
+
+    /// Decode (one row against a warm cache) reproduces the prefill
+    /// rows bit-for-bit at the attention-block level.
+    #[test]
+    fn incremental_forward_matches_batch_forward() {
+        let mut rng = Rng::new(0xA77);
+        let (d, heads, seq) = (16, 2, 5);
+        let w = MhaWeights::new(d, heads, &mut rng);
+        let x = rng.i8_vec(seq * d);
+        let eng = Tcu::new(ArchKind::SystolicOs, 8, Variant::EntOurs).engine();
+
+        let mut full_cache = KvCache::new(d, seq);
+        let full = w.forward(&eng, &x, seq, &mut full_cache);
+
+        let mut inc_cache = KvCache::new(d, seq);
+        let mut inc = Vec::new();
+        for i in 0..seq {
+            inc.extend(w.forward(&eng, &x[i * d..(i + 1) * d], 1, &mut inc_cache));
+        }
+        assert_eq!(full, inc, "KV-cache decode diverged from prefill");
+    }
+}

@@ -1,18 +1,29 @@
-//! Neural-network layer IR and the eight benchmark networks of §4.4
-//! (ResNet34/50/101, Inception_V3, DenseNet121/161, Vgg13/19), plus
-//! MobileNetV1 for the Fig 9(c) depthwise-separable remark.
+//! Neural-network layer IR and the workloads the SoC twin evaluates:
+//! the eight benchmark CNNs of §4.4 (ResNet34/50/101, Inception_V3,
+//! DenseNet121/161, Vgg13/19), MobileNetV1 for the Fig 9(c)
+//! depthwise-separable remark, and the int8 transformer encoder stack
+//! ([`transformer`], [`attention`]) that opens the attention-shaped
+//! GEMM workload class.
 //!
-//! Layers carry everything the SoC simulator needs: the im2col-lowered
-//! GEMM shape, operand byte counts, and the post-processing (SIMD) op
-//! count. Batch-norm is folded into the preceding convolution
-//! (inference-time), contributing one scale+shift SIMD op per output
-//! element.
+//! Layers carry everything the SoC simulator needs: the GEMM shape
+//! (im2col-lowered for convolutions, explicit for [`Layer::Gemm`]
+//! transformer projections), operand byte counts, and the
+//! post-processing (SIMD) op count. Batch-norm is folded into the
+//! preceding convolution (inference-time), contributing one scale+shift
+//! SIMD op per output element.
+//!
+//! Executable counterparts live in [`forward`] (quantized CNN) and
+//! [`transformer`] (quantized encoder stack with KV-cache decode): both
+//! lower every GEMM onto
+//! [`TcuEngine::matmul_into`](crate::arch::TcuEngine::matmul_into).
 
+pub mod attention;
 pub mod densenet;
 pub mod forward;
 pub mod inception;
 pub mod mobilenet;
 pub mod resnet;
+pub mod transformer;
 pub mod vgg;
 pub mod zoo;
 
@@ -61,6 +72,25 @@ pub enum Layer {
     /// Channel concatenation (free at the buffer level, listed so the
     /// layer walk is complete).
     Concat { name: String, ch: usize, hw: usize },
+    /// A generic engine GEMM with explicit byte/op accounting — how
+    /// transformer layers (attention contractions, MLP and vocabulary
+    /// projections) enter the SoC energy walk without pretending to be
+    /// convolutions. `m×k×n` follows the SoC convention (A carries the
+    /// encoded operand); `repeats` covers per-head replication.
+    Gemm {
+        name: String,
+        m: usize,
+        k: usize,
+        n: usize,
+        repeats: u64,
+        /// Unique weight bytes staged from the Global Buffer (0 for
+        /// activation×activation contractions).
+        weight_bytes: u64,
+        in_bytes: u64,
+        out_bytes: u64,
+        /// SIMD post-processing (requantize, softmax, GELU, layernorm).
+        simd_ops: u64,
+    },
 }
 
 impl Layer {
@@ -71,7 +101,8 @@ impl Layer {
             | Layer::Pool { name, .. }
             | Layer::GlobalPool { name, .. }
             | Layer::Eltwise { name, .. }
-            | Layer::Concat { name, .. } => name,
+            | Layer::Concat { name, .. }
+            | Layer::Gemm { name, .. } => name,
         }
     }
 
@@ -102,7 +133,7 @@ impl Layer {
             } => (in_hw - kernel) / stride + 1,
             Layer::GlobalPool { .. } => 1,
             Layer::Eltwise { hw, .. } | Layer::Concat { hw, .. } => *hw,
-            Layer::Fc { .. } => 1,
+            Layer::Fc { .. } | Layer::Gemm { .. } => 1,
         }
     }
 
@@ -111,6 +142,7 @@ impl Layer {
         match self {
             Layer::Conv { cout, .. } => *cout,
             Layer::Fc { cout, .. } => *cout,
+            Layer::Gemm { m, .. } => *m,
             Layer::Pool { ch, .. }
             | Layer::GlobalPool { ch, .. }
             | Layer::Eltwise { ch, .. }
@@ -138,14 +170,17 @@ impl Layer {
                 ))
             }
             Layer::Fc { cin, cout, .. } => Some(GemmShape::new(*cout, *cin, 1)),
+            Layer::Gemm { m, k, n, .. } => Some(GemmShape::new(*m, *k, *n)),
             _ => None,
         }
     }
 
-    /// For grouped convs the GEMM repeats once per group.
+    /// For grouped convs (per group) and generic GEMMs (e.g. per
+    /// attention head), how often the GEMM repeats.
     pub fn gemm_repeats(&self) -> u64 {
         match self {
             Layer::Conv { groups, .. } => *groups as u64,
+            Layer::Gemm { repeats, .. } => *repeats,
             _ => 1,
         }
     }
@@ -169,6 +204,7 @@ impl Layer {
                 ..
             } => (cout * (cin / groups) * kernel * kw.unwrap_or(*kernel)) as u64,
             Layer::Fc { cin, cout, .. } => (cin * cout) as u64,
+            Layer::Gemm { weight_bytes, .. } => *weight_bytes,
             _ => 0,
         }
     }
@@ -183,12 +219,16 @@ impl Layer {
             }
             Layer::Eltwise { ch, hw, .. } => 2 * (ch * hw * hw) as u64,
             Layer::Concat { ch, hw, .. } => (ch * hw * hw) as u64,
+            Layer::Gemm { in_bytes, .. } => *in_bytes,
         }
     }
 
     /// Output activation bytes (INT8 after requantization).
     pub fn out_bytes(&self) -> u64 {
-        (self.out_ch() * self.out_hw() * self.out_hw()) as u64
+        match self {
+            Layer::Gemm { out_bytes, .. } => *out_bytes,
+            _ => (self.out_ch() * self.out_hw() * self.out_hw()) as u64,
+        }
     }
 
     /// SIMD vector-engine ops: requantization + activation for TCU
@@ -204,6 +244,7 @@ impl Layer {
             Layer::GlobalPool { ch, in_hw, .. } => (ch * in_hw * in_hw) as u64,
             Layer::Eltwise { ch, hw, .. } => (ch * hw * hw) as u64,
             Layer::Concat { .. } => 0,
+            Layer::Gemm { simd_ops, .. } => *simd_ops,
         }
     }
 }
@@ -325,6 +366,28 @@ mod tests {
         assert_eq!(dw.gemm_repeats(), 32);
         assert_eq!(dw.macs(), 32 * 9 * 112 * 112);
         assert_eq!(dw.weight_bytes(), 32 * 9);
+    }
+
+    #[test]
+    fn generic_gemm_layer_accounting() {
+        let g = Layer::Gemm {
+            name: "l0.qk".into(),
+            m: 8,
+            k: 8,
+            n: 16,
+            repeats: 4,
+            weight_bytes: 0,
+            in_bytes: 768,
+            out_bytes: 512,
+            simd_ops: 2048,
+        };
+        assert_eq!(g.name(), "l0.qk");
+        assert_eq!(g.macs(), 4 * 8 * 8 * 16);
+        assert_eq!(g.gemm_repeats(), 4);
+        assert_eq!(g.weight_bytes(), 0);
+        assert_eq!(g.in_bytes(), 768);
+        assert_eq!(g.out_bytes(), 512);
+        assert_eq!(g.simd_ops(), 2048);
     }
 
     #[test]

@@ -1,0 +1,530 @@
+//! Quantized int8 transformer encoder blocks driven end-to-end through
+//! a TCU engine — the second workload class next to the CNNs.
+//!
+//! A [`QuantTransformer`] is an embedding table, a stack of encoder
+//! blocks (multi-head attention from [`crate::nn::attention`] + a GELU
+//! MLP, each wrapped in i32 residual-add + layernorm), and a vocabulary
+//! head. Every GEMM — Q/K/V/output projections, per-head attention
+//! contractions, both MLP projections, and the head — runs through
+//! [`TcuEngine::matmul_into`](crate::arch::TcuEngine::matmul_into), so a
+//! forward pass exercises the exact bit-level array dataflow. Because
+//! every engine computes exact integer GEMMs and everything between them
+//! (softmax LUT, GELU LUT, layernorm) is integer arithmetic, logits are
+//! bit-identical across all five architectures × three variants — the
+//! paper's functional-transparency claim extended to the transformer
+//! workload (locked by `tests/transformer_equivalence.rs`).
+//!
+//! Two execution modes share one code path:
+//!
+//! * **prefill** — all prompt positions at once (`rows = seq` GEMMs);
+//! * **decode** — one position against the [`KvCache`], reusing every
+//!   cached K/V row instead of recomputing it. Decode logits are
+//!   bit-identical to a full recompute; the MAC saving is asserted via
+//!   planner event counts (see `tests`).
+//!
+//! [`TransformerSpec::prefill_network`] / [`decode_network`] lower the
+//! block into the generic [`Layer::Gemm`] IR so
+//! [`crate::soc::energy`] charges Table 2 energies to transformer
+//! layers through the same planner event counts as the CNNs.
+//!
+//! ```
+//! use ent::arch::{ArchKind, Tcu};
+//! use ent::nn::transformer::QuantTransformer;
+//! use ent::pe::Variant;
+//!
+//! let model = QuantTransformer::tiny_native();
+//! let eng = Tcu::new(ArchKind::SystolicOs, 16, Variant::Baseline).engine();
+//! let logits = model.logits(&eng, &[1, 2, 3]);
+//! assert_eq!(logits.len(), model.spec.vocab);
+//! ```
+//!
+//! [`decode_network`]: TransformerSpec::decode_network
+//! [`Layer::Gemm`]: crate::nn::Layer::Gemm
+
+use crate::arch::TcuEngine;
+use crate::nn::attention::{add_norm, requant, KvCache, MhaWeights};
+use crate::nn::{Layer, Network};
+use crate::util::prng::Rng;
+
+/// Right-shift for the first MLP projection (contraction over
+/// `d_model`).
+pub const FF1_SHIFT: u32 = 9;
+
+/// Right-shift for the second MLP projection (contraction over `d_ff`,
+/// typically wider, hence one more bit).
+pub const FF2_SHIFT: u32 = 10;
+
+/// GELU lookup table for int8 activations at a 1/16 input scale:
+/// `GELU_I8[q as u8 as usize] ≈ 16 · gelu(q / 16)`, built at compile
+/// time from a Q16 fixed-point logistic (`gelu(x) ≈ x · σ(1.702 x)`).
+pub static GELU_I8: [i8; 256] = build_gelu_lut();
+
+/// Q16 ratio `e^(1.702/16) ≈ 72900/65536` — one LUT input step.
+const GELU_STEP_Q16: u64 = 72900;
+
+const fn build_gelu_lut() -> [i8; 256] {
+    let mut lut = [0i8; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let q = (i as u8) as i8 as i64;
+        // e = exp(1.702 · |q| / 16) in Q16, by repeated multiplication.
+        let mut e: u64 = 1 << 16;
+        let mut step = 0;
+        let mag = if q < 0 { -q } else { q };
+        while step < mag {
+            e = (e * GELU_STEP_Q16) >> 16;
+            step += 1;
+        }
+        // σ(y) in Q16 for y = 1.702·q/16: E/(E+1) for q ≥ 0, mirrored
+        // for q < 0.
+        let pos = (e << 16) / (e + (1 << 16));
+        let sig = if q >= 0 { pos } else { (1 << 16) - pos };
+        let y = (q * sig as i64 + (1 << 15)) >> 16;
+        lut[i] = if y < -128 {
+            -128
+        } else if y > 127 {
+            127
+        } else {
+            y as i8
+        };
+        i += 1;
+    }
+    lut
+}
+
+/// Apply the int8 GELU lookup in place.
+pub fn gelu_i8(x: &mut [i8]) {
+    for v in x.iter_mut() {
+        *v = GELU_I8[*v as u8 as usize];
+    }
+}
+
+/// Architecture hyper-parameters of a transformer encoder stack.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TransformerSpec {
+    pub d_model: usize,
+    pub heads: usize,
+    pub d_ff: usize,
+    pub layers: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+}
+
+impl TransformerSpec {
+    /// The native serving model's geometry: small enough to run
+    /// bit-accurately per request, big enough to exercise multi-tile
+    /// blocking on every architecture.
+    pub fn tiny() -> TransformerSpec {
+        TransformerSpec {
+            d_model: 32,
+            heads: 4,
+            d_ff: 64,
+            layers: 2,
+            vocab: 64,
+            max_seq: 64,
+        }
+    }
+
+    /// Transformer-base-shaped geometry for the analytic energy/latency
+    /// tables (`ent report transformer`) — never executed bit-level.
+    pub fn base() -> TransformerSpec {
+        TransformerSpec {
+            d_model: 512,
+            heads: 8,
+            d_ff: 2048,
+            layers: 6,
+            vocab: 32000,
+            max_seq: 512,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.heads
+    }
+
+    /// The prefill pass over `seq` positions as a layer trace for the
+    /// SoC energy walk: every GEMM becomes a [`Layer::Gemm`] (weights as
+    /// the M×K operand, matching the SoC's encode-on-weight-readout
+    /// convention), with softmax/GELU/layernorm charged as SIMD ops.
+    pub fn prefill_network(&self, seq: usize) -> Network {
+        assert!(seq > 0 && seq <= self.max_seq);
+        self.trace_network("transformer_prefill", seq, seq, 0)
+    }
+
+    /// One autoregressive decode step attending over `kv` total
+    /// positions (`kv − 1` cached plus the new token) as a layer trace.
+    /// The QKV/MLP GEMMs shrink to a single position — the KV-cache MAC
+    /// saving the decode tests assert through the planner counts.
+    pub fn decode_network(&self, kv: usize) -> Network {
+        assert!(kv > 0 && kv <= self.max_seq);
+        self.trace_network("transformer_decode", 1, kv, kv - 1)
+    }
+
+    /// Shared trace builder: `rows` new positions attending over `kv`
+    /// total positions (`offset` of them cached).
+    fn trace_network(&self, name: &'static str, rows: usize, kv: usize, offset: usize) -> Network {
+        assert_eq!(rows + offset, kv);
+        let (d, dh, ff, h) = (self.d_model, self.head_dim(), self.d_ff, self.heads);
+        let mut layers = Vec::new();
+        for l in 0..self.layers {
+            // Q/K/V projections: three d×d GEMMs over the new rows.
+            layers.push(Layer::Gemm {
+                name: format!("l{l}.qkv"),
+                m: d,
+                k: d,
+                n: rows,
+                repeats: 3,
+                weight_bytes: 3 * (d * d) as u64,
+                in_bytes: (rows * d) as u64,
+                out_bytes: 3 * (rows * d) as u64,
+                simd_ops: 2 * 3 * (rows * d) as u64,
+            });
+            // Per-head scores Q_h·K_hᵀ + fixed-point softmax.
+            layers.push(Layer::Gemm {
+                name: format!("l{l}.qk"),
+                m: rows,
+                k: dh,
+                n: kv,
+                repeats: h as u64,
+                weight_bytes: 0,
+                in_bytes: ((rows + kv) * d) as u64,
+                out_bytes: (h * rows * kv) as u64,
+                simd_ops: 4 * (h * rows * kv) as u64,
+            });
+            // Per-head softmax·V contraction.
+            layers.push(Layer::Gemm {
+                name: format!("l{l}.pv"),
+                m: rows,
+                k: kv,
+                n: dh,
+                repeats: h as u64,
+                weight_bytes: 0,
+                in_bytes: (h * rows * kv + kv * d) as u64,
+                out_bytes: (rows * d) as u64,
+                simd_ops: 2 * (rows * d) as u64,
+            });
+            // Output projection + residual + layernorm.
+            layers.push(Layer::Gemm {
+                name: format!("l{l}.proj"),
+                m: d,
+                k: d,
+                n: rows,
+                repeats: 1,
+                weight_bytes: (d * d) as u64,
+                in_bytes: (rows * d) as u64,
+                out_bytes: (rows * d) as u64,
+                simd_ops: 6 * (rows * d) as u64,
+            });
+            // MLP up-projection + GELU LUT.
+            layers.push(Layer::Gemm {
+                name: format!("l{l}.ff1"),
+                m: ff,
+                k: d,
+                n: rows,
+                repeats: 1,
+                weight_bytes: (d * ff) as u64,
+                in_bytes: (rows * d) as u64,
+                out_bytes: (rows * ff) as u64,
+                simd_ops: 3 * (rows * ff) as u64,
+            });
+            // MLP down-projection + residual + layernorm.
+            layers.push(Layer::Gemm {
+                name: format!("l{l}.ff2"),
+                m: d,
+                k: ff,
+                n: rows,
+                repeats: 1,
+                weight_bytes: (d * ff) as u64,
+                in_bytes: (rows * ff) as u64,
+                out_bytes: (rows * d) as u64,
+                simd_ops: 6 * (rows * d) as u64,
+            });
+        }
+        // Vocabulary head over the last position only.
+        layers.push(Layer::Gemm {
+            name: "lm_head".into(),
+            m: self.vocab,
+            k: d,
+            n: 1,
+            repeats: 1,
+            weight_bytes: (d * self.vocab) as u64,
+            in_bytes: d as u64,
+            out_bytes: self.vocab as u64,
+            simd_ops: 2 * self.vocab as u64,
+        });
+        Network {
+            name,
+            input_hw: kv,
+            layers,
+        }
+    }
+}
+
+/// One encoder block's weights.
+#[derive(Clone, Debug)]
+struct Block {
+    attn: MhaWeights,
+    /// MLP up-projection, `d_model × d_ff` (K×N for the engine GEMM).
+    w1: Vec<i8>,
+    /// MLP down-projection, `d_ff × d_model`.
+    w2: Vec<i8>,
+}
+
+/// A quantized int8 transformer with synthetic seeded weights — the
+/// serving path needs a deterministic, finite model, not an accurate
+/// one. Real trained weights would drop in through the same structs.
+#[derive(Clone, Debug)]
+pub struct QuantTransformer {
+    pub spec: TransformerSpec,
+    /// Token embeddings, `vocab × d_model`.
+    embed: Vec<i8>,
+    blocks: Vec<Block>,
+    /// Vocabulary head, `d_model × vocab` (K×N for the engine GEMM).
+    head: Vec<i8>,
+}
+
+impl QuantTransformer {
+    /// Build a model with seeded synthetic weights.
+    pub fn new(spec: TransformerSpec, seed: u64) -> QuantTransformer {
+        let mut rng = Rng::new(seed);
+        let d = spec.d_model;
+        let blocks = (0..spec.layers)
+            .map(|_| Block {
+                attn: MhaWeights::new(d, spec.heads, &mut rng),
+                w1: rng.i8_vec(d * spec.d_ff),
+                w2: rng.i8_vec(spec.d_ff * d),
+            })
+            .collect();
+        QuantTransformer {
+            spec,
+            embed: rng.i8_vec(spec.vocab * d),
+            blocks,
+            head: rng.i8_vec(d * spec.vocab),
+        }
+    }
+
+    /// The native serving model (fixed seed — every shard builds the
+    /// same weights, so sharding cannot change logits).
+    pub fn tiny_native() -> QuantTransformer {
+        QuantTransformer::new(TransformerSpec::tiny(), 0x7F0)
+    }
+
+    /// One empty per-layer KV cache set, sized to `max_seq`.
+    pub fn empty_caches(&self) -> Vec<KvCache> {
+        (0..self.spec.layers)
+            .map(|_| KvCache::new(self.spec.d_model, self.spec.max_seq))
+            .collect()
+    }
+
+    /// Validate a token sequence against the model's geometry.
+    pub fn check_tokens(&self, tokens: &[u16]) -> std::result::Result<(), String> {
+        if tokens.is_empty() {
+            return Err("empty token sequence".into());
+        }
+        if tokens.len() > self.spec.max_seq {
+            return Err(format!(
+                "sequence length {} exceeds max_seq {}",
+                tokens.len(),
+                self.spec.max_seq
+            ));
+        }
+        match tokens.iter().find(|&&t| t as usize >= self.spec.vocab) {
+            Some(t) => Err(format!("token id {t} out of vocab {}", self.spec.vocab)),
+            None => Ok(()),
+        }
+    }
+
+    /// Run `tokens` new positions through the stack on `eng`, appending
+    /// K/V to `caches` (one per layer), and return the f32 logits of the
+    /// **last** position. Works for prompt prefill (warm or cold cache)
+    /// and, with a single token, for autoregressive decode.
+    pub fn prefill<E: TcuEngine + ?Sized>(
+        &self,
+        eng: &E,
+        tokens: &[u16],
+        caches: &mut [KvCache],
+    ) -> Vec<f32> {
+        assert_eq!(caches.len(), self.spec.layers, "one cache per layer");
+        assert!(!tokens.is_empty(), "empty token sequence");
+        let d = self.spec.d_model;
+        let rows = tokens.len();
+        assert!(
+            caches[0].len() + rows <= self.spec.max_seq,
+            "sequence exceeds max_seq"
+        );
+
+        // Embed.
+        let mut x = vec![0i8; rows * d];
+        for (i, &t) in tokens.iter().enumerate() {
+            let t = t as usize;
+            assert!(t < self.spec.vocab, "token id out of vocab");
+            x[i * d..(i + 1) * d].copy_from_slice(&self.embed[t * d..(t + 1) * d]);
+        }
+
+        let mut acc = vec![0i64; rows * self.spec.d_ff.max(d)];
+        for (block, cache) in self.blocks.iter().zip(caches.iter_mut()) {
+            // Attention sub-block, residual + layernorm in i32.
+            let attn = block.attn.forward(eng, &x, rows, cache);
+            x = add_norm(&x, &attn, d);
+            // MLP sub-block: W1 → GELU LUT → W2, residual + layernorm.
+            let ff = self.spec.d_ff;
+            eng.matmul_into(&x, &block.w1, &mut acc[..rows * ff], rows, d, ff);
+            let mut hidden = requant(&acc[..rows * ff], FF1_SHIFT);
+            gelu_i8(&mut hidden);
+            eng.matmul_into(&hidden, &block.w2, &mut acc[..rows * d], rows, ff, d);
+            let mlp = requant(&acc[..rows * d], FF2_SHIFT);
+            x = add_norm(&x, &mlp, d);
+        }
+
+        // Vocabulary head over the last position.
+        let mut logits = vec![0i64; self.spec.vocab];
+        eng.matmul_into(
+            &x[(rows - 1) * d..],
+            &self.head,
+            &mut logits,
+            1,
+            d,
+            self.spec.vocab,
+        );
+        logits.iter().map(|&v| v as f32 / 256.0).collect()
+    }
+
+    /// One autoregressive step: process `token` against the warm caches
+    /// and return next-token logits. Bit-identical to recomputing the
+    /// whole sequence (`tests::decode_matches_full_recompute`) while
+    /// doing a fraction of the MACs.
+    pub fn decode<E: TcuEngine + ?Sized>(
+        &self,
+        eng: &E,
+        token: u16,
+        caches: &mut [KvCache],
+    ) -> Vec<f32> {
+        self.prefill(eng, &[token], caches)
+    }
+
+    /// Convenience: logits of a full sequence from a cold cache.
+    pub fn logits<E: TcuEngine + ?Sized>(&self, eng: &E, tokens: &[u16]) -> Vec<f32> {
+        let mut caches = self.empty_caches();
+        self.prefill(eng, tokens, &mut caches)
+    }
+
+    /// Greedy next token (deterministic tie-break on the lowest id).
+    pub fn argmax(logits: &[f32]) -> u16 {
+        let mut best = 0usize;
+        for (i, &v) in logits.iter().enumerate() {
+            if v > logits[best] {
+                best = i;
+            }
+        }
+        best as u16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ArchKind, Tcu};
+    use crate::pe::Variant;
+
+    fn prompt(n: usize) -> Vec<u16> {
+        (0..n).map(|i| ((i * 7 + 3) % 64) as u16).collect()
+    }
+
+    #[test]
+    fn gelu_lut_shape() {
+        // gelu(0) = 0; identity-like for large positive x; near-zero for
+        // large negative x; the well sits just below zero.
+        assert_eq!(GELU_I8[0], 0);
+        assert_eq!(GELU_I8[127u8 as usize], 127);
+        let most_negative = GELU_I8[(-128i8) as u8 as usize];
+        assert!(most_negative.abs() <= 1, "{most_negative}");
+        let at_minus_16 = GELU_I8[(-16i8) as u8 as usize]; // x = -1
+        assert!((-4..0).contains(&(at_minus_16 as i32)), "{at_minus_16}");
+        // Monotone on the positive side.
+        for q in 0i32..127 {
+            assert!(GELU_I8[(q + 1) as usize] >= GELU_I8[q as usize]);
+        }
+    }
+
+    #[test]
+    fn forward_is_deterministic_and_finite() {
+        let model = QuantTransformer::tiny_native();
+        let eng = Tcu::new(ArchKind::SystolicOs, 16, Variant::EntOurs).engine();
+        let a = model.logits(&eng, &prompt(6));
+        let b = model.logits(&eng, &prompt(6));
+        assert_eq!(a.len(), model.spec.vocab);
+        assert!(a.iter().all(|x| x.is_finite()));
+        assert_eq!(a, b);
+        // Not degenerate: logits differ across the vocabulary.
+        assert!(a.iter().any(|&x| x != a[0]));
+    }
+
+    /// The KV-cache decode path is bit-identical to recomputing the
+    /// full sequence from scratch at every step.
+    #[test]
+    fn decode_matches_full_recompute() {
+        let model = QuantTransformer::tiny_native();
+        let eng = Tcu::new(ArchKind::Matrix2d, 8, Variant::EntOurs).engine();
+        let toks = prompt(7);
+        // Incremental: prefill 4, then decode the remaining 3.
+        let mut caches = model.empty_caches();
+        let mut last = model.prefill(&eng, &toks[..4], &mut caches);
+        for &t in &toks[4..] {
+            last = model.decode(&eng, t, &mut caches);
+        }
+        assert_eq!(last, model.logits(&eng, &toks));
+    }
+
+    /// Cache truncation rewinds decode exactly.
+    #[test]
+    fn truncate_rewinds_decode() {
+        let model = QuantTransformer::tiny_native();
+        let eng = Tcu::new(ArchKind::SystolicWs, 8, Variant::Baseline).engine();
+        let mut caches = model.empty_caches();
+        model.prefill(&eng, &prompt(5), &mut caches);
+        let a = model.decode(&eng, 9, &mut caches);
+        for c in caches.iter_mut() {
+            c.truncate(5);
+        }
+        let b = model.decode(&eng, 9, &mut caches);
+        assert_eq!(a, b);
+    }
+
+    /// The trace networks account the same MACs the planner charges,
+    /// and the KV-cache decode does a small fraction of the recompute
+    /// MACs — the cache's whole point, asserted through the planner's
+    /// event counts (`FrameEnergy::macs` accumulates `TilePlan::stats`).
+    #[test]
+    fn decode_trace_saves_macs_vs_recompute() {
+        use crate::soc::{energy, Soc};
+        let spec = TransformerSpec::tiny();
+        let pos = 16;
+        let soc = Soc::paper_config(ArchKind::SystolicOs, Variant::EntOurs);
+        let decode = energy::frame_energy(&soc, &spec.decode_network(pos + 1)).0;
+        let recompute = energy::frame_energy(&soc, &spec.prefill_network(pos + 1)).0;
+        assert_eq!(decode.macs, spec.decode_network(pos + 1).total_macs());
+        assert!(
+            decode.macs * 2 < recompute.macs,
+            "KV cache must at least halve decode MACs: {} vs {}",
+            decode.macs,
+            recompute.macs
+        );
+        // And the energy model sees the saving too.
+        assert!(decode.total_pj() < recompute.total_pj());
+    }
+
+    #[test]
+    fn check_tokens_rejects_malformed() {
+        let model = QuantTransformer::tiny_native();
+        assert!(model.check_tokens(&[]).is_err());
+        assert!(model.check_tokens(&[64]).is_err()); // vocab is 64
+        assert!(model.check_tokens(&[0u16; 65]).is_err()); // max_seq 64
+        assert!(model.check_tokens(&[0, 5, 63]).is_ok());
+    }
+
+    #[test]
+    fn argmax_is_deterministic() {
+        assert_eq!(QuantTransformer::argmax(&[0.0, 3.0, 3.0, -1.0]), 1);
+        assert_eq!(QuantTransformer::argmax(&[-5.0]), 0);
+    }
+}

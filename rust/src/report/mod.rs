@@ -287,6 +287,56 @@ pub fn fig12() -> String {
     s
 }
 
+/// Transformer workload efficiency — prefill vs KV-cache decode on the
+/// §4.4 SoC across every architecture × variant (the ROADMAP's "new
+/// scenarios" table; no paper counterpart). Per-token energy and
+/// throughput come from the same planner event counts and Table 2
+/// per-access energies as the CNN figures; the MAC-saving column is the
+/// KV cache's whole point: one decode step vs recomputing the sequence.
+pub fn transformer() -> String {
+    use crate::nn::transformer::TransformerSpec;
+    let spec = TransformerSpec::base();
+    let seq = 128;
+    let mut t = Table::new(format!(
+        "\nTransformer ({}L, d_model {}, {} heads, d_ff {}) — prefill seq {} vs one decode step",
+        spec.layers, spec.d_model, spec.heads, spec.d_ff, seq
+    ))
+    .header(&[
+        "arch",
+        "variant",
+        "prefill µJ/tok",
+        "decode µJ/tok",
+        "prefill tok/s",
+        "decode tok/s",
+        "KV MAC saving",
+    ]);
+    let recompute_macs = spec.prefill_network(seq + 1).total_macs() as f64;
+    let prefill_net = spec.prefill_network(seq);
+    let decode_net = spec.decode_network(seq + 1);
+    for arch in ALL_ARCHS {
+        for variant in ALL_VARIANTS {
+            let soc = Soc::paper_config(arch, variant);
+            let (pre, _) = energy::frame_energy(&soc, &prefill_net);
+            let (dec, _) = energy::frame_energy(&soc, &decode_net);
+            t.row(vec![
+                arch.name().into(),
+                variant.name().into(),
+                f(pre.total_pj() / 1e6 / seq as f64, 2),
+                f(dec.total_pj() / 1e6, 2),
+                f(seq as f64 / (pre.latency_ms() / 1e3), 0),
+                f(1e3 / dec.latency_ms(), 0),
+                pct(1.0 - dec.macs as f64 / recompute_macs),
+            ]);
+        }
+    }
+    let mut s = t.render();
+    s.push_str(
+        "decode attends over cached K/V instead of recomputing the prefix — \
+         the saving column is 1 − decode MACs / full-recompute MACs\n",
+    );
+    s
+}
+
 /// Everything at once (the `ent report all` target).
 pub fn all_reports() -> String {
     let mut s = String::new();
@@ -299,6 +349,7 @@ pub fn all_reports() -> String {
     s.push_str(&fig10());
     s.push_str(&fig11());
     s.push_str(&fig12());
+    s.push_str(&transformer());
     s
 }
 
@@ -327,6 +378,18 @@ mod tests {
         for arch in ALL_ARCHS {
             assert!(s.contains(arch.name()), "missing {}", arch.name());
         }
+    }
+
+    #[test]
+    fn transformer_report_covers_grid_and_saving() {
+        let s = transformer();
+        for arch in ALL_ARCHS {
+            assert!(s.contains(arch.name()), "missing {}", arch.name());
+        }
+        for v in ALL_VARIANTS {
+            assert!(s.contains(v.name()), "missing {}", v.name());
+        }
+        assert!(s.contains("KV MAC saving"));
     }
 
     #[test]

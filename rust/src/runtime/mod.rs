@@ -19,6 +19,7 @@ use std::path::{Path, PathBuf};
 
 use crate::arch::{ArchKind, AnyEngine, Tcu, TcuEngine};
 use crate::nn::forward::QuantCnn;
+use crate::nn::transformer::QuantTransformer;
 use crate::pe::Variant;
 use crate::util::error::{Context, Result};
 use crate::{bail, err};
@@ -32,6 +33,9 @@ enum Artifact {
     Cnn { batch: usize },
     /// `encode8`: the standalone int8 EN-T encoder (wire bits + sign).
     Encode8,
+    /// `tinyformer`: the native int8 transformer (prefill to next-token
+    /// logits).
+    Transformer,
     /// Present on disk but not natively executable.
     Opaque,
 }
@@ -57,6 +61,9 @@ fn parse_artifact(stem: &str) -> Artifact {
     if stem == "encode8" {
         return Artifact::Encode8;
     }
+    if stem == "tinyformer" {
+        return Artifact::Transformer;
+    }
     Artifact::Opaque
 }
 
@@ -64,6 +71,7 @@ fn parse_artifact(stem: &str) -> Artifact {
 pub struct Runtime {
     engine: AnyEngine,
     model: QuantCnn,
+    lm: QuantTransformer,
     exes: HashMap<String, Artifact>,
 }
 
@@ -82,6 +90,7 @@ impl Runtime {
         Runtime {
             engine,
             model: QuantCnn::tiny_native(),
+            lm: QuantTransformer::tiny_native(),
             exes: HashMap::new(),
         }
     }
@@ -217,6 +226,21 @@ impl Runtime {
         Ok(logits)
     }
 
+    /// Execute the transformer artifact: prefill a token sequence and
+    /// return next-token logits for the last position (vocabulary-sized
+    /// f32). Validates token ids and sequence length against the native
+    /// model's geometry.
+    pub fn transformer_logits(&self, name: &str, tokens: &[u16]) -> Result<Vec<f32>> {
+        match self.exe(name)? {
+            Artifact::Transformer => {}
+            other => bail!("artifact '{name}' is not a transformer ({other:?})"),
+        }
+        if let Err(e) = self.lm.check_tokens(tokens) {
+            bail!("transformer_logits {name}: {e}");
+        }
+        Ok(self.lm.logits(&self.engine, tokens))
+    }
+
     /// Execute the standalone encoder artifact: int8 vector → int32
     /// codes (wire bits | sign << 8 — the cross-layer test's format).
     pub fn encode_i8(&self, name: &str, values: &[i8]) -> Result<Vec<i32>> {
@@ -284,6 +308,7 @@ mod tests {
         );
         assert_eq!(parse_artifact("tinynet_b4"), Artifact::Cnn { batch: 4 });
         assert_eq!(parse_artifact("encode8"), Artifact::Encode8);
+        assert_eq!(parse_artifact("tinyformer"), Artifact::Transformer);
         assert_eq!(parse_artifact("mystery_thing"), Artifact::Opaque);
         assert_eq!(parse_artifact("gemm_64x128"), Artifact::Opaque);
     }
@@ -306,6 +331,26 @@ mod tests {
         // Wrong shape against the artifact is rejected.
         let err = rt.gemm_i8("gemm_8x8x8", &a[..32], &b, 4, 8, 8).unwrap_err();
         assert!(err.to_string().contains("artifact shape"), "{err}");
+    }
+
+    #[test]
+    fn native_transformer_artifact_executes() {
+        let dir = std::env::temp_dir().join("ent-native-artifacts");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("tinyformer.hlo.txt");
+        std::fs::write(&path, "// native artifact marker\n").unwrap();
+        let mut rt = Runtime::cpu().unwrap();
+        rt.load_file("tinyformer", &path).unwrap();
+        let toks = [1u16, 5, 9];
+        let got = rt.transformer_logits("tinyformer", &toks).unwrap();
+        let want = QuantTransformer::tiny_native().logits(
+            &Tcu::new(ArchKind::SystolicOs, 32, Variant::EntOurs).engine(),
+            &toks,
+        );
+        assert_eq!(got, want, "runtime transformer diverged from direct model");
+        // Malformed sequences are rejected, not executed.
+        let err = rt.transformer_logits("tinyformer", &[9999]).unwrap_err();
+        assert!(err.to_string().contains("out of vocab"), "{err}");
     }
 
     #[test]

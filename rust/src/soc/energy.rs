@@ -7,6 +7,13 @@
 //! per-access energy. Buckets follow the paper's Fig 9 decomposition:
 //! SRAM read, SRAM write, computing engines (TCU + SIMD; the controller
 //! is part of the engines bucket).
+//!
+//! The walk is workload-agnostic: CNN layers arrive im2col-lowered,
+//! transformer layers arrive as generic [`crate::nn::Layer::Gemm`]
+//! entries (built by
+//! [`TransformerSpec::prefill_network`](crate::nn::transformer::TransformerSpec::prefill_network)
+//! / `decode_network`), and both charge energy through the same planner
+//! event counts.
 
 use super::Soc;
 use crate::arch::TcuEngine;
@@ -245,6 +252,26 @@ mod tests {
             let (e, _) = frame_energy(&soc, &net);
             assert_eq!(e.macs, net.total_macs(), "{}", kind.name());
         }
+    }
+
+    #[test]
+    fn transformer_trace_charges_energy_like_cnns() {
+        use crate::nn::transformer::TransformerSpec;
+        let spec = TransformerSpec::base();
+        let net = spec.prefill_network(64);
+        let soc = Soc::paper_config(ArchKind::SystolicOs, Variant::Baseline);
+        let (e, trace) = frame_energy(&soc, &net);
+        // MACs conserved through the planner, one trace row per layer.
+        assert_eq!(e.macs, net.total_macs());
+        assert_eq!(trace.len(), net.layers.len());
+        assert!(e.total_pj() > 0.0 && e.compute_fraction() > 0.3);
+        // EN-T(Ours) reduces transformer energy just like the CNNs.
+        let ours = frame_energy(
+            &Soc::paper_config(ArchKind::SystolicOs, Variant::EntOurs),
+            &net,
+        )
+        .0;
+        assert!(ours.total_pj() < e.total_pj());
     }
 
     #[test]

@@ -2,6 +2,15 @@
 //!
 //! Supports `--flag`, `--key value`, `--key=value`, and positional
 //! arguments, with typed accessors and automatic `--help` text.
+//!
+//! ```
+//! use ent::util::cli::{Args, OptSpec};
+//!
+//! let specs = [OptSpec { name: "size", takes_value: true, help: "array size" }];
+//! let argv = vec!["--size=32".to_string()];
+//! let args = Args::parse(&argv, &specs).unwrap();
+//! assert_eq!(args.get_usize("size", 16).unwrap(), 32);
+//! ```
 
 use std::collections::BTreeMap;
 

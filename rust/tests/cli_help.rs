@@ -1,0 +1,73 @@
+//! The in-binary CLI documentation contract: `ent --help` (and bare
+//! `ent`, and `ent help`) must list every subcommand with a one-line
+//! description and exit 0, so the binary documents itself without the
+//! README.
+
+use std::process::Command;
+
+const EXPECTED_SUBCOMMANDS: [&str; 8] = [
+    "report",
+    "simulate",
+    "soc",
+    "transformer",
+    "serve",
+    "sweep",
+    "selftest",
+    "help",
+];
+
+fn run_ent(args: &[&str]) -> (bool, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_ent"))
+        .args(args)
+        .output()
+        .expect("run ent binary");
+    (out.status.success(), String::from_utf8_lossy(&out.stdout).into_owned())
+}
+
+#[test]
+fn help_lists_every_subcommand_and_exits_zero() {
+    for invocation in [&["--help"][..], &["-h"], &["help"], &[]] {
+        let (ok, text) = run_ent(invocation);
+        assert!(ok, "ent {invocation:?} must exit 0");
+        for cmd in EXPECTED_SUBCOMMANDS {
+            // The subcommand name leads a help line (not just appearing
+            // inside some description).
+            assert!(
+                text.lines().any(|l| l.trim_start().starts_with(cmd)),
+                "ent {invocation:?} help is missing '{cmd}':\n{text}"
+            );
+        }
+        // Each listed subcommand carries a description on its line.
+        for cmd in EXPECTED_SUBCOMMANDS {
+            let line = text
+                .lines()
+                .find(|l| l.trim_start().starts_with(cmd))
+                .unwrap();
+            assert!(
+                line.trim_start().len() > cmd.len() + 4,
+                "'{cmd}' has no one-line description: {line:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn unknown_subcommand_fails_with_usage() {
+    let out = Command::new(env!("CARGO_BIN_EXE_ent"))
+        .arg("frobnicate")
+        .output()
+        .expect("run ent binary");
+    assert!(!out.status.success(), "unknown subcommand must exit nonzero");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown subcommand"), "{err}");
+    assert!(err.contains("report"), "usage must be echoed: {err}");
+}
+
+#[test]
+fn subcommand_help_exits_zero() {
+    for cmd in ["simulate", "soc", "transformer", "serve", "sweep"] {
+        let (ok, text) = run_ent(&[cmd, "--help"]);
+        assert!(ok, "ent {cmd} --help must exit 0");
+        assert!(text.contains("options"), "ent {cmd} --help: {text}");
+    }
+}

@@ -1,0 +1,125 @@
+//! The transformer acceptance grid: functional transparency of the
+//! attention workload across every architecture × variant, invariance
+//! under batching and sharding through the coordinator, and the
+//! KV-cache MAC saving asserted through the planner's event counts.
+
+use ent::arch::{ArchKind, Tcu, ALL_ARCHS};
+use ent::coordinator::{Config, Coordinator, TokenRequest};
+use ent::nn::transformer::{QuantTransformer, TransformerSpec};
+use ent::pe::{Variant, ALL_VARIANTS};
+use ent::soc::{energy, Soc};
+
+fn prompt(n: usize) -> Vec<u16> {
+    (0..n).map(|i| ((i * 13 + 5) % 64) as u16).collect()
+}
+
+/// The paper's functional-transparency claim at transformer scope:
+/// every architecture × {Baseline, EN-T(MBE), EN-T(Ours)} produces
+/// bit-identical next-token logits, through every GEMM of the encoder
+/// stack (projections, per-head attention contractions, MLP, head).
+#[test]
+fn transformer_logits_identical_across_all_arch_variants() {
+    let model = QuantTransformer::tiny_native();
+    let toks = prompt(8);
+    let reference = model.logits(
+        &Tcu::new(ArchKind::Matrix2d, 16, Variant::Baseline).engine(),
+        &toks,
+    );
+    assert!(reference.iter().any(|&x| x != reference[0]), "degenerate");
+    for arch in ALL_ARCHS {
+        let size = if arch == ArchKind::Cube3d { 4 } else { 8 };
+        for variant in ALL_VARIANTS {
+            let eng = Tcu::new(arch, size, variant).engine();
+            assert_eq!(
+                model.logits(&eng, &toks),
+                reference,
+                "{} {}",
+                arch.name(),
+                variant.name()
+            );
+        }
+    }
+}
+
+/// Logits are invariant under batch grouping and shard count: the same
+/// sequence served solo on one shard, and concurrently (forcing batch
+/// formation) on a larger shard pool, returns identical logits.
+#[test]
+fn transformer_logits_invariant_under_batch_and_shard_count() {
+    let toks = prompt(6);
+    let solo = {
+        let coord = Coordinator::start(Config::native(1)).expect("1-shard coordinator");
+        let r = coord
+            .infer_tokens(TokenRequest { tokens: toks.clone() })
+            .expect("solo token inference");
+        coord.shutdown();
+        r.logits
+    };
+    let coord = Coordinator::start(Config::native(3)).expect("3-shard coordinator");
+    std::thread::scope(|scope| {
+        for _ in 0..4 {
+            let coord = &coord;
+            let toks = toks.clone();
+            let expect = solo.clone();
+            scope.spawn(move || {
+                let r = coord
+                    .infer_tokens(TokenRequest { tokens: toks })
+                    .expect("batched token inference");
+                assert_eq!(r.logits, expect, "batch/shard count changed logits");
+            });
+        }
+    });
+    let m = coord.metrics();
+    assert_eq!(m.errors, 0);
+    assert_eq!(m.requests, 4);
+    coord.shutdown();
+}
+
+/// Sequence-length invariance of the per-position math: prefilling a
+/// prompt and then decoding more tokens gives exactly the logits of
+/// prefilling the longer prompt — across engines.
+#[test]
+fn decode_equals_recompute_on_multiple_engines() {
+    let model = QuantTransformer::tiny_native();
+    let toks = prompt(9);
+    for (arch, size) in [(ArchKind::SystolicWs, 8), (ArchKind::Cube3d, 4)] {
+        let eng = Tcu::new(arch, size, Variant::EntOurs).engine();
+        let mut caches = model.empty_caches();
+        let mut last = model.prefill(&eng, &toks[..5], &mut caches);
+        for &t in &toks[5..] {
+            last = model.decode(&eng, t, &mut caches);
+        }
+        assert_eq!(last, model.logits(&eng, &toks), "{}", arch.name());
+    }
+}
+
+/// The KV cache's reason to exist, in planner event counts: one decode
+/// step (reusing cached K/V) must cost a small fraction of the MACs of
+/// recomputing the whole sequence, at every context length — and the
+/// advantage must grow with context.
+#[test]
+fn kv_cache_decode_saves_macs_at_every_context_length() {
+    let spec = TransformerSpec::tiny();
+    let soc = Soc::paper_config(ArchKind::SystolicOs, Variant::EntOurs);
+    let mut prev_saving = 0.0f64;
+    for kv in [4usize, 16, 48] {
+        // FrameEnergy::macs accumulates TilePlan::stats().macs — the
+        // planner's event counts, not a hand formula.
+        let decode = energy::frame_energy(&soc, &spec.decode_network(kv)).0;
+        let recompute = energy::frame_energy(&soc, &spec.prefill_network(kv)).0;
+        assert!(
+            decode.macs * 2 < recompute.macs,
+            "kv={kv}: decode {} vs recompute {}",
+            decode.macs,
+            recompute.macs
+        );
+        let saving = 1.0 - decode.macs as f64 / recompute.macs as f64;
+        assert!(saving > prev_saving, "saving must grow with context");
+        prev_saving = saving;
+    }
+    // And the energy model sees it on the base-sized spec too.
+    let base = TransformerSpec::base();
+    let d = energy::frame_energy(&soc, &base.decode_network(128)).0;
+    let r = energy::frame_energy(&soc, &base.prefill_network(128)).0;
+    assert!(d.total_pj() < r.total_pj() / 2.0);
+}
