@@ -1,0 +1,94 @@
+//! Serving-scheduler benchmark — the continuous-batching step loop vs
+//! the window batcher under open-loop synthetic load
+//! (`coordinator::loadgen`), at two arrival rates plus one mixed
+//! CNN/token row.
+//!
+//! Emits `BENCH_serve.json` at the workspace root — tokens/s, p50/p99
+//! end-to-end latency, rejection counts, and engine-shard occupancy per
+//! scheduler × rate — so the serving trajectory is tracked across PRs
+//! alongside `BENCH_hotpath.json` and `BENCH_transformer.json`, and the
+//! CI bench-regression gate (`scripts/bench_compare`) can hold the
+//! line on it. Quick mode (`ENT_BENCH_QUICK=1`) shortens the
+//! submission window for CI smoke runs.
+
+use ent::coordinator::loadgen::{self, LoadGen};
+use ent::coordinator::{Config, Coordinator};
+use ent::util::bench::header;
+use ent::util::json::Json;
+
+const SHARDS: usize = 4;
+
+fn main() {
+    header("serving scheduler performance");
+    let quick = std::env::var("ENT_BENCH_QUICK").is_ok();
+    let duration_ms: u64 = if quick { 200 } else { 1500 };
+    let mut rows: Vec<Json> = Vec::new();
+
+    // scheduler × rate grid on pure token traffic, then one mixed row.
+    let cases: [(&str, f64, f64); 5] = [
+        ("continuous", 100.0, 0.0),
+        ("continuous", 300.0, 0.0),
+        ("window", 100.0, 0.0),
+        ("window", 300.0, 0.0),
+        ("continuous", 200.0, 0.25),
+    ];
+    for (scheduler, rate, mix) in cases {
+        let cfg = match scheduler {
+            "continuous" => Config::continuous(SHARDS),
+            _ => Config::native(SHARDS),
+        };
+        let coord = Coordinator::start(cfg).expect("coordinator");
+        let load = LoadGen {
+            rate_per_s: rate,
+            duration_ms,
+            prompt_len: 12,
+            max_new_tokens: 4,
+            image_mix: mix,
+            seed: 0xBE7C,
+        };
+        let r = loadgen::run(&coord, &load);
+        coord.shutdown();
+        let lat = r.latency_us.as_ref();
+        let name = format!(
+            "serve_{scheduler}_r{rate:.0}{}",
+            if mix > 0.0 { "_mixed" } else { "" }
+        );
+        println!(
+            "{name:<34} sent {:>4}  done {:>4}  rejected {:>3}  p50 {:>9.0} µs  p99 {:>9.0} µs  \
+             {:>7.0} tokens/s  occupancy {:>4.0}%",
+            r.sent,
+            r.completed,
+            r.rejected,
+            lat.map(|l| l.median).unwrap_or(f64::NAN),
+            lat.map(|l| l.p99).unwrap_or(f64::NAN),
+            r.tokens_per_s,
+            r.occupancy * 100.0
+        );
+        // The LoadReport fields (incl. null-for-missing latency) come
+        // from the shared emitter so this file and `ent loadgen --json`
+        // cannot drift.
+        let mut fields = vec![
+            ("name", Json::str(name)),
+            ("scheduler", Json::str(scheduler)),
+            ("rate_per_s", Json::num(rate)),
+            ("image_mix", Json::num(mix)),
+        ];
+        fields.extend(r.json_fields());
+        rows.push(Json::obj(fields));
+    }
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("serve_perf")),
+        ("unit", Json::str("tokens_per_s / latency_us / occupancy")),
+        ("shards", Json::num(SHARDS as f64)),
+        ("duration_ms", Json::num(duration_ms as f64)),
+        ("results", Json::arr(rows)),
+    ]);
+    // Cargo runs benches with cwd = the package dir (rust/); anchor the
+    // output at the workspace root so CI finds it deterministically.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+    match std::fs::write(path, format!("{out}\n")) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\ncould not write {path}: {e}"),
+    }
+}

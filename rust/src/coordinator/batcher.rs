@@ -1,13 +1,54 @@
-//! Dynamic batching policy.
+//! Batching policies: the window batcher's knobs ([`BatchPolicy`]) and
+//! the continuous scheduler's admission/step knobs
+//! ([`ContinuousPolicy`]).
 //!
-//! The executor takes the first queued request, then waits up to
-//! `max_wait_us` for companions, capped at the largest compiled batch
-//! size. The policy balances latency (short window) against array
-//! utilization (full batches) — the same trade every serving router
-//! makes, scaled down to the artifact batch sizes AOT compilation fixed
-//! in advance.
+//! **Window mode**: the executor takes the first queued request, then
+//! waits up to `max_wait_us` for companions, capped at the largest
+//! compiled batch size. The policy balances latency (short window)
+//! against array utilization (full batches) — the same trade every
+//! serving router makes, scaled down to the artifact batch sizes AOT
+//! compilation fixed in advance.
+//!
+//! **Continuous mode**: there is no window at all — the step loop
+//! (`coordinator::scheduler`) coalesces whatever is in flight every
+//! iteration. The policy bounds *admission* instead: how many sequences
+//! decode concurrently, how much prompt is fed per step (chunked
+//! prefill), how deep the queue may grow before backpressure rejects,
+//! and how long a request may wait unadmitted before its deadline
+//! expires it.
 
 use super::ModelSpec;
+
+/// Admission and step knobs of the continuous-batching scheduler.
+#[derive(Clone, Copy, Debug)]
+pub struct ContinuousPolicy {
+    /// Sequences decoding concurrently (the coalesced-step width); each
+    /// holds its own per-layer KV caches while in flight.
+    pub max_inflight: usize,
+    /// Prompt positions fed per sequence per step (chunked prefill), so
+    /// one long prompt cannot stall every in-flight decode for a whole
+    /// prefill. Decode-phase sequences always feed exactly one token.
+    pub prefill_chunk: usize,
+    /// Admission bound: pending + in-flight requests beyond this are
+    /// rejected immediately with a `backpressure:` error (open-loop
+    /// clients see the overload instead of unbounded queueing).
+    pub queue_cap: usize,
+    /// Per-request admission deadline in µs (0 = none): a request still
+    /// waiting in the pending queue past its deadline is rejected with a
+    /// `deadline exceeded` error rather than served uselessly late.
+    pub deadline_us: u64,
+}
+
+impl Default for ContinuousPolicy {
+    fn default() -> Self {
+        ContinuousPolicy {
+            max_inflight: 16,
+            prefill_chunk: 8,
+            queue_cap: 128,
+            deadline_us: 0,
+        }
+    }
+}
 
 /// Batching knobs.
 #[derive(Clone, Copy, Debug)]

@@ -1,0 +1,216 @@
+//! Open-loop synthetic traffic generator for the serving coordinator.
+//!
+//! **Open loop** means arrivals follow the wall clock, not completions:
+//! requests are submitted on a seeded exponential (Poisson-process)
+//! schedule whether or not earlier ones have finished, which is how
+//! real traffic behaves and the only way to observe queueing — a
+//! closed-loop client (submit, wait, repeat) can never drive the
+//! coordinator past one request in flight per client and therefore
+//! never sees backpressure or deadline expiry.
+//!
+//! Shared by `ent loadgen`, `ent report serving`, and
+//! `benches/serve_perf.rs` (the `BENCH_serve.json` emitter), so all
+//! three quote the same workload.
+
+use std::sync::mpsc::Receiver;
+use std::time::{Duration, Instant};
+
+use crate::nn::transformer::TransformerSpec;
+use crate::util::json::Json;
+use crate::util::prng::Rng;
+use crate::util::stats::Summary;
+
+use super::{Coordinator, InferRequest, InferResponse, TokenRequest, TokenResponse};
+
+/// One open-loop run's knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadGen {
+    /// Mean arrival rate, requests per second (exponential gaps).
+    pub rate_per_s: f64,
+    /// How long to keep submitting.
+    pub duration_ms: u64,
+    /// Prompt length of each token request.
+    pub prompt_len: usize,
+    /// Greedy decode steps per token request.
+    pub max_new_tokens: usize,
+    /// Fraction of arrivals that are CNN image requests instead of
+    /// token requests (0.0 = pure token traffic).
+    pub image_mix: f64,
+    pub seed: u64,
+}
+
+impl Default for LoadGen {
+    fn default() -> Self {
+        LoadGen {
+            rate_per_s: 200.0,
+            duration_ms: 500,
+            prompt_len: 12,
+            max_new_tokens: 2,
+            image_mix: 0.0,
+            seed: 0x10AD,
+        }
+    }
+}
+
+/// What one open-loop run observed.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub sent: u64,
+    pub completed: u64,
+    /// Admission-control rejections (backpressure / deadline).
+    pub rejected: u64,
+    /// Other failures (validation, execution, disconnect).
+    pub failed: u64,
+    /// Submission start to last response, seconds.
+    pub wall_s: f64,
+    /// End-to-end latency of completed requests.
+    pub latency_us: Option<Summary>,
+    /// Token positions processed during the run, per wall second.
+    pub tokens_per_s: f64,
+    /// Token positions processed during the run.
+    pub tokens_served: u64,
+    /// Engine-shard busy fraction reported by the coordinator.
+    pub occupancy: f64,
+}
+
+impl LoadReport {
+    /// The report's standard JSON fields — shared by `ent loadgen
+    /// --json` and `benches/serve_perf.rs`, so every emitter stays in
+    /// lockstep when a field is added. Latency percentiles are `null`
+    /// when nothing completed (NaN is not valid JSON).
+    pub fn json_fields(&self) -> Vec<(&'static str, Json)> {
+        let lat = self.latency_us.as_ref();
+        let num_or_null = |v: Option<f64>| v.map(Json::num).unwrap_or(Json::Null);
+        vec![
+            ("sent", Json::num(self.sent as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("failed", Json::num(self.failed as f64)),
+            ("p50_latency_us", num_or_null(lat.map(|l| l.median))),
+            ("p99_latency_us", num_or_null(lat.map(|l| l.p99))),
+            ("tokens_per_s", Json::num(self.tokens_per_s)),
+            ("occupancy", Json::num(self.occupancy)),
+        ]
+    }
+}
+
+enum PendingRx {
+    Tok(Receiver<std::result::Result<TokenResponse, String>>),
+    Img(Receiver<std::result::Result<InferResponse, String>>),
+}
+
+/// Drive `coord` with one open-loop run and collect the report. Blocks
+/// until every submitted request has resolved (completed or rejected).
+pub fn run(coord: &Coordinator, cfg: &LoadGen) -> LoadReport {
+    let before = coord.metrics();
+    let mut rng = Rng::new(cfg.seed);
+    let vocab = TransformerSpec::tiny().vocab as u64;
+    let input_len = coord.model().input_len();
+    let horizon = Duration::from_millis(cfg.duration_ms);
+    let mut pending: Vec<PendingRx> = Vec::new();
+    let mut next_at = Duration::ZERO;
+    let mut sent = 0u64;
+    let t0 = Instant::now();
+    while next_at < horizon {
+        let now = t0.elapsed();
+        if now < next_at {
+            std::thread::sleep(next_at - now);
+        }
+        if rng.chance(cfg.image_mix) {
+            pending.push(PendingRx::Img(coord.submit(InferRequest {
+                image: rng.i8_vec(input_len),
+            })));
+        } else {
+            let tokens: Vec<u16> = (0..cfg.prompt_len.max(1))
+                .map(|_| rng.below(vocab) as u16)
+                .collect();
+            pending.push(PendingRx::Tok(coord.submit_tokens(TokenRequest::generate(
+                tokens,
+                cfg.max_new_tokens,
+            ))));
+        }
+        sent += 1;
+        // Exponential inter-arrival gap (capped at 1 s so a tiny rate
+        // cannot stall the run).
+        let gap_s = -(1.0 - rng.f64()).ln() / cfg.rate_per_s.max(1e-6);
+        next_at += Duration::from_secs_f64(gap_s.min(1.0));
+    }
+
+    let mut completed = 0u64;
+    let mut rejected = 0u64;
+    let mut failed = 0u64;
+    let mut latencies = Vec::new();
+    for rx in pending {
+        let outcome = match rx {
+            PendingRx::Tok(rx) => rx.recv().map(|r| r.map(|t| t.latency_us)),
+            PendingRx::Img(rx) => rx.recv().map(|r| r.map(|t| t.latency_us)),
+        };
+        match outcome {
+            Ok(Ok(latency_us)) => {
+                completed += 1;
+                latencies.push(latency_us as f64);
+            }
+            Ok(Err(e)) if e.contains("backpressure") || e.contains("deadline") => rejected += 1,
+            Ok(Err(_)) | Err(_) => failed += 1,
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    let after = coord.metrics();
+    let tokens_served = after.tokens - before.tokens;
+    // Difference the raw counters so the report covers this run only,
+    // not the coordinator's whole lifetime (matters for warmup passes).
+    let busy = after.busy_ns - before.busy_ns;
+    let capacity = after.capacity_ns - before.capacity_ns;
+    LoadReport {
+        sent,
+        completed,
+        rejected,
+        failed,
+        wall_s,
+        latency_us: if latencies.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&latencies))
+        },
+        tokens_per_s: tokens_served as f64 / wall_s,
+        tokens_served,
+        occupancy: if capacity == 0 {
+            0.0
+        } else {
+            busy as f64 / capacity as f64
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Config;
+
+    /// The generator drives a continuous coordinator open-loop and the
+    /// report accounts for every submission.
+    #[test]
+    fn open_loop_run_accounts_for_every_request() {
+        let coord = Coordinator::start(Config::continuous(2)).expect("continuous coordinator");
+        let report = run(
+            &coord,
+            &LoadGen {
+                rate_per_s: 300.0,
+                duration_ms: 60,
+                prompt_len: 5,
+                max_new_tokens: 1,
+                image_mix: 0.3,
+                seed: 0x5EED,
+            },
+        );
+        assert!(report.sent >= 1);
+        assert_eq!(
+            report.completed + report.rejected + report.failed,
+            report.sent
+        );
+        assert_eq!(report.failed, 0, "no failures expected under light load");
+        assert!(report.tokens_served >= 1, "token traffic must flow");
+        assert!(report.latency_us.is_some());
+        coord.shutdown();
+    }
+}

@@ -1,62 +1,160 @@
-//! Serving metrics: request latencies, batch-size mix, error counts.
+//! Serving metrics: cumulative counters plus a bounded latency
+//! reservoir, read through point-in-time snapshots.
+//!
+//! Every counter is **cumulative over the coordinator's lifetime** —
+//! nothing is reset per batching window or per scheduler step, and
+//! [`Metrics::snapshot`] is a pure read (taking a snapshot never clears
+//! anything). The only bounded state is the latency reservoir: the most
+//! recent [`LATENCY_RESERVOIR`] request latencies, so percentile
+//! summaries track recent behaviour without unbounded memory under
+//! heavy traffic. Throughput (`tokens_per_s`) and engine occupancy
+//! derive from the cumulative counters, so they survive any number of
+//! batching windows or step-loop iterations.
 
 use std::sync::Mutex;
+use std::time::Instant;
 
 use crate::util::stats::Summary;
+
+/// Size of the recent-latency reservoir backing the percentile summary.
+pub const LATENCY_RESERVOIR: usize = 4096;
 
 /// Shared metrics aggregate (executor writes, callers snapshot).
 pub struct Metrics {
     inner: Mutex<Inner>,
 }
 
-#[derive(Default)]
 struct Inner {
-    latencies_us: Vec<f64>,
-    batch_sizes: Vec<usize>,
+    // Cumulative counters — monotone for the coordinator's lifetime.
+    requests: u64,
     errors: u64,
+    /// Requests refused by admission control (backpressure / deadline).
+    rejected: u64,
+    /// Token positions fed through the transformer stack (prefill
+    /// chunks + decode steps).
+    tokens: u64,
+    batch_sum: u64,
+    batch_count: u64,
+    /// Engine-shard busy time during scheduler steps.
+    busy_ns: u64,
+    /// Shard-pool capacity over the same steps (step wall × shards).
+    capacity_ns: u64,
+    started: Instant,
+    // Bounded ring of the most recent request latencies.
+    latencies_us: Vec<f64>,
+    lat_next: usize,
 }
 
-/// Point-in-time view of the aggregates.
+/// Point-in-time view of the aggregates. Pure read: snapshotting never
+/// resets a counter.
 #[derive(Clone, Debug)]
 pub struct Snapshot {
-    pub requests: usize,
+    /// Requests served successfully since startup.
+    pub requests: u64,
+    /// Requests that failed validation or execution.
     pub errors: u64,
+    /// Requests refused by admission control (backpressure / deadline).
+    pub rejected: u64,
+    /// Token positions processed since startup.
+    pub tokens: u64,
+    /// Summary of the most recent request latencies (reservoir-bounded).
     pub latency_us: Option<Summary>,
     pub mean_batch: f64,
+    /// Cumulative token positions per second of coordinator uptime.
+    pub tokens_per_s: f64,
+    /// Engine-shard busy fraction while the scheduler was stepping
+    /// (0 when no step has been recorded, e.g. window mode).
+    pub occupancy: f64,
+    /// Raw occupancy numerator/denominator, so callers can difference
+    /// two snapshots for an interval-scoped occupancy.
+    pub busy_ns: u64,
+    pub capacity_ns: u64,
+    pub uptime_s: f64,
 }
 
 impl Metrics {
     pub fn new() -> Metrics {
         Metrics {
-            inner: Mutex::new(Inner::default()),
+            inner: Mutex::new(Inner {
+                requests: 0,
+                errors: 0,
+                rejected: 0,
+                tokens: 0,
+                batch_sum: 0,
+                batch_count: 0,
+                busy_ns: 0,
+                capacity_ns: 0,
+                started: Instant::now(),
+                latencies_us: Vec::new(),
+                lat_next: 0,
+            }),
         }
     }
 
     pub fn record(&self, latency_us: u64, batch: usize) {
         let mut g = self.inner.lock().unwrap();
-        g.latencies_us.push(latency_us as f64);
-        g.batch_sizes.push(batch);
+        g.requests += 1;
+        g.batch_sum += batch as u64;
+        g.batch_count += 1;
+        let v = latency_us as f64;
+        if g.latencies_us.len() < LATENCY_RESERVOIR {
+            g.latencies_us.push(v);
+        } else {
+            let at = g.lat_next;
+            g.latencies_us[at] = v;
+        }
+        g.lat_next = (g.lat_next + 1) % LATENCY_RESERVOIR;
     }
 
     pub fn record_error(&self) {
         self.inner.lock().unwrap().errors += 1;
     }
 
+    /// An admission-control rejection (queue full, deadline exceeded).
+    pub fn record_rejected(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    /// `n` token positions fed through the transformer stack.
+    pub fn record_tokens(&self, n: u64) {
+        self.inner.lock().unwrap().tokens += n;
+    }
+
+    /// One scheduler step: total shard busy time vs pool capacity
+    /// (step wall-clock × shard count) over the same interval.
+    pub fn record_step(&self, busy_ns: u64, capacity_ns: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.busy_ns += busy_ns;
+        g.capacity_ns += capacity_ns;
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap();
+        let uptime_s = g.started.elapsed().as_secs_f64().max(1e-9);
         Snapshot {
-            requests: g.latencies_us.len(),
+            requests: g.requests,
             errors: g.errors,
+            rejected: g.rejected,
+            tokens: g.tokens,
             latency_us: if g.latencies_us.is_empty() {
                 None
             } else {
                 Some(Summary::of(&g.latencies_us))
             },
-            mean_batch: if g.batch_sizes.is_empty() {
+            mean_batch: if g.batch_count == 0 {
                 0.0
             } else {
-                g.batch_sizes.iter().sum::<usize>() as f64 / g.batch_sizes.len() as f64
+                g.batch_sum as f64 / g.batch_count as f64
             },
+            tokens_per_s: g.tokens as f64 / uptime_s,
+            occupancy: if g.capacity_ns == 0 {
+                0.0
+            } else {
+                g.busy_ns as f64 / g.capacity_ns as f64
+            },
+            busy_ns: g.busy_ns,
+            capacity_ns: g.capacity_ns,
+            uptime_s,
         }
     }
 }
@@ -90,5 +188,50 @@ mod tests {
         assert_eq!(s.requests, 0);
         assert!(s.latency_us.is_none());
         assert_eq!(s.mean_batch, 0.0);
+        assert_eq!(s.occupancy, 0.0);
+        assert_eq!(s.tokens_per_s, 0.0);
+    }
+
+    /// Counters are cumulative across windows: snapshotting between
+    /// recording bursts never resets totals.
+    #[test]
+    fn snapshots_are_pure_reads_and_counters_cumulative() {
+        let m = Metrics::new();
+        for window in 0..5u64 {
+            m.record(100 * (window + 1), 2);
+            m.record_tokens(3);
+            let s = m.snapshot();
+            assert_eq!(s.requests, window + 1, "requests lost across windows");
+            assert_eq!(s.tokens, 3 * (window + 1), "tokens lost across windows");
+        }
+        let a = m.snapshot();
+        let b = m.snapshot();
+        assert_eq!(a.requests, b.requests);
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.mean_batch, b.mean_batch);
+    }
+
+    #[test]
+    fn rejections_and_occupancy() {
+        let m = Metrics::new();
+        m.record_rejected();
+        m.record_rejected();
+        m.record_step(300, 400);
+        m.record_step(100, 400);
+        let s = m.snapshot();
+        assert_eq!(s.rejected, 2);
+        assert_eq!(s.occupancy, 0.5);
+    }
+
+    /// The latency reservoir is bounded; totals keep counting past it.
+    #[test]
+    fn latency_reservoir_is_bounded() {
+        let m = Metrics::new();
+        for i in 0..(LATENCY_RESERVOIR as u64 + 100) {
+            m.record(i, 1);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.requests, LATENCY_RESERVOIR as u64 + 100);
+        assert_eq!(s.latency_us.unwrap().n, LATENCY_RESERVOIR);
     }
 }

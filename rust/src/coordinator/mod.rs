@@ -30,9 +30,24 @@
 //! every shard builds identical weights and every engine computes exact
 //! integer GEMMs, so batching and sharding never change logits — the
 //! same invariant as the CNN path.
+//!
+//! Two scheduling modes ([`ServeMode`]) share this front-end:
+//!
+//! * [`ServeMode::Window`] — the original dynamic batching window:
+//!   drain companions, execute the batch to completion, repeat;
+//! * [`ServeMode::Continuous`] — iteration-level scheduling
+//!   (the `scheduler` submodule): an admission queue with backpressure and
+//!   per-request deadlines feeds a step loop that coalesces one decode
+//!   step from every in-flight sequence (plus chunked prefill) into
+//!   shared engine GEMMs, with idle shards stealing work. Native
+//!   backend only. Logits are bit-identical to window-mode (and to
+//!   direct sequential) decode — locked by
+//!   `tests/serve_equivalence.rs`.
 
 pub mod batcher;
+pub mod loadgen;
 pub mod metrics;
+mod scheduler;
 
 use std::path::PathBuf;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
@@ -49,7 +64,7 @@ use crate::pe::Variant;
 use crate::runtime::Runtime;
 use crate::soc::{energy, Soc};
 use crate::util::error::{Context, Result};
-use batcher::BatchPolicy;
+use batcher::{BatchPolicy, ContinuousPolicy};
 use metrics::{Metrics, Snapshot};
 
 /// Model served by the coordinator. Must match what `aot.py` exported.
@@ -95,6 +110,18 @@ pub enum Backend {
     Native { shards: usize },
 }
 
+/// How the executor schedules work onto the backend.
+#[derive(Clone, Copy, Debug)]
+pub enum ServeMode {
+    /// Batch-synchronous: drain a batching window, run the batch to
+    /// completion, repeat.
+    Window,
+    /// Iteration-level continuous batching (native backend only): every
+    /// step coalesces one decode step from all in-flight sequences plus
+    /// chunked prefill into shared engine GEMMs.
+    Continuous(ContinuousPolicy),
+}
+
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
 pub struct Config {
@@ -102,6 +129,7 @@ pub struct Config {
     pub artifact_dir: PathBuf,
     pub policy: BatchPolicy,
     pub backend: Backend,
+    pub mode: ServeMode,
     /// SoC digital-twin configuration for the energy estimates (also the
     /// arch/variant of the native backend's engine shards).
     pub twin_arch: ArchKind,
@@ -115,6 +143,7 @@ impl Default for Config {
             artifact_dir: crate::runtime::default_artifact_dir(),
             policy: BatchPolicy::default(),
             backend: Backend::Artifacts,
+            mode: ServeMode::Window,
             twin_arch: ArchKind::SystolicOs,
             twin_variant: Variant::EntOurs,
         }
@@ -131,6 +160,14 @@ impl Config {
             ..Default::default()
         }
     }
+
+    /// Continuous-batching native serving on `shards` engine shards.
+    pub fn continuous(shards: usize) -> Config {
+        Config {
+            mode: ServeMode::Continuous(ContinuousPolicy::default()),
+            ..Config::native(shards)
+        }
+    }
 }
 
 /// One inference request: a flattened int8 CHW image.
@@ -139,21 +176,48 @@ pub struct InferRequest {
     pub image: Vec<i8>,
 }
 
-/// One transformer request: a token-id sequence to prefill; the
-/// response carries next-token logits for the last position.
+/// One transformer request: a token-id sequence to prefill, plus an
+/// optional number of greedy decode steps. The response carries the
+/// logits after the last processed position and the generated tokens.
 #[derive(Clone, Debug)]
 pub struct TokenRequest {
     pub tokens: Vec<u16>,
+    /// Greedy decode steps after prefill (0 = prefill only, i.e. just
+    /// next-token logits).
+    pub max_new_tokens: usize,
+}
+
+impl TokenRequest {
+    /// Prefill only: next-token logits for the prompt.
+    pub fn prefill(tokens: Vec<u16>) -> TokenRequest {
+        TokenRequest {
+            tokens,
+            max_new_tokens: 0,
+        }
+    }
+
+    /// Prefill then `max_new_tokens` greedy KV-cache decode steps.
+    pub fn generate(tokens: Vec<u16>, max_new_tokens: usize) -> TokenRequest {
+        TokenRequest {
+            tokens,
+            max_new_tokens,
+        }
+    }
 }
 
 /// Response to a [`TokenRequest`].
 #[derive(Clone, Debug)]
 pub struct TokenResponse {
-    /// Next-token logits (vocabulary-sized).
+    /// Logits after the last processed position (vocabulary-sized):
+    /// next-token logits of the prompt when `max_new_tokens` was 0,
+    /// otherwise of the prompt plus everything generated.
     pub logits: Vec<f32>,
+    /// Greedily decoded tokens (`max_new_tokens` of them).
+    pub generated: Vec<u16>,
     /// Wall-clock latency from enqueue to response.
     pub latency_us: u64,
-    /// Token jobs grouped into the same execution batch.
+    /// Token jobs grouped into the same execution batch (window mode)
+    /// or coalesced into the sequence's final step (continuous mode).
     pub batch_size: usize,
 }
 
@@ -179,6 +243,7 @@ struct Job {
 
 struct TokenJob {
     tokens: Vec<u16>,
+    max_new: usize,
     enqueued: Instant,
     respond: Sender<std::result::Result<TokenResponse, String>>,
 }
@@ -265,6 +330,7 @@ impl Coordinator {
         let (tx, rx) = mpsc::channel();
         let job = TokenJob {
             tokens: req.tokens,
+            max_new: req.max_new_tokens,
             enqueued: Instant::now(),
             respond: tx,
         };
@@ -375,6 +441,16 @@ fn executor_thread(
     metrics: Arc<Metrics>,
     ready: Sender<std::result::Result<(), String>>,
 ) {
+    // Continuous scheduling coalesces GEMMs across live KV caches —
+    // only the native engine backend can do that; artifacts are
+    // compiled for fixed whole-sequence shapes.
+    if matches!(cfg.mode, ServeMode::Continuous(_)) && !matches!(cfg.backend, Backend::Native { .. })
+    {
+        let _ = ready.send(Err(
+            "continuous scheduling requires the native backend".into()
+        ));
+        return;
+    }
     // Build the backend: artifact registry, or native engine shards.
     let exec = match &cfg.backend {
         Backend::Artifacts => {
@@ -442,6 +518,23 @@ fn executor_thread(
 
     let _ = ready.send(Ok(()));
 
+    // Continuous mode: hand the channel to the step-loop scheduler.
+    if let ServeMode::Continuous(pol) = cfg.mode {
+        if let Executor::Native { model, lm, shards } = &exec {
+            scheduler::run(scheduler::SchedulerCtx {
+                pol,
+                cnn: model,
+                lm,
+                shards,
+                rx: &rx,
+                metrics: &metrics,
+                sim_energy_uj,
+                sim_latency_ms,
+            });
+        }
+        return;
+    }
+
     let input_len = cfg.model.input_len();
     let classes = cfg.model.classes;
     loop {
@@ -494,18 +587,35 @@ fn executor_thread(
     }
 }
 
+/// Prefill a prompt and greedily decode `max_new` tokens against the
+/// KV cache on one engine — the sequential reference path the window
+/// batcher serves per job (and the continuous scheduler must match
+/// bit-for-bit).
+pub(crate) fn generate_sequential<E: crate::arch::TcuEngine + ?Sized>(
+    lm: &QuantTransformer,
+    eng: &E,
+    tokens: &[u16],
+    max_new: usize,
+) -> std::result::Result<(Vec<f32>, Vec<u16>), String> {
+    lm.check_request(tokens, max_new)?;
+    Ok(lm.generate(eng, tokens, max_new))
+}
+
 /// Serve one batch of transformer token jobs. On the native backend,
 /// whole sequences are sharded round-robin across the engine pool on
 /// scoped threads; results are reassembled in order, so batch grouping
 /// and shard count never change logits (every engine computes exact
 /// integer GEMMs over identical weights). On the artifacts backend the
-/// `tinyformer` artifact serves the batch sequentially.
+/// `tinyformer` artifact serves the batch sequentially. Either way a
+/// job prefills its prompt and then greedily decodes `max_new` tokens
+/// against the KV cache.
 fn run_token_batch(exec: &Executor, metrics: &Metrics, batch: Vec<TokenJob>) {
     if batch.is_empty() {
         return;
     }
     let bsize = batch.len();
-    let mut outs: Vec<Option<std::result::Result<Vec<f32>, String>>> = vec![None; bsize];
+    type TokenOut = std::result::Result<(Vec<f32>, Vec<u16>), String>;
+    let mut outs: Vec<Option<TokenOut>> = vec![None; bsize];
     match exec {
         Executor::Native { lm, shards, .. } => {
             let nshards = shards.len().max(1);
@@ -517,11 +627,8 @@ fn run_token_batch(exec: &Executor, metrics: &Metrics, batch: Vec<TokenJob>) {
                         let mut mine = Vec::new();
                         let mut i = si;
                         while i < bsize {
-                            let r = match lm.check_tokens(&batch[i].tokens) {
-                                Ok(()) => Ok(lm.logits(eng, &batch[i].tokens)),
-                                Err(e) => Err(e),
-                            };
-                            mine.push((i, r));
+                            let job = &batch[i];
+                            mine.push((i, generate_sequential(lm, eng, &job.tokens, job.max_new)));
                             i += nshards;
                         }
                         mine
@@ -537,7 +644,7 @@ fn run_token_batch(exec: &Executor, metrics: &Metrics, batch: Vec<TokenJob>) {
         Executor::Artifacts(rt) => {
             for (i, job) in batch.iter().enumerate() {
                 outs[i] = Some(
-                    rt.transformer_logits("tinyformer", &job.tokens)
+                    rt.transformer_generate("tinyformer", &job.tokens, job.max_new)
                         .map_err(|e| e.to_string()),
                 );
             }
@@ -546,10 +653,12 @@ fn run_token_batch(exec: &Executor, metrics: &Metrics, batch: Vec<TokenJob>) {
     for (job, out) in batch.into_iter().zip(outs) {
         let latency_us = job.enqueued.elapsed().as_micros() as u64;
         match out.unwrap_or_else(|| Err("shard dropped token job".into())) {
-            Ok(logits) => {
+            Ok((logits, generated)) => {
                 metrics.record(latency_us, bsize);
+                metrics.record_tokens((job.tokens.len() + generated.len()) as u64);
                 let _ = job.respond.send(Ok(TokenResponse {
                     logits,
+                    generated,
                     latency_us,
                     batch_size: bsize,
                 }));
@@ -714,7 +823,7 @@ mod tests {
         let coord = Coordinator::start(Config::native(2)).expect("native coordinator");
         let toks = vec![3u16, 1, 4, 1, 5];
         let first = coord
-            .infer_tokens(TokenRequest { tokens: toks.clone() })
+            .infer_tokens(TokenRequest::prefill(toks.clone()))
             .expect("token inference");
         assert_eq!(first.logits.len(), 64); // tiny vocab
         assert!(first.logits.iter().all(|x| x.is_finite()));
@@ -728,7 +837,7 @@ mod tests {
                 let expect = first.logits.clone();
                 scope.spawn(move || {
                     let r = coord
-                        .infer_tokens(TokenRequest { tokens: toks })
+                        .infer_tokens(TokenRequest::prefill(toks))
                         .expect("dup token request");
                     assert_eq!(r.logits, expect, "sharding changed transformer logits");
                 });
@@ -736,7 +845,7 @@ mod tests {
         });
         // Malformed sequences are rejected individually.
         let bad = coord
-            .submit_tokens(TokenRequest { tokens: vec![9999] })
+            .submit_tokens(TokenRequest::prefill(vec![9999]))
             .recv()
             .expect("response")
             .expect_err("must reject");

@@ -1,0 +1,510 @@
+//! The continuous-batching scheduler — iteration-level serving.
+//!
+//! Window batching (the default executor loop in
+//! [`super`](crate::coordinator)) drains a batching window and runs
+//! every admitted job to completion before looking at the queue again:
+//! a long prefill stalls every decode behind it, and a finished
+//! sequence's slot sits idle until the whole batch drains. This module
+//! replaces that with the scheduling style of modern LLM servers
+//! (continuous batching): a **step loop** that re-forms the batch every
+//! iteration.
+//!
+//! ```text
+//!             submit()/submit_tokens()
+//!                      │ mpsc
+//!                      ▼
+//!    ┌─ admission ──────────────────────────────┐
+//!    │ queue_cap exceeded  → reject "backpressure"│
+//!    │ waited > deadline_us → reject "deadline"   │
+//!    └──────────────┬────────────────────────────┘
+//!                   ▼ admit (≤ max_inflight live sequences)
+//!    ┌─ step loop, every iteration ──────────────────────────────┐
+//!    │ each in-flight sequence contributes its next rows:        │
+//!    │   prefill phase → next ≤ prefill_chunk prompt positions   │
+//!    │   decode phase  → the one token argmax'd last step        │
+//!    │ sequences are packed into ≤ nshards groups; each group    │
+//!    │ is ONE QuantTransformer::forward_step — Q/K/V, MLP and    │
+//!    │ head GEMMs coalesced across its sequences. CNN jobs ride  │
+//!    │ the same task list. Idle shards steal the next task       │
+//!    │ (atomic cursor), so one slow group never idles the pool.  │
+//!    └───────────────────────────────────────────────────────────┘
+//!                   ▼ per sequence, after its step
+//!      prompt exhausted & max_new reached → respond(logits, generated)
+//!      else argmax → feed back next iteration
+//! ```
+//!
+//! **Equivalence invariant**: every GEMM is exact integer arithmetic
+//! and every activation row depends only on its own sequence (per-row
+//! softmax/layernorm, per-sequence KV caches), so any grouping of
+//! sequences into steps — and any assignment of groups to engine
+//! shards — produces bit-identical logits and generated tokens to
+//! running each request alone ([`super::generate_sequential`]). Locked
+//! across all five architectures by `tests/serve_equivalence.rs`.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::arch::AnyEngine;
+use crate::nn::attention::KvCache;
+use crate::nn::forward::QuantCnn;
+use crate::nn::transformer::{QuantTransformer, StepSeq};
+
+use super::batcher::ContinuousPolicy;
+use super::metrics::Metrics;
+use super::{InferResponse, Job, Msg, TokenJob, TokenResponse};
+
+/// Everything one scheduler run needs, bundled (the executor thread
+/// owns the backend; the scheduler only borrows it).
+pub(super) struct SchedulerCtx<'a> {
+    pub pol: ContinuousPolicy,
+    pub cnn: &'a QuantCnn,
+    pub lm: &'a QuantTransformer,
+    pub shards: &'a [AnyEngine],
+    pub rx: &'a Receiver<Msg>,
+    pub metrics: &'a Metrics,
+    pub sim_energy_uj: f64,
+    pub sim_latency_ms: f64,
+}
+
+/// One in-flight sequence.
+struct SeqState {
+    job: TokenJob,
+    /// Prompt followed by every generated token fed back for decode.
+    queue: Vec<u16>,
+    /// Positions of `queue` already fed through the stack.
+    fed: usize,
+    generated: Vec<u16>,
+    caches: Vec<KvCache>,
+    /// Logits after the last fed position (empty before the first step).
+    logits: Vec<f32>,
+    /// Sequences coalesced into this one's most recent step group.
+    group: usize,
+}
+
+/// One sequence's share of a step: feed `queue[fed..fed + feed]`.
+struct SeqTask<'a> {
+    seq: &'a mut SeqState,
+    feed: usize,
+}
+
+/// A unit of work an idle shard can steal.
+enum Task<'a> {
+    /// One coalesced `forward_step` over several sequences.
+    Tokens(Vec<SeqTask<'a>>),
+    /// One CNN image forward.
+    Image(Job),
+}
+
+/// Run the continuous-batching step loop until shutdown. Accepted work
+/// (admitted sequences and queued jobs) is finished before returning;
+/// messages arriving after shutdown get channel disconnects.
+pub(super) fn run(ctx: SchedulerCtx<'_>) {
+    let input_len = ctx.cnn.input_len();
+    let nshards = ctx.shards.len().max(1);
+    let mut pending_tok: VecDeque<TokenJob> = VecDeque::new();
+    let mut pending_img: VecDeque<Job> = VecDeque::new();
+    let mut inflight: Vec<SeqState> = Vec::new();
+    let mut shutting_down = false;
+
+    loop {
+        // -- arrivals ------------------------------------------------
+        let idle = inflight.is_empty() && pending_tok.is_empty() && pending_img.is_empty();
+        if idle {
+            if shutting_down {
+                return;
+            }
+            match ctx.rx.recv() {
+                Ok(msg) => {
+                    if admit_arrival(msg, &ctx, &mut pending_tok, &mut pending_img, &inflight) {
+                        shutting_down = true;
+                    }
+                }
+                Err(_) => return,
+            }
+        }
+        while !shutting_down {
+            match ctx.rx.try_recv() {
+                Ok(msg) => {
+                    if admit_arrival(msg, &ctx, &mut pending_tok, &mut pending_img, &inflight) {
+                        shutting_down = true;
+                    }
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    shutting_down = true;
+                }
+            }
+        }
+
+        // -- per-request deadlines over the pending queue -------------
+        if ctx.pol.deadline_us > 0 {
+            expire_deadlines(&ctx, &mut pending_tok, &mut pending_img);
+        }
+
+        // -- admit pending sequences into the in-flight set -----------
+        while inflight.len() < ctx.pol.max_inflight.max(1) {
+            let Some(mut job) = pending_tok.pop_front() else {
+                break;
+            };
+            if let Err(e) = ctx.lm.check_request(&job.tokens, job.max_new) {
+                ctx.metrics.record_error();
+                let _ = job.respond.send(Err(e));
+                continue;
+            }
+            let queue = std::mem::take(&mut job.tokens);
+            inflight.push(SeqState {
+                caches: ctx.lm.empty_caches(),
+                queue,
+                fed: 0,
+                generated: Vec::with_capacity(job.max_new),
+                logits: Vec::new(),
+                group: 1,
+                job,
+            });
+        }
+
+        // -- build this iteration's task list -------------------------
+        let mut tasks: Vec<Task> = Vec::new();
+        if !inflight.is_empty() {
+            // Pack the in-flight sequences into at most one group per
+            // shard; each group becomes a single coalesced step.
+            let gsize = inflight.len().div_ceil(nshards);
+            for chunk in inflight.chunks_mut(gsize) {
+                let group = chunk.len();
+                let mut seqs = Vec::with_capacity(group);
+                for s in chunk.iter_mut() {
+                    let feed = (s.queue.len() - s.fed).min(ctx.pol.prefill_chunk.max(1));
+                    s.group = group;
+                    seqs.push(SeqTask { seq: s, feed });
+                }
+                tasks.push(Task::Tokens(seqs));
+            }
+        }
+        let img_group = pending_img.len();
+        for job in pending_img.drain(..) {
+            if job.image.len() != input_len {
+                ctx.metrics.record_error();
+                let _ = job.respond.send(Err(format!(
+                    "bad input: {} elements, expected {input_len}",
+                    job.image.len()
+                )));
+                continue;
+            }
+            tasks.push(Task::Image(job));
+        }
+
+        // -- execute: idle shards steal the next task -----------------
+        if !tasks.is_empty() {
+            // Capture only Sync pieces in the worker closure (the ctx
+            // itself holds the !Sync mpsc receiver).
+            let (lm, cnn, metrics) = (ctx.lm, ctx.cnn, ctx.metrics);
+            let (sim_energy_uj, sim_latency_ms) = (ctx.sim_energy_uj, ctx.sim_latency_ms);
+            let t_step = Instant::now();
+            let busy_ns = run_stolen(ctx.shards, tasks, |eng, task| match task {
+                Task::Tokens(mut group) => run_token_group(lm, metrics, eng, &mut group),
+                Task::Image(job) => run_image(
+                    cnn,
+                    metrics,
+                    eng,
+                    job,
+                    img_group,
+                    sim_energy_uj,
+                    sim_latency_ms,
+                ),
+            });
+            let capacity_ns = t_step.elapsed().as_nanos() as u64 * nshards as u64;
+            ctx.metrics.record_step(busy_ns, capacity_ns);
+        }
+
+        // -- sequence lifecycle after the step ------------------------
+        let mut i = 0;
+        while i < inflight.len() {
+            let s = &mut inflight[i];
+            if s.fed < s.queue.len() {
+                i += 1;
+                continue; // still prefilling
+            }
+            if s.generated.len() < s.job.max_new {
+                // Greedy feedback: decode one more token next step.
+                let next = QuantTransformer::argmax(&s.logits);
+                s.generated.push(next);
+                s.queue.push(next);
+                i += 1;
+                continue;
+            }
+            // Complete: prompt fed, all tokens generated.
+            let s = inflight.swap_remove(i);
+            let latency_us = s.job.enqueued.elapsed().as_micros() as u64;
+            ctx.metrics.record(latency_us, s.group);
+            let _ = s.job.respond.send(Ok(TokenResponse {
+                logits: s.logits,
+                generated: s.generated,
+                latency_us,
+                batch_size: s.group,
+            }));
+        }
+    }
+}
+
+/// The single admission-rejection path: count it and answer the client.
+/// `loadgen` string-matches the `backpressure:` / `deadline exceeded`
+/// prefixes these messages carry — keep every rejection going through
+/// here so the wording and the counter stay in lockstep.
+fn reject<T>(metrics: &Metrics, respond: &Sender<std::result::Result<T, String>>, msg: String) {
+    metrics.record_rejected();
+    let _ = respond.send(Err(msg));
+}
+
+/// Admission control for one arriving message. Returns `true` on
+/// shutdown.
+fn admit_arrival(
+    msg: Msg,
+    ctx: &SchedulerCtx<'_>,
+    pending_tok: &mut VecDeque<TokenJob>,
+    pending_img: &mut VecDeque<Job>,
+    inflight: &[SeqState],
+) -> bool {
+    let load = pending_tok.len() + pending_img.len() + inflight.len();
+    let full = load >= ctx.pol.queue_cap.max(1);
+    let backpressure = || format!("backpressure: queue full ({load} in flight)");
+    match msg {
+        Msg::Tokens(t) => {
+            if full {
+                reject(ctx.metrics, &t.respond, backpressure());
+            } else {
+                pending_tok.push_back(t);
+            }
+        }
+        Msg::Job(j) => {
+            if full {
+                reject(ctx.metrics, &j.respond, backpressure());
+            } else {
+                pending_img.push_back(j);
+            }
+        }
+        Msg::Shutdown => return true,
+    }
+    false
+}
+
+/// Reject every pending request that has waited past its admission
+/// deadline.
+fn expire_deadlines(
+    ctx: &SchedulerCtx<'_>,
+    pending_tok: &mut VecDeque<TokenJob>,
+    pending_img: &mut VecDeque<Job>,
+) {
+    let allowed = ctx.pol.deadline_us;
+    let expired = |waited_us: u128| -> Option<String> {
+        (waited_us > allowed as u128).then(|| {
+            format!("deadline exceeded before admission ({waited_us} µs waited, {allowed} µs allowed)")
+        })
+    };
+    pending_tok.retain(|t| match expired(t.enqueued.elapsed().as_micros()) {
+        Some(msg) => {
+            reject(ctx.metrics, &t.respond, msg);
+            false
+        }
+        None => true,
+    });
+    pending_img.retain(|j| match expired(j.enqueued.elapsed().as_micros()) {
+        Some(msg) => {
+            reject(ctx.metrics, &j.respond, msg);
+            false
+        }
+        None => true,
+    });
+}
+
+/// One coalesced step over a group of sequences on one engine shard:
+/// each contributes its next `feed` positions; Q/K/V, MLP, and head
+/// GEMMs run shared across the group.
+fn run_token_group(
+    lm: &QuantTransformer,
+    metrics: &Metrics,
+    eng: &AnyEngine,
+    group: &mut [SeqTask<'_>],
+) {
+    let mut steps: Vec<StepSeq> = Vec::with_capacity(group.len());
+    let mut fed_positions = 0u64;
+    for t in group.iter_mut() {
+        let s = &mut *t.seq;
+        fed_positions += t.feed as u64;
+        steps.push(StepSeq {
+            tokens: &s.queue[s.fed..s.fed + t.feed],
+            caches: &mut s.caches[..],
+        });
+    }
+    let logits = lm.forward_step(eng, &mut steps);
+    drop(steps);
+    for (t, l) in group.iter_mut().zip(logits) {
+        t.seq.fed += t.feed;
+        t.seq.logits = l;
+    }
+    metrics.record_tokens(fed_positions);
+}
+
+/// One CNN image forward on a stolen shard.
+#[allow(clippy::too_many_arguments)]
+fn run_image(
+    cnn: &QuantCnn,
+    metrics: &Metrics,
+    eng: &AnyEngine,
+    job: Job,
+    img_group: usize,
+    sim_energy_uj: f64,
+    sim_latency_ms: f64,
+) {
+    let logits = cnn.forward(eng, &job.image);
+    let latency_us = job.enqueued.elapsed().as_micros() as u64;
+    metrics.record(latency_us, img_group.max(1));
+    let _ = job.respond.send(Ok(InferResponse {
+        logits,
+        latency_us,
+        batch_size: img_group.max(1),
+        sim_energy_uj,
+        sim_latency_ms,
+    }));
+}
+
+/// Execute `tasks` across the engine shards with work stealing: a
+/// shared atomic cursor hands the next unclaimed task to whichever
+/// shard frees up first, so a slow group never idles the rest of the
+/// pool. Returns the summed shard busy time (for the occupancy metric).
+fn run_stolen<'a, F>(shards: &[AnyEngine], tasks: Vec<Task<'a>>, f: F) -> u64
+where
+    F: Fn(&AnyEngine, Task<'a>) + Sync,
+{
+    if tasks.is_empty() {
+        return 0;
+    }
+    let slots: Vec<Mutex<Option<Task>>> = tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let cursor = AtomicUsize::new(0);
+    let workers = shards.len().min(slots.len()).max(1);
+    let mut busy_ns = 0u64;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for eng in shards.iter().take(workers) {
+            let slots = &slots;
+            let cursor = &cursor;
+            let f = &f;
+            handles.push(scope.spawn(move || {
+                let mut mine_ns = 0u64;
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= slots.len() {
+                        break;
+                    }
+                    let task = slots[i].lock().unwrap().take().expect("task stolen once");
+                    let t0 = Instant::now();
+                    f(eng, task);
+                    mine_ns += t0.elapsed().as_nanos() as u64;
+                }
+                mine_ns
+            }));
+        }
+        for h in handles {
+            busy_ns += h.join().expect("shard worker");
+        }
+    });
+    busy_ns
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::coordinator::batcher::ContinuousPolicy;
+    use crate::coordinator::{Config, Coordinator, ServeMode, TokenRequest};
+
+    fn prompt(n: usize) -> Vec<u16> {
+        (0..n).map(|i| ((i * 7 + 3) % 64) as u16).collect()
+    }
+
+    /// Backpressure: with a tiny admission bound, a flood of
+    /// non-blocking submissions gets some `backpressure:` rejections,
+    /// every receiver resolves, and the rejection counter advances.
+    #[test]
+    fn backpressure_rejects_beyond_queue_cap() {
+        let mut cfg = Config::continuous(1);
+        cfg.mode = ServeMode::Continuous(ContinuousPolicy {
+            queue_cap: 2,
+            max_inflight: 1,
+            ..ContinuousPolicy::default()
+        });
+        let coord = Coordinator::start(cfg).expect("continuous coordinator");
+        let receivers: Vec<_> = (0..12)
+            .map(|_| coord.submit_tokens(TokenRequest::generate(prompt(8), 1)))
+            .collect();
+        let mut ok = 0u32;
+        let mut rejected = 0u32;
+        for rx in receivers {
+            match rx.recv().expect("response") {
+                Ok(r) => {
+                    assert_eq!(r.generated.len(), 1);
+                    ok += 1;
+                }
+                Err(e) => {
+                    assert!(e.contains("backpressure"), "{e}");
+                    rejected += 1;
+                }
+            }
+        }
+        assert_eq!(ok + rejected, 12);
+        assert!(rejected >= 1, "queue cap 2 must reject part of a 12-burst");
+        assert!(ok >= 1, "admitted requests must still complete");
+        assert!(coord.metrics().rejected >= rejected as u64);
+        coord.shutdown();
+    }
+
+    /// Per-request deadlines: with a 1 µs admission deadline and one
+    /// decode slot, stragglers queued behind bit-level work expire.
+    #[test]
+    fn deadline_expires_unadmitted_requests() {
+        let mut cfg = Config::continuous(1);
+        cfg.mode = ServeMode::Continuous(ContinuousPolicy {
+            max_inflight: 1,
+            deadline_us: 1,
+            ..ContinuousPolicy::default()
+        });
+        let coord = Coordinator::start(cfg).expect("continuous coordinator");
+        let receivers: Vec<_> = (0..4)
+            .map(|_| coord.submit_tokens(TokenRequest::generate(prompt(12), 1)))
+            .collect();
+        let mut done = 0u32;
+        let mut expired = 0u32;
+        for rx in receivers {
+            match rx.recv().expect("response") {
+                Ok(_) => done += 1,
+                Err(e) => {
+                    assert!(e.contains("deadline exceeded"), "{e}");
+                    expired += 1;
+                }
+            }
+        }
+        assert_eq!(done + expired, 4);
+        assert!(expired >= 2, "1 µs deadline must expire queued stragglers");
+        coord.shutdown();
+    }
+
+    /// Malformed requests are rejected at admission without touching
+    /// the step loop, and well-formed neighbours are unaffected.
+    #[test]
+    fn continuous_rejects_malformed_requests_individually() {
+        let coord = Coordinator::start(Config::continuous(2)).expect("continuous coordinator");
+        let bad_vocab = coord.submit_tokens(TokenRequest::prefill(vec![9999]));
+        let bad_cap = coord.submit_tokens(TokenRequest::generate(prompt(8), 1000));
+        let good = coord
+            .infer_tokens(TokenRequest::generate(prompt(5), 2))
+            .expect("good request");
+        assert_eq!(good.generated.len(), 2);
+        assert_eq!(good.logits.len(), 64);
+        let e1 = bad_vocab.recv().expect("resp").expect_err("must reject");
+        assert!(e1.contains("out of vocab"), "{e1}");
+        let e2 = bad_cap.recv().expect("resp").expect_err("must reject");
+        assert!(e2.contains("exceeds max_seq"), "{e2}");
+        assert!(coord.metrics().errors >= 2);
+        coord.shutdown();
+    }
+}

@@ -1,11 +1,12 @@
 //! `ent` — the EN-T reproduction CLI (Layer-3 leader entrypoint).
 //!
 //! ```text
-//! ent report <all|fig1|table1|fig6|fig7|table2|fig9|fig10|fig11|fig12|transformer>
+//! ent report <all|fig1|table1|fig6|fig7|table2|fig9|fig10|fig11|fig12|transformer|serving>
 //! ent simulate --arch sa_os --size 32 --variant ours --m 64 --k 128 --n 64
 //! ent soc --net resnet50 [--arch sa_os] [--json]
 //! ent transformer --prompt 12 --gen 4 [--arch sa_os] [--variant ours] [--json]
-//! ent serve --requests 64 [--native] [--tokens] [--artifacts DIR]
+//! ent serve --requests 64 [--native] [--continuous] [--tokens] [--gen 4] [--artifacts DIR]
+//! ent loadgen --rate 200 --duration 500 [--mix 0.25] [--window] [--json]
 //! ent sweep --ablation <encoder|accwidth|segmented|batching>
 //! ent selftest
 //! ```
@@ -38,10 +39,10 @@ fn main() -> ExitCode {
 /// Every subcommand with its one-line description — the single source
 /// for `ent --help`. Keep in sync with the `run()` dispatch match;
 /// `tests/cli_help.rs` asserts the known names appear in the help text.
-const SUBCOMMANDS: [(&str, &str); 8] = [
+const SUBCOMMANDS: [(&str, &str); 9] = [
     (
         "report",
-        "regenerate a paper table/figure (all, fig1, table1, fig6, fig7, table2, fig9, fig10, fig11, fig12, transformer)",
+        "regenerate a paper table/figure (all, fig1, table1, fig6, fig7, table2, fig9, fig10, fig11, fig12, transformer, serving)",
     ),
     ("simulate", "run one GEMM through an architecture dataflow model"),
     ("soc", "single-frame SoC energy/latency for a CNN workload"),
@@ -50,6 +51,10 @@ const SUBCOMMANDS: [(&str, &str); 8] = [
         "int8 transformer inference demo (prefill + KV-cache decode) on one engine",
     ),
     ("serve", "start the serving coordinator on synthetic load (CNN and/or token requests)"),
+    (
+        "loadgen",
+        "open-loop synthetic traffic against the continuous-batching scheduler (p50/p99, tokens/s, occupancy)",
+    ),
     ("sweep", "ablation sweeps (encoder, accwidth, segmented, batching)"),
     ("selftest", "quick datapath equivalence check"),
     ("help", "show this help (or `ent <subcommand> --help` for options)"),
@@ -77,6 +82,7 @@ fn run(argv: &[String]) -> ent::Result<()> {
         "soc" => cmd_soc(rest),
         "transformer" => cmd_transformer(rest),
         "serve" => cmd_serve(rest),
+        "loadgen" => cmd_loadgen(rest),
         "sweep" => cmd_sweep(rest),
         "selftest" => cmd_selftest(),
         "help" | "--help" | "-h" => {
@@ -116,6 +122,7 @@ fn cmd_report(argv: &[String]) -> ent::Result<()> {
         "fig11" => report::fig11(),
         "fig12" => report::fig12(),
         "transformer" => report::transformer(),
+        "serving" => report::serving(),
         other => ent::bail!("unknown report '{other}'"),
     };
     print!("{out}");
@@ -362,9 +369,11 @@ fn cmd_serve(argv: &[String]) -> ent::Result<()> {
         OptSpec { name: "artifacts", takes_value: true, help: "artifact directory" },
         OptSpec { name: "concurrency", takes_value: true, help: "client threads (default 4)" },
         OptSpec { name: "native", takes_value: false, help: "serve on native engine shards (no artifacts)" },
+        OptSpec { name: "continuous", takes_value: false, help: "continuous-batching step loop (implies --native)" },
         OptSpec { name: "shards", takes_value: true, help: "native engine shards (default 4)" },
         OptSpec { name: "tokens", takes_value: false, help: "send transformer token requests instead of CNN images" },
         OptSpec { name: "prompt", takes_value: true, help: "token prompt length with --tokens (default 12)" },
+        OptSpec { name: "gen", takes_value: true, help: "greedy decode steps per token request (default 0)" },
         OptSpec { name: "help", takes_value: false, help: "show help" },
     ];
     let args = Args::parse(argv, &specs)?;
@@ -378,8 +387,14 @@ fn cmd_serve(argv: &[String]) -> ent::Result<()> {
     // The served transformer's geometry bounds the synthetic token load.
     let lm_spec = ent::nn::transformer::TransformerSpec::tiny();
     let prompt_len = args.get_usize("prompt", 12)?.clamp(1, lm_spec.max_seq);
-    let mut cfg = if args.flag("native") {
-        Config::native(args.get_usize("shards", 4)?)
+    let gen_len = args
+        .get_usize("gen", 0)?
+        .min(lm_spec.max_seq - prompt_len);
+    let shards = args.get_usize("shards", 4)?;
+    let mut cfg = if args.flag("continuous") {
+        Config::continuous(shards)
+    } else if args.flag("native") {
+        Config::native(shards)
     } else {
         Config::default()
     };
@@ -389,7 +404,10 @@ fn cmd_serve(argv: &[String]) -> ent::Result<()> {
     let input_len = cfg.model.input_len();
     let coordinator = Coordinator::start(cfg)?;
     let kind = if tokens { "token" } else { "image" };
-    println!("coordinator up; sending {n_requests} {kind} requests from {concurrency} client threads");
+    let mode = if args.flag("continuous") { "continuous" } else { "window" };
+    println!(
+        "coordinator up ({mode} scheduling); sending {n_requests} {kind} requests from {concurrency} client threads"
+    );
 
     let t0 = std::time::Instant::now();
     std::thread::scope(|scope| {
@@ -402,9 +420,10 @@ fn cmd_serve(argv: &[String]) -> ent::Result<()> {
                         let toks: Vec<u16> = (0..prompt_len)
                             .map(|_| rng.below(lm_spec.vocab as u64) as u16)
                             .collect();
-                        match coord.infer_tokens(TokenRequest { tokens: toks }) {
+                        match coord.infer_tokens(TokenRequest::generate(toks, gen_len)) {
                             Ok(r) => {
                                 assert!(!r.logits.is_empty());
+                                assert_eq!(r.generated.len(), gen_len);
                             }
                             Err(e) => eprintln!("token request failed: {e}"),
                         }
@@ -425,8 +444,8 @@ fn cmd_serve(argv: &[String]) -> ent::Result<()> {
     let m = coordinator.metrics();
     println!("done in {:.1} ms", wall.as_secs_f64() * 1e3);
     println!(
-        "requests {} errors {} mean batch {:.2}",
-        m.requests, m.errors, m.mean_batch
+        "requests {} errors {} rejected {} mean batch {:.2}",
+        m.requests, m.errors, m.rejected, m.mean_batch
     );
     if let Some(lat) = m.latency_us {
         println!(
@@ -435,10 +454,91 @@ fn cmd_serve(argv: &[String]) -> ent::Result<()> {
         );
     }
     println!(
-        "throughput {:.0} req/s",
-        m.requests as f64 / wall.as_secs_f64()
+        "throughput {:.0} req/s{}",
+        m.requests as f64 / wall.as_secs_f64(),
+        if m.tokens > 0 {
+            format!(
+                "  tokens/s {:.0}  engine occupancy {:.0}%",
+                m.tokens as f64 / wall.as_secs_f64(),
+                m.occupancy * 100.0
+            )
+        } else {
+            String::new()
+        }
     );
     coordinator.shutdown();
+    Ok(())
+}
+
+fn cmd_loadgen(argv: &[String]) -> ent::Result<()> {
+    use ent::coordinator::loadgen::{self, LoadGen};
+    let specs = [
+        OptSpec { name: "rate", takes_value: true, help: "open-loop arrival rate, req/s (default 200)" },
+        OptSpec { name: "duration", takes_value: true, help: "submission window, ms (default 500)" },
+        OptSpec { name: "prompt", takes_value: true, help: "token prompt length (default 12)" },
+        OptSpec { name: "gen", takes_value: true, help: "greedy decode steps per request (default 2)" },
+        OptSpec { name: "mix", takes_value: true, help: "fraction of CNN image arrivals, 0..1 (default 0)" },
+        OptSpec { name: "shards", takes_value: true, help: "native engine shards (default 4)" },
+        OptSpec { name: "window", takes_value: false, help: "drive the window batcher instead of continuous" },
+        OptSpec { name: "seed", takes_value: true, help: "arrival-schedule seed (default 0x10AD)" },
+        OptSpec { name: "json", takes_value: false, help: "JSON output" },
+        OptSpec { name: "help", takes_value: false, help: "show help" },
+    ];
+    let args = Args::parse(argv, &specs)?;
+    if args.flag("help") {
+        print!("{}", help("ent loadgen", "open-loop synthetic traffic generator", &specs));
+        return Ok(());
+    }
+    let lm_spec = ent::nn::transformer::TransformerSpec::tiny();
+    let prompt_len = args.get_usize("prompt", 12)?.clamp(1, lm_spec.max_seq - 1);
+    let load = LoadGen {
+        rate_per_s: args.get_f64("rate", 200.0)?.max(0.1),
+        duration_ms: args.get_u64("duration", 500)?.max(1),
+        prompt_len,
+        max_new_tokens: args.get_usize("gen", 2)?.min(lm_spec.max_seq - prompt_len),
+        image_mix: args.get_f64("mix", 0.0)?.clamp(0.0, 1.0),
+        seed: args.get_u64("seed", 0x10AD)?,
+    };
+    let shards = args.get_usize("shards", 4)?;
+    let cfg = if args.flag("window") {
+        Config::native(shards)
+    } else {
+        Config::continuous(shards)
+    };
+    let scheduler = if args.flag("window") { "window" } else { "continuous" };
+    let coord = Coordinator::start(cfg)?;
+    let r = loadgen::run(&coord, &load);
+    let m = coord.metrics();
+    coord.shutdown();
+
+    if args.flag("json") {
+        let mut fields = vec![
+            ("scheduler", Json::str(scheduler)),
+            ("rate_per_s", Json::num(load.rate_per_s)),
+            ("duration_ms", Json::num(load.duration_ms as f64)),
+        ];
+        fields.extend(r.json_fields());
+        println!("{}", Json::obj(fields));
+        return Ok(());
+    }
+    let mut t = Table::new(format!(
+        "loadgen — {scheduler} scheduler, {:.0} req/s open-loop for {} ms",
+        load.rate_per_s, load.duration_ms
+    ))
+    .header(&["metric", "value"]);
+    t.row(vec!["sent".into(), r.sent.to_string()]);
+    t.row(vec!["completed".into(), r.completed.to_string()]);
+    t.row(vec!["rejected (backpressure/deadline)".into(), r.rejected.to_string()]);
+    t.row(vec!["failed".into(), r.failed.to_string()]);
+    if let Some(lat) = &r.latency_us {
+        t.row(vec!["latency p50 µs".into(), f(lat.median, 0)]);
+        t.row(vec!["latency p95 µs".into(), f(lat.p95, 0)]);
+        t.row(vec!["latency p99 µs".into(), f(lat.p99, 0)]);
+    }
+    t.row(vec!["tokens/s".into(), f(r.tokens_per_s, 0)]);
+    t.row(vec!["engine occupancy".into(), pct(r.occupancy)]);
+    t.row(vec!["mean step group".into(), f(m.mean_batch, 2)]);
+    print!("{}", t.render());
     Ok(())
 }
 

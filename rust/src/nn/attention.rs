@@ -221,7 +221,10 @@ impl MhaWeights {
     ///
     /// Prefill is `rows = seq` on an empty cache; autoregressive decode
     /// is `rows = 1` on a warm cache — the arithmetic is identical, so
-    /// decode reproduces prefill logits bit-for-bit.
+    /// decode reproduces prefill logits bit-for-bit. Thin wrapper over
+    /// [`MhaWeights::forward_multi`] with a single segment, so the
+    /// single-sequence and coalesced multi-sequence paths are the same
+    /// code.
     pub fn forward<E: TcuEngine + ?Sized>(
         &self,
         eng: &E,
@@ -229,65 +232,103 @@ impl MhaWeights {
         rows: usize,
         cache: &mut KvCache,
     ) -> Vec<i8> {
+        self.forward_multi(eng, x, &mut [(rows, cache)])
+    }
+
+    /// Run several **independent sequences'** new positions through the
+    /// attention block in one coalesced pass — the continuous-batching
+    /// step. `x` is the row-concatenation of every segment's positions
+    /// (`Σ rows × d` int8); `segs` gives each sequence's row count and
+    /// its own [`KvCache`], in row order.
+    ///
+    /// The Q/K/V and output projections run as **shared** engine GEMMs
+    /// over all rows at once; only the per-head score/softmax·V
+    /// contractions stay per-sequence (each attends over its own cache).
+    /// Every GEMM is exact integer arithmetic and every output row
+    /// depends only on its own sequence's rows, so the coalesced result
+    /// is bit-identical to running each sequence alone — the invariant
+    /// the continuous batcher is built on
+    /// (`tests/serve_equivalence.rs`).
+    pub fn forward_multi<E: TcuEngine + ?Sized>(
+        &self,
+        eng: &E,
+        x: &[i8],
+        segs: &mut [(usize, &mut KvCache)],
+    ) -> Vec<i8> {
         let d = self.d;
         let dh = d / self.heads;
-        assert_eq!(x.len(), rows * d, "attention input shape");
-        assert_eq!(cache.d, d, "cache width");
-        let offset = cache.len(); // positions already cached
+        let total: usize = segs.iter().map(|s| s.0).sum();
+        assert!(total > 0, "empty attention step");
+        assert_eq!(x.len(), total * d, "attention input shape");
 
-        // Q/K/V projections: one engine GEMM each, requantized to int8.
-        let mut acc = vec![0i64; rows * d];
-        eng.matmul_into(x, &self.wq, &mut acc, rows, d, d);
+        // Q/K/V projections: one shared engine GEMM each over every
+        // sequence's rows, requantized to int8.
+        let mut acc = vec![0i64; total * d];
+        eng.matmul_into(x, &self.wq, &mut acc, total, d, d);
         let q = requant(&acc, QKV_SHIFT);
-        eng.matmul_into(x, &self.wk, &mut acc, rows, d, d);
+        eng.matmul_into(x, &self.wk, &mut acc, total, d, d);
         let k_new = requant(&acc, QKV_SHIFT);
-        eng.matmul_into(x, &self.wv, &mut acc, rows, d, d);
+        eng.matmul_into(x, &self.wv, &mut acc, total, d, d);
         let v_new = requant(&acc, QKV_SHIFT);
-        cache.append(&k_new, &v_new, rows);
-        let kv = cache.len();
 
-        // Per-head: scores = Q_h · K_hᵀ, int8 softmax, then softmax · V_h.
-        let mut out = vec![0i8; rows * d];
-        let mut qh = vec![0i8; rows * dh];
-        let mut kht = vec![0i8; dh * kv];
-        let mut vh = vec![0i8; kv * dh];
-        let mut scores = vec![0i64; rows * kv];
-        let mut probs = vec![0i8; rows * kv];
-        let mut oh = vec![0i64; rows * dh];
-        for h in 0..self.heads {
-            let c0 = h * dh;
-            for i in 0..rows {
-                qh[i * dh..(i + 1) * dh].copy_from_slice(&q[i * d + c0..i * d + c0 + dh]);
-            }
-            for p in 0..kv {
-                for j in 0..dh {
-                    kht[j * kv + p] = cache.k[p * d + c0 + j];
+        // Per-sequence: append this segment's K/V to its own cache, then
+        // per-head scores = Q_h · K_hᵀ, int8 softmax, softmax · V_h.
+        let mut out = vec![0i8; total * d];
+        let mut r0 = 0usize; // this segment's first row in x/q/out
+        for (rows, cache) in segs.iter_mut() {
+            let rows = *rows;
+            assert!(rows > 0, "empty segment");
+            assert_eq!(cache.d, d, "cache width");
+            let offset = cache.len(); // positions already cached
+            cache.append(&k_new[r0 * d..], &v_new[r0 * d..], rows);
+            let kv = cache.len();
+
+            let mut qh = vec![0i8; rows * dh];
+            let mut kht = vec![0i8; dh * kv];
+            let mut vh = vec![0i8; kv * dh];
+            let mut scores = vec![0i64; rows * kv];
+            let mut probs = vec![0i8; rows * kv];
+            let mut oh = vec![0i64; rows * dh];
+            for h in 0..self.heads {
+                let c0 = h * dh;
+                for i in 0..rows {
+                    let at = (r0 + i) * d + c0;
+                    qh[i * dh..(i + 1) * dh].copy_from_slice(&q[at..at + dh]);
                 }
-                vh[p * dh..(p + 1) * dh].copy_from_slice(&cache.v[p * d + c0..p * d + c0 + dh]);
-            }
-            eng.matmul_into(&qh, &kht, &mut scores, rows, dh, kv);
-            // Causal mask: row i (absolute position offset + i) may
-            // attend to positions 0..=offset+i. Masked probabilities are
-            // zero, so the engine GEMM over the full kv extent is exact.
-            for i in 0..rows {
-                let valid = offset + i + 1;
-                softmax_i8(
-                    &scores[i * kv..(i + 1) * kv],
-                    valid.min(kv),
-                    SCORE_SHIFT,
-                    &mut probs[i * kv..(i + 1) * kv],
-                );
-            }
-            eng.matmul_into(&probs, &vh, &mut oh, rows, kv, dh);
-            for i in 0..rows {
-                for j in 0..dh {
-                    out[i * d + c0 + j] = (oh[i * dh + j] >> PV_SHIFT).clamp(-128, 127) as i8;
+                for p in 0..kv {
+                    for j in 0..dh {
+                        kht[j * kv + p] = cache.k[p * d + c0 + j];
+                    }
+                    vh[p * dh..(p + 1) * dh]
+                        .copy_from_slice(&cache.v[p * d + c0..p * d + c0 + dh]);
+                }
+                eng.matmul_into(&qh, &kht, &mut scores, rows, dh, kv);
+                // Causal mask: row i (absolute position offset + i) may
+                // attend to positions 0..=offset+i. Masked probabilities
+                // are zero, so the engine GEMM over the full kv extent is
+                // exact.
+                for i in 0..rows {
+                    let valid = offset + i + 1;
+                    softmax_i8(
+                        &scores[i * kv..(i + 1) * kv],
+                        valid.min(kv),
+                        SCORE_SHIFT,
+                        &mut probs[i * kv..(i + 1) * kv],
+                    );
+                }
+                eng.matmul_into(&probs, &vh, &mut oh, rows, kv, dh);
+                for i in 0..rows {
+                    for j in 0..dh {
+                        out[(r0 + i) * d + c0 + j] =
+                            (oh[i * dh + j] >> PV_SHIFT).clamp(-128, 127) as i8;
+                    }
                 }
             }
+            r0 += rows;
         }
 
-        // Output projection.
-        eng.matmul_into(&out, &self.wo, &mut acc, rows, d, d);
+        // Output projection: one shared GEMM over every row.
+        eng.matmul_into(&out, &self.wo, &mut acc, total, d, d);
         requant(&acc, QKV_SHIFT)
     }
 }
@@ -377,6 +418,57 @@ mod tests {
         assert_eq!(c.len(), 1);
         c.truncate(5); // no-op beyond current length
         assert_eq!(c.len(), 1);
+    }
+
+    /// Coalescing several independent sequences into one
+    /// `forward_multi` pass (shared projection GEMMs) is bit-identical
+    /// to running each sequence alone — the continuous-batching
+    /// invariant at the attention-block level.
+    #[test]
+    fn forward_multi_matches_per_sequence_forward() {
+        let mut rng = Rng::new(0xC0A7);
+        let (d, heads) = (16, 2);
+        let w = MhaWeights::new(d, heads, &mut rng);
+        let eng = Tcu::new(ArchKind::Matrix2d, 8, Variant::EntOurs).engine();
+
+        // Three sequences at different phases: cold 3-row prefill, warm
+        // 1-row decode, warm 2-row chunked prefill.
+        let warm = rng.i8_vec(4 * d);
+        let rows_per = [3usize, 1, 2];
+        let xs: Vec<Vec<i8>> = rows_per.iter().map(|&r| rng.i8_vec(r * d)).collect();
+        let mk_caches = |w: &MhaWeights| {
+            let mut c = vec![
+                KvCache::new(d, 16),
+                KvCache::new(d, 16),
+                KvCache::new(d, 16),
+            ];
+            w.forward(&eng, &warm, 4, &mut c[1]);
+            w.forward(&eng, &warm[..2 * d], 2, &mut c[2]);
+            c
+        };
+
+        // Reference: each sequence alone.
+        let mut solo_caches = mk_caches(&w);
+        let mut solo_out = Vec::new();
+        for (x, (r, c)) in xs.iter().zip(rows_per.iter().zip(solo_caches.iter_mut())) {
+            solo_out.extend(w.forward(&eng, x, *r, c));
+        }
+
+        // Coalesced: one forward_multi over the concatenated rows.
+        let mut multi_caches = mk_caches(&w);
+        let x_all: Vec<i8> = xs.concat();
+        let mut segs: Vec<(usize, &mut KvCache)> = rows_per
+            .iter()
+            .copied()
+            .zip(multi_caches.iter_mut())
+            .collect();
+        let multi_out = w.forward_multi(&eng, &x_all, &mut segs);
+        assert_eq!(multi_out, solo_out, "coalescing changed attention output");
+        for (a, b) in solo_caches.iter().zip(&multi_caches) {
+            assert_eq!(a.len(), b.len());
+            assert_eq!(a.k, b.k, "coalescing changed cached K");
+            assert_eq!(a.v, b.v, "coalescing changed cached V");
+        }
     }
 
     /// Decode (one row against a warm cache) reproduces the prefill

@@ -270,6 +270,15 @@ struct Block {
     w2: Vec<i8>,
 }
 
+/// One sequence's contribution to a coalesced
+/// [`QuantTransformer::forward_step`]: the new positions to feed (a
+/// prompt chunk, or a single decode token) and the sequence's own
+/// per-layer KV caches.
+pub struct StepSeq<'a> {
+    pub tokens: &'a [u16],
+    pub caches: &'a mut [KvCache],
+}
+
 /// A quantized int8 transformer with synthetic seeded weights — the
 /// serving path needs a deterministic, finite model, not an accurate
 /// one. Real trained weights would drop in through the same structs.
@@ -316,6 +325,24 @@ impl QuantTransformer {
             .collect()
     }
 
+    /// Validate a full serving request: prompt geometry plus enough
+    /// cache capacity for `max_new` greedy decode steps.
+    pub fn check_request(
+        &self,
+        tokens: &[u16],
+        max_new: usize,
+    ) -> std::result::Result<(), String> {
+        self.check_tokens(tokens)?;
+        if tokens.len() + max_new > self.spec.max_seq {
+            return Err(format!(
+                "prompt {} + {max_new} generated tokens exceeds max_seq {}",
+                tokens.len(),
+                self.spec.max_seq
+            ));
+        }
+        Ok(())
+    }
+
     /// Validate a token sequence against the model's geometry.
     pub fn check_tokens(&self, tokens: &[u16]) -> std::result::Result<(), String> {
         if tokens.is_empty() {
@@ -337,56 +364,106 @@ impl QuantTransformer {
     /// Run `tokens` new positions through the stack on `eng`, appending
     /// K/V to `caches` (one per layer), and return the f32 logits of the
     /// **last** position. Works for prompt prefill (warm or cold cache)
-    /// and, with a single token, for autoregressive decode.
+    /// and, with a single token, for autoregressive decode. Thin wrapper
+    /// over [`QuantTransformer::forward_step`] with a single sequence,
+    /// so the solo and coalesced serving paths share one code path.
     pub fn prefill<E: TcuEngine + ?Sized>(
         &self,
         eng: &E,
         tokens: &[u16],
         caches: &mut [KvCache],
     ) -> Vec<f32> {
-        assert_eq!(caches.len(), self.spec.layers, "one cache per layer");
-        assert!(!tokens.is_empty(), "empty token sequence");
-        let d = self.spec.d_model;
-        let rows = tokens.len();
-        assert!(
-            caches[0].len() + rows <= self.spec.max_seq,
-            "sequence exceeds max_seq"
-        );
+        self.forward_step(eng, &mut [StepSeq { tokens, caches }])
+            .pop()
+            .unwrap()
+    }
 
-        // Embed.
-        let mut x = vec![0i8; rows * d];
-        for (i, &t) in tokens.iter().enumerate() {
-            let t = t as usize;
-            assert!(t < self.spec.vocab, "token id out of vocab");
-            x[i * d..(i + 1) * d].copy_from_slice(&self.embed[t * d..(t + 1) * d]);
+    /// One **continuous-batching step**: run several independent
+    /// sequences' new positions (a chunked prefill or a single decode
+    /// token each) through the stack in one coalesced pass, and return
+    /// each sequence's last-position logits.
+    ///
+    /// The Q/K/V/output projections and both MLP GEMMs execute as
+    /// shared [`TcuEngine::matmul_into`] calls over every sequence's
+    /// rows at once; softmax, GELU, and layernorm are per-row integer
+    /// ops; only the per-head attention contractions stay per-sequence
+    /// (each attends over its own [`KvCache`]). Every output row depends
+    /// only on its own sequence, so coalescing is bit-identical to
+    /// stepping each sequence alone — the scheduler's equivalence
+    /// invariant (`tests/serve_equivalence.rs`).
+    pub fn forward_step<E: TcuEngine + ?Sized>(
+        &self,
+        eng: &E,
+        seqs: &mut [StepSeq<'_>],
+    ) -> Vec<Vec<f32>> {
+        let d = self.spec.d_model;
+        let rows_per: Vec<usize> = seqs.iter().map(|s| s.tokens.len()).collect();
+        let total: usize = rows_per.iter().sum();
+        assert!(total > 0, "empty step");
+        for s in seqs.iter() {
+            assert_eq!(s.caches.len(), self.spec.layers, "one cache per layer");
+            assert!(!s.tokens.is_empty(), "empty token sequence");
+            assert!(
+                s.caches[0].len() + s.tokens.len() <= self.spec.max_seq,
+                "sequence exceeds max_seq"
+            );
         }
 
-        let mut acc = vec![0i64; rows * self.spec.d_ff.max(d)];
-        for (block, cache) in self.blocks.iter().zip(caches.iter_mut()) {
-            // Attention sub-block, residual + layernorm in i32.
-            let attn = block.attn.forward(eng, &x, rows, cache);
+        // Embed every sequence's new positions into one row block.
+        let mut x = vec![0i8; total * d];
+        let mut r = 0usize;
+        for s in seqs.iter() {
+            for &t in s.tokens {
+                let t = t as usize;
+                assert!(t < self.spec.vocab, "token id out of vocab");
+                x[r * d..(r + 1) * d].copy_from_slice(&self.embed[t * d..(t + 1) * d]);
+                r += 1;
+            }
+        }
+
+        let mut acc = vec![0i64; total * self.spec.d_ff.max(d)];
+        for (l, block) in self.blocks.iter().enumerate() {
+            // Attention sub-block (shared projections, per-sequence
+            // cache attention), residual + layernorm in i32.
+            let mut segs: Vec<(usize, &mut KvCache)> = seqs
+                .iter_mut()
+                .zip(&rows_per)
+                .map(|(s, &rows)| (rows, &mut s.caches[l]))
+                .collect();
+            let attn = block.attn.forward_multi(eng, &x, &mut segs);
+            drop(segs);
             x = add_norm(&x, &attn, d);
-            // MLP sub-block: W1 → GELU LUT → W2, residual + layernorm.
+            // MLP sub-block: W1 → GELU LUT → W2, residual + layernorm —
+            // shared GEMMs over every sequence's rows.
             let ff = self.spec.d_ff;
-            eng.matmul_into(&x, &block.w1, &mut acc[..rows * ff], rows, d, ff);
-            let mut hidden = requant(&acc[..rows * ff], FF1_SHIFT);
+            eng.matmul_into(&x, &block.w1, &mut acc[..total * ff], total, d, ff);
+            let mut hidden = requant(&acc[..total * ff], FF1_SHIFT);
             gelu_i8(&mut hidden);
-            eng.matmul_into(&hidden, &block.w2, &mut acc[..rows * d], rows, ff, d);
-            let mlp = requant(&acc[..rows * d], FF2_SHIFT);
+            eng.matmul_into(&hidden, &block.w2, &mut acc[..total * d], total, ff, d);
+            let mlp = requant(&acc[..total * d], FF2_SHIFT);
             x = add_norm(&x, &mlp, d);
         }
 
-        // Vocabulary head over the last position.
-        let mut logits = vec![0i64; self.spec.vocab];
-        eng.matmul_into(
-            &x[(rows - 1) * d..],
-            &self.head,
-            &mut logits,
-            1,
-            d,
-            self.spec.vocab,
-        );
-        logits.iter().map(|&v| v as f32 / 256.0).collect()
+        // Vocabulary head over each sequence's last position, gathered
+        // into one shared GEMM.
+        let nseq = seqs.len();
+        let vocab = self.spec.vocab;
+        let mut last = vec![0i8; nseq * d];
+        let mut row_end = 0usize;
+        for (i, &rows) in rows_per.iter().enumerate() {
+            row_end += rows;
+            last[i * d..(i + 1) * d].copy_from_slice(&x[(row_end - 1) * d..row_end * d]);
+        }
+        let mut logits = vec![0i64; nseq * vocab];
+        eng.matmul_into(&last, &self.head, &mut logits, nseq, d, vocab);
+        (0..nseq)
+            .map(|i| {
+                logits[i * vocab..(i + 1) * vocab]
+                    .iter()
+                    .map(|&v| v as f32 / 256.0)
+                    .collect()
+            })
+            .collect()
     }
 
     /// One autoregressive step: process `token` against the warm caches
@@ -406,6 +483,30 @@ impl QuantTransformer {
     pub fn logits<E: TcuEngine + ?Sized>(&self, eng: &E, tokens: &[u16]) -> Vec<f32> {
         let mut caches = self.empty_caches();
         self.prefill(eng, tokens, &mut caches)
+    }
+
+    /// The sequential serving contract: prefill `tokens` from a cold
+    /// cache, then greedily decode `max_new` tokens against it.
+    /// Returns the logits after the last processed position plus the
+    /// generated tokens. Both coordinator backends, both schedulers,
+    /// and the equivalence tests share this one definition, so they
+    /// cannot drift apart. Panics on out-of-geometry input — callers
+    /// validate with [`QuantTransformer::check_request`] first.
+    pub fn generate<E: TcuEngine + ?Sized>(
+        &self,
+        eng: &E,
+        tokens: &[u16],
+        max_new: usize,
+    ) -> (Vec<f32>, Vec<u16>) {
+        let mut caches = self.empty_caches();
+        let mut logits = self.prefill(eng, tokens, &mut caches);
+        let mut generated = Vec::with_capacity(max_new);
+        for _ in 0..max_new {
+            let next = QuantTransformer::argmax(&logits);
+            generated.push(next);
+            logits = self.decode(eng, next, &mut caches);
+        }
+        (logits, generated)
     }
 
     /// Greedy next token (deterministic tie-break on the lowest id).
@@ -473,6 +574,74 @@ mod tests {
             last = model.decode(&eng, t, &mut caches);
         }
         assert_eq!(last, model.logits(&eng, &toks));
+    }
+
+    /// The continuous-batching step: coalescing several independent
+    /// sequences (mixed chunked prefill + decode phases) into one
+    /// `forward_step` is bit-identical to stepping each alone.
+    #[test]
+    fn forward_step_coalesced_matches_individual_sequences() {
+        let model = QuantTransformer::tiny_native();
+        let eng = Tcu::new(ArchKind::SystolicOs, 8, Variant::EntOurs).engine();
+        let prompts = [prompt(5), prompt(3), prompt(7)];
+
+        // Reference: each sequence alone — full prefill then one decode.
+        let mut solo = Vec::new();
+        for p in &prompts {
+            let mut caches = model.empty_caches();
+            model.prefill(&eng, p, &mut caches);
+            solo.push(model.decode(&eng, 9, &mut caches));
+        }
+
+        // Coalesced: feed the prompts in chunks of ≤ 3 positions (the
+        // sequences run out of prompt at different steps, so the batch
+        // mixes prefill and decode rows), then decode token 9 together.
+        let mut caches: Vec<Vec<KvCache>> =
+            (0..prompts.len()).map(|_| model.empty_caches()).collect();
+        let mut fed = [0usize; 3];
+        let mut last_logits: Vec<Vec<f32>> = vec![Vec::new(); 3];
+        loop {
+            let mut seqs = Vec::new();
+            let mut idx = Vec::new();
+            for (i, c) in caches.iter_mut().enumerate() {
+                let left = prompts[i].len() - fed[i];
+                if left == 0 {
+                    continue;
+                }
+                let take = left.min(3);
+                seqs.push(StepSeq {
+                    tokens: &prompts[i][fed[i]..fed[i] + take],
+                    caches: c,
+                });
+                idx.push((i, take));
+            }
+            if seqs.is_empty() {
+                break;
+            }
+            for ((i, take), l) in idx.into_iter().zip(model.forward_step(&eng, &mut seqs)) {
+                fed[i] += take;
+                last_logits[i] = l;
+            }
+        }
+        let nine = [9u16];
+        let mut seqs: Vec<StepSeq> = caches
+            .iter_mut()
+            .map(|c| StepSeq {
+                tokens: &nine,
+                caches: c,
+            })
+            .collect();
+        let coalesced = model.forward_step(&eng, &mut seqs);
+        assert_eq!(coalesced, solo, "coalesced step diverged from solo decode");
+        // And the chunked-prefill logits agree with a fresh full prefill.
+        for (i, p) in prompts.iter().enumerate() {
+            let mut fresh = model.empty_caches();
+            assert_eq!(
+                last_logits[i],
+                model.prefill(&eng, p, &mut fresh),
+                "chunked prefill diverged for sequence {i}"
+            );
+        }
     }
 
     /// Cache truncation rewinds decode exactly.

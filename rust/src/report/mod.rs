@@ -337,6 +337,72 @@ pub fn transformer() -> String {
     s
 }
 
+/// Serving-scheduler scorecard — wall-clock, not a paper figure: the
+/// continuous-batching step loop vs the window batcher under one
+/// open-loop synthetic load (`coordinator::loadgen`), reporting
+/// completion, tail latency, token throughput, and engine-shard
+/// occupancy. Excluded from `ent report all` because it measures this
+/// machine, not the model.
+pub fn serving() -> String {
+    use crate::coordinator::{loadgen, Config, Coordinator};
+    let load = loadgen::LoadGen {
+        rate_per_s: 150.0,
+        duration_ms: 200,
+        prompt_len: 8,
+        max_new_tokens: 2,
+        image_mix: 0.25,
+        seed: 0x5EE,
+    };
+    let mut t = Table::new(format!(
+        "Serving scheduler — open-loop load ({:.0} req/s, prompt {}, +{} decode, {:.0}% CNN mix)",
+        load.rate_per_s,
+        load.prompt_len,
+        load.max_new_tokens,
+        load.image_mix * 100.0
+    ))
+    .header(&[
+        "scheduler",
+        "sent",
+        "done",
+        "rejected",
+        "p50 µs",
+        "p99 µs",
+        "tokens/s",
+        "occupancy",
+    ]);
+    for (name, cfg) in [
+        ("continuous", Config::continuous(4)),
+        ("window", Config::native(4)),
+    ] {
+        let coord = match Coordinator::start(cfg) {
+            Ok(c) => c,
+            Err(e) => return format!("serving report unavailable: {e}\n"),
+        };
+        let r = loadgen::run(&coord, &load);
+        let (p50, p99) = r
+            .latency_us
+            .map(|l| (l.median, l.p99))
+            .unwrap_or((f64::NAN, f64::NAN));
+        t.row(vec![
+            name.into(),
+            r.sent.to_string(),
+            r.completed.to_string(),
+            r.rejected.to_string(),
+            f(p50, 0),
+            f(p99, 0),
+            f(r.tokens_per_s, 0),
+            pct(r.occupancy),
+        ]);
+        coord.shutdown();
+    }
+    let mut s = t.render();
+    s.push_str(
+        "wall-clock on this host — trajectory tracked by benches/serve_perf.rs \
+         (BENCH_serve.json)\n",
+    );
+    s
+}
+
 /// Everything at once (the `ent report all` target).
 pub fn all_reports() -> String {
     let mut s = String::new();
@@ -390,6 +456,15 @@ mod tests {
             assert!(s.contains(v.name()), "missing {}", v.name());
         }
         assert!(s.contains("KV MAC saving"));
+    }
+
+    #[test]
+    fn serving_report_covers_both_schedulers() {
+        let s = serving();
+        assert!(s.contains("continuous"), "{s}");
+        assert!(s.contains("window"), "{s}");
+        assert!(s.contains("tokens/s"), "{s}");
+        assert!(s.contains("occupancy"), "{s}");
     }
 
     #[test]

@@ -241,6 +241,28 @@ impl Runtime {
         Ok(self.lm.logits(&self.engine, tokens))
     }
 
+    /// Execute the transformer artifact with generation: prefill the
+    /// prompt, then greedily decode `max_new` tokens against the KV
+    /// cache. Returns the logits after the last processed position plus
+    /// the generated tokens — the same contract as the coordinator's
+    /// native path, so artifact-backed and native serving stay
+    /// bit-identical.
+    pub fn transformer_generate(
+        &self,
+        name: &str,
+        tokens: &[u16],
+        max_new: usize,
+    ) -> Result<(Vec<f32>, Vec<u16>)> {
+        match self.exe(name)? {
+            Artifact::Transformer => {}
+            other => bail!("artifact '{name}' is not a transformer ({other:?})"),
+        }
+        if let Err(e) = self.lm.check_request(tokens, max_new) {
+            bail!("transformer_generate {name}: {e}");
+        }
+        Ok(self.lm.generate(&self.engine, tokens, max_new))
+    }
+
     /// Execute the standalone encoder artifact: int8 vector → int32
     /// codes (wire bits | sign << 8 — the cross-layer test's format).
     pub fn encode_i8(&self, name: &str, values: &[i8]) -> Result<Vec<i32>> {

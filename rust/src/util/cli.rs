@@ -112,6 +112,15 @@ impl Args {
         }
     }
 
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::BadValue(name.into(), v.into())),
+        }
+    }
+
     pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, CliError> {
         match self.get(name) {
             None => Ok(default),
@@ -196,8 +205,17 @@ mod tests {
     fn defaults_apply() {
         let a = Args::parse(&[], &specs()).unwrap();
         assert_eq!(a.get_usize("size", 16).unwrap(), 16);
+        assert_eq!(a.get_u64("size", 9).unwrap(), 9);
         assert_eq!(a.get_or("size", "x"), "x");
         assert!(!a.flag("json"));
+    }
+
+    #[test]
+    fn u64_parses_and_rejects() {
+        let a = Args::parse(&sv(&["--size", "123456789012"]), &specs()).unwrap();
+        assert_eq!(a.get_u64("size", 0).unwrap(), 123_456_789_012);
+        let b = Args::parse(&sv(&["--size", "-3"]), &specs()).unwrap();
+        assert!(b.get_u64("size", 0).is_err());
     }
 
     #[test]

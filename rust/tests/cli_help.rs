@@ -5,12 +5,13 @@
 
 use std::process::Command;
 
-const EXPECTED_SUBCOMMANDS: [&str; 8] = [
+const EXPECTED_SUBCOMMANDS: [&str; 9] = [
     "report",
     "simulate",
     "soc",
     "transformer",
     "serve",
+    "loadgen",
     "sweep",
     "selftest",
     "help",
@@ -65,7 +66,7 @@ fn unknown_subcommand_fails_with_usage() {
 
 #[test]
 fn subcommand_help_exits_zero() {
-    for cmd in ["simulate", "soc", "transformer", "serve", "sweep"] {
+    for cmd in ["simulate", "soc", "transformer", "serve", "loadgen", "sweep"] {
         let (ok, text) = run_ent(&[cmd, "--help"]);
         assert!(ok, "ent {cmd} --help must exit 0");
         assert!(text.contains("options"), "ent {cmd} --help: {text}");

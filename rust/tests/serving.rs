@@ -1,10 +1,17 @@
 //! End-to-end serving integration: coordinator + dynamic batcher +
 //! artifact runtime under concurrent load, including failure injection.
 //! The artifact-backed tests gate on built artifacts (like
-//! `cross_layer`); the native-backend tests at the bottom always run —
-//! they serve straight through the engine shards.
+//! `cross_layer`); the native-backend tests always run — they serve
+//! straight through the engine shards. The mixed-traffic tests at the
+//! bottom cover the continuous-batching scheduler's fairness: CNN jobs
+//! and token requests interleaved through one coordinator, with no
+//! starvation and results identical to isolated runs.
 
-use ent::coordinator::{Config, Coordinator, InferRequest};
+use ent::arch::{ArchKind, Tcu};
+use ent::coordinator::{Config, Coordinator, InferRequest, TokenRequest};
+use ent::nn::forward::QuantCnn;
+use ent::nn::transformer::QuantTransformer;
+use ent::pe::Variant;
 use ent::runtime::default_artifact_dir;
 use ent::util::prng::Rng;
 
@@ -124,6 +131,87 @@ fn native_shards_serve_concurrent_requests() {
     });
     let m = coord.metrics();
     assert_eq!(m.requests, n_clients * per_client);
+    assert_eq!(m.errors, 0);
+    coord.shutdown();
+}
+
+/// Mixed-traffic fairness through the continuous-batching scheduler:
+/// interleaved CNN image jobs and token-generation requests submitted
+/// concurrently all complete (no starvation — a starved class would
+/// hang the blocking `recv`s), with logits/outputs bit-identical to
+/// isolated runs of each workload.
+#[test]
+fn continuous_mixed_traffic_fair_and_identical_to_isolated() {
+    // Isolated references on one engine of the native shard geometry.
+    let eng = Tcu::new(ArchKind::SystolicOs, 16, Variant::EntOurs).engine();
+    let cnn = QuantCnn::tiny_native();
+    let lm = QuantTransformer::tiny_native();
+    let mut rng = Rng::new(0xFA1);
+    let images: Vec<Vec<i8>> = (0..4).map(|_| rng.i8_vec(cnn.input_len())).collect();
+    let prompts: Vec<Vec<u16>> = (0..4)
+        .map(|s| (0..5 + s).map(|i| ((i * 13 + s * 7 + 1) % 64) as u16).collect())
+        .collect();
+    let image_refs: Vec<Vec<f32>> = images.iter().map(|img| cnn.forward(&eng, img)).collect();
+    let token_refs: Vec<(Vec<f32>, Vec<u16>)> =
+        prompts.iter().map(|p| lm.generate(&eng, p, 2)).collect();
+
+    let coord = Coordinator::start(Config::continuous(2)).expect("continuous coordinator");
+    std::thread::scope(|scope| {
+        for (img, expect) in images.iter().zip(&image_refs) {
+            let coord = &coord;
+            scope.spawn(move || {
+                let r = coord
+                    .infer(InferRequest { image: img.clone() })
+                    .expect("image through mixed traffic");
+                assert_eq!(&r.logits, expect, "mixed traffic changed CNN logits");
+            });
+        }
+        for (p, (want_logits, want_gen)) in prompts.iter().zip(&token_refs) {
+            let coord = &coord;
+            scope.spawn(move || {
+                let r = coord
+                    .infer_tokens(TokenRequest::generate(p.clone(), 2))
+                    .expect("tokens through mixed traffic");
+                assert_eq!(&r.logits, want_logits, "mixed traffic changed logits");
+                assert_eq!(&r.generated, want_gen, "mixed traffic changed generation");
+            });
+        }
+    });
+    let m = coord.metrics();
+    assert_eq!(m.requests, 8, "every request of both kinds completed");
+    assert_eq!(m.errors, 0);
+    assert_eq!(m.rejected, 0, "default admission bounds must not starve");
+    assert!(m.tokens > 0);
+    coord.shutdown();
+}
+
+/// Window-mode fairness baseline: the same interleaving through the
+/// window batcher also completes both classes — the schedulers differ
+/// in latency shape, never in results or liveness.
+#[test]
+fn window_mixed_traffic_completes_both_classes() {
+    let coord = Coordinator::start(Config::native(2)).expect("native coordinator");
+    let input_len = coord.model().input_len();
+    std::thread::scope(|scope| {
+        for c in 0..2 {
+            let coord = &coord;
+            scope.spawn(move || {
+                let mut rng = Rng::new(0x31 + c as u64);
+                for _ in 0..2 {
+                    coord
+                        .infer(InferRequest {
+                            image: rng.i8_vec(input_len),
+                        })
+                        .expect("image");
+                    coord
+                        .infer_tokens(TokenRequest::generate(vec![1, 2, 3], 1))
+                        .expect("tokens");
+                }
+            });
+        }
+    });
+    let m = coord.metrics();
+    assert_eq!(m.requests, 8);
     assert_eq!(m.errors, 0);
     coord.shutdown();
 }

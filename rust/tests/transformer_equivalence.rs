@@ -50,7 +50,7 @@ fn transformer_logits_invariant_under_batch_and_shard_count() {
     let solo = {
         let coord = Coordinator::start(Config::native(1)).expect("1-shard coordinator");
         let r = coord
-            .infer_tokens(TokenRequest { tokens: toks.clone() })
+            .infer_tokens(TokenRequest::prefill(toks.clone()))
             .expect("solo token inference");
         coord.shutdown();
         r.logits
@@ -63,7 +63,7 @@ fn transformer_logits_invariant_under_batch_and_shard_count() {
             let expect = solo.clone();
             scope.spawn(move || {
                 let r = coord
-                    .infer_tokens(TokenRequest { tokens: toks })
+                    .infer_tokens(TokenRequest::prefill(toks))
                     .expect("batched token inference");
                 assert_eq!(r.logits, expect, "batch/shard count changed logits");
             });
