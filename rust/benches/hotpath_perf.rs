@@ -13,9 +13,10 @@
 //! and ns/MAC per arch × variant — so the perf trajectory is tracked
 //! across PRs.
 
-use ent::arch::{ArchKind, Scale, Tcu, TcuEngine, ALL_ARCHS};
+use ent::arch::{ArchKind, MatOperand, Scale, Tcu, TcuEngine, ALL_ARCHS};
 use ent::coordinator::{Config, Coordinator, InferRequest};
 use ent::encoding::packed::lut_i8;
+use ent::encoding::prepacked::{CachedWeight, EncodeCache};
 use ent::nn::zoo;
 use ent::pe::{Variant, ALL_VARIANTS};
 use ent::runtime::{default_artifact_dir, Runtime};
@@ -51,20 +52,50 @@ fn main() {
     });
 
     // --- arch × variant GEMM grid at the 32×32 (256 GOPS) scale ---
-    // 32³ GEMM per iteration → GEMM/s and ns/MAC per engine.
+    // 32³ GEMM per iteration → GEMM/s and ns/MAC per engine, both with
+    // the stationary operand encoded on the fly (`ns_per_mac`) and
+    // through the warm encode-cache path (`ns_per_mac_cached`: a
+    // `CachedWeight::resolve` per GEMM — the mutex + probe the serving
+    // helpers really pay — then the prepacked entry; the A operand is
+    // the weight side by the repo's GEMM convention). Non-EN-T variants
+    // mirror the serving helpers' gate and skip the resolve, so cached
+    // ≈ uncached there by construction.
     let (gm, gk, gn) = (32usize, 32usize, 32usize);
     let ga = rng.i8_vec(gm * gk);
     let gb = rng.i8_vec(gk * gn);
+    let wa = CachedWeight::new(ga.clone(), gm, gk);
+    let cache = EncodeCache::new(64 << 20);
     let macs = (gm * gk * gn) as f64;
     for arch in ALL_ARCHS {
         for variant in ALL_VARIANTS {
             let size = arch.size_for_scale(Scale::Gops256);
             let eng = Tcu::new(arch, size, variant).engine();
             let name = format!("gemm32_{}_{}", arch.short_name(), variant.name());
-            let r = suite.bench(&name, || {
-                black_box(eng.matmul(&ga, &gb, gm, gk, gn));
-            });
-            json_rows.push(grid_row(arch, variant, gm, gk, gn, macs, r));
+            let plain = suite
+                .bench(&name, || {
+                    black_box(eng.matmul(&ga, &gb, gm, gk, gn));
+                })
+                .clone();
+            let mut c = vec![0i64; gm * gn];
+            let cached = suite
+                .bench(&format!("{name}_cached"), || {
+                    if variant == Variant::EntOurs {
+                        let pm = wa.resolve(&cache);
+                        eng.matmul_prepacked_into(
+                            MatOperand::Packed(&pm),
+                            MatOperand::Raw(&gb),
+                            &mut c,
+                            gm,
+                            gk,
+                            gn,
+                        );
+                    } else {
+                        eng.matmul_into(&ga, &gb, &mut c, gm, gk, gn);
+                    }
+                    black_box(&c);
+                })
+                .clone();
+            json_rows.push(grid_row(arch, variant, gm, gk, gn, macs, &plain, Some(&cached)));
         }
     }
 
@@ -73,9 +104,11 @@ fn main() {
     let pa = rng.i8_vec(pm * pk);
     let pb = rng.i8_vec(pk * pn);
     let peng = Tcu::new(ArchKind::SystolicOs, 16, Variant::EntOurs).engine();
-    let r = suite.bench("gemm96x64x48_parallel_bands", || {
-        black_box(peng.matmul(&pa, &pb, pm, pk, pn));
-    });
+    let r = suite
+        .bench("gemm96x64x48_parallel_bands", || {
+            black_box(peng.matmul(&pa, &pb, pm, pk, pn));
+        })
+        .clone();
     json_rows.push(grid_row(
         ArchKind::SystolicOs,
         Variant::EntOurs,
@@ -83,7 +116,8 @@ fn main() {
         pk,
         pn,
         (pm * pk * pn) as f64,
-        r,
+        &r,
+        None,
     ));
 
     // --- L3 analytics (per-request digital twin work) ---
@@ -187,6 +221,7 @@ fn main() {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn grid_row(
     arch: ArchKind,
     variant: Variant,
@@ -195,8 +230,9 @@ fn grid_row(
     n: usize,
     macs: f64,
     r: &BenchResult,
+    cached: Option<&BenchResult>,
 ) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         ("name", Json::str(r.name.clone())),
         ("arch", Json::str(arch.short_name())),
         ("variant", Json::str(variant.name())),
@@ -206,5 +242,13 @@ fn grid_row(
         ("ns_per_iter", Json::num(r.ns_per_iter.mean)),
         ("gemms_per_s", Json::num(r.throughput())),
         ("ns_per_mac", Json::num(r.ns_per_iter.mean / macs)),
-    ])
+    ];
+    // Cached-vs-uncached contrast: the same GEMM with the stationary
+    // operand pre-encoded (weight cache resident). Gated by
+    // scripts/bench_compare like ns_per_mac.
+    if let Some(c) = cached {
+        fields.push(("ns_per_iter_cached", Json::num(c.ns_per_iter.mean)));
+        fields.push(("ns_per_mac_cached", Json::num(c.ns_per_iter.mean / macs)));
+    }
+    Json::obj(fields)
 }

@@ -26,10 +26,20 @@
 //! EN-T(Ours) encodes by one lookup in the packed LUT
 //! ([`crate::encoding::packed::INT8_LUT`]) — zero heap allocations per
 //! operand on every route.
+//!
+//! [`TcuEngine::matmul_prepacked_into`] is the encode-reuse entry on
+//! top of that: a weight operand can arrive as a
+//! [`PrePackedMatrix`] (codes pre-derived once, cached by
+//! [`crate::encoding::prepacked::EncodeCache`]), in which case the
+//! EN-T(Ours) route performs zero encoder lookups for it — the
+//! functional twin of the planner invariant
+//! [`TilePlan::stats_cached`], which charges zero weight-encode events
+//! for cache-resident weights.
 
 use crate::arch::{ArchKind, Tcu, OPERAND_BITS};
 use crate::arith::multiplier::{MultKind, Multiplier};
 use crate::encoding::packed::{lut_i8, PackedCode};
+use crate::encoding::prepacked::PrePackedMatrix;
 use crate::pe::Variant;
 use crate::sim::dataflow::{GemmShape, GemmStats};
 use crate::sim::planner::TilePlan;
@@ -72,6 +82,36 @@ impl Datapath {
             Datapath::EntLut(m) => m.mul_packed(code, b),
             // Non-EN-T variants never receive packed codes.
             _ => unreachable!("mul_code on a non-EN-T datapath"),
+        }
+    }
+}
+
+/// One GEMM operand as seen by [`TcuEngine::matmul_prepacked_into`]:
+/// raw int8 values, or a [`PrePackedMatrix`] carrying both the raw
+/// values (for the non-EN-T fallback) and the pre-encoded EN-T codes
+/// (for the reuse path).
+#[derive(Clone, Copy, Debug)]
+pub enum MatOperand<'a> {
+    /// Plain row-major int8 values.
+    Raw(&'a [i8]),
+    /// A pre-encoded weight matrix (raw + codes).
+    Packed(&'a PrePackedMatrix),
+}
+
+impl<'a> MatOperand<'a> {
+    /// The raw int8 view, whichever form the operand is in.
+    pub fn raw(self) -> &'a [i8] {
+        match self {
+            MatOperand::Raw(r) => r,
+            MatOperand::Packed(p) => p.raw(),
+        }
+    }
+
+    /// The pre-encoded form, if this operand carries one.
+    pub fn packed(self) -> Option<&'a PrePackedMatrix> {
+        match self {
+            MatOperand::Raw(_) => None,
+            MatOperand::Packed(p) => Some(p),
         }
     }
 }
@@ -137,6 +177,70 @@ pub trait TcuEngine: Send + Sync {
         let mut c = vec![0i64; m * n];
         self.matmul_into(a, b, &mut c, m, k, n);
         c
+    }
+
+    /// Bit-accurate GEMM `C = A×B` where either operand may arrive
+    /// **pre-encoded** ([`MatOperand::Packed`]) — the encode-reuse entry
+    /// the weight-side callers use. On the EN-T(Ours) variant the packed
+    /// side's codes feed the RME datapath directly, so the GEMM performs
+    /// **zero** encoder lookups for that operand (the planner-side
+    /// invariant: [`TilePlan::stats_cached`] charges zero weight-encode
+    /// events). Every other variant — and a call with no packed operand
+    /// — falls back to [`TcuEngine::matmul_into`] on the raw views, so
+    /// the five-architecture × three-variant grid stays uniform.
+    ///
+    /// Results are bit-identical to [`TcuEngine::matmul_into`] on every
+    /// route: the codes come from the same compile-time LUT the array
+    /// edges use, and every datapath computes exact integer products
+    /// (locked by `tests::prepacked_matches_plain_all_arch_variants`
+    /// and the cache-equivalence suite in `tests/encode_cache.rs`).
+    fn matmul_prepacked_into(
+        &self,
+        a: MatOperand<'_>,
+        b: MatOperand<'_>,
+        c: &mut [i64],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        let (ar, br) = (a.raw(), b.raw());
+        assert_eq!(ar.len(), m * k, "A shape");
+        assert_eq!(br.len(), k * n, "B shape");
+        assert_eq!(c.len(), m * n, "C shape");
+        if let Some(p) = a.packed() {
+            assert_eq!(p.shape(), (m, k), "packed A shape");
+        }
+        if let Some(p) = b.packed() {
+            assert_eq!(p.shape(), (k, n), "packed B shape");
+        }
+        let consumes_codes = matches!(self.tcu().variant, Variant::EntOurs)
+            && (a.packed().is_some() || b.packed().is_some());
+        if !consumes_codes {
+            // Baseline re-encodes inside every PE and EN-T(MBE) Booth-
+            // recodes on the fly — neither can consume EN-T codes, so
+            // they take the existing path unchanged.
+            return self.matmul_into(ar, br, c, m, k, n);
+        }
+        c.fill(0);
+        if m == 0 || k == 0 || n == 0 {
+            return;
+        }
+        let mul = Multiplier::new(MultKind::EntRme, OPERAND_BITS);
+        let macs = (m as u64) * (k as u64) * (n as u64);
+        let bands = par_bands(self.tcu(), macs, m);
+        if bands <= 1 {
+            run_band_prepacked(&mul, a, b, c, 0, m, k, n);
+            return;
+        }
+        let rows_per = m.div_ceil(bands);
+        std::thread::scope(|scope| {
+            for (bi, band) in c.chunks_mut(rows_per * n).enumerate() {
+                scope.spawn(move || {
+                    let rows = band.len() / n;
+                    run_band_prepacked(&mul, a, b, band, bi * rows_per, rows, k, n);
+                });
+            }
+        });
     }
 
     /// Event counts (cycles, port traffic, psum spills, encoder
@@ -205,6 +309,51 @@ fn run_band<E: TcuEngine + ?Sized>(
             ki += kk;
         }
         mi += mm;
+    }
+}
+
+/// One output row band of the prepacked GEMM: the packed operand's
+/// codes feed [`Multiplier::mul_packed`] directly — zero encoder
+/// lookups. Integer accumulation is order-independent and every product
+/// is exact, so the result is bit-identical to the tile-walked
+/// dataflows. When both operands are packed, A's codes win (A is the
+/// multiplicand path on four of the five architectures).
+#[allow(clippy::too_many_arguments)]
+fn run_band_prepacked(
+    mul: &Multiplier,
+    a: MatOperand<'_>,
+    b: MatOperand<'_>,
+    c_band: &mut [i64],
+    r0: usize,
+    rows: usize,
+    k: usize,
+    n: usize,
+) {
+    let (ar, br) = (a.raw(), b.raw());
+    match (a.packed(), b.packed()) {
+        (Some(pa), _) => {
+            for i in 0..rows {
+                for p in 0..k {
+                    let code = pa.code((r0 + i) * k + p);
+                    let row = &mut c_band[i * n..(i + 1) * n];
+                    for (cv, &bv) in row.iter_mut().zip(&br[p * n..(p + 1) * n]) {
+                        *cv += mul.mul_packed(code, bv as i64);
+                    }
+                }
+            }
+        }
+        (None, Some(pb)) => {
+            for i in 0..rows {
+                for p in 0..k {
+                    let av = ar[(r0 + i) * k + p] as i64;
+                    let row = &mut c_band[i * n..(i + 1) * n];
+                    for (j, cv) in row.iter_mut().enumerate() {
+                        *cv += mul.mul_packed(pb.code(p * n + j), av);
+                    }
+                }
+            }
+        }
+        (None, None) => unreachable!("prepacked band without a packed operand"),
     }
 }
 
@@ -405,6 +554,53 @@ mod tests {
             }
             assert_eq!(c, gemm_ref(&a, &b, m, k, n), "{}", arch.name());
         }
+    }
+
+    /// The prepacked entry is bit-identical to the plain path across
+    /// the full architecture × variant grid, whichever side carries the
+    /// codes (non-EN-T variants exercise the fallback route).
+    #[test]
+    fn prepacked_matches_plain_all_arch_variants() {
+        use crate::encoding::prepacked::PrePackedMatrix;
+        let mut rng = Rng::new(0xEC);
+        let (m, k, n) = (11, 19, 9);
+        let a = rng.i8_vec(m * k);
+        let b = rng.i8_vec(k * n);
+        let pa = PrePackedMatrix::encode(&a, m, k);
+        let pb = PrePackedMatrix::encode(&b, k, n);
+        for arch in ALL_ARCHS {
+            let size = if arch == ArchKind::Cube3d { 4 } else { 8 };
+            for variant in ALL_VARIANTS {
+                let eng = engine_for(Tcu::new(arch, size, variant));
+                let want = gemm_ref(&a, &b, m, k, n);
+                for (oa, ob) in [
+                    (MatOperand::Packed(&pa), MatOperand::Raw(&b)),
+                    (MatOperand::Raw(&a), MatOperand::Packed(&pb)),
+                    (MatOperand::Packed(&pa), MatOperand::Packed(&pb)),
+                    (MatOperand::Raw(&a), MatOperand::Raw(&b)),
+                ] {
+                    let mut c = vec![0i64; m * n];
+                    eng.matmul_prepacked_into(oa, ob, &mut c, m, k, n);
+                    assert_eq!(c, want, "{} {}", arch.name(), variant.name());
+                }
+            }
+        }
+    }
+
+    /// The prepacked path takes the threaded row-band split on large
+    /// problems and still matches the reference exactly.
+    #[test]
+    fn prepacked_parallel_bands_match_reference() {
+        use crate::encoding::prepacked::PrePackedMatrix;
+        let mut rng = Rng::new(0xED);
+        let (m, k, n) = (96, 64, 48); // 294912 MACs > 2·2^16
+        let a = rng.i8_vec(m * k);
+        let b = rng.i8_vec(k * n);
+        let pb = PrePackedMatrix::encode(&b, k, n);
+        let eng = engine_for(Tcu::new(ArchKind::SystolicOs, 16, Variant::EntOurs));
+        let mut c = vec![0i64; m * n];
+        eng.matmul_prepacked_into(MatOperand::Raw(&a), MatOperand::Packed(&pb), &mut c, m, k, n);
+        assert_eq!(c, gemm_ref(&a, &b, m, k, n));
     }
 
     /// Engines are usable as trait objects (the serving path boxes

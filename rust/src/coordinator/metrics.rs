@@ -11,9 +11,10 @@
 //! derive from the cumulative counters, so they survive any number of
 //! batching windows or step-loop iterations.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use crate::encoding::prepacked::{CacheStats, EncodeCache};
 use crate::util::stats::Summary;
 
 /// Size of the recent-latency reservoir backing the percentile summary.
@@ -43,6 +44,9 @@ struct Inner {
     // Bounded ring of the most recent request latencies.
     latencies_us: Vec<f64>,
     lat_next: usize,
+    /// The executor's encoded-weight cache, when serving with one —
+    /// snapshots surface its hit/miss/evict counters.
+    encode_cache: Option<Arc<EncodeCache>>,
 }
 
 /// Point-in-time view of the aggregates. Pure read: snapshotting never
@@ -70,6 +74,9 @@ pub struct Snapshot {
     pub busy_ns: u64,
     pub capacity_ns: u64,
     pub uptime_s: f64,
+    /// Encoded-weight cache counters (`None` when serving without a
+    /// cache — see `Config::encode_cache_bytes`).
+    pub encode_cache: Option<CacheStats>,
 }
 
 impl Metrics {
@@ -87,8 +94,16 @@ impl Metrics {
                 started: Instant::now(),
                 latencies_us: Vec::new(),
                 lat_next: 0,
+                encode_cache: None,
             }),
         }
+    }
+
+    /// Surface `cache`'s counters in every subsequent snapshot (the
+    /// executor calls this at startup when serving with an
+    /// encoded-weight cache).
+    pub fn attach_encode_cache(&self, cache: Arc<EncodeCache>) {
+        self.inner.lock().unwrap().encode_cache = Some(cache);
     }
 
     pub fn record(&self, latency_us: u64, batch: usize) {
@@ -155,6 +170,7 @@ impl Metrics {
             busy_ns: g.busy_ns,
             capacity_ns: g.capacity_ns,
             uptime_s,
+            encode_cache: g.encode_cache.as_ref().map(|c| c.stats()),
         }
     }
 }
@@ -221,6 +237,20 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.rejected, 2);
         assert_eq!(s.occupancy, 0.5);
+    }
+
+    /// Encoded-weight-cache counters ride the snapshot once attached.
+    #[test]
+    fn encode_cache_counters_surface_in_snapshot() {
+        let m = Metrics::new();
+        assert!(m.snapshot().encode_cache.is_none());
+        let cache = Arc::new(EncodeCache::new(1 << 16));
+        m.attach_encode_cache(cache.clone());
+        let w = crate::encoding::prepacked::CachedWeight::new(vec![1, 2, 3, 4], 2, 2);
+        w.resolve(&cache);
+        w.resolve(&cache);
+        let s = m.snapshot().encode_cache.expect("cache attached");
+        assert_eq!((s.hits, s.misses), (1, 1));
     }
 
     /// The latency reservoir is bounded; totals keep counting past it.

@@ -31,6 +31,15 @@
 //! integer GEMMs, so batching and sharding never change logits — the
 //! same invariant as the CNN path.
 //!
+//! The native backend can serve through an **encoded-weight cache**
+//! ([`Config::encode_cache_bytes`], `ent serve --encode-cache`): one
+//! bounded [`EncodeCache`](crate::encoding::prepacked::EncodeCache) is
+//! shared by the CNN, the transformer, and every engine shard, so each
+//! weight matrix is EN-T-encoded exactly once and every subsequent
+//! tile, decode step, and request reuses the codes. Logits are
+//! bit-identical with the cache on or off; hit/miss/evict counters ride
+//! the metrics snapshots and the `ent report serving` scorecard.
+//!
 //! Two scheduling modes ([`ServeMode`]) share this front-end:
 //!
 //! * [`ServeMode::Window`] — the original dynamic batching window:
@@ -134,6 +143,16 @@ pub struct Config {
     /// arch/variant of the native backend's engine shards).
     pub twin_arch: ArchKind,
     pub twin_variant: Variant,
+    /// Byte budget of the encoded-weight cache
+    /// ([`crate::encoding::prepacked::EncodeCache`]) shared by the
+    /// native backend's models and engine shards; 0 disables it (every
+    /// GEMM encodes its stationary operand on the fly). With a budget,
+    /// weights are encoded once on first touch and every later tile,
+    /// decode step, and request reuses the codes — `ent serve
+    /// --encode-cache <bytes>`. Cache counters ride the metrics
+    /// snapshots. Ignored by the artifacts backend (the AOT runtime
+    /// owns its own operand layout).
+    pub encode_cache_bytes: usize,
 }
 
 impl Default for Config {
@@ -146,6 +165,7 @@ impl Default for Config {
             mode: ServeMode::Window,
             twin_arch: ArchKind::SystolicOs,
             twin_variant: Variant::EntOurs,
+            encode_cache_bytes: 0,
         }
     }
 }
@@ -487,7 +507,20 @@ fn executor_thread(
             Executor::Artifacts(rt)
         }
         Backend::Native { shards } => {
-            let model = QuantCnn::tiny_native();
+            let mut model = QuantCnn::tiny_native();
+            let mut lm = QuantTransformer::tiny_native();
+            // One encoded-weight cache shared by both models and every
+            // engine shard: the stationary operand of each weight GEMM
+            // is encoded once and reused across tiles, steps, and
+            // requests (bit-identical either way).
+            if cfg.encode_cache_bytes > 0 {
+                let cache = Arc::new(crate::encoding::prepacked::EncodeCache::new(
+                    cfg.encode_cache_bytes,
+                ));
+                model = model.with_encode_cache(cache.clone());
+                lm = lm.with_encode_cache(cache.clone());
+                metrics.attach_encode_cache(cache);
+            }
             // The native model's geometry is fixed; a mismatched
             // ModelSpec would slice batches at the wrong offsets, so
             // fail startup instead.
@@ -501,7 +534,7 @@ fn executor_thread(
             let size = if cfg.twin_arch == ArchKind::Cube3d { 8 } else { 16 };
             Executor::Native {
                 model,
-                lm: QuantTransformer::tiny_native(),
+                lm,
                 shards: (0..(*shards).max(1))
                     .map(|_| Tcu::new(cfg.twin_arch, size, cfg.twin_variant).engine())
                     .collect(),

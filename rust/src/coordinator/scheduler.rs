@@ -40,6 +40,15 @@
 //! shards — produces bit-identical logits and generated tokens to
 //! running each request alone ([`super::generate_sequential`]). Locked
 //! across all five architectures by `tests/serve_equivalence.rs`.
+//!
+//! **Encode reuse**: when the coordinator serves with an
+//! encoded-weight cache (`Config::encode_cache_bytes`), every coalesced
+//! step GEMM — Q/K/V, MLP, head, and the CNN conv/FC GEMMs riding the
+//! same task list — resolves its stationary weights to pre-encoded
+//! codes shared across *all* in-flight sequences and steps, so
+//! steady-state decode performs zero weight-encode lookups per step
+//! (the cache equivalence suite in `tests/encode_cache.rs` pins both
+//! the bit-identity and the counter behaviour).
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};

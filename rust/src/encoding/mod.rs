@@ -13,10 +13,18 @@
 //! packed into one `u64` (plus the sign line), with a compile-time
 //! 256-entry LUT for int8 so encoding an operand is one table lookup and
 //! zero heap allocations.
+//!
+//! [`prepacked`] lifts that reuse across whole GEMMs: a
+//! [`prepacked::PrePackedMatrix`] stores a weight matrix's codes
+//! row-major, and the bounded [`prepacked::EncodeCache`] shares them
+//! across tiles, decode steps, and serving requests, so steady-state
+//! weight GEMMs perform zero encoder activations (see
+//! [`crate::sim::planner::TilePlan::stats_cached`]).
 
 pub mod ent;
 pub mod mbe;
 pub mod packed;
+pub mod prepacked;
 
 use crate::gates::Cost;
 

@@ -1,0 +1,565 @@
+//! Pre-encoded weight matrices and the bounded encode cache — the
+//! paper's "computation reuse" argument promoted from a per-element
+//! trick to a subsystem.
+//!
+//! The EN-T hot path already encodes each multiplicand element only
+//! once per *tile pass* (one [`lut_i8`] lookup at the array edge, see
+//! [`crate::arch::engine`]). But model weights are constant across
+//! every tile, every decode step, and every request the serving
+//! scheduler admits — so even that once-per-pass encode is redundant
+//! work after the first GEMM. This module holds the derived form:
+//!
+//! * [`PrePackedMatrix`] — a weight matrix stored as its raw int8
+//!   values **plus** the row-major [`PackedCode`] buffer (the n+1-bit
+//!   EN-T wire format per element) and a content fingerprint;
+//! * [`CachedWeight`] — a raw weight tensor with a stable identity, the
+//!   key under which its encoded form is cached;
+//! * [`EncodeCache`] — a bounded, thread-safe LRU over a global byte
+//!   budget with hit/miss/evict/invalidation counters, shared by every
+//!   engine shard of a serving coordinator (encodes run outside its
+//!   lock).
+//!
+//! The planner-level counterpart is
+//! [`TilePlan::stats_cached`](crate::sim::planner::TilePlan::stats_cached):
+//! with the cache resident, steady-state GEMMs charge **zero**
+//! weight-encode events — the K·N unit-encoder activations were paid
+//! once at cache fill and amortize toward zero over tiles, steps, and
+//! requests. Functionally the cached path is bit-identical to the
+//! uncached one, because [`PrePackedMatrix::encode`] uses the same
+//! compile-time LUT the array-edge encoders use.
+//!
+//! ```
+//! use ent::arch::{ArchKind, MatOperand, Tcu, TcuEngine};
+//! use ent::encoding::prepacked::PrePackedMatrix;
+//! use ent::pe::Variant;
+//!
+//! // Encode the stationary operand once...
+//! let w: Vec<i8> = vec![7, 8, -9, 10, 11, 12]; // 3×2 weights
+//! let packed = PrePackedMatrix::encode(&w, 3, 2);
+//! // ...the codes decode back to the exact raw values...
+//! assert_eq!(packed.code(0).decode(), 7);
+//! assert_eq!(packed.code(2).decode(), -9);
+//! // ...and a prepacked GEMM equals the encode-on-the-fly reference.
+//! let eng = Tcu::new(ArchKind::SystolicWs, 8, Variant::EntOurs).engine();
+//! let a: Vec<i8> = vec![1, -2, 3, 4, 5, -6]; // 2×3 activations
+//! let mut c = vec![0i64; 4];
+//! eng.matmul_prepacked_into(MatOperand::Raw(&a), MatOperand::Packed(&packed), &mut c, 2, 3, 2);
+//! assert_eq!(c, eng.matmul(&a, &w, 2, 3, 2));
+//! ```
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::packed::{lut_i8, PackedCode};
+
+/// FNV-1a content fingerprint over the raw int8 values and the shape.
+/// Stamped onto every [`PrePackedMatrix`] so two encodings of the same
+/// identity can be told apart (the swap tests rely on it); the hot
+/// lookup path itself validates the O(1) [`CachedWeight`] content
+/// generation instead of re-hashing.
+pub fn fingerprint(raw: &[i8], rows: usize, cols: usize) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for &b in raw {
+        h ^= b as u8 as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h ^= rows as u64;
+    h = h.wrapping_mul(PRIME);
+    h ^= cols as u64;
+    h.wrapping_mul(PRIME)
+}
+
+/// A weight matrix pre-encoded for the EN-T(Ours) datapath: the raw
+/// int8 values (kept for the non-EN-T fallback paths) alongside the
+/// row-major [`PackedCode`] buffer — one n+1-bit wire-format code (plus
+/// sign line) per element, produced by the same compile-time LUT the
+/// array-edge encoders use, so the cached and uncached paths are
+/// bit-identical by construction.
+#[derive(Clone, Debug)]
+pub struct PrePackedMatrix {
+    raw: Vec<i8>,
+    codes: Vec<PackedCode>,
+    rows: usize,
+    cols: usize,
+    fingerprint: u64,
+}
+
+impl PrePackedMatrix {
+    /// Encode a `rows × cols` row-major int8 matrix: one LUT lookup per
+    /// element — exactly the K·N unit-encoder activations the planner
+    /// charges for one weight-tile residency, paid once here instead of
+    /// once per GEMM.
+    pub fn encode(raw: &[i8], rows: usize, cols: usize) -> PrePackedMatrix {
+        assert_eq!(raw.len(), rows * cols, "prepack shape");
+        PrePackedMatrix {
+            codes: raw.iter().map(|&v| lut_i8(v)).collect(),
+            fingerprint: fingerprint(raw, rows, cols),
+            raw: raw.to_vec(),
+            rows,
+            cols,
+        }
+    }
+
+    /// The raw int8 view (row-major) — what non-EN-T datapaths consume.
+    pub fn raw(&self) -> &[i8] {
+        &self.raw
+    }
+
+    /// The pre-encoded element at flat index `i` (row-major).
+    #[inline]
+    pub fn code(&self, i: usize) -> PackedCode {
+        self.codes[i]
+    }
+
+    /// `(rows, cols)` of the matrix.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Content fingerprint ([`fingerprint`]) of the raw values this
+    /// matrix was encoded from.
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// Approximate resident footprint in bytes (raw + codes), the unit
+    /// of the [`EncodeCache`] budget.
+    pub fn bytes(&self) -> usize {
+        self.raw.len() + self.codes.len() * std::mem::size_of::<PackedCode>()
+    }
+}
+
+static NEXT_WEIGHT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Post-swap content generations are drawn from a process-wide counter
+/// so two clones of one weight that [`CachedWeight::swap`] to
+/// *different* content can never collide on the same (id, version)
+/// pair — a collision would let the cache serve one clone's codes for
+/// the other's content.
+static NEXT_WEIGHT_VERSION: AtomicU64 = AtomicU64::new(1);
+
+/// A raw weight tensor with a stable cache identity. Models hold their
+/// GEMM weights as `CachedWeight`s; the id (assigned once at
+/// construction, preserved by [`Clone`] so model clones share cache
+/// entries) keys the [`EncodeCache`], and the content fingerprint
+/// detects a mid-serve [`CachedWeight::swap`].
+#[derive(Clone, Debug)]
+pub struct CachedWeight {
+    raw: Vec<i8>,
+    rows: usize,
+    cols: usize,
+    id: u64,
+    /// Content generation: 0 as constructed (clones made before any
+    /// swap share content, so sharing the generation is correct), and
+    /// a globally unique [`NEXT_WEIGHT_VERSION`] stamp after each
+    /// [`CachedWeight::swap`]. The cache validates hits against this
+    /// in O(1) instead of re-hashing the raw bytes on every lookup
+    /// (content can only change through `swap`, which takes
+    /// `&mut self`, and divergent clone swaps get distinct stamps).
+    version: u64,
+}
+
+impl CachedWeight {
+    /// Wrap a `rows × cols` row-major int8 weight matrix, assigning it
+    /// a fresh process-wide identity.
+    pub fn new(raw: Vec<i8>, rows: usize, cols: usize) -> CachedWeight {
+        assert_eq!(raw.len(), rows * cols, "weight shape");
+        CachedWeight {
+            raw,
+            rows,
+            cols,
+            id: NEXT_WEIGHT_ID.fetch_add(1, Ordering::Relaxed),
+            version: 0,
+        }
+    }
+
+    /// The raw int8 view (row-major).
+    pub fn raw(&self) -> &[i8] {
+        &self.raw
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// The cache key this tensor resolves under.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Resolve this weight's pre-encoded form through `cache`: a hit on
+    /// matching content generation, a (counted) re-encode on first
+    /// touch or after a swap.
+    pub fn resolve(&self, cache: &EncodeCache) -> Arc<PrePackedMatrix> {
+        cache.get_or_encode(self.id, self.version, &self.raw, self.rows, self.cols)
+    }
+
+    /// Replace the weight content in place (same shape, same identity)
+    /// — a mid-serve weight swap. The content generation is bumped, so
+    /// the next [`CachedWeight::resolve`] drops the stale codes and
+    /// re-encodes (the re-encoded matrix carries the new content's
+    /// [`fingerprint`]); results stay bit-identical to an uncached run.
+    pub fn swap(&mut self, raw: Vec<i8>) {
+        assert_eq!(raw.len(), self.rows * self.cols, "swap shape");
+        self.raw = raw;
+        self.version = NEXT_WEIGHT_VERSION.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+struct Entry {
+    mat: Arc<PrePackedMatrix>,
+    /// Content generation of the [`CachedWeight`] this was encoded
+    /// from — the O(1) hit validation.
+    version: u64,
+    last_used: u64,
+}
+
+struct Store {
+    entries: HashMap<u64, Entry>,
+    bytes: usize,
+    tick: u64,
+}
+
+/// Point-in-time counters of an [`EncodeCache`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups answered from resident codes (no encoder activations).
+    pub hits: u64,
+    /// Lookups that had to encode (first touch, post-eviction refill,
+    /// or post-swap re-encode).
+    pub misses: u64,
+    /// Entries dropped to stay within the byte budget.
+    pub evictions: u64,
+    /// Entries dropped because the content fingerprint changed under a
+    /// stable identity (mid-serve weight swap).
+    pub invalidations: u64,
+    /// Entries currently resident.
+    pub entries: usize,
+    /// Bytes currently resident.
+    pub bytes: usize,
+    /// Configured byte budget.
+    pub budget_bytes: usize,
+}
+
+/// A bounded LRU cache of [`PrePackedMatrix`]es, keyed by weight
+/// identity and validated in O(1) against the weight's content
+/// generation ([`CachedWeight::swap`] bumps it). One instance is shared
+/// by every engine shard of a serving coordinator (`ent serve
+/// --encode-cache <bytes>`), so the stationary operand of every weight
+/// GEMM is encoded once and reused across tiles, decode steps, and
+/// requests. The byte budget is global with true global LRU eviction —
+/// a single entry may use the whole budget, and the least-recently-used
+/// entry anywhere is always the first to go. Lookups take one short
+/// mutex (a map probe + counter bump); the O(rows·cols) encode on a
+/// miss runs **outside** the lock, so concurrent engine shards never
+/// serialize on each other's encodes.
+pub struct EncodeCache {
+    store: Mutex<Store>,
+    budget: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    invalidations: AtomicU64,
+}
+
+impl EncodeCache {
+    /// A cache bounded by `budget_bytes` of resident
+    /// [`PrePackedMatrix::bytes`]. A budget smaller than one entry
+    /// still works — such entries are encoded per lookup and never
+    /// inserted (they could not survive their own insert), which is
+    /// the starved degenerate the equivalence tests pin.
+    pub fn new(budget_bytes: usize) -> EncodeCache {
+        assert!(budget_bytes > 0, "encode-cache budget must be positive");
+        EncodeCache {
+            store: Mutex::new(Store {
+                entries: HashMap::new(),
+                bytes: 0,
+                tick: 0,
+            }),
+            budget: budget_bytes,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            invalidations: AtomicU64::new(0),
+        }
+    }
+
+    /// Look up the pre-encoded form of (`id`, `version`): a hit returns
+    /// the resident codes; a version mismatch drops the stale entry
+    /// (counted as an invalidation); a miss encodes outside the lock
+    /// and inserts, evicting global-LRU entries while residency exceeds
+    /// the byte budget.
+    pub fn get_or_encode(
+        &self,
+        id: u64,
+        version: u64,
+        raw: &[i8],
+        rows: usize,
+        cols: usize,
+    ) -> Arc<PrePackedMatrix> {
+        {
+            let mut s = self.store.lock().unwrap();
+            s.tick += 1;
+            let tick = s.tick;
+            let mut stale = false;
+            if let Some(e) = s.entries.get_mut(&id) {
+                if e.version == version {
+                    e.last_used = tick;
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return e.mat.clone();
+                }
+                stale = true;
+            }
+            if stale {
+                let old = s.entries.remove(&id).unwrap();
+                s.bytes -= old.mat.bytes();
+                self.invalidations.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        // Encode outside the lock: the O(rows·cols) work never blocks
+        // other lookups. A concurrent fill of the same id is harmless
+        // (the later insert replaces the earlier, bytes stay balanced).
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mat = Arc::new(PrePackedMatrix::encode(raw, rows, cols));
+        if mat.bytes() > self.budget {
+            // An entry that alone exceeds the whole budget could never
+            // survive its own insert — skip the insert-then-evict churn
+            // and hand the caller its one-shot encode directly.
+            return mat;
+        }
+        let mut s = self.store.lock().unwrap();
+        s.tick += 1;
+        let tick = s.tick;
+        if let Some(prev) = s.entries.insert(
+            id,
+            Entry {
+                mat: mat.clone(),
+                version,
+                last_used: tick,
+            },
+        ) {
+            s.bytes -= prev.mat.bytes();
+        }
+        s.bytes += mat.bytes();
+        while s.bytes > self.budget {
+            let Some((&lru, _)) = s.entries.iter().min_by_key(|(_, e)| e.last_used) else {
+                break;
+            };
+            let dropped = s.entries.remove(&lru).unwrap();
+            s.bytes -= dropped.mat.bytes();
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        mat
+    }
+
+    /// Current counters and residency.
+    pub fn stats(&self) -> CacheStats {
+        let (entries, bytes) = {
+            let s = self.store.lock().unwrap();
+            (s.entries.len(), s.bytes)
+        };
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            invalidations: self.invalidations.load(Ordering::Relaxed),
+            entries,
+            bytes,
+            budget_bytes: self.budget,
+        }
+    }
+}
+
+impl fmt::Debug for EncodeCache {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("EncodeCache").field("stats", &self.stats()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn prepack_codes_match_lut_and_decode() {
+        let mut rng = Rng::new(0x9A50);
+        let raw = rng.i8_vec(6 * 7);
+        let pm = PrePackedMatrix::encode(&raw, 6, 7);
+        assert_eq!(pm.shape(), (6, 7));
+        assert_eq!(pm.raw(), &raw[..]);
+        for (i, &v) in raw.iter().enumerate() {
+            assert_eq!(pm.code(i), lut_i8(v), "code {i}");
+            assert_eq!(pm.code(i).decode(), v as i64, "decode {i}");
+        }
+        assert!(pm.bytes() >= raw.len());
+    }
+
+    #[test]
+    fn fingerprint_is_content_and_shape_sensitive() {
+        let a = vec![1i8, 2, 3, 4, 5, 6];
+        assert_eq!(fingerprint(&a, 2, 3), fingerprint(&a, 2, 3));
+        assert_ne!(fingerprint(&a, 2, 3), fingerprint(&a, 3, 2));
+        let mut b = a.clone();
+        b[4] = -5;
+        assert_ne!(fingerprint(&a, 2, 3), fingerprint(&b, 2, 3));
+    }
+
+    #[test]
+    fn cache_hits_after_first_encode() {
+        let cache = EncodeCache::new(1 << 20);
+        let w = CachedWeight::new(vec![1, -2, 3, 4], 2, 2);
+        let first = w.resolve(&cache);
+        let second = w.resolve(&cache);
+        assert!(Arc::ptr_eq(&first, &second), "second lookup must hit");
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses, st.evictions), (1, 1, 0));
+        assert_eq!(st.entries, 1);
+        assert!(st.bytes > 0 && st.bytes <= st.budget_bytes);
+    }
+
+    #[test]
+    fn swap_invalidates_fingerprint_and_reencodes() {
+        let cache = EncodeCache::new(1 << 20);
+        let mut w = CachedWeight::new(vec![10, 20, 30, 40], 2, 2);
+        let before = w.resolve(&cache);
+        w.swap(vec![-1, -2, -3, -4]);
+        let after = w.resolve(&cache);
+        assert_ne!(before.fingerprint(), after.fingerprint());
+        assert_eq!(after.code(0).decode(), -1);
+        let st = cache.stats();
+        assert_eq!(st.invalidations, 1);
+        assert_eq!(st.misses, 2);
+        // The stale entry is gone; the fresh one is resident.
+        assert_eq!(st.entries, 1);
+    }
+
+    #[test]
+    fn tiny_budget_forces_eviction_but_stays_correct() {
+        // Budget below a single entry: every lookup encodes, nothing
+        // is ever inserted (the oversized-entry bypass skips the
+        // insert-then-evict churn), and results stay correct.
+        let cache = EncodeCache::new(1);
+        let w = CachedWeight::new(vec![7i8; 64], 8, 8);
+        for _ in 0..3 {
+            let pm = w.resolve(&cache);
+            assert_eq!(pm.code(0).decode(), 7);
+        }
+        let st = cache.stats();
+        assert_eq!(st.hits, 0);
+        assert_eq!(st.misses, 3);
+        assert_eq!(st.evictions, 0, "oversized entries bypass insertion");
+        assert_eq!(st.entries, 0);
+        assert_eq!(st.bytes, 0);
+    }
+
+    /// A budget that holds exactly one entry: distinct weights evict
+    /// each other (real LRU churn), a repeated weight hits.
+    #[test]
+    fn one_entry_budget_thrashes_between_weights() {
+        let sz = PrePackedMatrix::encode(&[0i8; 16], 4, 4).bytes();
+        let cache = EncodeCache::new(sz);
+        let a = CachedWeight::new(vec![1i8; 16], 4, 4);
+        let b = CachedWeight::new(vec![2i8; 16], 4, 4);
+        a.resolve(&cache); // resident
+        assert_eq!(a.resolve(&cache).code(0).decode(), 1); // hit
+        b.resolve(&cache); // evicts a
+        assert_eq!(b.resolve(&cache).code(0).decode(), 2); // hit
+        a.resolve(&cache); // evicts b
+        let st = cache.stats();
+        assert_eq!(st.hits, 2, "{st:?}");
+        assert_eq!(st.misses, 3, "{st:?}");
+        assert_eq!(st.evictions, 2, "{st:?}");
+        assert_eq!(st.entries, 1, "{st:?}");
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used_first() {
+        // Budget for exactly two equal-size entries: after touching
+        // a, b, a, inserting c must evict precisely the global LRU (b)
+        // while the recently-used a survives.
+        let sz = PrePackedMatrix::encode(&[0i8; 16], 4, 4).bytes();
+        let a = CachedWeight::new(vec![1i8; 16], 4, 4);
+        let b = CachedWeight::new(vec![2i8; 16], 4, 4);
+        let c = CachedWeight::new(vec![3i8; 16], 4, 4);
+        let cache = EncodeCache::new(2 * sz);
+        a.resolve(&cache);
+        b.resolve(&cache);
+        a.resolve(&cache); // a is now more recent than b
+        c.resolve(&cache); // over budget → exactly the LRU (b) goes
+        let st = cache.stats();
+        assert_eq!(st.evictions, 1, "{st:?}");
+        assert_eq!(st.misses, 3, "{st:?}");
+        assert_eq!(st.hits, 1, "{st:?}");
+        assert_eq!(st.entries, 2, "{st:?}");
+        a.resolve(&cache);
+        assert_eq!(cache.stats().hits, 2, "a (recently used) must survive");
+        b.resolve(&cache);
+        assert_eq!(cache.stats().misses, 4, "b (LRU) must have been evicted");
+    }
+
+    /// Two clones of one weight swapped to *different* content must
+    /// never be served each other's codes — post-swap generations are
+    /// globally unique, so the second clone's lookup invalidates
+    /// rather than colliding.
+    #[test]
+    fn divergent_clone_swaps_never_serve_stale_codes() {
+        let cache = EncodeCache::new(1 << 20);
+        let mut w = CachedWeight::new(vec![1i8; 4], 2, 2);
+        let mut w2 = w.clone();
+        w.swap(vec![2i8; 4]);
+        w.resolve(&cache); // caches content 2 under (id, w.version)
+        w2.swap(vec![3i8; 4]);
+        let pm = w2.resolve(&cache);
+        assert_eq!(pm.raw(), w2.raw(), "stale codes served for a divergent clone");
+        assert_eq!(pm.code(0).decode(), 3);
+        assert_eq!(cache.stats().invalidations, 1);
+    }
+
+    #[test]
+    fn clones_share_identity_and_cache_slot() {
+        let cache = EncodeCache::new(1 << 20);
+        let w = CachedWeight::new(vec![9i8; 9], 3, 3);
+        let w2 = w.clone();
+        assert_eq!(w.id(), w2.id());
+        w.resolve(&cache);
+        w2.resolve(&cache);
+        let st = cache.stats();
+        assert_eq!(st.misses, 1, "clone must reuse the same entry");
+        assert_eq!(st.hits, 1);
+    }
+
+    #[test]
+    fn concurrent_resolves_are_consistent() {
+        let cache = Arc::new(EncodeCache::new(1 << 20));
+        let mut rng = Rng::new(0xCAC);
+        let weights: Vec<CachedWeight> = (0..8)
+            .map(|_| CachedWeight::new(rng.i8_vec(64), 8, 8))
+            .collect();
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let cache = &cache;
+                let weights = &weights;
+                scope.spawn(move || {
+                    for _ in 0..16 {
+                        for w in weights {
+                            let pm = w.resolve(cache);
+                            assert_eq!(pm.raw(), w.raw());
+                        }
+                    }
+                });
+            }
+        });
+        let st = cache.stats();
+        assert_eq!(st.hits + st.misses, 4 * 16 * 8);
+        assert!(st.misses >= 8);
+    }
+}

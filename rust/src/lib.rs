@@ -30,9 +30,12 @@
 //! [`arch::engine::TcuEngine`] trait, whose shared tile planner
 //! ([`sim::planner`]) owns M/K/N blocking and whose hot path is
 //! allocation-free (the packed [`encoding::packed`] LUT) and parallel
-//! over independent output tiles. The same engine object serves
-//! functional verification, cycle/energy reporting, and the serving
-//! path — see DESIGN.md.
+//! over independent output tiles. Stationary weights can additionally
+//! be pre-encoded once and reused across tiles, decode steps, and
+//! serving requests through the bounded [`encoding::prepacked`] cache
+//! (zero weight-encode events in steady state — DESIGN.md §8). The
+//! same engine object serves functional verification, cycle/energy
+//! reporting, and the serving path — see DESIGN.md.
 //!
 //! ```
 //! use ent::arch::{ArchKind, Tcu, TcuEngine};

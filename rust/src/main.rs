@@ -236,6 +236,7 @@ fn cmd_soc(argv: &[String]) -> ent::Result<()> {
                 ("sram_write_mj", Json::num(e.sram_write_pj / 1e9)),
                 ("tcu_mj", Json::num(e.tcu_pj / 1e9)),
                 ("simd_mj", Json::num(e.simd_pj / 1e9)),
+                ("encode_mj", Json::num(e.encode_pj / 1e9)),
                 ("latency_ms", Json::num(e.latency_ms())),
                 ("compute_fraction", Json::num(e.compute_fraction())),
             ])
@@ -255,6 +256,7 @@ fn cmd_soc(argv: &[String]) -> ent::Result<()> {
     t.row(vec!["  TCU mJ".into(), f(e.tcu_pj / 1e9, 3)]);
     t.row(vec!["  SIMD mJ".into(), f(e.simd_pj / 1e9, 3)]);
     t.row(vec!["  controller mJ".into(), f(e.controller_pj / 1e9, 3)]);
+    t.row(vec!["  encoders mJ".into(), f(e.encode_pj / 1e9, 3)]);
     t.row(vec!["compute fraction".into(), f(e.compute_fraction(), 3)]);
     t.row(vec!["latency ms".into(), f(e.latency_ms(), 2)]);
     t.row(vec!["GMACs".into(), f(e.macs as f64 / 1e9, 2)]);
@@ -374,6 +376,7 @@ fn cmd_serve(argv: &[String]) -> ent::Result<()> {
         OptSpec { name: "tokens", takes_value: false, help: "send transformer token requests instead of CNN images" },
         OptSpec { name: "prompt", takes_value: true, help: "token prompt length with --tokens (default 12)" },
         OptSpec { name: "gen", takes_value: true, help: "greedy decode steps per token request (default 0)" },
+        OptSpec { name: "encode-cache", takes_value: true, help: "encoded-weight cache budget in bytes (native backends; 0 = off)" },
         OptSpec { name: "help", takes_value: false, help: "show help" },
     ];
     let args = Args::parse(argv, &specs)?;
@@ -401,6 +404,7 @@ fn cmd_serve(argv: &[String]) -> ent::Result<()> {
     if let Some(dir) = args.get("artifacts") {
         cfg.artifact_dir = dir.into();
     }
+    cfg.encode_cache_bytes = args.get_usize("encode-cache", 0)?;
     let input_len = cfg.model.input_len();
     let coordinator = Coordinator::start(cfg)?;
     let kind = if tokens { "token" } else { "image" };
@@ -466,6 +470,18 @@ fn cmd_serve(argv: &[String]) -> ent::Result<()> {
             String::new()
         }
     );
+    if let Some(cs) = m.encode_cache {
+        println!(
+            "encode cache: {} hits {} misses {} evictions {} invalidations ({} entries, {} KiB of {} KiB)",
+            cs.hits,
+            cs.misses,
+            cs.evictions,
+            cs.invalidations,
+            cs.entries,
+            cs.bytes / 1024,
+            cs.budget_bytes / 1024
+        );
+    }
     coordinator.shutdown();
     Ok(())
 }
@@ -480,6 +496,7 @@ fn cmd_loadgen(argv: &[String]) -> ent::Result<()> {
         OptSpec { name: "mix", takes_value: true, help: "fraction of CNN image arrivals, 0..1 (default 0)" },
         OptSpec { name: "shards", takes_value: true, help: "native engine shards (default 4)" },
         OptSpec { name: "window", takes_value: false, help: "drive the window batcher instead of continuous" },
+        OptSpec { name: "encode-cache", takes_value: true, help: "encoded-weight cache budget in bytes (0 = off)" },
         OptSpec { name: "seed", takes_value: true, help: "arrival-schedule seed (default 0x10AD)" },
         OptSpec { name: "json", takes_value: false, help: "JSON output" },
         OptSpec { name: "help", takes_value: false, help: "show help" },
@@ -500,11 +517,12 @@ fn cmd_loadgen(argv: &[String]) -> ent::Result<()> {
         seed: args.get_u64("seed", 0x10AD)?,
     };
     let shards = args.get_usize("shards", 4)?;
-    let cfg = if args.flag("window") {
+    let mut cfg = if args.flag("window") {
         Config::native(shards)
     } else {
         Config::continuous(shards)
     };
+    cfg.encode_cache_bytes = args.get_usize("encode-cache", 0)?;
     let scheduler = if args.flag("window") { "window" } else { "continuous" };
     let coord = Coordinator::start(cfg)?;
     let r = loadgen::run(&coord, &load);
@@ -538,6 +556,12 @@ fn cmd_loadgen(argv: &[String]) -> ent::Result<()> {
     t.row(vec!["tokens/s".into(), f(r.tokens_per_s, 0)]);
     t.row(vec!["engine occupancy".into(), pct(r.occupancy)]);
     t.row(vec!["mean step group".into(), f(m.mean_batch, 2)]);
+    if let Some(cs) = m.encode_cache {
+        t.row(vec![
+            "encode cache hit/miss/evict".into(),
+            format!("{}/{}/{}", cs.hits, cs.misses, cs.evictions),
+        ]);
+    }
     print!("{}", t.render());
     Ok(())
 }

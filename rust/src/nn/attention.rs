@@ -24,7 +24,10 @@
 //! convention as [`crate::nn::forward`]): probabilities carry a fixed
 //! ×127 scale which the softmax·V GEMM removes with a 7-bit shift.
 
+use std::sync::Arc;
+
 use crate::arch::TcuEngine;
+use crate::encoding::prepacked::{CachedWeight, EncodeCache};
 use crate::util::prng::Rng;
 
 /// Right-shift applied to Q/K/V and output-projection accumulators
@@ -191,10 +194,15 @@ impl KvCache {
 pub struct MhaWeights {
     pub d: usize,
     pub heads: usize,
-    wq: Vec<i8>,
-    wk: Vec<i8>,
-    wv: Vec<i8>,
-    wo: Vec<i8>,
+    wq: CachedWeight,
+    wk: CachedWeight,
+    wv: CachedWeight,
+    wo: CachedWeight,
+    /// Encoded-weight cache the projection GEMMs resolve through
+    /// (None = encode on the fly). The per-head score and context
+    /// contractions multiply activations by activations and never
+    /// touch it.
+    cache: Option<Arc<EncodeCache>>,
 }
 
 impl MhaWeights {
@@ -206,11 +214,18 @@ impl MhaWeights {
         MhaWeights {
             d,
             heads,
-            wq: rng.i8_vec(d * d),
-            wk: rng.i8_vec(d * d),
-            wv: rng.i8_vec(d * d),
-            wo: rng.i8_vec(d * d),
+            wq: CachedWeight::new(rng.i8_vec(d * d), d, d),
+            wk: CachedWeight::new(rng.i8_vec(d * d), d, d),
+            wv: CachedWeight::new(rng.i8_vec(d * d), d, d),
+            wo: CachedWeight::new(rng.i8_vec(d * d), d, d),
+            cache: None,
         }
+    }
+
+    /// Resolve the Q/K/V/output projection weights through `cache`
+    /// from now on (see [`crate::encoding::prepacked::EncodeCache`]).
+    pub fn set_encode_cache(&mut self, cache: Arc<EncodeCache>) {
+        self.cache = Some(cache);
     }
 
     /// Run `rows` new positions (flattened `rows × d` int8) through the
@@ -262,13 +277,16 @@ impl MhaWeights {
         assert_eq!(x.len(), total * d, "attention input shape");
 
         // Q/K/V projections: one shared engine GEMM each over every
-        // sequence's rows, requantized to int8.
+        // sequence's rows, requantized to int8. The weights are the
+        // stationary K×N operand and resolve through the encode cache
+        // when one is attached (zero weight encodes in steady state).
+        let cache = self.cache.as_deref();
         let mut acc = vec![0i64; total * d];
-        eng.matmul_into(x, &self.wq, &mut acc, total, d, d);
+        super::gemm_weights_b(eng, cache, x, &self.wq, &mut acc, total, d, d);
         let q = requant(&acc, QKV_SHIFT);
-        eng.matmul_into(x, &self.wk, &mut acc, total, d, d);
+        super::gemm_weights_b(eng, cache, x, &self.wk, &mut acc, total, d, d);
         let k_new = requant(&acc, QKV_SHIFT);
-        eng.matmul_into(x, &self.wv, &mut acc, total, d, d);
+        super::gemm_weights_b(eng, cache, x, &self.wv, &mut acc, total, d, d);
         let v_new = requant(&acc, QKV_SHIFT);
 
         // Per-sequence: append this segment's K/V to its own cache, then
@@ -328,7 +346,7 @@ impl MhaWeights {
         }
 
         // Output projection: one shared GEMM over every row.
-        eng.matmul_into(&out, &self.wo, &mut acc, total, d, d);
+        super::gemm_weights_b(eng, cache, &out, &self.wo, &mut acc, total, d, d);
         requant(&acc, QKV_SHIFT)
     }
 }

@@ -13,7 +13,10 @@
 //! deterministic, finite, batch-consistent model, not an accurate one.
 //! Real trained weights would drop in through the same structs.
 
+use std::sync::Arc;
+
 use crate::arch::TcuEngine;
+use crate::encoding::prepacked::{CachedWeight, EncodeCache};
 use crate::util::prng::Rng;
 
 /// One conv layer's hyper-parameters (square kernel, zero padding).
@@ -45,12 +48,15 @@ pub struct QuantCnn {
     /// Input (C, H, W).
     pub chw: (usize, usize, usize),
     pub classes: usize,
-    convs: Vec<(ConvSpec, Vec<i8>)>,
+    convs: Vec<(ConvSpec, CachedWeight)>,
     /// FC weights, classes × feature-length row-major.
-    fc: Vec<i8>,
+    fc: CachedWeight,
     feat: usize,
     /// Right-shift applied to conv accumulators before clamping to int8.
     shift: u32,
+    /// Encoded-weight cache the forward passes resolve the stationary
+    /// operands through (None = encode on the fly, the uncached path).
+    cache: Option<Arc<EncodeCache>>,
 }
 
 impl QuantCnn {
@@ -68,7 +74,8 @@ impl QuantCnn {
         let mut feat_ch = 3;
         for spec in convs_spec {
             assert_eq!(spec.cin, feat_ch);
-            convs.push((spec, rng.i8_vec(spec.weight_len())));
+            let k = spec.cin * spec.kernel * spec.kernel;
+            convs.push((spec, CachedWeight::new(rng.i8_vec(spec.weight_len()), spec.cout, k)));
             hw = spec.out_hw(hw);
             feat_ch = spec.cout;
         }
@@ -79,10 +86,20 @@ impl QuantCnn {
             chw: (3, 32, 32),
             classes,
             convs,
-            fc: rng.i8_vec(classes * feat),
+            fc: CachedWeight::new(rng.i8_vec(classes * feat), classes, feat),
             feat,
             shift: 5,
+            cache: None,
         }
+    }
+
+    /// Resolve every weight GEMM through `cache`: conv and FC weights
+    /// are encoded once (first touch) and reused across layers and
+    /// requests — steady-state forwards perform zero weight encodes on
+    /// the EN-T(Ours) datapath. Logits are bit-identical either way.
+    pub fn with_encode_cache(mut self, cache: Arc<EncodeCache>) -> QuantCnn {
+        self.cache = Some(cache);
+        self
     }
 
     pub fn input_len(&self) -> usize {
@@ -94,26 +111,30 @@ impl QuantCnn {
     /// only float is the final scale.
     pub fn forward<E: TcuEngine + ?Sized>(&self, eng: &E, image: &[i8]) -> Vec<f32> {
         assert_eq!(image.len(), self.input_len(), "input length");
+        let cache = self.cache.as_deref();
         let mut x = image.to_vec();
         let mut hw = self.chw.1;
         for (spec, weights) in &self.convs {
-            x = conv_layer(eng, spec, weights, &x, hw, self.shift);
+            x = conv_layer(eng, cache, spec, weights, &x, hw, self.shift);
             hw = spec.out_hw(hw);
         }
         assert_eq!(x.len(), self.feat, "feature length");
         // FC head: (classes × feat) × (feat × 1).
         let mut out = vec![0i64; self.classes];
-        eng.matmul_into(&self.fc, &x, &mut out, self.classes, self.feat, 1);
+        super::gemm_weights_a(eng, cache, &self.fc, &x, &mut out, self.classes, self.feat, 1);
         out.iter().map(|&v| v as f32 / 256.0).collect()
     }
 }
 
 /// im2col + engine GEMM + requantize for one conv layer. Input and
-/// output are flattened C×H×W int8.
+/// output are flattened C×H×W int8. The weights are the GEMM's M×K
+/// operand — the encoded-multiplicand path — so with a cache they enter
+/// the array pre-encoded.
 fn conv_layer<E: TcuEngine + ?Sized>(
     eng: &E,
+    cache: Option<&EncodeCache>,
     spec: &ConvSpec,
-    weights: &[i8],
+    weights: &CachedWeight,
     x: &[i8],
     in_hw: usize,
     shift: u32,
@@ -145,7 +166,7 @@ fn conv_layer<E: TcuEngine + ?Sized>(
         }
     }
     let mut acc = vec![0i64; spec.cout * n];
-    eng.matmul_into(weights, &b, &mut acc, spec.cout, k, n);
+    super::gemm_weights_a(eng, cache, weights, &b, &mut acc, spec.cout, k, n);
     // Requantize: power-of-two scale, clamp, optional ReLU.
     acc.iter()
         .map(|&v| {
@@ -179,6 +200,26 @@ mod tests {
         // Not degenerate: logits differ across classes for a random
         // image.
         assert!(a.iter().any(|&x| x != a[0]));
+    }
+
+    /// The encoded-weight cache changes nothing functionally: logits
+    /// with the cache attached are bit-identical to the uncached
+    /// forward, and the second request is served entirely from hits.
+    #[test]
+    fn cached_forward_matches_uncached() {
+        let plain = QuantCnn::tiny_native();
+        let cache = Arc::new(EncodeCache::new(8 << 20));
+        let cached = QuantCnn::tiny_native().with_encode_cache(cache.clone());
+        let mut rng = Rng::new(11);
+        let img = rng.i8_vec(plain.input_len());
+        let eng = Tcu::new(ArchKind::SystolicWs, 8, Variant::EntOurs).engine();
+        assert_eq!(cached.forward(&eng, &img), plain.forward(&eng, &img));
+        let after_first = cache.stats();
+        assert_eq!(after_first.misses, 3, "2 convs + 1 fc encode once");
+        cached.forward(&eng, &img);
+        let after_second = cache.stats();
+        assert_eq!(after_second.misses, 3, "steady state must not re-encode");
+        assert!(after_second.hits >= after_first.hits + 3);
     }
 
     /// Functional transparency at network scope: every arch × variant

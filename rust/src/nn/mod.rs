@@ -285,6 +285,71 @@ impl Network {
     }
 }
 
+/// Should this engine's weight GEMMs resolve through the encode cache?
+/// Only the EN-T(Ours) datapath can consume pre-encoded codes
+/// ([`TcuEngine::matmul_prepacked_into`](crate::arch::TcuEngine::matmul_prepacked_into)
+/// falls back for the rest), so resolving — an O(rows·cols) encode on
+/// first touch plus resident bytes — would be pure waste on Baseline
+/// and EN-T(MBE), and would inflate the hit/miss counters with reuse
+/// that never happens.
+fn cache_for_engine<'c, E: crate::arch::TcuEngine + ?Sized>(
+    eng: &E,
+    cache: Option<&'c crate::encoding::prepacked::EncodeCache>,
+) -> Option<&'c crate::encoding::prepacked::EncodeCache> {
+    cache.filter(|_| eng.tcu().variant == crate::pe::Variant::EntOurs)
+}
+
+/// One weight-side GEMM with the weights as the **A** (M×K) operand —
+/// the im2col convolution orientation. With a cache (and a
+/// code-consuming engine, see [`cache_for_engine`]), the stationary
+/// weights resolve to their pre-encoded form
+/// ([`crate::encoding::prepacked::PrePackedMatrix`]) and the engine's
+/// prepacked entry performs zero weight encodes; otherwise this is
+/// exactly [`TcuEngine::matmul_into`](crate::arch::TcuEngine::matmul_into).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_weights_a<E: crate::arch::TcuEngine + ?Sized>(
+    eng: &E,
+    cache: Option<&crate::encoding::prepacked::EncodeCache>,
+    w: &crate::encoding::prepacked::CachedWeight,
+    b: &[i8],
+    c: &mut [i64],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    use crate::arch::MatOperand;
+    match cache_for_engine(eng, cache) {
+        Some(cc) => {
+            let pm = w.resolve(cc);
+            eng.matmul_prepacked_into(MatOperand::Packed(&pm), MatOperand::Raw(b), c, m, k, n);
+        }
+        None => eng.matmul_into(w.raw(), b, c, m, k, n),
+    }
+}
+
+/// One weight-side GEMM with the weights as the **B** (K×N) operand —
+/// the transformer projection orientation. See [`gemm_weights_a`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_weights_b<E: crate::arch::TcuEngine + ?Sized>(
+    eng: &E,
+    cache: Option<&crate::encoding::prepacked::EncodeCache>,
+    a: &[i8],
+    w: &crate::encoding::prepacked::CachedWeight,
+    c: &mut [i64],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    use crate::arch::MatOperand;
+    match cache_for_engine(eng, cache) {
+        Some(cc) => {
+            let pm = w.resolve(cc);
+            eng.matmul_prepacked_into(MatOperand::Raw(a), MatOperand::Packed(&pm), c, m, k, n);
+        }
+        None => eng.matmul_into(a, w.raw(), c, m, k, n),
+    }
+}
+
 /// Helper used by the family builders.
 pub(crate) fn conv(
     name: impl Into<String>,

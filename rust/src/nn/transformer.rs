@@ -41,7 +41,10 @@
 //! [`decode_network`]: TransformerSpec::decode_network
 //! [`Layer::Gemm`]: crate::nn::Layer::Gemm
 
+use std::sync::Arc;
+
 use crate::arch::TcuEngine;
+use crate::encoding::prepacked::{CachedWeight, EncodeCache};
 use crate::nn::attention::{add_norm, requant, KvCache, MhaWeights};
 use crate::nn::{Layer, Network};
 use crate::util::prng::Rng;
@@ -265,9 +268,9 @@ impl TransformerSpec {
 struct Block {
     attn: MhaWeights,
     /// MLP up-projection, `d_model × d_ff` (K×N for the engine GEMM).
-    w1: Vec<i8>,
+    w1: CachedWeight,
     /// MLP down-projection, `d_ff × d_model`.
-    w2: Vec<i8>,
+    w2: CachedWeight,
 }
 
 /// One sequence's contribution to a coalesced
@@ -289,7 +292,11 @@ pub struct QuantTransformer {
     embed: Vec<i8>,
     blocks: Vec<Block>,
     /// Vocabulary head, `d_model × vocab` (K×N for the engine GEMM).
-    head: Vec<i8>,
+    head: CachedWeight,
+    /// Encoded-weight cache every weight GEMM (Q/K/V/O, both MLP
+    /// projections, vocabulary head) resolves through. None = encode
+    /// on the fly.
+    cache: Option<Arc<EncodeCache>>,
 }
 
 impl QuantTransformer {
@@ -300,16 +307,31 @@ impl QuantTransformer {
         let blocks = (0..spec.layers)
             .map(|_| Block {
                 attn: MhaWeights::new(d, spec.heads, &mut rng),
-                w1: rng.i8_vec(d * spec.d_ff),
-                w2: rng.i8_vec(spec.d_ff * d),
+                w1: CachedWeight::new(rng.i8_vec(d * spec.d_ff), d, spec.d_ff),
+                w2: CachedWeight::new(rng.i8_vec(spec.d_ff * d), spec.d_ff, d),
             })
             .collect();
         QuantTransformer {
             spec,
             embed: rng.i8_vec(spec.vocab * d),
             blocks,
-            head: rng.i8_vec(d * spec.vocab),
+            head: CachedWeight::new(rng.i8_vec(d * spec.vocab), d, spec.vocab),
+            cache: None,
         }
+    }
+
+    /// Resolve every weight GEMM through `cache` from now on: the
+    /// stationary operand of each projection is encoded once (first
+    /// touch) and reused across layers, decode steps, and requests —
+    /// steady-state decode performs **zero** weight encodes on the
+    /// EN-T(Ours) datapath, and logits stay bit-identical
+    /// (`tests/encode_cache.rs`).
+    pub fn with_encode_cache(mut self, cache: Arc<EncodeCache>) -> QuantTransformer {
+        for b in &mut self.blocks {
+            b.attn.set_encode_cache(cache.clone());
+        }
+        self.cache = Some(cache);
+        self
     }
 
     /// The native serving model (fixed seed — every shard builds the
@@ -434,12 +456,14 @@ impl QuantTransformer {
             drop(segs);
             x = add_norm(&x, &attn, d);
             // MLP sub-block: W1 → GELU LUT → W2, residual + layernorm —
-            // shared GEMMs over every sequence's rows.
+            // shared GEMMs over every sequence's rows, weights through
+            // the encode cache when attached.
+            let cache = self.cache.as_deref();
             let ff = self.spec.d_ff;
-            eng.matmul_into(&x, &block.w1, &mut acc[..total * ff], total, d, ff);
+            super::gemm_weights_b(eng, cache, &x, &block.w1, &mut acc[..total * ff], total, d, ff);
             let mut hidden = requant(&acc[..total * ff], FF1_SHIFT);
             gelu_i8(&mut hidden);
-            eng.matmul_into(&hidden, &block.w2, &mut acc[..total * d], total, ff, d);
+            super::gemm_weights_b(eng, cache, &hidden, &block.w2, &mut acc[..total * d], total, ff, d);
             let mlp = requant(&acc[..total * d], FF2_SHIFT);
             x = add_norm(&x, &mlp, d);
         }
@@ -455,7 +479,16 @@ impl QuantTransformer {
             last[i * d..(i + 1) * d].copy_from_slice(&x[(row_end - 1) * d..row_end * d]);
         }
         let mut logits = vec![0i64; nseq * vocab];
-        eng.matmul_into(&last, &self.head, &mut logits, nseq, d, vocab);
+        super::gemm_weights_b(
+            eng,
+            self.cache.as_deref(),
+            &last,
+            &self.head,
+            &mut logits,
+            nseq,
+            d,
+            vocab,
+        );
         (0..nseq)
             .map(|i| {
                 logits[i * vocab..(i + 1) * vocab]

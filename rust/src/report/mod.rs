@@ -306,6 +306,7 @@ pub fn transformer() -> String {
         "variant",
         "prefill µJ/tok",
         "decode µJ/tok",
+        "dec µJ/tok (enc-cache)",
         "prefill tok/s",
         "decode tok/s",
         "KV MAC saving",
@@ -313,16 +314,19 @@ pub fn transformer() -> String {
     let recompute_macs = spec.prefill_network(seq + 1).total_macs() as f64;
     let prefill_net = spec.prefill_network(seq);
     let decode_net = spec.decode_network(seq + 1);
+    let cache_opts = energy::EnergyOpts { encode_cache: true };
     for arch in ALL_ARCHS {
         for variant in ALL_VARIANTS {
             let soc = Soc::paper_config(arch, variant);
             let (pre, _) = energy::frame_energy(&soc, &prefill_net);
             let (dec, _) = energy::frame_energy(&soc, &decode_net);
+            let (dec_cached, _) = energy::frame_energy_with(&soc, &decode_net, cache_opts);
             t.row(vec![
                 arch.name().into(),
                 variant.name().into(),
                 f(pre.total_pj() / 1e6 / seq as f64, 2),
                 f(dec.total_pj() / 1e6, 2),
+                f(dec_cached.total_pj() / 1e6, 2),
                 f(seq as f64 / (pre.latency_ms() / 1e3), 0),
                 f(1e3 / dec.latency_ms(), 0),
                 pct(1.0 - dec.macs as f64 / recompute_macs),
@@ -332,7 +336,9 @@ pub fn transformer() -> String {
     let mut s = t.render();
     s.push_str(
         "decode attends over cached K/V instead of recomputing the prefix — \
-         the saving column is 1 − decode MACs / full-recompute MACs\n",
+         the saving column is 1 − decode MACs / full-recompute MACs; the \
+         enc-cache column re-prices decode with the encoded-weight cache \
+         resident (zero weight-encode events, see DESIGN.md §8)\n",
     );
     s
 }
@@ -370,10 +376,14 @@ pub fn serving() -> String {
         "tokens/s",
         "occupancy",
     ]);
-    for (name, cfg) in [
+    let mut cache_lines = String::new();
+    for (name, mut cfg) in [
         ("continuous", Config::continuous(4)),
         ("window", Config::native(4)),
     ] {
+        // Both schedulers serve through the encoded-weight cache so the
+        // scorecard shows the encode-reuse counters alongside latency.
+        cfg.encode_cache_bytes = 4 << 20;
         let coord = match Coordinator::start(cfg) {
             Ok(c) => c,
             Err(e) => return format!("serving report unavailable: {e}\n"),
@@ -393,9 +403,16 @@ pub fn serving() -> String {
             f(r.tokens_per_s, 0),
             pct(r.occupancy),
         ]);
+        if let Some(cs) = coord.metrics().encode_cache {
+            cache_lines.push_str(&format!(
+                "encode cache ({name}): {} hits / {} misses / {} evictions — weights encoded once, reused by every step\n",
+                cs.hits, cs.misses, cs.evictions
+            ));
+        }
         coord.shutdown();
     }
     let mut s = t.render();
+    s.push_str(&cache_lines);
     s.push_str(
         "wall-clock on this host — trajectory tracked by benches/serve_perf.rs \
          (BENCH_serve.json)\n",
@@ -456,6 +473,7 @@ mod tests {
             assert!(s.contains(v.name()), "missing {}", v.name());
         }
         assert!(s.contains("KV MAC saving"));
+        assert!(s.contains("enc-cache"), "amortized decode column missing");
     }
 
     #[test]
@@ -465,6 +483,9 @@ mod tests {
         assert!(s.contains("window"), "{s}");
         assert!(s.contains("tokens/s"), "{s}");
         assert!(s.contains("occupancy"), "{s}");
+        // The encode-reuse counters ride the scorecard.
+        assert!(s.contains("encode cache (continuous)"), "{s}");
+        assert!(s.contains("hits"), "{s}");
     }
 
     #[test]

@@ -50,6 +50,14 @@ pub struct GemmStats {
     /// Encoder activations (EN-T variants: one per multiplicand element
     /// entering the array; baseline: one *inside every PE* per MAC).
     pub encodes: u64,
+    /// The subset of `encodes` attributable to the **weight** operand —
+    /// the multiplicand path by this repo's convention (A everywhere
+    /// except the weight-stationary array, where the stationary B is
+    /// the weight). A resident encoded-weight cache
+    /// ([`crate::encoding::prepacked::EncodeCache`]) drops these to
+    /// zero at GEMM time: see
+    /// [`crate::sim::planner::TilePlan::stats_cached`].
+    pub weight_encodes: u64,
 }
 
 impl GemmStats {
@@ -61,6 +69,7 @@ impl GemmStats {
         self.c_writes += o.c_writes;
         self.psum_spills += o.psum_spills;
         self.encodes += o.encodes;
+        self.weight_encodes += o.weight_encodes;
     }
 }
 

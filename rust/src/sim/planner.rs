@@ -146,6 +146,34 @@ impl TilePlan {
             // Baseline: every MAC re-encodes inside its PE.
             st.encodes = st.macs;
         }
+        // The encoded multiplicand path *is* the weight path by the
+        // repo's GEMM convention (A carries the weights on four archs,
+        // the stationary B on WS — see `sim::dataflow`), so all encoder
+        // activations of a weight GEMM are weight encodes. Callers
+        // whose multiplicand is an activation (attention score/context
+        // GEMMs) zero this themselves.
+        st.weight_encodes = st.encodes;
+        st
+    }
+
+    /// Event counts with the stationary weights resident in an
+    /// encoded-weight cache
+    /// ([`crate::encoding::prepacked::EncodeCache`]): the EN-T(Ours)
+    /// variant loads pre-encoded codes from the Weight Buffer, so a
+    /// steady-state GEMM performs **zero** weight-encode events — the
+    /// once-per-tile-residency encoder activations of
+    /// [`TilePlan::stats`] were paid once at cache fill and amortize
+    /// across tiles, decode steps, and requests. Baseline (per-PE
+    /// internal encoders) and EN-T(MBE) (on-the-fly Booth recode)
+    /// cannot consume EN-T codes, so their counts are unchanged —
+    /// mirroring the functional fallback in
+    /// [`TcuEngine::matmul_prepacked_into`](crate::arch::TcuEngine::matmul_prepacked_into).
+    pub fn stats_cached(&self) -> GemmStats {
+        let mut st = self.stats();
+        if self.tcu.variant == crate::pe::Variant::EntOurs {
+            st.encodes -= st.weight_encodes;
+            st.weight_encodes = 0;
+        }
         st
     }
 }
@@ -227,6 +255,32 @@ mod tests {
             let s = if kind == ArchKind::Cube3d { 8 } else { 32 };
             let st = plan(kind, s, 40, s, 40).stats();
             assert_eq!(st.psum_spills, 0, "{}", kind.name());
+        }
+    }
+
+    /// `stats_cached`: EN-T(Ours) drops every weight-encode event (the
+    /// cache holds the codes); all other event counts are untouched,
+    /// and the non-consuming variants are unchanged entirely.
+    #[test]
+    fn cached_stats_zero_weight_encodes_for_ours_only() {
+        for kind in ALL_ARCHS {
+            let s = if kind == ArchKind::Cube3d { 4 } else { 8 };
+            let plain = plan(kind, s, 13, 21, 10).stats();
+            let cached = plan(kind, s, 13, 21, 10).stats_cached();
+            assert!(plain.weight_encodes > 0, "{}", kind.name());
+            assert_eq!(plain.weight_encodes, plain.encodes, "{}", kind.name());
+            assert_eq!(cached.encodes, 0, "{}", kind.name());
+            assert_eq!(cached.weight_encodes, 0, "{}", kind.name());
+            assert_eq!(cached.cycles, plain.cycles, "{}", kind.name());
+            assert_eq!(cached.a_reads, plain.a_reads, "{}", kind.name());
+            assert_eq!(cached.b_reads, plain.b_reads, "{}", kind.name());
+            for v in [Variant::Baseline, Variant::EntMbe] {
+                let tcu = Tcu::new(kind, s, v);
+                let g = GemmShape::new(13, 21, 10);
+                let p = TilePlan::new(&tcu, g).stats();
+                let c = TilePlan::new(&tcu, g).stats_cached();
+                assert_eq!(p.encodes, c.encodes, "{} {}", kind.name(), v.name());
+            }
         }
     }
 

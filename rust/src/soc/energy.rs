@@ -16,9 +16,21 @@
 //! event counts.
 
 use super::Soc;
-use crate::arch::TcuEngine;
 use crate::nn::{Layer, Network};
 use crate::sim::{GemmShape, GemmStats};
+
+/// Options for the frame walk.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EnergyOpts {
+    /// Model an encoded-weight cache
+    /// ([`crate::encoding::prepacked::EncodeCache`]) holding every
+    /// weight GEMM's stationary operand pre-encoded: layers with
+    /// weights charge **zero** weight-encode events (and energy) on the
+    /// EN-T(Ours) variant — the once-per-residency encodes of the
+    /// uncached walk were paid at cache fill and amortize toward zero
+    /// across tiles, steps, and requests.
+    pub encode_cache: bool,
+}
 
 /// Energy decomposition of one frame, all in picojoules.
 #[derive(Clone, Copy, Debug, Default)]
@@ -28,9 +40,19 @@ pub struct FrameEnergy {
     pub tcu_pj: f64,
     pub simd_pj: f64,
     pub controller_pj: f64,
+    /// Event-charged encoder energy: encoder activations × one
+    /// unit-encoder-block cycle. Part of the computing-engines bucket
+    /// (the external encoder blocks' share of the TCU power is charged
+    /// here per event instead of per busy cycle).
+    pub encode_pj: f64,
     /// Total array-busy cycles (latency proxy).
     pub cycles: u64,
     pub macs: u64,
+    /// Encoder activations (planner event counts, summed over layers).
+    pub encodes: u64,
+    /// The weight-operand subset of `encodes` — zero for every weight
+    /// GEMM when [`EnergyOpts::encode_cache`] is on (EN-T(Ours)).
+    pub weight_encodes: u64,
 }
 
 impl FrameEnergy {
@@ -40,7 +62,7 @@ impl FrameEnergy {
 
     /// The paper's "computing engines" bucket.
     pub fn compute_pj(&self) -> f64 {
-        self.tcu_pj + self.simd_pj + self.controller_pj
+        self.tcu_pj + self.simd_pj + self.controller_pj + self.encode_pj
     }
 
     pub fn total_mj(&self) -> f64 {
@@ -66,12 +88,22 @@ pub struct LayerEnergy {
 }
 
 /// Simulate one frame through the SoC; returns totals and the per-layer
-/// trace.
+/// trace. Uncached-weight walk — see [`frame_energy_with`] for the
+/// encoded-weight-cache mode.
 pub fn frame_energy(soc: &Soc, net: &Network) -> (FrameEnergy, Vec<LayerEnergy>) {
+    frame_energy_with(soc, net, EnergyOpts::default())
+}
+
+/// Simulate one frame through the SoC under `opts`.
+pub fn frame_energy_with(
+    soc: &Soc,
+    net: &Network,
+    opts: EnergyOpts,
+) -> (FrameEnergy, Vec<LayerEnergy>) {
     let mut total = FrameEnergy::default();
     let mut trace = Vec::with_capacity(net.layers.len());
     for layer in &net.layers {
-        let e = layer_energy(soc, layer);
+        let e = layer_energy(soc, layer, opts);
         accumulate(&mut total, &e);
         trace.push(LayerEnergy {
             name: layer.name().to_string(),
@@ -87,22 +119,35 @@ fn accumulate(t: &mut FrameEnergy, e: &FrameEnergy) {
     t.tcu_pj += e.tcu_pj;
     t.simd_pj += e.simd_pj;
     t.controller_pj += e.controller_pj;
+    t.encode_pj += e.encode_pj;
     t.cycles += e.cycles;
     t.macs += e.macs;
+    t.encodes += e.encodes;
+    t.weight_encodes += e.weight_encodes;
+}
+
+/// Stats for one GEMM on one TCU, cached-weight mode optional.
+fn tcu_stats(tcu: &crate::arch::Tcu, g: GemmShape, cached: bool) -> GemmStats {
+    let plan = crate::sim::planner::TilePlan::new(tcu, g);
+    if cached {
+        plan.stats_cached()
+    } else {
+        plan.stats()
+    }
 }
 
 /// Dataflow stats for one GEMM across the SoC's TCU instances (two cubes
 /// split the N dimension; a single array takes the whole problem).
-fn soc_gemm_stats(soc: &Soc, g: GemmShape) -> GemmStats {
+fn soc_gemm_stats(soc: &Soc, g: GemmShape, cached: bool) -> GemmStats {
     if soc.tcus.len() == 1 {
-        return soc.tcus[0].engine().stats(g);
+        return tcu_stats(&soc.tcus[0], g, cached);
     }
     // Split N across instances; cycles overlap (max), traffic adds.
     let per = GemmShape::new(g.m, g.k, g.n.div_ceil(soc.tcus.len()));
     let mut agg = GemmStats::default();
     let mut max_cycles = 0;
     for tcu in &soc.tcus {
-        let st = tcu.engine().stats(per);
+        let st = tcu_stats(tcu, per, cached);
         max_cycles = max_cycles.max(st.cycles);
         agg.merge(&st);
     }
@@ -113,18 +158,37 @@ fn soc_gemm_stats(soc: &Soc, g: GemmShape) -> GemmStats {
     agg
 }
 
-fn layer_energy(soc: &Soc, layer: &Layer) -> FrameEnergy {
+fn layer_energy(soc: &Soc, layer: &Layer, opts: EnergyOpts) -> FrameEnergy {
     let mut e = FrameEnergy::default();
     let tcu_power_uw: f64 = soc.tcus.iter().map(|t| t.cost().total().power_uw).sum();
+    // External encoder blocks are charged per *event*, not per busy
+    // cycle: carve their power out of the busy-cycle product and price
+    // one activation as one unit-encoder-block cycle. Baseline keeps
+    // its per-PE encoders inside the multiplier power (zero here).
+    let enc_power_uw: f64 = soc.tcus.iter().map(|t| t.cost().encoders.power_uw).sum();
+    let enc_lanes: usize = soc.tcus.iter().map(|t| t.encoder_blocks()).sum();
+    let pj_per_encode = if enc_lanes > 0 {
+        (enc_power_uw / enc_lanes as f64) * crate::CLOCK_NS / 1000.0
+    } else {
+        0.0
+    };
 
     if let Some(g) = layer.gemm() {
         let reps = layer.gemm_repeats();
-        let st = soc_gemm_stats(soc, g);
+        // Only layers that *have* weights hold a cacheable stationary
+        // operand; attention score/context GEMMs multiply activations
+        // by activations and keep their encodes either way.
+        let has_weights = layer.weight_bytes() > 0;
+        let st = soc_gemm_stats(soc, g, opts.encode_cache && has_weights);
         e.macs = st.macs * reps;
         e.cycles = st.cycles * reps;
+        e.encodes = st.encodes * reps;
+        e.weight_encodes = if has_weights { st.weight_encodes * reps } else { 0 };
 
-        // --- TCU dynamic energy over busy cycles ---
-        e.tcu_pj = tcu_power_uw * e.cycles as f64 * crate::CLOCK_NS / 1000.0;
+        // --- TCU dynamic energy over busy cycles (+ per-event encoder
+        //     energy, which an encoded-weight cache amortizes away) ---
+        e.tcu_pj = (tcu_power_uw - enc_power_uw) * e.cycles as f64 * crate::CLOCK_NS / 1000.0;
+        e.encode_pj = e.encodes as f64 * pj_per_encode;
 
         // --- buffer→array port traffic (Table 2 per-line energies) ---
         let a_bytes = st.a_reads * reps; // weights, INT8
@@ -272,6 +336,34 @@ mod tests {
         )
         .0;
         assert!(ours.total_pj() < e.total_pj());
+    }
+
+    /// The encoded-weight cache mode: weight GEMMs charge zero
+    /// weight-encode events and less encoder energy on EN-T(Ours);
+    /// activation-by-activation GEMMs (attention scores/context) keep
+    /// encoding; baseline is bit-for-bit indifferent.
+    #[test]
+    fn encode_cache_zeroes_weight_encode_energy() {
+        use crate::nn::transformer::TransformerSpec;
+        let spec = TransformerSpec::tiny();
+        let net = spec.decode_network(17);
+        let soc = Soc::paper_config(ArchKind::SystolicOs, Variant::EntOurs);
+        let (plain, _) = frame_energy(&soc, &net);
+        let (cached, _) = frame_energy_with(&soc, &net, EnergyOpts { encode_cache: true });
+        assert!(plain.weight_encodes > 0);
+        assert_eq!(cached.weight_encodes, 0, "cached decode must not encode weights");
+        assert!(cached.encodes > 0, "score/context GEMMs still encode");
+        assert!(cached.encodes < plain.encodes);
+        assert!(cached.encode_pj < plain.encode_pj);
+        assert!(cached.total_pj() < plain.total_pj());
+        assert_eq!(cached.macs, plain.macs);
+        assert_eq!(cached.cycles, plain.cycles);
+        // Baseline keeps its per-PE encoders either way.
+        let socb = Soc::paper_config(ArchKind::SystolicOs, Variant::Baseline);
+        let (pb, _) = frame_energy(&socb, &net);
+        let (cb, _) = frame_energy_with(&socb, &net, EnergyOpts { encode_cache: true });
+        assert_eq!(pb.encodes, cb.encodes);
+        assert_eq!(pb.total_pj(), cb.total_pj());
     }
 
     #[test]

@@ -1,0 +1,234 @@
+//! Cache-equivalence suite for the encoded-weight cache
+//! (`encoding::prepacked`): logits must be bit-identical with the cache
+//! on or off across the full 5-architecture × 3-variant grid, under
+//! forced eviction (a budget below one entry), and after a mid-serve
+//! weight swap — and with the cache resident, the planner must charge
+//! **zero** weight-encode events per steady-state decode step.
+
+use std::sync::Arc;
+
+use ent::arch::{ArchKind, MatOperand, Tcu, TcuEngine, ALL_ARCHS};
+use ent::coordinator::{Config, Coordinator, TokenRequest};
+use ent::encoding::prepacked::{CachedWeight, EncodeCache, PrePackedMatrix};
+use ent::nn::forward::QuantCnn;
+use ent::nn::transformer::QuantTransformer;
+use ent::pe::{Variant, ALL_VARIANTS};
+use ent::sim::planner::TilePlan;
+use ent::sim::GemmShape;
+use ent::soc::energy::{frame_energy, frame_energy_with, EnergyOpts};
+use ent::soc::Soc;
+use ent::util::prng::Rng;
+
+fn prompt(n: usize) -> Vec<u16> {
+    (0..n).map(|i| ((i * 7 + 3) % 64) as u16).collect()
+}
+
+/// The headline equivalence: prefill + greedy KV-cache decode produce
+/// bit-identical logits and tokens with the encode cache on or off, on
+/// every architecture × variant.
+#[test]
+fn transformer_logits_identical_with_cache_across_grid() {
+    let plain = QuantTransformer::tiny_native();
+    for arch in ALL_ARCHS {
+        let size = if arch == ArchKind::Cube3d { 4 } else { 8 };
+        for variant in ALL_VARIANTS {
+            let eng = Tcu::new(arch, size, variant).engine();
+            let cache = Arc::new(EncodeCache::new(16 << 20));
+            let cached = QuantTransformer::tiny_native().with_encode_cache(cache.clone());
+            let (want_logits, want_toks) = plain.generate(&eng, &prompt(5), 3);
+            let (got_logits, got_toks) = cached.generate(&eng, &prompt(5), 3);
+            assert_eq!(got_logits, want_logits, "{} {}", arch.name(), variant.name());
+            assert_eq!(got_toks, want_toks, "{} {}", arch.name(), variant.name());
+            let st = cache.stats();
+            if variant == Variant::EntOurs {
+                assert!(st.misses > 0, "cache untouched on {}", arch.name());
+                assert_eq!(st.evictions, 0, "budget must hold the tiny model");
+            } else {
+                // Baseline/MBE cannot consume EN-T codes — the helpers
+                // must not even resolve (no wasted encodes, no
+                // misleading counters).
+                assert_eq!(st.hits + st.misses, 0, "{} resolved", variant.name());
+            }
+        }
+    }
+}
+
+/// Steady state performs zero re-encodes: after the first forward, the
+/// whole weight set is resident and every later step is all hits.
+#[test]
+fn steady_state_decode_is_all_cache_hits() {
+    let cache = Arc::new(EncodeCache::new(16 << 20));
+    let model = QuantTransformer::tiny_native().with_encode_cache(cache.clone());
+    let eng = Tcu::new(ArchKind::SystolicOs, 8, Variant::EntOurs).engine();
+    let mut caches = model.empty_caches();
+    let mut logits = model.prefill(&eng, &prompt(6), &mut caches);
+    let warm = cache.stats();
+    // 2 blocks × (Q,K,V,O,W1,W2) + head = 13 unique weight tensors.
+    assert_eq!(warm.misses, 13, "one encode per weight tensor");
+    for _ in 0..4 {
+        let next = QuantTransformer::argmax(&logits);
+        logits = model.decode(&eng, next, &mut caches);
+    }
+    let after = cache.stats();
+    assert_eq!(after.misses, warm.misses, "decode must never re-encode weights");
+    assert!(after.hits >= warm.hits + 4 * 13, "every decode-step GEMM must hit");
+}
+
+/// CNN forwards share the same invariant across the grid.
+#[test]
+fn cnn_logits_identical_with_cache_across_grid() {
+    let plain = QuantCnn::tiny_native();
+    let mut rng = Rng::new(0xCAFE);
+    let img = rng.i8_vec(plain.input_len());
+    for arch in [ArchKind::Matrix2d, ArchKind::SystolicWs, ArchKind::Cube3d] {
+        let size = if arch == ArchKind::Cube3d { 4 } else { 8 };
+        for variant in ALL_VARIANTS {
+            let eng = Tcu::new(arch, size, variant).engine();
+            let cache = Arc::new(EncodeCache::new(16 << 20));
+            let cached = QuantCnn::tiny_native().with_encode_cache(cache);
+            assert_eq!(
+                cached.forward(&eng, &img),
+                plain.forward(&eng, &img),
+                "{} {}",
+                arch.name(),
+                variant.name()
+            );
+        }
+    }
+}
+
+/// Forced eviction: starved budgets must still be bit-identical.
+/// Two degenerates: a budget below every entry (the oversized-entry
+/// bypass — nothing is ever resident) and a budget holding exactly one
+/// d×d projection (the 13 weight tensors evict each other constantly).
+#[test]
+fn forced_eviction_stays_bit_identical() {
+    let plain = QuantTransformer::tiny_native();
+    let eng = Tcu::new(ArchKind::Matrix2d, 8, Variant::EntOurs).engine();
+    let (want, want_toks) = plain.generate(&eng, &prompt(4), 2);
+
+    let starved = Arc::new(EncodeCache::new(1));
+    let cached = QuantTransformer::tiny_native().with_encode_cache(starved.clone());
+    let (got, got_toks) = cached.generate(&eng, &prompt(4), 2);
+    assert_eq!(got, want);
+    assert_eq!(got_toks, want_toks);
+    let st = starved.stats();
+    assert_eq!(st.hits, 0, "nothing can survive a 1-byte budget");
+    assert_eq!(st.evictions, 0, "oversized entries bypass insertion");
+    assert_eq!((st.entries, st.bytes), (0, 0));
+
+    // One d×d projection's worth of budget: the projections thrash
+    // (real evictions), the larger MLP/head tensors bypass — logits
+    // still bit-identical.
+    let d = plain.spec.d_model;
+    let one_proj = PrePackedMatrix::encode(&vec![0i8; d * d], d, d).bytes();
+    let churning = Arc::new(EncodeCache::new(one_proj));
+    let cached = QuantTransformer::tiny_native().with_encode_cache(churning.clone());
+    let (got, got_toks) = cached.generate(&eng, &prompt(4), 2);
+    assert_eq!(got, want);
+    assert_eq!(got_toks, want_toks);
+    let st = churning.stats();
+    assert!(st.evictions > 0, "projection-sized budget must churn: {st:?}");
+    assert!(st.entries <= 1, "{st:?}");
+}
+
+/// Mid-serve weight swap: same identity, new content — the fingerprint
+/// mismatch must drop the stale codes and the cached result must track
+/// the *new* weights exactly.
+#[test]
+fn weight_swap_invalidates_and_tracks_new_content() {
+    let cache = EncodeCache::new(1 << 20);
+    let eng = Tcu::new(ArchKind::SystolicWs, 8, Variant::EntOurs).engine();
+    let mut rng = Rng::new(0x5AB);
+    let (m, k, n) = (6, 16, 10);
+    let a = rng.i8_vec(m * k);
+    let old = rng.i8_vec(k * n);
+    let new = rng.i8_vec(k * n);
+    let mut w = CachedWeight::new(old.clone(), k, n);
+
+    let mut c = vec![0i64; m * n];
+    let pm = w.resolve(&cache);
+    eng.matmul_prepacked_into(MatOperand::Raw(&a), MatOperand::Packed(&pm), &mut c, m, k, n);
+    assert_eq!(c, eng.matmul(&a, &old, m, k, n));
+
+    w.swap(new.clone());
+    let pm = w.resolve(&cache);
+    eng.matmul_prepacked_into(MatOperand::Raw(&a), MatOperand::Packed(&pm), &mut c, m, k, n);
+    assert_eq!(c, eng.matmul(&a, &new, m, k, n), "stale codes served after swap");
+
+    let st = cache.stats();
+    assert_eq!(st.invalidations, 1);
+    assert_eq!(st.misses, 2);
+    assert_eq!(st.entries, 1, "the stale entry must be gone");
+}
+
+/// The acceptance-criterion planner assertion: with the cache resident,
+/// a steady-state decode step charges **zero** weight-encode events on
+/// EN-T(Ours) — while the attention score/context GEMMs (no weights)
+/// keep their activation encodes, and the non-consuming variants are
+/// unchanged.
+#[test]
+fn decode_step_weight_encodes_are_zero_with_cache() {
+    let spec = ent::nn::transformer::TransformerSpec::tiny();
+    let decode = spec.decode_network(17);
+    let soc = Soc::paper_config(ArchKind::SystolicOs, Variant::EntOurs);
+    let (plain, _) = frame_energy(&soc, &decode);
+    let (cached, _) = frame_energy_with(&soc, &decode, EnergyOpts { encode_cache: true });
+    assert!(plain.weight_encodes > 0, "uncached decode must encode weights");
+    assert_eq!(cached.weight_encodes, 0, "cached decode must not encode weights");
+    assert!(cached.encodes > 0, "activation GEMMs keep encoding");
+    assert!(cached.encode_pj < plain.encode_pj);
+    assert!(cached.total_pj() < plain.total_pj());
+    // Per-GEMM view through the planner itself.
+    let tcu = Tcu::new(ArchKind::SystolicWs, 8, Variant::EntOurs);
+    let plan = TilePlan::new(&tcu, GemmShape::new(64, 32, 32));
+    assert!(plan.stats().weight_encodes > 0);
+    assert_eq!(plan.stats_cached().weight_encodes, 0);
+    assert_eq!(plan.stats_cached().encodes, 0);
+    // EN-T(MBE) cannot consume EN-T codes: counts unchanged.
+    let mbe = Tcu::new(ArchKind::SystolicWs, 8, Variant::EntMbe);
+    let mp = TilePlan::new(&mbe, GemmShape::new(64, 32, 32));
+    assert_eq!(mp.stats().encodes, mp.stats_cached().encodes);
+}
+
+/// End-to-end through the continuous-batching scheduler: `ent serve
+/// --continuous --encode-cache` must return the same logits/tokens as
+/// an uncached coordinator, and the cache counters must ride the
+/// metrics snapshot.
+#[test]
+fn continuous_serving_with_cache_matches_uncached() {
+    let mut cached_cfg = Config::continuous(2);
+    cached_cfg.encode_cache_bytes = 8 << 20;
+    let cached = Coordinator::start(cached_cfg).expect("cached coordinator");
+    let plain = Coordinator::start(Config::continuous(2)).expect("plain coordinator");
+
+    let req = || TokenRequest::generate(prompt(6), 2);
+    let want = plain.infer_tokens(req()).expect("plain serve");
+    let got = cached.infer_tokens(req()).expect("cached serve");
+    assert_eq!(got.logits, want.logits, "cache changed served logits");
+    assert_eq!(got.generated, want.generated);
+    // A second request reuses the resident codes.
+    let again = cached.infer_tokens(req()).expect("second cached serve");
+    assert_eq!(again.logits, want.logits);
+
+    let m = cached.metrics();
+    let cs = m.encode_cache.expect("cache counters in snapshot");
+    assert!(cs.misses > 0 && cs.hits > 0, "{cs:?}");
+    assert!(plain.metrics().encode_cache.is_none());
+    cached.shutdown();
+    plain.shutdown();
+}
+
+/// The prepacked codes are the LUT codes: a PrePackedMatrix round-trips
+/// element-for-element, so cached and uncached encodes are the same
+/// bits by construction (the structural reason the whole suite holds).
+#[test]
+fn prepacked_roundtrip_matches_raw() {
+    let mut rng = Rng::new(0xB17);
+    let raw = rng.i8_vec(24 * 24);
+    let pm = PrePackedMatrix::encode(&raw, 24, 24);
+    for (i, &v) in raw.iter().enumerate() {
+        assert_eq!(pm.code(i).decode(), v as i64, "element {i}");
+    }
+    assert_eq!(pm.raw(), &raw[..]);
+}
