@@ -24,9 +24,13 @@ fn main() {
     let duration_ms: u64 = if quick { 200 } else { 1500 };
     let mut rows: Vec<Json> = Vec::new();
 
-    // scheduler × rate grid on pure token traffic, then one mixed row.
-    let cases: [(&str, f64, f64); 5] = [
+    // scheduler × rate grid on pure token traffic, then one mixed row
+    // and the kv-prepack off contrast (continuous serves with the
+    // append-only prepacked KV cache on by default — the _nopp row
+    // shows the decode tokens/s delta at kv-prepack on vs off).
+    let cases: [(&str, f64, f64); 6] = [
         ("continuous", 100.0, 0.0),
+        ("continuous_nopp", 100.0, 0.0),
         ("continuous", 300.0, 0.0),
         ("window", 100.0, 0.0),
         ("window", 300.0, 0.0),
@@ -35,6 +39,11 @@ fn main() {
     for (scheduler, rate, mix) in cases {
         let cfg = match scheduler {
             "continuous" => Config::continuous(SHARDS),
+            "continuous_nopp" => {
+                let mut c = Config::continuous(SHARDS);
+                c.kv_prepack = Some(false);
+                c
+            }
             _ => Config::native(SHARDS),
         };
         let coord = Coordinator::start(cfg).expect("coordinator");
@@ -47,6 +56,7 @@ fn main() {
             seed: 0xBE7C,
         };
         let r = loadgen::run(&coord, &load);
+        let m = coord.metrics();
         coord.shutdown();
         let lat = r.latency_us.as_ref();
         let name = format!(
@@ -74,6 +84,10 @@ fn main() {
             ("image_mix", Json::num(mix)),
         ];
         fields.extend(r.json_fields());
+        // Cache-residency context (ungated): how much of the attention
+        // history entered the GEMMs pre-encoded.
+        fields.push(("kv_rows_encoded", Json::num(m.kv_rows_encoded as f64)));
+        fields.push(("kv_rows_reused", Json::num(m.kv_rows_reused as f64)));
         rows.push(Json::obj(fields));
     }
 

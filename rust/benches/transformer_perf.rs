@@ -4,8 +4,10 @@
 //! contrast that motivates the KV cache.
 //!
 //! Emits `BENCH_transformer.json` at the workspace root — tokens/s and
-//! ns/MAC per arch × variant, prefill vs decode — so the transformer
-//! perf trajectory is tracked across PRs alongside `BENCH_hotpath.json`.
+//! ns/MAC per arch × variant, prefill vs plain decode vs decode through
+//! the append-only prepacked KV cache (`decode_kvpp` rows) — so the
+//! transformer perf trajectory is tracked across PRs alongside
+//! `BENCH_hotpath.json`.
 
 use ent::arch::{ArchKind, Scale, Tcu, ALL_ARCHS};
 use ent::nn::transformer::QuantTransformer;
@@ -20,6 +22,7 @@ fn main() {
     header("transformer workload performance");
     let mut suite = Suite::new();
     let model = QuantTransformer::tiny_native();
+    let model_pp = QuantTransformer::tiny_native().with_kv_prepack(true);
     let spec = model.spec;
     let prompt: Vec<u16> = (0..SEQ).map(|i| ((i * 11 + 2) % spec.vocab) as u16).collect();
     let prefill_macs = spec.prefill_network(SEQ).total_macs() as f64;
@@ -64,6 +67,22 @@ fn main() {
                 black_box(model.decode(&eng, 7, &mut caches));
             });
             json_rows.push(row(arch, variant, "decode", 1, decode_macs, r));
+
+            // Decode through the append-only prepacked KV cache: the
+            // truncate invalidates exactly one position, so each
+            // iteration re-encodes only the appended token's K/V rows
+            // while the history's codes are reused (non-EN-T variants
+            // exercise the transparent fallback).
+            let mut caches = model_pp.empty_caches();
+            model_pp.prefill(&eng, &prompt, &mut caches);
+            let name = format!("decode_kvpp_{}_{}", arch.short_name(), variant.name());
+            let r = suite.bench(&name, || {
+                for c in caches.iter_mut() {
+                    c.truncate(SEQ);
+                }
+                black_box(model_pp.decode(&eng, 7, &mut caches));
+            });
+            json_rows.push(row(arch, variant, "decode_kvpp", 1, decode_macs, r));
         }
     }
 

@@ -87,15 +87,24 @@ impl Datapath {
 }
 
 /// One GEMM operand as seen by [`TcuEngine::matmul_prepacked_into`]:
-/// raw int8 values, or a [`PrePackedMatrix`] carrying both the raw
-/// values (for the non-EN-T fallback) and the pre-encoded EN-T codes
-/// (for the reuse path).
+/// raw int8 values, a [`PrePackedMatrix`] carrying both the raw values
+/// (for the non-EN-T fallback) and the pre-encoded EN-T codes (for the
+/// reuse path), or a raw view paired with a **borrowed** code sidecar
+/// of the same row-major layout — the append-only KV-cache path
+/// ([`KvCache`](crate::nn::attention::KvCache) owns the codes and lends
+/// per-head gathers of them without re-encoding or allocating).
 #[derive(Clone, Copy, Debug)]
 pub enum MatOperand<'a> {
     /// Plain row-major int8 values.
     Raw(&'a [i8]),
     /// A pre-encoded weight matrix (raw + codes).
     Packed(&'a PrePackedMatrix),
+    /// Raw values plus a caller-owned code sidecar (`codes[i]` encodes
+    /// `raw[i]`); both row-major over the same shape.
+    Codes {
+        raw: &'a [i8],
+        codes: &'a [PackedCode],
+    },
 }
 
 impl<'a> MatOperand<'a> {
@@ -104,14 +113,25 @@ impl<'a> MatOperand<'a> {
         match self {
             MatOperand::Raw(r) => r,
             MatOperand::Packed(p) => p.raw(),
+            MatOperand::Codes { raw, .. } => raw,
         }
     }
 
     /// The pre-encoded form, if this operand carries one.
     pub fn packed(self) -> Option<&'a PrePackedMatrix> {
         match self {
-            MatOperand::Raw(_) => None,
             MatOperand::Packed(p) => Some(p),
+            MatOperand::Raw(_) | MatOperand::Codes { .. } => None,
+        }
+    }
+
+    /// The row-major code buffer, if this operand carries one (either a
+    /// [`PrePackedMatrix`]'s own or a borrowed sidecar).
+    pub fn codes(self) -> Option<&'a [PackedCode]> {
+        match self {
+            MatOperand::Raw(_) => None,
+            MatOperand::Packed(p) => Some(p.codes()),
+            MatOperand::Codes { codes, .. } => Some(codes),
         }
     }
 }
@@ -180,14 +200,18 @@ pub trait TcuEngine: Send + Sync {
     }
 
     /// Bit-accurate GEMM `C = A×B` where either operand may arrive
-    /// **pre-encoded** ([`MatOperand::Packed`]) — the encode-reuse entry
-    /// the weight-side callers use. On the EN-T(Ours) variant the packed
-    /// side's codes feed the RME datapath directly, so the GEMM performs
-    /// **zero** encoder lookups for that operand (the planner-side
-    /// invariant: [`TilePlan::stats_cached`] charges zero weight-encode
-    /// events). Every other variant — and a call with no packed operand
-    /// — falls back to [`TcuEngine::matmul_into`] on the raw views, so
-    /// the five-architecture × three-variant grid stays uniform.
+    /// **pre-encoded** ([`MatOperand::Packed`], or a borrowed sidecar
+    /// via [`MatOperand::Codes`] — the append-only KV-cache path) — the
+    /// encode-reuse entry the weight-side and attention callers use. On
+    /// the EN-T(Ours) variant the encoded side's codes feed the RME
+    /// datapath directly, so the GEMM performs **zero** encoder lookups
+    /// for that operand (the planner-side invariants:
+    /// [`TilePlan::stats_cached`] charges zero weight-encode events,
+    /// [`TilePlan::stats_kv_prepacked`](crate::sim::planner::TilePlan::stats_kv_prepacked)
+    /// charges only the newly appended delta). Every other variant — and
+    /// a call with no encoded operand — falls back to
+    /// [`TcuEngine::matmul_into`] on the raw views, so the
+    /// five-architecture × three-variant grid stays uniform.
     ///
     /// Results are bit-identical to [`TcuEngine::matmul_into`] on every
     /// route: the codes come from the same compile-time LUT the array
@@ -213,8 +237,14 @@ pub trait TcuEngine: Send + Sync {
         if let Some(p) = b.packed() {
             assert_eq!(p.shape(), (k, n), "packed B shape");
         }
+        if let Some(cc) = a.codes() {
+            assert_eq!(cc.len(), m * k, "A code sidecar shape");
+        }
+        if let Some(cc) = b.codes() {
+            assert_eq!(cc.len(), k * n, "B code sidecar shape");
+        }
         let consumes_codes = matches!(self.tcu().variant, Variant::EntOurs)
-            && (a.packed().is_some() || b.packed().is_some());
+            && (a.codes().is_some() || b.codes().is_some());
         if !consumes_codes {
             // Baseline re-encodes inside every PE and EN-T(MBE) Booth-
             // recodes on the fly — neither can consume EN-T codes, so
@@ -330,11 +360,11 @@ fn run_band_prepacked(
     n: usize,
 ) {
     let (ar, br) = (a.raw(), b.raw());
-    match (a.packed(), b.packed()) {
-        (Some(pa), _) => {
+    match (a.codes(), b.codes()) {
+        (Some(ca), _) => {
             for i in 0..rows {
                 for p in 0..k {
-                    let code = pa.code((r0 + i) * k + p);
+                    let code = ca[(r0 + i) * k + p];
                     let row = &mut c_band[i * n..(i + 1) * n];
                     for (cv, &bv) in row.iter_mut().zip(&br[p * n..(p + 1) * n]) {
                         *cv += mul.mul_packed(code, bv as i64);
@@ -342,13 +372,13 @@ fn run_band_prepacked(
                 }
             }
         }
-        (None, Some(pb)) => {
+        (None, Some(cb)) => {
             for i in 0..rows {
                 for p in 0..k {
                     let av = ar[(r0 + i) * k + p] as i64;
                     let row = &mut c_band[i * n..(i + 1) * n];
                     for (j, cv) in row.iter_mut().enumerate() {
-                        *cv += mul.mul_packed(pb.code(p * n + j), av);
+                        *cv += mul.mul_packed(cb[p * n + j], av);
                     }
                 }
             }
@@ -578,6 +608,44 @@ mod tests {
                     (MatOperand::Raw(&a), MatOperand::Packed(&pb)),
                     (MatOperand::Packed(&pa), MatOperand::Packed(&pb)),
                     (MatOperand::Raw(&a), MatOperand::Raw(&b)),
+                ] {
+                    let mut c = vec![0i64; m * n];
+                    eng.matmul_prepacked_into(oa, ob, &mut c, m, k, n);
+                    assert_eq!(c, want, "{} {}", arch.name(), variant.name());
+                }
+            }
+        }
+    }
+
+    /// A borrowed code sidecar ([`MatOperand::Codes`]) is bit-identical
+    /// to the plain path on either side, across the full grid — the
+    /// operand form the append-only prepacked KV cache lends.
+    #[test]
+    fn code_sidecar_operand_matches_plain_all_arch_variants() {
+        let mut rng = Rng::new(0xEE);
+        let (m, k, n) = (7, 12, 9);
+        let a = rng.i8_vec(m * k);
+        let b = rng.i8_vec(k * n);
+        let ac: Vec<PackedCode> = a.iter().map(|&v| lut_i8(v)).collect();
+        let bc: Vec<PackedCode> = b.iter().map(|&v| lut_i8(v)).collect();
+        for arch in ALL_ARCHS {
+            let size = if arch == ArchKind::Cube3d { 4 } else { 8 };
+            for variant in ALL_VARIANTS {
+                let eng = engine_for(Tcu::new(arch, size, variant));
+                let want = gemm_ref(&a, &b, m, k, n);
+                for (oa, ob) in [
+                    (
+                        MatOperand::Raw(&a),
+                        MatOperand::Codes { raw: &b, codes: &bc },
+                    ),
+                    (
+                        MatOperand::Codes { raw: &a, codes: &ac },
+                        MatOperand::Raw(&b),
+                    ),
+                    (
+                        MatOperand::Codes { raw: &a, codes: &ac },
+                        MatOperand::Codes { raw: &b, codes: &bc },
+                    ),
                 ] {
                     let mut c = vec![0i64; m * n];
                     eng.matmul_prepacked_into(oa, ob, &mut c, m, k, n);

@@ -40,7 +40,15 @@ struct Inner {
     busy_ns: u64,
     /// Shard-pool capacity over the same steps (step wall × shards).
     capacity_ns: u64,
+    /// KV positions whose prepack codes were freshly encoded (append
+    /// deltas) / reused from the resident sidecar.
+    kv_rows_encoded: u64,
+    kv_rows_reused: u64,
     started: Instant,
+    /// When the first request/token activity was recorded — the
+    /// throughput denominator's start, so idle time before traffic
+    /// arrives does not deflate `tokens_per_s`.
+    first_activity: Option<Instant>,
     // Bounded ring of the most recent request latencies.
     latencies_us: Vec<f64>,
     lat_next: usize,
@@ -64,7 +72,12 @@ pub struct Snapshot {
     /// Summary of the most recent request latencies (reservoir-bounded).
     pub latency_us: Option<Summary>,
     pub mean_batch: f64,
-    /// Cumulative token positions per second of coordinator uptime.
+    /// Cumulative token positions per second of **serving time** — the
+    /// denominator starts at the first recorded request/token activity,
+    /// not at coordinator startup, so idle time before traffic arrives
+    /// does not deflate throughput. (Idle gaps *between* bursts still
+    /// count; interval-scope by differencing two snapshots' raw
+    /// counters, as `coordinator::loadgen` does.)
     pub tokens_per_s: f64,
     /// Engine-shard busy fraction while the scheduler was stepping
     /// (0 when no step has been recorded, e.g. window mode).
@@ -77,6 +90,13 @@ pub struct Snapshot {
     /// Encoded-weight cache counters (`None` when serving without a
     /// cache — see `Config::encode_cache_bytes`).
     pub encode_cache: Option<CacheStats>,
+    /// Prepacked-KV-cache residency: positions whose codes were freshly
+    /// encoded (one per appended token per layer) vs cached positions
+    /// whose resident codes a step reused. Both 0 when serving without
+    /// `--kv-prepack` (or on non-EN-T engines, which cannot consume
+    /// codes).
+    pub kv_rows_encoded: u64,
+    pub kv_rows_reused: u64,
 }
 
 impl Metrics {
@@ -91,7 +111,10 @@ impl Metrics {
                 batch_count: 0,
                 busy_ns: 0,
                 capacity_ns: 0,
+                kv_rows_encoded: 0,
+                kv_rows_reused: 0,
                 started: Instant::now(),
+                first_activity: None,
                 latencies_us: Vec::new(),
                 lat_next: 0,
                 encode_cache: None,
@@ -106,8 +129,23 @@ impl Metrics {
         self.inner.lock().unwrap().encode_cache = Some(cache);
     }
 
+    /// Stamp the serving-time origin: a request has arrived. Idempotent
+    /// — only the first call sets the mark. The coordinator calls this
+    /// at submission, so the throughput denominator starts when traffic
+    /// starts, not when the first batch *completes* (completion-time
+    /// stamping would shrink the denominator to near zero on short runs
+    /// and inflate `tokens_per_s` instead of fixing it).
+    pub fn record_arrival(&self) {
+        self.inner
+            .lock()
+            .unwrap()
+            .first_activity
+            .get_or_insert_with(Instant::now);
+    }
+
     pub fn record(&self, latency_us: u64, batch: usize) {
         let mut g = self.inner.lock().unwrap();
+        g.first_activity.get_or_insert_with(Instant::now);
         g.requests += 1;
         g.batch_sum += batch as u64;
         g.batch_count += 1;
@@ -132,7 +170,18 @@ impl Metrics {
 
     /// `n` token positions fed through the transformer stack.
     pub fn record_tokens(&self, n: u64) {
-        self.inner.lock().unwrap().tokens += n;
+        let mut g = self.inner.lock().unwrap();
+        g.first_activity.get_or_insert_with(Instant::now);
+        g.tokens += n;
+    }
+
+    /// Prepacked-KV residency from one step: `encoded` positions whose
+    /// codes were freshly derived (append deltas), `reused` cached
+    /// positions whose resident codes fed the attention GEMMs.
+    pub fn record_kv(&self, encoded: u64, reused: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.kv_rows_encoded += encoded;
+        g.kv_rows_reused += reused;
     }
 
     /// One scheduler step: total shard busy time vs pool capacity
@@ -146,6 +195,14 @@ impl Metrics {
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap();
         let uptime_s = g.started.elapsed().as_secs_f64().max(1e-9);
+        // Throughput denominator: serving time, from the first recorded
+        // activity — a coordinator that sat idle before (or without)
+        // traffic reports the rate it actually served at.
+        let serving_s = g
+            .first_activity
+            .map(|t| t.elapsed().as_secs_f64())
+            .unwrap_or(uptime_s)
+            .max(1e-9);
         Snapshot {
             requests: g.requests,
             errors: g.errors,
@@ -161,7 +218,7 @@ impl Metrics {
             } else {
                 g.batch_sum as f64 / g.batch_count as f64
             },
-            tokens_per_s: g.tokens as f64 / uptime_s,
+            tokens_per_s: g.tokens as f64 / serving_s,
             occupancy: if g.capacity_ns == 0 {
                 0.0
             } else {
@@ -171,6 +228,8 @@ impl Metrics {
             capacity_ns: g.capacity_ns,
             uptime_s,
             encode_cache: g.encode_cache.as_ref().map(|c| c.stats()),
+            kv_rows_encoded: g.kv_rows_encoded,
+            kv_rows_reused: g.kv_rows_reused,
         }
     }
 }
@@ -251,6 +310,39 @@ mod tests {
         w.resolve(&cache);
         let s = m.snapshot().encode_cache.expect("cache attached");
         assert_eq!((s.hits, s.misses), (1, 1));
+    }
+
+    /// Prepacked-KV residency counters accumulate and surface.
+    #[test]
+    fn kv_counters_surface_in_snapshot() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!((s.kv_rows_encoded, s.kv_rows_reused), (0, 0));
+        m.record_kv(3, 12);
+        m.record_kv(1, 14);
+        let s = m.snapshot();
+        assert_eq!(s.kv_rows_encoded, 4);
+        assert_eq!(s.kv_rows_reused, 26);
+    }
+
+    /// The throughput denominator starts at the first arrival: an idle
+    /// prefix before traffic must not deflate tokens/s (the old
+    /// uptime-based rate did), and later arrivals must not move the
+    /// origin forward (which would inflate it).
+    #[test]
+    fn tokens_per_s_measures_from_first_arrival() {
+        let m = Metrics::new();
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        m.record_arrival();
+        m.record_arrival(); // idempotent: origin stays at the first one
+        m.record_tokens(100);
+        let s = m.snapshot();
+        assert!(
+            s.tokens_per_s > 100.0 / s.uptime_s,
+            "idle prefix deflated tokens/s: {} vs uptime rate {}",
+            s.tokens_per_s,
+            100.0 / s.uptime_s
+        );
     }
 
     /// The latency reservoir is bounded; totals keep counting past it.

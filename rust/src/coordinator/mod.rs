@@ -153,6 +153,16 @@ pub struct Config {
     /// snapshots. Ignored by the artifacts backend (the AOT runtime
     /// owns its own operand layout).
     pub encode_cache_bytes: usize,
+    /// Append-only **prepacked KV cache** for the transformer's
+    /// attention contractions (`ent serve|loadgen --kv-prepack on|off`):
+    /// each decode step encodes only the newly appended token's K/V
+    /// rows; the history's codes are reused verbatim (bit-identical
+    /// either way, `tests/kv_prepack.rs`). `None` picks the mode
+    /// default — **on** under continuous scheduling (the decode-heavy
+    /// hot path the reuse targets), off under window batching. Only
+    /// EN-T(Ours) engines consume the codes; other variants fall back
+    /// transparently. Residency counters ride the metrics snapshots.
+    pub kv_prepack: Option<bool>,
 }
 
 impl Default for Config {
@@ -166,6 +176,7 @@ impl Default for Config {
             twin_arch: ArchKind::SystolicOs,
             twin_variant: Variant::EntOurs,
             encode_cache_bytes: 0,
+            kv_prepack: None,
         }
     }
 }
@@ -326,6 +337,9 @@ impl Coordinator {
             enqueued: Instant::now(),
             respond: tx,
         };
+        // Serving time starts at the first arrival (the tokens/s
+        // denominator — see `Metrics::record_arrival`).
+        self.metrics.record_arrival();
         // If the executor is gone the receiver will simply disconnect.
         let _ = self.tx.send(Msg::Job(job));
         rx
@@ -354,6 +368,7 @@ impl Coordinator {
             enqueued: Instant::now(),
             respond: tx,
         };
+        self.metrics.record_arrival();
         let _ = self.tx.send(Msg::Tokens(job));
         rx
     }
@@ -509,6 +524,14 @@ fn executor_thread(
         Backend::Native { shards } => {
             let mut model = QuantCnn::tiny_native();
             let mut lm = QuantTransformer::tiny_native();
+            // Append-only prepacked KV cache: on by default under the
+            // continuous scheduler (the decode-heavy hot path), off
+            // under window batching unless asked for. Bit-identical
+            // either way; non-EN-T shards fall back transparently.
+            let kv_prepack = cfg
+                .kv_prepack
+                .unwrap_or(matches!(cfg.mode, ServeMode::Continuous(_)));
+            lm = lm.with_kv_prepack(kv_prepack);
             // One encoded-weight cache shared by both models and every
             // engine shard: the stationary operand of each weight GEMM
             // is encoded once and reused across tiles, steps, and
@@ -623,15 +646,17 @@ fn executor_thread(
 /// Prefill a prompt and greedily decode `max_new` tokens against the
 /// KV cache on one engine — the sequential reference path the window
 /// batcher serves per job (and the continuous scheduler must match
-/// bit-for-bit).
+/// bit-for-bit). `scratch` is reused across the prefill and every
+/// decode step (and across jobs, when the caller keeps it).
 pub(crate) fn generate_sequential<E: crate::arch::TcuEngine + ?Sized>(
     lm: &QuantTransformer,
     eng: &E,
     tokens: &[u16],
     max_new: usize,
+    scratch: &mut crate::nn::attention::AttnScratch,
 ) -> std::result::Result<(Vec<f32>, Vec<u16>), String> {
     lm.check_request(tokens, max_new)?;
-    Ok(lm.generate(eng, tokens, max_new))
+    Ok(lm.generate_with(eng, tokens, max_new, scratch))
 }
 
 /// Serve one batch of transformer token jobs. On the native backend,
@@ -657,18 +682,34 @@ fn run_token_batch(exec: &Executor, metrics: &Metrics, batch: Vec<TokenJob>) {
                 for (si, eng) in shards.iter().enumerate() {
                     let batch = &batch;
                     handles.push(scope.spawn(move || {
+                        // One scratch per shard thread, shared by every
+                        // job it serves (prefill + all decode steps).
+                        let mut scratch = crate::nn::attention::AttnScratch::new();
                         let mut mine = Vec::new();
                         let mut i = si;
                         while i < bsize {
                             let job = &batch[i];
-                            mine.push((i, generate_sequential(lm, eng, &job.tokens, job.max_new)));
+                            mine.push((
+                                i,
+                                generate_sequential(
+                                    lm,
+                                    eng,
+                                    &job.tokens,
+                                    job.max_new,
+                                    &mut scratch,
+                                ),
+                            ));
                             i += nshards;
                         }
-                        mine
+                        (mine, scratch.take_kv_counters())
                     }));
                 }
                 for h in handles {
-                    for (i, r) in h.join().expect("token shard thread") {
+                    let (mine, (encoded, reused)) = h.join().expect("token shard thread");
+                    if encoded + reused > 0 {
+                        metrics.record_kv(encoded, reused);
+                    }
+                    for (i, r) in mine {
                         outs[i] = Some(r);
                     }
                 }

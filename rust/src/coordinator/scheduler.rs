@@ -48,7 +48,16 @@
 //! codes shared across *all* in-flight sequences and steps, so
 //! steady-state decode performs zero weight-encode lookups per step
 //! (the cache equivalence suite in `tests/encode_cache.rs` pins both
-//! the bit-identity and the counter behaviour).
+//! the bit-identity and the counter behaviour). The activation side
+//! rides the **append-only prepacked KV cache** (`Config::kv_prepack`,
+//! on by default here): each sequence's per-layer `KvCache` keeps a
+//! code sidecar, so a decode step encodes only the newly appended
+//! token's K/V rows while the history's codes feed the score/context
+//! GEMMs verbatim — O(1) encode events per step instead of O(seq)
+//! (`tests/kv_prepack.rs`). Each shard reuses one `AttnScratch` across
+//! every step it steals, keeping the decode hot path allocation-free;
+//! the scratch's residency counters drain into the metrics after each
+//! token group.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -57,7 +66,7 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::arch::AnyEngine;
-use crate::nn::attention::KvCache;
+use crate::nn::attention::{AttnScratch, KvCache};
 use crate::nn::forward::QuantCnn;
 use crate::nn::transformer::{QuantTransformer, StepSeq};
 
@@ -113,6 +122,12 @@ enum Task<'a> {
 pub(super) fn run(ctx: SchedulerCtx<'_>) {
     let input_len = ctx.cnn.input_len();
     let nshards = ctx.shards.len().max(1);
+    // One attention scratch per shard, reused across every step the
+    // shard steals — the decode hot path never rebuilds its per-head
+    // buffers (the PR 1 allocation-free invariant). The mutex is
+    // uncontended: shard i is the only worker that locks scratch i.
+    let scratches: Vec<Mutex<AttnScratch>> =
+        (0..nshards).map(|_| Mutex::new(AttnScratch::new())).collect();
     let mut pending_tok: VecDeque<TokenJob> = VecDeque::new();
     let mut pending_img: VecDeque<Job> = VecDeque::new();
     let mut inflight: Vec<SeqState> = Vec::new();
@@ -211,9 +226,13 @@ pub(super) fn run(ctx: SchedulerCtx<'_>) {
             // itself holds the !Sync mpsc receiver).
             let (lm, cnn, metrics) = (ctx.lm, ctx.cnn, ctx.metrics);
             let (sim_energy_uj, sim_latency_ms) = (ctx.sim_energy_uj, ctx.sim_latency_ms);
+            let scratches = &scratches;
             let t_step = Instant::now();
-            let busy_ns = run_stolen(ctx.shards, tasks, |eng, task| match task {
-                Task::Tokens(mut group) => run_token_group(lm, metrics, eng, &mut group),
+            let busy_ns = run_stolen(ctx.shards, tasks, |shard, eng, task| match task {
+                Task::Tokens(mut group) => {
+                    let mut scratch = scratches[shard].lock().unwrap();
+                    run_token_group(lm, metrics, eng, &mut group, &mut scratch);
+                }
                 Task::Image(job) => run_image(
                     cnn,
                     metrics,
@@ -330,12 +349,15 @@ fn expire_deadlines(
 
 /// One coalesced step over a group of sequences on one engine shard:
 /// each contributes its next `feed` positions; Q/K/V, MLP, and head
-/// GEMMs run shared across the group.
+/// GEMMs run shared across the group. `scratch` is the shard's reused
+/// attention scratch; its kv-prepack residency counters drain into the
+/// metrics after the step.
 fn run_token_group(
     lm: &QuantTransformer,
     metrics: &Metrics,
     eng: &AnyEngine,
     group: &mut [SeqTask<'_>],
+    scratch: &mut AttnScratch,
 ) {
     let mut steps: Vec<StepSeq> = Vec::with_capacity(group.len());
     let mut fed_positions = 0u64;
@@ -347,13 +369,17 @@ fn run_token_group(
             caches: &mut s.caches[..],
         });
     }
-    let logits = lm.forward_step(eng, &mut steps);
+    let logits = lm.forward_step_with(eng, &mut steps, scratch);
     drop(steps);
     for (t, l) in group.iter_mut().zip(logits) {
         t.seq.fed += t.feed;
         t.seq.logits = l;
     }
     metrics.record_tokens(fed_positions);
+    let (encoded, reused) = scratch.take_kv_counters();
+    if encoded + reused > 0 {
+        metrics.record_kv(encoded, reused);
+    }
 }
 
 /// One CNN image forward on a stolen shard.
@@ -382,10 +408,12 @@ fn run_image(
 /// Execute `tasks` across the engine shards with work stealing: a
 /// shared atomic cursor hands the next unclaimed task to whichever
 /// shard frees up first, so a slow group never idles the rest of the
-/// pool. Returns the summed shard busy time (for the occupancy metric).
+/// pool. The worker callback receives its shard index (for per-shard
+/// state like the attention scratch). Returns the summed shard busy
+/// time (for the occupancy metric).
 fn run_stolen<'a, F>(shards: &[AnyEngine], tasks: Vec<Task<'a>>, f: F) -> u64
 where
-    F: Fn(&AnyEngine, Task<'a>) + Sync,
+    F: Fn(usize, &AnyEngine, Task<'a>) + Sync,
 {
     if tasks.is_empty() {
         return 0;
@@ -396,7 +424,7 @@ where
     let mut busy_ns = 0u64;
     std::thread::scope(|scope| {
         let mut handles = Vec::new();
-        for eng in shards.iter().take(workers) {
+        for (shard, eng) in shards.iter().take(workers).enumerate() {
             let slots = &slots;
             let cursor = &cursor;
             let f = &f;
@@ -409,7 +437,7 @@ where
                     }
                     let task = slots[i].lock().unwrap().take().expect("task stolen once");
                     let t0 = Instant::now();
-                    f(eng, task);
+                    f(shard, eng, task);
                     mine_ns += t0.elapsed().as_nanos() as u64;
                 }
                 mine_ns

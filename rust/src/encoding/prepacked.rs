@@ -115,6 +115,15 @@ impl PrePackedMatrix {
         self.codes[i]
     }
 
+    /// The whole row-major code buffer — what
+    /// [`MatOperand`](crate::arch::MatOperand) borrows on the prepacked
+    /// GEMM path (the append-only KV cache keeps an equivalent sidecar
+    /// of its own and lends it through `MatOperand::Codes`).
+    #[inline]
+    pub fn codes(&self) -> &[PackedCode] {
+        &self.codes
+    }
+
     /// `(rows, cols)` of the matrix.
     pub fn shape(&self) -> (usize, usize) {
         (self.rows, self.cols)

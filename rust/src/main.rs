@@ -108,6 +108,17 @@ fn parse_arch(s: &str) -> ent::Result<ArchKind> {
     })
 }
 
+/// `--kv-prepack on|off` → the coordinator's tri-state (None = mode
+/// default: on under --continuous, off otherwise).
+fn parse_kv_prepack(args: &ent::util::cli::Args) -> ent::Result<Option<bool>> {
+    Ok(match args.get("kv-prepack") {
+        None => None,
+        Some("on") | Some("true") => Some(true),
+        Some("off") | Some("false") => Some(false),
+        Some(other) => ent::bail!("--kv-prepack must be on|off, got '{other}'"),
+    })
+}
+
 fn cmd_report(argv: &[String]) -> ent::Result<()> {
     let which = argv.first().map(|s| s.as_str()).unwrap_or("all");
     let out = match which {
@@ -377,6 +388,7 @@ fn cmd_serve(argv: &[String]) -> ent::Result<()> {
         OptSpec { name: "prompt", takes_value: true, help: "token prompt length with --tokens (default 12)" },
         OptSpec { name: "gen", takes_value: true, help: "greedy decode steps per token request (default 0)" },
         OptSpec { name: "encode-cache", takes_value: true, help: "encoded-weight cache budget in bytes (native backends; 0 = off)" },
+        OptSpec { name: "kv-prepack", takes_value: true, help: "append-only prepacked KV cache, on|off (default: on with --continuous)" },
         OptSpec { name: "help", takes_value: false, help: "show help" },
     ];
     let args = Args::parse(argv, &specs)?;
@@ -405,6 +417,7 @@ fn cmd_serve(argv: &[String]) -> ent::Result<()> {
         cfg.artifact_dir = dir.into();
     }
     cfg.encode_cache_bytes = args.get_usize("encode-cache", 0)?;
+    cfg.kv_prepack = parse_kv_prepack(&args)?;
     let input_len = cfg.model.input_len();
     let coordinator = Coordinator::start(cfg)?;
     let kind = if tokens { "token" } else { "image" };
@@ -482,6 +495,14 @@ fn cmd_serve(argv: &[String]) -> ent::Result<()> {
             cs.budget_bytes / 1024
         );
     }
+    if m.kv_rows_encoded + m.kv_rows_reused > 0 {
+        println!(
+            "kv prepack: {} rows freshly encoded, {} cached rows reused ({:.1}% residency)",
+            m.kv_rows_encoded,
+            m.kv_rows_reused,
+            100.0 * m.kv_rows_reused as f64 / (m.kv_rows_encoded + m.kv_rows_reused) as f64
+        );
+    }
     coordinator.shutdown();
     Ok(())
 }
@@ -497,6 +518,7 @@ fn cmd_loadgen(argv: &[String]) -> ent::Result<()> {
         OptSpec { name: "shards", takes_value: true, help: "native engine shards (default 4)" },
         OptSpec { name: "window", takes_value: false, help: "drive the window batcher instead of continuous" },
         OptSpec { name: "encode-cache", takes_value: true, help: "encoded-weight cache budget in bytes (0 = off)" },
+        OptSpec { name: "kv-prepack", takes_value: true, help: "append-only prepacked KV cache, on|off (default: on unless --window)" },
         OptSpec { name: "seed", takes_value: true, help: "arrival-schedule seed (default 0x10AD)" },
         OptSpec { name: "json", takes_value: false, help: "JSON output" },
         OptSpec { name: "help", takes_value: false, help: "show help" },
@@ -523,6 +545,7 @@ fn cmd_loadgen(argv: &[String]) -> ent::Result<()> {
         Config::continuous(shards)
     };
     cfg.encode_cache_bytes = args.get_usize("encode-cache", 0)?;
+    cfg.kv_prepack = parse_kv_prepack(&args)?;
     let scheduler = if args.flag("window") { "window" } else { "continuous" };
     let coord = Coordinator::start(cfg)?;
     let r = loadgen::run(&coord, &load);
@@ -560,6 +583,12 @@ fn cmd_loadgen(argv: &[String]) -> ent::Result<()> {
         t.row(vec![
             "encode cache hit/miss/evict".into(),
             format!("{}/{}/{}", cs.hits, cs.misses, cs.evictions),
+        ]);
+    }
+    if m.kv_rows_encoded + m.kv_rows_reused > 0 {
+        t.row(vec![
+            "kv prepack encoded/reused rows".into(),
+            format!("{}/{}", m.kv_rows_encoded, m.kv_rows_reused),
         ]);
     }
     print!("{}", t.render());

@@ -26,8 +26,10 @@
 
 use std::sync::Arc;
 
-use crate::arch::TcuEngine;
+use crate::arch::{MatOperand, TcuEngine};
+use crate::encoding::packed::{lut_i8, PackedCode};
 use crate::encoding::prepacked::{CachedWeight, EncodeCache};
+use crate::pe::Variant;
 use crate::util::prng::Rng;
 
 /// Right-shift applied to Q/K/V and output-projection accumulators
@@ -135,10 +137,30 @@ pub fn requant(acc: &[i64], shift: u32) -> Vec<i8> {
         .collect()
 }
 
+/// Allocation-free [`requant`] into a caller-owned buffer (the decode
+/// hot path reuses scratch instead of collecting fresh vectors).
+pub fn requant_into(acc: &[i64], shift: u32, out: &mut [i8]) {
+    assert_eq!(acc.len(), out.len(), "requant shape");
+    for (o, &v) in out.iter_mut().zip(acc) {
+        *o = (v >> shift).clamp(-128, 127) as i8;
+    }
+}
+
 /// Per-layer key/value cache: requantized int8 K and V rows
 /// (`d_model` wide) for every position already processed, so each
 /// autoregressive decode step projects only its own token and attends
 /// over cached history.
+///
+/// Alongside the raw rows the cache keeps a **lazily maintained,
+/// append-only [`PackedCode`] sidecar** — the EN-T wire-format code of
+/// every cached K/V element. [`KvCache::ensure_encoded`] encodes only
+/// the rows appended since the last call (the *delta*), so with
+/// kv-prepack enabled a decode step re-derives codes for exactly one
+/// new position while the whole history's codes are reused verbatim by
+/// the per-head score (Q·Kᵀ) and context (softmax·V) GEMMs through
+/// [`MatOperand::Codes`]. [`KvCache::truncate`] invalidates exactly the
+/// dropped suffix: the surviving prefix's codes stay valid and are
+/// never re-derived.
 #[derive(Clone, Debug)]
 pub struct KvCache {
     d: usize,
@@ -146,6 +168,12 @@ pub struct KvCache {
     k: Vec<i8>,
     v: Vec<i8>,
     len: usize,
+    /// Code sidecars (`k_codes[i]` encodes `k[i]`), allocated on first
+    /// [`KvCache::ensure_encoded`] so non-prepack serving pays nothing.
+    k_codes: Vec<PackedCode>,
+    v_codes: Vec<PackedCode>,
+    /// Positions `0..encoded` have valid sidecar codes (`encoded ≤ len`).
+    encoded: usize,
 }
 
 impl KvCache {
@@ -156,6 +184,9 @@ impl KvCache {
             k: vec![0; d * max_seq],
             v: vec![0; d * max_seq],
             len: 0,
+            k_codes: Vec::new(),
+            v_codes: Vec::new(),
+            encoded: 0,
         }
     }
 
@@ -172,10 +203,38 @@ impl KvCache {
         self.max_seq
     }
 
+    /// Positions whose sidecar codes are currently valid (≤ [`len`]).
+    ///
+    /// [`len`]: KvCache::len
+    pub fn encoded_len(&self) -> usize {
+        self.encoded
+    }
+
     /// Drop cached positions beyond `len` (no-op if already shorter) —
     /// rewinds a speculative decode or resets a benchmark iteration.
+    /// Sidecar codes of the surviving prefix stay valid; exactly the
+    /// dropped suffix is invalidated.
     pub fn truncate(&mut self, len: usize) {
         self.len = self.len.min(len);
+        self.encoded = self.encoded.min(self.len);
+    }
+
+    /// Bring the code sidecar up to date: encode every appended-but-
+    /// unencoded position (one [`lut_i8`] lookup per K and V element of
+    /// the delta) and return how many positions were freshly encoded.
+    /// O(delta · d) — O(1) per steady-state decode step, never O(seq).
+    pub fn ensure_encoded(&mut self) -> usize {
+        if self.k_codes.len() < self.d * self.max_seq {
+            self.k_codes.resize(self.d * self.max_seq, lut_i8(0));
+            self.v_codes.resize(self.d * self.max_seq, lut_i8(0));
+        }
+        let fresh = self.len - self.encoded;
+        for i in self.encoded * self.d..self.len * self.d {
+            self.k_codes[i] = lut_i8(self.k[i]);
+            self.v_codes[i] = lut_i8(self.v[i]);
+        }
+        self.encoded = self.len;
+        fresh
     }
 
     fn append(&mut self, k_rows: &[i8], v_rows: &[i8], rows: usize) {
@@ -184,6 +243,59 @@ impl KvCache {
         self.k[at..at + rows * self.d].copy_from_slice(&k_rows[..rows * self.d]);
         self.v[at..at + rows * self.d].copy_from_slice(&v_rows[..rows * self.d]);
         self.len += rows;
+    }
+}
+
+/// Caller-owned scratch for the attention (and transformer) hot path —
+/// every per-step buffer the old code rebuilt with `vec![..]` per head
+/// per step, grown once and reused across heads, segments, steps, and
+/// requests (the PR 1 allocation-free hot-path invariant, extended to
+/// decode). Holds the per-head Kᵀ/Q/V gathers, the score/probability
+/// rows, the shared projection accumulator, and — for the kv-prepack
+/// path — the per-head [`PackedCode`] gathers plus the cache-residency
+/// counters the serving metrics surface.
+#[derive(Debug, Default)]
+pub struct AttnScratch {
+    acc: Vec<i64>,
+    q: Vec<i8>,
+    k_new: Vec<i8>,
+    v_new: Vec<i8>,
+    out: Vec<i8>,
+    qh: Vec<i8>,
+    kht: Vec<i8>,
+    vh: Vec<i8>,
+    kht_codes: Vec<PackedCode>,
+    vh_codes: Vec<PackedCode>,
+    scores: Vec<i64>,
+    probs: Vec<i8>,
+    oh: Vec<i64>,
+    /// KV positions whose codes were freshly encoded (the append delta).
+    kv_rows_encoded: u64,
+    /// Cached KV positions whose resident codes were reused by a step.
+    kv_rows_reused: u64,
+}
+
+impl AttnScratch {
+    pub fn new() -> AttnScratch {
+        AttnScratch::default()
+    }
+
+    /// Drain the cache-residency counters accumulated since the last
+    /// call: `(rows freshly encoded, cached rows reused)`. Both are 0
+    /// when kv-prepack never engaged (flag off or non-EN-T engine).
+    pub fn take_kv_counters(&mut self) -> (u64, u64) {
+        let out = (self.kv_rows_encoded, self.kv_rows_reused);
+        self.kv_rows_encoded = 0;
+        self.kv_rows_reused = 0;
+        out
+    }
+}
+
+/// Grow-only resize: the scratch buffers only ever get larger, so
+/// steady-state steps never touch the allocator.
+fn grown<T: Copy>(buf: &mut Vec<T>, len: usize, fill: T) {
+    if buf.len() < len {
+        buf.resize(len, fill);
     }
 }
 
@@ -203,6 +315,11 @@ pub struct MhaWeights {
     /// contractions multiply activations by activations and never
     /// touch it.
     cache: Option<Arc<EncodeCache>>,
+    /// Route the per-head score/context GEMMs through the append-only
+    /// prepacked KV cache (code sidecar + [`MatOperand::Codes`]) on
+    /// code-consuming engines. Bit-identical either way; non-EN-T
+    /// variants fall back to the plain path unconditionally.
+    kv_prepack: bool,
 }
 
 impl MhaWeights {
@@ -219,6 +336,7 @@ impl MhaWeights {
             wv: CachedWeight::new(rng.i8_vec(d * d), d, d),
             wo: CachedWeight::new(rng.i8_vec(d * d), d, d),
             cache: None,
+            kv_prepack: false,
         }
     }
 
@@ -226,6 +344,13 @@ impl MhaWeights {
     /// from now on (see [`crate::encoding::prepacked::EncodeCache`]).
     pub fn set_encode_cache(&mut self, cache: Arc<EncodeCache>) {
         self.cache = Some(cache);
+    }
+
+    /// Enable (or disable) the append-only prepacked KV cache for the
+    /// per-head attention contractions — the activation-side twin of
+    /// [`MhaWeights::set_encode_cache`].
+    pub fn set_kv_prepack(&mut self, on: bool) {
+        self.kv_prepack = on;
     }
 
     /// Run `rows` new positions (flattened `rows × d` int8) through the
@@ -270,57 +395,132 @@ impl MhaWeights {
         x: &[i8],
         segs: &mut [(usize, &mut KvCache)],
     ) -> Vec<i8> {
+        self.forward_multi_with(eng, x, segs, &mut AttnScratch::new())
+    }
+
+    /// [`MhaWeights::forward_multi`] with caller-owned scratch — the
+    /// allocation-free entry the serving step loop drives (one
+    /// [`AttnScratch`] per engine shard, reused across steps). When
+    /// `kv_prepack` is set and the engine consumes EN-T codes, the
+    /// score and context GEMMs run through
+    /// [`TcuEngine::matmul_prepacked_into`] with the cache's code
+    /// sidecar: only the newly appended positions are encoded
+    /// ([`KvCache::ensure_encoded`]); the history's codes are reused
+    /// verbatim.
+    pub fn forward_multi_with<E: TcuEngine + ?Sized>(
+        &self,
+        eng: &E,
+        x: &[i8],
+        segs: &mut [(usize, &mut KvCache)],
+        scratch: &mut AttnScratch,
+    ) -> Vec<i8> {
         let d = self.d;
         let dh = d / self.heads;
         let total: usize = segs.iter().map(|s| s.0).sum();
         assert!(total > 0, "empty attention step");
         assert_eq!(x.len(), total * d, "attention input shape");
+        let prepack = self.kv_prepack && eng.tcu().variant == Variant::EntOurs;
 
         // Q/K/V projections: one shared engine GEMM each over every
         // sequence's rows, requantized to int8. The weights are the
         // stationary K×N operand and resolve through the encode cache
         // when one is attached (zero weight encodes in steady state).
         let cache = self.cache.as_deref();
-        let mut acc = vec![0i64; total * d];
-        super::gemm_weights_b(eng, cache, x, &self.wq, &mut acc, total, d, d);
-        let q = requant(&acc, QKV_SHIFT);
-        super::gemm_weights_b(eng, cache, x, &self.wk, &mut acc, total, d, d);
-        let k_new = requant(&acc, QKV_SHIFT);
-        super::gemm_weights_b(eng, cache, x, &self.wv, &mut acc, total, d, d);
-        let v_new = requant(&acc, QKV_SHIFT);
+        grown(&mut scratch.acc, total * d, 0i64);
+        grown(&mut scratch.q, total * d, 0i8);
+        grown(&mut scratch.k_new, total * d, 0i8);
+        grown(&mut scratch.v_new, total * d, 0i8);
+        grown(&mut scratch.out, total * d, 0i8);
+        let acc = &mut scratch.acc[..total * d];
+        super::gemm_weights_b(eng, cache, x, &self.wq, acc, total, d, d);
+        requant_into(acc, QKV_SHIFT, &mut scratch.q[..total * d]);
+        super::gemm_weights_b(eng, cache, x, &self.wk, acc, total, d, d);
+        requant_into(acc, QKV_SHIFT, &mut scratch.k_new[..total * d]);
+        super::gemm_weights_b(eng, cache, x, &self.wv, acc, total, d, d);
+        requant_into(acc, QKV_SHIFT, &mut scratch.v_new[..total * d]);
 
         // Per-sequence: append this segment's K/V to its own cache, then
         // per-head scores = Q_h · K_hᵀ, int8 softmax, softmax · V_h.
-        let mut out = vec![0i8; total * d];
         let mut r0 = 0usize; // this segment's first row in x/q/out
-        for (rows, cache) in segs.iter_mut() {
+        for (rows, kvc) in segs.iter_mut() {
             let rows = *rows;
             assert!(rows > 0, "empty segment");
-            assert_eq!(cache.d, d, "cache width");
-            let offset = cache.len(); // positions already cached
-            cache.append(&k_new[r0 * d..], &v_new[r0 * d..], rows);
-            let kv = cache.len();
+            assert_eq!(kvc.d, d, "cache width");
+            let offset = kvc.len(); // positions already cached
+            kvc.append(&scratch.k_new[r0 * d..], &scratch.v_new[r0 * d..], rows);
+            let kv = kvc.len();
+            if prepack {
+                // Encode exactly the appended delta; everything before
+                // it keeps its resident codes.
+                let fresh = kvc.ensure_encoded();
+                scratch.kv_rows_encoded += fresh as u64;
+                scratch.kv_rows_reused += (kv - fresh) as u64;
+            }
 
-            let mut qh = vec![0i8; rows * dh];
-            let mut kht = vec![0i8; dh * kv];
-            let mut vh = vec![0i8; kv * dh];
-            let mut scores = vec![0i64; rows * kv];
-            let mut probs = vec![0i8; rows * kv];
-            let mut oh = vec![0i64; rows * dh];
+            grown(&mut scratch.qh, rows * dh, 0i8);
+            grown(&mut scratch.kht, dh * kv, 0i8);
+            grown(&mut scratch.vh, kv * dh, 0i8);
+            grown(&mut scratch.scores, rows * kv, 0i64);
+            grown(&mut scratch.probs, rows * kv, 0i8);
+            grown(&mut scratch.oh, rows * dh, 0i64);
+            if prepack {
+                grown(&mut scratch.kht_codes, dh * kv, lut_i8(0));
+                grown(&mut scratch.vh_codes, kv * dh, lut_i8(0));
+            }
             for h in 0..self.heads {
                 let c0 = h * dh;
                 for i in 0..rows {
                     let at = (r0 + i) * d + c0;
-                    qh[i * dh..(i + 1) * dh].copy_from_slice(&q[at..at + dh]);
+                    scratch.qh[i * dh..(i + 1) * dh].copy_from_slice(&scratch.q[at..at + dh]);
                 }
-                for p in 0..kv {
-                    for j in 0..dh {
-                        kht[j * kv + p] = cache.k[p * d + c0 + j];
+                if prepack {
+                    // One pass gathers the raw head slices and their
+                    // resident codes together (the raw twins keep
+                    // `MatOperand::Codes` coherent for shape checks and
+                    // any fallback; the code copies are copies, not
+                    // encoder activations — the Kᵀ/V history enters the
+                    // GEMMs pre-encoded).
+                    for p in 0..kv {
+                        for j in 0..dh {
+                            scratch.kht[j * kv + p] = kvc.k[p * d + c0 + j];
+                            scratch.kht_codes[j * kv + p] = kvc.k_codes[p * d + c0 + j];
+                        }
+                        scratch.vh[p * dh..(p + 1) * dh]
+                            .copy_from_slice(&kvc.v[p * d + c0..p * d + c0 + dh]);
+                        scratch.vh_codes[p * dh..(p + 1) * dh]
+                            .copy_from_slice(&kvc.v_codes[p * d + c0..p * d + c0 + dh]);
                     }
-                    vh[p * dh..(p + 1) * dh]
-                        .copy_from_slice(&cache.v[p * d + c0..p * d + c0 + dh]);
+                } else {
+                    for p in 0..kv {
+                        for j in 0..dh {
+                            scratch.kht[j * kv + p] = kvc.k[p * d + c0 + j];
+                        }
+                        scratch.vh[p * dh..(p + 1) * dh]
+                            .copy_from_slice(&kvc.v[p * d + c0..p * d + c0 + dh]);
+                    }
                 }
-                eng.matmul_into(&qh, &kht, &mut scores, rows, dh, kv);
+                if prepack {
+                    eng.matmul_prepacked_into(
+                        MatOperand::Raw(&scratch.qh[..rows * dh]),
+                        MatOperand::Codes {
+                            raw: &scratch.kht[..dh * kv],
+                            codes: &scratch.kht_codes[..dh * kv],
+                        },
+                        &mut scratch.scores[..rows * kv],
+                        rows,
+                        dh,
+                        kv,
+                    );
+                } else {
+                    eng.matmul_into(
+                        &scratch.qh[..rows * dh],
+                        &scratch.kht[..dh * kv],
+                        &mut scratch.scores[..rows * kv],
+                        rows,
+                        dh,
+                        kv,
+                    );
+                }
                 // Causal mask: row i (absolute position offset + i) may
                 // attend to positions 0..=offset+i. Masked probabilities
                 // are zero, so the engine GEMM over the full kv extent is
@@ -328,17 +528,38 @@ impl MhaWeights {
                 for i in 0..rows {
                     let valid = offset + i + 1;
                     softmax_i8(
-                        &scores[i * kv..(i + 1) * kv],
+                        &scratch.scores[i * kv..(i + 1) * kv],
                         valid.min(kv),
                         SCORE_SHIFT,
-                        &mut probs[i * kv..(i + 1) * kv],
+                        &mut scratch.probs[i * kv..(i + 1) * kv],
                     );
                 }
-                eng.matmul_into(&probs, &vh, &mut oh, rows, kv, dh);
+                if prepack {
+                    eng.matmul_prepacked_into(
+                        MatOperand::Raw(&scratch.probs[..rows * kv]),
+                        MatOperand::Codes {
+                            raw: &scratch.vh[..kv * dh],
+                            codes: &scratch.vh_codes[..kv * dh],
+                        },
+                        &mut scratch.oh[..rows * dh],
+                        rows,
+                        kv,
+                        dh,
+                    );
+                } else {
+                    eng.matmul_into(
+                        &scratch.probs[..rows * kv],
+                        &scratch.vh[..kv * dh],
+                        &mut scratch.oh[..rows * dh],
+                        rows,
+                        kv,
+                        dh,
+                    );
+                }
                 for i in 0..rows {
                     for j in 0..dh {
-                        out[(r0 + i) * d + c0 + j] =
-                            (oh[i * dh + j] >> PV_SHIFT).clamp(-128, 127) as i8;
+                        scratch.out[(r0 + i) * d + c0 + j] =
+                            (scratch.oh[i * dh + j] >> PV_SHIFT).clamp(-128, 127) as i8;
                     }
                 }
             }
@@ -346,8 +567,9 @@ impl MhaWeights {
         }
 
         // Output projection: one shared GEMM over every row.
-        super::gemm_weights_b(eng, cache, &out, &self.wo, &mut acc, total, d, d);
-        requant(&acc, QKV_SHIFT)
+        let acc = &mut scratch.acc[..total * d];
+        super::gemm_weights_b(eng, cache, &scratch.out[..total * d], &self.wo, acc, total, d, d);
+        requant(acc, QKV_SHIFT)
     }
 }
 
@@ -436,6 +658,82 @@ mod tests {
         assert_eq!(c.len(), 1);
         c.truncate(5); // no-op beyond current length
         assert_eq!(c.len(), 1);
+    }
+
+    /// The code sidecar is append-only: `ensure_encoded` derives codes
+    /// for exactly the appended delta, and `truncate` invalidates
+    /// exactly the dropped suffix (the surviving prefix is never
+    /// re-encoded).
+    #[test]
+    fn kv_cache_sidecar_encodes_only_the_delta() {
+        let mut c = KvCache::new(4, 8);
+        assert_eq!(c.encoded_len(), 0);
+        c.append(&[1, 2, 3, 4, 5, 6, 7, 8], &[8, 7, 6, 5, 4, 3, 2, 1], 2);
+        assert_eq!(c.ensure_encoded(), 2, "cold cache encodes everything");
+        assert_eq!(c.encoded_len(), 2);
+        assert_eq!(c.k_codes[0], lut_i8(1));
+        assert_eq!(c.v_codes[0].decode(), 8);
+        // Steady state: nothing new, nothing encoded.
+        assert_eq!(c.ensure_encoded(), 0);
+        // One appended row → exactly one row's delta.
+        c.append(&[9, 9, 9, 9], &[-9, -9, -9, -9], 1);
+        assert_eq!(c.ensure_encoded(), 1);
+        assert_eq!(c.k_codes[2 * 4], lut_i8(9));
+        assert_eq!(c.v_codes[2 * 4].decode(), -9);
+        // Truncate drops exactly the suffix; the prefix stays valid.
+        c.truncate(1);
+        assert_eq!(c.encoded_len(), 1);
+        assert_eq!(c.ensure_encoded(), 0, "surviving prefix must not re-encode");
+        c.append(&[7, 7, 7, 7], &[7, 7, 7, 7], 1);
+        assert_eq!(c.ensure_encoded(), 1, "re-appended row is a fresh delta");
+        assert_eq!(c.k_codes[4], lut_i8(7));
+    }
+
+    /// kv-prepack routes the score/context GEMMs through the code
+    /// sidecar and stays bit-identical to the plain path across a
+    /// prefill + decode sequence, with the scratch counters seeing
+    /// exactly the append deltas.
+    #[test]
+    fn kv_prepack_forward_matches_plain_and_counts_residency() {
+        let mut rng = Rng::new(0xA9C);
+        let (d, heads, seq) = (16, 2, 6);
+        let mut w = MhaWeights::new(d, heads, &mut rng);
+        let x = rng.i8_vec(seq * d);
+        let eng = Tcu::new(ArchKind::SystolicOs, 8, Variant::EntOurs).engine();
+
+        let mut plain_cache = KvCache::new(d, seq);
+        let mut plain_out = Vec::new();
+        for i in 0..seq {
+            plain_out.extend(w.forward(&eng, &x[i * d..(i + 1) * d], 1, &mut plain_cache));
+        }
+
+        w.set_kv_prepack(true);
+        let mut scratch = AttnScratch::new();
+        let mut pp_cache = KvCache::new(d, seq);
+        let mut pp_out = Vec::new();
+        for i in 0..seq {
+            pp_out.extend(w.forward_multi_with(
+                &eng,
+                &x[i * d..(i + 1) * d],
+                &mut [(1, &mut pp_cache)],
+                &mut scratch,
+            ));
+        }
+        assert_eq!(pp_out, plain_out, "kv-prepack changed attention output");
+        let (encoded, reused) = scratch.take_kv_counters();
+        assert_eq!(encoded, seq as u64, "one fresh row per decode step");
+        // Step i reuses i cached rows: Σ 0..seq-1.
+        assert_eq!(reused, (seq * (seq - 1) / 2) as u64);
+        assert_eq!(scratch.take_kv_counters(), (0, 0), "counters drain");
+
+        // Non-consuming engines ignore the flag entirely.
+        let base = Tcu::new(ArchKind::SystolicOs, 8, Variant::Baseline).engine();
+        let mut base_cache = KvCache::new(d, seq);
+        w.forward_multi_with(&eng, &x[..d], &mut [(1, &mut KvCache::new(d, seq))], &mut scratch);
+        assert!(scratch.take_kv_counters().0 > 0);
+        w.forward_multi_with(&base, &x[..d], &mut [(1, &mut base_cache)], &mut scratch);
+        assert_eq!(scratch.take_kv_counters(), (0, 0), "Baseline must not prepack");
+        assert_eq!(base_cache.encoded_len(), 0);
     }
 
     /// Coalescing several independent sequences into one

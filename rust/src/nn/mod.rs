@@ -90,6 +90,13 @@ pub enum Layer {
         out_bytes: u64,
         /// SIMD post-processing (requantize, softmax, GELU, layernorm).
         simd_ops: u64,
+        /// History-operand elements newly appended (and thus encoded)
+        /// **per repeat** under the append-only prepacked KV cache
+        /// (`EnergyOpts::kv_prepack`): attention score/context GEMMs set
+        /// this to `rows · d_head` — the fresh K/V delta of the step —
+        /// while the resident history's codes are reused. Weight GEMMs
+        /// leave it 0 (their reuse is the encode cache's job).
+        kv_fresh: u64,
     },
 }
 
@@ -172,6 +179,16 @@ impl Layer {
             Layer::Fc { cin, cout, .. } => Some(GemmShape::new(*cout, *cin, 1)),
             Layer::Gemm { m, k, n, .. } => Some(GemmShape::new(*m, *k, *n)),
             _ => None,
+        }
+    }
+
+    /// History-operand elements newly encoded per repeat under the
+    /// append-only prepacked KV cache — nonzero only for attention
+    /// score/context [`Layer::Gemm`] entries (see the field doc).
+    pub fn kv_fresh_elems(&self) -> u64 {
+        match self {
+            Layer::Gemm { kv_fresh, .. } => *kv_fresh,
+            _ => 0,
         }
     }
 
@@ -445,6 +462,7 @@ mod tests {
             in_bytes: 768,
             out_bytes: 512,
             simd_ops: 2048,
+            kv_fresh: 64,
         };
         assert_eq!(g.name(), "l0.qk");
         assert_eq!(g.macs(), 4 * 8 * 8 * 16);
@@ -453,6 +471,7 @@ mod tests {
         assert_eq!(g.in_bytes(), 768);
         assert_eq!(g.out_bytes(), 512);
         assert_eq!(g.simd_ops(), 2048);
+        assert_eq!(g.kv_fresh_elems(), 64);
     }
 
     #[test]

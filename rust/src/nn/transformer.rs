@@ -45,7 +45,7 @@ use std::sync::Arc;
 
 use crate::arch::TcuEngine;
 use crate::encoding::prepacked::{CachedWeight, EncodeCache};
-use crate::nn::attention::{add_norm, requant, KvCache, MhaWeights};
+use crate::nn::attention::{add_norm, requant, AttnScratch, KvCache, MhaWeights};
 use crate::nn::{Layer, Network};
 use crate::util::prng::Rng;
 
@@ -181,8 +181,12 @@ impl TransformerSpec {
                 in_bytes: (rows * d) as u64,
                 out_bytes: 3 * (rows * d) as u64,
                 simd_ops: 2 * 3 * (rows * d) as u64,
+                kv_fresh: 0,
             });
-            // Per-head scores Q_h·K_hᵀ + fixed-point softmax.
+            // Per-head scores Q_h·K_hᵀ + fixed-point softmax. Under
+            // kv-prepack only the newly appended K rows (rows·dh
+            // elements per head) pass the encoder; the history's codes
+            // are resident.
             layers.push(Layer::Gemm {
                 name: format!("l{l}.qk"),
                 m: rows,
@@ -193,8 +197,9 @@ impl TransformerSpec {
                 in_bytes: ((rows + kv) * d) as u64,
                 out_bytes: (h * rows * kv) as u64,
                 simd_ops: 4 * (h * rows * kv) as u64,
+                kv_fresh: (rows * dh) as u64,
             });
-            // Per-head softmax·V contraction.
+            // Per-head softmax·V contraction (same delta story for V).
             layers.push(Layer::Gemm {
                 name: format!("l{l}.pv"),
                 m: rows,
@@ -205,6 +210,7 @@ impl TransformerSpec {
                 in_bytes: (h * rows * kv + kv * d) as u64,
                 out_bytes: (rows * d) as u64,
                 simd_ops: 2 * (rows * d) as u64,
+                kv_fresh: (rows * dh) as u64,
             });
             // Output projection + residual + layernorm.
             layers.push(Layer::Gemm {
@@ -217,6 +223,7 @@ impl TransformerSpec {
                 in_bytes: (rows * d) as u64,
                 out_bytes: (rows * d) as u64,
                 simd_ops: 6 * (rows * d) as u64,
+                kv_fresh: 0,
             });
             // MLP up-projection + GELU LUT.
             layers.push(Layer::Gemm {
@@ -229,6 +236,7 @@ impl TransformerSpec {
                 in_bytes: (rows * d) as u64,
                 out_bytes: (rows * ff) as u64,
                 simd_ops: 3 * (rows * ff) as u64,
+                kv_fresh: 0,
             });
             // MLP down-projection + residual + layernorm.
             layers.push(Layer::Gemm {
@@ -241,6 +249,7 @@ impl TransformerSpec {
                 in_bytes: (rows * ff) as u64,
                 out_bytes: (rows * d) as u64,
                 simd_ops: 6 * (rows * d) as u64,
+                kv_fresh: 0,
             });
         }
         // Vocabulary head over the last position only.
@@ -254,6 +263,7 @@ impl TransformerSpec {
             in_bytes: d as u64,
             out_bytes: self.vocab as u64,
             simd_ops: 2 * self.vocab as u64,
+            kv_fresh: 0,
         });
         Network {
             name,
@@ -334,6 +344,22 @@ impl QuantTransformer {
         self
     }
 
+    /// Route the per-head attention contractions through the
+    /// append-only **prepacked KV cache** from now on: each decode step
+    /// encodes only the newly appended token's K/V rows
+    /// ([`KvCache::ensure_encoded`]) while the history's codes are
+    /// reused verbatim by the score and context GEMMs — the
+    /// activation-side twin of [`QuantTransformer::with_encode_cache`].
+    /// Logits stay bit-identical with the flag on or off across the
+    /// 5-arch × 3-variant grid (`tests/kv_prepack.rs`); non-EN-T
+    /// engines fall back to the plain path unconditionally.
+    pub fn with_kv_prepack(mut self, on: bool) -> QuantTransformer {
+        for b in &mut self.blocks {
+            b.attn.set_kv_prepack(on);
+        }
+        self
+    }
+
     /// The native serving model (fixed seed — every shard builds the
     /// same weights, so sharding cannot change logits).
     pub fn tiny_native() -> QuantTransformer {
@@ -395,7 +421,19 @@ impl QuantTransformer {
         tokens: &[u16],
         caches: &mut [KvCache],
     ) -> Vec<f32> {
-        self.forward_step(eng, &mut [StepSeq { tokens, caches }])
+        self.prefill_with(eng, tokens, caches, &mut AttnScratch::new())
+    }
+
+    /// [`QuantTransformer::prefill`] with caller-owned scratch (see
+    /// [`QuantTransformer::forward_step_with`]).
+    pub fn prefill_with<E: TcuEngine + ?Sized>(
+        &self,
+        eng: &E,
+        tokens: &[u16],
+        caches: &mut [KvCache],
+        scratch: &mut AttnScratch,
+    ) -> Vec<f32> {
+        self.forward_step_with(eng, &mut [StepSeq { tokens, caches }], scratch)
             .pop()
             .unwrap()
     }
@@ -417,6 +455,21 @@ impl QuantTransformer {
         &self,
         eng: &E,
         seqs: &mut [StepSeq<'_>],
+    ) -> Vec<Vec<f32>> {
+        self.forward_step_with(eng, seqs, &mut AttnScratch::new())
+    }
+
+    /// [`QuantTransformer::forward_step`] with caller-owned scratch —
+    /// the allocation-free entry the serving schedulers drive (one
+    /// [`AttnScratch`] per engine shard, reused across steps, so
+    /// steady-state decode never rebuilds the per-head attention
+    /// buffers). The scratch also accumulates the kv-prepack
+    /// cache-residency counters ([`AttnScratch::take_kv_counters`]).
+    pub fn forward_step_with<E: TcuEngine + ?Sized>(
+        &self,
+        eng: &E,
+        seqs: &mut [StepSeq<'_>],
+        scratch: &mut AttnScratch,
     ) -> Vec<Vec<f32>> {
         let d = self.spec.d_model;
         let rows_per: Vec<usize> = seqs.iter().map(|s| s.tokens.len()).collect();
@@ -452,7 +505,7 @@ impl QuantTransformer {
                 .zip(&rows_per)
                 .map(|(s, &rows)| (rows, &mut s.caches[l]))
                 .collect();
-            let attn = block.attn.forward_multi(eng, &x, &mut segs);
+            let attn = block.attn.forward_multi_with(eng, &x, &mut segs, scratch);
             drop(segs);
             x = add_norm(&x, &attn, d);
             // MLP sub-block: W1 → GELU LUT → W2, residual + layernorm —
@@ -531,13 +584,27 @@ impl QuantTransformer {
         tokens: &[u16],
         max_new: usize,
     ) -> (Vec<f32>, Vec<u16>) {
+        self.generate_with(eng, tokens, max_new, &mut AttnScratch::new())
+    }
+
+    /// [`QuantTransformer::generate`] with caller-owned scratch: one
+    /// [`AttnScratch`] covers the prefill and every decode step, so the
+    /// window batcher's per-job generation is as allocation-free as the
+    /// continuous step loop.
+    pub fn generate_with<E: TcuEngine + ?Sized>(
+        &self,
+        eng: &E,
+        tokens: &[u16],
+        max_new: usize,
+        scratch: &mut AttnScratch,
+    ) -> (Vec<f32>, Vec<u16>) {
         let mut caches = self.empty_caches();
-        let mut logits = self.prefill(eng, tokens, &mut caches);
+        let mut logits = self.prefill_with(eng, tokens, &mut caches, scratch);
         let mut generated = Vec::with_capacity(max_new);
         for _ in 0..max_new {
             let next = QuantTransformer::argmax(&logits);
             generated.push(next);
-            logits = self.decode(eng, next, &mut caches);
+            logits = self.prefill_with(eng, &[next], &mut caches, scratch);
         }
         (logits, generated)
     }

@@ -307,6 +307,8 @@ pub fn transformer() -> String {
         "prefill µJ/tok",
         "decode µJ/tok",
         "dec µJ/tok (enc-cache)",
+        "dec µJ/tok (+kv-prepack)",
+        "dec encodes (+kv-prepack)",
         "prefill tok/s",
         "decode tok/s",
         "KV MAC saving",
@@ -314,19 +316,29 @@ pub fn transformer() -> String {
     let recompute_macs = spec.prefill_network(seq + 1).total_macs() as f64;
     let prefill_net = spec.prefill_network(seq);
     let decode_net = spec.decode_network(seq + 1);
-    let cache_opts = energy::EnergyOpts { encode_cache: true };
+    let cache_opts = energy::EnergyOpts {
+        encode_cache: true,
+        ..Default::default()
+    };
+    let prepack_opts = energy::EnergyOpts {
+        encode_cache: true,
+        kv_prepack: true,
+    };
     for arch in ALL_ARCHS {
         for variant in ALL_VARIANTS {
             let soc = Soc::paper_config(arch, variant);
             let (pre, _) = energy::frame_energy(&soc, &prefill_net);
             let (dec, _) = energy::frame_energy(&soc, &decode_net);
             let (dec_cached, _) = energy::frame_energy_with(&soc, &decode_net, cache_opts);
+            let (dec_pp, _) = energy::frame_energy_with(&soc, &decode_net, prepack_opts);
             t.row(vec![
                 arch.name().into(),
                 variant.name().into(),
                 f(pre.total_pj() / 1e6 / seq as f64, 2),
                 f(dec.total_pj() / 1e6, 2),
                 f(dec_cached.total_pj() / 1e6, 2),
+                f(dec_pp.total_pj() / 1e6, 2),
+                dec_pp.encodes.to_string(),
                 f(seq as f64 / (pre.latency_ms() / 1e3), 0),
                 f(1e3 / dec.latency_ms(), 0),
                 pct(1.0 - dec.macs as f64 / recompute_macs),
@@ -338,7 +350,10 @@ pub fn transformer() -> String {
         "decode attends over cached K/V instead of recomputing the prefix — \
          the saving column is 1 − decode MACs / full-recompute MACs; the \
          enc-cache column re-prices decode with the encoded-weight cache \
-         resident (zero weight-encode events, see DESIGN.md §8)\n",
+         resident (zero weight-encode events), and the +kv-prepack columns \
+         add the append-only prepacked KV cache: a decode step encodes only \
+         the new token's K/V delta — O(1) encode events per step, \
+         independent of context length (DESIGN.md §8)\n",
     );
     s
 }
@@ -403,10 +418,17 @@ pub fn serving() -> String {
             f(r.tokens_per_s, 0),
             pct(r.occupancy),
         ]);
-        if let Some(cs) = coord.metrics().encode_cache {
+        let m = coord.metrics();
+        if let Some(cs) = m.encode_cache {
             cache_lines.push_str(&format!(
                 "encode cache ({name}): {} hits / {} misses / {} evictions — weights encoded once, reused by every step\n",
                 cs.hits, cs.misses, cs.evictions
+            ));
+        }
+        if m.kv_rows_encoded + m.kv_rows_reused > 0 {
+            cache_lines.push_str(&format!(
+                "kv prepack ({name}): {} rows freshly encoded / {} cached rows reused — decode re-encodes only the appended delta\n",
+                m.kv_rows_encoded, m.kv_rows_reused
             ));
         }
         coord.shutdown();
@@ -474,6 +496,7 @@ mod tests {
         }
         assert!(s.contains("KV MAC saving"));
         assert!(s.contains("enc-cache"), "amortized decode column missing");
+        assert!(s.contains("+kv-prepack"), "kv-prepack decode column missing");
     }
 
     #[test]
@@ -486,6 +509,8 @@ mod tests {
         // The encode-reuse counters ride the scorecard.
         assert!(s.contains("encode cache (continuous)"), "{s}");
         assert!(s.contains("hits"), "{s}");
+        // The continuous scheduler serves with kv-prepack on by default.
+        assert!(s.contains("kv prepack (continuous)"), "{s}");
     }
 
     #[test]

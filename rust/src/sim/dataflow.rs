@@ -58,6 +58,12 @@ pub struct GemmStats {
     /// zero at GEMM time: see
     /// [`crate::sim::planner::TilePlan::stats_cached`].
     pub weight_encodes: u64,
+    /// The subset of `encodes` attributable to **activation** operands
+    /// (the attention score/context GEMMs, whose multiplicand is data,
+    /// not weights). An append-only prepacked KV cache shrinks these to
+    /// the newly appended delta: see
+    /// [`crate::sim::planner::TilePlan::stats_kv_prepacked`].
+    pub activation_encodes: u64,
 }
 
 impl GemmStats {
@@ -70,6 +76,7 @@ impl GemmStats {
         self.psum_spills += o.psum_spills;
         self.encodes += o.encodes;
         self.weight_encodes += o.weight_encodes;
+        self.activation_encodes += o.activation_encodes;
     }
 }
 

@@ -176,6 +176,49 @@ impl TilePlan {
         }
         st
     }
+
+    /// Event counts for an **activation×activation** GEMM (the
+    /// attention score Q·Kᵀ and context softmax·V contractions): same
+    /// totals as [`TilePlan::stats`], with every encoder activation
+    /// attributed to the activation side instead of the weight side —
+    /// no operand here is a weight, so a resident encoded-weight cache
+    /// changes nothing.
+    pub fn stats_attention(&self) -> GemmStats {
+        let mut st = self.stats();
+        st.activation_encodes = st.encodes;
+        st.weight_encodes = 0;
+        st
+    }
+
+    /// Event counts for an attention GEMM whose history operand (Kᵀ or
+    /// V) is resident in an **append-only prepacked KV cache**: on
+    /// EN-T(Ours) only `fresh` elements — the newly appended token's
+    /// rows/columns — pass a unit encoder; the history's codes are
+    /// reused verbatim, so a steady-state decode step charges O(1)
+    /// activation-encode events instead of O(seq). Other event counts
+    /// are untouched, and Baseline/EN-T(MBE) cannot consume EN-T codes,
+    /// so their counts are unchanged — mirroring the functional
+    /// fallback in
+    /// [`TcuEngine::matmul_prepacked_into`](crate::arch::TcuEngine::matmul_prepacked_into).
+    pub fn stats_kv_prepacked(&self, fresh: u64) -> GemmStats {
+        let mut st = self.stats_attention();
+        apply_kv_prepack(self.tcu.variant, &mut st, fresh);
+        st
+    }
+}
+
+/// The prepacked-KV override on (possibly multi-instance-merged)
+/// attention stats: a code-consuming variant charges exactly `fresh`
+/// activation-encode events — the appended delta — while
+/// Baseline/EN-T(MBE) cannot consume EN-T codes and keep their counts.
+/// One rule, shared by [`TilePlan::stats_kv_prepacked`] and the SoC
+/// energy walk's multi-instance merge (`crate::soc::energy`), so the
+/// consuming-variant set cannot drift between them.
+pub fn apply_kv_prepack(variant: crate::pe::Variant, st: &mut GemmStats, fresh: u64) {
+    if variant == crate::pe::Variant::EntOurs {
+        st.encodes = fresh;
+        st.activation_encodes = fresh;
+    }
 }
 
 #[cfg(test)]
@@ -281,6 +324,37 @@ mod tests {
                 let c = TilePlan::new(&tcu, g).stats_cached();
                 assert_eq!(p.encodes, c.encodes, "{} {}", kind.name(), v.name());
             }
+        }
+    }
+
+    /// `stats_kv_prepacked`: EN-T(Ours) charges only the appended delta
+    /// as activation-encode events (O(1) per decode step); everything
+    /// else is untouched and non-consuming variants are unchanged.
+    #[test]
+    fn kv_prepacked_stats_charge_only_the_fresh_delta() {
+        // Decode-shaped score GEMM: one new row × dh over a 17-long
+        // history.
+        let p = plan(ArchKind::SystolicOs, 8, 1, 8, 17);
+        let plain = p.stats_attention();
+        assert_eq!(plain.activation_encodes, plain.encodes);
+        assert_eq!(plain.weight_encodes, 0);
+        assert!(plain.encodes > 8, "uncached attention encodes scale with tiles");
+        let pp = p.stats_kv_prepacked(8);
+        assert_eq!(pp.encodes, 8);
+        assert_eq!(pp.activation_encodes, 8);
+        assert_eq!(pp.weight_encodes, 0);
+        assert_eq!(pp.cycles, plain.cycles);
+        assert_eq!(pp.a_reads, plain.a_reads);
+        assert_eq!(pp.b_reads, plain.b_reads);
+        for v in [Variant::Baseline, Variant::EntMbe] {
+            let tcu = Tcu::new(ArchKind::SystolicOs, 8, v);
+            let tp = TilePlan::new(&tcu, GemmShape::new(1, 8, 17));
+            assert_eq!(
+                tp.stats_kv_prepacked(8).encodes,
+                tp.stats_attention().encodes,
+                "{} must not consume KV codes",
+                v.name()
+            );
         }
     }
 

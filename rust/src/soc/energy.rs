@@ -30,6 +30,29 @@ pub struct EnergyOpts {
     /// uncached walk were paid at cache fill and amortize toward zero
     /// across tiles, steps, and requests.
     pub encode_cache: bool,
+    /// Model the **append-only prepacked KV cache**
+    /// ([`KvCache`](crate::nn::attention::KvCache)): attention
+    /// score/context GEMMs charge encoder events only for the newly
+    /// appended K/V delta ([`Layer::Gemm`]'s `kv_fresh`) on EN-T(Ours)
+    /// — the history's codes are resident, so a steady-state decode
+    /// step's activation encodes are O(1) instead of O(seq). Weight
+    /// GEMMs are untouched (their reuse is [`EnergyOpts::encode_cache`]).
+    pub kv_prepack: bool,
+}
+
+/// Which reuse layer (if any) covers a GEMM's encoded operand during
+/// the frame walk.
+#[derive(Clone, Copy, Debug)]
+enum GemmCaching {
+    /// Encode on the fly — the uncached walk.
+    None,
+    /// Weight GEMM with the encoded-weight cache resident
+    /// ([`TilePlan::stats_cached`](crate::sim::planner::TilePlan::stats_cached)).
+    Weights,
+    /// Attention GEMM (no weight operand); `fresh` is the per-repeat
+    /// K/V delta to charge when the prepacked KV cache is resident
+    /// (`None` = prepack off, full activation encodes).
+    Attention { fresh: Option<u64> },
 }
 
 /// Energy decomposition of one frame, all in picojoules.
@@ -53,6 +76,11 @@ pub struct FrameEnergy {
     /// The weight-operand subset of `encodes` — zero for every weight
     /// GEMM when [`EnergyOpts::encode_cache`] is on (EN-T(Ours)).
     pub weight_encodes: u64,
+    /// The activation-operand subset of `encodes` (attention
+    /// score/context GEMMs) — shrunk to the appended K/V delta when
+    /// [`EnergyOpts::kv_prepack`] is on (EN-T(Ours)), so a decode step
+    /// charges O(1) activation encodes instead of O(seq).
+    pub activation_encodes: u64,
 }
 
 impl FrameEnergy {
@@ -124,37 +152,49 @@ fn accumulate(t: &mut FrameEnergy, e: &FrameEnergy) {
     t.macs += e.macs;
     t.encodes += e.encodes;
     t.weight_encodes += e.weight_encodes;
+    t.activation_encodes += e.activation_encodes;
 }
 
-/// Stats for one GEMM on one TCU, cached-weight mode optional.
-fn tcu_stats(tcu: &crate::arch::Tcu, g: GemmShape, cached: bool) -> GemmStats {
+/// Stats for one GEMM on one TCU under a caching mode. The prepacked-KV
+/// `fresh` override is applied by [`soc_gemm_stats`] **after** any
+/// multi-instance merge — the delta is encoded once, not once per
+/// instance.
+fn tcu_stats(tcu: &crate::arch::Tcu, g: GemmShape, caching: GemmCaching) -> GemmStats {
     let plan = crate::sim::planner::TilePlan::new(tcu, g);
-    if cached {
-        plan.stats_cached()
-    } else {
-        plan.stats()
+    match caching {
+        GemmCaching::None => plan.stats(),
+        GemmCaching::Weights => plan.stats_cached(),
+        GemmCaching::Attention { .. } => plan.stats_attention(),
     }
 }
 
 /// Dataflow stats for one GEMM across the SoC's TCU instances (two cubes
 /// split the N dimension; a single array takes the whole problem).
-fn soc_gemm_stats(soc: &Soc, g: GemmShape, cached: bool) -> GemmStats {
-    if soc.tcus.len() == 1 {
-        return tcu_stats(&soc.tcus[0], g, cached);
+fn soc_gemm_stats(soc: &Soc, g: GemmShape, caching: GemmCaching) -> GemmStats {
+    let mut agg = if soc.tcus.len() == 1 {
+        tcu_stats(&soc.tcus[0], g, caching)
+    } else {
+        // Split N across instances; cycles overlap (max), traffic adds.
+        let per = GemmShape::new(g.m, g.k, g.n.div_ceil(soc.tcus.len()));
+        let mut agg = GemmStats::default();
+        let mut max_cycles = 0;
+        for tcu in &soc.tcus {
+            let st = tcu_stats(tcu, per, caching);
+            max_cycles = max_cycles.max(st.cycles);
+            agg.merge(&st);
+        }
+        agg.cycles = max_cycles;
+        agg.macs = g.macs();
+        agg.utilization = agg.macs as f64
+            / (agg.cycles as f64 * soc.tcus.iter().map(|t| t.num_macs() as f64).sum::<f64>());
+        agg
+    };
+    // The appended K/V delta passes a unit encoder exactly once,
+    // however the history is split across instances (the shared planner
+    // rule decides which variants consume codes).
+    if let GemmCaching::Attention { fresh: Some(fresh) } = caching {
+        crate::sim::planner::apply_kv_prepack(soc.tcus[0].variant, &mut agg, fresh);
     }
-    // Split N across instances; cycles overlap (max), traffic adds.
-    let per = GemmShape::new(g.m, g.k, g.n.div_ceil(soc.tcus.len()));
-    let mut agg = GemmStats::default();
-    let mut max_cycles = 0;
-    for tcu in &soc.tcus {
-        let st = tcu_stats(tcu, per, cached);
-        max_cycles = max_cycles.max(st.cycles);
-        agg.merge(&st);
-    }
-    agg.cycles = max_cycles;
-    agg.macs = g.macs();
-    agg.utilization =
-        agg.macs as f64 / (agg.cycles as f64 * soc.tcus.iter().map(|t| t.num_macs() as f64).sum::<f64>());
     agg
 }
 
@@ -175,15 +215,29 @@ fn layer_energy(soc: &Soc, layer: &Layer, opts: EnergyOpts) -> FrameEnergy {
 
     if let Some(g) = layer.gemm() {
         let reps = layer.gemm_repeats();
-        // Only layers that *have* weights hold a cacheable stationary
-        // operand; attention score/context GEMMs multiply activations
-        // by activations and keep their encodes either way.
+        // Weight GEMMs hold a cacheable stationary operand (the
+        // encoded-weight cache's territory); attention score/context
+        // GEMMs multiply activations by activations, where the
+        // append-only prepacked KV cache shrinks the encode load to the
+        // newly appended delta.
         let has_weights = layer.weight_bytes() > 0;
-        let st = soc_gemm_stats(soc, g, opts.encode_cache && has_weights);
+        let caching = if has_weights {
+            if opts.encode_cache {
+                GemmCaching::Weights
+            } else {
+                GemmCaching::None
+            }
+        } else {
+            GemmCaching::Attention {
+                fresh: opts.kv_prepack.then(|| layer.kv_fresh_elems()),
+            }
+        };
+        let st = soc_gemm_stats(soc, g, caching);
         e.macs = st.macs * reps;
         e.cycles = st.cycles * reps;
         e.encodes = st.encodes * reps;
-        e.weight_encodes = if has_weights { st.weight_encodes * reps } else { 0 };
+        e.weight_encodes = st.weight_encodes * reps;
+        e.activation_encodes = st.activation_encodes * reps;
 
         // --- TCU dynamic energy over busy cycles (+ per-event encoder
         //     energy, which an encoded-weight cache amortizes away) ---
@@ -349,7 +403,11 @@ mod tests {
         let net = spec.decode_network(17);
         let soc = Soc::paper_config(ArchKind::SystolicOs, Variant::EntOurs);
         let (plain, _) = frame_energy(&soc, &net);
-        let (cached, _) = frame_energy_with(&soc, &net, EnergyOpts { encode_cache: true });
+        let cache_opts = EnergyOpts {
+            encode_cache: true,
+            ..Default::default()
+        };
+        let (cached, _) = frame_energy_with(&soc, &net, cache_opts);
         assert!(plain.weight_encodes > 0);
         assert_eq!(cached.weight_encodes, 0, "cached decode must not encode weights");
         assert!(cached.encodes > 0, "score/context GEMMs still encode");
@@ -361,7 +419,7 @@ mod tests {
         // Baseline keeps its per-PE encoders either way.
         let socb = Soc::paper_config(ArchKind::SystolicOs, Variant::Baseline);
         let (pb, _) = frame_energy(&socb, &net);
-        let (cb, _) = frame_energy_with(&socb, &net, EnergyOpts { encode_cache: true });
+        let (cb, _) = frame_energy_with(&socb, &net, cache_opts);
         assert_eq!(pb.encodes, cb.encodes);
         assert_eq!(pb.total_pj(), cb.total_pj());
     }

@@ -173,7 +173,11 @@ fn decode_step_weight_encodes_are_zero_with_cache() {
     let decode = spec.decode_network(17);
     let soc = Soc::paper_config(ArchKind::SystolicOs, Variant::EntOurs);
     let (plain, _) = frame_energy(&soc, &decode);
-    let (cached, _) = frame_energy_with(&soc, &decode, EnergyOpts { encode_cache: true });
+    let cache_opts = EnergyOpts {
+        encode_cache: true,
+        ..Default::default()
+    };
+    let (cached, _) = frame_energy_with(&soc, &decode, cache_opts);
     assert!(plain.weight_encodes > 0, "uncached decode must encode weights");
     assert_eq!(cached.weight_encodes, 0, "cached decode must not encode weights");
     assert!(cached.encodes > 0, "activation GEMMs keep encoding");

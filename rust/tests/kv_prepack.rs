@@ -1,0 +1,171 @@
+//! Equivalence + accounting suite for the **append-only prepacked KV
+//! cache** (`nn::attention::KvCache`'s code sidecar): decode with
+//! kv-prepack on must be bit-identical to the plain path across the
+//! full 5-architecture × 3-variant grid, `truncate()` must invalidate
+//! exactly the dropped suffix, and — the acceptance criterion — a
+//! decode step with the cache resident must charge **O(1)**
+//! weight+activation encode events through the planner, independent of
+//! context length, where the uncached walk charges O(seq).
+
+use ent::arch::{ArchKind, Tcu, ALL_ARCHS};
+use ent::coordinator::{Config, Coordinator, TokenRequest};
+use ent::nn::transformer::{QuantTransformer, TransformerSpec};
+use ent::pe::{Variant, ALL_VARIANTS};
+use ent::soc::energy::{frame_energy_with, EnergyOpts};
+use ent::soc::Soc;
+
+fn prompt(n: usize) -> Vec<u16> {
+    (0..n).map(|i| ((i * 7 + 3) % 64) as u16).collect()
+}
+
+/// The headline equivalence: prefill + greedy decode produce
+/// bit-identical logits and tokens with kv-prepack on or off, on every
+/// architecture × variant (non-EN-T engines exercise the transparent
+/// fallback).
+#[test]
+fn decode_bit_identical_with_kv_prepack_across_grid() {
+    let plain = QuantTransformer::tiny_native();
+    let prepacked = QuantTransformer::tiny_native().with_kv_prepack(true);
+    for arch in ALL_ARCHS {
+        let size = if arch == ArchKind::Cube3d { 4 } else { 8 };
+        for variant in ALL_VARIANTS {
+            let eng = Tcu::new(arch, size, variant).engine();
+            let (want_logits, want_toks) = plain.generate(&eng, &prompt(5), 3);
+            let (got_logits, got_toks) = prepacked.generate(&eng, &prompt(5), 3);
+            assert_eq!(got_logits, want_logits, "{} {}", arch.name(), variant.name());
+            assert_eq!(got_toks, want_toks, "{} {}", arch.name(), variant.name());
+        }
+    }
+}
+
+/// Chunked prefill through the prepacked path matches a fresh full
+/// prefill — the continuous scheduler's mixed prefill/decode steps ride
+/// the same sidecar.
+#[test]
+fn chunked_prefill_with_kv_prepack_matches_full() {
+    let model = QuantTransformer::tiny_native().with_kv_prepack(true);
+    let eng = Tcu::new(ArchKind::Matrix2d, 8, Variant::EntOurs).engine();
+    let toks = prompt(7);
+    let mut caches = model.empty_caches();
+    model.prefill(&eng, &toks[..3], &mut caches);
+    model.prefill(&eng, &toks[3..5], &mut caches);
+    let chunked = model.prefill(&eng, &toks[5..], &mut caches);
+    assert_eq!(chunked, model.logits(&eng, &toks));
+}
+
+/// `truncate()` then re-decode matches a fresh decode: the sidecar
+/// invalidates exactly the dropped suffix, and the surviving prefix's
+/// codes stay correct.
+#[test]
+fn truncate_then_redecode_matches_fresh_decode() {
+    let model = QuantTransformer::tiny_native().with_kv_prepack(true);
+    let eng = Tcu::new(ArchKind::SystolicWs, 8, Variant::EntOurs).engine();
+    let mut caches = model.empty_caches();
+    model.prefill(&eng, &prompt(5), &mut caches);
+    let first = model.decode(&eng, 9, &mut caches);
+    for c in caches.iter_mut() {
+        c.truncate(5);
+        assert_eq!(c.len(), 5);
+        assert_eq!(c.encoded_len(), 5, "prefix codes must survive truncate");
+    }
+    let again = model.decode(&eng, 9, &mut caches);
+    assert_eq!(again, first, "truncate + re-decode diverged");
+    // And against a model that never prepacked at all.
+    let plain = QuantTransformer::tiny_native();
+    let mut fresh = plain.empty_caches();
+    plain.prefill(&eng, &prompt(5), &mut fresh);
+    assert_eq!(plain.decode(&eng, 9, &mut fresh), first);
+}
+
+/// The acceptance criterion, planner-verified: with the encode cache
+/// and kv-prepack resident on EN-T(Ours), a decode step charges O(1)
+/// weight+activation encode events — the same total at any context
+/// length — while the non-prepacked walk grows with the history.
+#[test]
+fn decode_step_encodes_are_o1_with_kv_prepack() {
+    let spec = TransformerSpec::tiny();
+    let soc = Soc::paper_config(ArchKind::SystolicOs, Variant::EntOurs);
+    let both = EnergyOpts {
+        encode_cache: true,
+        kv_prepack: true,
+    };
+    let short = frame_energy_with(&soc, &spec.decode_network(9), both).0;
+    let long = frame_energy_with(&soc, &spec.decode_network(33), both).0;
+    assert_eq!(
+        short.encodes, long.encodes,
+        "decode-step encodes must not grow with context length"
+    );
+    assert_eq!(short.weight_encodes, 0, "weights are cache-resident");
+    // Exactly the K and V deltas: 2 · d_model per layer, once each.
+    let expect = 2 * (spec.d_model * spec.layers) as u64;
+    assert_eq!(short.encodes, expect);
+    assert_eq!(short.activation_encodes, expect);
+    // Without the sidecar the activation encodes are O(seq).
+    let cache_only = EnergyOpts {
+        encode_cache: true,
+        ..Default::default()
+    };
+    let short_nc = frame_energy_with(&soc, &spec.decode_network(9), cache_only).0;
+    let long_nc = frame_energy_with(&soc, &spec.decode_network(33), cache_only).0;
+    assert!(
+        long_nc.encodes > short_nc.encodes,
+        "uncached attention encodes must grow with context ({} vs {})",
+        long_nc.encodes,
+        short_nc.encodes
+    );
+    assert!(long_nc.encodes > long.encodes, "prepack must shrink encode events");
+    // The per-event encoder pricing follows the events.
+    assert!(long.encode_pj < long_nc.encode_pj);
+    assert!(long.total_pj() < long_nc.total_pj());
+    // Everything that is not encoder work is untouched.
+    assert_eq!(long.macs, long_nc.macs);
+    assert_eq!(long.cycles, long_nc.cycles);
+}
+
+/// Non-consuming variants are indifferent to the flag — events and
+/// energy are bit-for-bit unchanged (they cannot consume EN-T codes).
+#[test]
+fn kv_prepack_is_inert_on_non_consuming_variants() {
+    let spec = TransformerSpec::tiny();
+    let net = spec.decode_network(17);
+    for variant in [Variant::Baseline, Variant::EntMbe] {
+        let soc = Soc::paper_config(ArchKind::SystolicOs, variant);
+        let plain = frame_energy_with(&soc, &net, EnergyOpts::default()).0;
+        let pp = frame_energy_with(
+            &soc,
+            &net,
+            EnergyOpts {
+                kv_prepack: true,
+                ..Default::default()
+            },
+        )
+        .0;
+        assert_eq!(plain.encodes, pp.encodes, "{variant:?}");
+        assert_eq!(plain.total_pj(), pp.total_pj(), "{variant:?}");
+    }
+}
+
+/// End-to-end through the continuous scheduler: kv-prepack on (the
+/// default) serves the same logits/tokens as off, and the residency
+/// counters ride the metrics snapshot.
+#[test]
+fn continuous_serving_kv_prepack_matches_off_and_counters_surface() {
+    let on = Coordinator::start(Config::continuous(2)).expect("prepack-on coordinator");
+    let mut off_cfg = Config::continuous(2);
+    off_cfg.kv_prepack = Some(false);
+    let off = Coordinator::start(off_cfg).expect("prepack-off coordinator");
+
+    let req = || TokenRequest::generate(prompt(6), 3);
+    let a = on.infer_tokens(req()).expect("prepack-on serve");
+    let b = off.infer_tokens(req()).expect("prepack-off serve");
+    assert_eq!(a.logits, b.logits, "kv-prepack changed served logits");
+    assert_eq!(a.generated, b.generated);
+
+    let m = on.metrics();
+    assert!(m.kv_rows_encoded > 0, "residency counters must surface: {m:?}");
+    assert!(m.kv_rows_reused > 0, "decode must reuse cached rows: {m:?}");
+    let m_off = off.metrics();
+    assert_eq!((m_off.kv_rows_encoded, m_off.kv_rows_reused), (0, 0));
+    on.shutdown();
+    off.shutdown();
+}
