@@ -24,24 +24,36 @@ fn main() {
     let duration_ms: u64 = if quick { 200 } else { 1500 };
     let mut rows: Vec<Json> = Vec::new();
 
-    // scheduler × rate grid on pure token traffic, then one mixed row
-    // and the kv-prepack off contrast (continuous serves with the
+    // scheduler × rate grid on pure token traffic, then one mixed row,
+    // the kv-prepack off contrast (continuous serves with the
     // append-only prepacked KV cache on by default — the _nopp row
-    // shows the decode tokens/s delta at kv-prepack on vs off).
-    let cases: [(&str, f64, f64); 6] = [
-        ("continuous", 100.0, 0.0),
-        ("continuous_nopp", 100.0, 0.0),
-        ("continuous", 300.0, 0.0),
-        ("window", 100.0, 0.0),
-        ("window", 300.0, 0.0),
-        ("continuous", 200.0, 0.25),
+    // shows the decode tokens/s delta at kv-prepack on vs off), and the
+    // Zipf prefix-popularity pair: `continuous_zipf` exercises the
+    // shared prefix KV pool under realistic template traffic, and
+    // `continuous_zipf_noshare` is the same workload with prefix
+    // sharing off — the tokens/s and prefix_hit_rate gap is the
+    // cross-request encode-reuse win.
+    let cases: [(&str, f64, f64, f64); 8] = [
+        ("continuous", 100.0, 0.0, 0.0),
+        ("continuous_nopp", 100.0, 0.0, 0.0),
+        ("continuous", 300.0, 0.0, 0.0),
+        ("window", 100.0, 0.0, 0.0),
+        ("window", 300.0, 0.0, 0.0),
+        ("continuous", 200.0, 0.25, 0.0),
+        ("continuous_zipf", 400.0, 0.0, 1.1),
+        ("continuous_zipf_noshare", 400.0, 0.0, 1.1),
     ];
-    for (scheduler, rate, mix) in cases {
+    for (scheduler, rate, mix, zipf) in cases {
         let cfg = match scheduler {
-            "continuous" => Config::continuous(SHARDS),
+            "continuous" | "continuous_zipf" => Config::continuous(SHARDS),
             "continuous_nopp" => {
                 let mut c = Config::continuous(SHARDS);
                 c.kv_prepack = Some(false);
+                c
+            }
+            "continuous_zipf_noshare" => {
+                let mut c = Config::continuous(SHARDS);
+                c.prefix_share = Some(false);
                 c
             }
             _ => Config::native(SHARDS),
@@ -53,6 +65,7 @@ fn main() {
             prompt_len: 12,
             max_new_tokens: 4,
             image_mix: mix,
+            prefix_zipf: zipf,
             seed: 0xBE7C,
         };
         let r = loadgen::run(&coord, &load);

@@ -36,8 +36,20 @@ pub struct LoadGen {
     /// Fraction of arrivals that are CNN image requests instead of
     /// token requests (0.0 = pure token traffic).
     pub image_mix: f64,
+    /// Zipf exponent for **prefix popularity** (`ent loadgen
+    /// --prefix-zipf <s>`): when > 0, each token request draws its
+    /// prompt from a seeded pool of [`PREFIX_TEMPLATES`] templates with
+    /// probability ∝ 1/rank^s — the first `prompt_len − 1` positions are
+    /// the template's fixed prefix, the last position is fresh random —
+    /// so repeated templates exercise the shared prefix KV pool the way
+    /// real system-prompt traffic does. 0.0 keeps the original uniform
+    /// i.i.d. prompts.
+    pub prefix_zipf: f64,
     pub seed: u64,
 }
+
+/// Size of the Zipf template pool (`LoadGen::prefix_zipf`).
+pub const PREFIX_TEMPLATES: usize = 4;
 
 impl Default for LoadGen {
     fn default() -> Self {
@@ -47,6 +59,7 @@ impl Default for LoadGen {
             prompt_len: 12,
             max_new_tokens: 2,
             image_mix: 0.0,
+            prefix_zipf: 0.0,
             seed: 0x10AD,
         }
     }
@@ -71,6 +84,10 @@ pub struct LoadReport {
     pub tokens_served: u64,
     /// Engine-shard busy fraction reported by the coordinator.
     pub occupancy: f64,
+    /// Fraction of prompt KV rows served from the shared prefix pool
+    /// during this run (0.0 when prefix sharing is off or no token
+    /// traffic flowed).
+    pub prefix_hit_rate: f64,
 }
 
 impl LoadReport {
@@ -90,6 +107,7 @@ impl LoadReport {
             ("p99_latency_us", num_or_null(lat.map(|l| l.p99))),
             ("tokens_per_s", Json::num(self.tokens_per_s)),
             ("occupancy", Json::num(self.occupancy)),
+            ("prefix_hit_rate", Json::num(self.prefix_hit_rate)),
         ]
     }
 }
@@ -106,6 +124,31 @@ pub fn run(coord: &Coordinator, cfg: &LoadGen) -> LoadReport {
     let mut rng = Rng::new(cfg.seed);
     let vocab = TransformerSpec::tiny().vocab as u64;
     let input_len = coord.model().input_len();
+    // Zipf prefix popularity: a seeded pool of fixed prompt prefixes,
+    // rank i drawn with probability ∝ 1/(i+1)^s. Each template fixes
+    // the first `prompt_len − 1` positions; the last position stays
+    // random per request, so requests share a prefix, not a prompt.
+    let templates: Vec<Vec<u16>> = if cfg.prefix_zipf > 0.0 {
+        (0..PREFIX_TEMPLATES)
+            .map(|t| {
+                let mut trng = Rng::new(cfg.seed ^ (0xF1F0_0000 + t as u64));
+                (0..cfg.prompt_len.max(1) - 1)
+                    .map(|_| trng.below(vocab) as u16)
+                    .collect()
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+    let zipf_cdf: Vec<f64> = {
+        let mut acc = 0.0;
+        (0..PREFIX_TEMPLATES)
+            .map(|i| {
+                acc += 1.0 / ((i + 1) as f64).powf(cfg.prefix_zipf);
+                acc
+            })
+            .collect()
+    };
     let horizon = Duration::from_millis(cfg.duration_ms);
     let mut pending: Vec<PendingRx> = Vec::new();
     let mut next_at = Duration::ZERO;
@@ -121,9 +164,17 @@ pub fn run(coord: &Coordinator, cfg: &LoadGen) -> LoadReport {
                 image: rng.i8_vec(input_len),
             })));
         } else {
-            let tokens: Vec<u16> = (0..cfg.prompt_len.max(1))
-                .map(|_| rng.below(vocab) as u16)
-                .collect();
+            let tokens: Vec<u16> = if cfg.prefix_zipf > 0.0 {
+                let u = rng.f64() * zipf_cdf[PREFIX_TEMPLATES - 1];
+                let pick = zipf_cdf.iter().position(|&c| u < c).unwrap_or(0);
+                let mut t = templates[pick].clone();
+                t.push(rng.below(vocab) as u16);
+                t
+            } else {
+                (0..cfg.prompt_len.max(1))
+                    .map(|_| rng.below(vocab) as u16)
+                    .collect()
+            };
             pending.push(PendingRx::Tok(coord.submit_tokens(TokenRequest::generate(
                 tokens,
                 cfg.max_new_tokens,
@@ -161,6 +212,25 @@ pub fn run(coord: &Coordinator, cfg: &LoadGen) -> LoadReport {
     // not the coordinator's whole lifetime (matters for warmup passes).
     let busy = after.busy_ns - before.busy_ns;
     let capacity = after.capacity_ns - before.capacity_ns;
+    // Prefix-pool hit rate over this run's rows (the pool may attach
+    // after the `before` snapshot on a cold coordinator — missing
+    // baselines count as zero).
+    let (bh, bm) = before
+        .kv_pool
+        .map(|p| (p.hit_rows, p.miss_rows))
+        .unwrap_or((0, 0));
+    let prefix_hit_rate = after
+        .kv_pool
+        .map(|a| {
+            let hits = a.hit_rows.saturating_sub(bh);
+            let total = hits + a.miss_rows.saturating_sub(bm);
+            if total == 0 {
+                0.0
+            } else {
+                hits as f64 / total as f64
+            }
+        })
+        .unwrap_or(0.0);
     LoadReport {
         sent,
         completed,
@@ -179,6 +249,7 @@ pub fn run(coord: &Coordinator, cfg: &LoadGen) -> LoadReport {
         } else {
             busy as f64 / capacity as f64
         },
+        prefix_hit_rate,
     }
 }
 
@@ -200,6 +271,7 @@ mod tests {
                 prompt_len: 5,
                 max_new_tokens: 1,
                 image_mix: 0.3,
+                prefix_zipf: 0.0,
                 seed: 0x5EED,
             },
         );
@@ -211,6 +283,40 @@ mod tests {
         assert_eq!(report.failed, 0, "no failures expected under light load");
         assert!(report.tokens_served >= 1, "token traffic must flow");
         assert!(report.latency_us.is_some());
+        coord.shutdown();
+    }
+
+    /// Zipf prefix traffic against a prefix-sharing continuous
+    /// coordinator: repeated templates hit the pool, so the report's
+    /// hit rate climbs above zero (templates repeat long before the
+    /// pool evicts).
+    #[test]
+    fn zipf_traffic_exercises_the_prefix_pool() {
+        let coord = Coordinator::start(Config::continuous(2)).expect("continuous coordinator");
+        let report = run(
+            &coord,
+            &LoadGen {
+                rate_per_s: 400.0,
+                duration_ms: 120,
+                prompt_len: 12,
+                max_new_tokens: 1,
+                image_mix: 0.0,
+                prefix_zipf: 1.1,
+                seed: 0x21FF,
+            },
+        );
+        assert_eq!(
+            report.completed + report.rejected + report.failed,
+            report.sent
+        );
+        assert_eq!(report.failed, 0);
+        if report.sent > PREFIX_TEMPLATES as u64 * 4 {
+            assert!(
+                report.prefix_hit_rate > 0.0,
+                "repeated Zipf templates must hit the prefix pool (rate {})",
+                report.prefix_hit_rate
+            );
+        }
         coord.shutdown();
     }
 }

@@ -15,6 +15,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::encoding::prepacked::{CacheStats, EncodeCache};
+use crate::nn::kvpool::{KvPool, KvPoolStats};
 use crate::util::stats::Summary;
 
 /// Size of the recent-latency reservoir backing the percentile summary.
@@ -55,6 +56,10 @@ struct Inner {
     /// The executor's encoded-weight cache, when serving with one —
     /// snapshots surface its hit/miss/evict counters.
     encode_cache: Option<Arc<EncodeCache>>,
+    /// The executor's shared prefix KV pool, when serving with one —
+    /// snapshots surface its hit-rate, resident-bytes gauge, and
+    /// eviction counters.
+    kv_pool: Option<Arc<KvPool>>,
 }
 
 /// Point-in-time view of the aggregates. Pure read: snapshotting never
@@ -97,6 +102,10 @@ pub struct Snapshot {
     /// codes).
     pub kv_rows_encoded: u64,
     pub kv_rows_reused: u64,
+    /// Shared prefix-pool counters (`None` when serving without
+    /// prefix sharing — see `Config::prefix_share`): per-row hit/miss
+    /// totals, insertions, LRU evictions, and the resident-bytes gauge.
+    pub kv_pool: Option<KvPoolStats>,
 }
 
 impl Metrics {
@@ -118,6 +127,7 @@ impl Metrics {
                 latencies_us: Vec::new(),
                 lat_next: 0,
                 encode_cache: None,
+                kv_pool: None,
             }),
         }
     }
@@ -127,6 +137,13 @@ impl Metrics {
     /// encoded-weight cache).
     pub fn attach_encode_cache(&self, cache: Arc<EncodeCache>) {
         self.inner.lock().unwrap().encode_cache = Some(cache);
+    }
+
+    /// Surface `pool`'s counters in every subsequent snapshot (the
+    /// executor calls this at startup when serving with a shared
+    /// prefix KV pool — see `Config::prefix_share`).
+    pub fn attach_kv_pool(&self, pool: Arc<KvPool>) {
+        self.inner.lock().unwrap().kv_pool = Some(pool);
     }
 
     /// Stamp the serving-time origin: a request has arrived. Idempotent
@@ -230,6 +247,7 @@ impl Metrics {
             encode_cache: g.encode_cache.as_ref().map(|c| c.stats()),
             kv_rows_encoded: g.kv_rows_encoded,
             kv_rows_reused: g.kv_rows_reused,
+            kv_pool: g.kv_pool.as_ref().map(|p| p.stats()),
         }
     }
 }
@@ -310,6 +328,19 @@ mod tests {
         w.resolve(&cache);
         let s = m.snapshot().encode_cache.expect("cache attached");
         assert_eq!((s.hits, s.misses), (1, 1));
+    }
+
+    /// Shared prefix-pool counters ride the snapshot once attached.
+    #[test]
+    fn kv_pool_counters_surface_in_snapshot() {
+        let m = Metrics::new();
+        assert!(m.snapshot().kv_pool.is_none());
+        let pool = Arc::new(KvPool::new(1 << 20));
+        m.attach_kv_pool(pool.clone());
+        let s = m.snapshot().kv_pool.expect("pool attached");
+        assert_eq!(s.entries, 0);
+        assert_eq!(s.bytes, 0, "resident-bytes gauge starts empty");
+        assert_eq!(s.budget_bytes, 1 << 20);
     }
 
     /// Prepacked-KV residency counters accumulate and surface.

@@ -163,6 +163,21 @@ pub struct Config {
     /// EN-T(Ours) engines consume the codes; other variants fall back
     /// transparently. Residency counters ride the metrics snapshots.
     pub kv_prepack: Option<bool>,
+    /// Byte budget of the shared **prefix KV pool**
+    /// ([`crate::nn::kvpool::KvPool`]) the continuous scheduler shares
+    /// K/V blocks through (`ent serve|loadgen --kv-pool-bytes`). Only
+    /// consulted when prefix sharing is on; 0 disables sharing outright.
+    pub kv_pool_bytes: usize,
+    /// Cross-request **prefix sharing** (`ent serve|loadgen
+    /// --prefix-share on|off`): completed prefill prefixes are published
+    /// to the pool's radix index, and an admission whose prompt prefix
+    /// is resident adopts the physical blocks — 0 encode events and 0
+    /// prefill MACs for the shared rows, copy-on-write on divergence
+    /// (bit-identical either way, `tests/kv_share.rs`). `None` picks the
+    /// mode default — **on** under continuous scheduling, off under
+    /// window batching (which never interleaves requests). Pool counters
+    /// ride the metrics snapshots.
+    pub prefix_share: Option<bool>,
 }
 
 impl Default for Config {
@@ -177,6 +192,8 @@ impl Default for Config {
             twin_variant: Variant::EntOurs,
             encode_cache_bytes: 0,
             kv_prepack: None,
+            kv_pool_bytes: 8 << 20,
+            prefix_share: None,
         }
     }
 }
@@ -577,6 +594,17 @@ fn executor_thread(
     // Continuous mode: hand the channel to the step-loop scheduler.
     if let ServeMode::Continuous(pol) = cfg.mode {
         if let Executor::Native { model, lm, shards } = &exec {
+            // Shared prefix KV pool: on by default under continuous
+            // scheduling (prefix sharing needs interleaved requests to
+            // pay off). Completed prefixes are published to the radix
+            // index; warm admissions adopt the resident blocks.
+            let kv_pool = if cfg.prefix_share.unwrap_or(true) && cfg.kv_pool_bytes > 0 {
+                let pool = Arc::new(crate::nn::kvpool::KvPool::new(cfg.kv_pool_bytes));
+                metrics.attach_kv_pool(Arc::clone(&pool));
+                Some(pool)
+            } else {
+                None
+            };
             scheduler::run(scheduler::SchedulerCtx {
                 pol,
                 cnn: model,
@@ -586,6 +614,7 @@ fn executor_thread(
                 metrics: &metrics,
                 sim_energy_uj,
                 sim_latency_ms,
+                kv_pool,
             });
         }
         return;

@@ -62,12 +62,13 @@
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::arch::AnyEngine;
 use crate::nn::attention::{AttnScratch, KvCache};
 use crate::nn::forward::QuantCnn;
+use crate::nn::kvpool::KvPool;
 use crate::nn::transformer::{QuantTransformer, StepSeq};
 
 use super::batcher::ContinuousPolicy;
@@ -85,6 +86,11 @@ pub(super) struct SchedulerCtx<'a> {
     pub metrics: &'a Metrics,
     pub sim_energy_uj: f64,
     pub sim_latency_ms: f64,
+    /// Shared prefix KV pool (`Config::prefix_share`): admissions whose
+    /// prompt prefix is radix-resident adopt the physical blocks (0
+    /// encode events, 0 prefill MACs for those rows) and completed
+    /// prefills publish theirs. `None` when prefix sharing is off.
+    pub kv_pool: Option<Arc<KvPool>>,
 }
 
 /// One in-flight sequence.
@@ -92,8 +98,13 @@ struct SeqState {
     job: TokenJob,
     /// Prompt followed by every generated token fed back for decode.
     queue: Vec<u16>,
-    /// Positions of `queue` already fed through the stack.
+    /// Positions of `queue` already fed through the stack (pool-warm
+    /// prompt rows count as fed: their K/V arrived resident).
     fed: usize,
+    /// Length of the original prompt — the radix-publishable prefix.
+    prompt_len: usize,
+    /// Whether this sequence's prompt prefix was published to the pool.
+    inserted: bool,
     generated: Vec<u16>,
     caches: Vec<KvCache>,
     /// Logits after the last fed position (empty before the first step).
@@ -179,10 +190,26 @@ pub(super) fn run(ctx: SchedulerCtx<'_>) {
                 continue;
             }
             let queue = std::mem::take(&mut job.tokens);
+            let mut caches = ctx.lm.empty_caches();
+            // Warm-prefix admission: adopt every radix-resident block of
+            // the prompt — those positions are never fed through the
+            // stack (0 encode events, 0 prefill MACs), but they count as
+            // served tokens: the client gets their K/V all the same. The
+            // last prompt position is always fed fresh (it produces the
+            // first logits).
+            let mut fed = 0usize;
+            if let Some(pool) = &ctx.kv_pool {
+                fed = pool.attach(&queue, &mut caches);
+                if fed > 0 {
+                    ctx.metrics.record_tokens(fed as u64);
+                }
+            }
             inflight.push(SeqState {
-                caches: ctx.lm.empty_caches(),
+                caches,
+                prompt_len: queue.len(),
+                inserted: false,
                 queue,
-                fed: 0,
+                fed,
                 generated: Vec::with_capacity(job.max_new),
                 logits: Vec::new(),
                 group: 1,
@@ -251,6 +278,16 @@ pub(super) fn run(ctx: SchedulerCtx<'_>) {
         let mut i = 0;
         while i < inflight.len() {
             let s = &mut inflight[i];
+            // Publish the completed prompt prefix to the radix index so
+            // later admissions with the same prefix adopt these blocks
+            // (first donor wins; re-publishing a warm-adopted prefix
+            // just refreshes its LRU age).
+            if !s.inserted && s.fed >= s.prompt_len {
+                if let Some(pool) = &ctx.kv_pool {
+                    pool.insert(&s.queue[..s.prompt_len], &s.caches);
+                }
+                s.inserted = true;
+            }
             if s.fed < s.queue.len() {
                 i += 1;
                 continue; // still prefilling

@@ -119,6 +119,15 @@ fn parse_kv_prepack(args: &ent::util::cli::Args) -> ent::Result<Option<bool>> {
     })
 }
 
+fn parse_prefix_share(args: &ent::util::cli::Args) -> ent::Result<Option<bool>> {
+    Ok(match args.get("prefix-share") {
+        None => None,
+        Some("on") | Some("true") => Some(true),
+        Some("off") | Some("false") => Some(false),
+        Some(other) => ent::bail!("--prefix-share must be on|off, got '{other}'"),
+    })
+}
+
 fn cmd_report(argv: &[String]) -> ent::Result<()> {
     let which = argv.first().map(|s| s.as_str()).unwrap_or("all");
     let out = match which {
@@ -389,6 +398,8 @@ fn cmd_serve(argv: &[String]) -> ent::Result<()> {
         OptSpec { name: "gen", takes_value: true, help: "greedy decode steps per token request (default 0)" },
         OptSpec { name: "encode-cache", takes_value: true, help: "encoded-weight cache budget in bytes (native backends; 0 = off)" },
         OptSpec { name: "kv-prepack", takes_value: true, help: "append-only prepacked KV cache, on|off (default: on with --continuous)" },
+        OptSpec { name: "prefix-share", takes_value: true, help: "cross-request prefix KV sharing, on|off (default: on with --continuous)" },
+        OptSpec { name: "kv-pool-bytes", takes_value: true, help: "shared prefix KV pool budget in bytes (default 8 MiB; 0 = off)" },
         OptSpec { name: "help", takes_value: false, help: "show help" },
     ];
     let args = Args::parse(argv, &specs)?;
@@ -418,6 +429,8 @@ fn cmd_serve(argv: &[String]) -> ent::Result<()> {
     }
     cfg.encode_cache_bytes = args.get_usize("encode-cache", 0)?;
     cfg.kv_prepack = parse_kv_prepack(&args)?;
+    cfg.prefix_share = parse_prefix_share(&args)?;
+    cfg.kv_pool_bytes = args.get_usize("kv-pool-bytes", cfg.kv_pool_bytes)?;
     let input_len = cfg.model.input_len();
     let coordinator = Coordinator::start(cfg)?;
     let kind = if tokens { "token" } else { "image" };
@@ -503,6 +516,19 @@ fn cmd_serve(argv: &[String]) -> ent::Result<()> {
             100.0 * m.kv_rows_reused as f64 / (m.kv_rows_encoded + m.kv_rows_reused) as f64
         );
     }
+    if let Some(ps) = m.kv_pool {
+        println!(
+            "kv pool: {:.1}% prefix hit rate ({} warm / {} cold rows), {} insertions {} evictions ({} entries, {} KiB of {} KiB)",
+            100.0 * ps.hit_rate(),
+            ps.hit_rows,
+            ps.miss_rows,
+            ps.insertions,
+            ps.evictions,
+            ps.entries,
+            ps.bytes / 1024,
+            ps.budget_bytes / 1024
+        );
+    }
     coordinator.shutdown();
     Ok(())
 }
@@ -515,10 +541,13 @@ fn cmd_loadgen(argv: &[String]) -> ent::Result<()> {
         OptSpec { name: "prompt", takes_value: true, help: "token prompt length (default 12)" },
         OptSpec { name: "gen", takes_value: true, help: "greedy decode steps per request (default 2)" },
         OptSpec { name: "mix", takes_value: true, help: "fraction of CNN image arrivals, 0..1 (default 0)" },
+        OptSpec { name: "prefix-zipf", takes_value: true, help: "Zipf exponent for prefix popularity over a seeded template pool (0 = uniform prompts)" },
         OptSpec { name: "shards", takes_value: true, help: "native engine shards (default 4)" },
         OptSpec { name: "window", takes_value: false, help: "drive the window batcher instead of continuous" },
         OptSpec { name: "encode-cache", takes_value: true, help: "encoded-weight cache budget in bytes (0 = off)" },
         OptSpec { name: "kv-prepack", takes_value: true, help: "append-only prepacked KV cache, on|off (default: on unless --window)" },
+        OptSpec { name: "prefix-share", takes_value: true, help: "cross-request prefix KV sharing, on|off (default: on unless --window)" },
+        OptSpec { name: "kv-pool-bytes", takes_value: true, help: "shared prefix KV pool budget in bytes (default 8 MiB; 0 = off)" },
         OptSpec { name: "seed", takes_value: true, help: "arrival-schedule seed (default 0x10AD)" },
         OptSpec { name: "json", takes_value: false, help: "JSON output" },
         OptSpec { name: "help", takes_value: false, help: "show help" },
@@ -536,6 +565,7 @@ fn cmd_loadgen(argv: &[String]) -> ent::Result<()> {
         prompt_len,
         max_new_tokens: args.get_usize("gen", 2)?.min(lm_spec.max_seq - prompt_len),
         image_mix: args.get_f64("mix", 0.0)?.clamp(0.0, 1.0),
+        prefix_zipf: args.get_f64("prefix-zipf", 0.0)?.max(0.0),
         seed: args.get_u64("seed", 0x10AD)?,
     };
     let shards = args.get_usize("shards", 4)?;
@@ -546,6 +576,8 @@ fn cmd_loadgen(argv: &[String]) -> ent::Result<()> {
     };
     cfg.encode_cache_bytes = args.get_usize("encode-cache", 0)?;
     cfg.kv_prepack = parse_kv_prepack(&args)?;
+    cfg.prefix_share = parse_prefix_share(&args)?;
+    cfg.kv_pool_bytes = args.get_usize("kv-pool-bytes", cfg.kv_pool_bytes)?;
     let scheduler = if args.flag("window") { "window" } else { "continuous" };
     let coord = Coordinator::start(cfg)?;
     let r = loadgen::run(&coord, &load);
@@ -589,6 +621,13 @@ fn cmd_loadgen(argv: &[String]) -> ent::Result<()> {
         t.row(vec![
             "kv prepack encoded/reused rows".into(),
             format!("{}/{}", m.kv_rows_encoded, m.kv_rows_reused),
+        ]);
+    }
+    if let Some(ps) = m.kv_pool {
+        t.row(vec!["prefix hit rate".into(), pct(ps.hit_rate())]);
+        t.row(vec![
+            "kv pool resident KiB / evictions".into(),
+            format!("{}/{}", ps.bytes / 1024, ps.evictions),
         ]);
     }
     print!("{}", t.render());

@@ -29,6 +29,7 @@ use std::sync::Arc;
 use crate::arch::{MatOperand, TcuEngine};
 use crate::encoding::packed::{lut_i8, PackedCode};
 use crate::encoding::prepacked::{CachedWeight, EncodeCache};
+use crate::nn::kvpool::{KvBlock, BLOCK_ROWS};
 use crate::pe::Variant;
 use crate::util::prng::Rng;
 
@@ -110,23 +111,36 @@ pub fn isqrt(x: u64) -> u64 {
 /// never leave integer arithmetic, so the result is bit-identical on
 /// every engine.
 pub fn add_norm(a: &[i8], b: &[i8], d: usize) -> Vec<i8> {
+    let mut out = vec![0i8; a.len()];
+    add_norm_into(a, b, d, &mut vec![0i64; d], &mut out);
+    out
+}
+
+/// Allocation-free [`add_norm`] into caller-owned buffers: `sums` is
+/// the one-row i64 accumulator (grown to `d` if short), `out` receives
+/// the normalized rows. `out` may alias neither input — the prefill
+/// hot path ping-pongs between two scratch-owned residual buffers.
+pub fn add_norm_into(a: &[i8], b: &[i8], d: usize, sums: &mut Vec<i64>, out: &mut [i8]) {
     assert_eq!(a.len(), b.len());
+    assert_eq!(a.len(), out.len(), "add_norm shape");
     assert!(d > 0 && a.len() % d == 0, "rows of width d");
-    let mut out = Vec::with_capacity(a.len());
-    let mut sums = vec![0i64; d]; // one row buffer, reused across rows
-    for (ra, rb) in a.chunks_exact(d).zip(b.chunks_exact(d)) {
+    grown(sums, d, 0i64);
+    let sums = &mut sums[..d];
+    for ((ra, rb), ro) in a
+        .chunks_exact(d)
+        .zip(b.chunks_exact(d))
+        .zip(out.chunks_exact_mut(d))
+    {
         for (s, (&x, &y)) in sums.iter_mut().zip(ra.iter().zip(rb)) {
             *s = x as i64 + y as i64;
         }
         let mean = sums.iter().sum::<i64>().div_euclid(d as i64);
         let var = sums.iter().map(|&s| (s - mean) * (s - mean)).sum::<i64>() / d as i64;
         let std = isqrt(var as u64).max(1) as i64;
-        out.extend(
-            sums.iter()
-                .map(|&s| (((s - mean) * 64) / std).clamp(-128, 127) as i8),
-        );
+        for (o, &s) in ro.iter_mut().zip(sums.iter()) {
+            *o = (((s - mean) * 64) / std).clamp(-128, 127) as i8;
+        }
     }
-    out
 }
 
 /// Requantize a block of GEMM accumulators to int8 with a power-of-two
@@ -151,29 +165,37 @@ pub fn requant_into(acc: &[i64], shift: u32, out: &mut [i8]) {
 /// autoregressive decode step projects only its own token and attends
 /// over cached history.
 ///
-/// Alongside the raw rows the cache keeps a **lazily maintained,
+/// The backing store is **paged**: rows live in fixed-size
+/// [`KvBlock`]s ([`BLOCK_ROWS`] positions each) held behind `Arc` in a
+/// grow-on-demand block table, so a fresh cache allocates nothing and
+/// identical prompt prefixes can share *physical* blocks across
+/// requests through [`crate::nn::kvpool::KvPool`]. Shared blocks are
+/// read-only; any mutation that would touch one (append after a
+/// rewind, re-encode, truncate-then-extend) copies on write via
+/// [`Arc::make_mut`], so sharers never observe each other.
+///
+/// Alongside the raw rows each block keeps a **lazily maintained,
 /// append-only [`PackedCode`] sidecar** — the EN-T wire-format code of
 /// every cached K/V element. [`KvCache::ensure_encoded`] encodes only
 /// the rows appended since the last call (the *delta*), so with
 /// kv-prepack enabled a decode step re-derives codes for exactly one
 /// new position while the whole history's codes are reused verbatim by
 /// the per-head score (Q·Kᵀ) and context (softmax·V) GEMMs through
-/// [`MatOperand::Codes`]. [`KvCache::truncate`] invalidates exactly the
-/// dropped suffix: the surviving prefix's codes stay valid and are
-/// never re-derived.
+/// [`MatOperand::Codes`] — and a warm-attached prefix re-derives no
+/// codes at all. [`KvCache::truncate`] invalidates exactly the dropped
+/// suffix: the surviving prefix's codes stay valid and are never
+/// re-derived.
 #[derive(Clone, Debug)]
 pub struct KvCache {
     d: usize,
     max_seq: usize,
-    k: Vec<i8>,
-    v: Vec<i8>,
     len: usize,
-    /// Code sidecars (`k_codes[i]` encodes `k[i]`), allocated on first
-    /// [`KvCache::ensure_encoded`] so non-prepack serving pays nothing.
-    k_codes: Vec<PackedCode>,
-    v_codes: Vec<PackedCode>,
     /// Positions `0..encoded` have valid sidecar codes (`encoded ≤ len`).
     encoded: usize,
+    /// Grow-on-demand block table; block `i` holds positions
+    /// `i·BLOCK_ROWS ..` and may be shared with other sequences or the
+    /// pool (copy-on-write on mutation).
+    blocks: Vec<Arc<KvBlock>>,
 }
 
 impl KvCache {
@@ -181,12 +203,9 @@ impl KvCache {
         KvCache {
             d,
             max_seq,
-            k: vec![0; d * max_seq],
-            v: vec![0; d * max_seq],
             len: 0,
-            k_codes: Vec::new(),
-            v_codes: Vec::new(),
             encoded: 0,
+            blocks: Vec::new(),
         }
     }
 
@@ -203,6 +222,12 @@ impl KvCache {
         self.max_seq
     }
 
+    /// Blocks currently backing this cache (grow-on-demand: 0 for a
+    /// fresh cache, `⌈len / BLOCK_ROWS⌉` once populated).
+    pub fn resident_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
     /// Positions whose sidecar codes are currently valid (≤ [`len`]).
     ///
     /// [`len`]: KvCache::len
@@ -210,10 +235,41 @@ impl KvCache {
         self.encoded
     }
 
+    /// Cached K row of position `p` (`d_model` int8 values).
+    pub fn k_row(&self, p: usize) -> &[i8] {
+        assert!(p < self.len, "KV row {p} beyond len {}", self.len);
+        let at = (p % BLOCK_ROWS) * self.d;
+        &self.blocks[p / BLOCK_ROWS].k[at..at + self.d]
+    }
+
+    /// Cached V row of position `p`.
+    pub fn v_row(&self, p: usize) -> &[i8] {
+        assert!(p < self.len, "KV row {p} beyond len {}", self.len);
+        let at = (p % BLOCK_ROWS) * self.d;
+        &self.blocks[p / BLOCK_ROWS].v[at..at + self.d]
+    }
+
+    /// Sidecar codes of position `p`'s K row (valid iff `p <`
+    /// [`KvCache::encoded_len`]).
+    pub fn k_codes_row(&self, p: usize) -> &[PackedCode] {
+        assert!(p < self.encoded, "KV codes {p} beyond encoded {}", self.encoded);
+        let at = (p % BLOCK_ROWS) * self.d;
+        &self.blocks[p / BLOCK_ROWS].k_codes[at..at + self.d]
+    }
+
+    /// Sidecar codes of position `p`'s V row.
+    pub fn v_codes_row(&self, p: usize) -> &[PackedCode] {
+        assert!(p < self.encoded, "KV codes {p} beyond encoded {}", self.encoded);
+        let at = (p % BLOCK_ROWS) * self.d;
+        &self.blocks[p / BLOCK_ROWS].v_codes[at..at + self.d]
+    }
+
     /// Drop cached positions beyond `len` (no-op if already shorter) —
     /// rewinds a speculative decode or resets a benchmark iteration.
     /// Sidecar codes of the surviving prefix stay valid; exactly the
-    /// dropped suffix is invalidated.
+    /// dropped suffix is invalidated. Shared blocks are untouched: the
+    /// stale rows are simply unreachable until an append overwrites
+    /// them (which copies on write).
     pub fn truncate(&mut self, len: usize) {
         self.len = self.len.min(len);
         self.encoded = self.encoded.min(self.len);
@@ -222,27 +278,61 @@ impl KvCache {
     /// Bring the code sidecar up to date: encode every appended-but-
     /// unencoded position (one [`lut_i8`] lookup per K and V element of
     /// the delta) and return how many positions were freshly encoded.
-    /// O(delta · d) — O(1) per steady-state decode step, never O(seq).
+    /// O(delta · d) — O(1) per steady-state decode step, never O(seq),
+    /// and 0 for warm-attached rows whose donor already carried codes.
     pub fn ensure_encoded(&mut self) -> usize {
-        if self.k_codes.len() < self.d * self.max_seq {
-            self.k_codes.resize(self.d * self.max_seq, lut_i8(0));
-            self.v_codes.resize(self.d * self.max_seq, lut_i8(0));
-        }
+        let d = self.d;
         let fresh = self.len - self.encoded;
-        for i in self.encoded * self.d..self.len * self.d {
-            self.k_codes[i] = lut_i8(self.k[i]);
-            self.v_codes[i] = lut_i8(self.v[i]);
+        for p in self.encoded..self.len {
+            let b = Arc::make_mut(&mut self.blocks[p / BLOCK_ROWS]);
+            if b.k_codes.is_empty() {
+                b.k_codes.resize(BLOCK_ROWS * d, lut_i8(0));
+                b.v_codes.resize(BLOCK_ROWS * d, lut_i8(0));
+            }
+            let at = (p % BLOCK_ROWS) * d;
+            for i in at..at + d {
+                b.k_codes[i] = lut_i8(b.k[i]);
+                b.v_codes[i] = lut_i8(b.v[i]);
+            }
         }
         self.encoded = self.len;
         fresh
     }
 
-    fn append(&mut self, k_rows: &[i8], v_rows: &[i8], rows: usize) {
+    pub(crate) fn append(&mut self, k_rows: &[i8], v_rows: &[i8], rows: usize) {
         assert!(self.len + rows <= self.max_seq, "KV cache overflow");
-        let at = self.len * self.d;
-        self.k[at..at + rows * self.d].copy_from_slice(&k_rows[..rows * self.d]);
-        self.v[at..at + rows * self.d].copy_from_slice(&v_rows[..rows * self.d]);
+        let d = self.d;
+        for r in 0..rows {
+            let p = self.len + r;
+            let bi = p / BLOCK_ROWS;
+            if bi == self.blocks.len() {
+                self.blocks.push(Arc::new(KvBlock::new(d)));
+            }
+            let b = Arc::make_mut(&mut self.blocks[bi]);
+            let at = (p % BLOCK_ROWS) * d;
+            b.k[at..at + d].copy_from_slice(&k_rows[r * d..(r + 1) * d]);
+            b.v[at..at + d].copy_from_slice(&v_rows[r * d..(r + 1) * d]);
+        }
         self.len += rows;
+    }
+
+    /// Adopt pool-resident blocks as this cache's warm prefix (the
+    /// [`crate::nn::kvpool::KvPool::attach`] back-half): `rows`
+    /// positions become readable, the first `encoded` of them with
+    /// valid sidecar codes. Only ever called on an empty cache at
+    /// admission.
+    pub(crate) fn adopt(&mut self, blocks: Vec<Arc<KvBlock>>, rows: usize, encoded: usize) {
+        assert!(self.is_empty() && self.blocks.is_empty(), "adopt into a used cache");
+        assert!(rows <= blocks.len() * BLOCK_ROWS && encoded <= rows);
+        assert!(rows <= self.max_seq, "adopted prefix exceeds capacity");
+        self.blocks = blocks;
+        self.len = rows;
+        self.encoded = encoded;
+    }
+
+    /// The shared handle of block `i` (for pool insertion).
+    pub(crate) fn block_arc(&self, i: usize) -> &Arc<KvBlock> {
+        &self.blocks[i]
     }
 }
 
@@ -256,11 +346,11 @@ impl KvCache {
 /// counters the serving metrics surface.
 #[derive(Debug, Default)]
 pub struct AttnScratch {
-    acc: Vec<i64>,
+    pub(crate) acc: Vec<i64>,
     q: Vec<i8>,
     k_new: Vec<i8>,
     v_new: Vec<i8>,
-    out: Vec<i8>,
+    pub(crate) out: Vec<i8>,
     qh: Vec<i8>,
     kht: Vec<i8>,
     vh: Vec<i8>,
@@ -269,6 +359,14 @@ pub struct AttnScratch {
     scores: Vec<i64>,
     probs: Vec<i8>,
     oh: Vec<i64>,
+    /// Transformer-step buffers (the residual-stream ping-pong pair and
+    /// the MLP hidden buffer), owned here so the whole prefill/decode
+    /// step is allocation-free — `forward_step_with` takes them with
+    /// `mem::take` and returns them when done.
+    pub(crate) x: Vec<i8>,
+    pub(crate) x2: Vec<i8>,
+    pub(crate) hidden: Vec<i8>,
+    pub(crate) norm_sums: Vec<i64>,
     /// KV positions whose codes were freshly encoded (the append delta).
     kv_rows_encoded: u64,
     /// Cached KV positions whose resident codes were reused by a step.
@@ -293,7 +391,7 @@ impl AttnScratch {
 
 /// Grow-only resize: the scratch buffers only ever get larger, so
 /// steady-state steps never touch the allocator.
-fn grown<T: Copy>(buf: &mut Vec<T>, len: usize, fill: T) {
+pub(crate) fn grown<T: Copy>(buf: &mut Vec<T>, len: usize, fill: T) {
     if buf.len() < len {
         buf.resize(len, fill);
     }
@@ -414,6 +512,22 @@ impl MhaWeights {
         segs: &mut [(usize, &mut KvCache)],
         scratch: &mut AttnScratch,
     ) -> Vec<i8> {
+        self.forward_multi_scratch(eng, x, segs, scratch);
+        let total: usize = segs.iter().map(|s| s.0).sum();
+        scratch.out[..total * self.d].to_vec()
+    }
+
+    /// The allocation-free core of [`MhaWeights::forward_multi_with`]:
+    /// identical arithmetic, but the block output is left in
+    /// `scratch.out[..total·d]` instead of a fresh vector — the
+    /// transformer step loop consumes it in place.
+    pub(crate) fn forward_multi_scratch<E: TcuEngine + ?Sized>(
+        &self,
+        eng: &E,
+        x: &[i8],
+        segs: &mut [(usize, &mut KvCache)],
+        scratch: &mut AttnScratch,
+    ) {
         let d = self.d;
         let dh = d / self.heads;
         let total: usize = segs.iter().map(|s| s.0).sum();
@@ -475,28 +589,31 @@ impl MhaWeights {
                 }
                 if prepack {
                     // One pass gathers the raw head slices and their
-                    // resident codes together (the raw twins keep
-                    // `MatOperand::Codes` coherent for shape checks and
-                    // any fallback; the code copies are copies, not
-                    // encoder activations — the Kᵀ/V history enters the
-                    // GEMMs pre-encoded).
+                    // resident codes together from the block tables
+                    // (the raw twins keep `MatOperand::Codes` coherent
+                    // for shape checks and any fallback; the code
+                    // copies are copies, not encoder activations — the
+                    // Kᵀ/V history enters the GEMMs pre-encoded).
                     for p in 0..kv {
+                        let kr = kvc.k_row(p);
+                        let kc = kvc.k_codes_row(p);
                         for j in 0..dh {
-                            scratch.kht[j * kv + p] = kvc.k[p * d + c0 + j];
-                            scratch.kht_codes[j * kv + p] = kvc.k_codes[p * d + c0 + j];
+                            scratch.kht[j * kv + p] = kr[c0 + j];
+                            scratch.kht_codes[j * kv + p] = kc[c0 + j];
                         }
                         scratch.vh[p * dh..(p + 1) * dh]
-                            .copy_from_slice(&kvc.v[p * d + c0..p * d + c0 + dh]);
+                            .copy_from_slice(&kvc.v_row(p)[c0..c0 + dh]);
                         scratch.vh_codes[p * dh..(p + 1) * dh]
-                            .copy_from_slice(&kvc.v_codes[p * d + c0..p * d + c0 + dh]);
+                            .copy_from_slice(&kvc.v_codes_row(p)[c0..c0 + dh]);
                     }
                 } else {
                     for p in 0..kv {
+                        let kr = kvc.k_row(p);
                         for j in 0..dh {
-                            scratch.kht[j * kv + p] = kvc.k[p * d + c0 + j];
+                            scratch.kht[j * kv + p] = kr[c0 + j];
                         }
                         scratch.vh[p * dh..(p + 1) * dh]
-                            .copy_from_slice(&kvc.v[p * d + c0..p * d + c0 + dh]);
+                            .copy_from_slice(&kvc.v_row(p)[c0..c0 + dh]);
                     }
                 }
                 if prepack {
@@ -566,10 +683,12 @@ impl MhaWeights {
             r0 += rows;
         }
 
-        // Output projection: one shared GEMM over every row.
+        // Output projection: one shared GEMM over every row, requantized
+        // back into `scratch.out` in place (the gathered pre-projection
+        // rows are dead once the GEMM has consumed them).
         let acc = &mut scratch.acc[..total * d];
         super::gemm_weights_b(eng, cache, &scratch.out[..total * d], &self.wo, acc, total, d, d);
-        requant(acc, QKV_SHIFT)
+        requant_into(acc, QKV_SHIFT, &mut scratch.out[..total * d]);
     }
 }
 
@@ -649,15 +768,26 @@ mod tests {
 
     #[test]
     fn kv_cache_append_and_truncate() {
-        let mut c = KvCache::new(4, 8);
+        let mut c = KvCache::new(4, 18);
         assert!(c.is_empty());
+        assert_eq!(c.resident_blocks(), 0, "fresh cache allocates no blocks");
         c.append(&[1, 2, 3, 4, 5, 6, 7, 8], &[8, 7, 6, 5, 4, 3, 2, 1], 2);
         assert_eq!(c.len(), 2);
-        assert_eq!(&c.k[..4], &[1, 2, 3, 4]);
+        assert_eq!(c.k_row(0), &[1, 2, 3, 4]);
+        assert_eq!(c.v_row(1), &[4, 3, 2, 1]);
+        assert_eq!(c.resident_blocks(), 1, "block table grows on demand");
         c.truncate(1);
         assert_eq!(c.len(), 1);
         c.truncate(5); // no-op beyond current length
         assert_eq!(c.len(), 1);
+        // Crossing a block boundary grows the table by one page.
+        let row = [9i8; 4];
+        for _ in 0..BLOCK_ROWS {
+            c.append(&row, &row, 1);
+        }
+        assert_eq!(c.len(), 1 + BLOCK_ROWS);
+        assert_eq!(c.resident_blocks(), 2);
+        assert_eq!(c.k_row(BLOCK_ROWS), &row);
     }
 
     /// The code sidecar is append-only: `ensure_encoded` derives codes
@@ -671,22 +801,51 @@ mod tests {
         c.append(&[1, 2, 3, 4, 5, 6, 7, 8], &[8, 7, 6, 5, 4, 3, 2, 1], 2);
         assert_eq!(c.ensure_encoded(), 2, "cold cache encodes everything");
         assert_eq!(c.encoded_len(), 2);
-        assert_eq!(c.k_codes[0], lut_i8(1));
-        assert_eq!(c.v_codes[0].decode(), 8);
+        assert_eq!(c.k_codes_row(0)[0], lut_i8(1));
+        assert_eq!(c.v_codes_row(0)[0].decode(), 8);
         // Steady state: nothing new, nothing encoded.
         assert_eq!(c.ensure_encoded(), 0);
         // One appended row → exactly one row's delta.
         c.append(&[9, 9, 9, 9], &[-9, -9, -9, -9], 1);
         assert_eq!(c.ensure_encoded(), 1);
-        assert_eq!(c.k_codes[2 * 4], lut_i8(9));
-        assert_eq!(c.v_codes[2 * 4].decode(), -9);
+        assert_eq!(c.k_codes_row(2)[0], lut_i8(9));
+        assert_eq!(c.v_codes_row(2)[0].decode(), -9);
         // Truncate drops exactly the suffix; the prefix stays valid.
         c.truncate(1);
         assert_eq!(c.encoded_len(), 1);
         assert_eq!(c.ensure_encoded(), 0, "surviving prefix must not re-encode");
         c.append(&[7, 7, 7, 7], &[7, 7, 7, 7], 1);
         assert_eq!(c.ensure_encoded(), 1, "re-appended row is a fresh delta");
-        assert_eq!(c.k_codes[4], lut_i8(7));
+        assert_eq!(c.k_codes_row(1)[0], lut_i8(7));
+    }
+
+    /// A sequence sharing a donor's block diverges by copy-on-write:
+    /// truncating into the shared block and appending different rows
+    /// (or re-encoding) never disturbs the donor's copy.
+    #[test]
+    fn shared_blocks_copy_on_write_on_divergence() {
+        let mut donor = KvCache::new(4, 16);
+        let k: Vec<i8> = (0..BLOCK_ROWS as i8 * 4).collect();
+        let v: Vec<i8> = k.iter().map(|&x| -x).collect();
+        donor.append(&k, &v, BLOCK_ROWS);
+        donor.ensure_encoded();
+
+        let mut sharer = KvCache::new(4, 16);
+        sharer.adopt(vec![Arc::clone(donor.block_arc(0))], BLOCK_ROWS, BLOCK_ROWS);
+        assert_eq!(sharer.k_row(3), donor.k_row(3), "shared block reads through");
+
+        // Fork mid-block: rewind and extend with different content.
+        sharer.truncate(4);
+        sharer.append(&[99, 98, 97, 96], &[9, 9, 9, 9], 1);
+        assert_eq!(sharer.ensure_encoded(), 1);
+        assert_eq!(sharer.k_row(4), &[99, 98, 97, 96]);
+        assert_eq!(sharer.k_codes_row(4)[0], lut_i8(99));
+        // The donor's row 4 (same physical slot pre-fork) is untouched.
+        assert_eq!(donor.k_row(4), &k[4 * 4..5 * 4]);
+        assert_eq!(donor.encoded_len(), BLOCK_ROWS);
+        assert_eq!(donor.k_codes_row(4)[0], lut_i8(k[4 * 4]));
+        // And the surviving shared prefix is still identical.
+        assert_eq!(sharer.k_row(0), donor.k_row(0));
     }
 
     /// kv-prepack routes the score/context GEMMs through the code
@@ -782,8 +941,10 @@ mod tests {
         assert_eq!(multi_out, solo_out, "coalescing changed attention output");
         for (a, b) in solo_caches.iter().zip(&multi_caches) {
             assert_eq!(a.len(), b.len());
-            assert_eq!(a.k, b.k, "coalescing changed cached K");
-            assert_eq!(a.v, b.v, "coalescing changed cached V");
+            for p in 0..a.len() {
+                assert_eq!(a.k_row(p), b.k_row(p), "coalescing changed cached K");
+                assert_eq!(a.v_row(p), b.v_row(p), "coalescing changed cached V");
+            }
         }
     }
 

@@ -1,0 +1,453 @@
+//! Cross-request KV reuse: a **paged block allocator** plus a **radix
+//! (prefix-tree) index** over token-id prefixes.
+//!
+//! PRs 4–5 eliminated redundant encode work *within* a request (the
+//! encoded-weight cache and the append-only prepacked KV sidecar); this
+//! module eliminates it *across* requests. K/V int8 rows and their
+//! [`PackedCode`] sidecars live in fixed-size [`KvBlock`]s of
+//! [`BLOCK_ROWS`] positions each; per-sequence [`KvCache`]s hold
+//! `Arc<KvBlock>` block tables instead of contiguous slabs, and the
+//! shared [`KvPool`] maps identical token-id prefixes to the *same*
+//! physical blocks:
+//!
+//! * **insert** — when a request finishes prefill, every full block of
+//!   its prompt is published under its prefix key (first donor wins);
+//! * **share** — a later request whose prompt starts with the same
+//!   tokens attaches the resident blocks at admission and skips their
+//!   prefill entirely: 0 prefill MACs and (when the donor ran with
+//!   kv-prepack) 0 encode events for the resident rows;
+//! * **COW-fork** — blocks are shared read-only; any divergence
+//!   (truncate into a shared block, re-encode, append after rewind)
+//!   copies on write via [`Arc::make_mut`], so forked sequences never
+//!   disturb each other or the pool;
+//! * **evict** — the index holds entries in LRU order under a byte
+//!   budget; evicting an entry drops the pool's reference only, so
+//!   blocks still referenced by live sequences survive through their
+//!   refcount and are freed when the last sequence drops them.
+//!
+//! The index is a radix tree flattened into a hash map: each entry is a
+//! radix node keyed by its full block-aligned token path (`tokens[..8]`,
+//! `tokens[..16]`, …), and longest-prefix lookup walks the depths until
+//! the first miss. That keeps lookup O(depth) with no node pointers to
+//! maintain, while preserving exactly the prefix-tree sharing semantics.
+//!
+//! Sharing is sound bit-for-bit because attention is causal and every
+//! row statistic (layernorm, softmax) is per-position: the K/V rows at
+//! position `i` are a pure function of tokens `0..=i`, so two requests
+//! with identical prompt prefixes compute identical rows — the donor's
+//! blocks *are* the warm request's blocks.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::encoding::packed::PackedCode;
+use crate::nn::attention::KvCache;
+
+/// Positions per block. The last prompt position is always fed fresh
+/// (it must produce logits), so a prompt of `L` tokens can share at most
+/// `((L − 1) / BLOCK_ROWS) · BLOCK_ROWS` resident rows.
+pub const BLOCK_ROWS: usize = 8;
+
+/// One fixed-size page of the paged KV store: [`BLOCK_ROWS`] positions
+/// of K and V rows (`d_model` wide) plus their lazily allocated EN-T
+/// code sidecars. Blocks are shared between sequences (and the pool)
+/// behind `Arc`; `Clone` is what [`Arc::make_mut`] uses to copy on
+/// write when a sharer diverges.
+#[derive(Clone, Debug)]
+pub struct KvBlock {
+    pub(crate) k: Vec<i8>,
+    pub(crate) v: Vec<i8>,
+    /// Code sidecars (`k_codes[i]` encodes `k[i]`), empty until the
+    /// first [`KvCache::ensure_encoded`] touches this block.
+    pub(crate) k_codes: Vec<PackedCode>,
+    pub(crate) v_codes: Vec<PackedCode>,
+}
+
+impl KvBlock {
+    pub(crate) fn new(d: usize) -> KvBlock {
+        KvBlock {
+            k: vec![0; BLOCK_ROWS * d],
+            v: vec![0; BLOCK_ROWS * d],
+            k_codes: Vec::new(),
+            v_codes: Vec::new(),
+        }
+    }
+
+    /// Backing bytes of this block (raw rows + any allocated sidecar).
+    pub fn bytes(&self) -> usize {
+        self.k.len()
+            + self.v.len()
+            + (self.k_codes.len() + self.v_codes.len()) * std::mem::size_of::<PackedCode>()
+    }
+}
+
+/// Rows of an `len`-token prompt that are shareable through the pool:
+/// whole blocks only, and never the final prompt position (it must be
+/// fed fresh to produce the request's logits).
+pub fn shareable_rows(prompt_len: usize) -> usize {
+    (prompt_len.saturating_sub(1) / BLOCK_ROWS) * BLOCK_ROWS
+}
+
+/// One radix node: the physical blocks (one per layer) holding the KV
+/// rows of this node's full token path, plus bookkeeping for LRU
+/// eviction and encoded-state propagation.
+struct Entry {
+    /// `blocks[l]` is layer `l`'s block for this prefix depth.
+    blocks: Vec<Arc<KvBlock>>,
+    /// Every layer's block carries a complete, valid code sidecar (the
+    /// donor ran with kv-prepack), so sharers inherit the codes and
+    /// charge 0 encode events for these rows.
+    encoded: bool,
+    bytes: usize,
+    last_use: u64,
+}
+
+/// The flattened radix index (see module docs) plus byte accounting.
+struct RadixIndex {
+    entries: HashMap<Vec<u16>, Entry>,
+    bytes: usize,
+    tick: u64,
+}
+
+/// Shared cross-request KV pool: radix prefix index + LRU byte budget +
+/// lock-free observability counters (same idiom as
+/// [`crate::encoding::prepacked::EncodeCache`]).
+pub struct KvPool {
+    store: Mutex<RadixIndex>,
+    budget: usize,
+    hit_rows: AtomicU64,
+    miss_rows: AtomicU64,
+    insertions: AtomicU64,
+    evictions: AtomicU64,
+}
+
+/// Point-in-time pool observability snapshot, surfaced through the
+/// serving metrics (`prefix_hit_rate`, resident bytes, evictions).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KvPoolStats {
+    /// Prompt rows served from resident blocks at admission.
+    pub hit_rows: u64,
+    /// Prompt rows that had to be prefilled fresh.
+    pub miss_rows: u64,
+    /// Radix entries published (first-donor inserts, not re-offers).
+    pub insertions: u64,
+    /// Entries dropped by the LRU byte-budget sweep.
+    pub evictions: u64,
+    pub entries: usize,
+    /// Resident bytes currently indexed (the memory-pressure gauge).
+    pub bytes: usize,
+    pub budget_bytes: usize,
+}
+
+impl KvPoolStats {
+    /// Fraction of admitted prompt rows served from resident blocks.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hit_rows + self.miss_rows;
+        if total == 0 {
+            0.0
+        } else {
+            self.hit_rows as f64 / total as f64
+        }
+    }
+}
+
+impl KvPool {
+    /// A pool with an LRU byte budget. Entries larger than the whole
+    /// budget are never indexed (they would evict everything else for
+    /// one unlikely-to-repeat prompt).
+    pub fn new(budget_bytes: usize) -> KvPool {
+        assert!(budget_bytes > 0, "KV pool budget must be positive");
+        KvPool {
+            store: Mutex::new(RadixIndex {
+                entries: HashMap::new(),
+                bytes: 0,
+                tick: 0,
+            }),
+            budget: budget_bytes,
+            hit_rows: AtomicU64::new(0),
+            miss_rows: AtomicU64::new(0),
+            insertions: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Longest-prefix warm attach at admission: walk the radix index
+    /// depth by depth for `tokens` (the full prompt) and clone every
+    /// resident block into the request's per-layer `caches` (one
+    /// [`KvCache`] per layer, all empty). Returns the number of
+    /// resident rows attached — the scheduler starts prefill *after*
+    /// them. Also bumps the hit/miss row counters behind
+    /// `prefix_hit_rate`.
+    pub fn attach(&self, tokens: &[u16], caches: &mut [KvCache]) -> usize {
+        let limit = shareable_rows(tokens.len());
+        let mut resident = 0;
+        let mut encoded = 0;
+        let mut adopted: Vec<Vec<Arc<KvBlock>>> =
+            caches.iter().map(|_| Vec::new()).collect();
+        {
+            let mut s = self.store.lock().unwrap();
+            s.tick += 1;
+            let tick = s.tick;
+            let mut all_encoded = true;
+            while resident + BLOCK_ROWS <= limit {
+                let Some(e) = s.entries.get_mut(&tokens[..resident + BLOCK_ROWS]) else {
+                    break;
+                };
+                if e.blocks.len() != caches.len() {
+                    break; // model geometry changed under the key
+                }
+                e.last_use = tick;
+                for (table, b) in adopted.iter_mut().zip(&e.blocks) {
+                    table.push(Arc::clone(b));
+                }
+                resident += BLOCK_ROWS;
+                all_encoded &= e.encoded;
+                if all_encoded {
+                    encoded = resident;
+                }
+            }
+        }
+        for (cache, table) in caches.iter_mut().zip(adopted) {
+            cache.adopt(table, resident, encoded);
+        }
+        self.hit_rows.fetch_add(resident as u64, Ordering::Relaxed);
+        self.miss_rows
+            .fetch_add((tokens.len() - resident) as u64, Ordering::Relaxed);
+        resident
+    }
+
+    /// Publish a finished prefill: index every full block of the
+    /// `tokens` prompt (one radix entry per depth, spanning all layers'
+    /// blocks from `caches`). Existing entries win — re-offering a
+    /// prefix only refreshes its LRU age — so shared blocks are never
+    /// replaced under a live sharer. Runs the LRU sweep afterwards.
+    pub fn insert(&self, tokens: &[u16], caches: &[KvCache]) {
+        let nblocks = tokens.len() / BLOCK_ROWS;
+        if nblocks == 0 || caches.is_empty() {
+            return;
+        }
+        for c in caches {
+            assert!(c.len() >= nblocks * BLOCK_ROWS, "prefill incomplete at insert");
+        }
+        let mut s = self.store.lock().unwrap();
+        s.tick += 1;
+        let tick = s.tick;
+        for i in 0..nblocks {
+            let rows = (i + 1) * BLOCK_ROWS;
+            if let Some(e) = s.entries.get_mut(&tokens[..rows]) {
+                e.last_use = tick;
+                continue;
+            }
+            let blocks: Vec<Arc<KvBlock>> =
+                caches.iter().map(|c| Arc::clone(c.block_arc(i))).collect();
+            let encoded = caches.iter().all(|c| c.encoded_len() >= rows);
+            let bytes = blocks.iter().map(|b| b.bytes()).sum();
+            if bytes > self.budget {
+                continue; // oversized: would evict the whole pool
+            }
+            s.bytes += bytes;
+            s.entries.insert(
+                tokens[..rows].to_vec(),
+                Entry {
+                    blocks,
+                    encoded,
+                    bytes,
+                    last_use: tick,
+                },
+            );
+            self.insertions.fetch_add(1, Ordering::Relaxed);
+        }
+        while s.bytes > self.budget {
+            let Some(oldest) = s
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(k, _)| k.clone())
+            else {
+                break;
+            };
+            let e = s.entries.remove(&oldest).unwrap();
+            s.bytes -= e.bytes;
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn stats(&self) -> KvPoolStats {
+        let s = self.store.lock().unwrap();
+        KvPoolStats {
+            hit_rows: self.hit_rows.load(Ordering::Relaxed),
+            miss_rows: self.miss_rows.load(Ordering::Relaxed),
+            insertions: self.insertions.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: s.entries.len(),
+            bytes: s.bytes,
+            budget_bytes: self.budget,
+        }
+    }
+}
+
+impl std::fmt::Debug for KvPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.stats().fmt(f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    /// Two per-layer caches with `rows` deterministic positions, as a
+    /// donor request's prefill would leave them.
+    fn donor_caches(d: usize, rows: usize, encode: bool, seed: u64) -> Vec<KvCache> {
+        let mut rng = Rng::new(seed);
+        (0..2)
+            .map(|_| {
+                let mut c = KvCache::new(d, 64);
+                let k = rng.i8_vec(rows * d);
+                let v = rng.i8_vec(rows * d);
+                c.append(&k, &v, rows);
+                if encode {
+                    c.ensure_encoded();
+                }
+                c
+            })
+            .collect()
+    }
+
+    fn toks(n: usize) -> Vec<u16> {
+        (0..n).map(|i| (i % 61) as u16).collect()
+    }
+
+    #[test]
+    fn shareable_rows_never_cover_the_last_prompt_position() {
+        assert_eq!(shareable_rows(0), 0);
+        assert_eq!(shareable_rows(1), 0);
+        assert_eq!(shareable_rows(8), 0, "8-token prompt: last token is position 7");
+        assert_eq!(shareable_rows(9), 8);
+        assert_eq!(shareable_rows(12), 8);
+        assert_eq!(shareable_rows(17), 16);
+    }
+
+    #[test]
+    fn attach_after_insert_shares_the_physical_blocks() {
+        let pool = KvPool::new(1 << 20);
+        let tokens = toks(12);
+        let donors = donor_caches(4, 12, true, 1);
+        pool.insert(&tokens, &donors);
+        assert_eq!(pool.stats().insertions, 1, "12 tokens = one full block");
+
+        let mut warm = vec![KvCache::new(4, 64), KvCache::new(4, 64)];
+        assert_eq!(pool.attach(&tokens, &mut warm), 8);
+        for (w, d) in warm.iter().zip(&donors) {
+            assert_eq!(w.len(), 8);
+            assert_eq!(w.encoded_len(), 8, "donor codes are inherited");
+            for p in 0..8 {
+                assert_eq!(w.k_row(p), d.k_row(p));
+                assert_eq!(w.v_row(p), d.v_row(p));
+            }
+        }
+        let st = pool.stats();
+        assert_eq!((st.hit_rows, st.miss_rows), (8, 4));
+        assert!(st.bytes > 0 && st.bytes <= st.budget_bytes);
+    }
+
+    #[test]
+    fn unencoded_donor_shares_rows_but_not_codes() {
+        let pool = KvPool::new(1 << 20);
+        let tokens = toks(9);
+        pool.insert(&tokens, &donor_caches(4, 9, false, 2));
+        let mut warm = vec![KvCache::new(4, 64), KvCache::new(4, 64)];
+        assert_eq!(pool.attach(&tokens, &mut warm), 8);
+        assert_eq!(warm[0].encoded_len(), 0, "no codes to inherit");
+    }
+
+    #[test]
+    fn prefix_walk_stops_at_first_divergence() {
+        let pool = KvPool::new(1 << 20);
+        let tokens = toks(17); // two full shareable blocks
+        pool.insert(&tokens, &donor_caches(4, 17, true, 3));
+        assert_eq!(pool.stats().insertions, 2);
+
+        // Same first block, diverging second block.
+        let mut fork = tokens.clone();
+        fork[10] ^= 1;
+        let mut caches = vec![KvCache::new(4, 64), KvCache::new(4, 64)];
+        assert_eq!(pool.attach(&fork, &mut caches), 8, "shares depth 1 only");
+        // Diverging inside the first block shares nothing.
+        let mut cold = fork.clone();
+        cold[3] ^= 1;
+        let mut caches = vec![KvCache::new(4, 64), KvCache::new(4, 64)];
+        assert_eq!(pool.attach(&cold, &mut caches), 0);
+    }
+
+    #[test]
+    fn lru_eviction_under_a_one_entry_budget() {
+        // Size the budget to exactly one entry.
+        let probe = KvPool::new(1 << 20);
+        probe.insert(&toks(9), &donor_caches(4, 9, true, 4));
+        let per_entry = probe.stats().bytes;
+        assert!(per_entry > 0);
+
+        let pool = KvPool::new(per_entry);
+        let a = toks(9);
+        let mut b = toks(9);
+        b[0] ^= 1;
+        pool.insert(&a, &donor_caches(4, 9, true, 5));
+        pool.insert(&b, &donor_caches(4, 9, true, 6));
+        let st = pool.stats();
+        assert_eq!(st.insertions, 2);
+        assert_eq!(st.evictions, 1, "budget holds one entry");
+        assert_eq!(st.entries, 1);
+        assert_eq!(st.bytes, per_entry);
+        // The survivor is the most recently used prefix.
+        let mut caches = vec![KvCache::new(4, 64), KvCache::new(4, 64)];
+        assert_eq!(pool.attach(&b, &mut caches), 8);
+        let mut caches = vec![KvCache::new(4, 64), KvCache::new(4, 64)];
+        assert_eq!(pool.attach(&a, &mut caches), 0, "evicted prefix is cold");
+    }
+
+    #[test]
+    fn evicted_blocks_survive_while_a_sequence_holds_them() {
+        let probe = KvPool::new(1 << 20);
+        probe.insert(&toks(9), &donor_caches(4, 9, true, 7));
+        let per_entry = probe.stats().bytes;
+
+        let pool = KvPool::new(per_entry);
+        let a = toks(9);
+        pool.insert(&a, &donor_caches(4, 9, true, 8));
+        let mut live = vec![KvCache::new(4, 64), KvCache::new(4, 64)];
+        pool.attach(&a, &mut live);
+        let before: Vec<i8> = live[0].k_row(0).to_vec();
+        // Evict `a` by inserting a different prefix.
+        let mut b = toks(9);
+        b[0] ^= 1;
+        pool.insert(&b, &donor_caches(4, 9, true, 9));
+        assert_eq!(pool.stats().evictions, 1);
+        // The live sequence still reads its rows — refcount keeps the
+        // physical blocks alive past eviction.
+        assert_eq!(live[0].k_row(0), &before[..]);
+    }
+
+    #[test]
+    fn reinsert_refreshes_lru_age_but_keeps_first_donor_blocks() {
+        let pool = KvPool::new(1 << 20);
+        let a = toks(9);
+        let first = donor_caches(4, 9, true, 10);
+        pool.insert(&a, &first);
+        pool.insert(&a, &donor_caches(4, 9, true, 11)); // different rows, same key
+        assert_eq!(pool.stats().insertions, 1, "first donor wins");
+        let mut warm = vec![KvCache::new(4, 64), KvCache::new(4, 64)];
+        pool.attach(&a, &mut warm);
+        assert_eq!(warm[0].k_row(0), first[0].k_row(0));
+    }
+
+    #[test]
+    fn oversized_entry_is_bypassed() {
+        let pool = KvPool::new(1); // nothing fits
+        pool.insert(&toks(9), &donor_caches(4, 9, true, 12));
+        let st = pool.stats();
+        assert_eq!((st.insertions, st.entries, st.bytes), (0, 0, 0));
+    }
+}

@@ -21,6 +21,7 @@ pub mod attention;
 pub mod densenet;
 pub mod forward;
 pub mod inception;
+pub mod kvpool;
 pub mod mobilenet;
 pub mod resnet;
 pub mod transformer;

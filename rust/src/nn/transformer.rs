@@ -45,7 +45,7 @@ use std::sync::Arc;
 
 use crate::arch::TcuEngine;
 use crate::encoding::prepacked::{CachedWeight, EncodeCache};
-use crate::nn::attention::{add_norm, requant, AttnScratch, KvCache, MhaWeights};
+use crate::nn::attention::{add_norm_into, grown, requant_into, AttnScratch, KvCache, MhaWeights};
 use crate::nn::{Layer, Network};
 use crate::util::prng::Rng;
 
@@ -161,6 +161,20 @@ impl TransformerSpec {
     pub fn decode_network(&self, kv: usize) -> Network {
         assert!(kv > 0 && kv <= self.max_seq);
         self.trace_network("transformer_decode", 1, kv, kv - 1)
+    }
+
+    /// A **warm-prefix prefill** as a layer trace: `seq − resident` new
+    /// positions attending over `seq` total positions, `resident` of
+    /// which arrived cache-resident through the shared KV pool
+    /// ([`crate::nn::kvpool::KvPool`]). Resident rows contribute no
+    /// GEMM rows — **0 prefill MACs** — and the `kv_fresh` accounting
+    /// charges encode events only for the fresh rows under kv-prepack,
+    /// so a fully warm admission (`resident = seq − 1`) prices exactly
+    /// like one decode step at the same context length.
+    pub fn warm_prefill_network(&self, seq: usize, resident: usize) -> Network {
+        assert!(seq > 0 && seq <= self.max_seq);
+        assert!(resident < seq, "the last prompt position is always fed fresh");
+        self.trace_network("transformer_prefill_warm", seq - resident, seq, resident)
     }
 
     /// Shared trace builder: `rows` new positions attending over `kv`
@@ -484,8 +498,20 @@ impl QuantTransformer {
             );
         }
 
+        // Take the scratch-owned step buffers (returned below), so the
+        // whole step — embed, residual stream, MLP, head gather — is
+        // allocation-free in steady state: `x`/`x2` ping-pong as the
+        // residual stream through `add_norm_into`, `hidden` carries the
+        // MLP activations and requantized outputs.
+        let mut x = std::mem::take(&mut scratch.x);
+        let mut x2 = std::mem::take(&mut scratch.x2);
+        let mut hidden = std::mem::take(&mut scratch.hidden);
+        let ff = self.spec.d_ff;
+        grown(&mut x, total * d, 0i8);
+        grown(&mut x2, total * d, 0i8);
+        grown(&mut hidden, total * ff.max(d), 0i8);
+
         // Embed every sequence's new positions into one row block.
-        let mut x = vec![0i8; total * d];
         let mut r = 0usize;
         for s in seqs.iter() {
             for &t in s.tokens {
@@ -496,60 +522,100 @@ impl QuantTransformer {
             }
         }
 
-        let mut acc = vec![0i64; total * self.spec.d_ff.max(d)];
         for (l, block) in self.blocks.iter().enumerate() {
             // Attention sub-block (shared projections, per-sequence
-            // cache attention), residual + layernorm in i32.
+            // cache attention), residual + layernorm in i32. The block
+            // output lands in `scratch.out`.
             let mut segs: Vec<(usize, &mut KvCache)> = seqs
                 .iter_mut()
                 .zip(&rows_per)
                 .map(|(s, &rows)| (rows, &mut s.caches[l]))
                 .collect();
-            let attn = block.attn.forward_multi_with(eng, &x, &mut segs, scratch);
+            block
+                .attn
+                .forward_multi_scratch(eng, &x[..total * d], &mut segs, scratch);
             drop(segs);
-            x = add_norm(&x, &attn, d);
+            add_norm_into(
+                &x[..total * d],
+                &scratch.out[..total * d],
+                d,
+                &mut scratch.norm_sums,
+                &mut x2[..total * d],
+            );
+            std::mem::swap(&mut x, &mut x2);
             // MLP sub-block: W1 → GELU LUT → W2, residual + layernorm —
             // shared GEMMs over every sequence's rows, weights through
             // the encode cache when attached.
             let cache = self.cache.as_deref();
-            let ff = self.spec.d_ff;
-            super::gemm_weights_b(eng, cache, &x, &block.w1, &mut acc[..total * ff], total, d, ff);
-            let mut hidden = requant(&acc[..total * ff], FF1_SHIFT);
-            gelu_i8(&mut hidden);
-            super::gemm_weights_b(eng, cache, &hidden, &block.w2, &mut acc[..total * d], total, ff, d);
-            let mlp = requant(&acc[..total * d], FF2_SHIFT);
-            x = add_norm(&x, &mlp, d);
+            grown(&mut scratch.acc, total * ff.max(d), 0i64);
+            super::gemm_weights_b(
+                eng,
+                cache,
+                &x[..total * d],
+                &block.w1,
+                &mut scratch.acc[..total * ff],
+                total,
+                d,
+                ff,
+            );
+            requant_into(&scratch.acc[..total * ff], FF1_SHIFT, &mut hidden[..total * ff]);
+            gelu_i8(&mut hidden[..total * ff]);
+            super::gemm_weights_b(
+                eng,
+                cache,
+                &hidden[..total * ff],
+                &block.w2,
+                &mut scratch.acc[..total * d],
+                total,
+                ff,
+                d,
+            );
+            requant_into(&scratch.acc[..total * d], FF2_SHIFT, &mut hidden[..total * d]);
+            add_norm_into(
+                &x[..total * d],
+                &hidden[..total * d],
+                d,
+                &mut scratch.norm_sums,
+                &mut x2[..total * d],
+            );
+            std::mem::swap(&mut x, &mut x2);
         }
 
         // Vocabulary head over each sequence's last position, gathered
-        // into one shared GEMM.
+        // (into the front of the spare residual buffer) for one shared
+        // GEMM.
         let nseq = seqs.len();
         let vocab = self.spec.vocab;
-        let mut last = vec![0i8; nseq * d];
         let mut row_end = 0usize;
         for (i, &rows) in rows_per.iter().enumerate() {
             row_end += rows;
-            last[i * d..(i + 1) * d].copy_from_slice(&x[(row_end - 1) * d..row_end * d]);
+            x2[i * d..(i + 1) * d].copy_from_slice(&x[(row_end - 1) * d..row_end * d]);
         }
-        let mut logits = vec![0i64; nseq * vocab];
+        grown(&mut scratch.acc, nseq * vocab, 0i64);
         super::gemm_weights_b(
             eng,
             self.cache.as_deref(),
-            &last,
+            &x2[..nseq * d],
             &self.head,
-            &mut logits,
+            &mut scratch.acc[..nseq * vocab],
             nseq,
             d,
             vocab,
         );
-        (0..nseq)
+        let logits = (0..nseq)
             .map(|i| {
-                logits[i * vocab..(i + 1) * vocab]
+                scratch.acc[i * vocab..(i + 1) * vocab]
                     .iter()
                     .map(|&v| v as f32 / 256.0)
                     .collect()
             })
-            .collect()
+            .collect();
+
+        // Hand the step buffers back for the next step.
+        scratch.x = x;
+        scratch.x2 = x2;
+        scratch.hidden = hidden;
+        logits
     }
 
     /// One autoregressive step: process `token` against the warm caches

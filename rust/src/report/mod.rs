@@ -372,6 +372,7 @@ pub fn serving() -> String {
         prompt_len: 8,
         max_new_tokens: 2,
         image_mix: 0.25,
+        prefix_zipf: 0.0,
         seed: 0x5EE,
     };
     let mut t = Table::new(format!(

@@ -205,6 +205,21 @@ impl TilePlan {
         apply_kv_prepack(self.tcu.variant, &mut st, fresh);
         st
     }
+
+    /// Event counts for an attention GEMM whose history operand is
+    /// partially resident in a **shared prefix pool**
+    /// ([`crate::nn::kvpool::KvPool`]): `resident_rows` of the `n`
+    /// history rows arrived pre-encoded from another request's radix
+    /// entry, so only the remaining `(n - resident_rows) * k` elements
+    /// are fresh. A fully resident history (`resident_rows == n`)
+    /// charges **0** encode events — a warm-prefix admission pays no
+    /// encoder energy for shared blocks. Cycle/read/write counts are
+    /// untouched, and Baseline/EN-T(MBE) are unchanged (they cannot
+    /// consume EN-T codes).
+    pub fn stats_kv_shared(&self, resident_rows: usize) -> GemmStats {
+        let fresh = (self.shape.n.saturating_sub(resident_rows) * self.shape.k) as u64;
+        self.stats_kv_prepacked(fresh)
+    }
 }
 
 /// The prepacked-KV override on (possibly multi-instance-merged)
@@ -351,6 +366,41 @@ mod tests {
             let tp = TilePlan::new(&tcu, GemmShape::new(1, 8, 17));
             assert_eq!(
                 tp.stats_kv_prepacked(8).encodes,
+                tp.stats_attention().encodes,
+                "{} must not consume KV codes",
+                v.name()
+            );
+        }
+    }
+
+    /// `stats_kv_shared`: a fully pool-resident history charges **0**
+    /// encode events (the warm-prefix admission invariant); a partially
+    /// resident one charges exactly the non-resident rows; cycle/read
+    /// counts never move; non-consuming variants are inert.
+    #[test]
+    fn kv_shared_stats_charge_zero_for_resident_rows() {
+        // Warm-prefill-shaped score GEMM: 1 fresh query row × dh=8 over
+        // a 17-row history.
+        let p = plan(ArchKind::SystolicOs, 8, 1, 8, 17);
+        let plain = p.stats_attention();
+        let warm = p.stats_kv_shared(17);
+        assert_eq!(warm.encodes, 0, "resident rows must charge 0 encode events");
+        assert_eq!(warm.activation_encodes, 0);
+        assert_eq!(warm.weight_encodes, 0);
+        assert_eq!(warm.cycles, plain.cycles);
+        assert_eq!(warm.a_reads, plain.a_reads);
+        assert_eq!(warm.b_reads, plain.b_reads);
+        // Partial residency: 8 of 17 rows resident → (17-8)*8 fresh.
+        let part = p.stats_kv_shared(8);
+        assert_eq!(part.encodes, (17 - 8) * 8);
+        assert_eq!(part.activation_encodes, (17 - 8) * 8);
+        // No residency degenerates to the all-fresh prepack charge.
+        assert_eq!(p.stats_kv_shared(0).encodes, p.stats_kv_prepacked(17 * 8).encodes);
+        for v in [Variant::Baseline, Variant::EntMbe] {
+            let tcu = Tcu::new(ArchKind::SystolicOs, 8, v);
+            let tp = TilePlan::new(&tcu, GemmShape::new(1, 8, 17));
+            assert_eq!(
+                tp.stats_kv_shared(17).encodes,
                 tp.stats_attention().encodes,
                 "{} must not consume KV codes",
                 v.name()

@@ -424,6 +424,41 @@ mod tests {
         assert_eq!(pb.total_pj(), cb.total_pj());
     }
 
+    /// Warm-prefix prefill pricing: pool-resident rows contribute 0
+    /// prefill MACs and 0 encode events — with both reuse layers on, a
+    /// warm prefill of `seq` positions with `resident` of them shared
+    /// charges exactly `2·(seq−resident)·d_model·layers` activation
+    /// encodes, and a fully warm admission (`resident = seq − 1`)
+    /// prices identically to one decode step at the same context.
+    #[test]
+    fn warm_prefill_prices_resident_rows_at_zero() {
+        use crate::nn::transformer::TransformerSpec;
+        let spec = TransformerSpec::tiny();
+        let soc = Soc::paper_config(ArchKind::SystolicOs, Variant::EntOurs);
+        let opts = EnergyOpts {
+            encode_cache: true,
+            kv_prepack: true,
+        };
+        let (cold, _) = frame_energy_with(&soc, &spec.prefill_network(12), opts);
+        let (warm, _) = frame_energy_with(&soc, &spec.warm_prefill_network(12, 8), opts);
+        assert!(warm.macs < cold.macs, "resident rows must add no prefill MACs");
+        assert!(warm.total_pj() < cold.total_pj());
+        assert_eq!(warm.weight_encodes, 0);
+        let fresh = (12 - 8) as u64;
+        assert_eq!(
+            warm.encodes,
+            2 * fresh * (spec.d_model * spec.layers) as u64,
+            "warm prefill must encode only the fresh rows"
+        );
+        assert_eq!(warm.encodes, warm.activation_encodes);
+        // Fully warm (only the last position fresh) ≡ one decode step.
+        let (full, _) = frame_energy_with(&soc, &spec.warm_prefill_network(12, 11), opts);
+        let (dec, _) = frame_energy_with(&soc, &spec.decode_network(12), opts);
+        assert_eq!(full.macs, dec.macs);
+        assert_eq!(full.encodes, dec.encodes);
+        assert_eq!(full.total_pj(), dec.total_pj());
+    }
+
     #[test]
     fn latency_is_sane_for_resnet50() {
         // 4.1 GMAC at 1024 GOPS ⇒ ≥ 8 ms; inefficiency keeps it < 80 ms.

@@ -1,0 +1,241 @@
+//! Equivalence + accounting suite for **cross-request prefix sharing**
+//! (`nn::kvpool::KvPool` — paged K/V blocks behind a radix prefix
+//! index): a warm-prefix run adopting pool-resident blocks must be
+//! bit-identical to a cold run across the full 5-architecture ×
+//! 3-variant grid, copy-on-write forks must match their solo runs, LRU
+//! eviction under a one-entry budget must never invalidate blocks a
+//! live sequence holds, and — the acceptance criterion — resident rows
+//! must charge **0** encode events and **0** prefill MACs through the
+//! planner and the SoC energy walk.
+
+use ent::arch::{ArchKind, Tcu, ALL_ARCHS};
+use ent::coordinator::{Config, Coordinator, TokenRequest};
+use ent::nn::kvpool::{shareable_rows, KvPool, BLOCK_ROWS};
+use ent::nn::transformer::{QuantTransformer, TransformerSpec};
+use ent::pe::{Variant, ALL_VARIANTS};
+use ent::sim::{GemmShape, TilePlan};
+use ent::soc::energy::{frame_energy_with, EnergyOpts};
+use ent::soc::Soc;
+
+fn prompt(n: usize) -> Vec<u16> {
+    (0..n).map(|i| ((i * 7 + 3) % 64) as u16).collect()
+}
+
+/// The headline equivalence: a warm run that adopts the donor's
+/// pool-resident prefix blocks and feeds only the tail produces
+/// bit-identical logits and greedy tokens to a cold sequential run, on
+/// every architecture × variant (non-EN-T engines exercise the raw-row
+/// fallback; EN-T(Ours) additionally reuses the adopted code sidecars).
+#[test]
+fn warm_prefix_decode_bit_identical_across_grid() {
+    let model = QuantTransformer::tiny_native().with_kv_prepack(true);
+    let toks = prompt(9);
+    for arch in ALL_ARCHS {
+        let size = if arch == ArchKind::Cube3d { 4 } else { 8 };
+        for variant in ALL_VARIANTS {
+            let eng = Tcu::new(arch, size, variant).engine();
+            let tag = format!("{} {}", arch.name(), variant.name());
+            // Cold reference run.
+            let (want_logits, want_toks) = model.generate(&eng, &toks, 3);
+            // Donor request: full prefill, then publish to the pool.
+            let pool = KvPool::new(1 << 20);
+            let mut donor = model.empty_caches();
+            model.prefill(&eng, &toks, &mut donor);
+            pool.insert(&toks, &donor);
+            // Warm request: adopt the resident block, feed the tail.
+            let mut caches = model.empty_caches();
+            let resident = pool.attach(&toks, &mut caches);
+            assert_eq!(resident, shareable_rows(toks.len()), "{tag}");
+            assert_eq!(resident, BLOCK_ROWS, "9-token prompt shares one block");
+            let mut logits = model.prefill(&eng, &toks[resident..], &mut caches);
+            let mut got_toks = Vec::new();
+            for _ in 0..3 {
+                let next = QuantTransformer::argmax(&logits);
+                got_toks.push(next);
+                logits = model.decode(&eng, next, &mut caches);
+            }
+            assert_eq!(logits, want_logits, "warm logits diverged: {tag}");
+            assert_eq!(got_toks, want_toks, "warm tokens diverged: {tag}");
+        }
+    }
+}
+
+/// Copy-on-write fork: two requests share the first block of their
+/// prompts and diverge after it. Each warm run must match its own solo
+/// cold run — the shared physical block feeds both without either
+/// request's tail contaminating the other.
+#[test]
+fn cow_fork_mid_prefix_matches_solo_runs() {
+    let model = QuantTransformer::tiny_native().with_kv_prepack(true);
+    let eng = Tcu::new(ArchKind::SystolicOs, 8, Variant::EntOurs).engine();
+    let a_toks = prompt(12);
+    let mut b_toks = prompt(12);
+    for t in &mut b_toks[9..] {
+        *t = (*t + 11) % 64; // fork after the shared first block
+    }
+    assert_eq!(a_toks[..BLOCK_ROWS], b_toks[..BLOCK_ROWS]);
+    let (a_solo_logits, a_solo_toks) = model.generate(&eng, &a_toks, 2);
+    let (b_solo_logits, b_solo_toks) = model.generate(&eng, &b_toks, 2);
+    assert_ne!(a_solo_logits, b_solo_logits, "fork must actually diverge");
+
+    // Request A runs cold and publishes its prefix.
+    let pool = KvPool::new(1 << 20);
+    let mut a_caches = model.empty_caches();
+    let mut a_logits = model.prefill(&eng, &a_toks, &mut a_caches);
+    pool.insert(&a_toks, &a_caches);
+    // Request B warm-hits A's first block despite the diverged tail
+    // (the radix walk shares exactly the common block-aligned prefix).
+    let mut b_caches = model.empty_caches();
+    let resident = pool.attach(&b_toks, &mut b_caches);
+    assert_eq!(resident, BLOCK_ROWS);
+    let mut b_logits = model.prefill(&eng, &b_toks[resident..], &mut b_caches);
+    // Both decode to completion; outputs must equal the solo runs.
+    let mut a_got = Vec::new();
+    let mut b_got = Vec::new();
+    for _ in 0..2 {
+        let a_next = QuantTransformer::argmax(&a_logits);
+        a_got.push(a_next);
+        a_logits = model.decode(&eng, a_next, &mut a_caches);
+        let b_next = QuantTransformer::argmax(&b_logits);
+        b_got.push(b_next);
+        b_logits = model.decode(&eng, b_next, &mut b_caches);
+    }
+    assert_eq!((a_logits, a_got), (a_solo_logits, a_solo_toks));
+    assert_eq!((b_logits, b_got), (b_solo_logits, b_solo_toks));
+}
+
+/// LRU eviction under a one-entry budget: inserting a second prefix
+/// evicts the first (refcount-safe — the pool drops its reference, the
+/// donor's caches keep theirs), the evicted prefix misses on re-attach,
+/// and a sequence still holding evicted blocks decodes bit-identically.
+#[test]
+fn one_entry_budget_evicts_lru_without_invalidating_live_sequences() {
+    let model = QuantTransformer::tiny_native().with_kv_prepack(true);
+    let eng = Tcu::new(ArchKind::Matrix2d, 8, Variant::EntOurs).engine();
+    let a_toks = prompt(9);
+    let b_toks: Vec<u16> = a_toks.iter().map(|&t| (t + 29) % 64).collect();
+
+    // Probe one entry's footprint with an unconstrained pool.
+    let probe = KvPool::new(1 << 20);
+    let mut donor_a = model.empty_caches();
+    model.prefill(&eng, &a_toks, &mut donor_a);
+    probe.insert(&a_toks, &donor_a);
+    let entry_bytes = probe.stats().bytes;
+    assert!(entry_bytes > 0);
+
+    // A budget of exactly one entry: the second insert evicts the first.
+    let pool = KvPool::new(entry_bytes);
+    pool.insert(&a_toks, &donor_a);
+    assert_eq!(pool.stats().entries, 1);
+    // Warm-attach A before it gets evicted — this sequence holds Arcs.
+    let mut warm_a = model.empty_caches();
+    let resident = pool.attach(&a_toks, &mut warm_a);
+    assert_eq!(resident, BLOCK_ROWS);
+    let mut donor_b = model.empty_caches();
+    model.prefill(&eng, &b_toks, &mut donor_b);
+    pool.insert(&b_toks, &donor_b);
+    let st = pool.stats();
+    assert_eq!(st.entries, 1, "one-entry budget must hold one entry");
+    assert!(st.evictions >= 1, "inserting B must evict A: {st:?}");
+    assert!(st.bytes <= entry_bytes);
+    // A is gone from the index; B is resident.
+    let mut probe_a = model.empty_caches();
+    assert_eq!(pool.attach(&a_toks, &mut probe_a), 0, "evicted prefix must miss");
+    let mut probe_b = model.empty_caches();
+    assert_eq!(pool.attach(&b_toks, &mut probe_b), BLOCK_ROWS);
+    // The live warm sequence still owns the evicted blocks: finishing
+    // its prefill + decode matches the cold run exactly.
+    let (want_logits, want_toks) = model.generate(&eng, &a_toks, 2);
+    let mut logits = model.prefill(&eng, &a_toks[resident..], &mut warm_a);
+    let mut got = Vec::new();
+    for _ in 0..2 {
+        let next = QuantTransformer::argmax(&logits);
+        got.push(next);
+        logits = model.decode(&eng, next, &mut warm_a);
+    }
+    assert_eq!((logits, got), (want_logits, want_toks));
+}
+
+/// The acceptance criterion, planner-verified: an attention GEMM whose
+/// history is fully pool-resident charges **0** encode events on
+/// EN-T(Ours); partial residency charges exactly the non-resident rows;
+/// non-consuming variants are inert.
+#[test]
+fn warm_prefix_admission_charges_zero_encodes_for_resident_rows() {
+    let tcu = Tcu::new(ArchKind::SystolicOs, 8, Variant::EntOurs);
+    let plan = TilePlan::new(&tcu, GemmShape::new(1, 8, 17));
+    let warm = plan.stats_kv_shared(17);
+    assert_eq!(warm.encodes, 0, "resident rows must charge 0 encode events");
+    assert_eq!(warm.activation_encodes, 0);
+    assert_eq!(warm.weight_encodes, 0);
+    // The non-encode event counts never move.
+    let plain = plan.stats_attention();
+    assert_eq!(warm.cycles, plain.cycles);
+    assert_eq!(warm.a_reads, plain.a_reads);
+    assert_eq!(warm.b_reads, plain.b_reads);
+    for v in [Variant::Baseline, Variant::EntMbe] {
+        let t = Tcu::new(ArchKind::SystolicOs, 8, v);
+        let p = TilePlan::new(&t, GemmShape::new(1, 8, 17));
+        assert_eq!(p.stats_kv_shared(17).encodes, p.stats_attention().encodes);
+    }
+}
+
+/// The same criterion through the SoC energy walk: a warm prefill's
+/// resident rows contribute 0 prefill MACs and 0 encode events — the
+/// encode total scales with the fresh rows only, and a fully warm
+/// admission prices exactly like one decode step.
+#[test]
+fn warm_prefill_energy_scales_with_fresh_rows_only() {
+    let spec = TransformerSpec::tiny();
+    let soc = Soc::paper_config(ArchKind::SystolicOs, Variant::EntOurs);
+    let opts = EnergyOpts {
+        encode_cache: true,
+        kv_prepack: true,
+    };
+    let cold = frame_energy_with(&soc, &spec.prefill_network(12), opts).0;
+    let warm = frame_energy_with(&soc, &spec.warm_prefill_network(12, 8), opts).0;
+    let per_row = 2 * (spec.d_model * spec.layers) as u64;
+    assert_eq!(cold.encodes, 12 * per_row);
+    assert_eq!(warm.encodes, (12 - 8) * per_row, "resident rows must encode nothing");
+    assert_eq!(warm.weight_encodes, 0);
+    assert!(warm.macs < cold.macs, "resident rows must add no prefill MACs");
+    // Fully warm admission ≡ one decode step at the same context.
+    let full = frame_energy_with(&soc, &spec.warm_prefill_network(12, 11), opts).0;
+    let dec = frame_energy_with(&soc, &spec.decode_network(12), opts).0;
+    assert_eq!(full.macs, dec.macs);
+    assert_eq!(full.encodes, dec.encodes);
+    assert_eq!(full.total_pj(), dec.total_pj());
+}
+
+/// End-to-end through the continuous scheduler: prefix sharing on (the
+/// default) serves bit-identical logits/tokens to sharing off, repeated
+/// prompts warm-hit the pool, and the pool counters ride the metrics
+/// snapshot (absent when sharing is off).
+#[test]
+fn continuous_serving_prefix_share_matches_off_and_counters_surface() {
+    let on = Coordinator::start(Config::continuous(2)).expect("share-on coordinator");
+    let mut off_cfg = Config::continuous(2);
+    off_cfg.prefix_share = Some(false);
+    let off = Coordinator::start(off_cfg).expect("share-off coordinator");
+
+    let req = || TokenRequest::generate(prompt(12), 2);
+    for round in 0..3 {
+        let a = on.infer_tokens(req()).expect("share-on serve");
+        let b = off.infer_tokens(req()).expect("share-off serve");
+        assert_eq!(a.logits, b.logits, "prefix sharing changed logits (round {round})");
+        assert_eq!(a.generated, b.generated, "round {round}");
+    }
+    let ps = on.metrics().kv_pool.expect("pool counters must surface");
+    assert!(ps.insertions >= 1, "{ps:?}");
+    assert!(
+        ps.hit_rows >= 2 * BLOCK_ROWS as u64,
+        "repeated prompts must adopt resident blocks: {ps:?}"
+    );
+    assert!(ps.bytes > 0, "resident-bytes gauge must be live: {ps:?}");
+    assert!(ps.hit_rate() > 0.0);
+    assert!(on.metrics().kv_pool.unwrap().budget_bytes > 0);
+    let m_off = off.metrics();
+    assert!(m_off.kv_pool.is_none(), "share-off must not attach a pool");
+    on.shutdown();
+    off.shutdown();
+}
