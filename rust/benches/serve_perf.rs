@@ -12,7 +12,7 @@
 //! submission window for CI smoke runs.
 
 use ent::coordinator::loadgen::{self, LoadGen};
-use ent::coordinator::{Config, Coordinator};
+use ent::coordinator::{Config, Coordinator, DraftKind};
 use ent::util::bench::header;
 use ent::util::json::Json;
 
@@ -27,13 +27,18 @@ fn main() {
     // scheduler × rate grid on pure token traffic, then one mixed row,
     // the kv-prepack off contrast (continuous serves with the
     // append-only prepacked KV cache on by default — the _nopp row
-    // shows the decode tokens/s delta at kv-prepack on vs off), and the
+    // shows the decode tokens/s delta at kv-prepack on vs off), the
     // Zipf prefix-popularity pair: `continuous_zipf` exercises the
     // shared prefix KV pool under realistic template traffic, and
     // `continuous_zipf_noshare` is the same workload with prefix
     // sharing off — the tokens/s and prefix_hit_rate gap is the
-    // cross-request encode-reuse win.
-    let cases: [(&str, f64, f64, f64); 8] = [
+    // cross-request encode-reuse win — and the speculative-decoding
+    // pair: `continuous_spec` drafts with the deterministic oracle
+    // (acceptance_rate exactly 1.0, machine-independent, so the gate
+    // can hold the line on it) and `continuous_spec_off` is the same
+    // load without speculation, quoting the coalesced-verify tokens/s
+    // contrast.
+    let cases: [(&str, f64, f64, f64); 10] = [
         ("continuous", 100.0, 0.0, 0.0),
         ("continuous_nopp", 100.0, 0.0, 0.0),
         ("continuous", 300.0, 0.0, 0.0),
@@ -42,10 +47,14 @@ fn main() {
         ("continuous", 200.0, 0.25, 0.0),
         ("continuous_zipf", 400.0, 0.0, 1.1),
         ("continuous_zipf_noshare", 400.0, 0.0, 1.1),
+        ("continuous_spec", 400.0, 0.0, 0.0),
+        ("continuous_spec_off", 400.0, 0.0, 0.0),
     ];
     for (scheduler, rate, mix, zipf) in cases {
         let cfg = match scheduler {
-            "continuous" | "continuous_zipf" => Config::continuous(SHARDS),
+            "continuous" | "continuous_zipf" | "continuous_spec_off" => {
+                Config::continuous(SHARDS)
+            }
             "continuous_nopp" => {
                 let mut c = Config::continuous(SHARDS);
                 c.kv_prepack = Some(false);
@@ -54,6 +63,13 @@ fn main() {
             "continuous_zipf_noshare" => {
                 let mut c = Config::continuous(SHARDS);
                 c.prefix_share = Some(false);
+                c
+            }
+            "continuous_spec" => {
+                let mut c = Config::continuous(SHARDS);
+                c.spec_decode = Some(true);
+                c.spec_k = 4;
+                c.draft = DraftKind::Oracle;
                 c
             }
             _ => Config::native(SHARDS),

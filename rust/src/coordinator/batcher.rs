@@ -15,7 +15,11 @@
 //! decode concurrently, how much prompt is fed per step (chunked
 //! prefill), how deep the queue may grow before backpressure rejects,
 //! and how long a request may wait unadmitted before its deadline
-//! expires it.
+//! expires it. Speculative decoding (`Config::spec_decode`) changes
+//! none of these knobs: drafted verify windows ride the same step loop,
+//! and admission/backpressure/deadline decisions are taken before any
+//! drafting happens, so the policy's guarantees hold with speculation
+//! on or off.
 
 use super::ModelSpec;
 

@@ -88,6 +88,10 @@ pub struct LoadReport {
     /// during this run (0.0 when prefix sharing is off or no token
     /// traffic flowed).
     pub prefix_hit_rate: f64,
+    /// Fraction of speculative draft tokens accepted by target
+    /// verification during this run (0.0 when `--spec-decode` is off or
+    /// no speculation rounds ran).
+    pub acceptance_rate: f64,
 }
 
 impl LoadReport {
@@ -108,6 +112,7 @@ impl LoadReport {
             ("tokens_per_s", Json::num(self.tokens_per_s)),
             ("occupancy", Json::num(self.occupancy)),
             ("prefix_hit_rate", Json::num(self.prefix_hit_rate)),
+            ("acceptance_rate", Json::num(self.acceptance_rate)),
         ]
     }
 }
@@ -231,6 +236,15 @@ pub fn run(coord: &Coordinator, cfg: &LoadGen) -> LoadReport {
             }
         })
         .unwrap_or(0.0);
+    // Speculative acceptance over this run's rounds only (lifetime
+    // counters differenced, same as the prefix-pool rate above).
+    let drafted = after.spec_drafted.saturating_sub(before.spec_drafted);
+    let accepted = after.spec_accepted.saturating_sub(before.spec_accepted);
+    let acceptance_rate = if drafted == 0 {
+        0.0
+    } else {
+        accepted as f64 / drafted as f64
+    };
     LoadReport {
         sent,
         completed,
@@ -250,6 +264,7 @@ pub fn run(coord: &Coordinator, cfg: &LoadGen) -> LoadReport {
             busy as f64 / capacity as f64
         },
         prefix_hit_rate,
+        acceptance_rate,
     }
 }
 
@@ -318,5 +333,43 @@ mod tests {
             );
         }
         coord.shutdown();
+    }
+
+    /// An oracle drafter (the target model drafting for itself) makes
+    /// every speculation round accept in full, so the run-scoped
+    /// acceptance rate is exactly 1.0 whenever any round ran.
+    #[test]
+    fn speculative_run_reports_oracle_acceptance() {
+        let mut cfg = Config::continuous(2);
+        cfg.spec_decode = Some(true);
+        cfg.spec_k = 4;
+        cfg.draft = crate::coordinator::DraftKind::Oracle;
+        let coord = Coordinator::start(cfg).expect("continuous coordinator");
+        let report = run(
+            &coord,
+            &LoadGen {
+                rate_per_s: 300.0,
+                duration_ms: 80,
+                prompt_len: 8,
+                max_new_tokens: 4,
+                image_mix: 0.0,
+                prefix_zipf: 0.0,
+                seed: 0xACCE,
+            },
+        );
+        assert_eq!(report.failed, 0);
+        let m = coord.metrics();
+        coord.shutdown();
+        assert_eq!(
+            report.completed + report.rejected + report.failed,
+            report.sent
+        );
+        if m.spec_drafted > 0 {
+            assert!(
+                (report.acceptance_rate - 1.0).abs() < 1e-12,
+                "oracle drafts must all be accepted (rate {})",
+                report.acceptance_rate
+            );
+        }
     }
 }

@@ -45,6 +45,12 @@ struct Inner {
     /// deltas) / reused from the resident sidecar.
     kv_rows_encoded: u64,
     kv_rows_reused: u64,
+    /// Speculative-decode accounting: verify rounds run, draft tokens
+    /// proposed, and draft tokens accepted (acceptance rate =
+    /// accepted / drafted).
+    spec_rounds: u64,
+    spec_drafted: u64,
+    spec_accepted: u64,
     started: Instant,
     /// When the first request/token activity was recorded — the
     /// throughput denominator's start, so idle time before traffic
@@ -102,6 +108,14 @@ pub struct Snapshot {
     /// codes).
     pub kv_rows_encoded: u64,
     pub kv_rows_reused: u64,
+    /// Speculative-decode counters: coalesced verify rounds run, draft
+    /// tokens proposed, and draft tokens accepted. All 0 when serving
+    /// without `--spec-decode`. Acceptance rate is
+    /// `spec_accepted / spec_drafted`; interval-scope it by
+    /// differencing two snapshots, as `coordinator::loadgen` does.
+    pub spec_rounds: u64,
+    pub spec_drafted: u64,
+    pub spec_accepted: u64,
     /// Shared prefix-pool counters (`None` when serving without
     /// prefix sharing — see `Config::prefix_share`): per-row hit/miss
     /// totals, insertions, LRU evictions, and the resident-bytes gauge.
@@ -122,6 +136,9 @@ impl Metrics {
                 capacity_ns: 0,
                 kv_rows_encoded: 0,
                 kv_rows_reused: 0,
+                spec_rounds: 0,
+                spec_drafted: 0,
+                spec_accepted: 0,
                 started: Instant::now(),
                 first_activity: None,
                 latencies_us: Vec::new(),
@@ -201,6 +218,19 @@ impl Metrics {
         g.kv_rows_reused += reused;
     }
 
+    /// One speculative verify round: `drafted` tokens were proposed by
+    /// the draft model and `accepted` of them survived greedy
+    /// verification (`accepted ≤ drafted`; the bonus token the target
+    /// emits every round is counted by [`Metrics::record_tokens`], not
+    /// here).
+    pub fn record_spec(&self, drafted: u64, accepted: u64) {
+        debug_assert!(accepted <= drafted);
+        let mut g = self.inner.lock().unwrap();
+        g.spec_rounds += 1;
+        g.spec_drafted += drafted;
+        g.spec_accepted += accepted;
+    }
+
     /// One scheduler step: total shard busy time vs pool capacity
     /// (step wall-clock × shard count) over the same interval.
     pub fn record_step(&self, busy_ns: u64, capacity_ns: u64) {
@@ -247,6 +277,9 @@ impl Metrics {
             encode_cache: g.encode_cache.as_ref().map(|c| c.stats()),
             kv_rows_encoded: g.kv_rows_encoded,
             kv_rows_reused: g.kv_rows_reused,
+            spec_rounds: g.spec_rounds,
+            spec_drafted: g.spec_drafted,
+            spec_accepted: g.spec_accepted,
             kv_pool: g.kv_pool.as_ref().map(|p| p.stats()),
         }
     }
@@ -354,6 +387,22 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.kv_rows_encoded, 4);
         assert_eq!(s.kv_rows_reused, 26);
+    }
+
+    /// Speculation counters accumulate across verify rounds and
+    /// surface in snapshots.
+    #[test]
+    fn spec_counters_surface_in_snapshot() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!((s.spec_rounds, s.spec_drafted, s.spec_accepted), (0, 0, 0));
+        m.record_spec(3, 3);
+        m.record_spec(3, 1);
+        m.record_spec(2, 0);
+        let s = m.snapshot();
+        assert_eq!(s.spec_rounds, 3);
+        assert_eq!(s.spec_drafted, 8);
+        assert_eq!(s.spec_accepted, 4);
     }
 
     /// The throughput denominator starts at the first arrival: an idle

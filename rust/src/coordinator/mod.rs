@@ -131,6 +131,28 @@ pub enum ServeMode {
     Continuous(ContinuousPolicy),
 }
 
+/// Which model proposes draft tokens for speculative decoding
+/// ([`Config::spec_decode`]). All three share the target's vocabulary
+/// and context geometry, so drafted tokens are always in-range; they
+/// differ only in how often the target agrees with them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DraftKind {
+    /// A `tinyformer`-class draft model: a smaller seeded transformer
+    /// (1 layer, d_model 16) that is cheap to run but only sometimes
+    /// matches the target — the realistic deployment shape.
+    Tiny,
+    /// The target model itself drafts: every proposal matches the
+    /// target's greedy choice, so acceptance is exactly 1.0 — the
+    /// deterministic full-acceptance ceiling the bench rows and the
+    /// forced-acceptance equivalence tests pin.
+    Oracle,
+    /// The target model drafts, then every proposal is displaced by one
+    /// vocabulary slot: the first draft always mismatches, so
+    /// acceptance is exactly 0.0 — the forced-rejection stub that
+    /// exercises the rollback path on every round.
+    AntiOracle,
+}
+
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
 pub struct Config {
@@ -178,6 +200,26 @@ pub struct Config {
     /// window batching (which never interleaves requests). Pool counters
     /// ride the metrics snapshots.
     pub prefix_share: Option<bool>,
+    /// **Speculative decoding** under the continuous scheduler (`ent
+    /// serve|loadgen --spec-decode on|off`): a draft model proposes up
+    /// to `spec_k − 1` tokens per sequence per round, the target model
+    /// verifies the whole window in one coalesced step, accepts the
+    /// longest greedy-matching prefix, and rolls rejected tokens back
+    /// via `KvCache::truncate`. Greedy verification is bit-exact, so
+    /// output is identical to sequential decode with the flag on or
+    /// off (`tests/spec_decode.rs`); acceptance counters ride the
+    /// metrics snapshots. `None` picks the mode default — **off**
+    /// (speculation trades wasted draft/verify work for serial-latency
+    /// wins, an explicit opt-in). Window mode ignores it.
+    pub spec_decode: Option<bool>,
+    /// Speculation window: 1 carried token plus up to `spec_k − 1`
+    /// draft tokens verified per round. `spec_k ≤ 1` leaves no room to
+    /// draft and degenerates to plain decode.
+    pub spec_k: usize,
+    /// Which model drafts ([`DraftKind`]): `Tiny` is the deployment
+    /// shape; `Oracle` / `AntiOracle` pin the acceptance ceiling and
+    /// floor deterministically for tests and bench rows.
+    pub draft: DraftKind,
 }
 
 impl Default for Config {
@@ -194,6 +236,9 @@ impl Default for Config {
             kv_prepack: None,
             kv_pool_bytes: 8 << 20,
             prefix_share: None,
+            spec_decode: None,
+            spec_k: 4,
+            draft: DraftKind::Tiny,
         }
     }
 }
@@ -605,6 +650,34 @@ fn executor_thread(
             } else {
                 None
             };
+            // Speculative decoding (opt-in): build the draft model and
+            // a dedicated engine for it. The drafter's choices only
+            // gate *acceptance* — every emitted token is verified by
+            // the target — so its arch/variant/seed can never change
+            // output, only throughput.
+            let spec = cfg.spec_decode.unwrap_or(false).then(|| {
+                let draft = match cfg.draft {
+                    DraftKind::Tiny => QuantTransformer::new(
+                        crate::nn::transformer::TransformerSpec {
+                            d_model: 16,
+                            heads: 2,
+                            d_ff: 32,
+                            layers: 1,
+                            vocab: 64,
+                            max_seq: 64,
+                        },
+                        0xD1AF7,
+                    ),
+                    DraftKind::Oracle | DraftKind::AntiOracle => QuantTransformer::tiny_native(),
+                };
+                let size = if cfg.twin_arch == ArchKind::Cube3d { 8 } else { 16 };
+                scheduler::SpecCtx {
+                    draft,
+                    eng: Tcu::new(cfg.twin_arch, size, cfg.twin_variant).engine(),
+                    k: cfg.spec_k.max(1),
+                    kind: cfg.draft,
+                }
+            });
             scheduler::run(scheduler::SchedulerCtx {
                 pol,
                 cnn: model,
@@ -615,6 +688,7 @@ fn executor_thread(
                 sim_energy_uj,
                 sim_latency_ms,
                 kv_pool,
+                spec,
             });
         }
         return;

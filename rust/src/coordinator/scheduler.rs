@@ -58,6 +58,22 @@
 //! every step it steals, keeping the decode hot path allocation-free;
 //! the scratch's residency counters drain into the metrics after each
 //! token group.
+//!
+//! **Speculative decoding** (`Config::spec_decode`): before the task
+//! list forms, a draft model proposes up to `spec_k − 1` tokens for
+//! every decode-phase sequence; the step then feeds the carried greedy
+//! token plus the drafts as one coalesced **verify window** through
+//! [`QuantTransformer::forward_step_all_with`] (per-position logits,
+//! reusing the prepacked KV sidecar for the whole window), and the
+//! lifecycle accepts the longest prefix of drafts matching the
+//! target's greedy argmax, rolls the rejected tail back via
+//! [`KvCache::truncate`], and banks the target's own choice at the
+//! mismatch point as the round's bonus token. Every emitted token is
+//! the target's argmax given exactly the tokens before it — the same
+//! exact-integer arithmetic as plain decode — so output is
+//! bit-identical with speculation on or off (`tests/spec_decode.rs`);
+//! the drafter only moves the acceptance rate, never the answer.
+//! Acceptance counters ride the metrics snapshots.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -73,7 +89,21 @@ use crate::nn::transformer::{QuantTransformer, StepSeq};
 
 use super::batcher::ContinuousPolicy;
 use super::metrics::Metrics;
-use super::{InferResponse, Job, Msg, TokenJob, TokenResponse};
+use super::{DraftKind, InferResponse, Job, Msg, TokenJob, TokenResponse};
+
+/// Speculative-decoding bundle (`Config::spec_decode`): the draft
+/// model, a dedicated engine it runs on, the window size, and the
+/// draft flavor. Built by the executor at startup; owned by the
+/// scheduler run. The drafter's proposals only gate acceptance —
+/// every emitted token is re-derived by the target — so nothing in
+/// here can change output, only throughput.
+pub(super) struct SpecCtx {
+    pub draft: QuantTransformer,
+    pub eng: AnyEngine,
+    /// Window size: 1 carried token + up to `k − 1` drafts per round.
+    pub k: usize,
+    pub kind: DraftKind,
+}
 
 /// Everything one scheduler run needs, bundled (the executor thread
 /// owns the backend; the scheduler only borrows it).
@@ -91,6 +121,8 @@ pub(super) struct SchedulerCtx<'a> {
     /// encode events, 0 prefill MACs for those rows) and completed
     /// prefills publish theirs. `None` when prefix sharing is off.
     pub kv_pool: Option<Arc<KvPool>>,
+    /// Speculative decoding (`Config::spec_decode`); `None` = off.
+    pub spec: Option<SpecCtx>,
 }
 
 /// One in-flight sequence.
@@ -109,6 +141,12 @@ struct SeqState {
     caches: Vec<KvCache>,
     /// Logits after the last fed position (empty before the first step).
     logits: Vec<f32>,
+    /// Draft tokens currently riding the tail of `queue` (a speculation
+    /// round is in flight; 0 otherwise).
+    drafted: usize,
+    /// Per-position logits of the in-flight verify window (written by
+    /// the step, consumed by the resolve).
+    win_logits: Vec<Vec<f32>>,
     /// Sequences coalesced into this one's most recent step group.
     group: usize,
 }
@@ -139,6 +177,9 @@ pub(super) fn run(ctx: SchedulerCtx<'_>) {
     // uncontended: shard i is the only worker that locks scratch i.
     let scratches: Vec<Mutex<AttnScratch>> =
         (0..nshards).map(|_| Mutex::new(AttnScratch::new())).collect();
+    // The draft model's own scratch (drafting runs serially on the
+    // scheduler thread, before the step fans out).
+    let mut draft_scratch = AttnScratch::new();
     let mut pending_tok: VecDeque<TokenJob> = VecDeque::new();
     let mut pending_img: VecDeque<Job> = VecDeque::new();
     let mut inflight: Vec<SeqState> = Vec::new();
@@ -212,9 +253,18 @@ pub(super) fn run(ctx: SchedulerCtx<'_>) {
                 fed,
                 generated: Vec::with_capacity(job.max_new),
                 logits: Vec::new(),
+                drafted: 0,
+                win_logits: Vec::new(),
                 group: 1,
                 job,
             });
+        }
+
+        // -- draft phase: propose tokens for decode-phase sequences ---
+        if let Some(spec) = &ctx.spec {
+            for s in inflight.iter_mut() {
+                draft_for(spec, s, &mut draft_scratch);
+            }
         }
 
         // -- build this iteration's task list -------------------------
@@ -227,7 +277,15 @@ pub(super) fn run(ctx: SchedulerCtx<'_>) {
                 let group = chunk.len();
                 let mut seqs = Vec::with_capacity(group);
                 for s in chunk.iter_mut() {
-                    let feed = (s.queue.len() - s.fed).min(ctx.pol.prefill_chunk.max(1));
+                    // A verify window (carried token + drafts) feeds
+                    // whole — chunking it would split the window the
+                    // accept test needs; plain sequences keep the
+                    // prefill-chunk bound.
+                    let feed = if s.drafted > 0 {
+                        s.queue.len() - s.fed
+                    } else {
+                        (s.queue.len() - s.fed).min(ctx.pol.prefill_chunk.max(1))
+                    };
                     s.group = group;
                     seqs.push(SeqTask { seq: s, feed });
                 }
@@ -278,6 +336,13 @@ pub(super) fn run(ctx: SchedulerCtx<'_>) {
         let mut i = 0;
         while i < inflight.len() {
             let s = &mut inflight[i];
+            // Resolve an in-flight speculation round first: accept the
+            // longest draft prefix matching the target, roll the rest
+            // back, bank the bonus token. Leaves the sequence in plain
+            // decode shape (exactly one unfed greedy token).
+            if s.drafted > 0 {
+                resolve_speculation(ctx.metrics, s);
+            }
             // Publish the completed prompt prefix to the radix index so
             // later admissions with the same prefix adopt these blocks
             // (first donor wins; re-publishing a warm-adopted prefix
@@ -384,11 +449,104 @@ fn expire_deadlines(
     });
 }
 
+/// Draft up to `spec.k − 1` tokens for one sequence, pushed onto the
+/// tail of its queue as an unverified speculation window. Only a
+/// **decode-phase** sequence drafts: exactly one unfed greedy-feedback
+/// token, at least two tokens of budget left (the carried token plus
+/// one), and room in the drafter's context. The drafter prefills the
+/// whole queue cold on its own engine (its caches live one round, the
+/// context changes every round anyway) and argmax-feeds itself.
+fn draft_for(spec: &SpecCtx, s: &mut SeqState, scratch: &mut AttnScratch) {
+    debug_assert_eq!(s.drafted, 0, "previous round must be resolved");
+    if s.queue.len() <= s.prompt_len || s.fed + 1 != s.queue.len() {
+        return; // still prefilling, or no carried decode token
+    }
+    let remaining = s.job.max_new - s.generated.len();
+    if remaining < 2 {
+        return; // the carried token is the last budgeted one
+    }
+    // `remaining − 1` keeps every possible accept (all drafts + the
+    // bonus token) inside the budget, so resolve never has to clip.
+    let m = (spec.k.saturating_sub(1))
+        .min(remaining - 1)
+        .min(spec.draft.spec.max_seq.saturating_sub(s.queue.len()));
+    if m == 0 {
+        return;
+    }
+    let mut caches = spec.draft.empty_caches();
+    let mut logits = spec.draft.prefill_with(&spec.eng, &s.queue, &mut caches, scratch);
+    for _ in 0..m {
+        let mut t = QuantTransformer::argmax(&logits);
+        if spec.kind == DraftKind::AntiOracle {
+            // Forced rejection: displace every proposal by one vocab
+            // slot, so the first draft can never match the target.
+            t = ((t as usize + 1) % spec.draft.spec.vocab) as u16;
+        }
+        s.queue.push(t);
+        s.drafted += 1;
+        logits = spec.draft.prefill_with(&spec.eng, &[t], &mut caches, scratch);
+    }
+}
+
+/// Resolve one sequence's verify window after its step: `queue` ends
+/// with the carried token plus `drafted` draft tokens, all fed, and
+/// `win_logits[j]` holds the target's logits after window position
+/// `j`. Accept the longest prefix of drafts matching the target's
+/// greedy argmax at each position, truncate the queue and every layer
+/// cache back to the accept point (the `PackedCode` sidecar and any
+/// shared COW blocks rewind with them), and push the target's own
+/// choice at the first mismatch — the round's **bonus token** — unfed,
+/// exactly like plain greedy feedback. Each emitted token is the
+/// target's argmax given precisely the tokens before it, which is the
+/// sequential greedy definition — hence bit-exact output.
+fn resolve_speculation(metrics: &Metrics, s: &mut SeqState) {
+    let m = s.drafted;
+    s.drafted = 0;
+    let win = std::mem::take(&mut s.win_logits);
+    debug_assert_eq!(win.len(), m + 1, "one logits row per window position");
+    let base = s.queue.len() - (m + 1);
+    let mut accepted = 0usize;
+    while accepted < m {
+        if s.queue[base + 1 + accepted] != QuantTransformer::argmax(&win[accepted]) {
+            break;
+        }
+        accepted += 1;
+    }
+    // Commit the accepted drafts, roll back the rejected tail.
+    for j in 0..accepted {
+        s.generated.push(s.queue[base + 1 + j]);
+    }
+    let keep = base + 1 + accepted;
+    s.queue.truncate(keep);
+    for c in s.caches.iter_mut() {
+        c.truncate(keep);
+    }
+    s.fed = keep;
+    // Bonus token: the target's greedy choice where the drafts stopped
+    // matching (or after the last accepted draft). The draft-count
+    // clamp guarantees `generated` never overruns `max_new` here.
+    s.logits = win.into_iter().nth(accepted).expect("accept point row");
+    let bonus = QuantTransformer::argmax(&s.logits);
+    s.generated.push(bonus);
+    s.queue.push(bonus);
+    debug_assert!(s.generated.len() <= s.job.max_new);
+    // Useful positions this round: the carried token + accepted drafts
+    // (the bonus is counted when it is fed). Rejected rows are wasted
+    // verify work — visible as `spec_drafted − spec_accepted`.
+    metrics.record_tokens(1 + accepted as u64);
+    metrics.record_spec(m as u64, accepted as u64);
+}
+
 /// One coalesced step over a group of sequences on one engine shard:
 /// each contributes its next `feed` positions; Q/K/V, MLP, and head
 /// GEMMs run shared across the group. `scratch` is the shard's reused
 /// attention scratch; its kv-prepack residency counters drain into the
 /// metrics after the step.
+///
+/// A group containing verify windows (`drafted > 0`) runs the
+/// per-position-logits step instead, storing each window's full logits
+/// for the resolve; its token accounting moves there too (only the
+/// carried token + accepted drafts count as useful positions).
 fn run_token_group(
     lm: &QuantTransformer,
     metrics: &Metrics,
@@ -396,23 +554,42 @@ fn run_token_group(
     group: &mut [SeqTask<'_>],
     scratch: &mut AttnScratch,
 ) {
+    let any_window = group.iter().any(|t| t.seq.drafted > 0);
     let mut steps: Vec<StepSeq> = Vec::with_capacity(group.len());
     let mut fed_positions = 0u64;
     for t in group.iter_mut() {
         let s = &mut *t.seq;
-        fed_positions += t.feed as u64;
+        if s.drafted == 0 {
+            fed_positions += t.feed as u64;
+        }
         steps.push(StepSeq {
             tokens: &s.queue[s.fed..s.fed + t.feed],
             caches: &mut s.caches[..],
         });
     }
-    let logits = lm.forward_step_with(eng, &mut steps, scratch);
-    drop(steps);
-    for (t, l) in group.iter_mut().zip(logits) {
-        t.seq.fed += t.feed;
-        t.seq.logits = l;
+    if any_window {
+        let all = lm.forward_step_all_with(eng, &mut steps, scratch);
+        drop(steps);
+        for (t, mut rows) in group.iter_mut().zip(all) {
+            t.seq.fed += t.feed;
+            if t.seq.drafted > 0 {
+                // `logits` is set at resolve (to the accept-point row).
+                t.seq.win_logits = rows;
+            } else {
+                t.seq.logits = rows.pop().expect("at least one fed row");
+            }
+        }
+    } else {
+        let logits = lm.forward_step_with(eng, &mut steps, scratch);
+        drop(steps);
+        for (t, l) in group.iter_mut().zip(logits) {
+            t.seq.fed += t.feed;
+            t.seq.logits = l;
+        }
     }
-    metrics.record_tokens(fed_positions);
+    if fed_positions > 0 {
+        metrics.record_tokens(fed_positions);
+    }
     let (encoded, reused) = scratch.take_kv_counters();
     if encoded + reused > 0 {
         metrics.record_kv(encoded, reused);

@@ -5,8 +5,8 @@
 //! ent simulate --arch sa_os --size 32 --variant ours --m 64 --k 128 --n 64
 //! ent soc --net resnet50 [--arch sa_os] [--json]
 //! ent transformer --prompt 12 --gen 4 [--arch sa_os] [--variant ours] [--json]
-//! ent serve --requests 64 [--native] [--continuous] [--tokens] [--gen 4] [--artifacts DIR]
-//! ent loadgen --rate 200 --duration 500 [--mix 0.25] [--window] [--json]
+//! ent serve --requests 64 [--native] [--continuous] [--tokens] [--gen 4] [--spec-decode on] [--artifacts DIR]
+//! ent loadgen --rate 200 --duration 500 [--mix 0.25] [--window] [--spec-decode on --spec-k 4] [--json]
 //! ent sweep --ablation <encoder|accwidth|segmented|batching>
 //! ent selftest
 //! ```
@@ -125,6 +125,17 @@ fn parse_prefix_share(args: &ent::util::cli::Args) -> ent::Result<Option<bool>> 
         Some("on") | Some("true") => Some(true),
         Some("off") | Some("false") => Some(false),
         Some(other) => ent::bail!("--prefix-share must be on|off, got '{other}'"),
+    })
+}
+
+/// `--spec-decode on|off` → the coordinator's tri-state (None = mode
+/// default: off everywhere until opted in).
+fn parse_spec_decode(args: &ent::util::cli::Args) -> ent::Result<Option<bool>> {
+    Ok(match args.get("spec-decode") {
+        None => None,
+        Some("on") | Some("true") => Some(true),
+        Some("off") | Some("false") => Some(false),
+        Some(other) => ent::bail!("--spec-decode must be on|off, got '{other}'"),
     })
 }
 
@@ -400,6 +411,8 @@ fn cmd_serve(argv: &[String]) -> ent::Result<()> {
         OptSpec { name: "kv-prepack", takes_value: true, help: "append-only prepacked KV cache, on|off (default: on with --continuous)" },
         OptSpec { name: "prefix-share", takes_value: true, help: "cross-request prefix KV sharing, on|off (default: on with --continuous)" },
         OptSpec { name: "kv-pool-bytes", takes_value: true, help: "shared prefix KV pool budget in bytes (default 8 MiB; 0 = off)" },
+        OptSpec { name: "spec-decode", takes_value: true, help: "speculative decoding with draft model + coalesced verify, on|off (default off; continuous only)" },
+        OptSpec { name: "spec-k", takes_value: true, help: "speculation window: draft+verify up to k tokens per round (default 4)" },
         OptSpec { name: "help", takes_value: false, help: "show help" },
     ];
     let args = Args::parse(argv, &specs)?;
@@ -431,6 +444,8 @@ fn cmd_serve(argv: &[String]) -> ent::Result<()> {
     cfg.kv_prepack = parse_kv_prepack(&args)?;
     cfg.prefix_share = parse_prefix_share(&args)?;
     cfg.kv_pool_bytes = args.get_usize("kv-pool-bytes", cfg.kv_pool_bytes)?;
+    cfg.spec_decode = parse_spec_decode(&args)?;
+    cfg.spec_k = args.get_usize("spec-k", cfg.spec_k)?.max(1);
     let input_len = cfg.model.input_len();
     let coordinator = Coordinator::start(cfg)?;
     let kind = if tokens { "token" } else { "image" };
@@ -516,6 +531,19 @@ fn cmd_serve(argv: &[String]) -> ent::Result<()> {
             100.0 * m.kv_rows_reused as f64 / (m.kv_rows_encoded + m.kv_rows_reused) as f64
         );
     }
+    if m.spec_rounds > 0 {
+        println!(
+            "speculation: {} rounds, {} drafted {} accepted ({:.1}% acceptance)",
+            m.spec_rounds,
+            m.spec_drafted,
+            m.spec_accepted,
+            if m.spec_drafted == 0 {
+                0.0
+            } else {
+                100.0 * m.spec_accepted as f64 / m.spec_drafted as f64
+            }
+        );
+    }
     if let Some(ps) = m.kv_pool {
         println!(
             "kv pool: {:.1}% prefix hit rate ({} warm / {} cold rows), {} insertions {} evictions ({} entries, {} KiB of {} KiB)",
@@ -548,6 +576,8 @@ fn cmd_loadgen(argv: &[String]) -> ent::Result<()> {
         OptSpec { name: "kv-prepack", takes_value: true, help: "append-only prepacked KV cache, on|off (default: on unless --window)" },
         OptSpec { name: "prefix-share", takes_value: true, help: "cross-request prefix KV sharing, on|off (default: on unless --window)" },
         OptSpec { name: "kv-pool-bytes", takes_value: true, help: "shared prefix KV pool budget in bytes (default 8 MiB; 0 = off)" },
+        OptSpec { name: "spec-decode", takes_value: true, help: "speculative decoding with draft model + coalesced verify, on|off (default off; continuous only)" },
+        OptSpec { name: "spec-k", takes_value: true, help: "speculation window: draft+verify up to k tokens per round (default 4)" },
         OptSpec { name: "seed", takes_value: true, help: "arrival-schedule seed (default 0x10AD)" },
         OptSpec { name: "json", takes_value: false, help: "JSON output" },
         OptSpec { name: "help", takes_value: false, help: "show help" },
@@ -578,6 +608,8 @@ fn cmd_loadgen(argv: &[String]) -> ent::Result<()> {
     cfg.kv_prepack = parse_kv_prepack(&args)?;
     cfg.prefix_share = parse_prefix_share(&args)?;
     cfg.kv_pool_bytes = args.get_usize("kv-pool-bytes", cfg.kv_pool_bytes)?;
+    cfg.spec_decode = parse_spec_decode(&args)?;
+    cfg.spec_k = args.get_usize("spec-k", cfg.spec_k)?.max(1);
     let scheduler = if args.flag("window") { "window" } else { "continuous" };
     let coord = Coordinator::start(cfg)?;
     let r = loadgen::run(&coord, &load);
@@ -621,6 +653,13 @@ fn cmd_loadgen(argv: &[String]) -> ent::Result<()> {
         t.row(vec![
             "kv prepack encoded/reused rows".into(),
             format!("{}/{}", m.kv_rows_encoded, m.kv_rows_reused),
+        ]);
+    }
+    if m.spec_rounds > 0 {
+        t.row(vec!["spec acceptance rate".into(), pct(r.acceptance_rate)]);
+        t.row(vec![
+            "spec rounds / drafted / accepted".into(),
+            format!("{}/{}/{}", m.spec_rounds, m.spec_drafted, m.spec_accepted),
         ]);
     }
     if let Some(ps) = m.kv_pool {

@@ -848,6 +848,120 @@ mod tests {
         assert_eq!(sharer.k_row(0), donor.k_row(0));
     }
 
+    /// Seeded randomized stress of the speculation rollback path: a
+    /// cache that starts on a donor's shared pool block takes 200
+    /// interleaved `append` / `ensure_encoded` / `truncate` operations
+    /// (the verify/rollback churn, including COW forks mid-window) and
+    /// is checked after every one against a scalar reference model —
+    /// row contents, sidecar codes, `encoded_len()`, and the donor
+    /// block's refcount must never diverge, and the donor itself must
+    /// never be disturbed.
+    #[test]
+    fn randomized_rollback_stress_matches_reference_model() {
+        let d = 4usize;
+        let max_seq = 4 * BLOCK_ROWS;
+        for seed in 0..8u64 {
+            let mut rng = Rng::new(0x5EC_0DE ^ (seed.wrapping_mul(0x9E37_79B9)));
+            // Donor: one fully encoded shared block, as the prefix pool
+            // would hand out.
+            let mut donor = KvCache::new(d, max_seq);
+            let donor_k: Vec<i8> = (0..BLOCK_ROWS * d).map(|i| (i % 127) as i8 - 63).collect();
+            let donor_v: Vec<i8> = donor_k.iter().map(|&x| x.wrapping_neg()).collect();
+            donor.append(&donor_k, &donor_v, BLOCK_ROWS);
+            donor.ensure_encoded();
+
+            let mut c = KvCache::new(d, max_seq);
+            c.adopt(vec![Arc::clone(donor.block_arc(0))], BLOCK_ROWS, BLOCK_ROWS);
+            // Scalar reference: per-row vectors + the encode watermark.
+            let mut ref_k: Vec<Vec<i8>> = (0..BLOCK_ROWS)
+                .map(|p| donor_k[p * d..(p + 1) * d].to_vec())
+                .collect();
+            let mut ref_v: Vec<Vec<i8>> = (0..BLOCK_ROWS)
+                .map(|p| donor_v[p * d..(p + 1) * d].to_vec())
+                .collect();
+            let mut ref_encoded = BLOCK_ROWS;
+            let mut forked = false;
+
+            for step in 0..200 {
+                match rng.below(4) {
+                    0 | 1 => {
+                        let rows = rng.range(1, 3);
+                        if ref_k.len() + rows <= max_seq {
+                            let k = rng.i8_vec(rows * d);
+                            let v = rng.i8_vec(rows * d);
+                            c.append(&k, &v, rows);
+                            for r in 0..rows {
+                                ref_k.push(k[r * d..(r + 1) * d].to_vec());
+                                ref_v.push(v[r * d..(r + 1) * d].to_vec());
+                            }
+                        }
+                    }
+                    2 => {
+                        let to = rng.range(0, ref_k.len());
+                        c.truncate(to);
+                        ref_k.truncate(to);
+                        ref_v.truncate(to);
+                        ref_encoded = ref_encoded.min(to);
+                    }
+                    _ => {
+                        let fresh = c.ensure_encoded();
+                        assert_eq!(
+                            fresh,
+                            ref_k.len() - ref_encoded,
+                            "step {step}: encode delta diverged"
+                        );
+                        ref_encoded = ref_k.len();
+                    }
+                }
+
+                // Cache vs reference model, after every operation.
+                assert_eq!(c.len(), ref_k.len(), "step {step}: len diverged");
+                assert_eq!(c.encoded_len(), ref_encoded, "step {step}: watermark diverged");
+                for p in 0..ref_k.len() {
+                    assert_eq!(c.k_row(p), &ref_k[p][..], "step {step}: K row {p}");
+                    assert_eq!(c.v_row(p), &ref_v[p][..], "step {step}: V row {p}");
+                }
+                for p in 0..ref_encoded {
+                    for j in 0..d {
+                        assert_eq!(c.k_codes_row(p)[j], lut_i8(ref_k[p][j]));
+                        assert_eq!(c.v_codes_row(p)[j], lut_i8(ref_v[p][j]));
+                    }
+                }
+
+                // Refcount: shared (2) until the first write into the
+                // shared block forks it by copy-on-write (1) — and a
+                // fork is forever.
+                let count = Arc::strong_count(donor.block_arc(0));
+                if count == 1 {
+                    forked = true;
+                }
+                assert_eq!(count, if forked { 1 } else { 2 }, "step {step}: refcount");
+
+                // The donor must never feel any of it.
+                assert_eq!(donor.len(), BLOCK_ROWS);
+                assert_eq!(donor.encoded_len(), BLOCK_ROWS);
+                for p in 0..BLOCK_ROWS {
+                    assert_eq!(donor.k_row(p), &donor_k[p * d..(p + 1) * d]);
+                    assert_eq!(donor.v_row(p), &donor_v[p * d..(p + 1) * d]);
+                    assert_eq!(donor.k_codes_row(p)[0], lut_i8(donor_k[p * d]));
+                }
+            }
+            // Make sure every seed exercises the COW fork at least
+            // once: rewind into the shared block and overwrite.
+            if !forked {
+                c.truncate(1);
+                c.append(&[1, 2, 3, 4], &[4, 3, 2, 1], 1);
+                assert_eq!(
+                    Arc::strong_count(donor.block_arc(0)),
+                    1,
+                    "seed {seed}: write into the shared block must fork it"
+                );
+                assert_eq!(c.k_row(1), &[1, 2, 3, 4]);
+                assert_eq!(donor.k_row(1), &donor_k[d..2 * d], "fork disturbed the donor");
+            }
+        }
+    }
+
     /// kv-prepack routes the score/context GEMMs through the code
     /// sidecar and stays bit-identical to the plain path across a
     /// prefill + decode sequence, with the scratch counters seeing

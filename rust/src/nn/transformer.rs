@@ -151,7 +151,7 @@ impl TransformerSpec {
     /// convention), with softmax/GELU/layernorm charged as SIMD ops.
     pub fn prefill_network(&self, seq: usize) -> Network {
         assert!(seq > 0 && seq <= self.max_seq);
-        self.trace_network("transformer_prefill", seq, seq, 0)
+        self.trace_network("transformer_prefill", seq, seq, 0, 1)
     }
 
     /// One autoregressive decode step attending over `kv` total
@@ -160,7 +160,22 @@ impl TransformerSpec {
     /// saving the decode tests assert through the planner counts.
     pub fn decode_network(&self, kv: usize) -> Network {
         assert!(kv > 0 && kv <= self.max_seq);
-        self.trace_network("transformer_decode", 1, kv, kv - 1)
+        self.trace_network("transformer_decode", 1, kv, kv - 1, 1)
+    }
+
+    /// One coalesced **speculative-verification step** as a layer
+    /// trace: a `k`-row window (the carried decode token plus `k − 1`
+    /// draft tokens) attends over `kv` total positions in one pass, and
+    /// the vocabulary head scores **every window row** — the
+    /// per-position logits the accept test needs — instead of
+    /// [`TransformerSpec::decode_network`]'s single row. The QKV, MLP,
+    /// and head weights are read (and, without a resident encode cache,
+    /// encoded) once for the whole window instead of once per token;
+    /// [`crate::soc::energy::spec_verify_cost`] prices this trace
+    /// against `k` sequential decode steps.
+    pub fn verify_network(&self, k: usize, kv: usize) -> Network {
+        assert!(k > 0 && kv >= k && kv <= self.max_seq);
+        self.trace_network("transformer_verify", k, kv, kv - k, k)
     }
 
     /// A **warm-prefix prefill** as a layer trace: `seq − resident` new
@@ -174,13 +189,23 @@ impl TransformerSpec {
     pub fn warm_prefill_network(&self, seq: usize, resident: usize) -> Network {
         assert!(seq > 0 && seq <= self.max_seq);
         assert!(resident < seq, "the last prompt position is always fed fresh");
-        self.trace_network("transformer_prefill_warm", seq - resident, seq, resident)
+        self.trace_network("transformer_prefill_warm", seq - resident, seq, resident, 1)
     }
 
     /// Shared trace builder: `rows` new positions attending over `kv`
-    /// total positions (`offset` of them cached).
-    fn trace_network(&self, name: &'static str, rows: usize, kv: usize, offset: usize) -> Network {
+    /// total positions (`offset` of them cached), with the vocabulary
+    /// head scoring the last `head_rows` of them (1 everywhere except
+    /// the speculative-verify trace, which needs every window row).
+    fn trace_network(
+        &self,
+        name: &'static str,
+        rows: usize,
+        kv: usize,
+        offset: usize,
+        head_rows: usize,
+    ) -> Network {
         assert_eq!(rows + offset, kv);
+        assert!(head_rows >= 1 && head_rows <= rows);
         let (d, dh, ff, h) = (self.d_model, self.head_dim(), self.d_ff, self.heads);
         let mut layers = Vec::new();
         for l in 0..self.layers {
@@ -266,17 +291,18 @@ impl TransformerSpec {
                 kv_fresh: 0,
             });
         }
-        // Vocabulary head over the last position only.
+        // Vocabulary head over the last `head_rows` positions (the last
+        // position only, except for speculative verification).
         layers.push(Layer::Gemm {
             name: "lm_head".into(),
             m: self.vocab,
             k: d,
-            n: 1,
+            n: head_rows,
             repeats: 1,
             weight_bytes: (d * self.vocab) as u64,
-            in_bytes: d as u64,
-            out_bytes: self.vocab as u64,
-            simd_ops: 2 * self.vocab as u64,
+            in_bytes: (head_rows * d) as u64,
+            out_bytes: (head_rows * self.vocab) as u64,
+            simd_ops: 2 * (head_rows * self.vocab) as u64,
             kv_fresh: 0,
         });
         Network {
@@ -486,6 +512,115 @@ impl QuantTransformer {
         scratch: &mut AttnScratch,
     ) -> Vec<Vec<f32>> {
         let d = self.spec.d_model;
+        let (x, mut x2, hidden, rows_per, _total) = self.step_trunk(eng, seqs, scratch);
+
+        // Vocabulary head over each sequence's last position, gathered
+        // (into the front of the spare residual buffer) for one shared
+        // GEMM.
+        let nseq = seqs.len();
+        let vocab = self.spec.vocab;
+        let mut row_end = 0usize;
+        for (i, &rows) in rows_per.iter().enumerate() {
+            row_end += rows;
+            x2[i * d..(i + 1) * d].copy_from_slice(&x[(row_end - 1) * d..row_end * d]);
+        }
+        grown(&mut scratch.acc, nseq * vocab, 0i64);
+        super::gemm_weights_b(
+            eng,
+            self.cache.as_deref(),
+            &x2[..nseq * d],
+            &self.head,
+            &mut scratch.acc[..nseq * vocab],
+            nseq,
+            d,
+            vocab,
+        );
+        let logits = (0..nseq)
+            .map(|i| {
+                scratch.acc[i * vocab..(i + 1) * vocab]
+                    .iter()
+                    .map(|&v| v as f32 / 256.0)
+                    .collect()
+            })
+            .collect();
+
+        // Hand the step buffers back for the next step.
+        scratch.x = x;
+        scratch.x2 = x2;
+        scratch.hidden = hidden;
+        logits
+    }
+
+    /// [`QuantTransformer::forward_step_with`], but returning logits
+    /// for **every fed position** of every sequence instead of the last
+    /// one only — the coalesced **speculative-verification** entry. A
+    /// verify window feeds the carried decode token plus the draft
+    /// tokens in one pass; the accept test then needs the logits *after
+    /// each* window position to compare against the drafts. The trunk
+    /// is byte-for-byte the shared step path, and the vocabulary head
+    /// runs one GEMM over all window rows; engines compute each output
+    /// row of a GEMM independently and exactly, so row `j` of a
+    /// sequence equals `forward_step_with`'s output had the feed
+    /// stopped after position `j` — the bit-exactness the speculative
+    /// scheduler and `tests/spec_decode.rs` rely on.
+    pub fn forward_step_all_with<E: TcuEngine + ?Sized>(
+        &self,
+        eng: &E,
+        seqs: &mut [StepSeq<'_>],
+        scratch: &mut AttnScratch,
+    ) -> Vec<Vec<Vec<f32>>> {
+        let d = self.spec.d_model;
+        let (x, x2, hidden, rows_per, total) = self.step_trunk(eng, seqs, scratch);
+
+        // Vocabulary head over every row of the residual stream — no
+        // gather needed, the block output is already the M×K operand.
+        let vocab = self.spec.vocab;
+        grown(&mut scratch.acc, total * vocab, 0i64);
+        super::gemm_weights_b(
+            eng,
+            self.cache.as_deref(),
+            &x[..total * d],
+            &self.head,
+            &mut scratch.acc[..total * vocab],
+            total,
+            d,
+            vocab,
+        );
+        let mut out = Vec::with_capacity(rows_per.len());
+        let mut r0 = 0usize;
+        for &rows in &rows_per {
+            out.push(
+                (r0..r0 + rows)
+                    .map(|r| {
+                        scratch.acc[r * vocab..(r + 1) * vocab]
+                            .iter()
+                            .map(|&v| v as f32 / 256.0)
+                            .collect()
+                    })
+                    .collect(),
+            );
+            r0 += rows;
+        }
+
+        scratch.x = x;
+        scratch.x2 = x2;
+        scratch.hidden = hidden;
+        out
+    }
+
+    /// The shared step trunk: embed every sequence's new positions,
+    /// run the encoder stack (appending K/V to each sequence's caches),
+    /// and return the final residual stream plus the step geometry. The
+    /// returned buffers are the scratch-owned `x`/`x2`/`hidden` —
+    /// callers apply their vocabulary-head flavor and hand them back.
+    #[allow(clippy::type_complexity)]
+    fn step_trunk<E: TcuEngine + ?Sized>(
+        &self,
+        eng: &E,
+        seqs: &mut [StepSeq<'_>],
+        scratch: &mut AttnScratch,
+    ) -> (Vec<i8>, Vec<i8>, Vec<i8>, Vec<usize>, usize) {
+        let d = self.spec.d_model;
         let rows_per: Vec<usize> = seqs.iter().map(|s| s.tokens.len()).collect();
         let total: usize = rows_per.iter().sum();
         assert!(total > 0, "empty step");
@@ -581,41 +716,7 @@ impl QuantTransformer {
             std::mem::swap(&mut x, &mut x2);
         }
 
-        // Vocabulary head over each sequence's last position, gathered
-        // (into the front of the spare residual buffer) for one shared
-        // GEMM.
-        let nseq = seqs.len();
-        let vocab = self.spec.vocab;
-        let mut row_end = 0usize;
-        for (i, &rows) in rows_per.iter().enumerate() {
-            row_end += rows;
-            x2[i * d..(i + 1) * d].copy_from_slice(&x[(row_end - 1) * d..row_end * d]);
-        }
-        grown(&mut scratch.acc, nseq * vocab, 0i64);
-        super::gemm_weights_b(
-            eng,
-            self.cache.as_deref(),
-            &x2[..nseq * d],
-            &self.head,
-            &mut scratch.acc[..nseq * vocab],
-            nseq,
-            d,
-            vocab,
-        );
-        let logits = (0..nseq)
-            .map(|i| {
-                scratch.acc[i * vocab..(i + 1) * vocab]
-                    .iter()
-                    .map(|&v| v as f32 / 256.0)
-                    .collect()
-            })
-            .collect();
-
-        // Hand the step buffers back for the next step.
-        scratch.x = x;
-        scratch.x2 = x2;
-        scratch.hidden = hidden;
-        logits
+        (x, x2, hidden, rows_per, total)
     }
 
     /// One autoregressive step: process `token` against the warm caches
@@ -808,6 +909,84 @@ mod tests {
                 "chunked prefill diverged for sequence {i}"
             );
         }
+    }
+
+    /// The speculative-verify entry: feeding a token window through
+    /// `forward_step_all_with` yields, at every position, exactly the
+    /// logits sequential greedy decode produces after that position —
+    /// and `truncate` rewinds a partially accepted window exactly.
+    #[test]
+    fn verify_window_logits_match_sequential_decode() {
+        let model = QuantTransformer::tiny_native();
+        let eng = Tcu::new(ArchKind::Array1d2d, 16, Variant::EntOurs).engine();
+        let p = prompt(6);
+
+        // Sequential reference: per-step logits of three greedy steps.
+        let mut caches = model.empty_caches();
+        let c0 = QuantTransformer::argmax(&model.prefill(&eng, &p, &mut caches));
+        let l0 = model.decode(&eng, c0, &mut caches);
+        let t1 = QuantTransformer::argmax(&l0);
+        let l1 = model.decode(&eng, t1, &mut caches);
+        let t2 = QuantTransformer::argmax(&l1);
+        let l2 = model.decode(&eng, t2, &mut caches);
+
+        // Windowed: fresh prefill, then feed [c0, t1, t2] in one
+        // coalesced pass and read the per-position logits.
+        let mut wcaches = model.empty_caches();
+        model.prefill(&eng, &p, &mut wcaches);
+        let window = [c0, t1, t2];
+        let mut scratch = AttnScratch::new();
+        let win = model
+            .forward_step_all_with(
+                &eng,
+                &mut [StepSeq {
+                    tokens: &window,
+                    caches: &mut wcaches,
+                }],
+                &mut scratch,
+            )
+            .pop()
+            .unwrap();
+        assert_eq!(win, vec![l0, l1.clone(), l2]);
+
+        // Rollback: reject everything after the first window position
+        // and re-decode — bit-identical to the sequential step.
+        for c in wcaches.iter_mut() {
+            c.truncate(p.len() + 1);
+        }
+        assert_eq!(model.decode(&eng, t1, &mut wcaches), l1);
+    }
+
+    /// The coalesced verify trace: `k = 1` degenerates to exactly one
+    /// decode step, and the weight traffic of a `k`-row window equals
+    /// one decode step's — not `k` of them. That weight-pass
+    /// amortization (every projection read/encoded once per window
+    /// instead of once per token) is the coalescing win speculation
+    /// banks on; [`crate::soc::energy::spec_verify_cost`] prices it.
+    #[test]
+    fn verify_trace_prices_coalesced_window() {
+        let spec = TransformerSpec::tiny();
+        let kv = 20;
+        assert_eq!(
+            spec.verify_network(1, kv).total_macs(),
+            spec.decode_network(kv).total_macs()
+        );
+        let weight_bytes = |n: &Network| -> u64 {
+            n.layers
+                .iter()
+                .map(|l| match l {
+                    Layer::Gemm { weight_bytes, .. } => *weight_bytes,
+                    _ => 0,
+                })
+                .sum()
+        };
+        let k = 4;
+        let verify = spec.verify_network(k, kv);
+        let decode = spec.decode_network(kv);
+        assert_eq!(weight_bytes(&verify), weight_bytes(&decode));
+        // Same arithmetic as k decode steps at this context, 1/k the
+        // weight traffic.
+        assert_eq!(verify.total_macs(), k as u64 * decode.total_macs());
     }
 
     /// Cache truncation rewinds decode exactly.

@@ -366,11 +366,14 @@ pub fn transformer() -> String {
 /// machine, not the model.
 pub fn serving() -> String {
     use crate::coordinator::{loadgen, Config, Coordinator};
+    // max_new_tokens ≥ 3 keeps the speculative row honest: a request
+    // only drafts while ≥ 2 tokens of budget remain past the carried
+    // one, so shorter decodes would never enter a speculation round.
     let load = loadgen::LoadGen {
         rate_per_s: 150.0,
         duration_ms: 200,
         prompt_len: 8,
-        max_new_tokens: 2,
+        max_new_tokens: 4,
         image_mix: 0.25,
         prefix_zipf: 0.0,
         seed: 0x5EE,
@@ -395,15 +398,27 @@ pub fn serving() -> String {
     let mut cache_lines = String::new();
     for (name, mut cfg) in [
         ("continuous", Config::continuous(4)),
+        ("continuous+spec", Config::continuous(4)),
         ("window", Config::native(4)),
     ] {
         // Both schedulers serve through the encoded-weight cache so the
         // scorecard shows the encode-reuse counters alongside latency.
         cfg.encode_cache_bytes = 4 << 20;
+        if name == "continuous+spec" {
+            // The oracle drafter (target drafting for itself) makes the
+            // acceptance column deterministic: every draft is accepted.
+            cfg.spec_decode = Some(true);
+            cfg.spec_k = 4;
+            cfg.draft = crate::coordinator::DraftKind::Oracle;
+        }
         let coord = match Coordinator::start(cfg) {
             Ok(c) => c,
             Err(e) => return format!("serving report unavailable: {e}\n"),
         };
+        // Snapshot before driving load so every counter line below is a
+        // run-scoped delta, not a coordinator-lifetime total (warmup or
+        // reuse would otherwise inflate the printed numbers).
+        let before = coord.metrics();
         let r = loadgen::run(&coord, &load);
         let (p50, p99) = r
             .latency_us
@@ -421,15 +436,35 @@ pub fn serving() -> String {
         ]);
         let m = coord.metrics();
         if let Some(cs) = m.encode_cache {
+            let (bh, bm, be) = before
+                .encode_cache
+                .map(|b| (b.hits, b.misses, b.evictions))
+                .unwrap_or((0, 0, 0));
             cache_lines.push_str(&format!(
-                "encode cache ({name}): {} hits / {} misses / {} evictions — weights encoded once, reused by every step\n",
-                cs.hits, cs.misses, cs.evictions
+                "encode cache ({name}): {} hits / {} misses / {} evictions this run — weights encoded once, reused by every step\n",
+                cs.hits.saturating_sub(bh),
+                cs.misses.saturating_sub(bm),
+                cs.evictions.saturating_sub(be)
             ));
         }
-        if m.kv_rows_encoded + m.kv_rows_reused > 0 {
+        let kv_enc = m.kv_rows_encoded.saturating_sub(before.kv_rows_encoded);
+        let kv_reused = m.kv_rows_reused.saturating_sub(before.kv_rows_reused);
+        if kv_enc + kv_reused > 0 {
             cache_lines.push_str(&format!(
-                "kv prepack ({name}): {} rows freshly encoded / {} cached rows reused — decode re-encodes only the appended delta\n",
-                m.kv_rows_encoded, m.kv_rows_reused
+                "kv prepack ({name}): {kv_enc} rows freshly encoded / {kv_reused} cached rows reused this run — decode re-encodes only the appended delta\n",
+            ));
+        }
+        let rounds = m.spec_rounds.saturating_sub(before.spec_rounds);
+        if rounds > 0 {
+            let drafted = m.spec_drafted.saturating_sub(before.spec_drafted);
+            let accepted = m.spec_accepted.saturating_sub(before.spec_accepted);
+            cache_lines.push_str(&format!(
+                "speculation ({name}): {rounds} rounds, {accepted}/{drafted} drafts accepted ({:.0}% acceptance) this run\n",
+                if drafted == 0 {
+                    0.0
+                } else {
+                    100.0 * accepted as f64 / drafted as f64
+                }
             ));
         }
         coord.shutdown();
@@ -512,6 +547,12 @@ mod tests {
         assert!(s.contains("hits"), "{s}");
         // The continuous scheduler serves with kv-prepack on by default.
         assert!(s.contains("kv prepack (continuous)"), "{s}");
+        // Counter lines are run-scoped deltas, not lifetime totals.
+        assert!(s.contains("this run"), "{s}");
+        // The speculative row reports deterministic oracle acceptance.
+        assert!(s.contains("continuous+spec"), "{s}");
+        assert!(s.contains("speculation (continuous+spec)"), "{s}");
+        assert!(s.contains("100% acceptance"), "{s}");
     }
 
     #[test]

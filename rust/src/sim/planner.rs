@@ -408,6 +408,44 @@ mod tests {
         }
     }
 
+    /// Speculative-verify coalescing through the planner: a weight GEMM
+    /// carrying `rows` token positions on N (the coalesced verify
+    /// window) streams the stationary M×K weights — and their encoder
+    /// pass — **once**, where `rows` single-position decode GEMMs pay
+    /// them once each; activation traffic, outputs, and MACs scale with
+    /// rows either way, so the window's cycles land well under the
+    /// sequential schedule's.
+    #[test]
+    fn coalesced_rows_amortize_weight_and_encode_passes() {
+        let rows = 4u64;
+        for kind in [ArchKind::Matrix2d, ArchKind::SystolicOs] {
+            let win = plan(kind, 8, 64, 32, rows as usize).stats();
+            let one = plan(kind, 8, 64, 32, 1).stats();
+            assert_eq!(
+                win.a_reads,
+                one.a_reads,
+                "{}: weights stream once per pass, not once per row",
+                kind.name()
+            );
+            assert_eq!(
+                win.encodes,
+                one.encodes,
+                "{}: the weight encoder pass amortizes across the window",
+                kind.name()
+            );
+            assert_eq!(win.b_reads, rows * one.b_reads, "{}", kind.name());
+            assert_eq!(win.c_writes, rows * one.c_writes, "{}", kind.name());
+            assert_eq!(win.macs, rows * one.macs, "{}", kind.name());
+            assert!(
+                win.cycles < rows * one.cycles,
+                "{}: coalesced window {} cycles vs sequential {}",
+                kind.name(),
+                win.cycles,
+                rows * one.cycles
+            );
+        }
+    }
+
     /// The plan's tile extents respect the per-arch capacities and cover
     /// the problem.
     #[test]

@@ -290,6 +290,70 @@ fn layer_energy(soc: &Soc, layer: &Layer, opts: EnergyOpts) -> FrameEnergy {
     e
 }
 
+/// What one speculative-decoding verify round costs, priced by
+/// [`spec_verify_cost`].
+#[derive(Clone, Copy, Debug)]
+pub struct SpecVerifyCost {
+    /// The coalesced k-row verify pass
+    /// ([`verify_network`](crate::nn::transformer::TransformerSpec::verify_network)).
+    pub verify: FrameEnergy,
+    /// The same k token positions decoded one step at a time
+    /// (`decode_network` at contexts `kv−k+1 ..= kv`, summed).
+    pub sequential: FrameEnergy,
+    /// `verify / sequential` total energy (< 1 when coalescing wins —
+    /// the weight operands stream through the buffers once per pass
+    /// instead of once per token).
+    pub energy_ratio: f64,
+    /// Per-row share of the verify pass spent on positions that
+    /// verification rejected: a window of `k` rows yields `accepted + 1`
+    /// useful tokens (the accepted drafts plus the bonus token from the
+    /// accept-point logits), so `(k − accepted − 1) / k` of the pass was
+    /// wasted work the sequential schedule would never have done.
+    pub wasted_fraction: f64,
+    /// `wasted_fraction` × the verify pass's total energy, picojoules.
+    pub wasted_pj: f64,
+}
+
+/// Price one speculation round: a coalesced `k`-row verify pass ending
+/// at context `kv`, of which `accepted` drafted tokens survived
+/// greedy verification, against `k` sequential single-token decode
+/// steps over the same positions. The verify pass does (almost) the
+/// same arithmetic — each window row prices the full `kv` attention
+/// extent, a slight causal over-charge — but streams every weight
+/// matrix once instead of `k` times, which is where the energy and
+/// latency win lives; rejection turns part of that cheap pass into
+/// wasted work, quantified per-row in
+/// [`SpecVerifyCost::wasted_fraction`].
+pub fn spec_verify_cost(
+    soc: &Soc,
+    spec: &crate::nn::transformer::TransformerSpec,
+    k: usize,
+    kv: usize,
+    accepted: usize,
+    opts: EnergyOpts,
+) -> SpecVerifyCost {
+    assert!(k >= 1 && kv >= k, "verify window must fit its context");
+    assert!(
+        accepted < k,
+        "a k-row window carries at most k-1 drafted tokens"
+    );
+    let (verify, _) = frame_energy_with(soc, &spec.verify_network(k, kv), opts);
+    let mut sequential = FrameEnergy::default();
+    for i in 0..k {
+        let (e, _) = frame_energy_with(soc, &spec.decode_network(kv - k + 1 + i), opts);
+        accumulate(&mut sequential, &e);
+    }
+    let energy_ratio = verify.total_pj() / sequential.total_pj();
+    let wasted_fraction = (k - accepted - 1) as f64 / k as f64;
+    SpecVerifyCost {
+        verify,
+        sequential,
+        energy_ratio,
+        wasted_fraction,
+        wasted_pj: wasted_fraction * verify.total_pj(),
+    }
+}
+
 /// Fig 11's headline number: fractional energy reduction of EN-T(Ours)
 /// vs baseline on one network.
 pub fn reduction_ratio(kind: crate::arch::ArchKind, net: &Network) -> f64 {
@@ -457,6 +521,50 @@ mod tests {
         assert_eq!(full.macs, dec.macs);
         assert_eq!(full.encodes, dec.encodes);
         assert_eq!(full.total_pj(), dec.total_pj());
+    }
+
+    /// Coalesced-verify economics: one k-row verify pass streams each
+    /// weight matrix once where k sequential decode steps stream it k
+    /// times, so the pass costs strictly less energy and fewer busy
+    /// cycles; k = 1 degenerates to exactly one decode step; and the
+    /// per-row waste proration spans 0 (full accept) to (k−1)/k (full
+    /// reject).
+    #[test]
+    fn coalesced_verify_beats_sequential_decode() {
+        use crate::nn::transformer::TransformerSpec;
+        let spec = TransformerSpec::tiny();
+        let soc = Soc::paper_config(ArchKind::SystolicOs, Variant::EntOurs);
+        let opts = EnergyOpts::default();
+        let c = spec_verify_cost(&soc, &spec, 4, 12, 3, opts);
+        assert!(
+            c.verify.total_pj() < c.sequential.total_pj(),
+            "coalesced verify {} pJ must undercut sequential {} pJ",
+            c.verify.total_pj(),
+            c.sequential.total_pj()
+        );
+        assert!(c.energy_ratio < 1.0);
+        assert!(c.verify.cycles < c.sequential.cycles);
+        assert!(
+            c.verify.sram_read_pj < c.sequential.sram_read_pj,
+            "the win is weight streaming: one pass per window, not per token"
+        );
+        assert_eq!(c.wasted_fraction, 0.0, "fully accepted round wastes nothing");
+        assert_eq!(c.wasted_pj, 0.0);
+
+        // k = 1 is a plain decode step — identical trace, identical price.
+        let one = spec_verify_cost(&soc, &spec, 1, 12, 0, opts);
+        assert_eq!(one.verify.total_pj(), one.sequential.total_pj());
+        assert_eq!(one.verify.macs, one.sequential.macs);
+        assert_eq!(one.energy_ratio, 1.0);
+        assert_eq!(one.wasted_fraction, 0.0);
+
+        // Full rejection: 3 of 4 window rows were wasted work.
+        let worst = spec_verify_cost(&soc, &spec, 4, 12, 0, opts);
+        assert!((worst.wasted_fraction - 0.75).abs() < 1e-12);
+        assert!(worst.wasted_pj > 0.0);
+        // Even then the pass itself stays cheaper than the sequential
+        // schedule — rejection costs opportunity, not extra energy.
+        assert!(worst.verify.total_pj() < worst.sequential.total_pj());
     }
 
     #[test]

@@ -72,3 +72,25 @@ fn subcommand_help_exits_zero() {
         assert!(text.contains("options"), "ent {cmd} --help: {text}");
     }
 }
+
+/// The speculative-decoding flags are documented on both serving
+/// subcommands, with the on|off contract spelled out.
+#[test]
+fn serving_help_documents_speculation_flags() {
+    for cmd in ["serve", "loadgen"] {
+        let (ok, text) = run_ent(&[cmd, "--help"]);
+        assert!(ok, "ent {cmd} --help must exit 0");
+        assert!(
+            text.contains("spec-decode"),
+            "ent {cmd} --help is missing --spec-decode:\n{text}"
+        );
+        assert!(
+            text.contains("spec-k"),
+            "ent {cmd} --help is missing --spec-k:\n{text}"
+        );
+        assert!(
+            text.contains("on|off"),
+            "ent {cmd} --help must state the on|off contract:\n{text}"
+        );
+    }
+}

@@ -8,7 +8,8 @@
 //! starvation and results identical to isolated runs.
 
 use ent::arch::{ArchKind, Tcu};
-use ent::coordinator::{Config, Coordinator, InferRequest, TokenRequest};
+use ent::coordinator::batcher::ContinuousPolicy;
+use ent::coordinator::{Config, Coordinator, DraftKind, InferRequest, ServeMode, TokenRequest};
 use ent::nn::forward::QuantCnn;
 use ent::nn::transformer::QuantTransformer;
 use ent::pe::Variant;
@@ -182,6 +183,144 @@ fn continuous_mixed_traffic_fair_and_identical_to_isolated() {
     assert_eq!(m.errors, 0);
     assert_eq!(m.rejected, 0, "default admission bounds must not starve");
     assert!(m.tokens > 0);
+    coord.shutdown();
+}
+
+/// Speculative decoding under an exact decode budget: whatever shape
+/// the accepted windows take (an 8-wide oracle window accepts
+/// everything it drafts), a request must emit *exactly* `max_new`
+/// tokens — the drafting clamp keeps accepted drafts + the bonus token
+/// inside the budget, with no clipping at resolve time — and the
+/// stream must stay bit-identical to sequential decode for every
+/// budget, including the no-speculation edges 1 and 2.
+#[test]
+fn speculation_respects_exact_decode_budget() {
+    let model = QuantTransformer::tiny_native();
+    let eng = Tcu::new(ArchKind::SystolicOs, 16, Variant::EntOurs).engine();
+    let p: Vec<u16> = (0..6).map(|i| ((i * 5 + 3) % 64) as u16).collect();
+    for max_new in 1..=5usize {
+        let mut cfg = Config::continuous(2);
+        cfg.twin_arch = ArchKind::SystolicOs;
+        cfg.spec_decode = Some(true);
+        cfg.spec_k = 8;
+        cfg.draft = DraftKind::Oracle;
+        let coord = Coordinator::start(cfg).expect("speculative coordinator");
+        let r = coord
+            .infer_tokens(TokenRequest::generate(p.clone(), max_new))
+            .expect("generation");
+        let m = coord.metrics();
+        coord.shutdown();
+        assert_eq!(
+            r.generated.len(),
+            max_new,
+            "speculation must emit exactly the budget at max_new={max_new}"
+        );
+        let (want_logits, want_gen) = model.generate(&eng, &p, max_new);
+        assert_eq!(r.generated, want_gen, "max_new={max_new}");
+        assert_eq!(r.logits, want_logits, "max_new={max_new}");
+        if max_new >= 3 {
+            assert!(m.spec_rounds > 0, "budget {max_new} must speculate");
+        } else {
+            // One carried token (or none) past the prompt leaves no
+            // room to draft: short budgets never enter a round.
+            assert_eq!(m.spec_rounds, 0, "budget {max_new} must not speculate");
+        }
+    }
+}
+
+/// Admission deadlines keep expiring while in-flight sequences burn
+/// steps on speculation rounds: stragglers queued behind a single
+/// speculating decode slot exceed a 1 µs deadline and are rejected
+/// with the standard error, while anything that was admitted resolves
+/// bit-exactly.
+#[test]
+fn deadline_expiry_during_speculation_rejects_pending_stragglers() {
+    let model = QuantTransformer::tiny_native();
+    let eng = Tcu::new(ArchKind::SystolicOs, 16, Variant::EntOurs).engine();
+    let p: Vec<u16> = (0..12).map(|i| ((i * 7 + 3) % 64) as u16).collect();
+    let (want_logits, want_gen) = model.generate(&eng, &p, 4);
+    let mut cfg = Config::continuous(1);
+    cfg.twin_arch = ArchKind::SystolicOs;
+    cfg.mode = ServeMode::Continuous(ContinuousPolicy {
+        max_inflight: 1,
+        deadline_us: 1,
+        ..ContinuousPolicy::default()
+    });
+    cfg.spec_decode = Some(true);
+    cfg.spec_k = 4;
+    cfg.draft = DraftKind::Oracle;
+    let coord = Coordinator::start(cfg).expect("speculative coordinator");
+    let receivers: Vec<_> = (0..6)
+        .map(|_| coord.submit_tokens(TokenRequest::generate(p.clone(), 4)))
+        .collect();
+    let mut done = 0u32;
+    let mut expired = 0u32;
+    for rx in receivers {
+        match rx.recv().expect("response") {
+            Ok(r) => {
+                assert_eq!(r.generated, want_gen, "admitted request diverged");
+                assert_eq!(r.logits, want_logits, "admitted request diverged");
+                done += 1;
+            }
+            Err(e) => {
+                assert!(e.contains("deadline exceeded"), "{e}");
+                expired += 1;
+            }
+        }
+    }
+    assert_eq!(done + expired, 6);
+    assert!(expired >= 2, "1 µs deadline must expire queued stragglers");
+    assert_eq!(coord.metrics().errors, 0);
+    coord.shutdown();
+}
+
+/// Queue-full admission while speculation is in flight: backpressure
+/// is decided on pending + in-flight counts before any drafting
+/// happens, so a 12-burst against queue cap 2 sheds load exactly as
+/// without speculation — and every admitted request still returns the
+/// sequential stream.
+#[test]
+fn backpressure_during_speculation_sheds_load_without_corruption() {
+    let model = QuantTransformer::tiny_native();
+    let eng = Tcu::new(ArchKind::SystolicOs, 16, Variant::EntOurs).engine();
+    let p: Vec<u16> = (0..8).map(|i| ((i * 7 + 3) % 64) as u16).collect();
+    let (want_logits, want_gen) = model.generate(&eng, &p, 3);
+    let mut cfg = Config::continuous(1);
+    cfg.twin_arch = ArchKind::SystolicOs;
+    cfg.mode = ServeMode::Continuous(ContinuousPolicy {
+        queue_cap: 2,
+        max_inflight: 1,
+        ..ContinuousPolicy::default()
+    });
+    cfg.spec_decode = Some(true);
+    cfg.spec_k = 4;
+    cfg.draft = DraftKind::Oracle;
+    let coord = Coordinator::start(cfg).expect("speculative coordinator");
+    let receivers: Vec<_> = (0..12)
+        .map(|_| coord.submit_tokens(TokenRequest::generate(p.clone(), 3)))
+        .collect();
+    let mut ok = 0u32;
+    let mut rejected = 0u32;
+    for rx in receivers {
+        match rx.recv().expect("response") {
+            Ok(r) => {
+                assert_eq!(r.generated, want_gen, "admitted request diverged");
+                assert_eq!(r.logits, want_logits, "admitted request diverged");
+                ok += 1;
+            }
+            Err(e) => {
+                assert!(e.contains("backpressure"), "{e}");
+                rejected += 1;
+            }
+        }
+    }
+    assert_eq!(ok + rejected, 12);
+    assert!(rejected >= 1, "queue cap 2 must reject part of a 12-burst");
+    assert!(ok >= 1, "admitted requests must still complete");
+    let m = coord.metrics();
+    assert_eq!(m.errors, 0);
+    assert!(m.rejected >= rejected as u64);
+    assert!(m.spec_rounds > 0, "admitted sequences speculated");
     coord.shutdown();
 }
 

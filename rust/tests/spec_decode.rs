@@ -1,0 +1,275 @@
+//! The speculative-decoding acceptance grid: drafting `k − 1` tokens
+//! ahead and verifying the window in one coalesced multi-row pass must
+//! be **observationally invisible** — logits and generated tokens
+//! bit-identical to plain sequential greedy decode — across all five
+//! TCU architectures, all three PE variants, every window size, and
+//! both forced-acceptance (oracle) and forced-rejection (anti-oracle)
+//! draft stubs. Greedy speculative decoding is exact by construction:
+//! every emitted token is the target's argmax given exactly the tokens
+//! before it, whether that argmax came from a verified draft, the
+//! accept-point bonus row, or a plain decode step — these tests lock
+//! the construction against the scheduler's bookkeeping (rollback via
+//! `KvCache::truncate`, chunked prefill, shared prefix blocks).
+
+use ent::arch::{ArchKind, Tcu, ALL_ARCHS};
+use ent::coordinator::batcher::ContinuousPolicy;
+use ent::coordinator::{Config, Coordinator, DraftKind, ServeMode, TokenRequest};
+use ent::nn::transformer::QuantTransformer;
+use ent::pe::Variant;
+
+fn prompt(len: usize, salt: usize) -> Vec<u16> {
+    (0..len).map(|i| ((i * 11 + salt * 17 + 2) % 64) as u16).collect()
+}
+
+/// Sequential ground truth on one engine of the native shard geometry
+/// (size 16; cube edge 8) — the same reference `serve_equivalence.rs`
+/// holds the non-speculative scheduler to.
+fn sequential(
+    arch: ArchKind,
+    variant: Variant,
+    tokens: &[u16],
+    max_new: usize,
+) -> (Vec<f32>, Vec<u16>) {
+    let model = QuantTransformer::tiny_native();
+    let size = if arch == ArchKind::Cube3d { 8 } else { 16 };
+    let eng = Tcu::new(arch, size, variant).engine();
+    model.generate(&eng, tokens, max_new)
+}
+
+/// A speculative continuous coordinator: small prefill chunk (prompts
+/// force-chunked into mixed prefill/decode steps), speculation on with
+/// the given window and drafter.
+fn spec_coordinator(
+    arch: ArchKind,
+    variant: Variant,
+    k: usize,
+    kind: DraftKind,
+) -> Coordinator {
+    let mut cfg = Config::continuous(2);
+    cfg.twin_arch = arch;
+    cfg.twin_variant = variant;
+    cfg.mode = ServeMode::Continuous(ContinuousPolicy {
+        prefill_chunk: 3,
+        ..ContinuousPolicy::default()
+    });
+    cfg.spec_decode = Some(true);
+    cfg.spec_k = k;
+    cfg.draft = kind;
+    Coordinator::start(cfg).expect("speculative continuous coordinator")
+}
+
+/// Submit the mixed request set, check every response bit-for-bit
+/// against sequential greedy decode, and return the coordinator for
+/// counter assertions.
+fn assert_equivalent(
+    coord: &Coordinator,
+    arch: ArchKind,
+    variant: Variant,
+    requests: &[(usize, usize)],
+    label: &str,
+) {
+    let expected: Vec<_> = requests
+        .iter()
+        .enumerate()
+        .map(|(salt, &(plen, gen))| sequential(arch, variant, &prompt(plen, salt), gen))
+        .collect();
+    // Everything up front, so speculation rounds of different sequences
+    // coalesce into shared verify steps.
+    let rxs: Vec<_> = requests
+        .iter()
+        .enumerate()
+        .map(|(salt, &(plen, gen))| {
+            coord.submit_tokens(TokenRequest::generate(prompt(plen, salt), gen))
+        })
+        .collect();
+    for (i, (rx, (want_logits, want_gen))) in rxs.into_iter().zip(&expected).enumerate() {
+        let r = rx
+            .recv()
+            .expect("scheduler alive")
+            .unwrap_or_else(|e| panic!("{label} request {i}: {e}"));
+        assert_eq!(
+            &r.logits, want_logits,
+            "{label} request {i}: speculative logits diverged"
+        );
+        assert_eq!(
+            &r.generated, want_gen,
+            "{label} request {i}: speculative generation diverged"
+        );
+    }
+}
+
+/// The tentpole grid: every architecture × every PE variant, k = 4,
+/// realistic tiny drafter (its drafts genuinely hit and miss), mixed
+/// prompt/decode budgets. Speculative serving must be bit-identical to
+/// sequential greedy decode, reject nothing, and keep the token
+/// accounting invariant (prompt + generated positions per request,
+/// counted exactly once — accepted drafts included, rolled-back
+/// drafts excluded).
+#[test]
+fn speculative_decode_bit_identical_to_sequential_grid() {
+    let requests: [(usize, usize); 4] = [(5, 3), (8, 4), (3, 6), (7, 0)];
+    for arch in ALL_ARCHS {
+        for variant in [Variant::Baseline, Variant::EntMbe, Variant::EntOurs] {
+            let label = format!("{}/{}", arch.name(), variant.name());
+            let coord = spec_coordinator(arch, variant, 4, DraftKind::Tiny);
+            assert_equivalent(&coord, arch, variant, &requests, &label);
+            let m = coord.metrics();
+            assert_eq!(m.errors, 0, "{label}");
+            assert_eq!(m.requests, requests.len() as u64, "{label}");
+            let want_tokens: usize = requests.iter().map(|&(p, g)| p + g).sum();
+            assert_eq!(
+                m.tokens, want_tokens as u64,
+                "{label}: speculation must not distort token accounting"
+            );
+            assert!(
+                m.spec_rounds > 0,
+                "{label}: decode budgets ≥ 3 must enter speculation rounds"
+            );
+            assert!(m.spec_accepted <= m.spec_drafted, "{label}");
+            coord.shutdown();
+        }
+    }
+}
+
+/// Window-size sweep × draft stubs on one architecture. The oracle
+/// drafter (the target model drafting for itself) forces full
+/// acceptance — incremental-KV drafting and cold-prefill verification
+/// are bit-identical, so every draft survives; the anti-oracle
+/// (target argmax displaced by one) forces full rejection, so every
+/// round rolls its whole window back and progress degrades to one
+/// bonus token per round. Both extremes — and the realistic drafter in
+/// between — must still emit exactly the sequential stream.
+#[test]
+fn window_sweep_with_forced_acceptance_and_rejection_stubs() {
+    let arch = ArchKind::SystolicOs;
+    let variant = Variant::EntOurs;
+    let requests: [(usize, usize); 3] = [(5, 5), (9, 3), (4, 7)];
+    for k in [1usize, 2, 4, 8] {
+        for kind in [DraftKind::Tiny, DraftKind::Oracle, DraftKind::AntiOracle] {
+            let label = format!("k={k} {kind:?}");
+            let coord = spec_coordinator(arch, variant, k, kind);
+            assert_equivalent(&coord, arch, variant, &requests, &label);
+            let m = coord.metrics();
+            assert_eq!(m.errors, 0, "{label}");
+            let want_tokens: usize = requests.iter().map(|&(p, g)| p + g).sum();
+            assert_eq!(m.tokens, want_tokens as u64, "{label}");
+            if k == 1 {
+                // A 1-row window carries no drafts: spec-k 1 ≡ off.
+                assert_eq!(m.spec_rounds, 0, "{label}: k=1 must never draft");
+                assert_eq!(m.spec_drafted, 0, "{label}");
+            } else {
+                assert!(m.spec_drafted > 0, "{label}: rounds must draft");
+                match kind {
+                    DraftKind::Oracle => assert_eq!(
+                        m.spec_accepted, m.spec_drafted,
+                        "{label}: oracle drafts must all be accepted"
+                    ),
+                    DraftKind::AntiOracle => assert_eq!(
+                        m.spec_accepted, 0,
+                        "{label}: anti-oracle drafts must all be rejected"
+                    ),
+                    DraftKind::Tiny => {
+                        assert!(m.spec_accepted <= m.spec_drafted, "{label}")
+                    }
+                }
+            }
+            coord.shutdown();
+        }
+    }
+}
+
+/// Speculation × KV-reuse toggles: rollback via `KvCache::truncate`
+/// must compose with the `PackedCode` sidecar (kv-prepack) and with
+/// copy-on-write prefix blocks shared across requests (prefix-share) —
+/// duplicate prompts adopt pool blocks, then speculative rejection
+/// truncates and re-appends over them, forcing the COW fork path while
+/// another request still holds the donor blocks.
+#[test]
+fn speculation_composes_with_prefix_share_and_kv_prepack() {
+    let arch = ArchKind::SystolicOs;
+    let variant = Variant::EntOurs;
+    let shared = prompt(9, 2);
+    let expected_shared = sequential(arch, variant, &shared, 5);
+    let other = prompt(4, 7);
+    let expected_other = sequential(arch, variant, &other, 3);
+    for (share, prepack) in [(true, true), (true, false), (false, true), (false, false)] {
+        // The anti-oracle maximizes rollback churn over the shared blocks.
+        for kind in [DraftKind::Oracle, DraftKind::AntiOracle] {
+            let label = format!("share={share} prepack={prepack} {kind:?}");
+            let mut cfg = Config::continuous(2);
+            cfg.twin_arch = arch;
+            cfg.twin_variant = variant;
+            cfg.mode = ServeMode::Continuous(ContinuousPolicy {
+                prefill_chunk: 3,
+                ..ContinuousPolicy::default()
+            });
+            cfg.spec_decode = Some(true);
+            cfg.spec_k = 4;
+            cfg.draft = kind;
+            cfg.prefix_share = Some(share);
+            cfg.kv_prepack = Some(prepack);
+            let coord = Coordinator::start(cfg).expect("speculative coordinator");
+            let rxs: Vec<_> = [
+                TokenRequest::generate(shared.clone(), 5),
+                TokenRequest::generate(shared.clone(), 5),
+                TokenRequest::generate(other.clone(), 3),
+            ]
+            .into_iter()
+            .map(|req| coord.submit_tokens(req))
+            .collect();
+            let wants = [&expected_shared, &expected_shared, &expected_other];
+            for (i, (rx, want)) in rxs.into_iter().zip(wants).enumerate() {
+                let r = rx
+                    .recv()
+                    .expect("scheduler alive")
+                    .unwrap_or_else(|e| panic!("{label} request {i}: {e}"));
+                assert_eq!(&r.logits, &want.0, "{label} request {i}: logits diverged");
+                assert_eq!(&r.generated, &want.1, "{label} request {i}: tokens diverged");
+            }
+            let m = coord.metrics();
+            assert_eq!(m.errors, 0, "{label}");
+            assert_eq!(m.tokens, (9 + 5 + 9 + 5 + 4 + 3) as u64, "{label}");
+            assert!(m.spec_rounds > 0, "{label}: speculation must engage");
+            coord.shutdown();
+        }
+    }
+}
+
+/// Speculation leaves the non-token path alone, and a spec-enabled
+/// coordinator with `spec_k` clamped to 1 behaves exactly like a
+/// spec-off coordinator (same results, zero rounds) — the off-contrast
+/// the bench gate quotes.
+#[test]
+fn spec_off_and_spec_k1_agree_with_spec_on() {
+    let arch = ArchKind::Matrix2d;
+    let variant = Variant::EntOurs;
+    let toks = prompt(6, 9);
+    let run = |spec: Option<bool>, k: usize| {
+        let mut cfg = Config::continuous(2);
+        cfg.twin_arch = arch;
+        cfg.twin_variant = variant;
+        cfg.spec_decode = spec;
+        cfg.spec_k = k;
+        cfg.draft = DraftKind::Tiny;
+        let coord = Coordinator::start(cfg).expect("coordinator");
+        let r = coord
+            .infer_tokens(TokenRequest::generate(toks.clone(), 4))
+            .expect("generation");
+        let m = coord.metrics();
+        coord.shutdown();
+        (r.logits, r.generated, m.spec_rounds)
+    };
+    let (off_logits, off_gen, off_rounds) = run(None, 4);
+    let (on_logits, on_gen, on_rounds) = run(Some(true), 4);
+    let (k1_logits, k1_gen, k1_rounds) = run(Some(true), 1);
+    assert_eq!(off_rounds, 0, "default is off");
+    assert_eq!(k1_rounds, 0, "k=1 never drafts");
+    assert!(on_rounds > 0, "spec on with budget 4 must draft");
+    assert_eq!(off_logits, on_logits);
+    assert_eq!(off_gen, on_gen);
+    assert_eq!(off_logits, k1_logits);
+    assert_eq!(off_gen, k1_gen);
+    let (want_logits, want_gen) = sequential(arch, variant, &toks, 4);
+    assert_eq!(on_logits, want_logits);
+    assert_eq!(on_gen, want_gen);
+}
