@@ -148,7 +148,8 @@ fn main() {
         });
         let direct_ns = direct.ns_per_iter.mean;
 
-        let coord = Coordinator::start(Config::native(4)).expect("native coordinator");
+        let cfg = Config::builder().native(4).build().expect("config");
+        let coord = Coordinator::start(cfg).expect("native coordinator");
         let rr = suite.bench("coordinator_native_round_trip", || {
             black_box(
                 coord

@@ -12,7 +12,7 @@
 //! submission window for CI smoke runs.
 
 use ent::coordinator::loadgen::{self, LoadGen};
-use ent::coordinator::{Config, Coordinator, DraftKind};
+use ent::coordinator::{Config, Coordinator, DraftKind, Spec};
 use ent::util::bench::header;
 use ent::util::json::Json;
 
@@ -37,8 +37,12 @@ fn main() {
     // (acceptance_rate exactly 1.0, machine-independent, so the gate
     // can hold the line on it) and `continuous_spec_off` is the same
     // load without speculation, quoting the coalesced-verify tokens/s
-    // contrast.
-    let cases: [(&str, f64, f64, f64); 10] = [
+    // contrast. The `_mt` pair is the multi-tenant SLO scorecard:
+    // three Zipf tenants with bursty arrivals against a 250 ms
+    // deadline, once on a 2+2 disaggregated pool split (`pools_mt`)
+    // and once on the unified 4-shard scheduler (`continuous_mt`) —
+    // p99 TTFT and goodput under deadline are the gated fields.
+    let cases: [(&str, f64, f64, f64); 12] = [
         ("continuous", 100.0, 0.0, 0.0),
         ("continuous_nopp", 100.0, 0.0, 0.0),
         ("continuous", 300.0, 0.0, 0.0),
@@ -49,32 +53,28 @@ fn main() {
         ("continuous_zipf_noshare", 400.0, 0.0, 1.1),
         ("continuous_spec", 400.0, 0.0, 0.0),
         ("continuous_spec_off", 400.0, 0.0, 0.0),
+        ("pools_mt", 400.0, 0.0, 1.1),
+        ("continuous_mt", 400.0, 0.0, 1.1),
     ];
     for (scheduler, rate, mix, zipf) in cases {
         let cfg = match scheduler {
-            "continuous" | "continuous_zipf" | "continuous_spec_off" => {
-                Config::continuous(SHARDS)
+            "continuous" | "continuous_zipf" | "continuous_spec_off" | "continuous_mt" => {
+                Config::builder().continuous(SHARDS).build()
             }
-            "continuous_nopp" => {
-                let mut c = Config::continuous(SHARDS);
-                c.kv_prepack = Some(false);
-                c
-            }
+            "continuous_nopp" => Config::builder().continuous(SHARDS).kv_prepack(false).build(),
             "continuous_zipf_noshare" => {
-                let mut c = Config::continuous(SHARDS);
-                c.prefix_share = Some(false);
-                c
+                Config::builder().continuous(SHARDS).prefix_share(false).build()
             }
-            "continuous_spec" => {
-                let mut c = Config::continuous(SHARDS);
-                c.spec_decode = Some(true);
-                c.spec_k = 4;
-                c.draft = DraftKind::Oracle;
-                c
-            }
-            _ => Config::native(SHARDS),
-        };
+            "continuous_spec" => Config::builder()
+                .continuous(SHARDS)
+                .speculation(Spec::On { k: 4, draft: DraftKind::Oracle })
+                .build(),
+            "pools_mt" => Config::builder().pools(SHARDS / 2, SHARDS / 2).build(),
+            _ => Config::builder().native(SHARDS).build(),
+        }
+        .expect("serving config");
         let coord = Coordinator::start(cfg).expect("coordinator");
+        let mt = scheduler.ends_with("_mt");
         let load = LoadGen {
             rate_per_s: rate,
             duration_ms,
@@ -83,6 +83,9 @@ fn main() {
             image_mix: mix,
             prefix_zipf: zipf,
             seed: 0xBE7C,
+            tenants: if mt { 3 } else { 1 },
+            burst: if mt { 3.0 } else { 1.0 },
+            slo_ms: if mt { 250.0 } else { 0.0 },
         };
         let r = loadgen::run(&coord, &load);
         let m = coord.metrics();
@@ -117,6 +120,9 @@ fn main() {
         // history entered the GEMMs pre-encoded.
         fields.push(("kv_rows_encoded", Json::num(m.kv_rows_encoded as f64)));
         fields.push(("kv_rows_reused", Json::num(m.kv_rows_reused as f64)));
+        // Disaggregation context (ungated): prefill→decode handoffs
+        // completed — 0 everywhere except the pooled rows.
+        fields.push(("handoffs", Json::num(m.handoffs as f64)));
         rows.push(Json::obj(fields));
     }
 

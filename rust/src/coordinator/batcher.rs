@@ -19,7 +19,11 @@
 //! none of these knobs: drafted verify windows ride the same step loop,
 //! and admission/backpressure/deadline decisions are taken before any
 //! drafting happens, so the policy's guarantees hold with speculation
-//! on or off.
+//! on or off. The same knobs govern **disaggregated pools**
+//! (`Config::pools`): admission and backpressure sit in front of the
+//! prefill pool, `max_inflight` counts sequences across both pools, and
+//! the deadline additionally covers a sequence parked mid-handoff
+//! between its prefill and its first decode step.
 
 use super::ModelSpec;
 

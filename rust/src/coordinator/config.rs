@@ -1,0 +1,489 @@
+//! Coordinator configuration — the typed builder and its validation.
+//!
+//! The serving surface accreted one flat knob per PR (continuous mode,
+//! encode cache, kv-prepack, prefix sharing, speculation, …), and the
+//! incompatible combinations were only caught deep inside the executor
+//! thread, if at all. [`Config::builder`] replaces that with a typed
+//! builder whose [`ConfigBuilder::build`] validates the whole
+//! configuration at construction:
+//!
+//! ```
+//! use ent::coordinator::{Config, Spec};
+//! use ent::coordinator::DraftKind;
+//!
+//! let cfg = Config::builder()
+//!     .pools(1, 1)
+//!     .speculation(Spec::On { k: 4, draft: DraftKind::Oracle })
+//!     .build()
+//!     .expect("valid serving config");
+//! assert!(cfg.pools.is_some());
+//!
+//! // Incompatible combinations fail at build time, not mid-serve:
+//! assert!(Config::builder()
+//!     .native(2) // window scheduling
+//!     .speculation(Spec::On { k: 4, draft: DraftKind::Tiny })
+//!     .build()
+//!     .is_err());
+//! ```
+//!
+//! The old flat constructors ([`Config::native`], [`Config::continuous`])
+//! remain as deprecated shims for one release; they produce exactly what
+//! the equivalent builder chain produces.
+
+use std::path::PathBuf;
+
+use super::batcher::{BatchPolicy, ContinuousPolicy};
+use super::{Backend, DraftKind, ModelSpec, ServeMode};
+use crate::arch::ArchKind;
+use crate::pe::Variant;
+use crate::util::error::Result;
+
+/// Speculative-decoding choice for [`ConfigBuilder::speculation`]: off,
+/// or on with an explicit window and drafter — the two knobs that were
+/// previously three loose `Config` fields.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Spec {
+    /// Plain greedy decode (the default).
+    Off,
+    /// Draft → coalesced verify → rollback with a `k`-token window
+    /// (1 carried token + up to `k − 1` drafts per round).
+    On { k: usize, draft: DraftKind },
+}
+
+/// Disaggregated engine-pool split: `prefill` shards run prompt prefill
+/// (and CNN batches), `decode` shards run pinned per-slot decode.
+/// Sequences hand off between the pools by moving their paged
+/// `KvBlock` Arcs + `PackedCode` sidecars — nothing re-encodes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PoolSplit {
+    /// Engine shards owned by the prefill-heavy pool (≥ 1).
+    pub prefill: usize,
+    /// Engine shards owned by the decode-heavy pool (≥ 1).
+    pub decode: usize,
+}
+
+impl PoolSplit {
+    /// Total engine shards across both pools.
+    pub fn total(&self) -> usize {
+        self.prefill + self.decode
+    }
+}
+
+/// Coordinator configuration. Build one with [`Config::builder`]; the
+/// fields stay public so tests and tools can inspect (or tweak) a built
+/// configuration, but [`Coordinator::start`](super::Coordinator::start)
+/// re-runs [`Config::validate`] so invalid combinations are rejected
+/// either way.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub model: ModelSpec,
+    pub artifact_dir: PathBuf,
+    pub policy: BatchPolicy,
+    pub backend: Backend,
+    pub mode: ServeMode,
+    /// SoC digital-twin configuration for the energy estimates (also the
+    /// arch/variant of the native backend's engine shards).
+    pub twin_arch: ArchKind,
+    pub twin_variant: Variant,
+    /// Byte budget of the encoded-weight cache
+    /// ([`crate::encoding::prepacked::EncodeCache`]) shared by the
+    /// native backend's models and engine shards; 0 disables it (every
+    /// GEMM encodes its stationary operand on the fly). With a budget,
+    /// weights are encoded once on first touch and every later tile,
+    /// decode step, and request reuses the codes — `ent serve
+    /// --encode-cache <bytes>`. Cache counters ride the metrics
+    /// snapshots. Ignored by the artifacts backend (the AOT runtime
+    /// owns its own operand layout).
+    pub encode_cache_bytes: usize,
+    /// Append-only **prepacked KV cache** for the transformer's
+    /// attention contractions (`ent serve|loadgen --kv-prepack on|off`):
+    /// each decode step encodes only the newly appended token's K/V
+    /// rows; the history's codes are reused verbatim (bit-identical
+    /// either way, `tests/kv_prepack.rs`). `None` picks the mode
+    /// default — **on** under continuous scheduling (the decode-heavy
+    /// hot path the reuse targets), off under window batching. Only
+    /// EN-T(Ours) engines consume the codes; other variants fall back
+    /// transparently. Residency counters ride the metrics snapshots.
+    pub kv_prepack: Option<bool>,
+    /// Byte budget of the shared **prefix KV pool**
+    /// ([`crate::nn::kvpool::KvPool`]) the continuous scheduler shares
+    /// K/V blocks through (`ent serve|loadgen --kv-pool-bytes`). Only
+    /// consulted when prefix sharing is on; 0 disables sharing outright.
+    pub kv_pool_bytes: usize,
+    /// Cross-request **prefix sharing** (`ent serve|loadgen
+    /// --prefix-share on|off`): completed prefill prefixes are published
+    /// to the pool's radix index, and an admission whose prompt prefix
+    /// is resident adopts the physical blocks — 0 encode events and 0
+    /// prefill MACs for the shared rows, copy-on-write on divergence
+    /// (bit-identical either way, `tests/kv_share.rs`). `None` picks the
+    /// mode default — **on** under continuous scheduling, off under
+    /// window batching (which never interleaves requests). Pool counters
+    /// ride the metrics snapshots.
+    pub prefix_share: Option<bool>,
+    /// **Speculative decoding** under the continuous scheduler (`ent
+    /// serve|loadgen --spec-decode on|off`): a draft model proposes up
+    /// to `spec_k − 1` tokens per sequence per round, the target model
+    /// verifies the whole window in one coalesced step, accepts the
+    /// longest greedy-matching prefix, and rolls rejected tokens back
+    /// via `KvCache::truncate`. Greedy verification is bit-exact, so
+    /// output is identical to sequential decode with the flag on or
+    /// off (`tests/spec_decode.rs`); acceptance counters ride the
+    /// metrics snapshots. `None` picks the mode default — **off**
+    /// (speculation trades wasted draft/verify work for serial-latency
+    /// wins, an explicit opt-in). Prefer [`ConfigBuilder::speculation`].
+    pub spec_decode: Option<bool>,
+    /// Speculation window: 1 carried token plus up to `spec_k − 1`
+    /// draft tokens verified per round. `spec_k ≤ 1` leaves no room to
+    /// draft and degenerates to plain decode.
+    pub spec_k: usize,
+    /// Which model drafts ([`DraftKind`]): `Tiny` is the deployment
+    /// shape; `Oracle` / `AntiOracle` pin the acceptance ceiling and
+    /// floor deterministically for tests and bench rows.
+    pub draft: DraftKind,
+    /// Disaggregated prefill/decode engine pools
+    /// ([`ConfigBuilder::pools`], `ent serve --pools prefill=N,decode=M`):
+    /// `None` serves every phase on one shared shard pool (the
+    /// degenerate single-pool case, bit-identical to pooled serving —
+    /// `tests/disagg.rs`). Requires continuous scheduling on the native
+    /// backend with `prefill + decode` shards.
+    pub pools: Option<PoolSplit>,
+    /// Per-tenant admission weights for the router's weighted
+    /// round-robin ([`ConfigBuilder::tenant_weight`]): `(tenant, weight)`
+    /// pairs. Empty means every tenant is weight 1 and no per-tenant
+    /// share cap applies (single-queue FIFO admission, the historical
+    /// behavior). With weights configured, each tenant also gets a
+    /// proportional share cap of the admission queue, so one flooding
+    /// tenant cannot starve the others past its weight
+    /// (`tests/serving.rs`).
+    pub tenant_weights: Vec<(u32, u32)>,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            model: ModelSpec::tinynet(),
+            artifact_dir: crate::runtime::default_artifact_dir(),
+            policy: BatchPolicy::default(),
+            backend: Backend::Artifacts,
+            mode: ServeMode::Window,
+            twin_arch: ArchKind::SystolicOs,
+            twin_variant: Variant::EntOurs,
+            encode_cache_bytes: 0,
+            kv_prepack: None,
+            kv_pool_bytes: 8 << 20,
+            prefix_share: None,
+            spec_decode: None,
+            spec_k: 4,
+            draft: DraftKind::Tiny,
+            pools: None,
+            tenant_weights: Vec::new(),
+        }
+    }
+}
+
+fn native_cfg(shards: usize) -> Config {
+    Config {
+        backend: Backend::Native {
+            shards: shards.max(1),
+        },
+        ..Default::default()
+    }
+}
+
+fn continuous_cfg(shards: usize) -> Config {
+    Config {
+        mode: ServeMode::Continuous(ContinuousPolicy::default()),
+        ..native_cfg(shards)
+    }
+}
+
+impl Config {
+    /// Start a [`ConfigBuilder`] from the defaults (window scheduling on
+    /// the artifacts backend — the original `Config::default()`).
+    pub fn builder() -> ConfigBuilder {
+        ConfigBuilder {
+            cfg: Config::default(),
+        }
+    }
+
+    /// Artifact-free native serving on `shards` engine shards.
+    #[deprecated(since = "0.8.0", note = "use `Config::builder().native(shards).build()`")]
+    pub fn native(shards: usize) -> Config {
+        native_cfg(shards)
+    }
+
+    /// Continuous-batching native serving on `shards` engine shards.
+    #[deprecated(
+        since = "0.8.0",
+        note = "use `Config::builder().continuous(shards).build()`"
+    )]
+    pub fn continuous(shards: usize) -> Config {
+        continuous_cfg(shards)
+    }
+
+    /// Check the configuration for incompatible combinations — the same
+    /// checks [`ConfigBuilder::build`] runs, re-run by
+    /// [`Coordinator::start`](super::Coordinator::start) so a hand-mutated
+    /// `Config` cannot smuggle an invalid combination past the builder.
+    pub fn validate(&self) -> Result<()> {
+        let continuous = matches!(self.mode, ServeMode::Continuous(_));
+        if let Some(p) = self.pools {
+            if p.prefill == 0 || p.decode == 0 {
+                crate::bail!(
+                    "engine pools need at least one shard on each side \
+                     (got prefill={}, decode={})",
+                    p.prefill,
+                    p.decode
+                );
+            }
+            if !continuous {
+                crate::bail!("engine pools require continuous scheduling");
+            }
+            match self.backend {
+                Backend::Native { shards } if shards == p.total() => {}
+                ref other => crate::bail!(
+                    "engine pools require Backend::Native with prefill+decode = {} shards, \
+                     got {other:?}",
+                    p.total()
+                ),
+            }
+        }
+        if self.spec_decode == Some(true) {
+            if !continuous {
+                crate::bail!(
+                    "speculative decoding requires continuous scheduling \
+                     (window mode serves each request in one shot)"
+                );
+            }
+            if self.spec_k == 0 {
+                crate::bail!("speculation window spec_k must be ≥ 1");
+            }
+        }
+        if self.prefix_share == Some(true) {
+            if !continuous {
+                crate::bail!(
+                    "prefix sharing requires continuous scheduling \
+                     (window mode never interleaves requests)"
+                );
+            }
+            if self.kv_pool_bytes == 0 {
+                crate::bail!("prefix sharing needs a nonzero kv_pool_bytes budget");
+            }
+        }
+        for &(tenant, weight) in &self.tenant_weights {
+            if weight == 0 {
+                crate::bail!("tenant {tenant} has weight 0; weights must be ≥ 1");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Typed builder for [`Config`]. Every method is chainable;
+/// [`ConfigBuilder::build`] validates the combination and returns the
+/// finished `Config`.
+#[derive(Clone, Debug)]
+pub struct ConfigBuilder {
+    cfg: Config,
+}
+
+impl ConfigBuilder {
+    /// Window scheduling on `shards` native engine shards (no artifacts
+    /// needed) — the old `Config::native(shards)`.
+    pub fn native(mut self, shards: usize) -> Self {
+        self.cfg.backend = Backend::Native {
+            shards: shards.max(1),
+        };
+        self
+    }
+
+    /// Continuous-batching scheduling on `shards` native engine shards —
+    /// the old `Config::continuous(shards)`. Keeps a previously set
+    /// [`ContinuousPolicy`] (via [`ConfigBuilder::policy`]) if any.
+    pub fn continuous(mut self, shards: usize) -> Self {
+        self.cfg.backend = Backend::Native {
+            shards: shards.max(1),
+        };
+        if !matches!(self.cfg.mode, ServeMode::Continuous(_)) {
+            self.cfg.mode = ServeMode::Continuous(ContinuousPolicy::default());
+        }
+        self
+    }
+
+    /// Disaggregated prefill/decode engine pools: continuous scheduling
+    /// on `prefill + decode` native shards, split into a prefill-heavy
+    /// and a decode-heavy pool with KV-block handoff between them.
+    pub fn pools(mut self, prefill: usize, decode: usize) -> Self {
+        self.cfg.pools = Some(PoolSplit { prefill, decode });
+        self.cfg.backend = Backend::Native {
+            shards: prefill + decode,
+        };
+        if !matches!(self.cfg.mode, ServeMode::Continuous(_)) {
+            self.cfg.mode = ServeMode::Continuous(ContinuousPolicy::default());
+        }
+        self
+    }
+
+    /// Admission/step knobs of the continuous scheduler (implies
+    /// continuous mode; composes with [`ConfigBuilder::continuous`] /
+    /// [`ConfigBuilder::pools`] in either order).
+    pub fn policy(mut self, pol: ContinuousPolicy) -> Self {
+        self.cfg.mode = ServeMode::Continuous(pol);
+        self
+    }
+
+    /// Window-batching knobs (only consulted in window mode).
+    pub fn window_policy(mut self, pol: BatchPolicy) -> Self {
+        self.cfg.policy = pol;
+        self
+    }
+
+    /// Serve from AOT artifacts in `dir` (window mode's original
+    /// backend).
+    pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.cfg.backend = Backend::Artifacts;
+        self.cfg.artifact_dir = dir.into();
+        self
+    }
+
+    /// The served [`ModelSpec`] (defaults to tinynet).
+    pub fn model(mut self, model: ModelSpec) -> Self {
+        self.cfg.model = model;
+        self
+    }
+
+    /// Digital-twin SoC arch/variant — also the arch/variant of the
+    /// native backend's engine shards.
+    pub fn twin(mut self, arch: ArchKind, variant: Variant) -> Self {
+        self.cfg.twin_arch = arch;
+        self.cfg.twin_variant = variant;
+        self
+    }
+
+    /// Encoded-weight cache budget in bytes (0 = off).
+    pub fn encode_cache(mut self, bytes: usize) -> Self {
+        self.cfg.encode_cache_bytes = bytes;
+        self
+    }
+
+    /// Append-only prepacked KV cache on/off (unset = mode default: on
+    /// under continuous scheduling).
+    pub fn kv_prepack(mut self, on: bool) -> Self {
+        self.cfg.kv_prepack = Some(on);
+        self
+    }
+
+    /// Cross-request prefix KV sharing on/off (unset = mode default: on
+    /// under continuous scheduling).
+    pub fn prefix_share(mut self, on: bool) -> Self {
+        self.cfg.prefix_share = Some(on);
+        self
+    }
+
+    /// Shared prefix KV pool byte budget.
+    pub fn kv_pool_bytes(mut self, bytes: usize) -> Self {
+        self.cfg.kv_pool_bytes = bytes;
+        self
+    }
+
+    /// Speculative decoding: [`Spec::Off`] or [`Spec::On`] with an
+    /// explicit window and drafter.
+    pub fn speculation(mut self, spec: Spec) -> Self {
+        match spec {
+            Spec::Off => self.cfg.spec_decode = Some(false),
+            Spec::On { k, draft } => {
+                self.cfg.spec_decode = Some(true);
+                self.cfg.spec_k = k;
+                self.cfg.draft = draft;
+            }
+        }
+        self
+    }
+
+    /// Give `tenant` an admission weight for the router's weighted
+    /// round-robin (repeatable; see [`Config::tenant_weights`]).
+    pub fn tenant_weight(mut self, tenant: u32, weight: u32) -> Self {
+        self.cfg.tenant_weights.push((tenant, weight));
+        self
+    }
+
+    /// Validate the combination and return the finished [`Config`].
+    pub fn build(self) -> Result<Config> {
+        self.cfg.validate()?;
+        Ok(self.cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_matches_deprecated_shims() {
+        // The shims stay for one release; they must produce exactly what
+        // the builder produces so migrating callers is a no-op.
+        #[allow(deprecated)]
+        let (old_n, old_c) = (Config::native(3), Config::continuous(3));
+        let new_n = Config::builder().native(3).build().expect("native");
+        let new_c = Config::builder().continuous(3).build().expect("continuous");
+        assert_eq!(old_n.backend, new_n.backend);
+        assert!(matches!(new_n.mode, ServeMode::Window));
+        assert_eq!(old_c.backend, new_c.backend);
+        assert!(matches!(old_c.mode, ServeMode::Continuous(_)));
+        assert!(matches!(new_c.mode, ServeMode::Continuous(_)));
+        assert_eq!(old_c.kv_pool_bytes, new_c.kv_pool_bytes);
+        assert_eq!(old_c.spec_k, new_c.spec_k);
+    }
+
+    #[test]
+    fn pools_imply_continuous_native() {
+        let cfg = Config::builder().pools(2, 2).build().expect("pools");
+        assert_eq!(cfg.pools, Some(PoolSplit { prefill: 2, decode: 2 }));
+        assert_eq!(cfg.backend, Backend::Native { shards: 4 });
+        assert!(matches!(cfg.mode, ServeMode::Continuous(_)));
+    }
+
+    #[test]
+    fn incompatible_combinations_fail_at_build() {
+        // A zero-sided pool split has nowhere to run one of the phases.
+        assert!(Config::builder().pools(0, 2).build().is_err());
+        assert!(Config::builder().pools(2, 0).build().is_err());
+        // Speculation and prefix sharing need the continuous step loop.
+        let spec = Spec::On { k: 4, draft: DraftKind::Tiny };
+        assert!(Config::builder().native(2).speculation(spec).build().is_err());
+        assert!(Config::builder().native(2).prefix_share(true).build().is_err());
+        // A zero-token speculation window cannot carry even one token.
+        let k0 = Spec::On { k: 0, draft: DraftKind::Tiny };
+        assert!(Config::builder().continuous(2).speculation(k0).build().is_err());
+        // Sharing with a zero pool budget can never attach anything.
+        assert!(Config::builder()
+            .continuous(2)
+            .prefix_share(true)
+            .kv_pool_bytes(0)
+            .build()
+            .is_err());
+        // Zero tenant weights would starve the tenant outright.
+        assert!(Config::builder().continuous(2).tenant_weight(1, 0).build().is_err());
+        // The same combinations pass where they belong.
+        assert!(Config::builder().continuous(2).speculation(spec).build().is_ok());
+        assert!(Config::builder()
+            .pools(1, 1)
+            .prefix_share(true)
+            .speculation(spec)
+            .tenant_weight(1, 2)
+            .build()
+            .is_ok());
+    }
+
+    #[test]
+    fn validate_catches_hand_mutated_configs() {
+        let mut cfg = Config::builder().continuous(2).build().expect("base");
+        cfg.pools = Some(PoolSplit { prefill: 1, decode: 1 });
+        // Backend still says 2 shards, which happens to equal 1+1 — ok.
+        assert!(cfg.validate().is_ok());
+        cfg.pools = Some(PoolSplit { prefill: 2, decode: 2 });
+        assert!(cfg.validate().is_err(), "shard count must match the split");
+        let cfg = Config::default();
+        assert!(cfg.validate().is_ok(), "defaults must validate");
+    }
+}

@@ -8,6 +8,24 @@
 //! coordinator past one request in flight per client and therefore
 //! never sees backpressure or deadline expiry.
 //!
+//! **Multi-tenant traffic** ([`LoadGen::tenants`]): each arrival draws
+//! a tenant uniformly; the request rides the unified
+//! [`Job`](super::Job) API with that tenant (and a per-tenant session
+//! key, so pooled serving exercises decode-slot affinity). Every tenant
+//! gets its own seeded Zipf template pool, so tenants share prefixes
+//! internally but never across each other — the shape of real
+//! system-prompt traffic. [`LoadGen::burst`] switches the Poisson
+//! schedule to a two-state burst/quiet modulation around the same mean
+//! rate, which is what makes admission fairness and backpressure
+//! observable. Both knobs at their defaults (1 tenant, burst 1.0) draw
+//! nothing extra from the RNG, so historical seeded runs reproduce
+//! bit-for-bit.
+//!
+//! **SLO scorecard** ([`LoadGen::slo_ms`]): when a deadline is set, the
+//! report adds p99 time-to-first-token, p99 inter-token latency, and
+//! goodput — completions inside the deadline per second — the three
+//! numbers a serving SLO is actually written in.
+//!
 //! Shared by `ent loadgen`, `ent report serving`, and
 //! `benches/serve_perf.rs` (the `BENCH_serve.json` emitter), so all
 //! three quote the same workload.
@@ -20,7 +38,7 @@ use crate::util::json::Json;
 use crate::util::prng::Rng;
 use crate::util::stats::Summary;
 
-use super::{Coordinator, InferRequest, InferResponse, TokenRequest, TokenResponse};
+use super::{Coordinator, InferRequest, Job, JobMeta, Response, TokenRequest};
 
 /// One open-loop run's knobs.
 #[derive(Clone, Copy, Debug)]
@@ -45,10 +63,28 @@ pub struct LoadGen {
     /// real system-prompt traffic does. 0.0 keeps the original uniform
     /// i.i.d. prompts.
     pub prefix_zipf: f64,
+    /// Tenants sharing the run (`ent loadgen --tenants N`): each
+    /// arrival draws one uniformly and submits under its id (with
+    /// `session = tenant`, so pooled serving pins a tenant's decodes).
+    /// Each tenant owns a distinct Zipf template pool. 1 (the default)
+    /// is the historical single-tenant behavior — and consumes no extra
+    /// randomness, so old seeds replay exactly.
+    pub tenants: usize,
+    /// Burstiness factor (`ent loadgen --burst B`): > 1.0 alternates
+    /// short burst phases (gaps ÷ B) and quiet phases (gaps × B) of a
+    /// few arrivals each, keeping the mean near `rate_per_s` while the
+    /// queue sees real bursts. 1.0 (default) keeps the plain Poisson
+    /// schedule and draws nothing from the RNG.
+    pub burst: f64,
+    /// Serving deadline for the SLO scorecard (`ent loadgen --slo-ms`):
+    /// when > 0 the report carries p99 TTFT, p99 inter-token latency,
+    /// and goodput (completions within the deadline per second). 0.0
+    /// (default) leaves the scorecard fields `null`.
+    pub slo_ms: f64,
     pub seed: u64,
 }
 
-/// Size of the Zipf template pool (`LoadGen::prefix_zipf`).
+/// Size of each tenant's Zipf template pool (`LoadGen::prefix_zipf`).
 pub const PREFIX_TEMPLATES: usize = 4;
 
 impl Default for LoadGen {
@@ -60,6 +96,9 @@ impl Default for LoadGen {
             max_new_tokens: 2,
             image_mix: 0.0,
             prefix_zipf: 0.0,
+            tenants: 1,
+            burst: 1.0,
+            slo_ms: 0.0,
             seed: 0x10AD,
         }
     }
@@ -92,13 +131,23 @@ pub struct LoadReport {
     /// verification during this run (0.0 when `--spec-decode` is off or
     /// no speculation rounds ran).
     pub acceptance_rate: f64,
+    /// p99 time-to-first-token of completed token requests
+    /// (`Some` only when [`LoadGen::slo_ms`] > 0).
+    pub p99_ttft_us: Option<f64>,
+    /// p99 inter-token latency — `(latency − ttft) / (generated − 1)`
+    /// per completed token request (`Some` only when `slo_ms` > 0).
+    pub p99_itl_us: Option<f64>,
+    /// Completions that finished inside the `slo_ms` deadline, per wall
+    /// second (`Some` only when `slo_ms` > 0).
+    pub goodput_rps: Option<f64>,
 }
 
 impl LoadReport {
     /// The report's standard JSON fields — shared by `ent loadgen
     /// --json` and `benches/serve_perf.rs`, so every emitter stays in
     /// lockstep when a field is added. Latency percentiles are `null`
-    /// when nothing completed (NaN is not valid JSON).
+    /// when nothing completed, and the SLO scorecard fields are `null`
+    /// unless the run set a deadline (NaN is not valid JSON).
     pub fn json_fields(&self) -> Vec<(&'static str, Json)> {
         let lat = self.latency_us.as_ref();
         let num_or_null = |v: Option<f64>| v.map(Json::num).unwrap_or(Json::Null);
@@ -113,13 +162,11 @@ impl LoadReport {
             ("occupancy", Json::num(self.occupancy)),
             ("prefix_hit_rate", Json::num(self.prefix_hit_rate)),
             ("acceptance_rate", Json::num(self.acceptance_rate)),
+            ("p99_ttft_us", num_or_null(self.p99_ttft_us)),
+            ("p99_itl_us", num_or_null(self.p99_itl_us)),
+            ("goodput_rps", num_or_null(self.goodput_rps)),
         ]
     }
-}
-
-enum PendingRx {
-    Tok(Receiver<std::result::Result<TokenResponse, String>>),
-    Img(Receiver<std::result::Result<InferResponse, String>>),
 }
 
 /// Drive `coord` with one open-loop run and collect the report. Blocks
@@ -129,16 +176,24 @@ pub fn run(coord: &Coordinator, cfg: &LoadGen) -> LoadReport {
     let mut rng = Rng::new(cfg.seed);
     let vocab = TransformerSpec::tiny().vocab as u64;
     let input_len = coord.model().input_len();
-    // Zipf prefix popularity: a seeded pool of fixed prompt prefixes,
-    // rank i drawn with probability ∝ 1/(i+1)^s. Each template fixes
-    // the first `prompt_len − 1` positions; the last position stays
-    // random per request, so requests share a prefix, not a prompt.
-    let templates: Vec<Vec<u16>> = if cfg.prefix_zipf > 0.0 {
-        (0..PREFIX_TEMPLATES)
-            .map(|t| {
-                let mut trng = Rng::new(cfg.seed ^ (0xF1F0_0000 + t as u64));
-                (0..cfg.prompt_len.max(1) - 1)
-                    .map(|_| trng.below(vocab) as u16)
+    let tenants = cfg.tenants.max(1);
+    // Zipf prefix popularity: per tenant, a seeded pool of fixed prompt
+    // prefixes, rank i drawn with probability ∝ 1/(i+1)^s. Each
+    // template fixes the first `prompt_len − 1` positions; the last
+    // position stays random per request, so requests share a prefix,
+    // not a prompt. Tenant 0's pool is seeded exactly like the
+    // historical single-tenant pool.
+    let templates: Vec<Vec<Vec<u16>>> = if cfg.prefix_zipf > 0.0 {
+        (0..tenants)
+            .map(|tenant| {
+                (0..PREFIX_TEMPLATES)
+                    .map(|t| {
+                        let salt = 0xF1F0_0000 + (tenant as u64) * 0x1000 + t as u64;
+                        let mut trng = Rng::new(cfg.seed ^ salt);
+                        (0..cfg.prompt_len.max(1) - 1)
+                            .map(|_| trng.below(vocab) as u16)
+                            .collect()
+                    })
                     .collect()
             })
             .collect()
@@ -155,24 +210,41 @@ pub fn run(coord: &Coordinator, cfg: &LoadGen) -> LoadReport {
             .collect()
     };
     let horizon = Duration::from_millis(cfg.duration_ms);
-    let mut pending: Vec<PendingRx> = Vec::new();
+    let mut pending: Vec<Receiver<std::result::Result<Response, String>>> = Vec::new();
     let mut next_at = Duration::ZERO;
     let mut sent = 0u64;
+    // Burst/quiet modulation state (only advanced when burst > 1.0).
+    let mut bursting = false;
+    let mut phase_left = 0u64;
     let t0 = Instant::now();
     while next_at < horizon {
         let now = t0.elapsed();
         if now < next_at {
             std::thread::sleep(next_at - now);
         }
+        // Guarded draw: a single-tenant run consumes no randomness
+        // here, so historical seeds replay the exact same schedule.
+        let tenant = if tenants > 1 {
+            rng.below(tenants as u64) as u32
+        } else {
+            0
+        };
+        let meta = JobMeta {
+            tenant,
+            session: Some(tenant as u64),
+        };
         if rng.chance(cfg.image_mix) {
-            pending.push(PendingRx::Img(coord.submit(InferRequest {
-                image: rng.i8_vec(input_len),
-            })));
+            pending.push(coord.submit_job(
+                Job::Image(InferRequest {
+                    image: rng.i8_vec(input_len),
+                }),
+                meta,
+            ));
         } else {
             let tokens: Vec<u16> = if cfg.prefix_zipf > 0.0 {
                 let u = rng.f64() * zipf_cdf[PREFIX_TEMPLATES - 1];
                 let pick = zipf_cdf.iter().position(|&c| u < c).unwrap_or(0);
-                let mut t = templates[pick].clone();
+                let mut t = templates[tenant as usize][pick].clone();
                 t.push(rng.below(vocab) as u16);
                 t
             } else {
@@ -180,15 +252,28 @@ pub fn run(coord: &Coordinator, cfg: &LoadGen) -> LoadReport {
                     .map(|_| rng.below(vocab) as u16)
                     .collect()
             };
-            pending.push(PendingRx::Tok(coord.submit_tokens(TokenRequest::generate(
-                tokens,
-                cfg.max_new_tokens,
-            ))));
+            pending.push(coord.submit_job(
+                Job::Tokens(TokenRequest::generate(tokens, cfg.max_new_tokens)),
+                meta,
+            ));
         }
         sent += 1;
         // Exponential inter-arrival gap (capped at 1 s so a tiny rate
-        // cannot stall the run).
-        let gap_s = -(1.0 - rng.f64()).ln() / cfg.rate_per_s.max(1e-6);
+        // cannot stall the run), optionally burst-modulated: a few
+        // arrivals at `rate × burst`, then a few at `rate / burst`.
+        let mut gap_s = -(1.0 - rng.f64()).ln() / cfg.rate_per_s.max(1e-6);
+        if cfg.burst > 1.0 {
+            if phase_left == 0 {
+                bursting = !bursting;
+                phase_left = 2 + rng.below(6);
+            }
+            phase_left -= 1;
+            gap_s = if bursting {
+                gap_s / cfg.burst
+            } else {
+                gap_s * cfg.burst
+            };
+        }
         next_at += Duration::from_secs_f64(gap_s.min(1.0));
     }
 
@@ -196,15 +281,29 @@ pub fn run(coord: &Coordinator, cfg: &LoadGen) -> LoadReport {
     let mut rejected = 0u64;
     let mut failed = 0u64;
     let mut latencies = Vec::new();
+    let mut ttfts = Vec::new();
+    let mut itls = Vec::new();
+    let mut within_slo = 0u64;
+    let slo_us = (cfg.slo_ms * 1000.0) as u64;
     for rx in pending {
-        let outcome = match rx {
-            PendingRx::Tok(rx) => rx.recv().map(|r| r.map(|t| t.latency_us)),
-            PendingRx::Img(rx) => rx.recv().map(|r| r.map(|t| t.latency_us)),
-        };
-        match outcome {
-            Ok(Ok(latency_us)) => {
+        match rx.recv() {
+            Ok(Ok(resp)) => {
                 completed += 1;
+                let latency_us = match resp {
+                    Response::Tokens(t) => {
+                        ttfts.push(t.ttft_us as f64);
+                        // Inter-token latency: decode time amortized
+                        // over the generated tokens after the first.
+                        let steps = t.generated.len().saturating_sub(1).max(1) as u64;
+                        itls.push((t.latency_us.saturating_sub(t.ttft_us) / steps) as f64);
+                        t.latency_us
+                    }
+                    Response::Image(r) => r.latency_us,
+                };
                 latencies.push(latency_us as f64);
+                if latency_us <= slo_us {
+                    within_slo += 1;
+                }
             }
             Ok(Err(e)) if e.contains("backpressure") || e.contains("deadline") => rejected += 1,
             Ok(Err(_)) | Err(_) => failed += 1,
@@ -245,6 +344,7 @@ pub fn run(coord: &Coordinator, cfg: &LoadGen) -> LoadReport {
     } else {
         accepted as f64 / drafted as f64
     };
+    let slo_on = cfg.slo_ms > 0.0;
     LoadReport {
         sent,
         completed,
@@ -265,19 +365,23 @@ pub fn run(coord: &Coordinator, cfg: &LoadGen) -> LoadReport {
         },
         prefix_hit_rate,
         acceptance_rate,
+        p99_ttft_us: (slo_on && !ttfts.is_empty()).then(|| Summary::of(&ttfts).p99),
+        p99_itl_us: (slo_on && !itls.is_empty()).then(|| Summary::of(&itls).p99),
+        goodput_rps: slo_on.then(|| within_slo as f64 / wall_s),
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::Config;
+    use crate::coordinator::{Config, DraftKind, Spec};
 
     /// The generator drives a continuous coordinator open-loop and the
     /// report accounts for every submission.
     #[test]
     fn open_loop_run_accounts_for_every_request() {
-        let coord = Coordinator::start(Config::continuous(2)).expect("continuous coordinator");
+        let cfg = Config::builder().continuous(2).build().expect("config");
+        let coord = Coordinator::start(cfg).expect("continuous coordinator");
         let report = run(
             &coord,
             &LoadGen {
@@ -286,8 +390,8 @@ mod tests {
                 prompt_len: 5,
                 max_new_tokens: 1,
                 image_mix: 0.3,
-                prefix_zipf: 0.0,
                 seed: 0x5EED,
+                ..LoadGen::default()
             },
         );
         assert!(report.sent >= 1);
@@ -298,6 +402,8 @@ mod tests {
         assert_eq!(report.failed, 0, "no failures expected under light load");
         assert!(report.tokens_served >= 1, "token traffic must flow");
         assert!(report.latency_us.is_some());
+        assert!(report.p99_ttft_us.is_none(), "no SLO scorecard without --slo-ms");
+        assert!(report.goodput_rps.is_none());
         coord.shutdown();
     }
 
@@ -307,7 +413,8 @@ mod tests {
     /// pool evicts).
     #[test]
     fn zipf_traffic_exercises_the_prefix_pool() {
-        let coord = Coordinator::start(Config::continuous(2)).expect("continuous coordinator");
+        let cfg = Config::builder().continuous(2).build().expect("config");
+        let coord = Coordinator::start(cfg).expect("continuous coordinator");
         let report = run(
             &coord,
             &LoadGen {
@@ -315,9 +422,9 @@ mod tests {
                 duration_ms: 120,
                 prompt_len: 12,
                 max_new_tokens: 1,
-                image_mix: 0.0,
                 prefix_zipf: 1.1,
                 seed: 0x21FF,
+                ..LoadGen::default()
             },
         );
         assert_eq!(
@@ -340,10 +447,14 @@ mod tests {
     /// acceptance rate is exactly 1.0 whenever any round ran.
     #[test]
     fn speculative_run_reports_oracle_acceptance() {
-        let mut cfg = Config::continuous(2);
-        cfg.spec_decode = Some(true);
-        cfg.spec_k = 4;
-        cfg.draft = crate::coordinator::DraftKind::Oracle;
+        let cfg = Config::builder()
+            .continuous(2)
+            .speculation(Spec::On {
+                k: 4,
+                draft: DraftKind::Oracle,
+            })
+            .build()
+            .expect("config");
         let coord = Coordinator::start(cfg).expect("continuous coordinator");
         let report = run(
             &coord,
@@ -352,9 +463,8 @@ mod tests {
                 duration_ms: 80,
                 prompt_len: 8,
                 max_new_tokens: 4,
-                image_mix: 0.0,
-                prefix_zipf: 0.0,
                 seed: 0xACCE,
+                ..LoadGen::default()
             },
         );
         assert_eq!(report.failed, 0);
@@ -371,5 +481,57 @@ mod tests {
                 report.acceptance_rate
             );
         }
+    }
+
+    /// Multi-tenant bursty traffic against disaggregated pools, with an
+    /// SLO deadline: the scorecard fields surface, accounting still
+    /// covers every arrival, and an unmissable deadline makes goodput
+    /// equal the completion rate.
+    #[test]
+    fn multi_tenant_slo_run_reports_scorecard() {
+        let cfg = Config::builder()
+            .pools(1, 1)
+            .tenant_weight(0, 2)
+            .tenant_weight(1, 1)
+            .tenant_weight(2, 1)
+            .build()
+            .expect("config");
+        let coord = Coordinator::start(cfg).expect("pooled coordinator");
+        let report = run(
+            &coord,
+            &LoadGen {
+                rate_per_s: 300.0,
+                duration_ms: 80,
+                prompt_len: 6,
+                max_new_tokens: 2,
+                prefix_zipf: 1.1,
+                tenants: 3,
+                burst: 3.0,
+                slo_ms: 10_000.0,
+                seed: 0x7E4A,
+                ..LoadGen::default()
+            },
+        );
+        assert_eq!(
+            report.completed + report.rejected + report.failed,
+            report.sent
+        );
+        assert_eq!(report.failed, 0);
+        let p99_ttft = report.p99_ttft_us.expect("scorecard on with --slo-ms");
+        let p99_itl = report.p99_itl_us.expect("scorecard on with --slo-ms");
+        let goodput = report.goodput_rps.expect("scorecard on with --slo-ms");
+        assert!(p99_ttft > 0.0);
+        assert!(p99_itl >= 0.0);
+        // TTFT never exceeds total latency per request, so its p99
+        // cannot exceed the latency p99 either.
+        let lat = report.latency_us.as_ref().expect("completions");
+        assert!(p99_ttft <= lat.p99 + 1e-9, "{p99_ttft} vs {}", lat.p99);
+        // 10 s is unmissable here: goodput equals the completion rate.
+        assert!((goodput - report.completed as f64 / report.wall_s).abs() < 1e-9);
+        // Pooled serving attributed work to both pools.
+        let m = coord.metrics();
+        assert_eq!(m.pools.len(), 2);
+        assert!(m.handoffs >= 1, "decode traffic must hand off");
+        coord.shutdown();
     }
 }

@@ -66,6 +66,24 @@ struct Inner {
     /// snapshots surface its hit-rate, resident-bytes gauge, and
     /// eviction counters.
     kv_pool: Option<Arc<KvPool>>,
+    /// Per-engine-pool aggregates under disaggregated serving
+    /// ([`Metrics::configure_pools`]); empty in unified/window modes.
+    pools: Vec<PoolAgg>,
+    /// Prefill→decode handoffs: completed transfers, KV rows moved, and
+    /// backing bytes moved (all by `Arc` — zero copies, zero encodes).
+    handoffs: u64,
+    handoff_rows: u64,
+    handoff_bytes: u64,
+}
+
+/// Cumulative per-pool aggregate (the `Inner`-side of
+/// [`PoolSnapshot`]).
+struct PoolAgg {
+    name: &'static str,
+    shards: usize,
+    tokens: u64,
+    busy_ns: u64,
+    capacity_ns: u64,
 }
 
 /// Point-in-time view of the aggregates. Pure read: snapshotting never
@@ -120,6 +138,41 @@ pub struct Snapshot {
     /// prefix sharing — see `Config::prefix_share`): per-row hit/miss
     /// totals, insertions, LRU evictions, and the resident-bytes gauge.
     pub kv_pool: Option<KvPoolStats>,
+    /// Per-engine-pool breakdown under disaggregated serving
+    /// (`Config::pools`): one entry per pool (prefill, then decode),
+    /// each with its own occupancy and tokens/s so `ent report serving`
+    /// attributes load to the right pool instead of one blended number.
+    /// Empty in unified and window modes.
+    pub pools: Vec<PoolSnapshot>,
+    /// Prefill→decode handoffs completed (pooled serving only).
+    pub handoffs: u64,
+    /// KV rows (positions) whose paged blocks moved across pools at
+    /// handoff — every one of them transferred without re-encoding.
+    pub handoff_rows: u64,
+    /// Backing bytes of the transferred blocks (raw rows + resident
+    /// code sidecars). Moved by `Arc`, never copied.
+    pub handoff_bytes: u64,
+}
+
+/// Point-in-time view of one engine pool under disaggregated serving.
+#[derive(Clone, Debug)]
+pub struct PoolSnapshot {
+    /// `"prefill"` or `"decode"`.
+    pub name: &'static str,
+    /// Engine shards owned by this pool.
+    pub shards: usize,
+    /// Token positions fed through this pool's engines (verify windows
+    /// count whole — this is engine throughput, not accepted tokens).
+    pub tokens: u64,
+    /// This pool's shard busy time during scheduler steps.
+    pub busy_ns: u64,
+    /// This pool's capacity over the same steps (step wall × shards).
+    pub capacity_ns: u64,
+    /// Busy fraction (`busy_ns / capacity_ns`; 0 before any step).
+    pub occupancy: f64,
+    /// Cumulative fed positions per second of serving time (same
+    /// denominator as the global `tokens_per_s`).
+    pub tokens_per_s: f64,
 }
 
 impl Metrics {
@@ -145,8 +198,67 @@ impl Metrics {
                 lat_next: 0,
                 encode_cache: None,
                 kv_pool: None,
+                pools: Vec::new(),
+                handoffs: 0,
+                handoff_rows: 0,
+                handoff_bytes: 0,
             }),
         }
+    }
+
+    /// Declare the disaggregated pool layout (the executor calls this at
+    /// startup when serving with `Config::pools`): pool 0 is the
+    /// prefill pool, pool 1 the decode pool. Snapshots carry one
+    /// [`PoolSnapshot`] per declared pool from then on.
+    pub fn configure_pools(&self, prefill_shards: usize, decode_shards: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.pools = vec![
+            PoolAgg {
+                name: "prefill",
+                shards: prefill_shards,
+                tokens: 0,
+                busy_ns: 0,
+                capacity_ns: 0,
+            },
+            PoolAgg {
+                name: "decode",
+                shards: decode_shards,
+                tokens: 0,
+                busy_ns: 0,
+                capacity_ns: 0,
+            },
+        ];
+        g.handoffs = 0;
+        g.handoff_rows = 0;
+        g.handoff_bytes = 0;
+    }
+
+    /// One scheduler step's busy/capacity share for pool `idx`
+    /// (no-op if the pool was never configured).
+    pub fn record_pool_step(&self, idx: usize, busy_ns: u64, capacity_ns: u64) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(p) = g.pools.get_mut(idx) {
+            p.busy_ns += busy_ns;
+            p.capacity_ns += capacity_ns;
+        }
+    }
+
+    /// `n` token positions fed through pool `idx`'s engines.
+    pub fn record_pool_tokens(&self, idx: usize, n: u64) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(p) = g.pools.get_mut(idx) {
+            p.tokens += n;
+        }
+    }
+
+    /// One completed prefill→decode handoff: `rows` KV positions whose
+    /// blocks (totalling `bytes` backing bytes) moved across pools by
+    /// `Arc` — zero copies and zero re-encodes, which is the point.
+    pub fn record_handoff(&self, rows: u64, bytes: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.handoffs += 1;
+        g.handoff_rows += rows;
+        g.handoff_bytes += bytes;
     }
 
     /// Surface `cache`'s counters in every subsequent snapshot (the
@@ -281,6 +393,26 @@ impl Metrics {
             spec_drafted: g.spec_drafted,
             spec_accepted: g.spec_accepted,
             kv_pool: g.kv_pool.as_ref().map(|p| p.stats()),
+            pools: g
+                .pools
+                .iter()
+                .map(|p| PoolSnapshot {
+                    name: p.name,
+                    shards: p.shards,
+                    tokens: p.tokens,
+                    busy_ns: p.busy_ns,
+                    capacity_ns: p.capacity_ns,
+                    occupancy: if p.capacity_ns == 0 {
+                        0.0
+                    } else {
+                        p.busy_ns as f64 / p.capacity_ns as f64
+                    },
+                    tokens_per_s: p.tokens as f64 / serving_s,
+                })
+                .collect(),
+            handoffs: g.handoffs,
+            handoff_rows: g.handoff_rows,
+            handoff_bytes: g.handoff_bytes,
         }
     }
 }
@@ -423,6 +555,38 @@ mod tests {
             s.tokens_per_s,
             100.0 / s.uptime_s
         );
+    }
+
+    /// Unconfigured pools stay invisible; once configured, per-pool
+    /// occupancy/tokens and handoff counters surface independently of
+    /// the blended totals.
+    #[test]
+    fn pool_breakdown_surfaces_in_snapshot() {
+        let m = Metrics::new();
+        assert!(m.snapshot().pools.is_empty(), "no pools before configure");
+        assert_eq!(m.snapshot().handoffs, 0);
+        m.configure_pools(3, 1);
+        m.record_pool_step(0, 100, 400);
+        m.record_pool_step(1, 300, 400);
+        m.record_pool_tokens(0, 48);
+        m.record_pool_tokens(1, 2);
+        m.record_handoff(48, 4096);
+        m.record_handoff(16, 1024);
+        let s = m.snapshot();
+        assert_eq!(s.pools.len(), 2);
+        assert_eq!((s.pools[0].name, s.pools[0].shards), ("prefill", 3));
+        assert_eq!((s.pools[1].name, s.pools[1].shards), ("decode", 1));
+        assert_eq!(s.pools[0].occupancy, 0.25);
+        assert_eq!(s.pools[1].occupancy, 0.75);
+        assert_eq!(s.pools[0].tokens, 48);
+        assert_eq!(s.pools[1].tokens, 2);
+        assert_eq!(s.handoffs, 2);
+        assert_eq!(s.handoff_rows, 64);
+        assert_eq!(s.handoff_bytes, 5120);
+        // Out-of-range pool indices are ignored, not panics.
+        m.record_pool_step(7, 1, 1);
+        m.record_pool_tokens(7, 1);
+        assert_eq!(m.snapshot().pools.len(), 2);
     }
 
     /// The latency reservoir is bounded; totals keep counting past it.

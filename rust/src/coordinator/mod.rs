@@ -12,6 +12,14 @@
 //! Metrics ([`metrics`]) are lock-guarded aggregates shared with the
 //! caller.
 //!
+//! The public surface is configured through the typed builder
+//! ([`Config::builder`] → [`ConfigBuilder`]) and submits work
+//! through one unified API: a [`Job`] (CNN image or transformer tokens)
+//! plus [`JobMeta`] (tenant, session) in, a [`Response`] out
+//! ([`Coordinator::submit_job`] / [`Coordinator::infer_job`]). The
+//! typed [`Coordinator::submit`] / [`Coordinator::submit_tokens`]
+//! wrappers remain as conveniences over the same path.
+//!
 //! Two backends serve a batch:
 //!
 //! * [`Backend::Artifacts`] — the AOT artifact registry
@@ -52,13 +60,27 @@
 //!   backend only. Logits are bit-identical to window-mode (and to
 //!   direct sequential) decode — locked by
 //!   `tests/serve_equivalence.rs`.
+//!
+//! Continuous scheduling can further **disaggregate** the shard pool
+//! into a prefill-heavy and a decode-heavy engine pool
+//! ([`ConfigBuilder::pools`], `ent serve --pools prefill=N,decode=M`):
+//! a sequence prefills on the prefill pool, then hands off to a pinned
+//! decode-pool slot by moving its paged `KvBlock` Arcs and `PackedCode`
+//! sidecars — nothing is copied or re-encoded. Admission runs through a
+//! weighted round-robin tenant router (the `router` submodule) with
+//! session affinity and queue backpressure. The single-pool path is the
+//! degenerate case and stays bit-identical to pooled serving
+//! (`tests/disagg.rs`).
 
 pub mod batcher;
+mod config;
 pub mod loadgen;
 pub mod metrics;
+mod router;
 mod scheduler;
 
-use std::path::PathBuf;
+pub use config::{Config, ConfigBuilder, PoolSplit, Spec};
+
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -69,11 +91,10 @@ use crate::bail;
 use crate::nn::forward::QuantCnn;
 use crate::nn::transformer::QuantTransformer;
 use crate::nn::zoo;
-use crate::pe::Variant;
 use crate::runtime::Runtime;
 use crate::soc::{energy, Soc};
 use crate::util::error::{Context, Result};
-use batcher::{BatchPolicy, ContinuousPolicy};
+use batcher::ContinuousPolicy;
 use metrics::{Metrics, Snapshot};
 
 /// Model served by the coordinator. Must match what `aot.py` exported.
@@ -153,116 +174,6 @@ pub enum DraftKind {
     AntiOracle,
 }
 
-/// Coordinator configuration.
-#[derive(Clone, Debug)]
-pub struct Config {
-    pub model: ModelSpec,
-    pub artifact_dir: PathBuf,
-    pub policy: BatchPolicy,
-    pub backend: Backend,
-    pub mode: ServeMode,
-    /// SoC digital-twin configuration for the energy estimates (also the
-    /// arch/variant of the native backend's engine shards).
-    pub twin_arch: ArchKind,
-    pub twin_variant: Variant,
-    /// Byte budget of the encoded-weight cache
-    /// ([`crate::encoding::prepacked::EncodeCache`]) shared by the
-    /// native backend's models and engine shards; 0 disables it (every
-    /// GEMM encodes its stationary operand on the fly). With a budget,
-    /// weights are encoded once on first touch and every later tile,
-    /// decode step, and request reuses the codes — `ent serve
-    /// --encode-cache <bytes>`. Cache counters ride the metrics
-    /// snapshots. Ignored by the artifacts backend (the AOT runtime
-    /// owns its own operand layout).
-    pub encode_cache_bytes: usize,
-    /// Append-only **prepacked KV cache** for the transformer's
-    /// attention contractions (`ent serve|loadgen --kv-prepack on|off`):
-    /// each decode step encodes only the newly appended token's K/V
-    /// rows; the history's codes are reused verbatim (bit-identical
-    /// either way, `tests/kv_prepack.rs`). `None` picks the mode
-    /// default — **on** under continuous scheduling (the decode-heavy
-    /// hot path the reuse targets), off under window batching. Only
-    /// EN-T(Ours) engines consume the codes; other variants fall back
-    /// transparently. Residency counters ride the metrics snapshots.
-    pub kv_prepack: Option<bool>,
-    /// Byte budget of the shared **prefix KV pool**
-    /// ([`crate::nn::kvpool::KvPool`]) the continuous scheduler shares
-    /// K/V blocks through (`ent serve|loadgen --kv-pool-bytes`). Only
-    /// consulted when prefix sharing is on; 0 disables sharing outright.
-    pub kv_pool_bytes: usize,
-    /// Cross-request **prefix sharing** (`ent serve|loadgen
-    /// --prefix-share on|off`): completed prefill prefixes are published
-    /// to the pool's radix index, and an admission whose prompt prefix
-    /// is resident adopts the physical blocks — 0 encode events and 0
-    /// prefill MACs for the shared rows, copy-on-write on divergence
-    /// (bit-identical either way, `tests/kv_share.rs`). `None` picks the
-    /// mode default — **on** under continuous scheduling, off under
-    /// window batching (which never interleaves requests). Pool counters
-    /// ride the metrics snapshots.
-    pub prefix_share: Option<bool>,
-    /// **Speculative decoding** under the continuous scheduler (`ent
-    /// serve|loadgen --spec-decode on|off`): a draft model proposes up
-    /// to `spec_k − 1` tokens per sequence per round, the target model
-    /// verifies the whole window in one coalesced step, accepts the
-    /// longest greedy-matching prefix, and rolls rejected tokens back
-    /// via `KvCache::truncate`. Greedy verification is bit-exact, so
-    /// output is identical to sequential decode with the flag on or
-    /// off (`tests/spec_decode.rs`); acceptance counters ride the
-    /// metrics snapshots. `None` picks the mode default — **off**
-    /// (speculation trades wasted draft/verify work for serial-latency
-    /// wins, an explicit opt-in). Window mode ignores it.
-    pub spec_decode: Option<bool>,
-    /// Speculation window: 1 carried token plus up to `spec_k − 1`
-    /// draft tokens verified per round. `spec_k ≤ 1` leaves no room to
-    /// draft and degenerates to plain decode.
-    pub spec_k: usize,
-    /// Which model drafts ([`DraftKind`]): `Tiny` is the deployment
-    /// shape; `Oracle` / `AntiOracle` pin the acceptance ceiling and
-    /// floor deterministically for tests and bench rows.
-    pub draft: DraftKind,
-}
-
-impl Default for Config {
-    fn default() -> Self {
-        Config {
-            model: ModelSpec::tinynet(),
-            artifact_dir: crate::runtime::default_artifact_dir(),
-            policy: BatchPolicy::default(),
-            backend: Backend::Artifacts,
-            mode: ServeMode::Window,
-            twin_arch: ArchKind::SystolicOs,
-            twin_variant: Variant::EntOurs,
-            encode_cache_bytes: 0,
-            kv_prepack: None,
-            kv_pool_bytes: 8 << 20,
-            prefix_share: None,
-            spec_decode: None,
-            spec_k: 4,
-            draft: DraftKind::Tiny,
-        }
-    }
-}
-
-impl Config {
-    /// Artifact-free native serving on `shards` engine shards.
-    pub fn native(shards: usize) -> Config {
-        Config {
-            backend: Backend::Native {
-                shards: shards.max(1),
-            },
-            ..Default::default()
-        }
-    }
-
-    /// Continuous-batching native serving on `shards` engine shards.
-    pub fn continuous(shards: usize) -> Config {
-        Config {
-            mode: ServeMode::Continuous(ContinuousPolicy::default()),
-            ..Config::native(shards)
-        }
-    }
-}
-
 /// One inference request: a flattened int8 CHW image.
 #[derive(Clone, Debug)]
 pub struct InferRequest {
@@ -298,6 +209,37 @@ impl TokenRequest {
     }
 }
 
+/// One unit of serving work — either workload class, routed through the
+/// same admission, batching, pooling, and metrics path
+/// ([`Coordinator::submit_job`]).
+#[derive(Clone, Debug)]
+pub enum Job {
+    /// A CNN image inference ([`InferRequest`]).
+    Image(InferRequest),
+    /// A transformer prefill+decode request ([`TokenRequest`]).
+    Tokens(TokenRequest),
+}
+
+/// Routing metadata attached to a [`Job`]. The default is tenant 0 with
+/// no session — exactly the historical single-tenant behavior.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct JobMeta {
+    /// Admission-fairness tenant id: the router round-robins across
+    /// tenant queues weighted by [`Config::tenant_weights`].
+    pub tenant: u32,
+    /// Session-affinity key: under pooled serving, equal sessions are
+    /// pinned to the same decode-pool slot after handoff (so a
+    /// conversation keeps its engine locality).
+    pub session: Option<u64>,
+}
+
+/// The response to a [`Job`], same arm as the request.
+#[derive(Clone, Debug)]
+pub enum Response {
+    Image(InferResponse),
+    Tokens(TokenResponse),
+}
+
 /// Response to a [`TokenRequest`].
 #[derive(Clone, Debug)]
 pub struct TokenResponse {
@@ -309,6 +251,15 @@ pub struct TokenResponse {
     pub generated: Vec<u16>,
     /// Wall-clock latency from enqueue to response.
     pub latency_us: u64,
+    /// Time to first token: enqueue → the end of the step that completed
+    /// this sequence's prefill (continuous mode). Window mode serves a
+    /// request in one shot, so there it equals `latency_us`.
+    pub ttft_us: u64,
+    /// Decode engine assignment: under pooled serving
+    /// ([`ConfigBuilder::pools`]) the decode-pool slot the sequence was
+    /// pinned to at handoff (equal [`JobMeta::session`]s map to equal
+    /// slots); 0 in unified and window modes.
+    pub decode_slot: usize,
     /// Token jobs grouped into the same execution batch (window mode)
     /// or coalesced into the sequence's final step (continuous mode).
     pub batch_size: usize,
@@ -328,21 +279,30 @@ pub struct InferResponse {
     pub sim_latency_ms: f64,
 }
 
-struct Job {
+/// How a served image job delivers its result (one-shot, so errors and
+/// successes both consume it).
+type ImageRespond = Box<dyn FnOnce(std::result::Result<InferResponse, String>) + Send>;
+/// How a served token job delivers its result.
+type TokenRespond = Box<dyn FnOnce(std::result::Result<TokenResponse, String>) + Send>;
+
+struct ImageJob {
     image: Vec<i8>,
+    #[allow(dead_code)] // routed, but images carry no per-tenant queue yet
+    meta: JobMeta,
     enqueued: Instant,
-    respond: Sender<std::result::Result<InferResponse, String>>,
+    respond: ImageRespond,
 }
 
 struct TokenJob {
     tokens: Vec<u16>,
     max_new: usize,
+    meta: JobMeta,
     enqueued: Instant,
-    respond: Sender<std::result::Result<TokenResponse, String>>,
+    respond: TokenRespond,
 }
 
 enum Msg {
-    Job(Job),
+    Image(ImageJob),
     Tokens(TokenJob),
     Shutdown,
 }
@@ -361,8 +321,11 @@ pub struct Coordinator {
 
 impl Coordinator {
     /// Start the executor thread; compiles all artifacts up front.
-    /// Fails fast (before returning) if any artifact is missing.
+    /// Fails fast (before returning) if any artifact is missing — and,
+    /// via [`Config::validate`], if the configuration combines
+    /// incompatible features.
     pub fn start(cfg: Config) -> Result<Coordinator> {
+        cfg.validate()?;
         let (tx, rx) = mpsc::channel::<Msg>();
         let metrics = Arc::new(Metrics::new());
         let m2 = metrics.clone();
@@ -391,19 +354,71 @@ impl Coordinator {
         }
     }
 
-    /// Submit one request; returns a receiver for the response.
-    pub fn submit(&self, req: InferRequest) -> Receiver<std::result::Result<InferResponse, String>> {
+    /// Submit one unit of work with routing metadata; returns a receiver
+    /// for the matching [`Response`] arm. This is the unified API both
+    /// workload classes route through — [`Coordinator::submit`] and
+    /// [`Coordinator::submit_tokens`] are typed conveniences over it.
+    pub fn submit_job(
+        &self,
+        job: Job,
+        meta: JobMeta,
+    ) -> Receiver<std::result::Result<Response, String>> {
         let (tx, rx) = mpsc::channel();
-        let job = Job {
-            image: req.image,
-            enqueued: Instant::now(),
-            respond: tx,
-        };
         // Serving time starts at the first arrival (the tokens/s
         // denominator — see `Metrics::record_arrival`).
         self.metrics.record_arrival();
         // If the executor is gone the receiver will simply disconnect.
-        let _ = self.tx.send(Msg::Job(job));
+        match job {
+            Job::Image(req) => {
+                let respond: ImageRespond = Box::new(move |r| {
+                    let _ = tx.send(r.map(Response::Image));
+                });
+                let _ = self.tx.send(Msg::Image(ImageJob {
+                    image: req.image,
+                    meta,
+                    enqueued: Instant::now(),
+                    respond,
+                }));
+            }
+            Job::Tokens(req) => {
+                let respond: TokenRespond = Box::new(move |r| {
+                    let _ = tx.send(r.map(Response::Tokens));
+                });
+                let _ = self.tx.send(Msg::Tokens(TokenJob {
+                    tokens: req.tokens,
+                    max_new: req.max_new_tokens,
+                    meta,
+                    enqueued: Instant::now(),
+                    respond,
+                }));
+            }
+        }
+        rx
+    }
+
+    /// Blocking convenience over [`Coordinator::submit_job`].
+    pub fn infer_job(&self, job: Job, meta: JobMeta) -> Result<Response> {
+        let rx = self.submit_job(job, meta);
+        match rx.recv() {
+            Ok(Ok(r)) => Ok(r),
+            Ok(Err(e)) => bail!("inference failed: {e}"),
+            Err(_) => bail!("coordinator shut down"),
+        }
+    }
+
+    /// Submit one image request; returns a receiver for the response.
+    pub fn submit(&self, req: InferRequest) -> Receiver<std::result::Result<InferResponse, String>> {
+        let (tx, rx) = mpsc::channel();
+        self.metrics.record_arrival();
+        let respond: ImageRespond = Box::new(move |r| {
+            let _ = tx.send(r);
+        });
+        let _ = self.tx.send(Msg::Image(ImageJob {
+            image: req.image,
+            meta: JobMeta::default(),
+            enqueued: Instant::now(),
+            respond,
+        }));
         rx
     }
 
@@ -424,14 +439,17 @@ impl Coordinator {
         req: TokenRequest,
     ) -> Receiver<std::result::Result<TokenResponse, String>> {
         let (tx, rx) = mpsc::channel();
-        let job = TokenJob {
+        self.metrics.record_arrival();
+        let respond: TokenRespond = Box::new(move |r| {
+            let _ = tx.send(r);
+        });
+        let _ = self.tx.send(Msg::Tokens(TokenJob {
             tokens: req.tokens,
             max_new: req.max_new_tokens,
+            meta: JobMeta::default(),
             enqueued: Instant::now(),
-            respond: tx,
-        };
-        self.metrics.record_arrival();
-        let _ = self.tx.send(Msg::Tokens(job));
+            respond,
+        }));
         rx
     }
 
@@ -639,6 +657,10 @@ fn executor_thread(
     // Continuous mode: hand the channel to the step-loop scheduler.
     if let ServeMode::Continuous(pol) = cfg.mode {
         if let Executor::Native { model, lm, shards } = &exec {
+            // Disaggregated pools report occupancy/tokens per pool.
+            if let Some(p) = cfg.pools {
+                metrics.configure_pools(p.prefill, p.decode);
+            }
             // Shared prefix KV pool: on by default under continuous
             // scheduling (prefix sharing needs interleaved requests to
             // pay off). Completed prefixes are published to the radix
@@ -689,6 +711,8 @@ fn executor_thread(
                 sim_latency_ms,
                 kv_pool,
                 spec,
+                pools: cfg.pools,
+                tenant_weights: cfg.tenant_weights.clone(),
             });
         }
         return;
@@ -698,10 +722,10 @@ fn executor_thread(
     let classes = cfg.model.classes;
     loop {
         // Block for the first job of either kind.
-        let mut images: Vec<Job> = Vec::new();
+        let mut images: Vec<ImageJob> = Vec::new();
         let mut tokens: Vec<TokenJob> = Vec::new();
         match rx.recv() {
-            Ok(Msg::Job(j)) => images.push(j),
+            Ok(Msg::Image(j)) => images.push(j),
             Ok(Msg::Tokens(t)) => tokens.push(t),
             Ok(Msg::Shutdown) | Err(_) => return,
         }
@@ -727,7 +751,7 @@ fn executor_thread(
             };
             let left = effective.saturating_duration_since(Instant::now());
             match rx.recv_timeout(left) {
-                Ok(Msg::Job(j)) => images.push(j),
+                Ok(Msg::Image(j)) => images.push(j),
                 Ok(Msg::Tokens(t)) => tokens.push(t),
                 Ok(Msg::Shutdown) | Err(RecvTimeoutError::Disconnected) => {
                     shutdown = true;
@@ -829,20 +853,25 @@ fn run_token_batch(exec: &Executor, metrics: &Metrics, batch: Vec<TokenJob>) {
     }
     for (job, out) in batch.into_iter().zip(outs) {
         let latency_us = job.enqueued.elapsed().as_micros() as u64;
+        let prompt_len = job.tokens.len();
         match out.unwrap_or_else(|| Err("shard dropped token job".into())) {
             Ok((logits, generated)) => {
                 metrics.record(latency_us, bsize);
-                metrics.record_tokens((job.tokens.len() + generated.len()) as u64);
-                let _ = job.respond.send(Ok(TokenResponse {
+                metrics.record_tokens((prompt_len + generated.len()) as u64);
+                (job.respond)(Ok(TokenResponse {
                     logits,
                     generated,
                     latency_us,
+                    // One-shot window serving: the first token lands
+                    // together with the full response.
+                    ttft_us: latency_us,
+                    decode_slot: 0,
                     batch_size: bsize,
                 }));
             }
             Err(e) => {
                 metrics.record_error();
-                let _ = job.respond.send(Err(e));
+                (job.respond)(Err(e));
             }
         }
     }
@@ -853,88 +882,74 @@ fn run_batch(
     exec: &Executor,
     cfg: &Config,
     metrics: &Metrics,
-    batch: Vec<Job>,
+    batch: Vec<ImageJob>,
     input_len: usize,
     classes: usize,
     sim_energy_uj: f64,
     sim_latency_ms: f64,
 ) {
     // Validate inputs; reject malformed ones individually.
-    let mut valid = Vec::with_capacity(batch.len());
+    let mut queue = Vec::with_capacity(batch.len());
     for job in batch {
         if job.image.len() != input_len {
             metrics.record_error();
-            let _ = job.respond.send(Err(format!(
+            (job.respond)(Err(format!(
                 "bad input: {} elements, expected {input_len}",
                 job.image.len()
             )));
         } else {
-            valid.push(job);
+            queue.push(job);
         }
     }
-    if valid.is_empty() {
-        return;
-    }
-    // Pick the execution batch size. Artifacts are compiled for fixed
-    // shapes, so take the smallest that fits and pad with the last
-    // image (discarded on output); the native engines run any shape,
-    // so execute exactly what's queued — padding would pay a full
-    // bit-level forward per discarded image.
-    let got = valid.len();
-    let bsize = match exec {
-        Executor::Native { .. } => got.min(cfg.policy.max_batch(&cfg.model)),
-        Executor::Artifacts(_) => *cfg
-            .model
-            .batch_sizes
-            .iter()
-            .find(|&&b| b >= got)
-            .unwrap_or(cfg.model.batch_sizes.last().unwrap()),
-    };
-    let take = got.min(bsize);
-    let (now, rest) = valid.split_at(take);
+    // Drain the window in execution-batch-sized chunks (a window can
+    // overflow the largest compiled batch).
+    while !queue.is_empty() {
+        let got = queue.len();
+        // Pick the execution batch size. Artifacts are compiled for
+        // fixed shapes, so take the smallest that fits and pad with the
+        // last image (discarded on output); the native engines run any
+        // shape, so execute exactly what's queued — padding would pay a
+        // full bit-level forward per discarded image.
+        let bsize = match exec {
+            Executor::Native { .. } => got.min(cfg.policy.max_batch(&cfg.model)),
+            Executor::Artifacts(_) => *cfg
+                .model
+                .batch_sizes
+                .iter()
+                .find(|&&b| b >= got)
+                .unwrap_or(cfg.model.batch_sizes.last().unwrap()),
+        };
+        let take = got.min(bsize);
+        let now: Vec<ImageJob> = queue.drain(..take).collect();
 
-    let mut flat = Vec::with_capacity(bsize * input_len);
-    for job in now {
-        flat.extend_from_slice(&job.image);
-    }
-    for _ in take..bsize {
-        flat.extend_from_slice(&now.last().unwrap().image); // pad
-    }
+        let mut flat = Vec::with_capacity(bsize * input_len);
+        for job in &now {
+            flat.extend_from_slice(&job.image);
+        }
+        for _ in take..bsize {
+            flat.extend_from_slice(&now.last().unwrap().image); // pad
+        }
 
-    let result = exec.cnn_forward(cfg, &flat, bsize);
-    match result {
-        Ok(logits) => {
-            for (i, job) in now.iter().enumerate() {
-                let latency_us = job.enqueued.elapsed().as_micros() as u64;
-                metrics.record(latency_us, bsize);
-                let _ = job.respond.send(Ok(InferResponse {
-                    logits: logits[i * classes..(i + 1) * classes].to_vec(),
-                    latency_us,
-                    batch_size: bsize,
-                    sim_energy_uj,
-                    sim_latency_ms,
-                }));
+        match exec.cnn_forward(cfg, &flat, bsize) {
+            Ok(logits) => {
+                for (i, job) in now.into_iter().enumerate() {
+                    let latency_us = job.enqueued.elapsed().as_micros() as u64;
+                    metrics.record(latency_us, bsize);
+                    (job.respond)(Ok(InferResponse {
+                        logits: logits[i * classes..(i + 1) * classes].to_vec(),
+                        latency_us,
+                        batch_size: bsize,
+                        sim_energy_uj,
+                        sim_latency_ms,
+                    }));
+                }
             }
-        }
-        Err(e) => {
-            for job in now {
-                metrics.record_error();
-                let _ = job.respond.send(Err(format!("execute: {e}")));
+            Err(e) => {
+                for job in now {
+                    metrics.record_error();
+                    (job.respond)(Err(format!("execute: {e}")));
+                }
             }
-        }
-    }
-    // Any overflow beyond the largest artifact batch recurses.
-    if !rest.is_empty() {
-        run_batch(exec, cfg, metrics, rest.to_vec(), input_len, classes, sim_energy_uj, sim_latency_ms);
-    }
-}
-
-impl Clone for Job {
-    fn clone(&self) -> Job {
-        Job {
-            image: self.image.clone(),
-            enqueued: self.enqueued,
-            respond: self.respond.clone(),
         }
     }
 }
@@ -957,6 +972,17 @@ mod tests {
     }
 
     #[test]
+    fn startup_rejects_invalid_configs() {
+        let mut cfg = Config::builder().native(2).build().expect("base");
+        cfg.spec_decode = Some(true); // speculation without continuous mode
+        let msg = match Coordinator::start(cfg) {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("start must re-validate hand-mutated configs"),
+        };
+        assert!(msg.contains("continuous"), "{msg}");
+    }
+
+    #[test]
     fn model_spec_artifact_names() {
         let m = ModelSpec::tinynet();
         assert_eq!(m.artifact(4), "tinynet_b4");
@@ -966,7 +992,8 @@ mod tests {
     #[test]
     fn native_backend_serves_without_artifacts() {
         use crate::util::prng::Rng;
-        let coord = Coordinator::start(Config::native(2)).expect("native coordinator");
+        let cfg = Config::builder().native(2).build().expect("config");
+        let coord = Coordinator::start(cfg).expect("native coordinator");
         let input_len = coord.model().input_len();
         let mut rng = Rng::new(0x17);
         let img = rng.i8_vec(input_len);
@@ -997,13 +1024,17 @@ mod tests {
 
     #[test]
     fn native_backend_serves_transformer_requests() {
-        let coord = Coordinator::start(Config::native(2)).expect("native coordinator");
+        let cfg = Config::builder().native(2).build().expect("config");
+        let coord = Coordinator::start(cfg).expect("native coordinator");
         let toks = vec![3u16, 1, 4, 1, 5];
         let first = coord
             .infer_tokens(TokenRequest::prefill(toks.clone()))
             .expect("token inference");
         assert_eq!(first.logits.len(), 64); // tiny vocab
         assert!(first.logits.iter().all(|x| x.is_finite()));
+        // Window mode answers in one shot: TTFT is the full latency.
+        assert_eq!(first.ttft_us, first.latency_us);
+        assert_eq!(first.decode_slot, 0);
         // Batching/sharding must not change logits (same invariant as
         // the CNN path): concurrent duplicates land in different batch
         // groupings and shards.
@@ -1032,13 +1063,50 @@ mod tests {
 
     #[test]
     fn native_backend_rejects_malformed_inputs() {
-        let coord = Coordinator::start(Config::native(1)).expect("native coordinator");
+        let cfg = Config::builder().native(1).build().expect("config");
+        let coord = Coordinator::start(cfg).expect("native coordinator");
         let bad = coord.submit(InferRequest {
             image: vec![0i8; 5],
         });
         let err = bad.recv().expect("response").expect_err("must reject");
         assert!(err.contains("bad input"), "{err}");
         assert!(coord.metrics().errors >= 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn unified_job_api_routes_both_workloads() {
+        use crate::util::prng::Rng;
+        let cfg = Config::builder().native(2).build().expect("config");
+        let coord = Coordinator::start(cfg).expect("native coordinator");
+        let mut rng = Rng::new(0x17);
+        let img = rng.i8_vec(coord.model().input_len());
+        let meta = JobMeta {
+            tenant: 3,
+            session: Some(7),
+        };
+        match coord
+            .infer_job(Job::Image(InferRequest { image: img.clone() }), meta)
+            .expect("image job")
+        {
+            Response::Image(r) => assert_eq!(r.logits.len(), 10),
+            Response::Tokens(_) => panic!("image job answered with tokens"),
+        }
+        match coord
+            .infer_job(Job::Tokens(TokenRequest::generate(vec![1, 2, 3], 2)), meta)
+            .expect("token job")
+        {
+            Response::Tokens(r) => {
+                assert_eq!(r.generated.len(), 2);
+                assert!(r.ttft_us <= r.latency_us);
+            }
+            Response::Image(_) => panic!("token job answered with an image"),
+        }
+        // The typed wrappers and the unified path serve identical bits.
+        let direct = coord
+            .infer(InferRequest { image: img })
+            .expect("typed image path");
+        assert_eq!(direct.logits.len(), 10);
         coord.shutdown();
     }
 }

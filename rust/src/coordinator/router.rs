@@ -1,0 +1,341 @@
+//! The admission router — the async front of the continuous scheduler.
+//!
+//! Arrivals land here before the step loop sees them. The router keeps
+//! one FIFO queue **per tenant** for token jobs (plus one global image
+//! FIFO, since CNN frames are stateless one-shots) and releases work to
+//! the scheduler through a **smooth weighted round-robin**: each pick,
+//! every tenant with queued work earns credit equal to its weight, the
+//! richest tenant wins the slot (ties break toward the lowest id), and
+//! the winner pays the active-weight total back. Over any window the
+//! admitted mix converges to the weight ratio, and a **single tenant
+//! degenerates to exact FIFO** — which is what keeps unified
+//! single-tenant serving bit-identical to the pre-router scheduler
+//! (`tests/disagg.rs`).
+//!
+//! Backpressure is two-level:
+//!
+//! * a **global cap** ([`ContinuousPolicy::queue_cap`](super::batcher::ContinuousPolicy)
+//!   counting pending + in-flight work) — the historical admission
+//!   bound, same wording;
+//! * a **per-tenant share cap**, only when tenant weights are
+//!   configured ([`Config::tenant_weights`](super::Config)): tenant `t`
+//!   may hold at most `queue_cap · w_t / Σw` pending slots, so a
+//!   flooding tenant exhausts its own share and is rejected while other
+//!   tenants' slots stay open (`tests/serving.rs`).
+//!
+//! Rejections (including admission-deadline expiry, which lives here
+//! too) keep the exact `backpressure:` / `deadline exceeded` wording
+//! `coordinator::loadgen` classifies by.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use super::metrics::Metrics;
+use super::{ImageJob, TokenJob};
+
+/// The single admission-rejection path: count it and answer the client.
+/// `loadgen` string-matches the `backpressure:` / `deadline exceeded`
+/// prefixes these messages carry — keep every rejection going through
+/// here so the wording and the counter stay in lockstep.
+fn reject_token(metrics: &Metrics, job: TokenJob, msg: String) {
+    metrics.record_rejected();
+    (job.respond)(Err(msg));
+}
+
+fn reject_image(metrics: &Metrics, job: ImageJob, msg: String) {
+    metrics.record_rejected();
+    (job.respond)(Err(msg));
+}
+
+pub(super) struct AdmissionRouter {
+    queue_cap: usize,
+    /// Configured `(tenant, weight)` pairs; empty = unweighted (no
+    /// per-tenant caps, every tenant weight 1).
+    weights: Vec<(u32, u32)>,
+    /// Per-tenant token FIFOs (BTreeMap so iteration — and therefore
+    /// round-robin tie-breaking — is deterministic by tenant id).
+    tok: BTreeMap<u32, VecDeque<TokenJob>>,
+    img: VecDeque<ImageJob>,
+    /// Smooth-WRR credit per tenant.
+    credit: BTreeMap<u32, i64>,
+}
+
+impl AdmissionRouter {
+    pub(super) fn new(queue_cap: usize, weights: &[(u32, u32)]) -> AdmissionRouter {
+        AdmissionRouter {
+            queue_cap: queue_cap.max(1),
+            weights: weights.to_vec(),
+            tok: BTreeMap::new(),
+            img: VecDeque::new(),
+            credit: BTreeMap::new(),
+        }
+    }
+
+    fn weight(&self, tenant: u32) -> u32 {
+        self.weights
+            .iter()
+            .find(|(t, _)| *t == tenant)
+            .map(|&(_, w)| w.max(1))
+            .unwrap_or(1)
+    }
+
+    /// Pending jobs of both kinds (the router's share of the admission
+    /// load; the scheduler adds its in-flight count).
+    pub(super) fn pending(&self) -> usize {
+        self.img.len() + self.tok.values().map(|q| q.len()).sum::<usize>()
+    }
+
+    /// Tenant `t`'s pending share cap, when weights are configured:
+    /// its weight's fraction of the global cap, at least 1.
+    fn tenant_cap(&self, tenant: u32) -> Option<usize> {
+        if self.weights.is_empty() {
+            return None;
+        }
+        let total: u32 = self.weights.iter().map(|&(_, w)| w.max(1)).sum();
+        let w = self.weight(tenant);
+        Some(((self.queue_cap * w as usize) / total.max(w) as usize).max(1))
+    }
+
+    /// Admit or reject one token arrival. `inflight` is the scheduler's
+    /// live-sequence count — the global bound covers queued + in-flight
+    /// work, exactly the historical admission rule.
+    pub(super) fn push_token(&mut self, job: TokenJob, inflight: usize, metrics: &Metrics) {
+        let load = self.pending() + inflight;
+        if load >= self.queue_cap {
+            reject_token(metrics, job, format!("backpressure: queue full ({load} in flight)"));
+            return;
+        }
+        let tenant = job.meta.tenant;
+        let queued = self.tok.get(&tenant).map_or(0, |q| q.len());
+        if let Some(cap) = self.tenant_cap(tenant) {
+            if queued >= cap {
+                reject_token(
+                    metrics,
+                    job,
+                    format!(
+                        "backpressure: tenant {tenant} over its weighted share \
+                         ({queued} queued, cap {cap})"
+                    ),
+                );
+                return;
+            }
+        }
+        self.tok.entry(tenant).or_default().push_back(job);
+    }
+
+    /// Admit or reject one image arrival (images share the global bound
+    /// but ride one tenant-less FIFO — a CNN frame has no session and
+    /// drains whole every step, so weighted interleaving buys nothing).
+    pub(super) fn push_image(&mut self, job: ImageJob, inflight: usize, metrics: &Metrics) {
+        let load = self.pending() + inflight;
+        if load >= self.queue_cap {
+            reject_image(metrics, job, format!("backpressure: queue full ({load} in flight)"));
+            return;
+        }
+        self.img.push_back(job);
+    }
+
+    /// Release the next token job by smooth weighted round-robin.
+    pub(super) fn next_token(&mut self) -> Option<TokenJob> {
+        let active: Vec<u32> = self
+            .tok
+            .iter()
+            .filter(|(_, q)| !q.is_empty())
+            .map(|(&t, _)| t)
+            .collect();
+        if active.is_empty() {
+            return None;
+        }
+        let total: i64 = active.iter().map(|&t| self.weight(t) as i64).sum();
+        let mut best = active[0];
+        let mut best_credit = i64::MIN;
+        for &t in &active {
+            let w = self.weight(t) as i64;
+            let c = self.credit.entry(t).or_insert(0);
+            *c += w;
+            // Strict `>` over ascending ids: ties go to the lowest id.
+            if *c > best_credit {
+                best_credit = *c;
+                best = t;
+            }
+        }
+        *self.credit.get_mut(&best).expect("winner has credit") -= total;
+        self.tok.get_mut(&best).expect("winner has a queue").pop_front()
+    }
+
+    /// Drain every pending image (the step loop serves all queued CNN
+    /// frames each iteration, as it always has).
+    pub(super) fn drain_images(&mut self) -> VecDeque<ImageJob> {
+        std::mem::take(&mut self.img)
+    }
+
+    /// Reject every pending request that has waited past the admission
+    /// deadline.
+    pub(super) fn expire(&mut self, deadline_us: u64, metrics: &Metrics) {
+        let expired = |waited_us: u128| -> Option<String> {
+            (waited_us > deadline_us as u128).then(|| {
+                format!(
+                    "deadline exceeded before admission \
+                     ({waited_us} µs waited, {deadline_us} µs allowed)"
+                )
+            })
+        };
+        for q in self.tok.values_mut() {
+            let mut kept = VecDeque::with_capacity(q.len());
+            while let Some(job) = q.pop_front() {
+                match expired(job.enqueued.elapsed().as_micros()) {
+                    Some(msg) => reject_token(metrics, job, msg),
+                    None => kept.push_back(job),
+                }
+            }
+            *q = kept;
+        }
+        let mut kept = VecDeque::with_capacity(self.img.len());
+        while let Some(job) = self.img.pop_front() {
+            match expired(job.enqueued.elapsed().as_micros()) {
+                Some(msg) => reject_image(metrics, job, msg),
+                None => kept.push_back(job),
+            }
+        }
+        self.img = kept;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{JobMeta, TokenRespond};
+    use super::*;
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    fn job(tenant: u32, tag: u16) -> TokenJob {
+        let respond: TokenRespond = Box::new(|_| {});
+        TokenJob {
+            tokens: vec![tag],
+            max_new: 0,
+            meta: JobMeta {
+                tenant,
+                session: None,
+            },
+            enqueued: Instant::now(),
+            respond,
+        }
+    }
+
+    /// A job whose rejection message (if any) lands on a channel.
+    fn observed_job(tenant: u32) -> (TokenJob, mpsc::Receiver<String>) {
+        let (tx, rx) = mpsc::channel();
+        let respond: TokenRespond = Box::new(move |r| {
+            if let Err(e) = r {
+                let _ = tx.send(e);
+            }
+        });
+        (
+            TokenJob {
+                tokens: vec![0],
+                max_new: 0,
+                meta: JobMeta {
+                    tenant,
+                    session: None,
+                },
+                enqueued: Instant::now(),
+                respond,
+            },
+            rx,
+        )
+    }
+
+    /// One tenant degenerates to exact FIFO — the property that keeps
+    /// single-tenant unified serving bit-identical to the pre-router
+    /// scheduler.
+    #[test]
+    fn single_tenant_is_fifo() {
+        let m = Metrics::new();
+        let mut r = AdmissionRouter::new(16, &[]);
+        for tag in 0..5u16 {
+            r.push_token(job(0, tag), 0, &m);
+        }
+        for tag in 0..5u16 {
+            assert_eq!(r.next_token().expect("queued").tokens, vec![tag]);
+        }
+        assert!(r.next_token().is_none());
+        assert_eq!(m.snapshot().rejected, 0);
+    }
+
+    /// Smooth WRR: with weights 2:1, six picks release tenants in the
+    /// canonical 1,2,1,1,1,2 order — a 4:2 mix, never a starve-streak.
+    #[test]
+    fn weighted_round_robin_matches_weights() {
+        let m = Metrics::new();
+        let mut r = AdmissionRouter::new(64, &[(1, 2), (2, 1)]);
+        for tag in 0..4u16 {
+            r.push_token(job(1, tag), 0, &m);
+        }
+        for tag in 0..2u16 {
+            r.push_token(job(2, tag), 0, &m);
+        }
+        let order: Vec<u32> = (0..6).map(|_| r.next_token().expect("queued").meta.tenant).collect();
+        assert_eq!(order, vec![1, 2, 1, 1, 1, 2]);
+    }
+
+    /// The per-tenant share cap rejects a flooder at its weighted slice
+    /// of the queue while the global cap still has room.
+    #[test]
+    fn tenant_share_cap_bounds_a_flooder() {
+        let m = Metrics::new();
+        let mut r = AdmissionRouter::new(12, &[(1, 1), (2, 1)]);
+        let mut rejections = Vec::new();
+        for _ in 0..10 {
+            let (j, rx) = observed_job(1);
+            r.push_token(j, 0, &m);
+            rejections.push(rx);
+        }
+        // Equal weights over cap 12 → share cap 6 each.
+        let msgs: Vec<String> = rejections.iter().filter_map(|rx| rx.try_recv().ok()).collect();
+        assert_eq!(msgs.len(), 4, "10 pushes against share cap 6 reject 4");
+        assert!(msgs.iter().all(|e| e.contains("backpressure")), "{msgs:?}");
+        assert_eq!(m.snapshot().rejected, 4);
+        // The other tenant's share is untouched.
+        for _ in 0..6 {
+            let (j, rx) = observed_job(2);
+            r.push_token(j, 0, &m);
+            assert!(rx.try_recv().is_err(), "tenant 2 must fit its own share");
+        }
+    }
+
+    /// Without configured weights there is no per-tenant cap — only the
+    /// historical global bound, with the historical wording.
+    #[test]
+    fn unweighted_router_keeps_global_backpressure_only() {
+        let m = Metrics::new();
+        let mut r = AdmissionRouter::new(3, &[]);
+        for _ in 0..3 {
+            let (j, rx) = observed_job(7);
+            r.push_token(j, 0, &m);
+            assert!(rx.try_recv().is_err());
+        }
+        let (j, rx) = observed_job(7);
+        r.push_token(j, 0, &m);
+        let e = rx.try_recv().expect("over the global cap");
+        assert!(e.contains("backpressure: queue full"), "{e}");
+        // In-flight sequences count against the same bound.
+        let mut r = AdmissionRouter::new(3, &[]);
+        let (j, rx) = observed_job(7);
+        r.push_token(j, 3, &m);
+        assert!(rx.try_recv().expect("inflight fills the cap").contains("backpressure"));
+    }
+
+    /// Admission-deadline expiry rejects with the historical wording.
+    #[test]
+    fn expire_rejects_overdue_jobs() {
+        let m = Metrics::new();
+        let mut r = AdmissionRouter::new(16, &[]);
+        let (j, rx) = observed_job(0);
+        r.push_token(j, 0, &m);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        r.expire(1, &m);
+        let e = rx.try_recv().expect("must expire");
+        assert!(e.contains("deadline exceeded before admission"), "{e}");
+        assert!(r.next_token().is_none(), "expired job must leave the queue");
+        assert_eq!(m.snapshot().rejected, 1);
+    }
+}

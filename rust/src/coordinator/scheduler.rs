@@ -10,13 +10,14 @@
 //! iteration.
 //!
 //! ```text
-//!             submit()/submit_tokens()
+//!             submit_job()/submit()/submit_tokens()
 //!                      │ mpsc
 //!                      ▼
-//!    ┌─ admission ──────────────────────────────┐
+//!    ┌─ admission router (per-tenant WRR queues) ─┐
 //!    │ queue_cap exceeded  → reject "backpressure"│
+//!    │ over tenant share   → reject "backpressure"│
 //!    │ waited > deadline_us → reject "deadline"   │
-//!    └──────────────┬────────────────────────────┘
+//!    └──────────────┬─────────────────────────────┘
 //!                   ▼ admit (≤ max_inflight live sequences)
 //!    ┌─ step loop, every iteration ──────────────────────────────┐
 //!    │ each in-flight sequence contributes its next rows:        │
@@ -40,6 +41,21 @@
 //! shards — produces bit-identical logits and generated tokens to
 //! running each request alone ([`super::generate_sequential`]). Locked
 //! across all five architectures by `tests/serve_equivalence.rs`.
+//!
+//! **Disaggregated pools** ([`super::ConfigBuilder::pools`]): the shard
+//! pool splits into a prefill-heavy and a decode-heavy engine pool.
+//! A sequence prefills on the prefill pool (chunked, work-stolen, CNN
+//! frames riding along), then **hands off**: its paged `KvBlock` Arcs
+//! and `PackedCode` sidecars move to a pinned decode-pool slot — the
+//! block table is an `Arc` move, so nothing is copied and nothing
+//! re-encodes (0 encode events for the transferred rows; the planner
+//! and `soc::energy::handoff_cost` price it that way). Equal
+//! [`super::JobMeta::session`] keys pin to equal slots (session
+//! affinity); sessionless sequences round-robin. The handoff costs no
+//! extra step: the first decode token is fed the iteration after
+//! prefill completes, exactly the cadence of the unified path — which
+//! is why pooled output is bit-identical to single-pool serving
+//! (`tests/disagg.rs`). The grouping differs; the values never do.
 //!
 //! **Encode reuse**: when the coordinator serves with an
 //! encoded-weight cache (`Config::encode_cache_bytes`), every coalesced
@@ -73,11 +89,12 @@
 //! exact-integer arithmetic as plain decode — so output is
 //! bit-identical with speculation on or off (`tests/spec_decode.rs`);
 //! the drafter only moves the acceptance rate, never the answer.
-//! Acceptance counters ride the metrics snapshots.
+//! Acceptance counters ride the metrics snapshots. Under pooled
+//! serving only decode-pool residents draft (a sequence parked in
+//! handoff carries one unfed token but has not reached its slot yet).
 
-use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{Receiver, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -89,7 +106,8 @@ use crate::nn::transformer::{QuantTransformer, StepSeq};
 
 use super::batcher::ContinuousPolicy;
 use super::metrics::Metrics;
-use super::{DraftKind, InferResponse, Job, Msg, TokenJob, TokenResponse};
+use super::router::AdmissionRouter;
+use super::{DraftKind, ImageJob, InferResponse, Msg, PoolSplit, TokenJob, TokenResponse};
 
 /// Speculative-decoding bundle (`Config::spec_decode`): the draft
 /// model, a dedicated engine it runs on, the window size, and the
@@ -123,6 +141,24 @@ pub(super) struct SchedulerCtx<'a> {
     pub kv_pool: Option<Arc<KvPool>>,
     /// Speculative decoding (`Config::spec_decode`); `None` = off.
     pub spec: Option<SpecCtx>,
+    /// Disaggregated prefill/decode pools (`Config::pools`); `None`
+    /// serves every phase on the one shared shard pool.
+    pub pools: Option<PoolSplit>,
+    /// Per-tenant admission weights for the router's WRR.
+    pub tenant_weights: Vec<(u32, u32)>,
+}
+
+/// Where an in-flight sequence currently lives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    /// Feeding prompt positions (on the prefill pool, when pooled).
+    Prefill,
+    /// Prefill complete, first decode token carried, KV blocks in
+    /// transit to a decode slot — promoted at the top of the next
+    /// iteration. Only pooled serving parks sequences here.
+    Handoff,
+    /// Greedy feedback on a pinned decode slot.
+    Decode,
 }
 
 /// One in-flight sequence.
@@ -149,6 +185,13 @@ struct SeqState {
     win_logits: Vec<Vec<f32>>,
     /// Sequences coalesced into this one's most recent step group.
     group: usize,
+    /// Lifecycle phase (pooled serving moves Prefill → Handoff →
+    /// Decode; unified serving stays in Prefill, which it never reads).
+    phase: Phase,
+    /// Stamped at the end of the step that completed prefill.
+    ttft_us: Option<u64>,
+    /// Decode-pool slot pinned at handoff (0 in unified mode).
+    slot: usize,
 }
 
 /// One sequence's share of a step: feed `queue[fed..fed + feed]`.
@@ -162,13 +205,104 @@ enum Task<'a> {
     /// One coalesced `forward_step` over several sequences.
     Tokens(Vec<SeqTask<'a>>),
     /// One CNN image forward.
-    Image(Job),
+    Image(ImageJob),
 }
 
 /// Run the continuous-batching step loop until shutdown. Accepted work
 /// (admitted sequences and queued jobs) is finished before returning;
 /// messages arriving after shutdown get channel disconnects.
 pub(super) fn run(ctx: SchedulerCtx<'_>) {
+    match ctx.pools {
+        Some(split) => run_pooled(ctx, split),
+        None => run_unified(ctx),
+    }
+}
+
+/// Pump every waiting arrival into the router. Returns `true` once a
+/// shutdown is seen (the caller drains accepted work before exiting).
+fn route_arrival(
+    msg: Msg,
+    ctx: &SchedulerCtx<'_>,
+    router: &mut AdmissionRouter,
+    inflight_len: usize,
+) -> bool {
+    match msg {
+        Msg::Tokens(t) => router.push_token(t, inflight_len, ctx.metrics),
+        Msg::Image(j) => router.push_image(j, inflight_len, ctx.metrics),
+        Msg::Shutdown => return true,
+    }
+    false
+}
+
+/// Move released token jobs into the in-flight set, up to
+/// `max_inflight`. Malformed requests are rejected here, before they
+/// ever touch the step loop.
+fn admit_pending(
+    ctx: &SchedulerCtx<'_>,
+    router: &mut AdmissionRouter,
+    inflight: &mut Vec<SeqState>,
+) {
+    while inflight.len() < ctx.pol.max_inflight.max(1) {
+        let Some(mut job) = router.next_token() else {
+            break;
+        };
+        if let Err(e) = ctx.lm.check_request(&job.tokens, job.max_new) {
+            ctx.metrics.record_error();
+            (job.respond)(Err(e));
+            continue;
+        }
+        let queue = std::mem::take(&mut job.tokens);
+        let mut caches = ctx.lm.empty_caches();
+        // Warm-prefix admission: adopt every radix-resident block of
+        // the prompt — those positions are never fed through the
+        // stack (0 encode events, 0 prefill MACs), but they count as
+        // served tokens: the client gets their K/V all the same. The
+        // last prompt position is always fed fresh (it produces the
+        // first logits).
+        let mut fed = 0usize;
+        if let Some(pool) = &ctx.kv_pool {
+            fed = pool.attach(&queue, &mut caches);
+            if fed > 0 {
+                ctx.metrics.record_tokens(fed as u64);
+            }
+        }
+        inflight.push(SeqState {
+            caches,
+            prompt_len: queue.len(),
+            inserted: false,
+            queue,
+            fed,
+            generated: Vec::with_capacity(job.max_new),
+            logits: Vec::new(),
+            drafted: 0,
+            win_logits: Vec::new(),
+            group: 1,
+            phase: Phase::Prefill,
+            ttft_us: None,
+            slot: 0,
+            job,
+        });
+    }
+}
+
+/// Complete one sequence: record it and answer the client.
+fn finish(metrics: &Metrics, s: SeqState) {
+    let latency_us = s.job.enqueued.elapsed().as_micros() as u64;
+    metrics.record(latency_us, s.group);
+    let ttft_us = s.ttft_us.unwrap_or(latency_us);
+    (s.job.respond)(Ok(TokenResponse {
+        logits: s.logits,
+        generated: s.generated,
+        latency_us,
+        ttft_us,
+        decode_slot: s.slot,
+        batch_size: s.group,
+    }));
+}
+
+/// The single-pool step loop — the degenerate (and historical) case:
+/// every phase of every sequence shares one work-stolen shard pool.
+fn run_unified(ctx: SchedulerCtx<'_>) {
     let input_len = ctx.cnn.input_len();
     let nshards = ctx.shards.len().max(1);
     // One attention scratch per shard, reused across every step the
@@ -180,21 +314,20 @@ pub(super) fn run(ctx: SchedulerCtx<'_>) {
     // The draft model's own scratch (drafting runs serially on the
     // scheduler thread, before the step fans out).
     let mut draft_scratch = AttnScratch::new();
-    let mut pending_tok: VecDeque<TokenJob> = VecDeque::new();
-    let mut pending_img: VecDeque<Job> = VecDeque::new();
+    let mut router = AdmissionRouter::new(ctx.pol.queue_cap, &ctx.tenant_weights);
     let mut inflight: Vec<SeqState> = Vec::new();
     let mut shutting_down = false;
 
     loop {
         // -- arrivals ------------------------------------------------
-        let idle = inflight.is_empty() && pending_tok.is_empty() && pending_img.is_empty();
+        let idle = inflight.is_empty() && router.pending() == 0;
         if idle {
             if shutting_down {
                 return;
             }
             match ctx.rx.recv() {
                 Ok(msg) => {
-                    if admit_arrival(msg, &ctx, &mut pending_tok, &mut pending_img, &inflight) {
+                    if route_arrival(msg, &ctx, &mut router, inflight.len()) {
                         shutting_down = true;
                     }
                 }
@@ -204,7 +337,7 @@ pub(super) fn run(ctx: SchedulerCtx<'_>) {
         while !shutting_down {
             match ctx.rx.try_recv() {
                 Ok(msg) => {
-                    if admit_arrival(msg, &ctx, &mut pending_tok, &mut pending_img, &inflight) {
+                    if route_arrival(msg, &ctx, &mut router, inflight.len()) {
                         shutting_down = true;
                     }
                 }
@@ -215,50 +348,13 @@ pub(super) fn run(ctx: SchedulerCtx<'_>) {
             }
         }
 
-        // -- per-request deadlines over the pending queue -------------
+        // -- per-request deadlines over the pending queues ------------
         if ctx.pol.deadline_us > 0 {
-            expire_deadlines(&ctx, &mut pending_tok, &mut pending_img);
+            router.expire(ctx.pol.deadline_us, ctx.metrics);
         }
 
         // -- admit pending sequences into the in-flight set -----------
-        while inflight.len() < ctx.pol.max_inflight.max(1) {
-            let Some(mut job) = pending_tok.pop_front() else {
-                break;
-            };
-            if let Err(e) = ctx.lm.check_request(&job.tokens, job.max_new) {
-                ctx.metrics.record_error();
-                let _ = job.respond.send(Err(e));
-                continue;
-            }
-            let queue = std::mem::take(&mut job.tokens);
-            let mut caches = ctx.lm.empty_caches();
-            // Warm-prefix admission: adopt every radix-resident block of
-            // the prompt — those positions are never fed through the
-            // stack (0 encode events, 0 prefill MACs), but they count as
-            // served tokens: the client gets their K/V all the same. The
-            // last prompt position is always fed fresh (it produces the
-            // first logits).
-            let mut fed = 0usize;
-            if let Some(pool) = &ctx.kv_pool {
-                fed = pool.attach(&queue, &mut caches);
-                if fed > 0 {
-                    ctx.metrics.record_tokens(fed as u64);
-                }
-            }
-            inflight.push(SeqState {
-                caches,
-                prompt_len: queue.len(),
-                inserted: false,
-                queue,
-                fed,
-                generated: Vec::with_capacity(job.max_new),
-                logits: Vec::new(),
-                drafted: 0,
-                win_logits: Vec::new(),
-                group: 1,
-                job,
-            });
-        }
+        admit_pending(&ctx, &mut router, &mut inflight);
 
         // -- draft phase: propose tokens for decode-phase sequences ---
         if let Some(spec) = &ctx.spec {
@@ -292,11 +388,12 @@ pub(super) fn run(ctx: SchedulerCtx<'_>) {
                 tasks.push(Task::Tokens(seqs));
             }
         }
-        let img_group = pending_img.len();
-        for job in pending_img.drain(..) {
+        let images = router.drain_images();
+        let img_group = images.len();
+        for job in images {
             if job.image.len() != input_len {
                 ctx.metrics.record_error();
-                let _ = job.respond.send(Err(format!(
+                (job.respond)(Err(format!(
                     "bad input: {} elements, expected {input_len}",
                     job.image.len()
                 )));
@@ -343,6 +440,11 @@ pub(super) fn run(ctx: SchedulerCtx<'_>) {
             if s.drafted > 0 {
                 resolve_speculation(ctx.metrics, s);
             }
+            // The step that completes prefill produced the first
+            // logits — that's the time-to-first-token stamp.
+            if s.ttft_us.is_none() && s.fed >= s.prompt_len {
+                s.ttft_us = Some(s.job.enqueued.elapsed().as_micros() as u64);
+            }
             // Publish the completed prompt prefix to the radix index so
             // later admissions with the same prefix adopt these blocks
             // (first donor wins; re-publishing a warm-adopted prefix
@@ -366,87 +468,328 @@ pub(super) fn run(ctx: SchedulerCtx<'_>) {
                 continue;
             }
             // Complete: prompt fed, all tokens generated.
-            let s = inflight.swap_remove(i);
-            let latency_us = s.job.enqueued.elapsed().as_micros() as u64;
-            ctx.metrics.record(latency_us, s.group);
-            let _ = s.job.respond.send(Ok(TokenResponse {
-                logits: s.logits,
-                generated: s.generated,
-                latency_us,
-                batch_size: s.group,
-            }));
+            let done = inflight.swap_remove(i);
+            finish(ctx.metrics, done);
         }
     }
 }
 
-/// The single admission-rejection path: count it and answer the client.
-/// `loadgen` string-matches the `backpressure:` / `deadline exceeded`
-/// prefixes these messages carry — keep every rejection going through
-/// here so the wording and the counter stay in lockstep.
-fn reject<T>(metrics: &Metrics, respond: &Sender<std::result::Result<T, String>>, msg: String) {
-    metrics.record_rejected();
-    let _ = respond.send(Err(msg));
-}
+/// The disaggregated step loop: the first `split.prefill` shards form
+/// the prefill pool (chunked prompt prefill + CNN frames, work-stolen),
+/// the rest form the decode pool (one pinned slot per shard, greedy
+/// feedback + verify windows). Both pools execute concurrently inside
+/// one step, so the iteration cadence — and therefore the fed-token
+/// order every sequence sees — is exactly the unified loop's.
+fn run_pooled(ctx: SchedulerCtx<'_>, split: PoolSplit) {
+    let input_len = ctx.cnn.input_len();
+    let (pre_n, dec_n) = (split.prefill, split.decode);
+    let nshards = ctx.shards.len();
+    assert_eq!(
+        pre_n + dec_n,
+        nshards,
+        "pool split must cover the shard pool (validated by Config::validate)"
+    );
+    // Scratches 0..pre_n belong to the prefill pool's work-stealing
+    // workers; scratch pre_n + k is pinned to decode slot k.
+    let scratches: Vec<Mutex<AttnScratch>> =
+        (0..nshards).map(|_| Mutex::new(AttnScratch::new())).collect();
+    let mut draft_scratch = AttnScratch::new();
+    let mut router = AdmissionRouter::new(ctx.pol.queue_cap, &ctx.tenant_weights);
+    let mut inflight: Vec<SeqState> = Vec::new();
+    let mut shutting_down = false;
+    // Round-robin cursor for sessionless slot assignment.
+    let mut rr_slot = 0usize;
+    let (pre_shards, dec_shards) = ctx.shards.split_at(pre_n);
 
-/// Admission control for one arriving message. Returns `true` on
-/// shutdown.
-fn admit_arrival(
-    msg: Msg,
-    ctx: &SchedulerCtx<'_>,
-    pending_tok: &mut VecDeque<TokenJob>,
-    pending_img: &mut VecDeque<Job>,
-    inflight: &[SeqState],
-) -> bool {
-    let load = pending_tok.len() + pending_img.len() + inflight.len();
-    let full = load >= ctx.pol.queue_cap.max(1);
-    let backpressure = || format!("backpressure: queue full ({load} in flight)");
-    match msg {
-        Msg::Tokens(t) => {
-            if full {
-                reject(ctx.metrics, &t.respond, backpressure());
-            } else {
-                pending_tok.push_back(t);
+    loop {
+        // -- arrivals ------------------------------------------------
+        let idle = inflight.is_empty() && router.pending() == 0;
+        if idle {
+            if shutting_down {
+                return;
+            }
+            match ctx.rx.recv() {
+                Ok(msg) => {
+                    if route_arrival(msg, &ctx, &mut router, inflight.len()) {
+                        shutting_down = true;
+                    }
+                }
+                Err(_) => return,
             }
         }
-        Msg::Job(j) => {
-            if full {
-                reject(ctx.metrics, &j.respond, backpressure());
-            } else {
-                pending_img.push_back(j);
+        while !shutting_down {
+            match ctx.rx.try_recv() {
+                Ok(msg) => {
+                    if route_arrival(msg, &ctx, &mut router, inflight.len()) {
+                        shutting_down = true;
+                    }
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    shutting_down = true;
+                }
             }
         }
-        Msg::Shutdown => return true,
+
+        // -- per-request deadlines ------------------------------------
+        if ctx.pol.deadline_us > 0 {
+            router.expire(ctx.pol.deadline_us, ctx.metrics);
+            // Mid-handoff expiry: a sequence whose deadline passed
+            // between prefill completion and its first decode step
+            // rolls back cleanly — dropping the state releases its
+            // `Arc`ed KV blocks (any pool-published prefix stays, by
+            // design), the client gets the deadline wording, and the
+            // decode slot is never occupied.
+            let mut i = 0;
+            while i < inflight.len() {
+                let waited = inflight[i].job.enqueued.elapsed().as_micros();
+                if inflight[i].phase == Phase::Handoff && waited > ctx.pol.deadline_us as u128 {
+                    let s = inflight.swap_remove(i);
+                    ctx.metrics.record_rejected();
+                    (s.job.respond)(Err(format!(
+                        "deadline exceeded during pool handoff \
+                         ({waited} µs since enqueue, {} µs allowed)",
+                        ctx.pol.deadline_us
+                    )));
+                } else {
+                    i += 1;
+                }
+            }
+        }
+
+        // -- promote handoffs onto their decode slots -----------------
+        for s in inflight.iter_mut() {
+            if s.phase == Phase::Handoff {
+                s.slot = match s.job.meta.session {
+                    // Session affinity: a conversation keeps its engine.
+                    Some(sess) => (sess % dec_n as u64) as usize,
+                    None => {
+                        let k = rr_slot % dec_n;
+                        rr_slot = rr_slot.wrapping_add(1);
+                        k
+                    }
+                };
+                // The transfer itself: the block tables already live in
+                // `s.caches` as Arc'ed pages — nothing moves but
+                // ownership of the step that feeds them. Count what
+                // crossed pools (and what was NOT re-encoded).
+                let rows = s.caches.first().map(|c| c.len()).unwrap_or(0);
+                let bytes: usize = s.caches.iter().map(|c| c.block_bytes()).sum();
+                ctx.metrics.record_handoff(rows as u64, bytes as u64);
+                s.phase = Phase::Decode;
+            }
+        }
+
+        // -- admit pending sequences into the in-flight set -----------
+        admit_pending(&ctx, &mut router, &mut inflight);
+
+        // -- draft phase: decode-pool residents only ------------------
+        if let Some(spec) = &ctx.spec {
+            for s in inflight.iter_mut() {
+                if s.phase == Phase::Decode {
+                    draft_for(spec, s, &mut draft_scratch);
+                }
+            }
+        }
+
+        // -- build this iteration's task lists, one per pool ----------
+        let mut pre_seqs: Vec<&mut SeqState> = Vec::new();
+        let mut dec_groups: Vec<Vec<SeqTask>> = (0..dec_n).map(|_| Vec::new()).collect();
+        for s in inflight.iter_mut() {
+            match s.phase {
+                Phase::Prefill => pre_seqs.push(s),
+                // Unreachable at build time (promotion ran above), but
+                // a parked sequence would simply sit a step out.
+                Phase::Handoff => {}
+                Phase::Decode => {
+                    let feed = if s.drafted > 0 {
+                        s.queue.len() - s.fed
+                    } else {
+                        (s.queue.len() - s.fed).min(ctx.pol.prefill_chunk.max(1))
+                    };
+                    let slot = s.slot;
+                    dec_groups[slot].push(SeqTask { seq: s, feed });
+                }
+            }
+        }
+        let mut pre_tasks: Vec<Task> = Vec::new();
+        let mut pre_fed = 0usize;
+        if !pre_seqs.is_empty() {
+            let gsize = pre_seqs.len().div_ceil(pre_n);
+            let mut it = pre_seqs.into_iter();
+            loop {
+                let chunk: Vec<&mut SeqState> = it.by_ref().take(gsize).collect();
+                if chunk.is_empty() {
+                    break;
+                }
+                let group = chunk.len();
+                let mut seqs = Vec::with_capacity(group);
+                for s in chunk {
+                    let feed = (s.queue.len() - s.fed).min(ctx.pol.prefill_chunk.max(1));
+                    pre_fed += feed;
+                    s.group = group;
+                    seqs.push(SeqTask { seq: s, feed });
+                }
+                pre_tasks.push(Task::Tokens(seqs));
+            }
+        }
+        // Stateless CNN frames ride the prefill pool (its workload is
+        // the bursty whole-input kind; decode slots stay latency-clean).
+        let images = router.drain_images();
+        let img_group = images.len();
+        for job in images {
+            if job.image.len() != input_len {
+                ctx.metrics.record_error();
+                (job.respond)(Err(format!(
+                    "bad input: {} elements, expected {input_len}",
+                    job.image.len()
+                )));
+                continue;
+            }
+            pre_tasks.push(Task::Image(job));
+        }
+        // Per-pool fed counts and group sizes, before the buckets move.
+        let dec_fed: usize = dec_groups
+            .iter()
+            .map(|g| g.iter().map(|t| t.feed).sum::<usize>())
+            .sum();
+        for g in dec_groups.iter_mut() {
+            let n = g.len();
+            for t in g.iter_mut() {
+                t.seq.group = n;
+            }
+        }
+
+        // -- execute: both pools run concurrently in one step ---------
+        let any_pre = !pre_tasks.is_empty();
+        let any_dec = dec_groups.iter().any(|g| !g.is_empty());
+        if any_pre || any_dec {
+            let (lm, cnn, metrics) = (ctx.lm, ctx.cnn, ctx.metrics);
+            let (sim_energy_uj, sim_latency_ms) = (ctx.sim_energy_uj, ctx.sim_latency_ms);
+            let scratches = &scratches;
+            let t_step = Instant::now();
+            let mut pre_busy = 0u64;
+            let mut dec_busy = 0u64;
+            std::thread::scope(|scope| {
+                // Prefill pool: its shards work-steal the task list,
+                // exactly the unified execution shape.
+                let pre_handle = if any_pre {
+                    let tasks = pre_tasks;
+                    Some(scope.spawn(move || {
+                        run_stolen(pre_shards, tasks, |shard, eng, task| match task {
+                            Task::Tokens(mut group) => {
+                                let mut scratch = scratches[shard].lock().unwrap();
+                                run_token_group(lm, metrics, eng, &mut group, &mut scratch);
+                            }
+                            Task::Image(job) => run_image(
+                                cnn,
+                                metrics,
+                                eng,
+                                job,
+                                img_group,
+                                sim_energy_uj,
+                                sim_latency_ms,
+                            ),
+                        })
+                    }))
+                } else {
+                    None
+                };
+                // Decode pool: slot k's group runs pinned on shard
+                // pre_n + k (no stealing — affinity is the point).
+                let mut dec_handles = Vec::new();
+                for (k, group) in dec_groups.into_iter().enumerate() {
+                    if group.is_empty() {
+                        continue;
+                    }
+                    let eng = &dec_shards[k];
+                    dec_handles.push(scope.spawn(move || {
+                        let mut group = group;
+                        let mut scratch = scratches[pre_n + k].lock().unwrap();
+                        let t0 = Instant::now();
+                        run_token_group(lm, metrics, eng, &mut group, &mut scratch);
+                        t0.elapsed().as_nanos() as u64
+                    }));
+                }
+                if let Some(h) = pre_handle {
+                    pre_busy = h.join().expect("prefill pool");
+                }
+                for h in dec_handles {
+                    dec_busy += h.join().expect("decode slot");
+                }
+            });
+            let wall = t_step.elapsed().as_nanos() as u64;
+            ctx.metrics.record_step(pre_busy + dec_busy, wall * nshards as u64);
+            ctx.metrics.record_pool_step(0, pre_busy, wall * pre_n as u64);
+            ctx.metrics.record_pool_step(1, dec_busy, wall * dec_n as u64);
+            if pre_fed > 0 {
+                ctx.metrics.record_pool_tokens(0, pre_fed as u64);
+            }
+            if dec_fed > 0 {
+                ctx.metrics.record_pool_tokens(1, dec_fed as u64);
+            }
+        }
+
+        // -- sequence lifecycle after the step ------------------------
+        let mut i = 0;
+        while i < inflight.len() {
+            let s = &mut inflight[i];
+            if s.drafted > 0 {
+                resolve_speculation(ctx.metrics, s);
+            }
+            match s.phase {
+                Phase::Prefill => {
+                    if s.fed < s.queue.len() {
+                        i += 1;
+                        continue; // still prefilling
+                    }
+                    // Prefill completed this step: stamp TTFT, publish
+                    // the prefix, and either answer (prefill-only) or
+                    // park for handoff with the first decode token
+                    // carried — fed next step, the unified cadence.
+                    if s.ttft_us.is_none() {
+                        s.ttft_us = Some(s.job.enqueued.elapsed().as_micros() as u64);
+                    }
+                    if !s.inserted {
+                        if let Some(pool) = &ctx.kv_pool {
+                            pool.insert(&s.queue[..s.prompt_len], &s.caches);
+                        }
+                        s.inserted = true;
+                    }
+                    if s.job.max_new == 0 {
+                        // Prefill-only: answered from the prefill pool;
+                        // nothing to hand off.
+                        let done = inflight.swap_remove(i);
+                        finish(ctx.metrics, done);
+                        continue;
+                    }
+                    let next = QuantTransformer::argmax(&s.logits);
+                    s.generated.push(next);
+                    s.queue.push(next);
+                    s.phase = Phase::Handoff;
+                    i += 1;
+                }
+                Phase::Handoff => {
+                    i += 1; // promoted at the top of the next iteration
+                }
+                Phase::Decode => {
+                    if s.fed < s.queue.len() {
+                        i += 1;
+                        continue; // carried token feeds next step
+                    }
+                    if s.generated.len() < s.job.max_new {
+                        let next = QuantTransformer::argmax(&s.logits);
+                        s.generated.push(next);
+                        s.queue.push(next);
+                        i += 1;
+                        continue;
+                    }
+                    let done = inflight.swap_remove(i);
+                    finish(ctx.metrics, done);
+                }
+            }
+        }
     }
-    false
-}
-
-/// Reject every pending request that has waited past its admission
-/// deadline.
-fn expire_deadlines(
-    ctx: &SchedulerCtx<'_>,
-    pending_tok: &mut VecDeque<TokenJob>,
-    pending_img: &mut VecDeque<Job>,
-) {
-    let allowed = ctx.pol.deadline_us;
-    let expired = |waited_us: u128| -> Option<String> {
-        (waited_us > allowed as u128).then(|| {
-            format!("deadline exceeded before admission ({waited_us} µs waited, {allowed} µs allowed)")
-        })
-    };
-    pending_tok.retain(|t| match expired(t.enqueued.elapsed().as_micros()) {
-        Some(msg) => {
-            reject(ctx.metrics, &t.respond, msg);
-            false
-        }
-        None => true,
-    });
-    pending_img.retain(|j| match expired(j.enqueued.elapsed().as_micros()) {
-        Some(msg) => {
-            reject(ctx.metrics, &j.respond, msg);
-            false
-        }
-        None => true,
-    });
 }
 
 /// Draft up to `spec.k − 1` tokens for one sequence, pushed onto the
@@ -602,7 +945,7 @@ fn run_image(
     cnn: &QuantCnn,
     metrics: &Metrics,
     eng: &AnyEngine,
-    job: Job,
+    job: ImageJob,
     img_group: usize,
     sim_energy_uj: f64,
     sim_latency_ms: f64,
@@ -610,7 +953,7 @@ fn run_image(
     let logits = cnn.forward(eng, &job.image);
     let latency_us = job.enqueued.elapsed().as_micros() as u64;
     metrics.record(latency_us, img_group.max(1));
-    let _ = job.respond.send(Ok(InferResponse {
+    (job.respond)(Ok(InferResponse {
         logits,
         latency_us,
         batch_size: img_group.max(1),
@@ -667,7 +1010,7 @@ where
 #[cfg(test)]
 mod tests {
     use crate::coordinator::batcher::ContinuousPolicy;
-    use crate::coordinator::{Config, Coordinator, ServeMode, TokenRequest};
+    use crate::coordinator::{Config, Coordinator, TokenRequest};
 
     fn prompt(n: usize) -> Vec<u16> {
         (0..n).map(|i| ((i * 7 + 3) % 64) as u16).collect()
@@ -678,12 +1021,15 @@ mod tests {
     /// every receiver resolves, and the rejection counter advances.
     #[test]
     fn backpressure_rejects_beyond_queue_cap() {
-        let mut cfg = Config::continuous(1);
-        cfg.mode = ServeMode::Continuous(ContinuousPolicy {
-            queue_cap: 2,
-            max_inflight: 1,
-            ..ContinuousPolicy::default()
-        });
+        let cfg = Config::builder()
+            .continuous(1)
+            .policy(ContinuousPolicy {
+                queue_cap: 2,
+                max_inflight: 1,
+                ..ContinuousPolicy::default()
+            })
+            .build()
+            .expect("config");
         let coord = Coordinator::start(cfg).expect("continuous coordinator");
         let receivers: Vec<_> = (0..12)
             .map(|_| coord.submit_tokens(TokenRequest::generate(prompt(8), 1)))
@@ -713,12 +1059,15 @@ mod tests {
     /// decode slot, stragglers queued behind bit-level work expire.
     #[test]
     fn deadline_expires_unadmitted_requests() {
-        let mut cfg = Config::continuous(1);
-        cfg.mode = ServeMode::Continuous(ContinuousPolicy {
-            max_inflight: 1,
-            deadline_us: 1,
-            ..ContinuousPolicy::default()
-        });
+        let cfg = Config::builder()
+            .continuous(1)
+            .policy(ContinuousPolicy {
+                max_inflight: 1,
+                deadline_us: 1,
+                ..ContinuousPolicy::default()
+            })
+            .build()
+            .expect("config");
         let coord = Coordinator::start(cfg).expect("continuous coordinator");
         let receivers: Vec<_> = (0..4)
             .map(|_| coord.submit_tokens(TokenRequest::generate(prompt(12), 1)))
@@ -743,7 +1092,8 @@ mod tests {
     /// the step loop, and well-formed neighbours are unaffected.
     #[test]
     fn continuous_rejects_malformed_requests_individually() {
-        let coord = Coordinator::start(Config::continuous(2)).expect("continuous coordinator");
+        let cfg = Config::builder().continuous(2).build().expect("config");
+        let coord = Coordinator::start(cfg).expect("continuous coordinator");
         let bad_vocab = coord.submit_tokens(TokenRequest::prefill(vec![9999]));
         let bad_cap = coord.submit_tokens(TokenRequest::generate(prompt(8), 1000));
         let good = coord

@@ -5,8 +5,8 @@
 //! ent simulate --arch sa_os --size 32 --variant ours --m 64 --k 128 --n 64
 //! ent soc --net resnet50 [--arch sa_os] [--json]
 //! ent transformer --prompt 12 --gen 4 [--arch sa_os] [--variant ours] [--json]
-//! ent serve --requests 64 [--native] [--continuous] [--tokens] [--gen 4] [--spec-decode on] [--artifacts DIR]
-//! ent loadgen --rate 200 --duration 500 [--mix 0.25] [--window] [--spec-decode on --spec-k 4] [--json]
+//! ent serve --requests 64 [--native] [--continuous] [--pools prefill=2,decode=2] [--tokens] [--gen 4] [--spec-decode on] [--artifacts DIR]
+//! ent loadgen --rate 200 --duration 500 [--mix 0.25] [--window] [--pools prefill=2,decode=2] [--tenants 3 --burst 3 --slo-ms 250] [--spec-decode on --spec-k 4] [--json]
 //! ent sweep --ablation <encoder|accwidth|segmented|batching>
 //! ent selftest
 //! ```
@@ -126,6 +126,27 @@ fn parse_prefix_share(args: &ent::util::cli::Args) -> ent::Result<Option<bool>> 
         Some("off") | Some("false") => Some(false),
         Some(other) => ent::bail!("--prefix-share must be on|off, got '{other}'"),
     })
+}
+
+/// `--pools prefill=N,decode=M` → the disaggregated engine-pool split
+/// (`None` when the option is absent — unified single-pool serving).
+fn parse_pools(args: &ent::util::cli::Args) -> ent::Result<Option<(usize, usize)>> {
+    let kvs = args.get_kv_list("pools")?;
+    if kvs.is_empty() {
+        return Ok(None);
+    }
+    let (mut prefill, mut decode) = (None, None);
+    for (k, v) in kvs {
+        match k.as_str() {
+            "prefill" => prefill = Some(v as usize),
+            "decode" => decode = Some(v as usize),
+            other => ent::bail!("--pools keys are prefill|decode, got '{other}'"),
+        }
+    }
+    match (prefill, decode) {
+        (Some(p), Some(d)) => Ok(Some((p, d))),
+        _ => ent::bail!("--pools needs both sides, e.g. --pools prefill=2,decode=2"),
+    }
 }
 
 /// `--spec-decode on|off` → the coordinator's tri-state (None = mode
@@ -403,6 +424,7 @@ fn cmd_serve(argv: &[String]) -> ent::Result<()> {
         OptSpec { name: "concurrency", takes_value: true, help: "client threads (default 4)" },
         OptSpec { name: "native", takes_value: false, help: "serve on native engine shards (no artifacts)" },
         OptSpec { name: "continuous", takes_value: false, help: "continuous-batching step loop (implies --native)" },
+        OptSpec { name: "pools", takes_value: true, help: "disaggregated engine pools, prefill=N,decode=M (implies --continuous; supersedes --shards)" },
         OptSpec { name: "shards", takes_value: true, help: "native engine shards (default 4)" },
         OptSpec { name: "tokens", takes_value: false, help: "send transformer token requests instead of CNN images" },
         OptSpec { name: "prompt", takes_value: true, help: "token prompt length with --tokens (default 12)" },
@@ -430,10 +452,13 @@ fn cmd_serve(argv: &[String]) -> ent::Result<()> {
         .get_usize("gen", 0)?
         .min(lm_spec.max_seq - prompt_len);
     let shards = args.get_usize("shards", 4)?;
-    let mut cfg = if args.flag("continuous") {
-        Config::continuous(shards)
+    let pools = parse_pools(&args)?;
+    let mut cfg = if let Some((p, d)) = pools {
+        Config::builder().pools(p, d).build()?
+    } else if args.flag("continuous") {
+        Config::builder().continuous(shards).build()?
     } else if args.flag("native") {
-        Config::native(shards)
+        Config::builder().native(shards).build()?
     } else {
         Config::default()
     };
@@ -449,7 +474,13 @@ fn cmd_serve(argv: &[String]) -> ent::Result<()> {
     let input_len = cfg.model.input_len();
     let coordinator = Coordinator::start(cfg)?;
     let kind = if tokens { "token" } else { "image" };
-    let mode = if args.flag("continuous") { "continuous" } else { "window" };
+    let mode = if pools.is_some() {
+        "pooled continuous"
+    } else if args.flag("continuous") {
+        "continuous"
+    } else {
+        "window"
+    };
     println!(
         "coordinator up ({mode} scheduling); sending {n_requests} {kind} requests from {concurrency} client threads"
     );
@@ -511,6 +542,23 @@ fn cmd_serve(argv: &[String]) -> ent::Result<()> {
             String::new()
         }
     );
+    for p in &m.pools {
+        println!(
+            "pool {}: {} shards, occupancy {:.0}%, tokens/s {:.0}",
+            p.name,
+            p.shards,
+            p.occupancy * 100.0,
+            p.tokens_per_s
+        );
+    }
+    if m.handoffs > 0 {
+        println!(
+            "handoffs: {} sequences, {} KV rows / {} KiB moved by Arc (0 re-encodes)",
+            m.handoffs,
+            m.handoff_rows,
+            m.handoff_bytes / 1024
+        );
+    }
     if let Some(cs) = m.encode_cache {
         println!(
             "encode cache: {} hits {} misses {} evictions {} invalidations ({} entries, {} KiB of {} KiB)",
@@ -570,8 +618,12 @@ fn cmd_loadgen(argv: &[String]) -> ent::Result<()> {
         OptSpec { name: "gen", takes_value: true, help: "greedy decode steps per request (default 2)" },
         OptSpec { name: "mix", takes_value: true, help: "fraction of CNN image arrivals, 0..1 (default 0)" },
         OptSpec { name: "prefix-zipf", takes_value: true, help: "Zipf exponent for prefix popularity over a seeded template pool (0 = uniform prompts)" },
+        OptSpec { name: "tenants", takes_value: true, help: "tenants sharing the run: each arrival draws one uniformly, with its own Zipf template pool and session key (default 1)" },
+        OptSpec { name: "burst", takes_value: true, help: "burstiness factor: >1 alternates burst/quiet arrival phases around the mean rate (default 1 = plain Poisson)" },
+        OptSpec { name: "slo-ms", takes_value: true, help: "serving deadline in ms: adds p99 TTFT, p99 ITL, and goodput to the report (default 0 = off)" },
         OptSpec { name: "shards", takes_value: true, help: "native engine shards (default 4)" },
         OptSpec { name: "window", takes_value: false, help: "drive the window batcher instead of continuous" },
+        OptSpec { name: "pools", takes_value: true, help: "disaggregated engine pools, prefill=N,decode=M (continuous only; supersedes --shards)" },
         OptSpec { name: "encode-cache", takes_value: true, help: "encoded-weight cache budget in bytes (0 = off)" },
         OptSpec { name: "kv-prepack", takes_value: true, help: "append-only prepacked KV cache, on|off (default: on unless --window)" },
         OptSpec { name: "prefix-share", takes_value: true, help: "cross-request prefix KV sharing, on|off (default: on unless --window)" },
@@ -596,13 +648,22 @@ fn cmd_loadgen(argv: &[String]) -> ent::Result<()> {
         max_new_tokens: args.get_usize("gen", 2)?.min(lm_spec.max_seq - prompt_len),
         image_mix: args.get_f64("mix", 0.0)?.clamp(0.0, 1.0),
         prefix_zipf: args.get_f64("prefix-zipf", 0.0)?.max(0.0),
+        tenants: args.get_usize("tenants", 1)?.max(1),
+        burst: args.get_f64("burst", 1.0)?.max(1.0),
+        slo_ms: args.get_f64("slo-ms", 0.0)?.max(0.0),
         seed: args.get_u64("seed", 0x10AD)?,
     };
     let shards = args.get_usize("shards", 4)?;
+    let pools = parse_pools(&args)?;
+    if args.flag("window") && pools.is_some() {
+        ent::bail!("--pools requires the continuous scheduler (drop --window)");
+    }
     let mut cfg = if args.flag("window") {
-        Config::native(shards)
+        Config::builder().native(shards).build()?
+    } else if let Some((p, d)) = pools {
+        Config::builder().pools(p, d).build()?
     } else {
-        Config::continuous(shards)
+        Config::builder().continuous(shards).build()?
     };
     cfg.encode_cache_bytes = args.get_usize("encode-cache", 0)?;
     cfg.kv_prepack = parse_kv_prepack(&args)?;
@@ -610,7 +671,13 @@ fn cmd_loadgen(argv: &[String]) -> ent::Result<()> {
     cfg.kv_pool_bytes = args.get_usize("kv-pool-bytes", cfg.kv_pool_bytes)?;
     cfg.spec_decode = parse_spec_decode(&args)?;
     cfg.spec_k = args.get_usize("spec-k", cfg.spec_k)?.max(1);
-    let scheduler = if args.flag("window") { "window" } else { "continuous" };
+    let scheduler = if args.flag("window") {
+        "window"
+    } else if pools.is_some() {
+        "pooled"
+    } else {
+        "continuous"
+    };
     let coord = Coordinator::start(cfg)?;
     let r = loadgen::run(&coord, &load);
     let m = coord.metrics();
@@ -640,8 +707,29 @@ fn cmd_loadgen(argv: &[String]) -> ent::Result<()> {
         t.row(vec!["latency p95 µs".into(), f(lat.p95, 0)]);
         t.row(vec!["latency p99 µs".into(), f(lat.p99, 0)]);
     }
+    if let Some(v) = r.p99_ttft_us {
+        t.row(vec!["p99 TTFT µs".into(), f(v, 0)]);
+    }
+    if let Some(v) = r.p99_itl_us {
+        t.row(vec!["p99 ITL µs".into(), f(v, 0)]);
+    }
+    if let Some(v) = r.goodput_rps {
+        t.row(vec![format!("goodput req/s (≤ {:.0} ms)", load.slo_ms), f(v, 1)]);
+    }
     t.row(vec!["tokens/s".into(), f(r.tokens_per_s, 0)]);
     t.row(vec!["engine occupancy".into(), pct(r.occupancy)]);
+    for p in &m.pools {
+        t.row(vec![
+            format!("pool {} occupancy / tokens/s", p.name),
+            format!("{} / {:.0}", pct(p.occupancy), p.tokens_per_s),
+        ]);
+    }
+    if m.handoffs > 0 {
+        t.row(vec![
+            "handoffs / KV rows / KiB moved".into(),
+            format!("{}/{}/{}", m.handoffs, m.handoff_rows, m.handoff_bytes / 1024),
+        ]);
+    }
     t.row(vec!["mean step group".into(), f(m.mean_batch, 2)]);
     if let Some(cs) = m.encode_cache {
         t.row(vec![

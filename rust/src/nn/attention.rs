@@ -228,6 +228,13 @@ impl KvCache {
         self.blocks.len()
     }
 
+    /// Backing bytes of every resident block (raw K/V rows plus any
+    /// allocated code sidecars). This is what a pool handoff moves by
+    /// `Arc` — the coordinator's `handoff_bytes` counter sums it.
+    pub fn block_bytes(&self) -> usize {
+        self.blocks.iter().map(|b| b.bytes()).sum()
+    }
+
     /// Positions whose sidecar codes are currently valid (≤ [`len`]).
     ///
     /// [`len`]: KvCache::len

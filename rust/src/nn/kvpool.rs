@@ -36,6 +36,16 @@
 //! position `i` are a pure function of tokens `0..=i`, so two requests
 //! with identical prompt prefixes compute identical rows — the donor's
 //! blocks *are* the warm request's blocks.
+//!
+//! The same `Arc<KvBlock>` tables are what make **disaggregated
+//! prefill/decode pools** cheap: when a sequence hands off from the
+//! prefill pool to its decode slot (`ent serve --pools`), the
+//! coordinator moves the sequence's [`KvCache`] — block Arcs plus
+//! resident [`PackedCode`] sidecars — by ownership transfer. Nothing is
+//! copied or re-encoded, so the receiving pool's first decode step
+//! charges only the appended token's encode delta (the planner's
+//! `stats_kv_prepacked` framing), and pool membership can never change
+//! logits.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};

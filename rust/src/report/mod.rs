@@ -365,7 +365,7 @@ pub fn transformer() -> String {
 /// occupancy. Excluded from `ent report all` because it measures this
 /// machine, not the model.
 pub fn serving() -> String {
-    use crate::coordinator::{loadgen, Config, Coordinator};
+    use crate::coordinator::{loadgen, Config, Coordinator, DraftKind, Spec};
     // max_new_tokens ≥ 3 keeps the speculative row honest: a request
     // only drafts while ≥ 2 tokens of budget remain past the carried
     // one, so shorter decodes would never enter a speculation round.
@@ -377,6 +377,7 @@ pub fn serving() -> String {
         image_mix: 0.25,
         prefix_zipf: 0.0,
         seed: 0x5EE,
+        ..Default::default()
     };
     let mut t = Table::new(format!(
         "Serving scheduler — open-loop load ({:.0} req/s, prompt {}, +{} decode, {:.0}% CNN mix)",
@@ -396,21 +397,30 @@ pub fn serving() -> String {
         "occupancy",
     ]);
     let mut cache_lines = String::new();
-    for (name, mut cfg) in [
-        ("continuous", Config::continuous(4)),
-        ("continuous+spec", Config::continuous(4)),
-        ("window", Config::native(4)),
-    ] {
-        // Both schedulers serve through the encoded-weight cache so the
+    // The oracle drafter (target drafting for itself) makes the
+    // speculative row's acceptance column deterministic: every draft
+    // is accepted. The pooled row splits the same four shards into
+    // disaggregated prefill/decode pools.
+    let built = [
+        ("continuous", Config::builder().continuous(4).build()),
+        (
+            "continuous+spec",
+            Config::builder()
+                .continuous(4)
+                .speculation(Spec::On { k: 4, draft: DraftKind::Oracle })
+                .build(),
+        ),
+        ("pooled", Config::builder().pools(2, 2).build()),
+        ("window", Config::builder().native(4).build()),
+    ];
+    for (name, cfg) in built {
+        let mut cfg = match cfg {
+            Ok(c) => c,
+            Err(e) => return format!("serving report unavailable: {e}\n"),
+        };
+        // Every scheduler serves through the encoded-weight cache so the
         // scorecard shows the encode-reuse counters alongside latency.
         cfg.encode_cache_bytes = 4 << 20;
-        if name == "continuous+spec" {
-            // The oracle drafter (target drafting for itself) makes the
-            // acceptance column deterministic: every draft is accepted.
-            cfg.spec_decode = Some(true);
-            cfg.spec_k = 4;
-            cfg.draft = crate::coordinator::DraftKind::Oracle;
-        }
         let coord = match Coordinator::start(cfg) {
             Ok(c) => c,
             Err(e) => return format!("serving report unavailable: {e}\n"),
@@ -452,6 +462,21 @@ pub fn serving() -> String {
         if kv_enc + kv_reused > 0 {
             cache_lines.push_str(&format!(
                 "kv prepack ({name}): {kv_enc} rows freshly encoded / {kv_reused} cached rows reused this run — decode re-encodes only the appended delta\n",
+            ));
+        }
+        for p in &m.pools {
+            cache_lines.push_str(&format!(
+                "pool {} ({name}): {} shards, {} occupancy, {:.0} tokens/s this run\n",
+                p.name,
+                p.shards,
+                pct(p.occupancy),
+                p.tokens_per_s
+            ));
+        }
+        if m.handoffs > 0 {
+            cache_lines.push_str(&format!(
+                "handoffs ({name}): {} sequences, {} KV rows moved by Arc — 0 re-encodes\n",
+                m.handoffs, m.handoff_rows
             ));
         }
         let rounds = m.spec_rounds.saturating_sub(before.spec_rounds);

@@ -408,6 +408,28 @@ mod tests {
         }
     }
 
+    /// Pool-handoff framing: a handed-off sequence's first decode step
+    /// runs against the KV codes that moved with its `KvBlock` Arcs, so
+    /// on the receiving pool it charges only the appended row's encode
+    /// delta — exactly what the step would charge had the sequence
+    /// never changed pools. A rebuild-on-arrival design would pay the
+    /// full-history re-encode instead.
+    #[test]
+    fn handoff_resident_codes_price_like_no_handoff() {
+        // Decode-shaped score GEMM: 1 query row × dh=8 over a 24-row
+        // history; the appended token contributes 8 fresh elements.
+        let p = plan(ArchKind::SystolicOs, 8, 1, 8, 24);
+        let moved = p.stats_kv_prepacked(8);
+        assert_eq!(moved.encodes, 8, "only the appended delta re-encodes");
+        assert_eq!(moved.activation_encodes, 8);
+        // Against the rebuild: same arithmetic, strictly fewer encodes.
+        let rebuild = p.stats_attention();
+        assert!(moved.encodes < rebuild.encodes);
+        assert_eq!(moved.cycles, rebuild.cycles);
+        assert_eq!(moved.macs, rebuild.macs);
+        assert_eq!(moved.a_reads, rebuild.a_reads);
+    }
+
     /// Speculative-verify coalescing through the planner: a weight GEMM
     /// carrying `rows` token positions on N (the coalesced verify
     /// window) streams the stationary M×K weights — and their encoder

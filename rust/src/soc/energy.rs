@@ -354,6 +354,49 @@ pub fn spec_verify_cost(
     }
 }
 
+/// What one prefill→decode pool handoff costs, priced by
+/// [`handoff_cost`]. Under disaggregated serving the sequence's paged
+/// `KvBlock` Arcs move between pools **with their `PackedCode` sidecars
+/// attached** — a pointer move, not a tensor op — so the handoff's own
+/// encoder and MAC columns are zero by construction. `avoided` is what
+/// a naive disaggregation that rebuilt the KV state on the decode pool
+/// (re-running prefill over the whole context) would have paid instead.
+#[derive(Clone, Debug)]
+pub struct HandoffCost {
+    /// K/V rows whose blocks change pools (ownership transfer only).
+    pub kv_rows: usize,
+    /// Encoder activations the handoff itself performs — zero: the
+    /// sidecar codes travel with the blocks.
+    pub encodes: u64,
+    /// MAC operations the handoff itself performs — zero: no GEMM runs.
+    pub macs: u64,
+    /// The rebuild this pointer move avoided: a full prefill pass over
+    /// the `kv_rows`-token context on the receiving pool.
+    pub avoided: FrameEnergy,
+}
+
+/// Price one pool handoff of a `kv_rows`-token context. The handoff
+/// itself is free at the tensor level (zero encodes, zero MACs — the
+/// coordinator's `handoff_rows`/`handoff_bytes` counters measure the
+/// pointer traffic); what it buys is `avoided`: the prefill pass a
+/// re-encode-on-arrival design would run on the decode pool to
+/// reconstruct the same K/V state.
+pub fn handoff_cost(
+    soc: &Soc,
+    spec: &crate::nn::transformer::TransformerSpec,
+    kv_rows: usize,
+    opts: EnergyOpts,
+) -> HandoffCost {
+    assert!(kv_rows >= 1, "a handoff moves at least one KV row");
+    let (avoided, _) = frame_energy_with(soc, &spec.prefill_network(kv_rows), opts);
+    HandoffCost {
+        kv_rows,
+        encodes: 0,
+        macs: 0,
+        avoided,
+    }
+}
+
 /// Fig 11's headline number: fractional energy reduction of EN-T(Ours)
 /// vs baseline on one network.
 pub fn reduction_ratio(kind: crate::arch::ArchKind, net: &Network) -> f64 {
@@ -565,6 +608,28 @@ mod tests {
         // Even then the pass itself stays cheaper than the sequential
         // schedule — rejection costs opportunity, not extra energy.
         assert!(worst.verify.total_pj() < worst.sequential.total_pj());
+    }
+
+    #[test]
+    fn pool_handoff_is_free_and_avoids_a_prefill() {
+        use crate::nn::transformer::TransformerSpec;
+        let spec = TransformerSpec::tiny();
+        let soc = Soc::paper_config(ArchKind::SystolicOs, Variant::EntOurs);
+        let opts = EnergyOpts::default();
+        let c = handoff_cost(&soc, &spec, 12, opts);
+        // The handoff moves Arcs, not tensors: zero encodes, zero MACs.
+        assert_eq!(c.encodes, 0);
+        assert_eq!(c.macs, 0);
+        assert_eq!(c.kv_rows, 12);
+        // What it buys: the prefill pass a rebuild-on-arrival design
+        // would have paid — real energy, growing with the context.
+        assert!(c.avoided.total_pj() > 0.0);
+        assert!(c.avoided.macs > 0);
+        let longer = handoff_cost(&soc, &spec, 24, opts);
+        assert!(
+            longer.avoided.total_pj() > c.avoided.total_pj(),
+            "a longer context must avoid a bigger rebuild"
+        );
     }
 
     #[test]

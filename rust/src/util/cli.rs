@@ -130,6 +130,26 @@ impl Args {
         }
     }
 
+    /// Parse an option holding a `key=value,key=value` list (e.g.
+    /// `--pools prefill=2,decode=2`) into ordered pairs. Absent option
+    /// returns an empty list; a segment without `=`, with an empty key,
+    /// or with a non-numeric value is a [`CliError::BadValue`].
+    pub fn get_kv_list(&self, name: &str) -> Result<Vec<(String, u64)>, CliError> {
+        let Some(raw) = self.get(name) else {
+            return Ok(Vec::new());
+        };
+        let bad = || CliError::BadValue(name.into(), raw.into());
+        let mut out = Vec::new();
+        for seg in raw.split(',') {
+            let (k, v) = seg.split_once('=').ok_or_else(bad)?;
+            if k.is_empty() {
+                return Err(bad());
+            }
+            out.push((k.to_string(), v.parse().map_err(|_| bad())?));
+        }
+        Ok(out)
+    }
+
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
@@ -216,6 +236,24 @@ mod tests {
         assert_eq!(a.get_u64("size", 0).unwrap(), 123_456_789_012);
         let b = Args::parse(&sv(&["--size", "-3"]), &specs()).unwrap();
         assert!(b.get_u64("size", 0).is_err());
+    }
+
+    #[test]
+    fn kv_list_parses_pool_splits() {
+        let specs = [OptSpec { name: "pools", takes_value: true, help: "split" }];
+        let a = Args::parse(&sv(&["--pools", "prefill=2,decode=2"]), &specs).unwrap();
+        assert_eq!(
+            a.get_kv_list("pools").unwrap(),
+            vec![("prefill".to_string(), 2), ("decode".to_string(), 2)]
+        );
+        // Absent option: empty list, not an error.
+        let none = Args::parse(&[], &specs).unwrap();
+        assert_eq!(none.get_kv_list("pools").unwrap(), Vec::new());
+        // Malformed segments are rejected with the offending raw value.
+        for bad in ["prefill=2,decode", "=2", "prefill=two", ""] {
+            let a = Args::parse(&sv(&["--pools", bad]), &specs).unwrap();
+            assert!(a.get_kv_list("pools").is_err(), "{bad:?} must be rejected");
+        }
     }
 
     #[test]

@@ -73,6 +73,33 @@ fn subcommand_help_exits_zero() {
     }
 }
 
+/// The disaggregated-pool flag is documented on both serving
+/// subcommands (with its prefill=N,decode=M syntax), and the
+/// multi-tenant SLO knobs on `ent loadgen`.
+#[test]
+fn serving_help_documents_pool_and_tenant_flags() {
+    for cmd in ["serve", "loadgen"] {
+        let (ok, text) = run_ent(&[cmd, "--help"]);
+        assert!(ok, "ent {cmd} --help must exit 0");
+        assert!(
+            text.contains("pools"),
+            "ent {cmd} --help is missing --pools:\n{text}"
+        );
+        assert!(
+            text.contains("prefill=N,decode=M"),
+            "ent {cmd} --help must state the pool-split syntax:\n{text}"
+        );
+    }
+    let (ok, text) = run_ent(&["loadgen", "--help"]);
+    assert!(ok, "ent loadgen --help must exit 0");
+    for flag in ["tenants", "burst", "slo-ms"] {
+        assert!(
+            text.contains(flag),
+            "ent loadgen --help is missing --{flag}:\n{text}"
+        );
+    }
+}
+
 /// The speculative-decoding flags are documented on both serving
 /// subcommands, with the on|off contract spelled out.
 #[test]

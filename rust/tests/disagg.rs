@@ -1,0 +1,241 @@
+//! The disaggregated-serving acceptance grid: splitting the continuous
+//! scheduler into a prefill-heavy and a decode-heavy engine pool
+//! (`ent serve --pools prefill=N,decode=M`) must be **observationally
+//! invisible** — logits and generated tokens bit-identical to the
+//! unified single-pool scheduler (and, transitively through
+//! `serve_equivalence.rs`, to sequential decode) across all five TCU
+//! architectures and all three PE variants. The handoff between pools
+//! moves paged `KvBlock` Arcs plus their `PackedCode` sidecars and
+//! nothing else, so it must charge **zero encode events**: the pooled
+//! run's KV-residency counters equal the unified run's exactly.
+
+use ent::arch::{ArchKind, Tcu, ALL_ARCHS};
+use ent::coordinator::batcher::ContinuousPolicy;
+use ent::coordinator::{
+    Config, Coordinator, DraftKind, Job, JobMeta, Response, Spec, TokenRequest,
+};
+use ent::nn::transformer::QuantTransformer;
+use ent::pe::Variant;
+
+fn prompt(len: usize, salt: usize) -> Vec<u16> {
+    (0..len).map(|i| ((i * 11 + salt * 17 + 2) % 64) as u16).collect()
+}
+
+/// Sequential ground truth on one engine of the native shard geometry
+/// (size 16; cube edge 8) — the same reference the other serving grids
+/// are held to.
+fn sequential(
+    arch: ArchKind,
+    variant: Variant,
+    tokens: &[u16],
+    max_new: usize,
+) -> (Vec<f32>, Vec<u16>) {
+    let model = QuantTransformer::tiny_native();
+    let size = if arch == ArchKind::Cube3d { 8 } else { 16 };
+    let eng = Tcu::new(arch, size, variant).engine();
+    model.generate(&eng, tokens, max_new)
+}
+
+/// A pooled coordinator (1 prefill + 1 decode shard) and its unified
+/// twin (2 shards, same total capacity), both with a small prefill
+/// chunk so prompts are force-chunked across steps.
+fn pair(arch: ArchKind, variant: Variant) -> (Coordinator, Coordinator) {
+    let pol = ContinuousPolicy {
+        prefill_chunk: 3,
+        ..ContinuousPolicy::default()
+    };
+    let pooled = Config::builder()
+        .pools(1, 1)
+        .twin(arch, variant)
+        .policy(pol)
+        .build()
+        .expect("pooled config");
+    let unified = Config::builder()
+        .continuous(2)
+        .twin(arch, variant)
+        .policy(pol)
+        .build()
+        .expect("unified config");
+    (
+        Coordinator::start(pooled).expect("pooled coordinator"),
+        Coordinator::start(unified).expect("unified coordinator"),
+    )
+}
+
+/// The tentpole grid: every architecture × every PE variant, mixed
+/// prompt lengths and decode budgets (including a prefill-only request,
+/// which is answered from the prefill pool and never hands off).
+/// Pooled serving must be bit-identical to unified serving, reject
+/// nothing, keep the token accounting invariant, and complete exactly
+/// one handoff per generating sequence — while encoding exactly as
+/// many KV rows as the unified scheduler (the zero-re-encode claim).
+#[test]
+fn pooled_serving_bit_identical_to_unified_grid() {
+    let requests: [(usize, usize); 4] = [(5, 3), (8, 1), (3, 4), (7, 0)];
+    let generating = requests.iter().filter(|&&(_, g)| g > 0).count() as u64;
+    let handoff_rows: u64 = requests.iter().filter(|&&(_, g)| g > 0).map(|&(p, _)| p as u64).sum();
+    for arch in ALL_ARCHS {
+        for variant in [Variant::Baseline, Variant::EntMbe, Variant::EntOurs] {
+            let label = format!("{}/{}", arch.name(), variant.name());
+            let (pooled, unified) = pair(arch, variant);
+            for (coord, which) in [(&pooled, "pooled"), (&unified, "unified")] {
+                let expected: Vec<_> = requests
+                    .iter()
+                    .enumerate()
+                    .map(|(salt, &(plen, gen))| sequential(arch, variant, &prompt(plen, salt), gen))
+                    .collect();
+                // Everything up front, so prefill chunks of one request
+                // overlap decode steps (and handoffs) of another.
+                let rxs: Vec<_> = requests
+                    .iter()
+                    .enumerate()
+                    .map(|(salt, &(plen, gen))| {
+                        coord.submit_tokens(TokenRequest::generate(prompt(plen, salt), gen))
+                    })
+                    .collect();
+                for (i, (rx, (want_logits, want_gen))) in
+                    rxs.into_iter().zip(&expected).enumerate()
+                {
+                    let r = rx
+                        .recv()
+                        .expect("scheduler alive")
+                        .unwrap_or_else(|e| panic!("{label} {which} request {i}: {e}"));
+                    assert_eq!(
+                        &r.logits, want_logits,
+                        "{label} {which} request {i}: logits diverged"
+                    );
+                    assert_eq!(
+                        &r.generated, want_gen,
+                        "{label} {which} request {i}: generation diverged"
+                    );
+                    assert!(r.ttft_us <= r.latency_us, "{label} {which} request {i}");
+                }
+            }
+            let (mp, mu) = (pooled.metrics(), unified.metrics());
+            for (m, which) in [(&mp, "pooled"), (&mu, "unified")] {
+                assert_eq!(m.errors, 0, "{label} {which}");
+                assert_eq!(m.rejected, 0, "{label} {which}");
+                assert_eq!(m.requests, requests.len() as u64, "{label} {which}");
+                let want_tokens: usize = requests.iter().map(|&(p, g)| p + g).sum();
+                assert_eq!(m.tokens, want_tokens as u64, "{label} {which}");
+            }
+            // One handoff per generating sequence; the prefill-only
+            // request is answered without ever crossing pools.
+            assert_eq!(mp.handoffs, generating, "{label}: handoffs");
+            assert_eq!(mp.handoff_rows, handoff_rows, "{label}: rows moved by Arc");
+            assert!(mp.handoff_bytes > 0, "{label}: block bytes must be accounted");
+            assert_eq!(mu.handoffs, 0, "{label}: unified mode never hands off");
+            // The zero-re-encode claim at the metrics layer: moving a
+            // sequence between pools must not change how many KV rows
+            // were freshly encoded vs reused (nonzero only where the
+            // engine consumes codes, i.e. EntOurs with kv-prepack on —
+            // but equality must hold everywhere).
+            assert_eq!(
+                mp.kv_rows_encoded, mu.kv_rows_encoded,
+                "{label}: a handoff charged encode events"
+            );
+            assert_eq!(mp.kv_rows_reused, mu.kv_rows_reused, "{label}: reuse diverged");
+            // Per-pool attribution: both pools actually worked.
+            assert_eq!(mp.pools.len(), 2, "{label}");
+            assert_eq!(mp.pools[0].name, "prefill", "{label}");
+            assert_eq!(mp.pools[1].name, "decode", "{label}");
+            assert!(mp.pools[0].tokens > 0, "{label}: prefill pool fed nothing");
+            assert!(mp.pools[1].tokens > 0, "{label}: decode pool fed nothing");
+            assert!(mu.pools.is_empty(), "{label}: unified snapshots carry no pools");
+            pooled.shutdown();
+            unified.shutdown();
+        }
+    }
+}
+
+/// Disaggregation composes with every KV-path optimization at once:
+/// prefix sharing (duplicate prompts adopt pooled blocks), kv-prepack
+/// (`PackedCode` sidecars ride the handoff), and speculative decoding
+/// (verify windows run on the decode pool) — against a unified
+/// coordinator with the identical feature set and total shard count.
+#[test]
+fn pools_compose_with_share_prepack_and_speculation() {
+    let arch = ArchKind::SystolicOs;
+    let variant = Variant::EntOurs;
+    let shared = prompt(9, 2);
+    let expected_shared = sequential(arch, variant, &shared, 5);
+    let other = prompt(4, 7);
+    let expected_other = sequential(arch, variant, &other, 3);
+    let features = |b: ent::coordinator::ConfigBuilder| {
+        b.twin(arch, variant)
+            .prefix_share(true)
+            .kv_prepack(true)
+            .speculation(Spec::On { k: 4, draft: DraftKind::Oracle })
+    };
+    let pooled_cfg = features(Config::builder().pools(2, 2)).build().expect("pooled config");
+    let unified_cfg = features(Config::builder().continuous(4)).build().expect("unified config");
+    let cases = [(pooled_cfg, "pooled", true), (unified_cfg, "unified", false)];
+    for (cfg, which, expect_handoffs) in cases {
+        let coord = Coordinator::start(cfg).expect("coordinator");
+        let rxs: Vec<_> = [
+            TokenRequest::generate(shared.clone(), 5),
+            TokenRequest::generate(shared.clone(), 5),
+            TokenRequest::generate(other.clone(), 3),
+        ]
+        .into_iter()
+        .map(|req| coord.submit_tokens(req))
+        .collect();
+        let wants = [&expected_shared, &expected_shared, &expected_other];
+        for (i, (rx, want)) in rxs.into_iter().zip(wants).enumerate() {
+            let r = rx
+                .recv()
+                .expect("scheduler alive")
+                .unwrap_or_else(|e| panic!("{which} request {i}: {e}"));
+            assert_eq!(&r.logits, &want.0, "{which} request {i}: logits diverged");
+            assert_eq!(&r.generated, &want.1, "{which} request {i}: tokens diverged");
+        }
+        let m = coord.metrics();
+        assert_eq!(m.errors, 0, "{which}");
+        assert_eq!(m.tokens, (9 + 5 + 9 + 5 + 4 + 3) as u64, "{which}");
+        assert!(m.spec_rounds > 0, "{which}: speculation must engage");
+        assert!(m.kv_pool.is_some(), "{which}: prefix pool counters must surface");
+        if expect_handoffs {
+            assert_eq!(m.handoffs, 3, "{which}: every generating sequence hands off");
+        } else {
+            assert_eq!(m.handoffs, 0, "{which}");
+        }
+        coord.shutdown();
+    }
+}
+
+/// Decode-slot pinning across the handoff: a session-tagged job lands
+/// on `session % decode_shards` deterministically; untagged jobs
+/// round-robin but always stay inside the decode pool's slot range.
+#[test]
+fn handoff_pins_sessions_to_decode_slots() {
+    let cfg = Config::builder().pools(1, 2).build().expect("config");
+    let coord = Coordinator::start(cfg).expect("pooled coordinator");
+    let run = |session: Option<u64>| {
+        let rx = coord.submit_job(
+            Job::Tokens(TokenRequest::generate(prompt(6, 1), 2)),
+            JobMeta { tenant: 0, session },
+        );
+        match rx.recv().expect("scheduler alive").expect("served") {
+            Response::Tokens(t) => t,
+            Response::Image(_) => panic!("token job answered with an image response"),
+        }
+    };
+    for sess in [0u64, 1, 2, 5, 8, 11] {
+        let t = run(Some(sess));
+        assert_eq!(
+            t.decode_slot,
+            (sess % 2) as usize,
+            "session {sess} must pin to its decode shard"
+        );
+        assert!(t.ttft_us <= t.latency_us);
+    }
+    for _ in 0..4 {
+        let t = run(None);
+        assert!(t.decode_slot < 2, "round-robin slot out of the decode pool");
+    }
+    let m = coord.metrics();
+    assert_eq!(m.errors, 0);
+    assert_eq!(m.handoffs, 10);
+    assert!(m.handoff_bytes > 0);
+    coord.shutdown();
+}

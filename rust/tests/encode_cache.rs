@@ -201,10 +201,14 @@ fn decode_step_weight_encodes_are_zero_with_cache() {
 /// metrics snapshot.
 #[test]
 fn continuous_serving_with_cache_matches_uncached() {
-    let mut cached_cfg = Config::continuous(2);
-    cached_cfg.encode_cache_bytes = 8 << 20;
+    let cached_cfg = Config::builder()
+        .continuous(2)
+        .encode_cache(8 << 20)
+        .build()
+        .expect("config");
     let cached = Coordinator::start(cached_cfg).expect("cached coordinator");
-    let plain = Coordinator::start(Config::continuous(2)).expect("plain coordinator");
+    let plain_cfg = Config::builder().continuous(2).build().expect("config");
+    let plain = Coordinator::start(plain_cfg).expect("plain coordinator");
 
     let req = || TokenRequest::generate(prompt(6), 2);
     let want = plain.infer_tokens(req()).expect("plain serve");

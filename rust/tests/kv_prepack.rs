@@ -150,9 +150,13 @@ fn kv_prepack_is_inert_on_non_consuming_variants() {
 /// counters ride the metrics snapshot.
 #[test]
 fn continuous_serving_kv_prepack_matches_off_and_counters_surface() {
-    let on = Coordinator::start(Config::continuous(2)).expect("prepack-on coordinator");
-    let mut off_cfg = Config::continuous(2);
-    off_cfg.kv_prepack = Some(false);
+    let on_cfg = Config::builder().continuous(2).build().expect("config");
+    let on = Coordinator::start(on_cfg).expect("prepack-on coordinator");
+    let off_cfg = Config::builder()
+        .continuous(2)
+        .kv_prepack(false)
+        .build()
+        .expect("config");
     let off = Coordinator::start(off_cfg).expect("prepack-off coordinator");
 
     let req = || TokenRequest::generate(prompt(6), 3);

@@ -213,9 +213,13 @@ fn warm_prefill_energy_scales_with_fresh_rows_only() {
 /// snapshot (absent when sharing is off).
 #[test]
 fn continuous_serving_prefix_share_matches_off_and_counters_surface() {
-    let on = Coordinator::start(Config::continuous(2)).expect("share-on coordinator");
-    let mut off_cfg = Config::continuous(2);
-    off_cfg.prefix_share = Some(false);
+    let on_cfg = Config::builder().continuous(2).build().expect("config");
+    let on = Coordinator::start(on_cfg).expect("share-on coordinator");
+    let off_cfg = Config::builder()
+        .continuous(2)
+        .prefix_share(false)
+        .build()
+        .expect("config");
     let off = Coordinator::start(off_cfg).expect("share-off coordinator");
 
     let req = || TokenRequest::generate(prompt(12), 2);

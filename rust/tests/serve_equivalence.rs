@@ -8,7 +8,7 @@
 
 use ent::arch::{ArchKind, Tcu, ALL_ARCHS};
 use ent::coordinator::batcher::ContinuousPolicy;
-use ent::coordinator::{Config, Coordinator, ServeMode, TokenRequest};
+use ent::coordinator::{Config, Coordinator, TokenRequest};
 use ent::nn::transformer::QuantTransformer;
 use ent::pe::Variant;
 
@@ -29,12 +29,15 @@ fn sequential(arch: ArchKind, tokens: &[u16], max_new: usize) -> (Vec<f32>, Vec<
 /// prompts are force-chunked and sequences progress through mixed
 /// prefill/decode steps.
 fn continuous_coordinator(arch: ArchKind, shards: usize) -> Coordinator {
-    let mut cfg = Config::continuous(shards);
-    cfg.twin_arch = arch;
-    cfg.mode = ServeMode::Continuous(ContinuousPolicy {
-        prefill_chunk: 3,
-        ..ContinuousPolicy::default()
-    });
+    let cfg = Config::builder()
+        .continuous(shards)
+        .twin(arch, Variant::EntOurs)
+        .policy(ContinuousPolicy {
+            prefill_chunk: 3,
+            ..ContinuousPolicy::default()
+        })
+        .build()
+        .expect("config");
     Coordinator::start(cfg).expect("continuous coordinator")
 }
 
@@ -96,7 +99,8 @@ fn continuous_decode_bit_identical_to_sequential_all_archs() {
 fn window_and_continuous_schedulers_agree() {
     let toks = prompt(6, 9);
     let window = {
-        let coord = Coordinator::start(Config::native(2)).expect("window coordinator");
+        let cfg = Config::builder().native(2).build().expect("config");
+        let coord = Coordinator::start(cfg).expect("window coordinator");
         let r = coord
             .infer_tokens(TokenRequest::generate(toks.clone(), 3))
             .expect("window generation");

@@ -9,7 +9,9 @@
 
 use ent::arch::{ArchKind, Tcu};
 use ent::coordinator::batcher::ContinuousPolicy;
-use ent::coordinator::{Config, Coordinator, DraftKind, InferRequest, ServeMode, TokenRequest};
+use ent::coordinator::{
+    Config, Coordinator, DraftKind, InferRequest, Job, JobMeta, Response, Spec, TokenRequest,
+};
 use ent::nn::forward::QuantCnn;
 use ent::nn::transformer::QuantTransformer;
 use ent::pe::Variant;
@@ -107,7 +109,8 @@ fn malformed_request_rejected_without_poisoning_the_batch() {
 /// shards → digital twin) with zero artifacts, under concurrent load.
 #[test]
 fn native_shards_serve_concurrent_requests() {
-    let coord = Coordinator::start(Config::native(3)).expect("native coordinator");
+    let cfg = Config::builder().native(3).build().expect("config");
+    let coord = Coordinator::start(cfg).expect("native coordinator");
     let input_len = coord.model().input_len();
     let n_clients = 3;
     let per_client = 3;
@@ -156,7 +159,8 @@ fn continuous_mixed_traffic_fair_and_identical_to_isolated() {
     let token_refs: Vec<(Vec<f32>, Vec<u16>)> =
         prompts.iter().map(|p| lm.generate(&eng, p, 2)).collect();
 
-    let coord = Coordinator::start(Config::continuous(2)).expect("continuous coordinator");
+    let cfg = Config::builder().continuous(2).build().expect("config");
+    let coord = Coordinator::start(cfg).expect("continuous coordinator");
     std::thread::scope(|scope| {
         for (img, expect) in images.iter().zip(&image_refs) {
             let coord = &coord;
@@ -199,11 +203,12 @@ fn speculation_respects_exact_decode_budget() {
     let eng = Tcu::new(ArchKind::SystolicOs, 16, Variant::EntOurs).engine();
     let p: Vec<u16> = (0..6).map(|i| ((i * 5 + 3) % 64) as u16).collect();
     for max_new in 1..=5usize {
-        let mut cfg = Config::continuous(2);
-        cfg.twin_arch = ArchKind::SystolicOs;
-        cfg.spec_decode = Some(true);
-        cfg.spec_k = 8;
-        cfg.draft = DraftKind::Oracle;
+        let cfg = Config::builder()
+            .continuous(2)
+            .twin(ArchKind::SystolicOs, Variant::EntOurs)
+            .speculation(Spec::On { k: 8, draft: DraftKind::Oracle })
+            .build()
+            .expect("config");
         let coord = Coordinator::start(cfg).expect("speculative coordinator");
         let r = coord
             .infer_tokens(TokenRequest::generate(p.clone(), max_new))
@@ -239,16 +244,17 @@ fn deadline_expiry_during_speculation_rejects_pending_stragglers() {
     let eng = Tcu::new(ArchKind::SystolicOs, 16, Variant::EntOurs).engine();
     let p: Vec<u16> = (0..12).map(|i| ((i * 7 + 3) % 64) as u16).collect();
     let (want_logits, want_gen) = model.generate(&eng, &p, 4);
-    let mut cfg = Config::continuous(1);
-    cfg.twin_arch = ArchKind::SystolicOs;
-    cfg.mode = ServeMode::Continuous(ContinuousPolicy {
-        max_inflight: 1,
-        deadline_us: 1,
-        ..ContinuousPolicy::default()
-    });
-    cfg.spec_decode = Some(true);
-    cfg.spec_k = 4;
-    cfg.draft = DraftKind::Oracle;
+    let cfg = Config::builder()
+        .continuous(1)
+        .twin(ArchKind::SystolicOs, Variant::EntOurs)
+        .policy(ContinuousPolicy {
+            max_inflight: 1,
+            deadline_us: 1,
+            ..ContinuousPolicy::default()
+        })
+        .speculation(Spec::On { k: 4, draft: DraftKind::Oracle })
+        .build()
+        .expect("config");
     let coord = Coordinator::start(cfg).expect("speculative coordinator");
     let receivers: Vec<_> = (0..6)
         .map(|_| coord.submit_tokens(TokenRequest::generate(p.clone(), 4)))
@@ -285,16 +291,17 @@ fn backpressure_during_speculation_sheds_load_without_corruption() {
     let eng = Tcu::new(ArchKind::SystolicOs, 16, Variant::EntOurs).engine();
     let p: Vec<u16> = (0..8).map(|i| ((i * 7 + 3) % 64) as u16).collect();
     let (want_logits, want_gen) = model.generate(&eng, &p, 3);
-    let mut cfg = Config::continuous(1);
-    cfg.twin_arch = ArchKind::SystolicOs;
-    cfg.mode = ServeMode::Continuous(ContinuousPolicy {
-        queue_cap: 2,
-        max_inflight: 1,
-        ..ContinuousPolicy::default()
-    });
-    cfg.spec_decode = Some(true);
-    cfg.spec_k = 4;
-    cfg.draft = DraftKind::Oracle;
+    let cfg = Config::builder()
+        .continuous(1)
+        .twin(ArchKind::SystolicOs, Variant::EntOurs)
+        .policy(ContinuousPolicy {
+            queue_cap: 2,
+            max_inflight: 1,
+            ..ContinuousPolicy::default()
+        })
+        .speculation(Spec::On { k: 4, draft: DraftKind::Oracle })
+        .build()
+        .expect("config");
     let coord = Coordinator::start(cfg).expect("speculative coordinator");
     let receivers: Vec<_> = (0..12)
         .map(|_| coord.submit_tokens(TokenRequest::generate(p.clone(), 3)))
@@ -324,12 +331,160 @@ fn backpressure_during_speculation_sheds_load_without_corruption() {
     coord.shutdown();
 }
 
+/// Weighted-fair admission: a tenant flooding the queue is capped at
+/// its proportional share, so an equal-weight tenant arriving behind
+/// the flood is never rejected. With weights (1, 1) and queue cap 12,
+/// each tenant's share cap is 6 — the flooder's 20-burst sheds its
+/// overflow with the weighted-share error while all four requests of
+/// the second tenant complete.
+#[test]
+fn flooding_tenant_cannot_starve_weighted_peer() {
+    let cfg = Config::builder()
+        .continuous(1)
+        .policy(ContinuousPolicy {
+            max_inflight: 1,
+            queue_cap: 12,
+            ..ContinuousPolicy::default()
+        })
+        .tenant_weight(1, 1)
+        .tenant_weight(2, 1)
+        .build()
+        .expect("config");
+    let coord = Coordinator::start(cfg).expect("weighted coordinator");
+    let p: Vec<u16> = (0..8).map(|i| ((i * 7 + 3) % 64) as u16).collect();
+    let meta = |tenant| JobMeta { tenant, session: None };
+    let flood: Vec<_> = (0..20)
+        .map(|_| coord.submit_job(Job::Tokens(TokenRequest::generate(p.clone(), 1)), meta(1)))
+        .collect();
+    let victim: Vec<_> = (0..4)
+        .map(|_| coord.submit_job(Job::Tokens(TokenRequest::generate(p.clone(), 1)), meta(2)))
+        .collect();
+    let mut flood_ok = 0u32;
+    let mut flood_shed = 0u32;
+    for rx in flood {
+        match rx.recv().expect("flood response") {
+            Ok(_) => flood_ok += 1,
+            Err(e) => {
+                assert!(
+                    e.contains("backpressure") && e.contains("weighted share"),
+                    "{e}"
+                );
+                flood_shed += 1;
+            }
+        }
+    }
+    for rx in victim {
+        let r = rx.recv().expect("victim response");
+        assert!(r.is_ok(), "weighted tenant must not starve: {r:?}");
+    }
+    assert_eq!(flood_ok + flood_shed, 20);
+    assert!(
+        flood_shed >= 10,
+        "a 20-burst against share cap 6 must shed most of the flood \
+         (shed {flood_shed})"
+    );
+    let m = coord.metrics();
+    assert_eq!(m.errors, 0);
+    assert!(m.rejected >= flood_shed as u64);
+    coord.shutdown();
+}
+
+/// Session affinity survives the prefill→decode handoff: under pooled
+/// serving, equal session keys pin to the same decode-pool slot and
+/// different sessions spread across slots — the response's
+/// `decode_slot` exposes the pinning.
+#[test]
+fn session_affinity_survives_pool_handoff() {
+    let cfg = Config::builder().pools(1, 2).build().expect("config");
+    let coord = Coordinator::start(cfg).expect("pooled coordinator");
+    let p: Vec<u16> = (0..6).map(|i| ((i * 5 + 2) % 64) as u16).collect();
+    let run = |session: u64| {
+        let meta = JobMeta {
+            tenant: 0,
+            session: Some(session),
+        };
+        match coord
+            .infer_job(Job::Tokens(TokenRequest::generate(p.clone(), 2)), meta)
+            .expect("pooled token job")
+        {
+            Response::Tokens(r) => {
+                assert_eq!(r.generated.len(), 2);
+                assert!(r.ttft_us <= r.latency_us);
+                r.decode_slot
+            }
+            Response::Image(_) => panic!("token job answered with an image"),
+        }
+    };
+    let a1 = run(42);
+    let a2 = run(42);
+    let b = run(43);
+    assert_eq!(a1, a2, "same session must pin to the same decode slot");
+    assert_ne!(a1, b, "sessions 42/43 must map to different slots of 2");
+    let m = coord.metrics();
+    assert!(m.handoffs >= 3, "every request hands off once");
+    assert_eq!(m.errors, 0);
+    coord.shutdown();
+}
+
+/// A deadline that expires between prefill completion and decode
+/// promotion rolls the sequence back mid-handoff: the request is
+/// rejected with the handoff-deadline error, nothing is promoted to the
+/// decode pool, and the coordinator stays healthy. Four 48-token
+/// prompts at prefill chunk 1 on a single prefill shard take far longer
+/// than the 50 ms deadline, so all four park in handoff already
+/// expired.
+#[test]
+fn deadline_expiry_mid_handoff_rolls_back_cleanly() {
+    let cfg = Config::builder()
+        .pools(1, 1)
+        .policy(ContinuousPolicy {
+            max_inflight: 4,
+            prefill_chunk: 1,
+            deadline_us: 50_000,
+            ..ContinuousPolicy::default()
+        })
+        .build()
+        .expect("config");
+    let coord = Coordinator::start(cfg).expect("pooled coordinator");
+    let p: Vec<u16> = (0..48).map(|i| ((i * 11 + 5) % 64) as u16).collect();
+    let receivers: Vec<_> = (0..4)
+        .map(|_| {
+            coord.submit_job(
+                Job::Tokens(TokenRequest::generate(p.clone(), 2)),
+                JobMeta::default(),
+            )
+        })
+        .collect();
+    let mut expired_in_handoff = 0u32;
+    for rx in receivers {
+        match rx.recv().expect("response") {
+            Err(e) => {
+                assert!(e.contains("deadline exceeded during pool handoff"), "{e}");
+                expired_in_handoff += 1;
+            }
+            Ok(_) => {
+                // A machine fast enough to prefill 4×48 chunked tokens
+                // inside 50 ms would legitimately complete the request;
+                // bit-level engines are orders of magnitude slower.
+                panic!("48-token chunked prefill finished inside a 50 ms deadline");
+            }
+        }
+    }
+    assert_eq!(expired_in_handoff, 4);
+    let m = coord.metrics();
+    assert_eq!(m.handoffs, 0, "expired sequences must never promote");
+    assert_eq!(m.rejected, 4);
+    assert_eq!(m.errors, 0);
+    coord.shutdown();
+}
+
 /// Window-mode fairness baseline: the same interleaving through the
 /// window batcher also completes both classes — the schedulers differ
 /// in latency shape, never in results or liveness.
 #[test]
 fn window_mixed_traffic_completes_both_classes() {
-    let coord = Coordinator::start(Config::native(2)).expect("native coordinator");
+    let cfg = Config::builder().native(2).build().expect("config");
+    let coord = Coordinator::start(cfg).expect("native coordinator");
     let input_len = coord.model().input_len();
     std::thread::scope(|scope| {
         for c in 0..2 {

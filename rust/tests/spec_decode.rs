@@ -13,7 +13,7 @@
 
 use ent::arch::{ArchKind, Tcu, ALL_ARCHS};
 use ent::coordinator::batcher::ContinuousPolicy;
-use ent::coordinator::{Config, Coordinator, DraftKind, ServeMode, TokenRequest};
+use ent::coordinator::{Config, Coordinator, DraftKind, Spec, TokenRequest};
 use ent::nn::transformer::QuantTransformer;
 use ent::pe::Variant;
 
@@ -45,16 +45,16 @@ fn spec_coordinator(
     k: usize,
     kind: DraftKind,
 ) -> Coordinator {
-    let mut cfg = Config::continuous(2);
-    cfg.twin_arch = arch;
-    cfg.twin_variant = variant;
-    cfg.mode = ServeMode::Continuous(ContinuousPolicy {
-        prefill_chunk: 3,
-        ..ContinuousPolicy::default()
-    });
-    cfg.spec_decode = Some(true);
-    cfg.spec_k = k;
-    cfg.draft = kind;
+    let cfg = Config::builder()
+        .continuous(2)
+        .twin(arch, variant)
+        .policy(ContinuousPolicy {
+            prefill_chunk: 3,
+            ..ContinuousPolicy::default()
+        })
+        .speculation(Spec::On { k, draft: kind })
+        .build()
+        .expect("config");
     Coordinator::start(cfg).expect("speculative continuous coordinator")
 }
 
@@ -196,18 +196,18 @@ fn speculation_composes_with_prefix_share_and_kv_prepack() {
         // The anti-oracle maximizes rollback churn over the shared blocks.
         for kind in [DraftKind::Oracle, DraftKind::AntiOracle] {
             let label = format!("share={share} prepack={prepack} {kind:?}");
-            let mut cfg = Config::continuous(2);
-            cfg.twin_arch = arch;
-            cfg.twin_variant = variant;
-            cfg.mode = ServeMode::Continuous(ContinuousPolicy {
-                prefill_chunk: 3,
-                ..ContinuousPolicy::default()
-            });
-            cfg.spec_decode = Some(true);
-            cfg.spec_k = 4;
-            cfg.draft = kind;
-            cfg.prefix_share = Some(share);
-            cfg.kv_prepack = Some(prepack);
+            let cfg = Config::builder()
+                .continuous(2)
+                .twin(arch, variant)
+                .policy(ContinuousPolicy {
+                    prefill_chunk: 3,
+                    ..ContinuousPolicy::default()
+                })
+                .speculation(Spec::On { k: 4, draft: kind })
+                .prefix_share(share)
+                .kv_prepack(prepack)
+                .build()
+                .expect("config");
             let coord = Coordinator::start(cfg).expect("speculative coordinator");
             let rxs: Vec<_> = [
                 TokenRequest::generate(shared.clone(), 5),
@@ -244,13 +244,12 @@ fn spec_off_and_spec_k1_agree_with_spec_on() {
     let arch = ArchKind::Matrix2d;
     let variant = Variant::EntOurs;
     let toks = prompt(6, 9);
-    let run = |spec: Option<bool>, k: usize| {
-        let mut cfg = Config::continuous(2);
-        cfg.twin_arch = arch;
-        cfg.twin_variant = variant;
-        cfg.spec_decode = spec;
-        cfg.spec_k = k;
-        cfg.draft = DraftKind::Tiny;
+    let run = |spec: Option<Spec>| {
+        let mut b = Config::builder().continuous(2).twin(arch, variant);
+        if let Some(s) = spec {
+            b = b.speculation(s);
+        }
+        let cfg = b.build().expect("config");
         let coord = Coordinator::start(cfg).expect("coordinator");
         let r = coord
             .infer_tokens(TokenRequest::generate(toks.clone(), 4))
@@ -259,9 +258,9 @@ fn spec_off_and_spec_k1_agree_with_spec_on() {
         coord.shutdown();
         (r.logits, r.generated, m.spec_rounds)
     };
-    let (off_logits, off_gen, off_rounds) = run(None, 4);
-    let (on_logits, on_gen, on_rounds) = run(Some(true), 4);
-    let (k1_logits, k1_gen, k1_rounds) = run(Some(true), 1);
+    let (off_logits, off_gen, off_rounds) = run(None);
+    let (on_logits, on_gen, on_rounds) = run(Some(Spec::On { k: 4, draft: DraftKind::Tiny }));
+    let (k1_logits, k1_gen, k1_rounds) = run(Some(Spec::On { k: 1, draft: DraftKind::Tiny }));
     assert_eq!(off_rounds, 0, "default is off");
     assert_eq!(k1_rounds, 0, "k=1 never drafts");
     assert!(on_rounds > 0, "spec on with budget 4 must draft");

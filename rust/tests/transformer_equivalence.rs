@@ -48,14 +48,16 @@ fn transformer_logits_identical_across_all_arch_variants() {
 fn transformer_logits_invariant_under_batch_and_shard_count() {
     let toks = prompt(6);
     let solo = {
-        let coord = Coordinator::start(Config::native(1)).expect("1-shard coordinator");
+        let cfg = Config::builder().native(1).build().expect("config");
+        let coord = Coordinator::start(cfg).expect("1-shard coordinator");
         let r = coord
             .infer_tokens(TokenRequest::prefill(toks.clone()))
             .expect("solo token inference");
         coord.shutdown();
         r.logits
     };
-    let coord = Coordinator::start(Config::native(3)).expect("3-shard coordinator");
+    let cfg = Config::builder().native(3).build().expect("config");
+    let coord = Coordinator::start(cfg).expect("3-shard coordinator");
     std::thread::scope(|scope| {
         for _ in 0..4 {
             let coord = &coord;
