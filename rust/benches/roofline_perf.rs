@@ -1,0 +1,173 @@
+//! Roofline sweep + tile-plan autotuner benchmark.
+//!
+//! Two halves, mirroring `ent report roofline`:
+//!
+//! * an **analytic sweep** over square GEMMs (128 → 8192) and the real
+//!   serving shapes of `TransformerSpec::tiny()` (prefill Q/K/V and
+//!   attention scores, MLP tiles, m=1 decode rows, the logits head) —
+//!   closed-form planner event counts per architecture, so the 8192³
+//!   point costs nothing to "run";
+//! * a **measured default-vs-tuned** grid on the small shapes the
+//!   schedulers actually execute: each (arch, variant, shape) GEMM runs
+//!   once with the static `TilePlan::new` blocking + `par_bands` split
+//!   and once with the `PlanTuner`'s calibrated choice. Tuned output is
+//!   asserted bit-identical to the default before any timing — the
+//!   tuner may only move time, never values.
+//!
+//! Emits `BENCH_roofline.json` at the workspace root — `ns_per_mac`
+//! (default plan) and `ns_per_mac_tuned` per measured row, both gated
+//! higher-worse by scripts/bench_compare.
+
+use ent::arch::{default_bands, Tcu, TcuEngine, ALL_ARCHS};
+use ent::nn::transformer::TransformerSpec;
+use ent::pe::Variant;
+use ent::sim::autotune::PlanTuner;
+use ent::sim::{GemmShape, TilePlan};
+use ent::util::bench::{black_box, header, Suite};
+use ent::util::json::Json;
+use ent::util::prng::Rng;
+
+fn main() {
+    header("roofline sweep + tile-plan autotuner");
+    let mut suite = Suite::new();
+    let mut rng = Rng::new(0x800F);
+    let mut json_rows: Vec<Json> = Vec::new();
+
+    // --- analytic roofline: square sizes 128 → 8192 per arch ---------
+    let spec = TransformerSpec::tiny();
+    let ctx = spec.max_seq;
+    let head_dim = spec.d_model / spec.heads;
+    println!("analytic sweep (planner event model, EN-T Ours):");
+    for arch in ALL_ARCHS {
+        let s = if arch == ent::arch::ArchKind::Cube3d { 8 } else { 16 };
+        let tcu = Tcu::new(arch, s, Variant::EntOurs);
+        for dim in [128usize, 256, 512, 1024, 2048, 4096, 8192] {
+            let g = GemmShape::new(dim, dim, dim);
+            let st = TilePlan::new(&tcu, g).stats();
+            println!(
+                "  {:<10} {dim:>5}^3  util {:.3}  cycles {}",
+                arch.short_name(),
+                st.utilization,
+                st.cycles
+            );
+            json_rows.push(analytic_row(
+                format!("roofline_sq{dim}_{}", arch.short_name()),
+                arch.short_name(),
+                g,
+                st,
+            ));
+        }
+        // Real serving shapes from the tiny transformer geometry.
+        for (sname, g) in [
+            ("prefill_qkv", GemmShape::new(ctx / 2, spec.d_model, spec.d_model)),
+            ("prefill_score", GemmShape::new(ctx / 2, head_dim, ctx / 2)),
+            ("mlp", GemmShape::new(ctx, spec.d_model, spec.d_ff)),
+            ("decode_attn", GemmShape::new(1, head_dim, ctx)),
+            ("decode_mlp", GemmShape::new(1, spec.d_model, spec.d_ff)),
+            ("decode_head", GemmShape::new(1, spec.d_model, spec.vocab)),
+        ] {
+            let st = TilePlan::new(&tcu, g).stats();
+            json_rows.push(analytic_row(
+                format!("roofline_{sname}_{}", arch.short_name()),
+                arch.short_name(),
+                g,
+                st,
+            ));
+        }
+    }
+
+    // --- measured: default blocking vs calibrated tuner choice -------
+    // One shared tuner, exactly like a serving run with --autotune on:
+    // each (arch, size, variant, shape-class) calibrates once, then the
+    // timed loops replay the cached winner.
+    let tuner = PlanTuner::new();
+    let shapes = [
+        ("sq128", GemmShape::new(128, 128, 128)),
+        ("mlp", GemmShape::new(ctx, spec.d_model, spec.d_ff)),
+        ("decode_mlp", GemmShape::new(1, spec.d_model, spec.d_ff)),
+    ];
+    for arch in ALL_ARCHS {
+        for variant in [Variant::Baseline, Variant::EntOurs] {
+            let s = if arch == ent::arch::ArchKind::Cube3d { 8 } else { 16 };
+            let eng = Tcu::new(arch, s, variant).engine();
+            for (sname, g) in shapes {
+                let a = rng.i8_vec(g.m * g.k);
+                let b = rng.i8_vec(g.k * g.n);
+                let mut c = vec![0i64; g.m * g.n];
+                let def_plan = TilePlan::new(eng.tcu(), g);
+                let def_bands = default_bands(eng.tcu(), g);
+                let (plan, bands) = tuner.choose(&eng, g);
+                // Bit-identity first: the tuned plan must compute the
+                // same integers as the default before it earns timing.
+                eng.matmul_into_planned(&a, &b, &mut c, &def_plan, def_bands);
+                let want = c.clone();
+                eng.matmul_into_planned(&a, &b, &mut c, &plan, bands);
+                assert_eq!(c, want, "tuned plan changed values on {sname}");
+
+                let name = format!("plan_{}_{}_{sname}", arch.short_name(), variant.name());
+                let macs = g.macs() as f64;
+                let def = suite
+                    .bench(&format!("{name}_default"), || {
+                        eng.matmul_into_planned(&a, &b, &mut c, &def_plan, def_bands);
+                        black_box(&c);
+                    })
+                    .clone();
+                let tuned = suite
+                    .bench(&format!("{name}_tuned"), || {
+                        eng.matmul_into_planned(&a, &b, &mut c, &plan, bands);
+                        black_box(&c);
+                    })
+                    .clone();
+                json_rows.push(Json::obj(vec![
+                    ("name", Json::str(name)),
+                    ("arch", Json::str(arch.short_name())),
+                    ("variant", Json::str(variant.name())),
+                    ("m", Json::num(g.m as f64)),
+                    ("k", Json::num(g.k as f64)),
+                    ("n", Json::num(g.n as f64)),
+                    ("ns_per_mac", Json::num(def.ns_per_iter.mean / macs)),
+                    ("ns_per_mac_tuned", Json::num(tuned.ns_per_iter.mean / macs)),
+                    ("tuned_tm", Json::num(plan.tm as f64)),
+                    ("tuned_tk", Json::num(plan.tk as f64)),
+                    ("tuned_tn", Json::num(plan.tn as f64)),
+                    ("tuned_bands", Json::num(bands as f64)),
+                ]));
+            }
+        }
+    }
+    let ts = tuner.stats();
+    println!(
+        "plan tuner: {} calibrations, {} hits / {} misses ({} entries)",
+        ts.tunes, ts.hits, ts.misses, ts.entries
+    );
+
+    // --- machine-readable trajectory file ----------------------------
+    let out = Json::obj(vec![
+        ("bench", Json::str("roofline_perf")),
+        ("unit", Json::str("ns_per_mac / utilization")),
+        ("results", Json::arr(json_rows)),
+    ]);
+    // Cargo runs benches with cwd = the package dir (rust/); anchor the
+    // output at the workspace root so CI finds it deterministically.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_roofline.json");
+    match std::fs::write(path, format!("{out}\n")) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\ncould not write {path}: {e}"),
+    }
+}
+
+/// One closed-form sweep row: planner event counts, no wall clock.
+fn analytic_row(name: String, arch: &'static str, g: GemmShape, st: ent::sim::GemmStats) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(name)),
+        ("arch", Json::str(arch)),
+        ("variant", Json::str(Variant::EntOurs.name())),
+        ("m", Json::num(g.m as f64)),
+        ("k", Json::num(g.k as f64)),
+        ("n", Json::num(g.n as f64)),
+        ("macs", Json::num(st.macs as f64)),
+        ("cycles", Json::num(st.cycles as f64)),
+        ("utilization", Json::num(st.utilization)),
+        ("encodes", Json::num(st.encodes as f64)),
+    ])
+}

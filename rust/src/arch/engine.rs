@@ -41,6 +41,7 @@ use crate::arith::multiplier::{MultKind, Multiplier};
 use crate::encoding::packed::{lut_i8, PackedCode};
 use crate::encoding::prepacked::PrePackedMatrix;
 use crate::pe::Variant;
+use crate::sim::autotune::PlanTuner;
 use crate::sim::dataflow::{GemmShape, GemmStats};
 use crate::sim::planner::TilePlan;
 
@@ -161,12 +162,58 @@ pub trait TcuEngine: Send + Sync {
         n: usize,
     );
 
+    /// The tile-plan autotuner consulted by [`TcuEngine::matmul_into`]
+    /// and [`TcuEngine::matmul_prepacked_into`], if any. The default is
+    /// `None` — every engine runs the static `TilePlan::new` blocking
+    /// and the `par_bands` heuristic unless wrapped in [`Tuned`] (the
+    /// serving path does this under `--autotune on`).
+    fn tuner(&self) -> Option<&PlanTuner> {
+        None
+    }
+
     /// Bit-accurate GEMM `C = A×B` (`a` M×K, `b` K×N row-major, `c` M×N
     /// overwritten), tiled by the shared planner. Independent output row
     /// bands run on scoped threads when the problem is large enough;
     /// results are identical either way (exact integer accumulation over
-    /// disjoint outputs).
+    /// disjoint outputs). With a [`TcuEngine::tuner`] attached, the
+    /// blocking and band split come from the tuner's calibrated cache
+    /// instead of the static heuristics — same results, measured plan.
     fn matmul_into(&self, a: &[i8], b: &[i8], c: &mut [i64], m: usize, k: usize, n: usize) {
+        assert_eq!(a.len(), m * k, "A shape");
+        assert_eq!(b.len(), k * n, "B shape");
+        assert_eq!(c.len(), m * n, "C shape");
+        if m == 0 || k == 0 || n == 0 {
+            c.fill(0);
+            return;
+        }
+        let g = GemmShape::new(m, k, n);
+        let (plan, bands) = match self.tuner() {
+            Some(t) => t.choose(self, g),
+            None => (
+                TilePlan::new(self.tcu(), g),
+                par_bands(self.tcu(), g.macs(), m),
+            ),
+        };
+        self.matmul_into_planned(a, b, c, &plan, bands);
+    }
+
+    /// [`TcuEngine::matmul_into`] with an **explicit** plan and band
+    /// count — the entry both the default path and the autotuner's
+    /// calibration loop run through (calibration must execute candidate
+    /// plans without re-entering the tuner). `plan.shape` must be
+    /// nonzero and match the slice lengths; `bands` is normalized to
+    /// the row-chunk count it actually produces. Bit-identical to the
+    /// default blocking for every in-cap plan (exact integer
+    /// accumulation over disjoint output tiles — `tests/autotune.rs`).
+    fn matmul_into_planned(
+        &self,
+        a: &[i8],
+        b: &[i8],
+        c: &mut [i64],
+        plan: &TilePlan,
+        bands: usize,
+    ) {
+        let (m, k, n) = (plan.shape.m, plan.shape.k, plan.shape.n);
         assert_eq!(a.len(), m * k, "A shape");
         assert_eq!(b.len(), k * n, "B shape");
         assert_eq!(c.len(), m * n, "C shape");
@@ -174,16 +221,14 @@ pub trait TcuEngine: Send + Sync {
         if m == 0 || k == 0 || n == 0 {
             return;
         }
-        let plan = TilePlan::new(self.tcu(), GemmShape::new(m, k, n));
-        let bands = par_bands(self.tcu(), plan.shape.macs(), m);
+        let bands = effective_bands(m, bands);
         if bands <= 1 {
-            run_band(self, a, b, c, 0, m, k, n, &plan);
+            run_band(self, a, b, c, 0, m, k, n, plan);
             return;
         }
         let rows_per = m.div_ceil(bands);
         std::thread::scope(|scope| {
             for (bi, band) in c.chunks_mut(rows_per * n).enumerate() {
-                let plan = &plan;
                 scope.spawn(move || {
                     let rows = band.len() / n;
                     run_band(self, a, b, band, bi * rows_per, rows, k, n, plan);
@@ -257,7 +302,13 @@ pub trait TcuEngine: Send + Sync {
         }
         let mul = Multiplier::new(MultKind::EntRme, OPERAND_BITS);
         let macs = (m as u64) * (k as u64) * (n as u64);
-        let bands = par_bands(self.tcu(), macs, m);
+        // The code-consuming walk has no tile grid (codes stream flat),
+        // so the tuner only contributes its calibrated band split here.
+        let bands = match self.tuner() {
+            Some(t) => t.choose(self, GemmShape::new(m, k, n)).1,
+            None => par_bands(self.tcu(), macs, m),
+        };
+        let bands = effective_bands(m, bands);
         if bands <= 1 {
             run_band_prepacked(&mul, a, b, c, 0, m, k, n);
             return;
@@ -283,7 +334,9 @@ pub trait TcuEngine: Send + Sync {
 /// How many parallel row bands are worth spawning: none unless the
 /// problem comfortably exceeds the per-band grain (bit-level MACs cost
 /// hundreds of ns, exact baseline MACs ~1 ns — thresholds differ by
-/// variant), then at most one band per hardware thread and per row.
+/// variant), then at most one band per hardware thread and per row,
+/// normalized to the chunk count the `m.div_ceil(bands)`-row split
+/// actually produces (see [`effective_bands`]).
 fn par_bands(tcu: &Tcu, macs: u64, m: usize) -> usize {
     let grain: u64 = match tcu.variant {
         Variant::Baseline => 1 << 22,
@@ -295,7 +348,30 @@ fn par_bands(tcu: &Tcu, macs: u64, m: usize) -> usize {
     let hw = std::thread::available_parallelism()
         .map(|p| p.get())
         .unwrap_or(1);
-    hw.min((macs / grain) as usize).min(m).max(1)
+    effective_bands(m, hw.min((macs / grain) as usize))
+}
+
+/// The default thread-band count [`TcuEngine::matmul_into`] uses when
+/// no tuner is attached — exposed so the autotuner can seed its
+/// candidate set with (and never regress past) the heuristic choice.
+pub fn default_bands(tcu: &Tcu, g: GemmShape) -> usize {
+    par_bands(tcu, g.macs(), g.m)
+}
+
+/// Normalize a requested band count to the number of row chunks the
+/// `rows_per = m.div_ceil(bands)` split actually produces. The raw
+/// request can exceed it — e.g. m=7 split "into 5 bands" takes 2 rows
+/// per band and yields only 4 non-empty chunks, so the fifth band would
+/// be empty (a thread budgeted but never spawned, and a lie in any
+/// plan that reports it). The normalized count b satisfies
+/// `m.div_ceil(b) == rows_per` and every chunk is non-empty — pinned by
+/// `tests::band_split_covers_rows_exactly`.
+fn effective_bands(m: usize, bands: usize) -> usize {
+    if m == 0 {
+        return 1;
+    }
+    let bands = bands.clamp(1, m);
+    m.div_ceil(m.div_ceil(bands))
 }
 
 /// Walk the planner's tile grid over one output row band, calling the
@@ -442,6 +518,50 @@ impl TcuEngine for AnyEngine {
     }
 }
 
+/// A borrowed engine view with a [`PlanTuner`] attached: forwards the
+/// dataflow ([`TcuEngine::tcu`], [`TcuEngine::execute_tile`]) to the
+/// wrapped engine and answers [`TcuEngine::tuner`] with the attached
+/// tuner, so every `matmul_into`/`matmul_prepacked_into` through the
+/// view runs the calibrated plan. With `tuner: None` the view is an
+/// exact pass-through — call sites can wrap unconditionally and let
+/// the `Option` carry the `--autotune` switch. Zero-cost to construct
+/// (two pointers), leaves the wrapped engine's `Copy`/layout untouched.
+pub struct Tuned<'a, E: TcuEngine + ?Sized> {
+    inner: &'a E,
+    tuner: Option<&'a PlanTuner>,
+}
+
+impl<'a, E: TcuEngine + ?Sized> Tuned<'a, E> {
+    pub fn new(inner: &'a E, tuner: Option<&'a PlanTuner>) -> Tuned<'a, E> {
+        Tuned { inner, tuner }
+    }
+}
+
+impl<E: TcuEngine + ?Sized> TcuEngine for Tuned<'_, E> {
+    fn tcu(&self) -> &Tcu {
+        self.inner.tcu()
+    }
+
+    fn execute_tile(
+        &self,
+        a: &[i8],
+        lda: usize,
+        b: &[i8],
+        ldb: usize,
+        c: &mut [i64],
+        ldc: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        self.inner.execute_tile(a, lda, b, ldb, c, ldc, m, k, n)
+    }
+
+    fn tuner(&self) -> Option<&PlanTuner> {
+        self.tuner
+    }
+}
+
 /// Shared helper for the per-MAC window of a dot-product reduction over
 /// at most `k` int8 products (2n product bits + negation slack + tree
 /// growth).
@@ -550,6 +670,55 @@ mod tests {
                 "{}",
                 arch.name()
             );
+        }
+    }
+
+    /// The band-split arithmetic, pinned for adversarial (m, bands)
+    /// pairs: `effective_bands` never exceeds the chunk count the
+    /// `m.div_ceil(bands)`-row split produces, the chunks cover the m
+    /// rows exactly and without overlap, and **no band is empty** — the
+    /// pre-fix heuristic could request more bands than chunks (m=7 into
+    /// "5 bands" takes 2 rows each and yields only 4), leaving a
+    /// budgeted-but-empty last band.
+    #[test]
+    fn band_split_covers_rows_exactly() {
+        let cases: &[(usize, usize)] = &[
+            (7, 5),   // the motivating case: naive split leaves band 5 empty
+            (1, 8),   // one row, many shards
+            (2, 3),
+            (3, 2),
+            (5, 4),
+            (9, 8),
+            (13, 7),
+            (16, 16), // exact one-row bands
+            (17, 16),
+            (100, 48),
+            (1000, 999),
+        ];
+        for &(m, requested) in cases {
+            let bands = super::effective_bands(m, requested);
+            assert!(bands >= 1 && bands <= m, "m={m} req={requested}");
+            assert!(bands <= requested, "m={m} req={requested}");
+            let rows_per = m.div_ceil(bands);
+            // The split into rows_per-row chunks produces exactly
+            // `bands` non-empty chunks covering [0, m).
+            let mut covered = 0usize;
+            let mut chunks = 0usize;
+            while covered < m {
+                let rows = rows_per.min(m - covered);
+                assert!(rows > 0, "empty band at m={m} req={requested}");
+                covered += rows;
+                chunks += 1;
+            }
+            assert_eq!(covered, m, "m={m} req={requested}");
+            assert_eq!(
+                chunks, bands,
+                "m={m} req={requested}: effective_bands must equal the \
+                 chunk count actually produced"
+            );
+            // Same rows_per as honoring the raw request — normalizing
+            // only drops the empty tail, it never re-shapes the split.
+            assert_eq!(rows_per, m.div_ceil(requested.clamp(1, m)), "m={m} req={requested}");
         }
     }
 

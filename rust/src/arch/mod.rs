@@ -22,7 +22,7 @@ pub mod matrix2d;
 pub mod systolic;
 pub mod trees;
 
-pub use engine::{engine_for, AnyEngine, MatOperand, TcuEngine};
+pub use engine::{default_bands, engine_for, AnyEngine, MatOperand, TcuEngine, Tuned};
 
 use crate::gates::Cost;
 use crate::hw::wiring::{self, RoutingFit};

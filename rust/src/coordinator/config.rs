@@ -140,6 +140,17 @@ pub struct Config {
     /// shape; `Oracle` / `AntiOracle` pin the acceptance ceiling and
     /// floor deterministically for tests and bench rows.
     pub draft: DraftKind,
+    /// **Tile-plan autotuning** for the native backend's engine shards
+    /// (`ent serve|loadgen --autotune on|off`): wraps every shard in
+    /// [`Tuned`](crate::arch::Tuned) so each GEMM's blocking and
+    /// thread-band split come from a shared calibrated
+    /// [`PlanTuner`](crate::sim::autotune::PlanTuner) cache instead of
+    /// the static heuristics. A tuned plan changes how a GEMM is
+    /// blocked, never what it computes — bit-identical either way
+    /// (`tests/autotune.rs`). `None` picks the mode default — **off**
+    /// everywhere until the roofline baselines have armed the perf
+    /// gate. Tuner hit/miss/tune counters ride the metrics snapshots.
+    pub autotune: Option<bool>,
     /// Disaggregated prefill/decode engine pools
     /// ([`ConfigBuilder::pools`], `ent serve --pools prefill=N,decode=M`):
     /// `None` serves every phase on one shared shard pool (the
@@ -175,6 +186,7 @@ impl Default for Config {
             spec_decode: None,
             spec_k: 4,
             draft: DraftKind::Tiny,
+            autotune: None,
             pools: None,
             tenant_weights: Vec::new(),
         }
@@ -383,6 +395,13 @@ impl ConfigBuilder {
     /// Shared prefix KV pool byte budget.
     pub fn kv_pool_bytes(mut self, bytes: usize) -> Self {
         self.cfg.kv_pool_bytes = bytes;
+        self
+    }
+
+    /// Tile-plan autotuning on/off for the native engine shards (unset
+    /// = off; see [`Config::autotune`]).
+    pub fn autotune(mut self, on: bool) -> Self {
+        self.cfg.autotune = Some(on);
         self
     }
 

@@ -16,6 +16,7 @@ use std::time::Instant;
 
 use crate::encoding::prepacked::{CacheStats, EncodeCache};
 use crate::nn::kvpool::{KvPool, KvPoolStats};
+use crate::sim::autotune::{PlanTuner, TunerStats};
 use crate::util::stats::Summary;
 
 /// Size of the recent-latency reservoir backing the percentile summary.
@@ -66,6 +67,10 @@ struct Inner {
     /// snapshots surface its hit-rate, resident-bytes gauge, and
     /// eviction counters.
     kv_pool: Option<Arc<KvPool>>,
+    /// The executor's shared tile-plan tuner, when serving with
+    /// `--autotune on` — snapshots surface its hit/miss/tune/evict
+    /// counters.
+    plan_tuner: Option<Arc<PlanTuner>>,
     /// Per-engine-pool aggregates under disaggregated serving
     /// ([`Metrics::configure_pools`]); empty in unified/window modes.
     pools: Vec<PoolAgg>,
@@ -138,6 +143,10 @@ pub struct Snapshot {
     /// prefix sharing — see `Config::prefix_share`): per-row hit/miss
     /// totals, insertions, LRU evictions, and the resident-bytes gauge.
     pub kv_pool: Option<KvPoolStats>,
+    /// Tile-plan tuner counters (`None` when serving without
+    /// `--autotune on` — see `Config::autotune`): plan-cache hits and
+    /// misses, calibration runs, LRU evictions, and residency.
+    pub plan_tuner: Option<TunerStats>,
     /// Per-engine-pool breakdown under disaggregated serving
     /// (`Config::pools`): one entry per pool (prefill, then decode),
     /// each with its own occupancy and tokens/s so `ent report serving`
@@ -198,6 +207,7 @@ impl Metrics {
                 lat_next: 0,
                 encode_cache: None,
                 kv_pool: None,
+                plan_tuner: None,
                 pools: Vec::new(),
                 handoffs: 0,
                 handoff_rows: 0,
@@ -273,6 +283,13 @@ impl Metrics {
     /// prefix KV pool — see `Config::prefix_share`).
     pub fn attach_kv_pool(&self, pool: Arc<KvPool>) {
         self.inner.lock().unwrap().kv_pool = Some(pool);
+    }
+
+    /// Surface `tuner`'s counters in every subsequent snapshot (the
+    /// executor calls this at startup when serving with `--autotune on`
+    /// — see `Config::autotune`).
+    pub fn attach_plan_tuner(&self, tuner: Arc<PlanTuner>) {
+        self.inner.lock().unwrap().plan_tuner = Some(tuner);
     }
 
     /// Stamp the serving-time origin: a request has arrived. Idempotent
@@ -393,6 +410,7 @@ impl Metrics {
             spec_drafted: g.spec_drafted,
             spec_accepted: g.spec_accepted,
             kv_pool: g.kv_pool.as_ref().map(|p| p.stats()),
+            plan_tuner: g.plan_tuner.as_ref().map(|t| t.stats()),
             pools: g
                 .pools
                 .iter()
@@ -506,6 +524,25 @@ mod tests {
         assert_eq!(s.entries, 0);
         assert_eq!(s.bytes, 0, "resident-bytes gauge starts empty");
         assert_eq!(s.budget_bytes, 1 << 20);
+    }
+
+    /// Tile-plan tuner counters ride the snapshot once attached.
+    #[test]
+    fn plan_tuner_counters_surface_in_snapshot() {
+        use crate::arch::{ArchKind, Tcu};
+        use crate::pe::Variant;
+        use crate::sim::GemmShape;
+        let m = Metrics::new();
+        assert!(m.snapshot().plan_tuner.is_none());
+        let tuner = Arc::new(PlanTuner::new());
+        m.attach_plan_tuner(tuner.clone());
+        let eng = Tcu::new(ArchKind::Matrix2d, 8, Variant::Baseline).engine();
+        let g = GemmShape::new(4, 8, 8);
+        tuner.choose(&eng, g);
+        tuner.choose(&eng, g);
+        let s = m.snapshot().plan_tuner.expect("tuner attached");
+        assert_eq!((s.hits, s.misses, s.tunes), (1, 1, 1));
+        assert_eq!(s.entries, 1);
     }
 
     /// Prepacked-KV residency counters accumulate and surface.

@@ -86,12 +86,13 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::arch::{AnyEngine, ArchKind, Tcu};
+use crate::arch::{AnyEngine, ArchKind, Tcu, Tuned};
 use crate::bail;
 use crate::nn::forward::QuantCnn;
 use crate::nn::transformer::QuantTransformer;
 use crate::nn::zoo;
 use crate::runtime::Runtime;
+use crate::sim::autotune::PlanTuner;
 use crate::soc::{energy, Soc};
 use crate::util::error::{Context, Result};
 use batcher::ContinuousPolicy;
@@ -507,6 +508,7 @@ impl Executor {
         cfg: &Config,
         flat: &[i8],
         bsize: usize,
+        tuner: Option<&PlanTuner>,
     ) -> std::result::Result<Vec<f32>, String> {
         match self {
             Executor::Artifacts(rt) => rt
@@ -525,10 +527,11 @@ impl Executor {
                     let mut handles = Vec::new();
                     for (si, eng) in shards.iter().enumerate() {
                         handles.push(scope.spawn(move || {
+                            let eng = Tuned::new(eng, tuner);
                             let mut mine = Vec::new();
                             let mut i = si;
                             while i < bsize {
-                                mine.push((i, model.forward(eng, &flat[i * per..(i + 1) * per])));
+                                mine.push((i, model.forward(&eng, &flat[i * per..(i + 1) * per])));
                                 i += nshards;
                             }
                             mine
@@ -644,6 +647,15 @@ fn executor_thread(
             }
         }
     };
+    // Tile-plan autotuner (opt-in, native backend only): one shared
+    // plan cache consulted by every engine shard — each GEMM shape
+    // class calibrates once, then hits. Blocking never changes values,
+    // so serving output is bit-identical with or without it.
+    let tuner = (cfg.autotune.unwrap_or(false) && matches!(exec, Executor::Native { .. }))
+        .then(|| Arc::new(PlanTuner::new()));
+    if let Some(t) = &tuner {
+        metrics.attach_plan_tuner(Arc::clone(t));
+    }
     // Digital twin: per-frame energy of the serving model on the
     // modelled SoC (precomputed once).
     let twin = Soc::paper_config(cfg.twin_arch, cfg.twin_variant);
@@ -713,6 +725,7 @@ fn executor_thread(
                 spec,
                 pools: cfg.pools,
                 tenant_weights: cfg.tenant_weights.clone(),
+                tuner: tuner.as_deref(),
             });
         }
         return;
@@ -760,9 +773,19 @@ fn executor_thread(
                 Err(RecvTimeoutError::Timeout) => break,
             }
         }
-        run_token_batch(&exec, &metrics, tokens);
+        run_token_batch(&exec, &metrics, tokens, tuner.as_deref());
         if !images.is_empty() {
-            run_batch(&exec, &cfg, &metrics, images, input_len, classes, sim_energy_uj, sim_latency_ms);
+            run_batch(
+                &exec,
+                &cfg,
+                &metrics,
+                images,
+                input_len,
+                classes,
+                sim_energy_uj,
+                sim_latency_ms,
+                tuner.as_deref(),
+            );
         }
         if shutdown {
             return;
@@ -794,7 +817,12 @@ pub(crate) fn generate_sequential<E: crate::arch::TcuEngine + ?Sized>(
 /// `tinyformer` artifact serves the batch sequentially. Either way a
 /// job prefills its prompt and then greedily decodes `max_new` tokens
 /// against the KV cache.
-fn run_token_batch(exec: &Executor, metrics: &Metrics, batch: Vec<TokenJob>) {
+fn run_token_batch(
+    exec: &Executor,
+    metrics: &Metrics,
+    batch: Vec<TokenJob>,
+    tuner: Option<&PlanTuner>,
+) {
     if batch.is_empty() {
         return;
     }
@@ -809,6 +837,7 @@ fn run_token_batch(exec: &Executor, metrics: &Metrics, batch: Vec<TokenJob>) {
                 for (si, eng) in shards.iter().enumerate() {
                     let batch = &batch;
                     handles.push(scope.spawn(move || {
+                        let eng = Tuned::new(eng, tuner);
                         // One scratch per shard thread, shared by every
                         // job it serves (prefill + all decode steps).
                         let mut scratch = crate::nn::attention::AttnScratch::new();
@@ -820,7 +849,7 @@ fn run_token_batch(exec: &Executor, metrics: &Metrics, batch: Vec<TokenJob>) {
                                 i,
                                 generate_sequential(
                                     lm,
-                                    eng,
+                                    &eng,
                                     &job.tokens,
                                     job.max_new,
                                     &mut scratch,
@@ -887,6 +916,7 @@ fn run_batch(
     classes: usize,
     sim_energy_uj: f64,
     sim_latency_ms: f64,
+    tuner: Option<&PlanTuner>,
 ) {
     // Validate inputs; reject malformed ones individually.
     let mut queue = Vec::with_capacity(batch.len());
@@ -930,7 +960,7 @@ fn run_batch(
             flat.extend_from_slice(&now.last().unwrap().image); // pad
         }
 
-        match exec.cnn_forward(cfg, &flat, bsize) {
+        match exec.cnn_forward(cfg, &flat, bsize, tuner) {
             Ok(logits) => {
                 for (i, job) in now.into_iter().enumerate() {
                     let latency_us = job.enqueued.elapsed().as_micros() as u64;

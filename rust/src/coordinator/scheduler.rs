@@ -98,11 +98,12 @@ use std::sync::mpsc::{Receiver, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::arch::AnyEngine;
+use crate::arch::{AnyEngine, Tuned};
 use crate::nn::attention::{AttnScratch, KvCache};
 use crate::nn::forward::QuantCnn;
 use crate::nn::kvpool::KvPool;
 use crate::nn::transformer::{QuantTransformer, StepSeq};
+use crate::sim::autotune::PlanTuner;
 
 use super::batcher::ContinuousPolicy;
 use super::metrics::Metrics;
@@ -144,6 +145,13 @@ pub(super) struct SchedulerCtx<'a> {
     /// Disaggregated prefill/decode pools (`Config::pools`); `None`
     /// serves every phase on the one shared shard pool.
     pub pools: Option<PoolSplit>,
+    /// Shared tile-plan tuner (`Config::autotune`): every step GEMM —
+    /// token groups, CNN frames, and the drafter — runs through a
+    /// [`Tuned`] wrapper consulting this cache. Blocking changes how a
+    /// GEMM runs, never what it computes, so serving output is
+    /// bit-identical with tuning on or off (`tests/autotune.rs`).
+    /// `None` = static planner heuristics.
+    pub tuner: Option<&'a PlanTuner>,
     /// Per-tenant admission weights for the router's WRR.
     pub tenant_weights: Vec<(u32, u32)>,
 }
@@ -359,7 +367,7 @@ fn run_unified(ctx: SchedulerCtx<'_>) {
         // -- draft phase: propose tokens for decode-phase sequences ---
         if let Some(spec) = &ctx.spec {
             for s in inflight.iter_mut() {
-                draft_for(spec, s, &mut draft_scratch);
+                draft_for(spec, s, &mut draft_scratch, ctx.tuner);
             }
         }
 
@@ -408,17 +416,19 @@ fn run_unified(ctx: SchedulerCtx<'_>) {
             // itself holds the !Sync mpsc receiver).
             let (lm, cnn, metrics) = (ctx.lm, ctx.cnn, ctx.metrics);
             let (sim_energy_uj, sim_latency_ms) = (ctx.sim_energy_uj, ctx.sim_latency_ms);
+            let tuner = ctx.tuner;
             let scratches = &scratches;
             let t_step = Instant::now();
             let busy_ns = run_stolen(ctx.shards, tasks, |shard, eng, task| match task {
                 Task::Tokens(mut group) => {
                     let mut scratch = scratches[shard].lock().unwrap();
-                    run_token_group(lm, metrics, eng, &mut group, &mut scratch);
+                    run_token_group(lm, metrics, eng, tuner, &mut group, &mut scratch);
                 }
                 Task::Image(job) => run_image(
                     cnn,
                     metrics,
                     eng,
+                    tuner,
                     job,
                     img_group,
                     sim_energy_uj,
@@ -587,7 +597,7 @@ fn run_pooled(ctx: SchedulerCtx<'_>, split: PoolSplit) {
         if let Some(spec) = &ctx.spec {
             for s in inflight.iter_mut() {
                 if s.phase == Phase::Decode {
-                    draft_for(spec, s, &mut draft_scratch);
+                    draft_for(spec, s, &mut draft_scratch, ctx.tuner);
                 }
             }
         }
@@ -666,6 +676,7 @@ fn run_pooled(ctx: SchedulerCtx<'_>, split: PoolSplit) {
         if any_pre || any_dec {
             let (lm, cnn, metrics) = (ctx.lm, ctx.cnn, ctx.metrics);
             let (sim_energy_uj, sim_latency_ms) = (ctx.sim_energy_uj, ctx.sim_latency_ms);
+            let tuner = ctx.tuner;
             let scratches = &scratches;
             let t_step = Instant::now();
             let mut pre_busy = 0u64;
@@ -679,12 +690,13 @@ fn run_pooled(ctx: SchedulerCtx<'_>, split: PoolSplit) {
                         run_stolen(pre_shards, tasks, |shard, eng, task| match task {
                             Task::Tokens(mut group) => {
                                 let mut scratch = scratches[shard].lock().unwrap();
-                                run_token_group(lm, metrics, eng, &mut group, &mut scratch);
+                                run_token_group(lm, metrics, eng, tuner, &mut group, &mut scratch);
                             }
                             Task::Image(job) => run_image(
                                 cnn,
                                 metrics,
                                 eng,
+                                tuner,
                                 job,
                                 img_group,
                                 sim_energy_uj,
@@ -707,7 +719,7 @@ fn run_pooled(ctx: SchedulerCtx<'_>, split: PoolSplit) {
                         let mut group = group;
                         let mut scratch = scratches[pre_n + k].lock().unwrap();
                         let t0 = Instant::now();
-                        run_token_group(lm, metrics, eng, &mut group, &mut scratch);
+                        run_token_group(lm, metrics, eng, tuner, &mut group, &mut scratch);
                         t0.elapsed().as_nanos() as u64
                     }));
                 }
@@ -799,7 +811,12 @@ fn run_pooled(ctx: SchedulerCtx<'_>, split: PoolSplit) {
 /// one), and room in the drafter's context. The drafter prefills the
 /// whole queue cold on its own engine (its caches live one round, the
 /// context changes every round anyway) and argmax-feeds itself.
-fn draft_for(spec: &SpecCtx, s: &mut SeqState, scratch: &mut AttnScratch) {
+fn draft_for(
+    spec: &SpecCtx,
+    s: &mut SeqState,
+    scratch: &mut AttnScratch,
+    tuner: Option<&PlanTuner>,
+) {
     debug_assert_eq!(s.drafted, 0, "previous round must be resolved");
     if s.queue.len() <= s.prompt_len || s.fed + 1 != s.queue.len() {
         return; // still prefilling, or no carried decode token
@@ -816,8 +833,9 @@ fn draft_for(spec: &SpecCtx, s: &mut SeqState, scratch: &mut AttnScratch) {
     if m == 0 {
         return;
     }
+    let eng = Tuned::new(&spec.eng, tuner);
     let mut caches = spec.draft.empty_caches();
-    let mut logits = spec.draft.prefill_with(&spec.eng, &s.queue, &mut caches, scratch);
+    let mut logits = spec.draft.prefill_with(&eng, &s.queue, &mut caches, scratch);
     for _ in 0..m {
         let mut t = QuantTransformer::argmax(&logits);
         if spec.kind == DraftKind::AntiOracle {
@@ -827,7 +845,7 @@ fn draft_for(spec: &SpecCtx, s: &mut SeqState, scratch: &mut AttnScratch) {
         }
         s.queue.push(t);
         s.drafted += 1;
-        logits = spec.draft.prefill_with(&spec.eng, &[t], &mut caches, scratch);
+        logits = spec.draft.prefill_with(&eng, &[t], &mut caches, scratch);
     }
 }
 
@@ -894,9 +912,11 @@ fn run_token_group(
     lm: &QuantTransformer,
     metrics: &Metrics,
     eng: &AnyEngine,
+    tuner: Option<&PlanTuner>,
     group: &mut [SeqTask<'_>],
     scratch: &mut AttnScratch,
 ) {
+    let eng = &Tuned::new(eng, tuner);
     let any_window = group.iter().any(|t| t.seq.drafted > 0);
     let mut steps: Vec<StepSeq> = Vec::with_capacity(group.len());
     let mut fed_positions = 0u64;
@@ -945,12 +965,13 @@ fn run_image(
     cnn: &QuantCnn,
     metrics: &Metrics,
     eng: &AnyEngine,
+    tuner: Option<&PlanTuner>,
     job: ImageJob,
     img_group: usize,
     sim_energy_uj: f64,
     sim_latency_ms: f64,
 ) {
-    let logits = cnn.forward(eng, &job.image);
+    let logits = cnn.forward(&Tuned::new(eng, tuner), &job.image);
     let latency_us = job.enqueued.elapsed().as_micros() as u64;
     metrics.record(latency_us, img_group.max(1));
     (job.respond)(Ok(InferResponse {

@@ -1,7 +1,7 @@
 //! `ent` — the EN-T reproduction CLI (Layer-3 leader entrypoint).
 //!
 //! ```text
-//! ent report <all|fig1|table1|fig6|fig7|table2|fig9|fig10|fig11|fig12|transformer|serving>
+//! ent report <all|fig1|table1|fig6|fig7|table2|fig9|fig10|fig11|fig12|transformer|serving|roofline>
 //! ent simulate --arch sa_os --size 32 --variant ours --m 64 --k 128 --n 64
 //! ent soc --net resnet50 [--arch sa_os] [--json]
 //! ent transformer --prompt 12 --gen 4 [--arch sa_os] [--variant ours] [--json]
@@ -42,7 +42,7 @@ fn main() -> ExitCode {
 const SUBCOMMANDS: [(&str, &str); 9] = [
     (
         "report",
-        "regenerate a paper table/figure (all, fig1, table1, fig6, fig7, table2, fig9, fig10, fig11, fig12, transformer, serving)",
+        "regenerate a paper table/figure (all, fig1, table1, fig6, fig7, table2, fig9, fig10, fig11, fig12, transformer, serving, roofline)",
     ),
     ("simulate", "run one GEMM through an architecture dataflow model"),
     ("soc", "single-frame SoC energy/latency for a CNN workload"),
@@ -160,6 +160,17 @@ fn parse_spec_decode(args: &ent::util::cli::Args) -> ent::Result<Option<bool>> {
     })
 }
 
+/// `--autotune on|off` → the coordinator's tri-state (None = mode
+/// default: off everywhere until opted in).
+fn parse_autotune(args: &ent::util::cli::Args) -> ent::Result<Option<bool>> {
+    Ok(match args.get("autotune") {
+        None => None,
+        Some("on") | Some("true") => Some(true),
+        Some("off") | Some("false") => Some(false),
+        Some(other) => ent::bail!("--autotune must be on|off, got '{other}'"),
+    })
+}
+
 fn cmd_report(argv: &[String]) -> ent::Result<()> {
     let which = argv.first().map(|s| s.as_str()).unwrap_or("all");
     let out = match which {
@@ -175,6 +186,7 @@ fn cmd_report(argv: &[String]) -> ent::Result<()> {
         "fig12" => report::fig12(),
         "transformer" => report::transformer(),
         "serving" => report::serving(),
+        "roofline" => report::roofline(),
         other => ent::bail!("unknown report '{other}'"),
     };
     print!("{out}");
@@ -435,6 +447,7 @@ fn cmd_serve(argv: &[String]) -> ent::Result<()> {
         OptSpec { name: "kv-pool-bytes", takes_value: true, help: "shared prefix KV pool budget in bytes (default 8 MiB; 0 = off)" },
         OptSpec { name: "spec-decode", takes_value: true, help: "speculative decoding with draft model + coalesced verify, on|off (default off; continuous only)" },
         OptSpec { name: "spec-k", takes_value: true, help: "speculation window: draft+verify up to k tokens per round (default 4)" },
+        OptSpec { name: "autotune", takes_value: true, help: "calibrated tile-plan autotuning on the engine shards, on|off (default off; native backends)" },
         OptSpec { name: "help", takes_value: false, help: "show help" },
     ];
     let args = Args::parse(argv, &specs)?;
@@ -471,6 +484,7 @@ fn cmd_serve(argv: &[String]) -> ent::Result<()> {
     cfg.kv_pool_bytes = args.get_usize("kv-pool-bytes", cfg.kv_pool_bytes)?;
     cfg.spec_decode = parse_spec_decode(&args)?;
     cfg.spec_k = args.get_usize("spec-k", cfg.spec_k)?.max(1);
+    cfg.autotune = parse_autotune(&args)?;
     let input_len = cfg.model.input_len();
     let coordinator = Coordinator::start(cfg)?;
     let kind = if tokens { "token" } else { "image" };
@@ -592,6 +606,12 @@ fn cmd_serve(argv: &[String]) -> ent::Result<()> {
             }
         );
     }
+    if let Some(ts) = m.plan_tuner {
+        println!(
+            "plan tuner: {} hits {} misses {} calibrations {} evictions ({} of {} entries)",
+            ts.hits, ts.misses, ts.tunes, ts.evictions, ts.entries, ts.capacity
+        );
+    }
     if let Some(ps) = m.kv_pool {
         println!(
             "kv pool: {:.1}% prefix hit rate ({} warm / {} cold rows), {} insertions {} evictions ({} entries, {} KiB of {} KiB)",
@@ -630,6 +650,7 @@ fn cmd_loadgen(argv: &[String]) -> ent::Result<()> {
         OptSpec { name: "kv-pool-bytes", takes_value: true, help: "shared prefix KV pool budget in bytes (default 8 MiB; 0 = off)" },
         OptSpec { name: "spec-decode", takes_value: true, help: "speculative decoding with draft model + coalesced verify, on|off (default off; continuous only)" },
         OptSpec { name: "spec-k", takes_value: true, help: "speculation window: draft+verify up to k tokens per round (default 4)" },
+        OptSpec { name: "autotune", takes_value: true, help: "calibrated tile-plan autotuning on the engine shards, on|off (default off)" },
         OptSpec { name: "seed", takes_value: true, help: "arrival-schedule seed (default 0x10AD)" },
         OptSpec { name: "json", takes_value: false, help: "JSON output" },
         OptSpec { name: "help", takes_value: false, help: "show help" },
@@ -671,6 +692,7 @@ fn cmd_loadgen(argv: &[String]) -> ent::Result<()> {
     cfg.kv_pool_bytes = args.get_usize("kv-pool-bytes", cfg.kv_pool_bytes)?;
     cfg.spec_decode = parse_spec_decode(&args)?;
     cfg.spec_k = args.get_usize("spec-k", cfg.spec_k)?.max(1);
+    cfg.autotune = parse_autotune(&args)?;
     let scheduler = if args.flag("window") {
         "window"
     } else if pools.is_some() {
@@ -748,6 +770,12 @@ fn cmd_loadgen(argv: &[String]) -> ent::Result<()> {
         t.row(vec![
             "spec rounds / drafted / accepted".into(),
             format!("{}/{}/{}", m.spec_rounds, m.spec_drafted, m.spec_accepted),
+        ]);
+    }
+    if let Some(ts) = m.plan_tuner {
+        t.row(vec![
+            "plan tuner hit/miss/calibrate".into(),
+            format!("{}/{}/{}", ts.hits, ts.misses, ts.tunes),
         ]);
     }
     if let Some(ps) = m.kv_pool {

@@ -503,6 +503,80 @@ pub fn serving() -> String {
     s
 }
 
+/// Roofline sweep — analytic utilization across GEMM sizes, plus the
+/// tile-plan autotuner's calibrated choices vs the static planner
+/// defaults. The first table is pure planner arithmetic (closed-form
+/// event counts, no execution); the second actually calibrates a
+/// [`PlanTuner`](crate::sim::autotune::PlanTuner) on this host, so the
+/// chosen blockings are machine-measured (the bit-level results are
+/// identical either way — `tests/autotune.rs` locks that). Excluded
+/// from `ent report all` because the tuned half measures this machine;
+/// the ns/MAC trajectory is tracked by benches/roofline_perf.rs
+/// (BENCH_roofline.json).
+pub fn roofline() -> String {
+    use crate::arch::{default_bands, TcuEngine};
+    use crate::sim::autotune::PlanTuner;
+    use crate::sim::{GemmShape, TilePlan};
+
+    let mut t = Table::new("Roofline sweep — square GEMMs, planner event model (EN-T Ours)")
+        .header(&["arch", "size", "MACs", "cycles", "utilization", "encodes"]);
+    for arch in ALL_ARCHS {
+        let s = if arch == ArchKind::Cube3d { 8 } else { 16 };
+        let tcu = Tcu::new(arch, s, Variant::EntOurs);
+        for dim in [128usize, 256, 512, 1024, 2048, 4096, 8192] {
+            let g = GemmShape::new(dim, dim, dim);
+            let st = TilePlan::new(&tcu, g).stats();
+            t.row(vec![
+                arch.name().into(),
+                dim.to_string(),
+                st.macs.to_string(),
+                st.cycles.to_string(),
+                f(st.utilization, 3),
+                st.encodes.to_string(),
+            ]);
+        }
+    }
+    let mut out = t.render();
+
+    // Calibrated tuner choices on this host, for the serving shapes the
+    // schedulers actually run (decode m=1 rows, MLP tiles, a square).
+    let tuner = PlanTuner::new();
+    let shapes = [
+        ("square 128", GemmShape::new(128, 128, 128)),
+        ("prefill mlp 64x32x64", GemmShape::new(64, 32, 64)),
+        ("decode row 1x32x64", GemmShape::new(1, 32, 64)),
+    ];
+    let mut t = Table::new("\nTuned tile plans vs planner defaults (Baseline engines, this host)")
+        .header(&["arch", "shape", "default tm·tk·tn ×bands", "tuned tm·tk·tn ×bands"]);
+    for arch in ALL_ARCHS {
+        let s = if arch == ArchKind::Cube3d { 8 } else { 16 };
+        let eng = Tcu::new(arch, s, Variant::Baseline).engine();
+        for (name, g) in shapes {
+            let def = TilePlan::new(eng.tcu(), g);
+            let def_bands = default_bands(eng.tcu(), g);
+            let (plan, bands) = tuner.choose(&eng, g);
+            t.row(vec![
+                arch.name().into(),
+                name.into(),
+                format!("{}·{}·{} ×{}", def.tm, def.tk, def.tn, def_bands),
+                format!("{}·{}·{} ×{}", plan.tm, plan.tk, plan.tn, bands),
+            ]);
+        }
+    }
+    out.push_str(&t.render());
+    let ts = tuner.stats();
+    out.push_str(&format!(
+        "plan tuner: {} calibrations, {} hits / {} misses ({} of {} cache entries)\n",
+        ts.tunes, ts.hits, ts.misses, ts.entries, ts.capacity
+    ));
+    out.push_str(
+        "utilization is the planner's closed-form MAC occupancy; tuned plans \
+         change blocking and thread bands only — outputs stay bit-identical \
+         (tests/autotune.rs)\n",
+    );
+    out
+}
+
 /// Everything at once (the `ent report all` target).
 pub fn all_reports() -> String {
     let mut s = String::new();
@@ -578,6 +652,20 @@ mod tests {
         assert!(s.contains("continuous+spec"), "{s}");
         assert!(s.contains("speculation (continuous+spec)"), "{s}");
         assert!(s.contains("100% acceptance"), "{s}");
+    }
+
+    #[test]
+    fn roofline_report_covers_archs_and_tuner() {
+        let s = roofline();
+        for arch in ALL_ARCHS {
+            assert!(s.contains(arch.name()), "missing {}", arch.name());
+        }
+        // The analytic sweep reaches the largest size without running it.
+        assert!(s.contains("8192"), "{s}");
+        // The tuned half calibrated at least the probed shape classes.
+        assert!(s.contains("plan tuner"), "{s}");
+        assert!(s.contains("calibrations"), "{s}");
+        assert!(s.contains("decode row 1x32x64"), "{s}");
     }
 
     #[test]

@@ -1,0 +1,429 @@
+//! The tile-plan autotuner: measured blocking + band-split choices per
+//! (architecture, shape class), cached in a bounded LRU.
+//!
+//! Every GEMM in the repo used to run on the one blocking
+//! [`TilePlan::new`] derives by clamping the shape to the
+//! architecture's tile caps, and on the fixed `par_bands` thread-split
+//! heuristic. Real GEMM throughput swings with problem size and
+//! blocking strategy, with empirical crossover points a static
+//! heuristic can only guess at — so [`PlanTuner`] picks the mapping
+//! **per shape** instead of per chip: on first sight of a shape class
+//! it runs a short calibration loop over a small candidate set (the
+//! default plan, a ladder of band splits, and tile halvings), keeps the
+//! fastest, and caches the winner keyed like the encode cache. Every
+//! later GEMM of that class is a cache hit — one `HashMap` probe on the
+//! hot path.
+//!
+//! The safety argument mirrors the encode cache's: a candidate changes
+//! **how** a GEMM is blocked, never **what** it computes. Every
+//! candidate respects [`Tcu::tile_caps`] by construction
+//! ([`TilePlan::with_blocking`] clamps), exact integer accumulation
+//! over disjoint output tiles makes any in-cap walk bit-identical, and
+//! [`TilePlan::stats`] tiles by the array size rather than the chosen
+//! extents, so event counts (cycles, MACs, encodes) are invariant under
+//! the tuning space too. Both invariants are locked by
+//! `tests/autotune.rs` across the 5-architecture × 3-variant grid.
+//!
+//! Wiring: engines consult the tuner through
+//! [`TcuEngine::tuner`](crate::arch::TcuEngine::tuner) — the serving
+//! path wraps its shards in [`Tuned`](crate::arch::Tuned) under
+//! `Config::builder().autotune(true)` / `ent serve --autotune on` —
+//! and hit/miss/tune counters ride the metrics snapshots
+//! ([`TunerStats`]).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::dataflow::GemmShape;
+use super::planner::TilePlan;
+use crate::arch::engine::default_bands;
+use crate::arch::{Tcu, TcuEngine};
+use crate::pe::Variant;
+use crate::util::prng::Rng;
+
+/// Default cache capacity (distinct (arch, shape-class) entries). A
+/// serving workload touches a handful of classes (QKV/MLP prefill,
+/// decode rows, verify windows, CNN layers); 64 leaves generous room.
+pub const DEFAULT_PLAN_CAPACITY: usize = 64;
+
+/// Calibration budget per candidate, in MACs: the proxy problem's M is
+/// halved until the GEMM fits, so one tune costs
+/// `O(candidates × cap)` MACs whatever shape triggered it.
+const CAL_MACS_CAP: u64 = 1 << 17;
+
+/// One cached tuning decision: the tile extents and thread-band count
+/// that measured fastest for a shape class. Extents are re-clamped to
+/// the concrete shape at use ([`TilePlan::with_blocking`]), so a choice
+/// calibrated on one member of the class is safe for every member.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlanChoice {
+    pub tm: usize,
+    pub tk: usize,
+    pub tn: usize,
+    pub bands: usize,
+}
+
+/// Cache key: the TCU identity plus the shape class — ⌈log2⌉ buckets of
+/// (m, k, n), so e.g. decode steps over a growing history (n = 17, 18,
+/// … 32) share one entry instead of tuning per token.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct PlanKey {
+    kind: crate::arch::ArchKind,
+    size: usize,
+    variant: Variant,
+    class: (u32, u32, u32),
+}
+
+impl PlanKey {
+    fn new(tcu: &Tcu, g: GemmShape) -> PlanKey {
+        fn bucket(x: usize) -> u32 {
+            // ⌈log2(x)⌉, with 0 and 1 sharing bucket 0.
+            let x = x.max(1);
+            usize::BITS - (x - 1).leading_zeros()
+        }
+        PlanKey {
+            kind: tcu.kind,
+            size: tcu.size,
+            variant: tcu.variant,
+            class: (bucket(g.m), bucket(g.k), bucket(g.n)),
+        }
+    }
+}
+
+struct Entry {
+    choice: PlanChoice,
+    last_used: u64,
+}
+
+struct Store {
+    map: HashMap<PlanKey, Entry>,
+    tick: u64,
+}
+
+/// Point-in-time tuner counters, surfaced in
+/// [`Snapshot`](crate::coordinator::metrics::Snapshot) under
+/// `--autotune on`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TunerStats {
+    /// Plan lookups answered from the cache.
+    pub hits: u64,
+    /// Lookups that found no entry for the shape class.
+    pub misses: u64,
+    /// Calibration loops run (≥ misses only under races; normally one
+    /// per miss).
+    pub tunes: u64,
+    /// Entries evicted by the LRU bound.
+    pub evictions: u64,
+    /// Resident entries.
+    pub entries: usize,
+    /// Capacity bound.
+    pub capacity: usize,
+}
+
+/// A measured tile-plan cache: searches candidate M/K/N blockings and
+/// thread-band splits per (arch, shape class), calibrates them with a
+/// short timing loop, and serves the winner from a bounded LRU.
+///
+/// Thread-safe: lookups take one mutex probe; calibration runs
+/// **outside** the lock (a racing thread may tune the same class —
+/// both insert, last write wins, the `tunes` counter shows it).
+pub struct PlanTuner {
+    store: Mutex<Store>,
+    capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    tunes: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl PlanTuner {
+    pub fn new() -> PlanTuner {
+        PlanTuner::with_capacity(DEFAULT_PLAN_CAPACITY)
+    }
+
+    /// A tuner bounded to `capacity` cached (arch, shape-class)
+    /// entries (≥ 1); the least-recently-used entry is evicted beyond
+    /// that.
+    pub fn with_capacity(capacity: usize) -> PlanTuner {
+        PlanTuner {
+            store: Mutex::new(Store {
+                map: HashMap::new(),
+                tick: 0,
+            }),
+            capacity: capacity.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            tunes: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// The plan + band split to run `g` with on `eng`: a cache hit
+    /// costs one map probe; a miss runs the calibration loop (off-lock)
+    /// and caches the winner for the whole shape class. The returned
+    /// plan is always in-cap and shape-clamped.
+    pub fn choose<E: TcuEngine + ?Sized>(&self, eng: &E, g: GemmShape) -> (TilePlan, usize) {
+        let tcu = *eng.tcu();
+        let key = PlanKey::new(&tcu, g);
+        if let Some(choice) = self.lookup(key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return materialize(&tcu, g, choice);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let choice = self.calibrate(eng, g);
+        self.insert(key, choice);
+        materialize(&tcu, g, choice)
+    }
+
+    /// The cached choice for `g` on `tcu`, if its class has been tuned
+    /// (a pure probe — bumps LRU recency and the hit/miss counters,
+    /// never tunes). Lets reports show resident winners without
+    /// triggering calibration.
+    pub fn cached_choice(&self, tcu: &Tcu, g: GemmShape) -> Option<PlanChoice> {
+        let key = PlanKey::new(tcu, g);
+        let found = self.lookup(key);
+        match found {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        found
+    }
+
+    pub fn stats(&self) -> TunerStats {
+        let g = self.store.lock().unwrap();
+        TunerStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            tunes: self.tunes.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: g.map.len(),
+            capacity: self.capacity,
+        }
+    }
+
+    fn lookup(&self, key: PlanKey) -> Option<PlanChoice> {
+        let mut g = self.store.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        g.map.get_mut(&key).map(|e| {
+            e.last_used = tick;
+            e.choice
+        })
+    }
+
+    fn insert(&self, key: PlanKey, choice: PlanChoice) {
+        let mut g = self.store.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        if g.map.len() >= self.capacity && !g.map.contains_key(&key) {
+            if let Some(victim) = g
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k)
+            {
+                g.map.remove(&victim);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        g.map.insert(
+            key,
+            Entry {
+                choice,
+                last_used: tick,
+            },
+        );
+    }
+
+    /// Time every candidate on a MAC-capped proxy of `g` and return the
+    /// fastest. The proxy halves M until the problem fits the
+    /// calibration budget (band splits divide M, so the split behaviour
+    /// survives the scaling); operands are seeded pseudo-random int8 so
+    /// the datapaths do representative work. The candidate set always
+    /// contains the default plan, so the winner is never slower than
+    /// the heuristic by more than measurement noise.
+    fn calibrate<E: TcuEngine + ?Sized>(&self, eng: &E, g: GemmShape) -> PlanChoice {
+        self.tunes.fetch_add(1, Ordering::Relaxed);
+        let tcu = eng.tcu();
+        let mut m = g.m.max(1);
+        while m > 1 && (m as u64) * (g.k.max(1) as u64) * (g.n.max(1) as u64) > CAL_MACS_CAP {
+            m /= 2;
+        }
+        let proxy = GemmShape::new(m, g.k.max(1), g.n.max(1));
+        let cands = candidates(tcu, proxy);
+        let mut rng = Rng::new(0xA17_0 ^ proxy.macs());
+        let a = rng.i8_vec(proxy.m * proxy.k);
+        let b = rng.i8_vec(proxy.k * proxy.n);
+        let mut c = vec![0i64; proxy.m * proxy.n];
+        // One untimed warmup so the first candidate (the default) does
+        // not absorb the cold-cache penalty.
+        let warm = TilePlan::with_blocking(tcu, proxy, cands[0].tm, cands[0].tk, cands[0].tn);
+        eng.matmul_into_planned(&a, &b, &mut c, &warm, cands[0].bands);
+        let mut best = cands[0];
+        let mut best_ns = u64::MAX;
+        for cand in cands {
+            let plan = TilePlan::with_blocking(tcu, proxy, cand.tm, cand.tk, cand.tn);
+            let t0 = Instant::now();
+            eng.matmul_into_planned(&a, &b, &mut c, &plan, cand.bands);
+            let ns = t0.elapsed().as_nanos() as u64;
+            if ns < best_ns {
+                best_ns = ns;
+                best = cand;
+            }
+        }
+        best
+    }
+}
+
+impl Default for PlanTuner {
+    fn default() -> Self {
+        PlanTuner::new()
+    }
+}
+
+/// Re-clamp a cached choice to the concrete shape: extents through
+/// [`TilePlan::with_blocking`] (caps + shape), bands to the row count.
+fn materialize(tcu: &Tcu, g: GemmShape, choice: PlanChoice) -> (TilePlan, usize) {
+    let plan = TilePlan::with_blocking(tcu, g, choice.tm, choice.tk, choice.tn);
+    (plan, choice.bands.clamp(1, g.m.max(1)))
+}
+
+/// The candidate set for one shape on one TCU: the default plan with a
+/// ladder of band splits (1, 2, 4, the hardware width, and the
+/// heuristic's own pick), plus halved-tile variants of the default
+/// blocking on the default band count. Small by design (≤ ~10 — one
+/// calibration stays cheap) and always containing the default choice.
+/// Every candidate is in-cap: extents derive from the already-clamped
+/// default plan or halvings of it.
+fn candidates(tcu: &Tcu, g: GemmShape) -> Vec<PlanChoice> {
+    let def = TilePlan::new(tcu, g);
+    let def_bands = default_bands(tcu, g);
+    let hw = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    let mut out: Vec<PlanChoice> = Vec::new();
+    let mut push = |tm: usize, tk: usize, tn: usize, bands: usize| {
+        let cand = PlanChoice {
+            tm: tm.max(1),
+            tk: tk.max(1),
+            tn: tn.max(1),
+            bands: bands.clamp(1, g.m.max(1)),
+        };
+        if !out.contains(&cand) {
+            out.push(cand);
+        }
+    };
+    // The heuristic's own choice first — the winner falls back to it on
+    // ties, so tuning can only match or beat the default.
+    push(def.tm, def.tk, def.tn, def_bands);
+    for bands in [1, 2, 4, hw] {
+        push(def.tm, def.tk, def.tn, bands);
+    }
+    // Tile halvings probe whether smaller working sets beat fewer tile
+    // passes for this shape; each keeps the default band count.
+    push(def.tm / 2, def.tk, def.tn, def_bands);
+    push(def.tm, def.tk, def.tn / 2, def_bands);
+    push(def.tm / 2, def.tk, def.tn / 2, def_bands);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{engine_for, ArchKind, Tcu};
+
+    fn tcu() -> Tcu {
+        Tcu::new(ArchKind::SystolicOs, 8, Variant::EntOurs)
+    }
+
+    /// The first sight of a shape class tunes and caches; later GEMMs
+    /// of the same class (even different concrete shapes) hit.
+    #[test]
+    fn choose_caches_per_shape_class() {
+        let t = PlanTuner::new();
+        let eng = engine_for(tcu());
+        let (_, _) = t.choose(&eng, GemmShape::new(13, 21, 10));
+        let s = t.stats();
+        assert_eq!((s.hits, s.misses, s.tunes), (0, 1, 1));
+        assert_eq!(s.entries, 1);
+        // Same class (log2 buckets): 13→4, 21→5, 10→4 == 12, 20, 9.
+        let (_, _) = t.choose(&eng, GemmShape::new(12, 20, 9));
+        let s = t.stats();
+        assert_eq!((s.hits, s.misses, s.tunes), (1, 1, 1));
+        // Different class: one more tune.
+        let (_, _) = t.choose(&eng, GemmShape::new(64, 21, 10));
+        let s = t.stats();
+        assert_eq!((s.hits, s.misses, s.tunes), (1, 2, 2));
+        assert_eq!(s.entries, 2);
+    }
+
+    /// The chosen plan is always in-cap and shape-clamped, for shapes
+    /// around the tile boundaries.
+    #[test]
+    fn chosen_plans_respect_caps() {
+        let t = PlanTuner::new();
+        let eng = engine_for(tcu());
+        let (cap_m, cap_k, cap_n) = tcu().tile_caps();
+        for (m, k, n) in [(1, 8, 17), (13, 21, 10), (64, 32, 64), (7, 7, 7), (1, 1, 1)] {
+            let (plan, bands) = t.choose(&eng, GemmShape::new(m, k, n));
+            assert!(plan.tm <= cap_m.min(m) && plan.tm >= 1);
+            assert!(plan.tk <= cap_k.min(k) && plan.tk >= 1);
+            assert!(plan.tn <= cap_n.min(n) && plan.tn >= 1);
+            assert!(bands >= 1 && bands <= m);
+        }
+    }
+
+    /// The LRU bound holds: capacity-many classes fit, one more evicts
+    /// the least recently used, and the counters say so.
+    #[test]
+    fn lru_bound_evicts_oldest_class() {
+        let t = PlanTuner::with_capacity(2);
+        let eng = engine_for(tcu());
+        t.choose(&eng, GemmShape::new(2, 2, 2)); // class A
+        t.choose(&eng, GemmShape::new(32, 2, 2)); // class B
+        t.choose(&eng, GemmShape::new(2, 2, 2)); // hit A → B is LRU
+        t.choose(&eng, GemmShape::new(2, 32, 2)); // class C → evicts B
+        let s = t.stats();
+        assert_eq!(s.entries, 2);
+        assert_eq!(s.evictions, 1);
+        // A survived (hit), B re-tunes.
+        let before = t.stats().tunes;
+        t.choose(&eng, GemmShape::new(2, 2, 2));
+        assert_eq!(t.stats().tunes, before, "A should still be resident");
+        t.choose(&eng, GemmShape::new(32, 2, 2));
+        assert_eq!(t.stats().tunes, before + 1, "B was evicted");
+    }
+
+    /// Candidate sets always contain the default plan/bands pair and
+    /// only in-cap extents.
+    #[test]
+    fn candidate_set_contains_default_and_respects_caps() {
+        for kind in crate::arch::ALL_ARCHS {
+            let s = if kind == ArchKind::Cube3d { 4 } else { 8 };
+            let tc = Tcu::new(kind, s, Variant::EntOurs);
+            let g = GemmShape::new(13, 21, 10);
+            let def = TilePlan::new(&tc, g);
+            let def_bands = default_bands(&tc, g);
+            let cands = candidates(&tc, g);
+            assert!(cands.contains(&PlanChoice {
+                tm: def.tm,
+                tk: def.tk,
+                tn: def.tn,
+                bands: def_bands,
+            }));
+            let (cap_m, cap_k, cap_n) = tc.tile_caps();
+            for c in &cands {
+                assert!(c.tm >= 1 && c.tm <= cap_m.min(g.m), "{}", kind.name());
+                assert!(c.tk >= 1 && c.tk <= cap_k.min(g.k), "{}", kind.name());
+                assert!(c.tn >= 1 && c.tn <= cap_n.min(g.n), "{}", kind.name());
+                assert!(c.bands >= 1 && c.bands <= g.m);
+            }
+            // Dedup: no candidate appears twice.
+            for (i, a) in cands.iter().enumerate() {
+                assert!(!cands[i + 1..].contains(a));
+            }
+        }
+    }
+}

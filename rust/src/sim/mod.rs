@@ -9,9 +9,17 @@
 //!
 //! [`dataflow`] keeps the shape/stat types and the legacy free-function
 //! entry points (`gemm_stats`, `tiled_matmul`), now thin delegates.
+//!
+//! [`autotune`] layers a measured choice on top of the planner: a
+//! [`autotune::PlanTuner`] searches candidate blockings and thread-band
+//! splits per (arch, shape class), calibrates them with a short timing
+//! loop, and caches the winner in a bounded LRU — consulted by the
+//! engine hot path when serving runs with `--autotune on`.
 
+pub mod autotune;
 pub mod dataflow;
 pub mod planner;
 
+pub use autotune::{PlanChoice, PlanTuner, TunerStats};
 pub use dataflow::{gemm_stats, tiled_matmul, GemmShape, GemmStats};
 pub use planner::TilePlan;

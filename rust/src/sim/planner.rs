@@ -52,6 +52,27 @@ impl TilePlan {
         }
     }
 
+    /// Block `g` onto `tcu` with an explicit `(tm, tk, tn)` request —
+    /// the autotuner's entry ([`crate::sim::autotune::PlanTuner`]).
+    /// Extents are clamped to the architecture's tile capacities and
+    /// the problem shape, so **every** plan this returns is one the
+    /// engine walk can execute: a candidate can change how the GEMM is
+    /// blocked, never what it computes, and never exceed
+    /// [`Tcu::tile_caps`]. [`TilePlan::stats`] depends only on the
+    /// shape and array size (its formulas tile by `tcu.size`, not by
+    /// `tm/tk/tn`), so event counts are invariant under the blocking
+    /// choice — locked by `tests/autotune.rs`.
+    pub fn with_blocking(tcu: &Tcu, g: GemmShape, tm: usize, tk: usize, tn: usize) -> TilePlan {
+        let (cap_m, cap_k, cap_n) = tcu.tile_caps();
+        TilePlan {
+            shape: g,
+            tm: tm.clamp(1, cap_m.min(g.m.max(1))),
+            tk: tk.clamp(1, cap_k.min(g.k.max(1))),
+            tn: tn.clamp(1, cap_n.min(g.n.max(1))),
+            tcu: *tcu,
+        }
+    }
+
     /// Tile counts along (M, K, N).
     pub fn tiles(&self) -> (usize, usize, usize) {
         (
@@ -466,6 +487,28 @@ mod tests {
                 rows * one.cycles
             );
         }
+    }
+
+    /// `with_blocking` clamps the requested extents to both the tile
+    /// caps and the problem shape — no autotuner candidate can escape
+    /// the architecture — and the event counts it reports are invariant
+    /// under the blocking choice (the formulas tile by the array size).
+    #[test]
+    fn with_blocking_clamps_and_keeps_stats_invariant() {
+        let tcu = Tcu::new(ArchKind::SystolicOs, 8, Variant::EntOurs);
+        let g = GemmShape::new(13, 21, 10);
+        let p = TilePlan::with_blocking(&tcu, g, 999, 999, 999);
+        assert_eq!((p.tm, p.tk, p.tn), (8, 21, 8)); // = TilePlan::new
+        let p = TilePlan::with_blocking(&tcu, g, 0, 0, 0);
+        assert_eq!((p.tm, p.tk, p.tn), (1, 1, 1));
+        let p = TilePlan::with_blocking(&tcu, g, 4, 7, 2);
+        assert_eq!((p.tm, p.tk, p.tn), (4, 7, 2));
+        let a = TilePlan::new(&tcu, g).stats();
+        let b = TilePlan::with_blocking(&tcu, g, 1, 1, 1).stats();
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.encodes, b.encodes);
+        assert_eq!(a.a_reads, b.a_reads);
+        assert_eq!(a.psum_spills, b.psum_spills);
     }
 
     /// The plan's tile extents respect the per-arch capacities and cover

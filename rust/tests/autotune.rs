@@ -1,0 +1,285 @@
+//! The tile-plan autotuner acceptance grid: calibrated blocking and
+//! band-split choices must be **observationally invisible** — every
+//! tuned GEMM bit-identical to the untuned default across the
+//! 5-architecture × 3-variant grid, autotuned serving runs bit-identical
+//! to untuned runs through the continuous scheduler (composing with
+//! prefix sharing, KV prepacking, and oracle speculation), and the
+//! planner's event model invariant under the entire tuning space. The
+//! tuner may move time, never values and never counted events.
+
+use ent::arch::{gemm_ref, ArchKind, Tcu, TcuEngine, Tuned, ALL_ARCHS};
+use ent::coordinator::batcher::ContinuousPolicy;
+use ent::coordinator::{Config, Coordinator, DraftKind, Spec, TokenRequest};
+use ent::nn::transformer::QuantTransformer;
+use ent::pe::{Variant, ALL_VARIANTS};
+use ent::sim::autotune::PlanTuner;
+use ent::sim::{GemmShape, TilePlan};
+use ent::util::prng::Rng;
+
+fn prompt(len: usize, salt: usize) -> Vec<u16> {
+    (0..len).map(|i| ((i * 11 + salt * 17 + 2) % 64) as u16).collect()
+}
+
+/// Sequential ground truth on one engine of the native shard geometry
+/// (size 16; cube edge 8), no tuner attached.
+fn sequential(arch: ArchKind, tokens: &[u16], max_new: usize) -> (Vec<f32>, Vec<u16>) {
+    let model = QuantTransformer::tiny_native();
+    let size = if arch == ArchKind::Cube3d { 8 } else { 16 };
+    let eng = Tcu::new(arch, size, Variant::EntOurs).engine();
+    model.generate(&eng, tokens, max_new)
+}
+
+/// The serving shapes the schedulers actually issue: a CNN im2col
+/// tile, a prefill QKV projection, an m=1 decode row, and a
+/// speculative verify window (1 carried + 4 drafted rows).
+const SHAPES: [(usize, usize, usize); 4] = [(36, 27, 16), (16, 32, 32), (1, 32, 64), (5, 8, 64)];
+
+/// The headline invariant: a [`Tuned`] engine view returns exactly the
+/// integers of the bare engine (and of the reference GEMM) for every
+/// architecture, every PE variant, and every serving shape class —
+/// whatever blocking or band split the calibration loop picked.
+#[test]
+fn tuned_matmul_bit_identical_across_arch_variant_grid() {
+    let mut rng = Rng::new(0xA1);
+    for arch in ALL_ARCHS {
+        for variant in ALL_VARIANTS {
+            let size = if arch == ArchKind::Cube3d { 8 } else { 16 };
+            let eng = Tcu::new(arch, size, variant).engine();
+            let tuner = PlanTuner::new();
+            let tuned = Tuned::new(&eng, Some(&tuner));
+            for (m, k, n) in SHAPES {
+                let a = rng.i8_vec(m * k);
+                let b = rng.i8_vec(k * n);
+                let want = gemm_ref(&a, &b, m, k, n);
+                assert_eq!(
+                    eng.matmul(&a, &b, m, k, n),
+                    want,
+                    "{} {} bare engine diverged on {m}x{k}x{n}",
+                    arch.name(),
+                    variant.name()
+                );
+                // Twice through the tuner: the first call calibrates,
+                // the second replays the cached winner — both must be
+                // bit-identical to the reference.
+                for pass in 0..2 {
+                    assert_eq!(
+                        tuned.matmul(&a, &b, m, k, n),
+                        want,
+                        "{} {} tuned engine diverged on {m}x{k}x{n} (pass {pass})",
+                        arch.name(),
+                        variant.name()
+                    );
+                }
+            }
+            let s = tuner.stats();
+            assert!(s.tunes >= 1, "tuner never calibrated");
+            assert!(s.hits >= 1, "second passes should hit the plan cache");
+        }
+    }
+}
+
+/// A `Tuned` view with no tuner attached is an exact pass-through —
+/// the wrapper itself cannot perturb anything.
+#[test]
+fn tuned_view_without_tuner_is_passthrough() {
+    let mut rng = Rng::new(0xA2);
+    let eng = Tcu::new(ArchKind::SystolicOs, 16, Variant::EntOurs).engine();
+    let view = Tuned::new(&eng, None);
+    for (m, k, n) in SHAPES {
+        let a = rng.i8_vec(m * k);
+        let b = rng.i8_vec(k * n);
+        assert_eq!(view.matmul(&a, &b, m, k, n), gemm_ref(&a, &b, m, k, n));
+    }
+}
+
+/// Autotuned serving ≡ untuned serving through the continuous
+/// scheduler, across all five architectures: same logits, same
+/// generated tokens, and both equal to sequential decode. The tuned
+/// run's metrics must surface live tuner counters; the untuned run
+/// must not have a tuner at all.
+#[test]
+fn autotune_on_matches_off_through_continuous_scheduler() {
+    let requests: [(usize, usize); 3] = [(5, 3), (8, 1), (3, 4)];
+    for arch in ALL_ARCHS {
+        let run = |autotune: bool| {
+            let cfg = Config::builder()
+                .continuous(2)
+                .twin(arch, Variant::EntOurs)
+                .policy(ContinuousPolicy {
+                    prefill_chunk: 3,
+                    ..ContinuousPolicy::default()
+                })
+                .autotune(autotune)
+                .build()
+                .expect("config");
+            let coord = Coordinator::start(cfg).expect("coordinator");
+            let rxs: Vec<_> = requests
+                .iter()
+                .enumerate()
+                .map(|(salt, &(plen, gen))| {
+                    coord.submit_tokens(TokenRequest::generate(prompt(plen, salt), gen))
+                })
+                .collect();
+            let results: Vec<_> = rxs
+                .into_iter()
+                .map(|rx| rx.recv().expect("scheduler alive").expect("request ok"))
+                .collect();
+            let m = coord.metrics();
+            coord.shutdown();
+            (results, m)
+        };
+        let (on, m_on) = run(true);
+        let (off, m_off) = run(false);
+        for (i, (r_on, r_off)) in on.iter().zip(&off).enumerate() {
+            assert_eq!(
+                r_on.logits,
+                r_off.logits,
+                "{} request {i}: autotune changed logits",
+                arch.name()
+            );
+            assert_eq!(
+                r_on.generated,
+                r_off.generated,
+                "{} request {i}: autotune changed generation",
+                arch.name()
+            );
+            let (seq_logits, seq_gen) =
+                sequential(arch, &prompt(requests[i].0, i), requests[i].1);
+            assert_eq!(r_on.logits, seq_logits, "{} request {i}", arch.name());
+            assert_eq!(r_on.generated, seq_gen, "{} request {i}", arch.name());
+        }
+        let ts = m_on.plan_tuner.expect("autotuned run must surface tuner counters");
+        assert!(
+            ts.hits + ts.misses > 0,
+            "{}: shards never consulted the tuner",
+            arch.name()
+        );
+        assert!(ts.tunes >= 1, "{}: no calibration ran", arch.name());
+        assert!(ts.entries >= 1 && ts.entries <= ts.capacity);
+        assert!(m_off.plan_tuner.is_none(), "untuned run grew a tuner");
+        assert_eq!(m_on.errors, 0);
+        assert_eq!(m_off.errors, 0);
+    }
+}
+
+/// Autotuning composes with the rest of the serving stack: prefix
+/// sharing (two requests share a prompt), KV prepacking, and oracle
+/// speculation all enabled — tuned ≡ untuned ≡ sequential, still
+/// bit-exact.
+#[test]
+fn autotune_composes_with_share_prepack_and_speculation() {
+    let shared = prompt(7, 3);
+    let other = prompt(5, 8);
+    let run = |autotune: bool| {
+        let cfg = Config::builder()
+            .continuous(2)
+            .twin(ArchKind::SystolicOs, Variant::EntOurs)
+            .policy(ContinuousPolicy {
+                prefill_chunk: 3,
+                ..ContinuousPolicy::default()
+            })
+            .prefix_share(true)
+            .kv_prepack(true)
+            .speculation(Spec::On { k: 4, draft: DraftKind::Oracle })
+            .autotune(autotune)
+            .build()
+            .expect("config");
+        let coord = Coordinator::start(cfg).expect("coordinator");
+        let rxs = vec![
+            coord.submit_tokens(TokenRequest::generate(shared.clone(), 4)),
+            coord.submit_tokens(TokenRequest::generate(shared.clone(), 2)),
+            coord.submit_tokens(TokenRequest::generate(other.clone(), 3)),
+        ];
+        let results: Vec<_> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().expect("scheduler alive").expect("request ok"))
+            .collect();
+        coord.shutdown();
+        results
+    };
+    let on = run(true);
+    let off = run(false);
+    for (i, (r_on, r_off)) in on.iter().zip(&off).enumerate() {
+        assert_eq!(r_on.logits, r_off.logits, "request {i}: logits diverged");
+        assert_eq!(r_on.generated, r_off.generated, "request {i}: generation diverged");
+    }
+    let (want_logits, want_gen) = sequential(ArchKind::SystolicOs, &shared, 4);
+    assert_eq!(on[0].logits, want_logits);
+    assert_eq!(on[0].generated, want_gen);
+    let (want_logits, want_gen) = sequential(ArchKind::SystolicOs, &other, 3);
+    assert_eq!(on[2].logits, want_logits);
+    assert_eq!(on[2].generated, want_gen);
+}
+
+/// Seeded shape-fuzz over the tuning space: for random shapes —
+/// including m=1 decode rows, odd/prime contraction and output dims,
+/// and sub-tile problems — every blocking request materializes in-cap,
+/// and the planner's event model (`stats`, `stats_cached`,
+/// `stats_kv_prepacked`) is **invariant** under the blocking. Tuned
+/// plans additionally execute bit-identically to the reference GEMM.
+#[test]
+fn shape_fuzz_stats_invariant_under_blocking() {
+    let dims: [usize; 12] = [1, 2, 3, 5, 7, 11, 13, 17, 23, 29, 31, 64];
+    let ms: [usize; 8] = [1, 1, 1, 2, 3, 5, 13, 48];
+    let mut rng = Rng::new(0xF022);
+    for round in 0..60 {
+        let arch = *rng.pick(&ALL_ARCHS);
+        let variant = *rng.pick(&ALL_VARIANTS);
+        let size = *rng.pick(&[4usize, 8, 16]);
+        let tcu = Tcu::new(arch, size, variant);
+        let (cap_m, cap_k, cap_n) = tcu.tile_caps();
+        let g = GemmShape::new(*rng.pick(&ms), *rng.pick(&dims), *rng.pick(&dims));
+        let def = TilePlan::new(&tcu, g);
+        let base = def.stats();
+        let base_cached = def.stats_cached();
+        let fresh = rng.below(1 + base.macs);
+        let base_kv = def.stats_kv_prepacked(fresh);
+        // Random blocking requests, deliberately including out-of-range
+        // extents — with_blocking must clamp them into cap and shape.
+        for _ in 0..4 {
+            let tm = rng.range(1, 2 * g.m + 2);
+            let tk = rng.range(1, 2 * g.k + 2);
+            let tn = rng.range(1, 2 * g.n + 2);
+            let plan = TilePlan::with_blocking(&tcu, g, tm, tk, tn);
+            assert!(plan.tm >= 1 && plan.tm <= cap_m.min(g.m), "round {round}: tm cap");
+            assert!(plan.tk >= 1 && plan.tk <= cap_k.min(g.k), "round {round}: tk cap");
+            assert!(plan.tn >= 1 && plan.tn <= cap_n.min(g.n), "round {round}: tn cap");
+            let st = plan.stats();
+            assert_eq!(st.macs, base.macs, "round {round}: MACs moved under blocking");
+            assert_eq!(st.cycles, base.cycles, "round {round}: cycles moved");
+            assert_eq!(st.encodes, base.encodes, "round {round}: encodes moved");
+            assert_eq!(st.weight_encodes, base.weight_encodes, "round {round}");
+            assert_eq!(st.a_reads, base.a_reads, "round {round}: A reads moved");
+            assert_eq!(st.b_reads, base.b_reads, "round {round}: B reads moved");
+            assert_eq!(st.psum_spills, base.psum_spills, "round {round}");
+            let sc = plan.stats_cached();
+            assert_eq!(sc.encodes, base_cached.encodes, "round {round}: cached encodes");
+            assert_eq!(sc.macs, base_cached.macs, "round {round}");
+            let skv = plan.stats_kv_prepacked(fresh);
+            assert_eq!(skv.encodes, base_kv.encodes, "round {round}: kv encodes");
+            assert_eq!(skv.macs, base_kv.macs, "round {round}");
+        }
+        // The tuner's own pick for this shape: in-cap, sane band count,
+        // and bit-identical execution.
+        let eng = tcu.engine();
+        let tuner = PlanTuner::new();
+        let (plan, bands) = tuner.choose(&eng, g);
+        assert!(plan.tm >= 1 && plan.tm <= cap_m.min(g.m));
+        assert!(plan.tk >= 1 && plan.tk <= cap_k.min(g.k));
+        assert!(plan.tn >= 1 && plan.tn <= cap_n.min(g.n));
+        assert!(bands >= 1 && bands <= g.m);
+        let a = rng.i8_vec(g.m * g.k);
+        let b = rng.i8_vec(g.k * g.n);
+        let mut c = vec![0i64; g.m * g.n];
+        eng.matmul_into_planned(&a, &b, &mut c, &plan, bands);
+        assert_eq!(
+            c,
+            gemm_ref(&a, &b, g.m, g.k, g.n),
+            "round {round}: tuned plan changed values on {}x{}x{} {}",
+            g.m,
+            g.k,
+            g.n,
+            arch.name()
+        );
+    }
+}

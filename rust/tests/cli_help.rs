@@ -121,3 +121,39 @@ fn serving_help_documents_speculation_flags() {
         );
     }
 }
+
+/// The tile-plan autotuner flag is documented on both serving
+/// subcommands (with the on|off contract), and `ent report` knows the
+/// roofline table.
+#[test]
+fn serving_help_documents_autotune_flag_and_roofline_report() {
+    for cmd in ["serve", "loadgen"] {
+        let (ok, text) = run_ent(&[cmd, "--help"]);
+        assert!(ok, "ent {cmd} --help must exit 0");
+        let line = text
+            .lines()
+            .find(|l| l.contains("autotune"))
+            .unwrap_or_else(|| panic!("ent {cmd} --help is missing --autotune:\n{text}"));
+        assert!(
+            line.contains("on|off"),
+            "ent {cmd} --help must state the autotune on|off contract: {line:?}"
+        );
+    }
+    let (ok, text) = run_ent(&["report", "roofline"]);
+    assert!(ok, "ent report roofline must exit 0");
+    assert!(
+        text.contains("Roofline sweep"),
+        "report must render the sweep table:\n{text}"
+    );
+    assert!(
+        text.contains("plan tuner"),
+        "report must print tuner counters:\n{text}"
+    );
+    // The report subcommand's own docs advertise the new table.
+    let (ok, help) = run_ent(&["--help"]);
+    assert!(ok);
+    assert!(
+        help.contains("roofline"),
+        "top-level help must mention the roofline report:\n{help}"
+    );
+}
