@@ -17,7 +17,7 @@ fn main() {
         for arch in ALL_ARCHS {
             for scale in ALL_SCALES {
                 let s = arch.size_for_scale(scale);
-                for v in ent::pe::ALL_VARIANTS {
+                for v in ent::pe::Variant::ALL {
                     acc += Tcu::new(arch, s, v).cost().total().area_um2;
                 }
             }

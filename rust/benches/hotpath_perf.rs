@@ -18,7 +18,7 @@ use ent::coordinator::{Config, Coordinator, InferRequest};
 use ent::encoding::packed::lut_i8;
 use ent::encoding::prepacked::{CachedWeight, EncodeCache};
 use ent::nn::zoo;
-use ent::pe::{Variant, ALL_VARIANTS};
+use ent::pe::Variant;
 use ent::runtime::{default_artifact_dir, Runtime};
 use ent::sim::{gemm_stats, tiled_matmul, GemmShape};
 use ent::soc::{energy, Soc};
@@ -67,7 +67,7 @@ fn main() {
     let cache = EncodeCache::new(64 << 20);
     let macs = (gm * gk * gn) as f64;
     for arch in ALL_ARCHS {
-        for variant in ALL_VARIANTS {
+        for variant in Variant::ALL {
             let size = arch.size_for_scale(Scale::Gops256);
             let eng = Tcu::new(arch, size, variant).engine();
             let name = format!("gemm32_{}_{}", arch.short_name(), variant.name());
@@ -79,7 +79,7 @@ fn main() {
             let mut c = vec![0i64; gm * gn];
             let cached = suite
                 .bench(&format!("{name}_cached"), || {
-                    if variant == Variant::EntOurs {
+                    if variant.consumes_codes() {
                         let pm = wa.resolve(&cache);
                         eng.matmul_prepacked_into(
                             MatOperand::Packed(&pm),

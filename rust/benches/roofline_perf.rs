@@ -87,7 +87,7 @@ fn main() {
         ("decode_mlp", GemmShape::new(1, spec.d_model, spec.d_ff)),
     ];
     for arch in ALL_ARCHS {
-        for variant in [Variant::Baseline, Variant::EntOurs] {
+        for variant in Variant::ALL {
             let s = if arch == ent::arch::ArchKind::Cube3d { 8 } else { 16 };
             let eng = Tcu::new(arch, s, variant).engine();
             for (sname, g) in shapes {

@@ -11,8 +11,10 @@
 //! line on it. Quick mode (`ENT_BENCH_QUICK=1`) shortens the
 //! submission window for CI smoke runs.
 
+use ent::arch::ALL_ARCHS;
 use ent::coordinator::loadgen::{self, LoadGen};
 use ent::coordinator::{Config, Coordinator, DraftKind, Spec};
+use ent::pe::Variant;
 use ent::util::bench::header;
 use ent::util::json::Json;
 
@@ -124,6 +126,50 @@ fn main() {
         // completed — 0 everywhere except the pooled rows.
         fields.push(("handoffs", Json::num(m.handoffs as f64)));
         rows.push(Json::obj(fields));
+    }
+
+    // --- arch × variant serving grid -------------------------------
+    // One short continuous-batching run per (architecture, variant)
+    // twin, so the serving trajectory covers the full grid the
+    // functional tests lock (`tests/serve_equivalence.rs`) and
+    // scripts/grid_check can assert arch × Variant::ALL coverage on
+    // this file like the other trajectory benches. Lower rate and a
+    // shorter window than the scheduler rows — these gate relative
+    // tokens/s per grid point, not scheduler behaviour.
+    let grid_duration_ms: u64 = if quick { 100 } else { 400 };
+    for arch in ALL_ARCHS {
+        for variant in Variant::ALL {
+            let cfg = Config::builder()
+                .continuous(2)
+                .twin(arch, variant)
+                .build()
+                .expect("grid config");
+            let coord = Coordinator::start(cfg).expect("grid coordinator");
+            let load = LoadGen {
+                rate_per_s: 100.0,
+                duration_ms: grid_duration_ms,
+                prompt_len: 8,
+                max_new_tokens: 3,
+                seed: 0xBE7C,
+                ..Default::default()
+            };
+            let r = loadgen::run(&coord, &load);
+            coord.shutdown();
+            let name = format!("serve_grid_{}_{}", arch.short_name(), variant.name());
+            println!(
+                "{name:<34} sent {:>4}  done {:>4}  {:>7.0} tokens/s",
+                r.sent, r.completed, r.tokens_per_s
+            );
+            let mut fields = vec![
+                ("name", Json::str(name)),
+                ("scheduler", Json::str("continuous")),
+                ("arch", Json::str(arch.short_name())),
+                ("variant", Json::str(variant.name())),
+                ("rate_per_s", Json::num(100.0)),
+            ];
+            fields.extend(r.json_fields());
+            rows.push(Json::obj(fields));
+        }
     }
 
     let out = Json::obj(vec![

@@ -11,7 +11,7 @@
 
 use ent::arch::{ArchKind, Scale, Tcu, ALL_ARCHS};
 use ent::nn::transformer::QuantTransformer;
-use ent::pe::{Variant, ALL_VARIANTS};
+use ent::pe::Variant;
 use ent::util::bench::{black_box, header, BenchResult, Suite};
 use ent::util::json::Json;
 
@@ -43,7 +43,7 @@ fn main() {
 
     let mut json_rows: Vec<Json> = Vec::new();
     for arch in ALL_ARCHS {
-        for variant in ALL_VARIANTS {
+        for variant in Variant::ALL {
             let size = arch.size_for_scale(Scale::Gops256);
             let eng = Tcu::new(arch, size, variant).engine();
 

@@ -18,7 +18,6 @@ use super::{ArchKind, CellSpec, Tcu, OPERAND_BITS};
 use crate::arith::adders::{Accumulator, Cla};
 use crate::arith::pp::{push_booth_rows, push_rows_for_digit, unwrap};
 use crate::arith::wallace::reduce_rows_fast;
-use crate::encoding::packed::lut_i8;
 use crate::gates::{Cost, Gate};
 use crate::pe::Variant;
 
@@ -27,22 +26,21 @@ pub fn cells(s: usize, variant: Variant) -> CellSpec {
     let mult_base = Variant::Baseline.mult_cost(n);
     let mcand_bits = variant.multiplicand_bits(n);
 
-    // EN-T variants: redundant product output — the multiplier's final
-    // carry-propagate adder fuses into the tree.
-    let (mult, tree) = match variant {
-        Variant::Baseline => (mult_base, trees::cla_tree(s, 2 * n)),
-        Variant::EntMbe | Variant::EntOurs => {
-            let credit = trees::fused_adder_credit();
-            let m = variant.mult_cost(n);
-            (
-                Cost::new(
-                    m.area_um2 - credit.area_um2,
-                    m.power_uw - credit.power_uw,
-                    m.delay_ns - credit.delay_ns,
-                ),
-                trees::redundant_tree(s, 2 * n),
-            )
-        }
+    // Fused-tree variants: redundant product output — the multiplier's
+    // final carry-propagate adder fuses into the tree.
+    let (mult, tree) = if variant.fused_tree() {
+        let credit = trees::fused_adder_credit();
+        let m = variant.mult_cost(n);
+        (
+            Cost::new(
+                m.area_um2 - credit.area_um2,
+                m.power_uw - credit.power_uw,
+                m.delay_ns - credit.delay_ns,
+            ),
+            trees::redundant_tree(s, 2 * n),
+        )
+    } else {
+        (mult_base, trees::cla_tree(s, 2 * n))
     };
 
     let edge_regs = Gate::DffBit.cost().replicate(mcand_bits).replicate(s);
@@ -62,7 +60,7 @@ pub fn cells(s: usize, variant: Variant) -> CellSpec {
         // stream (n) + product lane (2n, doubled when redundant).
         path_bits: (mcand_bits
             + n
-            + if variant == Variant::Baseline { 2 * n } else { 2 * n + 4 })
+            + if variant.fused_tree() { 2 * n + 4 } else { 2 * n })
             as f64,
         path_bits_baseline: (n + n + 2 * n) as f64,
         pe_area: mult.area_um2,
@@ -149,39 +147,39 @@ impl TcuEngine for Array1d2dEngine {
                     for p in p0..p0 + pk {
                         let a_val = a[mi * lda + p];
                         let b_val = b[p * ldb + j] as i64;
-                        match &self.dp {
-                            Datapath::EntLut(_) => {
-                                let code = lut_i8(a_val);
-                                let neg = code.sign();
-                                for i in 0..code.ndigits() {
-                                    let d = code.digit(i);
-                                    let d = if neg { -d } else { d };
-                                    push_rows_for_digit(d, b_val, i, w, &mut rows, &mut nr);
-                                }
-                                if code.cin() {
-                                    let d = if neg { -1 } else { 1 };
-                                    push_rows_for_digit(
-                                        d,
-                                        b_val,
-                                        code.ndigits(),
-                                        w,
-                                        &mut rows,
-                                        &mut nr,
-                                    );
-                                }
+                        if let Some(code) = self.dp.encode_i8(a_val) {
+                            // Code-consuming datapaths splay the encoded
+                            // digits onto their bit-weight rows — for
+                            // BW-T this row splay *is* the MAC
+                            // transformation, shared with the EN-T core.
+                            let neg = code.sign();
+                            for i in 0..code.ndigits() {
+                                let d = code.digit(i);
+                                let d = if neg { -d } else { d };
+                                push_rows_for_digit(d, b_val, i, w, &mut rows, &mut nr);
                             }
-                            _ => {
-                                // Booth digits recoded on the fly
-                                // (EN-T(MBE) keeps MBE selectors).
-                                push_booth_rows(
-                                    a_val as i64,
-                                    OPERAND_BITS,
+                            if code.cin() {
+                                let d = if neg { -1 } else { 1 };
+                                push_rows_for_digit(
+                                    d,
                                     b_val,
+                                    code.ndigits(),
                                     w,
                                     &mut rows,
                                     &mut nr,
                                 );
                             }
+                        } else {
+                            // Booth digits recoded on the fly
+                            // (EN-T(MBE) keeps MBE selectors).
+                            push_booth_rows(
+                                a_val as i64,
+                                OPERAND_BITS,
+                                b_val,
+                                w,
+                                &mut rows,
+                                &mut nr,
+                            );
                         }
                     }
                     let (sv, cv) = reduce_rows_fast(&rows[..nr], w);
@@ -199,13 +197,12 @@ impl TcuEngine for Array1d2dEngine {
 mod tests {
     use super::*;
     use crate::arch::{gemm_ref, ArchKind};
-    use crate::pe::ALL_VARIANTS;
     use crate::util::prng::Rng;
 
     #[test]
     fn matmul_matches_reference_all_variants() {
         let mut rng = Rng::new(0xA2);
-        for variant in ALL_VARIANTS {
+        for variant in Variant::ALL {
             let tcu = Tcu::new(ArchKind::Array1d2d, 16, variant);
             let (m, k, n) = (4, 16, 16);
             let a = rng.i8_vec(m * k);

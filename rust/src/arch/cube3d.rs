@@ -14,7 +14,6 @@ use super::engine::{Datapath, TcuEngine};
 use super::trees::{self, with_activity};
 use super::{ArchKind, CellSpec, Tcu, OPERAND_BITS};
 use crate::arith::adders::Accumulator;
-use crate::encoding::packed::lut_i8;
 use crate::gates::Gate;
 use crate::pe::Variant;
 
@@ -90,18 +89,15 @@ impl TcuEngine for Cube3dEngine {
         for mi in 0..m {
             for p in 0..k {
                 let a_val = a[mi * lda + p];
-                match &self.dp {
-                    Datapath::EntLut(_) => {
-                        let code = lut_i8(a_val); // face encoder, once
-                        for j in 0..n {
-                            c[mi * ldc + j] += self.dp.mul_code(code, b[p * ldb + j] as i64);
-                        }
+                if let Some(code) = self.dp.encode_i8(a_val) {
+                    // Face encoder, once per broadcast.
+                    for j in 0..n {
+                        c[mi * ldc + j] += self.dp.mul_code(code, b[p * ldb + j] as i64);
                     }
-                    dp => {
-                        let av = a_val as i64;
-                        for j in 0..n {
-                            c[mi * ldc + j] += dp.mul(av, b[p * ldb + j] as i64);
-                        }
+                } else {
+                    let av = a_val as i64;
+                    for j in 0..n {
+                        c[mi * ldc + j] += self.dp.mul(av, b[p * ldb + j] as i64);
                     }
                 }
             }
@@ -113,13 +109,12 @@ impl TcuEngine for Cube3dEngine {
 mod tests {
     use super::*;
     use crate::arch::{gemm_ref, ArchKind};
-    use crate::pe::ALL_VARIANTS;
     use crate::util::prng::Rng;
 
     #[test]
     fn matmul_matches_reference_all_variants() {
         let mut rng = Rng::new(0xA6);
-        for variant in ALL_VARIANTS {
+        for variant in Variant::ALL {
             let tcu = Tcu::new(ArchKind::Cube3d, 8, variant);
             let (m, k, n) = (8, 8, 8);
             let a = rng.i8_vec(m * k);

@@ -37,15 +37,17 @@
 //! for cache-resident weights.
 
 use crate::arch::{ArchKind, Tcu, OPERAND_BITS};
-use crate::arith::multiplier::{MultKind, Multiplier};
+use crate::arith::multiplier::Multiplier;
+use crate::encoding::bitweight;
 use crate::encoding::packed::{lut_i8, PackedCode};
 use crate::encoding::prepacked::PrePackedMatrix;
-use crate::pe::Variant;
+use crate::pe::{DatapathKind, Variant};
 use crate::sim::autotune::PlanTuner;
 use crate::sim::dataflow::{GemmShape, GemmStats};
 use crate::sim::planner::TilePlan;
 
-/// The per-MAC functional route a variant's PEs implement.
+/// The per-MAC functional route a variant's PEs implement, built from
+/// the variant descriptor's [`DatapathKind`] field.
 #[derive(Clone, Copy, Debug)]
 pub(crate) enum Datapath {
     /// Baseline DW-IP multiplier: opaque block, exact product.
@@ -54,14 +56,20 @@ pub(crate) enum Datapath {
     Mbe(Multiplier),
     /// EN-T(Ours): packed-LUT encoded multiplicand through the RME core.
     EntLut(Multiplier),
+    /// BW-T: packed-LUT encoded multiplicand accumulated per bit-weight
+    /// plane (carry propagation deferred into the accumulator).
+    BitWeight(Multiplier),
 }
 
 impl Datapath {
     pub fn new(variant: Variant, n: usize) -> Datapath {
-        match variant {
-            Variant::Baseline => Datapath::Exact,
-            Variant::EntMbe => Datapath::Mbe(Multiplier::new(MultKind::MbeInternal, n)),
-            Variant::EntOurs => Datapath::EntLut(Multiplier::new(MultKind::EntRme, n)),
+        let spec = variant.spec();
+        let mult = Multiplier::new(spec.raw_mac_kind, n);
+        match spec.datapath {
+            DatapathKind::Exact => Datapath::Exact,
+            DatapathKind::MbeOnTheFly => Datapath::Mbe(mult),
+            DatapathKind::EntLut => Datapath::EntLut(mult),
+            DatapathKind::BitWeight => Datapath::BitWeight(mult),
         }
     }
 
@@ -72,6 +80,19 @@ impl Datapath {
             Datapath::Exact => a * b,
             Datapath::Mbe(m) => m.mul_mbe_fast(a, b),
             Datapath::EntLut(m) => m.mul_packed(lut_i8(a as i8), b),
+            Datapath::BitWeight(_) => bitweight::mul_bw_packed(lut_i8(a as i8), b),
+        }
+    }
+
+    /// LUT-encode an int8 multiplicand into the wire format, if this
+    /// datapath consumes codes — the encode-once hook the architecture
+    /// simulators use for broadcast/stationary operands (`None` means
+    /// the variant re-encodes internally; feed [`Datapath::mul`]).
+    #[inline]
+    pub fn encode_i8(&self, a: i8) -> Option<PackedCode> {
+        match self {
+            Datapath::EntLut(_) | Datapath::BitWeight(_) => Some(lut_i8(a)),
+            Datapath::Exact | Datapath::Mbe(_) => None,
         }
     }
 
@@ -81,8 +102,9 @@ impl Datapath {
     pub fn mul_code(&self, code: PackedCode, b: i64) -> i64 {
         match self {
             Datapath::EntLut(m) => m.mul_packed(code, b),
-            // Non-EN-T variants never receive packed codes.
-            _ => unreachable!("mul_code on a non-EN-T datapath"),
+            Datapath::BitWeight(_) => bitweight::mul_bw_packed(code, b),
+            // Variants that re-encode internally never receive codes.
+            _ => unreachable!("mul_code on a non-code-consuming datapath"),
         }
     }
 }
@@ -248,7 +270,8 @@ pub trait TcuEngine: Send + Sync {
     /// **pre-encoded** ([`MatOperand::Packed`], or a borrowed sidecar
     /// via [`MatOperand::Codes`] — the append-only KV-cache path) — the
     /// encode-reuse entry the weight-side and attention callers use. On
-    /// the EN-T(Ours) variant the encoded side's codes feed the RME
+    /// a code-consuming variant ([`Variant::consumes_codes`] — EN-T(Ours)
+    /// and BW-T share the wire format) the encoded side's codes feed the
     /// datapath directly, so the GEMM performs **zero** encoder lookups
     /// for that operand (the planner-side invariants:
     /// [`TilePlan::stats_cached`] charges zero weight-encode events,
@@ -256,7 +279,7 @@ pub trait TcuEngine: Send + Sync {
     /// charges only the newly appended delta). Every other variant — and
     /// a call with no encoded operand — falls back to
     /// [`TcuEngine::matmul_into`] on the raw views, so the
-    /// five-architecture × three-variant grid stays uniform.
+    /// architecture × variant grid stays uniform.
     ///
     /// Results are bit-identical to [`TcuEngine::matmul_into`] on every
     /// route: the codes come from the same compile-time LUT the array
@@ -288,19 +311,19 @@ pub trait TcuEngine: Send + Sync {
         if let Some(cc) = b.codes() {
             assert_eq!(cc.len(), k * n, "B code sidecar shape");
         }
-        let consumes_codes = matches!(self.tcu().variant, Variant::EntOurs)
+        let consumes_codes = self.tcu().variant.consumes_codes()
             && (a.codes().is_some() || b.codes().is_some());
         if !consumes_codes {
             // Baseline re-encodes inside every PE and EN-T(MBE) Booth-
-            // recodes on the fly — neither can consume EN-T codes, so
-            // they take the existing path unchanged.
+            // recodes on the fly — neither can consume pre-encoded
+            // codes, so they take the existing path unchanged.
             return self.matmul_into(ar, br, c, m, k, n);
         }
         c.fill(0);
         if m == 0 || k == 0 || n == 0 {
             return;
         }
-        let mul = Multiplier::new(MultKind::EntRme, OPERAND_BITS);
+        let dp = Datapath::new(self.tcu().variant, OPERAND_BITS);
         let macs = (m as u64) * (k as u64) * (n as u64);
         // The code-consuming walk has no tile grid (codes stream flat),
         // so the tuner only contributes its calibrated band split here.
@@ -310,15 +333,16 @@ pub trait TcuEngine: Send + Sync {
         };
         let bands = effective_bands(m, bands);
         if bands <= 1 {
-            run_band_prepacked(&mul, a, b, c, 0, m, k, n);
+            run_band_prepacked(&dp, a, b, c, 0, m, k, n);
             return;
         }
         let rows_per = m.div_ceil(bands);
         std::thread::scope(|scope| {
             for (bi, band) in c.chunks_mut(rows_per * n).enumerate() {
+                let dp = &dp;
                 scope.spawn(move || {
                     let rows = band.len() / n;
-                    run_band_prepacked(&mul, a, b, band, bi * rows_per, rows, k, n);
+                    run_band_prepacked(dp, a, b, band, bi * rows_per, rows, k, n);
                 });
             }
         });
@@ -338,10 +362,7 @@ pub trait TcuEngine: Send + Sync {
 /// normalized to the chunk count the `m.div_ceil(bands)`-row split
 /// actually produces (see [`effective_bands`]).
 fn par_bands(tcu: &Tcu, macs: u64, m: usize) -> usize {
-    let grain: u64 = match tcu.variant {
-        Variant::Baseline => 1 << 22,
-        _ => 1 << 16,
-    };
+    let grain: u64 = tcu.variant.par_grain();
     if macs < 2 * grain || m < 2 {
         return 1;
     }
@@ -419,14 +440,15 @@ fn run_band<E: TcuEngine + ?Sized>(
 }
 
 /// One output row band of the prepacked GEMM: the packed operand's
-/// codes feed [`Multiplier::mul_packed`] directly — zero encoder
-/// lookups. Integer accumulation is order-independent and every product
-/// is exact, so the result is bit-identical to the tile-walked
-/// dataflows. When both operands are packed, A's codes win (A is the
-/// multiplicand path on four of the five architectures).
+/// codes feed the code-consuming datapath ([`Datapath::mul_code`])
+/// directly — zero encoder lookups. Integer accumulation is
+/// order-independent and every product is exact, so the result is
+/// bit-identical to the tile-walked dataflows. When both operands are
+/// packed, A's codes win (A is the multiplicand path on four of the
+/// five architectures).
 #[allow(clippy::too_many_arguments)]
 fn run_band_prepacked(
-    mul: &Multiplier,
+    dp: &Datapath,
     a: MatOperand<'_>,
     b: MatOperand<'_>,
     c_band: &mut [i64],
@@ -443,7 +465,7 @@ fn run_band_prepacked(
                     let code = ca[(r0 + i) * k + p];
                     let row = &mut c_band[i * n..(i + 1) * n];
                     for (cv, &bv) in row.iter_mut().zip(&br[p * n..(p + 1) * n]) {
-                        *cv += mul.mul_packed(code, bv as i64);
+                        *cv += dp.mul_code(code, bv as i64);
                     }
                 }
             }
@@ -454,7 +476,7 @@ fn run_band_prepacked(
                     let av = ar[(r0 + i) * k + p] as i64;
                     let row = &mut c_band[i * n..(i + 1) * n];
                     for (j, cv) in row.iter_mut().enumerate() {
-                        *cv += mul.mul_packed(cb[p * n + j], av);
+                        *cv += dp.mul_code(cb[p * n + j], av);
                     }
                 }
             }
@@ -573,7 +595,6 @@ pub(crate) fn dot_window(k: usize) -> usize {
 mod tests {
     use super::*;
     use crate::arch::{gemm_ref, ALL_ARCHS};
-    use crate::pe::ALL_VARIANTS;
     use crate::util::prng::Rng;
 
     /// The acceptance-criterion equivalence: every architecture ×
@@ -584,7 +605,7 @@ mod tests {
         let mut rng = Rng::new(0xE6);
         for arch in ALL_ARCHS {
             let size = if arch == ArchKind::Cube3d { 4 } else { 8 };
-            for variant in ALL_VARIANTS {
+            for variant in Variant::ALL {
                 let eng = engine_for(Tcu::new(arch, size, variant));
                 let (m, k, n) = (11, 19, 9);
                 let a = rng.i8_vec(m * k);
@@ -769,7 +790,7 @@ mod tests {
         let pb = PrePackedMatrix::encode(&b, k, n);
         for arch in ALL_ARCHS {
             let size = if arch == ArchKind::Cube3d { 4 } else { 8 };
-            for variant in ALL_VARIANTS {
+            for variant in Variant::ALL {
                 let eng = engine_for(Tcu::new(arch, size, variant));
                 let want = gemm_ref(&a, &b, m, k, n);
                 for (oa, ob) in [
@@ -799,7 +820,7 @@ mod tests {
         let bc: Vec<PackedCode> = b.iter().map(|&v| lut_i8(v)).collect();
         for arch in ALL_ARCHS {
             let size = if arch == ArchKind::Cube3d { 4 } else { 8 };
-            for variant in ALL_VARIANTS {
+            for variant in Variant::ALL {
                 let eng = engine_for(Tcu::new(arch, size, variant));
                 let want = gemm_ref(&a, &b, m, k, n);
                 for (oa, ob) in [

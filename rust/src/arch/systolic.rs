@@ -20,7 +20,6 @@ use super::engine::{Datapath, TcuEngine};
 use super::trees::{self, with_activity};
 use super::{ArchKind, CellSpec, Tcu, OPERAND_BITS};
 use crate::arith::adders::{Accumulator, Cla};
-use crate::encoding::packed::lut_i8;
 use crate::gates::Gate;
 use crate::pe::Variant;
 
@@ -165,9 +164,9 @@ impl TcuEngine for SystolicOsEngine {
                     let p = p as usize;
                     let a_val = a[i * lda + p];
                     let b_val = b[p * ldb + j] as i64;
-                    c[i * ldc + j] += match &self.dp {
-                        Datapath::EntLut(_) => self.dp.mul_code(lut_i8(a_val), b_val),
-                        dp => dp.mul(a_val as i64, b_val),
+                    c[i * ldc + j] += match self.dp.encode_i8(a_val) {
+                        Some(code) => self.dp.mul_code(code, b_val),
+                        None => self.dp.mul(a_val as i64, b_val),
                     };
                 }
             }
@@ -220,11 +219,11 @@ impl TcuEngine for SystolicWsEngine {
                 for p in 0..k {
                     let a_val = a[mi * lda + p] as i64;
                     let b_val = b[p * ldb + j];
-                    psum += match &self.dp {
+                    psum += match self.dp.encode_i8(b_val) {
                         // Stationary weight's code is the LUT entry —
                         // encoded once per residency in the real array.
-                        Datapath::EntLut(_) => self.dp.mul_code(lut_i8(b_val), a_val),
-                        dp => dp.mul(b_val as i64, a_val),
+                        Some(code) => self.dp.mul_code(code, a_val),
+                        None => self.dp.mul(b_val as i64, a_val),
                     };
                 }
                 c[mi * ldc + j] += psum;
@@ -237,13 +236,12 @@ impl TcuEngine for SystolicWsEngine {
 mod tests {
     use super::*;
     use crate::arch::{gemm_ref, ArchKind};
-    use crate::pe::ALL_VARIANTS;
     use crate::util::prng::Rng;
 
     #[test]
     fn os_matches_reference_all_variants() {
         let mut rng = Rng::new(0xA3);
-        for variant in ALL_VARIANTS {
+        for variant in Variant::ALL {
             let tcu = Tcu::new(ArchKind::SystolicOs, 16, variant);
             let (m, k, n) = (16, 9, 11);
             let a = rng.i8_vec(m * k);
@@ -260,7 +258,7 @@ mod tests {
     #[test]
     fn ws_matches_reference_all_variants() {
         let mut rng = Rng::new(0xA4);
-        for variant in ALL_VARIANTS {
+        for variant in Variant::ALL {
             let tcu = Tcu::new(ArchKind::SystolicWs, 16, variant);
             let (m, k, n) = (7, 16, 16);
             let a = rng.i8_vec(m * k);

@@ -9,7 +9,11 @@
 //!   (the "Ours" row of Table 1c);
 //! * [`MultKind::EntRme`] — "RME_Ours": the EN-T PE datapath after the
 //!   encoders are hoisted out of the array; it consumes a pre-encoded
-//!   multiplicand.
+//!   multiplicand;
+//! * [`MultKind::BwRme`] — "BW-T": the follow-up paper's bit-weight
+//!   transformed core ([`crate::encoding::bitweight`]); consumes the
+//!   same pre-encoded wire format as RME with the per-product carry
+//!   propagation deferred into the accumulator.
 //!
 //! Every kind computes exact products; INT8×INT8 is tested exhaustively.
 
@@ -27,13 +31,15 @@ use crate::gates::{calib, Cost};
 /// comfortable slack shared by all the stack-buffered hot paths.
 pub(crate) const MAX_PP_ROWS: usize = 72;
 
-/// The four assemblies of Table 1c.
+/// The four assemblies of Table 1c, plus the follow-up paper's
+/// bit-weight transformed core.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum MultKind {
     DwIp,
     MbeInternal,
     EntInternal,
     EntRme,
+    BwRme,
 }
 
 impl MultKind {
@@ -43,6 +49,7 @@ impl MultKind {
             MultKind::MbeInternal => "MBE",
             MultKind::EntInternal => "Ours",
             MultKind::EntRme => "RME_Ours",
+            MultKind::BwRme => "BW-T",
         }
     }
 }
@@ -90,6 +97,9 @@ impl Multiplier {
                 // intermediate expansion.
                 self.mul_packed(PackedCode::encode_signed(a, n), b)
             }
+            // Same wire format, transformed accumulation: digits splay
+            // onto bit-weight planes, carries resolve downstream.
+            MultKind::BwRme => crate::encoding::bitweight::mul_bw_wide(a, b, n),
         }
     }
 
@@ -211,6 +221,11 @@ impl Multiplier {
                 rme.then(Cost::new(enc.area_um2, enc.power_uw, enc.delay_ns))
             }
             MultKind::EntRme => rme,
+            MultKind::BwRme => Cost::new(
+                c.bw_rme_area_um2 * scale,
+                c.bw_rme_power_uw * scale,
+                c.bw_rme_delay_ns * (1.0 + (n / 8.0).log2() * 0.25),
+            ),
         }
     }
 }
@@ -220,7 +235,7 @@ mod tests {
     use super::*;
     use crate::util::check::{check, Config};
 
-    /// Exhaustive INT8×INT8 for every assembly — 4 × 65 536 products.
+    /// Exhaustive INT8×INT8 for every assembly — 5 × 65 536 products.
     #[test]
     fn exhaustive_int8_all_kinds() {
         for kind in [
@@ -228,6 +243,7 @@ mod tests {
             MultKind::MbeInternal,
             MultKind::EntInternal,
             MultKind::EntRme,
+            MultKind::BwRme,
         ] {
             let m = Multiplier::new(kind, 8);
             for a in -128i64..=127 {
@@ -247,6 +263,7 @@ mod tests {
                 MultKind::MbeInternal,
                 MultKind::EntInternal,
                 MultKind::EntRme,
+                MultKind::BwRme,
             ]);
             let lo = -(1i64 << (n - 1));
             let hi = (1i64 << (n - 1)) - 1;
@@ -362,6 +379,19 @@ mod tests {
                 Err(format!("n={n} {a}×{b}"))
             }
         });
+    }
+
+    /// The deferred-carry BW-T core must undercut RME on every axis
+    /// (its whole point), while staying above the physically impossible
+    /// free-adder floor.
+    #[test]
+    fn bw_core_undercuts_rme() {
+        let rme = Multiplier::new(MultKind::EntRme, 8).cost();
+        let bw = Multiplier::new(MultKind::BwRme, 8).cost();
+        assert!(bw.area_um2 < rme.area_um2);
+        assert!(bw.power_uw < rme.power_uw);
+        assert!(bw.delay_ns < rme.delay_ns);
+        assert!(bw.area_um2 > 0.9 * rme.area_um2, "credit implausibly large");
     }
 
     /// int8 corner cases exercised explicitly (beyond the exhaustive

@@ -1,0 +1,175 @@
+//! BW-T: transformation in the bit-weight dimension of MACs — the
+//! follow-up to EN-T by the same group (arXiv:2503.06342, PAPERS.md).
+//!
+//! EN-T hoists the *encoder* out of each PE; BW-T additionally
+//! transforms the MAC core itself. Instead of assembling the partial
+//! products of one multiplication in the operand dimension (rows of a
+//! per-product compressor + carry-propagate adder), the transformed
+//! core splays each encoded digit onto its **bit-weight plane** and
+//! accumulates whole planes across the dot product, deferring carry
+//! propagation into the (already present) accumulator. The wire format
+//! is untouched: BW-T consumes the exact same carry-chain
+//! [`PackedCode`] the EN-T(Ours) column encoders emit — one radix-4
+//! digit in {−1, 0, 1, 2} per bit pair, a carry-in bit, and a sign —
+//! which is why the descriptor marks it `consumes_codes` and it shares
+//! encode caches and KV sidecars with Ours.
+//!
+//! The plane decomposition is disjoint and complete: a digit at radix-4
+//! position `i` contributes `±b·2^{2i}` when |d| = 1 and `±b·2^{2i+1}`
+//! when |d| = 2, and the final carry contributes `b·2^n`; no two digits
+//! land on the same plane. [`mul_bw`] is therefore *functionally exact*
+//! — equal to the two's-complement product for every operand pair —
+//! which the exhaustive int8 test below proves.
+
+use crate::encoding::ent::Ent;
+use crate::encoding::packed::{lut_i8, PackedCode, MAX_PACKED_WIDTH};
+use crate::encoding::{Encoding, EncoderShape};
+use crate::gates::Cost;
+
+/// The BW-T encoding descriptor entry. The column-encoder hardware is
+/// the EN-T carry-chain encoder verbatim (same shape, same Table-2
+/// cost, same digits) — the transformation lives in the MAC core, so
+/// every shape/cost query delegates to [`Ent`].
+pub struct Bw;
+
+impl Encoding for Bw {
+    fn name(&self) -> &'static str {
+        "BW-T"
+    }
+
+    fn shape(&self, n: usize) -> EncoderShape {
+        Ent.shape(n)
+    }
+
+    fn encoder_cost(&self, n: usize) -> Cost {
+        Ent.encoder_cost(n)
+    }
+
+    fn digits(&self, value: i64, n: usize) -> Vec<i8> {
+        Ent.digits(value, n)
+    }
+}
+
+/// Multiply a pre-encoded multiplicand by `b` through the bit-weight
+/// planes: one signed shifted multiple of `b` per populated plane, no
+/// per-product carry-propagate step. Exact for any code of width
+/// ≤ [`MAX_PACKED_WIDTH`] (every shift then fits in the i64 window).
+#[inline]
+pub fn mul_bw_packed(code: PackedCode, b: i64) -> i64 {
+    let n = code.width() as usize;
+    debug_assert!(n <= MAX_PACKED_WIDTH);
+    // The carry-chain code encodes |a|; fold the sign into b once.
+    let b_eff = if code.sign() { -b } else { b };
+    let mut acc = 0i64;
+    for i in 0..code.ndigits() {
+        let d = code.digit(i);
+        if d == 0 {
+            continue;
+        }
+        // |d| = 1 → plane 2i (±1·4^i), |d| = 2 → plane 2i+1 (2·4^i).
+        let plane = 2 * i + (d.unsigned_abs() as usize >> 1);
+        if d < 0 {
+            acc -= b_eff << plane;
+        } else {
+            acc += b_eff << plane;
+        }
+    }
+    if code.cin() {
+        acc += b_eff << n;
+    }
+    acc
+}
+
+/// Exact int8 product through the BW-T route: LUT-encode `a` into the
+/// carry-chain wire format, then accumulate its bit-weight planes.
+#[inline]
+pub fn mul_bw(a: i8, b: i8) -> i32 {
+    mul_bw_packed(lut_i8(a), b as i64) as i32
+}
+
+/// Width-generic BW-T product for n-bit signed operands (n ≤ 32).
+#[inline]
+pub fn mul_bw_wide(a: i64, b: i64, n: usize) -> i64 {
+    mul_bw_packed(PackedCode::encode_signed(a, n), b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::fits_signed;
+    use crate::util::prng::Rng;
+
+    /// The tentpole's exactness contract: BW-T equals the
+    /// two's-complement product for *every* int8 pair.
+    #[test]
+    fn exhaustive_int8_exact() {
+        for a in i8::MIN..=i8::MAX {
+            for b in i8::MIN..=i8::MAX {
+                assert_eq!(
+                    mul_bw(a, b),
+                    (a as i32) * (b as i32),
+                    "BW-T mismatch at {a} x {b}"
+                );
+            }
+        }
+    }
+
+    /// Encoder roundtrip: every int8 encodes to a carry-chain code that
+    /// decodes back to itself (BW-T rides the same wire format, so this
+    /// is the encode→decode leg of its datapath).
+    #[test]
+    fn encode_decode_roundtrip_int8() {
+        for a in i8::MIN..=i8::MAX {
+            let code = lut_i8(a);
+            assert_eq!(code.decode(), a as i64, "roundtrip failed for {a}");
+            assert_eq!(code, PackedCode::encode_signed(a as i64, 8));
+        }
+    }
+
+    /// No two encoded digits may land on the same bit-weight plane —
+    /// the disjointness that makes deferred carry propagation exact.
+    #[test]
+    fn planes_are_disjoint() {
+        for a in i8::MIN..=i8::MAX {
+            let code = lut_i8(a);
+            let mut seen = 0u64;
+            for i in 0..code.ndigits() {
+                let d = code.digit(i);
+                if d == 0 {
+                    continue;
+                }
+                let plane = 2 * i + (d.unsigned_abs() as usize >> 1);
+                assert_eq!(seen >> plane & 1, 0, "plane collision for {a}");
+                seen |= 1 << plane;
+            }
+        }
+    }
+
+    #[test]
+    fn prop_wide_widths() {
+        let mut rng = Rng::new(0xB17);
+        for _ in 0..4000 {
+            let n = [8usize, 12, 16, 24, 32][rng.below(5) as usize];
+            let lo = -(1i64 << (n - 1));
+            let hi = (1i64 << (n - 1)) - 1;
+            let a = rng.range_i64(lo, hi);
+            let b = rng.range_i64(lo, hi);
+            assert!(fits_signed(a, n) && fits_signed(b, n));
+            assert_eq!(mul_bw_wide(a, b, n), a * b, "n={n} a={a} b={b}");
+        }
+    }
+
+    /// The descriptor entry must present the EN-T shape/cost verbatim.
+    #[test]
+    fn encoding_delegates_to_ent() {
+        for n in [8usize, 12, 16] {
+            assert_eq!(Bw.shape(n).encoded_bits, Ent.shape(n).encoded_bits);
+            assert_eq!(Bw.shape(n).encoders, Ent.shape(n).encoders);
+            let (bc, ec) = (Bw.encoder_cost(n), Ent.encoder_cost(n));
+            assert_eq!(bc.area_um2, ec.area_um2);
+            assert_eq!(bc.power_uw, ec.power_uw);
+            assert_eq!(Bw.digits(-77, n), Ent.digits(-77, n));
+        }
+        assert_eq!(Bw.name(), "BW-T");
+    }
+}

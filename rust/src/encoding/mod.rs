@@ -21,6 +21,7 @@
 //! weight GEMMs perform zero encoder activations (see
 //! [`crate::sim::planner::TilePlan::stats_cached`]).
 
+pub mod bitweight;
 pub mod ent;
 pub mod mbe;
 pub mod packed;

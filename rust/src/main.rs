@@ -94,12 +94,7 @@ fn run(argv: &[String]) -> ent::Result<()> {
 }
 
 fn parse_variant(s: &str) -> ent::Result<Variant> {
-    Ok(match s {
-        "baseline" => Variant::Baseline,
-        "mbe" => Variant::EntMbe,
-        "ours" => Variant::EntOurs,
-        _ => ent::bail!("variant must be baseline|mbe|ours"),
-    })
+    Variant::from_cli(s).ok_or_else(|| ent::err!("variant must be {}", Variant::cli_tokens()))
 }
 
 fn parse_arch(s: &str) -> ent::Result<ArchKind> {
@@ -197,7 +192,7 @@ fn cmd_simulate(argv: &[String]) -> ent::Result<()> {
     let specs = [
         OptSpec { name: "arch", takes_value: true, help: "matrix2d|array1d2d|sa_os|sa_ws|cube3d" },
         OptSpec { name: "size", takes_value: true, help: "array size (default 32; cube edge)" },
-        OptSpec { name: "variant", takes_value: true, help: "baseline|mbe|ours" },
+        OptSpec { name: "variant", takes_value: true, help: "baseline|mbe|ours|bwt" },
         OptSpec { name: "m", takes_value: true, help: "GEMM M (default 64)" },
         OptSpec { name: "k", takes_value: true, help: "GEMM K (default 128)" },
         OptSpec { name: "n", takes_value: true, help: "GEMM N (default 64)" },
@@ -271,7 +266,7 @@ fn cmd_soc(argv: &[String]) -> ent::Result<()> {
     let specs = [
         OptSpec { name: "net", takes_value: true, help: "network name (default resnet50)" },
         OptSpec { name: "arch", takes_value: true, help: "TCU architecture (default sa_os)" },
-        OptSpec { name: "variant", takes_value: true, help: "baseline|mbe|ours (default ours)" },
+        OptSpec { name: "variant", takes_value: true, help: "baseline|mbe|ours|bwt (default ours)" },
         OptSpec { name: "layers", takes_value: false, help: "print the per-layer trace" },
         OptSpec { name: "json", takes_value: false, help: "JSON output" },
         OptSpec { name: "help", takes_value: false, help: "show help" },
@@ -345,7 +340,7 @@ fn cmd_transformer(argv: &[String]) -> ent::Result<()> {
     let specs = [
         OptSpec { name: "arch", takes_value: true, help: "matrix2d|array1d2d|sa_os|sa_ws|cube3d" },
         OptSpec { name: "size", takes_value: true, help: "array size (default 16; cube edge 8)" },
-        OptSpec { name: "variant", takes_value: true, help: "baseline|mbe|ours" },
+        OptSpec { name: "variant", takes_value: true, help: "baseline|mbe|ours|bwt" },
         OptSpec { name: "prompt", takes_value: true, help: "prompt length to prefill (default 12)" },
         OptSpec { name: "gen", takes_value: true, help: "tokens to decode autoregressively (default 4)" },
         OptSpec { name: "json", takes_value: false, help: "JSON output" },
@@ -801,22 +796,30 @@ fn cmd_sweep(argv: &[String]) -> ent::Result<()> {
     }
     match args.get_or("ablation", "encoder") {
         "encoder" => {
-            // The paper's central contrast: external MBE vs external Ours
-            // per architecture.
+            // The paper's central contrast — every external-encoder
+            // variant vs the baseline, one Δarea/Δpower column pair per
+            // variant. Columns come from the descriptor list, so a new
+            // external encoder shows up here without touching the CLI.
+            let ext: Vec<Variant> = Variant::ALL
+                .into_iter()
+                .filter(|v| v.external_encoder())
+                .collect();
+            let mut cols: Vec<String> = vec!["arch".into()];
+            cols.extend(ext.iter().map(|v| format!("Δarea {}", v.name())));
+            cols.extend(ext.iter().map(|v| format!("Δpower {}", v.name())));
             let mut t = Table::new("Ablation — encoder choice at 1 TOPS")
-                .header(&["arch", "Δarea (MBE)", "Δarea (Ours)", "Δpower (MBE)", "Δpower (Ours)"]);
+                .header(&cols.iter().map(String::as_str).collect::<Vec<_>>());
             for arch in ALL_ARCHS {
                 let s = arch.size_for_scale(ent::arch::Scale::Tops1);
                 let b = Tcu::new(arch, s, Variant::Baseline).cost().total();
-                let m = Tcu::new(arch, s, Variant::EntMbe).cost().total();
-                let o = Tcu::new(arch, s, Variant::EntOurs).cost().total();
-                t.row(vec![
-                    arch.name().into(),
-                    pct(m.area_um2 / b.area_um2 - 1.0),
-                    pct(o.area_um2 / b.area_um2 - 1.0),
-                    pct(m.power_uw / b.power_uw - 1.0),
-                    pct(o.power_uw / b.power_uw - 1.0),
-                ]);
+                let costs: Vec<_> = ext
+                    .iter()
+                    .map(|&v| Tcu::new(arch, s, v).cost().total())
+                    .collect();
+                let mut row = vec![arch.name().to_string()];
+                row.extend(costs.iter().map(|c| pct(c.area_um2 / b.area_um2 - 1.0)));
+                row.extend(costs.iter().map(|c| pct(c.power_uw / b.power_uw - 1.0)));
+                t.row(row);
             }
             print!("{}", t.render());
         }

@@ -30,7 +30,6 @@ use crate::arch::{MatOperand, TcuEngine};
 use crate::encoding::packed::{lut_i8, PackedCode};
 use crate::encoding::prepacked::{CachedWeight, EncodeCache};
 use crate::nn::kvpool::{KvBlock, BLOCK_ROWS};
-use crate::pe::Variant;
 use crate::util::prng::Rng;
 
 /// Right-shift applied to Q/K/V and output-projection accumulators
@@ -540,7 +539,7 @@ impl MhaWeights {
         let total: usize = segs.iter().map(|s| s.0).sum();
         assert!(total > 0, "empty attention step");
         assert_eq!(x.len(), total * d, "attention input shape");
-        let prepack = self.kv_prepack && eng.tcu().variant == Variant::EntOurs;
+        let prepack = self.kv_prepack && eng.tcu().variant.consumes_codes();
 
         // Q/K/V projections: one shared engine GEMM each over every
         // sequence's rows, requantized to int8. The weights are the

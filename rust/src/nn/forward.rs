@@ -5,7 +5,7 @@
 //! [`TcuEngine::matmul_into`], so a forward pass exercises the exact
 //! same array dataflow (and EN-T encode path) as the verification and
 //! energy layers. Because every engine computes exact integer GEMMs, the
-//! logits are bit-identical across all five architectures and all three
+//! logits are bit-identical across all five architectures and all four
 //! variants — the paper's functional-transparency claim at network
 //! scope (see `tests::logits_identical_across_engines`).
 //!
@@ -184,7 +184,7 @@ fn conv_layer<E: TcuEngine + ?Sized>(
 mod tests {
     use super::*;
     use crate::arch::{ArchKind, Tcu, ALL_ARCHS};
-    use crate::pe::{Variant, ALL_VARIANTS};
+    use crate::pe::Variant;
 
     #[test]
     fn forward_is_deterministic_and_finite() {
@@ -235,7 +235,7 @@ mod tests {
         );
         for arch in ALL_ARCHS {
             let size = if arch == ArchKind::Cube3d { 4 } else { 8 };
-            for variant in ALL_VARIANTS {
+            for variant in Variant::ALL {
                 let eng = Tcu::new(arch, size, variant).engine();
                 assert_eq!(
                     model.forward(&eng, &img),

@@ -304,7 +304,7 @@ impl Network {
 }
 
 /// Should this engine's weight GEMMs resolve through the encode cache?
-/// Only the EN-T(Ours) datapath can consume pre-encoded codes
+/// Only code-consuming datapaths can consume pre-encoded codes
 /// ([`TcuEngine::matmul_prepacked_into`](crate::arch::TcuEngine::matmul_prepacked_into)
 /// falls back for the rest), so resolving — an O(rows·cols) encode on
 /// first touch plus resident bytes — would be pure waste on Baseline
@@ -314,7 +314,7 @@ fn cache_for_engine<'c, E: crate::arch::TcuEngine + ?Sized>(
     eng: &E,
     cache: Option<&'c crate::encoding::prepacked::EncodeCache>,
 ) -> Option<&'c crate::encoding::prepacked::EncodeCache> {
-    cache.filter(|_| eng.tcu().variant == crate::pe::Variant::EntOurs)
+    cache.filter(|_| eng.tcu().variant.consumes_codes())
 }
 
 /// One weight-side GEMM with the weights as the **A** (M×K) operand —

@@ -10,7 +10,7 @@
 //! forward pass exercises the exact bit-level array dataflow. Because
 //! every engine computes exact integer GEMMs and everything between them
 //! (softmax LUT, GELU LUT, layernorm) is integer arithmetic, logits are
-//! bit-identical across all five architectures × three variants — the
+//! bit-identical across all five architectures × four variants — the
 //! paper's functional-transparency claim extended to the transformer
 //! workload (locked by `tests/transformer_equivalence.rs`).
 //!
@@ -391,7 +391,7 @@ impl QuantTransformer {
     /// reused verbatim by the score and context GEMMs — the
     /// activation-side twin of [`QuantTransformer::with_encode_cache`].
     /// Logits stay bit-identical with the flag on or off across the
-    /// 5-arch × 3-variant grid (`tests/kv_prepack.rs`); non-EN-T
+    /// 5-arch × 4-variant grid (`tests/kv_prepack.rs`); non-EN-T
     /// engines fall back to the plain path unconditionally.
     pub fn with_kv_prepack(mut self, on: bool) -> QuantTransformer {
         for b in &mut self.blocks {

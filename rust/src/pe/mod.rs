@@ -2,137 +2,50 @@
 //! microarchitectures instantiate S², S·S, or S³ times.
 //!
 //! A PE is a multiplier core plus (architecture-dependent) an accumulator
-//! and pipeline registers. The EN-T transformation changes *which*
-//! multiplier core a PE carries and *how wide* its multiplicand-path
-//! registers and wires are:
+//! and pipeline registers. The encoder-methodology variants change
+//! *which* multiplier core a PE carries and *how wide* its
+//! multiplicand-path registers and wires are:
 //!
 //! | variant   | multiplier core          | multiplicand path |
 //! |-----------|--------------------------|-------------------|
 //! | Baseline  | DW IP (encoder inside)   | n     = 8 bits    |
 //! | EN-T(MBE) | MBE minus encoders       | 3n/2  = 12 bits   |
 //! | EN-T(Ours)| RME_Ours                 | n+1   = 9 bits    |
+//! | BW-T      | bit-weight RME           | n+1   = 9 bits    |
+//!
+//! All of that is data, not dispatch: each variant's behavior lives in
+//! its [`variant::VariantSpec`] descriptor, and a [`Pe`] (like every
+//! other consumer in the crate) just reads the descriptor.
+
+pub mod variant;
+
+pub use variant::{DatapathKind, Variant, VariantSpec};
 
 use crate::arith::adders::Accumulator;
-use crate::arith::multiplier::{MultKind, Multiplier};
+use crate::arith::multiplier::Multiplier;
 use crate::encoding::ent::SignedEntCode;
-use crate::encoding::Encoding;
-use crate::gates::{calib, Cost, Gate};
-
-/// The three TCU variants compared throughout the paper's Figs 6–12.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub enum Variant {
-    /// Encoders inside every PE (DW-IP multiplier).
-    Baseline,
-    /// EN-T array transformation with MBE kept as the encoding.
-    EntMbe,
-    /// EN-T with the paper's carry-chain encoding ("Ours").
-    EntOurs,
-}
-
-pub const ALL_VARIANTS: [Variant; 3] = [Variant::Baseline, Variant::EntMbe, Variant::EntOurs];
-
-impl Variant {
-    pub fn name(self) -> &'static str {
-        match self {
-            Variant::Baseline => "Baseline",
-            Variant::EntMbe => "EN-T(MBE)",
-            Variant::EntOurs => "EN-T(Ours)",
-        }
-    }
-
-    /// Is the encoder hoisted outside the array?
-    pub fn external_encoder(self) -> bool {
-        !matches!(self, Variant::Baseline)
-    }
-
-    /// Bits on the multiplicand pathway between PEs for an n-bit operand.
-    pub fn multiplicand_bits(self, n: usize) -> usize {
-        match self {
-            Variant::Baseline => n,
-            Variant::EntMbe => crate::encoding::mbe::Mbe.shape(n).encoded_bits,
-            Variant::EntOurs => crate::encoding::ent::Ent.shape(n).encoded_bits,
-        }
-    }
-
-    /// The multiplier core carried by each PE.
-    pub fn mult_kind(self) -> MultKind {
-        match self {
-            Variant::Baseline => MultKind::DwIp,
-            // After hoisting, both EN-T variants keep only selectors +
-            // compressor + adder; the paper's Table 1c shows the MBE and
-            // Ours remainders are cost-identical (RME row).
-            Variant::EntMbe | Variant::EntOurs => MultKind::EntRme,
-        }
-    }
-
-    /// Cost of one PE multiplier core at operand width n.
-    pub fn mult_cost(self, n: usize) -> Cost {
-        match self {
-            Variant::Baseline => Multiplier::new(MultKind::DwIp, n).cost(),
-            Variant::EntMbe => {
-                // MBE multiplier minus its internal encoders:
-                // 292.7−28.22 area, 212.2−24.06 power, 1.86−0.23 delay.
-                let full = Multiplier::new(MultKind::MbeInternal, n).cost();
-                let enc = crate::encoding::mbe::Mbe.encoder_cost(n);
-                Cost::new(
-                    full.area_um2 - enc.area_um2,
-                    full.power_uw - enc.power_uw,
-                    full.delay_ns - enc.delay_ns,
-                )
-            }
-            Variant::EntOurs => Multiplier::new(MultKind::EntRme, n).cost(),
-        }
-    }
-
-    /// Cost of one *column* encoder block feeding the array (external
-    /// variants only), including its output register (§4.3: "encoders …
-    /// enter the array through registers"; Table 2 prices exactly this
-    /// encoder+register block).
-    pub fn column_encoder_cost(self, n: usize) -> Cost {
-        let c = calib::constants();
-        match self {
-            Variant::Baseline => return Cost::ZERO,
-            Variant::EntMbe => {
-                let enc = crate::encoding::mbe::Mbe.encoder_cost(n);
-                let bits = crate::encoding::mbe::Mbe.shape(n).encoded_bits;
-                enc + Gate::DffBit.cost().replicate(bits)
-            }
-            Variant::EntOurs => {
-                let enc = crate::encoding::ent::Ent.encoder_cost(n);
-                let bits = crate::encoding::ent::Ent.shape(n).encoded_bits;
-                enc + Gate::DffBit.cost().replicate(bits)
-            }
-        }
-        .max_delay(c.dff_clk_q_ns)
-    }
-}
-
-trait MaxDelay {
-    fn max_delay(self, d: f64) -> Self;
-}
-
-impl MaxDelay for Cost {
-    fn max_delay(mut self, d: f64) -> Cost {
-        self.delay_ns = self.delay_ns.max(d);
-        self
-    }
-}
 
 /// A functional PE: multiplier core + accumulator state. Architecture
 /// simulators drive one of these per grid point in functional mode.
 #[derive(Clone, Debug)]
 pub struct Pe {
     pub variant: Variant,
+    /// The hoisted core (what the PE physically carries).
     mult: Multiplier,
+    /// The raw-operand functional route (internal-encoder assembly for
+    /// variants that re-encode inside the PE).
+    raw: Multiplier,
     acc_model: Accumulator,
     acc: i64,
 }
 
 impl Pe {
     pub fn new(variant: Variant, operand_bits: usize, array_size: usize) -> Pe {
+        let spec = variant.spec();
         Pe {
             variant,
-            mult: Multiplier::new(variant.mult_kind(), operand_bits),
+            mult: Multiplier::new(spec.mult_kind, operand_bits),
+            raw: Multiplier::new(spec.raw_mac_kind, operand_bits),
             acc_model: Accumulator::for_array(array_size),
             acc: 0,
         }
@@ -148,22 +61,15 @@ impl Pe {
 
     /// Multiply-accumulate with a raw multiplicand (Baseline / EN-T(MBE)
     /// arrays re-encode internally or receive Booth lines; functionally
-    /// both are exact).
+    /// all variants are exact).
     pub fn mac(&mut self, a: i64, b: i64) {
-        let p = match self.variant {
-            Variant::Baseline => self.mult_baseline(a, b),
-            Variant::EntMbe => Multiplier::new(MultKind::MbeInternal, self.mult.width).mul(a, b),
-            Variant::EntOurs => self.mult.mul(a, b),
-        };
+        let p = self.raw.mul(a, b);
         self.acc = self.acc_model.step(self.acc, p);
     }
 
-    fn mult_baseline(&self, a: i64, b: i64) -> i64 {
-        Multiplier::new(MultKind::DwIp, self.mult.width).mul(a, b)
-    }
-
-    /// Multiply-accumulate with a pre-encoded multiplicand — the EN-T
-    /// hot path (the encoded operand arrived over the n+1-bit wires).
+    /// Multiply-accumulate with a pre-encoded multiplicand — the
+    /// external-encoder hot path (the encoded operand arrived over the
+    /// n+1-bit wires).
     pub fn mac_encoded(&mut self, code: &SignedEntCode, b: i64) {
         let p = self.mult.mul_encoded(code, b);
         self.acc = self.acc_model.step(self.acc, p);
@@ -174,12 +80,14 @@ impl Pe {
 mod tests {
     use super::*;
     use crate::encoding::ent::encode_signed;
+    use crate::gates::Cost;
 
     #[test]
     fn multiplicand_path_widths() {
         assert_eq!(Variant::Baseline.multiplicand_bits(8), 8);
         assert_eq!(Variant::EntMbe.multiplicand_bits(8), 12);
         assert_eq!(Variant::EntOurs.multiplicand_bits(8), 9);
+        assert_eq!(Variant::BitWeight.multiplicand_bits(8), 9);
     }
 
     #[test]
@@ -187,10 +95,14 @@ mod tests {
         let base = Variant::Baseline.mult_cost(8);
         let ours = Variant::EntOurs.mult_cost(8);
         let mbe = Variant::EntMbe.mult_cost(8);
+        let bw = Variant::BitWeight.mult_cost(8);
         assert!(ours.area_um2 < base.area_um2);
         assert!(ours.power_uw < base.power_uw);
         // The two hoisted remainders are near-identical (Table 1c).
         assert!((ours.area_um2 - mbe.area_um2).abs() < 1.0);
+        // The bit-weight transformation shaves the per-product adder.
+        assert!(bw.area_um2 < ours.area_um2);
+        assert!(bw.delay_ns < ours.delay_ns);
     }
 
     #[test]
@@ -205,11 +117,13 @@ mod tests {
         );
         let mbe = Variant::EntMbe.column_encoder_cost(8);
         assert!(mbe.area_um2 > ours.area_um2); // 12 vs 9 register bits + bigger encoder
+        // BW-T reuses the carry-chain encoder block wholesale.
+        assert_eq!(Variant::BitWeight.column_encoder_cost(8), ours);
     }
 
     #[test]
     fn pe_mac_matches_reference_all_variants() {
-        for variant in ALL_VARIANTS {
+        for variant in Variant::ALL {
             let mut pe = Pe::new(variant, 8, 32);
             let mut expect: i64 = 0;
             for (a, b) in [(3i64, 4i64), (-77, 100), (127, -128), (-128, -128), (0, 9)] {
@@ -224,11 +138,13 @@ mod tests {
 
     #[test]
     fn pe_mac_encoded_hot_path() {
-        let mut pe = Pe::new(Variant::EntOurs, 8, 16);
-        let code = encode_signed(-77, 8);
-        pe.mac_encoded(&code, 99);
-        pe.mac_encoded(&code, -5);
-        assert_eq!(pe.acc(), -77 * 99 + -77 * -5);
+        for variant in Variant::code_consuming() {
+            let mut pe = Pe::new(variant, 8, 16);
+            let code = encode_signed(-77, 8);
+            pe.mac_encoded(&code, 99);
+            pe.mac_encoded(&code, -5);
+            assert_eq!(pe.acc(), -77 * 99 + -77 * -5, "{}", variant.name());
+        }
     }
 
     #[test]

@@ -1,0 +1,363 @@
+//! The variant descriptor — the single home for per-variant dispatch.
+//!
+//! Everything the rest of the system needs to know about a TCU variant
+//! lives in one [`VariantSpec`] value: display name, CLI token, whether
+//! the encoder is hoisted out of the array, whether the PEs can consume
+//! pre-encoded [`PackedCode`](crate::encoding::packed::PackedCode)
+//! operands, which multiplier core each PE carries (and its calibrated
+//! cost), which encoding feeds the column encoders, how the functional
+//! datapath is built, and the thread-band grain of the software GEMM.
+//!
+//! Adding a variant is therefore one module (its encoding/multiplier
+//! functional model) plus one descriptor below — every grid in the
+//! planner, the energy model, the reports, the CLI, the tests, and the
+//! benches iterates [`Variant::ALL`] and extends automatically.
+//! [`Variant::BitWeight`] (BW-T, the follow-up paper's bit-weight MAC
+//! transformation — see [`crate::encoding::bitweight`]) is the worked
+//! example: it registers the carry-chain encoding with a transformed
+//! multiplier core and rides every existing harness unchanged.
+//!
+//! This module is the only place allowed to `match` on [`Variant`];
+//! everyone else reads the descriptor.
+
+use crate::arith::multiplier::{MultKind, Multiplier};
+use crate::encoding::Encoding;
+use crate::gates::{calib, Cost, Gate};
+
+/// The TCU variants compared throughout the reports: the paper's three
+/// (Figs 6–12) plus the follow-up's bit-weight transformation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// Encoders inside every PE (DW-IP multiplier).
+    Baseline,
+    /// EN-T array transformation with MBE kept as the encoding.
+    EntMbe,
+    /// EN-T with the paper's carry-chain encoding ("Ours").
+    EntOurs,
+    /// BW-T: carry-chain encoding with the follow-up paper's
+    /// transformation in the bit-weight dimension of the MAC core.
+    BitWeight,
+}
+
+/// How [`Datapath`](crate::arch::engine) builds the per-MAC functional
+/// route for a variant — the descriptor's "datapath constructor" field.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatapathKind {
+    /// Opaque exact multiplier (DW-IP contract).
+    Exact,
+    /// Booth digits recoded on the fly inside each PE.
+    MbeOnTheFly,
+    /// Packed-LUT encoded multiplicand through the RME core.
+    EntLut,
+    /// Packed-LUT encoded multiplicand through the bit-weight core.
+    BitWeight,
+}
+
+/// Everything variant-specific, in one value. See the module docs; the
+/// four descriptors live in the `SPEC_*` statics below.
+pub struct VariantSpec {
+    /// Display name as used in the report tables.
+    pub name: &'static str,
+    /// CLI token accepted by `--variant`.
+    pub cli_token: &'static str,
+    /// Is the encoder hoisted outside the array?
+    pub external_encoder: bool,
+    /// Can the PEs consume pre-encoded [`PackedCode`] operands (the
+    /// `matmul_prepacked_into` / encode-cache / KV-sidecar reuse paths)?
+    ///
+    /// [`PackedCode`]: crate::encoding::packed::PackedCode
+    pub consumes_codes: bool,
+    /// Do the multipliers emit redundant (carry-save) products that fuse
+    /// into the 1D/2D Array's compressor tree?
+    pub fused_tree: bool,
+    /// Per-thread-band MAC grain of the software GEMM (exact baseline
+    /// MACs cost ~1 ns, bit-level routes hundreds).
+    pub par_grain: u64,
+    /// The multiplier core carried by each PE (after any hoisting).
+    pub mult_kind: MultKind,
+    /// The functional route of a raw-operand MAC (what [`super::Pe::mac`]
+    /// runs — the internal-encoder assembly for non-hoisted variants).
+    pub raw_mac_kind: MultKind,
+    /// How the engine's [`Datapath`](crate::arch::engine) is built.
+    pub datapath: DatapathKind,
+    /// The column-encoder encoding, if the encoder is external.
+    pub encoding: Option<&'static (dyn Encoding + Sync)>,
+    /// Calibrated cost of one PE multiplier core at operand width n
+    /// (Table 1c row, minus hoisted encoders where applicable).
+    pub mult_cost: fn(usize) -> Cost,
+}
+
+fn cost_dwip(n: usize) -> Cost {
+    Multiplier::new(MultKind::DwIp, n).cost()
+}
+
+fn cost_mbe_hoisted(n: usize) -> Cost {
+    // MBE multiplier minus its internal encoders:
+    // 292.7−28.22 area, 212.2−24.06 power, 1.86−0.23 delay.
+    let full = Multiplier::new(MultKind::MbeInternal, n).cost();
+    let enc = crate::encoding::mbe::Mbe.encoder_cost(n);
+    Cost::new(
+        full.area_um2 - enc.area_um2,
+        full.power_uw - enc.power_uw,
+        full.delay_ns - enc.delay_ns,
+    )
+}
+
+fn cost_ent_rme(n: usize) -> Cost {
+    Multiplier::new(MultKind::EntRme, n).cost()
+}
+
+fn cost_bw_rme(n: usize) -> Cost {
+    Multiplier::new(MultKind::BwRme, n).cost()
+}
+
+static SPEC_BASELINE: VariantSpec = VariantSpec {
+    name: "Baseline",
+    cli_token: "baseline",
+    external_encoder: false,
+    consumes_codes: false,
+    fused_tree: false,
+    par_grain: 1 << 22,
+    mult_kind: MultKind::DwIp,
+    raw_mac_kind: MultKind::DwIp,
+    datapath: DatapathKind::Exact,
+    encoding: None,
+    mult_cost: cost_dwip,
+};
+
+static SPEC_ENT_MBE: VariantSpec = VariantSpec {
+    name: "EN-T(MBE)",
+    cli_token: "mbe",
+    external_encoder: true,
+    consumes_codes: false,
+    fused_tree: true,
+    par_grain: 1 << 16,
+    // After hoisting, both EN-T variants keep only selectors +
+    // compressor + adder; the paper's Table 1c shows the MBE and Ours
+    // remainders are cost-identical (RME row).
+    mult_kind: MultKind::EntRme,
+    raw_mac_kind: MultKind::MbeInternal,
+    datapath: DatapathKind::MbeOnTheFly,
+    encoding: Some(&crate::encoding::mbe::Mbe),
+    mult_cost: cost_mbe_hoisted,
+};
+
+static SPEC_ENT_OURS: VariantSpec = VariantSpec {
+    name: "EN-T(Ours)",
+    cli_token: "ours",
+    external_encoder: true,
+    consumes_codes: true,
+    fused_tree: true,
+    par_grain: 1 << 16,
+    mult_kind: MultKind::EntRme,
+    raw_mac_kind: MultKind::EntRme,
+    datapath: DatapathKind::EntLut,
+    encoding: Some(&crate::encoding::ent::Ent),
+    mult_cost: cost_ent_rme,
+};
+
+static SPEC_BIT_WEIGHT: VariantSpec = VariantSpec {
+    name: "BW-T",
+    cli_token: "bwt",
+    external_encoder: true,
+    // BW-T shares the EN-T carry-chain wire format, so its PEs consume
+    // the same PackedCode sidecars/caches the Ours variant does.
+    consumes_codes: true,
+    fused_tree: true,
+    par_grain: 1 << 16,
+    mult_kind: MultKind::BwRme,
+    raw_mac_kind: MultKind::BwRme,
+    datapath: DatapathKind::BitWeight,
+    encoding: Some(&crate::encoding::bitweight::Bw),
+    mult_cost: cost_bw_rme,
+};
+
+impl Variant {
+    /// The canonical variant list — every grid (tests, benches, report
+    /// tables, CLI sweeps) iterates this, so a new variant extends them
+    /// all by being appended here.
+    pub const ALL: [Variant; 4] = [
+        Variant::Baseline,
+        Variant::EntMbe,
+        Variant::EntOurs,
+        Variant::BitWeight,
+    ];
+
+    /// This variant's descriptor.
+    pub fn spec(self) -> &'static VariantSpec {
+        match self {
+            Variant::Baseline => &SPEC_BASELINE,
+            Variant::EntMbe => &SPEC_ENT_MBE,
+            Variant::EntOurs => &SPEC_ENT_OURS,
+            Variant::BitWeight => &SPEC_BIT_WEIGHT,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        self.spec().name
+    }
+
+    /// The token `--variant` accepts for this variant.
+    pub fn cli_token(self) -> &'static str {
+        self.spec().cli_token
+    }
+
+    /// Parse a CLI token into a variant.
+    pub fn from_cli(token: &str) -> Option<Variant> {
+        Variant::ALL.into_iter().find(|v| v.cli_token() == token)
+    }
+
+    /// The `variant must be ...` alternatives for CLI error messages.
+    pub fn cli_tokens() -> String {
+        Variant::ALL
+            .map(|v| v.cli_token())
+            .join("|")
+    }
+
+    /// Is the encoder hoisted outside the array?
+    pub fn external_encoder(self) -> bool {
+        self.spec().external_encoder
+    }
+
+    /// Can this variant's PEs consume pre-encoded [`PackedCode`]
+    /// operands (encode cache, KV sidecars, prepacked GEMM entry)?
+    ///
+    /// [`PackedCode`]: crate::encoding::packed::PackedCode
+    pub fn consumes_codes(self) -> bool {
+        self.spec().consumes_codes
+    }
+
+    /// Do the multipliers hand redundant (carry-save) products to the
+    /// 1D/2D Array's fused compressor tree?
+    pub fn fused_tree(self) -> bool {
+        self.spec().fused_tree
+    }
+
+    /// Per-thread-band MAC grain of the software GEMM.
+    pub fn par_grain(self) -> u64 {
+        self.spec().par_grain
+    }
+
+    /// The variants whose PEs consume pre-encoded codes.
+    pub fn code_consuming() -> impl Iterator<Item = Variant> {
+        Variant::ALL.into_iter().filter(|v| v.consumes_codes())
+    }
+
+    /// The variants that cannot consume codes (Baseline re-encodes
+    /// inside every PE; EN-T(MBE) Booth-recodes on the fly) — the
+    /// inertness subsets the cache/KV tests iterate.
+    pub fn non_code_consuming() -> impl Iterator<Item = Variant> {
+        Variant::ALL.into_iter().filter(|v| !v.consumes_codes())
+    }
+
+    /// Bits on the multiplicand pathway between PEs for an n-bit operand.
+    pub fn multiplicand_bits(self, n: usize) -> usize {
+        match self.spec().encoding {
+            Some(e) => e.shape(n).encoded_bits,
+            None => n,
+        }
+    }
+
+    /// The multiplier core carried by each PE.
+    pub fn mult_kind(self) -> MultKind {
+        self.spec().mult_kind
+    }
+
+    /// Cost of one PE multiplier core at operand width n.
+    pub fn mult_cost(self, n: usize) -> Cost {
+        (self.spec().mult_cost)(n)
+    }
+
+    /// Cost of one *column* encoder block feeding the array (external
+    /// variants only), including its output register (§4.3: "encoders …
+    /// enter the array through registers"; Table 2 prices exactly this
+    /// encoder+register block).
+    pub fn column_encoder_cost(self, n: usize) -> Cost {
+        let c = calib::constants();
+        match self.spec().encoding {
+            None => Cost::ZERO,
+            Some(e) => {
+                let bits = e.shape(n).encoded_bits;
+                (e.encoder_cost(n) + Gate::DffBit.cost().replicate(bits))
+                    .max_delay(c.dff_clk_q_ns)
+            }
+        }
+    }
+}
+
+trait MaxDelay {
+    fn max_delay(self, d: f64) -> Self;
+}
+
+impl MaxDelay for Cost {
+    fn max_delay(mut self, d: f64) -> Cost {
+        self.delay_ns = self.delay_ns.max(d);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_lists_every_variant_once() {
+        assert_eq!(Variant::ALL.len(), 4);
+        for (i, a) in Variant::ALL.into_iter().enumerate() {
+            for b in &Variant::ALL[i + 1..] {
+                assert_ne!(a, *b);
+                assert_ne!(a.name(), b.name());
+                assert_ne!(a.cli_token(), b.cli_token());
+            }
+        }
+    }
+
+    #[test]
+    fn cli_tokens_roundtrip() {
+        for v in Variant::ALL {
+            assert_eq!(Variant::from_cli(v.cli_token()), Some(v));
+        }
+        assert_eq!(Variant::from_cli("nope"), None);
+        assert_eq!(Variant::cli_tokens(), "baseline|mbe|ours|bwt");
+    }
+
+    #[test]
+    fn consuming_partition_covers_all() {
+        let consuming: Vec<_> = Variant::code_consuming().collect();
+        let inert: Vec<_> = Variant::non_code_consuming().collect();
+        assert_eq!(consuming, vec![Variant::EntOurs, Variant::BitWeight]);
+        assert_eq!(inert, vec![Variant::Baseline, Variant::EntMbe]);
+        assert_eq!(consuming.len() + inert.len(), Variant::ALL.len());
+        // Consuming implies the encoder is external (codes must be
+        // produced outside the array to be reused).
+        for v in consuming {
+            assert!(v.external_encoder());
+        }
+    }
+
+    #[test]
+    fn descriptor_fields_are_consistent() {
+        for v in Variant::ALL {
+            let spec = v.spec();
+            assert_eq!(spec.external_encoder, spec.encoding.is_some());
+            // The canonical grid and the descriptor agree on the grain
+            // split: only the exact-MAC baseline gets the coarse grain.
+            if spec.datapath == DatapathKind::Exact {
+                assert_eq!(spec.par_grain, 1 << 22);
+            } else {
+                assert_eq!(spec.par_grain, 1 << 16);
+            }
+        }
+    }
+
+    #[test]
+    fn bitweight_rides_the_ent_wire_format() {
+        // Same encoded shape as Ours: n+1 wire bits from n/2−1 chained
+        // encoders — the transformation lives in the MAC, not the wires.
+        assert_eq!(Variant::BitWeight.multiplicand_bits(8), 9);
+        assert_eq!(
+            Variant::BitWeight.column_encoder_cost(8),
+            Variant::EntOurs.column_encoder_cost(8)
+        );
+    }
+}

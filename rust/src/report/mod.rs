@@ -9,7 +9,7 @@ use crate::arch::{ArchKind, Tcu, ALL_ARCHS, ALL_SCALES};
 use crate::arith::multiplier::{MultKind, Multiplier};
 use crate::encoding::{ent::Ent, mbe::Mbe, Encoding};
 use crate::nn::zoo;
-use crate::pe::{Variant, ALL_VARIANTS};
+use crate::pe::Variant;
 use crate::soc::{energy, Soc};
 use crate::util::table::{f, pct, Table};
 
@@ -62,6 +62,7 @@ pub fn table1() -> String {
         MultKind::MbeInternal,
         MultKind::EntInternal,
         MultKind::EntRme,
+        MultKind::BwRme,
     ] {
         let c = Multiplier::new(kind, 8).cost();
         t.row(vec![
@@ -88,7 +89,7 @@ pub fn fig6() -> String {
         for arch in ALL_ARCHS {
             let s = arch.size_for_scale(scale);
             let base = Tcu::new(arch, s, Variant::Baseline).cost().total();
-            for variant in ALL_VARIANTS {
+            for variant in Variant::ALL {
                 let c = Tcu::new(arch, s, variant).cost().total();
                 t.row(vec![
                     arch.name().into(),
@@ -222,13 +223,17 @@ pub fn fig9(arch: ArchKind) -> String {
 
 /// Fig 10 — single-frame SoC inference energy, baseline vs EN-T.
 pub fn fig10() -> String {
-    let mut t = Table::new("\nFig 10 — Single-frame SoC energy (mJ)").header(&[
-        "network", "arch", "Baseline", "EN-T(MBE)", "EN-T(Ours)",
-    ]);
+    // One energy column per variant, in Variant::ALL order — the row
+    // loop below fills them from the same iterator, so the header can
+    // never drift from the data when a variant is added.
+    let mut cols: Vec<String> = vec!["network".into(), "arch".into()];
+    cols.extend(Variant::ALL.iter().map(|v| v.name().to_string()));
+    let mut t = Table::new("\nFig 10 — Single-frame SoC energy (mJ)")
+        .header(&cols.iter().map(String::as_str).collect::<Vec<_>>());
     for net in zoo::paper_networks() {
         for arch in ALL_ARCHS {
             let mut row = vec![net.name.to_string(), arch.name().to_string()];
-            for variant in ALL_VARIANTS {
+            for variant in Variant::ALL {
                 let soc = Soc::paper_config(arch, variant);
                 let (e, _) = energy::frame_energy(&soc, &net);
                 row.push(f(e.total_mj(), 2));
@@ -325,7 +330,7 @@ pub fn transformer() -> String {
         kv_prepack: true,
     };
     for arch in ALL_ARCHS {
-        for variant in ALL_VARIANTS {
+        for variant in Variant::ALL {
             let soc = Soc::paper_config(arch, variant);
             let (pre, _) = energy::frame_energy(&soc, &prefill_net);
             let (dec, _) = energy::frame_energy(&soc, &decode_net);
@@ -600,7 +605,7 @@ mod tests {
     #[test]
     fn table1_mentions_all_methods() {
         let s = table1();
-        for m in ["MBE", "Ours", "DW IP", "RME_Ours"] {
+        for m in ["MBE", "Ours", "DW IP", "RME_Ours", "BW-T"] {
             assert!(s.contains(m), "missing {m}");
         }
     }
@@ -626,7 +631,7 @@ mod tests {
         for arch in ALL_ARCHS {
             assert!(s.contains(arch.name()), "missing {}", arch.name());
         }
-        for v in ALL_VARIANTS {
+        for v in Variant::ALL {
             assert!(s.contains(v.name()), "missing {}", v.name());
         }
         assert!(s.contains("KV MAC saving"));

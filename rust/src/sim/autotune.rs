@@ -22,7 +22,7 @@
 //! [`TilePlan::stats`] tiles by the array size rather than the chosen
 //! extents, so event counts (cycles, MACs, encodes) are invariant under
 //! the tuning space too. Both invariants are locked by
-//! `tests/autotune.rs` across the 5-architecture × 3-variant grid.
+//! `tests/autotune.rs` across the 5-architecture × 4-variant grid.
 //!
 //! Wiring: engines consult the tuner through
 //! [`TcuEngine::tuner`](crate::arch::TcuEngine::tuner) — the serving

@@ -110,7 +110,7 @@ mod tests {
         let mut rng = Rng::new(0xB1);
         for arch in ALL_ARCHS {
             let size = if arch == ArchKind::Cube3d { 4 } else { 8 };
-            for variant in crate::pe::ALL_VARIANTS {
+            for variant in crate::pe::Variant::ALL {
                 let tcu = Tcu::new(arch, size, variant);
                 let (m, k, n) = (13, 21, 10); // deliberately non-multiples
                 let a = rng.i8_vec(m * k);

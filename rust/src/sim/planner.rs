@@ -191,7 +191,7 @@ impl TilePlan {
     /// [`TcuEngine::matmul_prepacked_into`](crate::arch::TcuEngine::matmul_prepacked_into).
     pub fn stats_cached(&self) -> GemmStats {
         let mut st = self.stats();
-        if self.tcu.variant == crate::pe::Variant::EntOurs {
+        if self.tcu.variant.consumes_codes() {
             st.encodes -= st.weight_encodes;
             st.weight_encodes = 0;
         }
@@ -251,7 +251,7 @@ impl TilePlan {
 /// energy walk's multi-instance merge (`crate::soc::energy`), so the
 /// consuming-variant set cannot drift between them.
 pub fn apply_kv_prepack(variant: crate::pe::Variant, st: &mut GemmStats, fresh: u64) {
-    if variant == crate::pe::Variant::EntOurs {
+    if variant.consumes_codes() {
         st.encodes = fresh;
         st.activation_encodes = fresh;
     }
@@ -353,7 +353,7 @@ mod tests {
             assert_eq!(cached.cycles, plain.cycles, "{}", kind.name());
             assert_eq!(cached.a_reads, plain.a_reads, "{}", kind.name());
             assert_eq!(cached.b_reads, plain.b_reads, "{}", kind.name());
-            for v in [Variant::Baseline, Variant::EntMbe] {
+            for v in Variant::non_code_consuming() {
                 let tcu = Tcu::new(kind, s, v);
                 let g = GemmShape::new(13, 21, 10);
                 let p = TilePlan::new(&tcu, g).stats();
@@ -382,7 +382,7 @@ mod tests {
         assert_eq!(pp.cycles, plain.cycles);
         assert_eq!(pp.a_reads, plain.a_reads);
         assert_eq!(pp.b_reads, plain.b_reads);
-        for v in [Variant::Baseline, Variant::EntMbe] {
+        for v in Variant::non_code_consuming() {
             let tcu = Tcu::new(ArchKind::SystolicOs, 8, v);
             let tp = TilePlan::new(&tcu, GemmShape::new(1, 8, 17));
             assert_eq!(
@@ -417,7 +417,7 @@ mod tests {
         assert_eq!(part.activation_encodes, (17 - 8) * 8);
         // No residency degenerates to the all-fresh prepack charge.
         assert_eq!(p.stats_kv_shared(0).encodes, p.stats_kv_prepacked(17 * 8).encodes);
-        for v in [Variant::Baseline, Variant::EntMbe] {
+        for v in Variant::non_code_consuming() {
             let tcu = Tcu::new(ArchKind::SystolicOs, 8, v);
             let tp = TilePlan::new(&tcu, GemmShape::new(1, 8, 17));
             assert_eq!(

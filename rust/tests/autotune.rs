@@ -1,7 +1,7 @@
 //! The tile-plan autotuner acceptance grid: calibrated blocking and
 //! band-split choices must be **observationally invisible** — every
 //! tuned GEMM bit-identical to the untuned default across the
-//! 5-architecture × 3-variant grid, autotuned serving runs bit-identical
+//! 5-architecture × 4-variant grid, autotuned serving runs bit-identical
 //! to untuned runs through the continuous scheduler (composing with
 //! prefix sharing, KV prepacking, and oracle speculation), and the
 //! planner's event model invariant under the entire tuning space. The
@@ -11,7 +11,7 @@ use ent::arch::{gemm_ref, ArchKind, Tcu, TcuEngine, Tuned, ALL_ARCHS};
 use ent::coordinator::batcher::ContinuousPolicy;
 use ent::coordinator::{Config, Coordinator, DraftKind, Spec, TokenRequest};
 use ent::nn::transformer::QuantTransformer;
-use ent::pe::{Variant, ALL_VARIANTS};
+use ent::pe::Variant;
 use ent::sim::autotune::PlanTuner;
 use ent::sim::{GemmShape, TilePlan};
 use ent::util::prng::Rng;
@@ -42,7 +42,7 @@ const SHAPES: [(usize, usize, usize); 4] = [(36, 27, 16), (16, 32, 32), (1, 32, 
 fn tuned_matmul_bit_identical_across_arch_variant_grid() {
     let mut rng = Rng::new(0xA1);
     for arch in ALL_ARCHS {
-        for variant in ALL_VARIANTS {
+        for variant in Variant::ALL {
             let size = if arch == ArchKind::Cube3d { 8 } else { 16 };
             let eng = Tcu::new(arch, size, variant).engine();
             let tuner = PlanTuner::new();
@@ -224,7 +224,7 @@ fn shape_fuzz_stats_invariant_under_blocking() {
     let mut rng = Rng::new(0xF022);
     for round in 0..60 {
         let arch = *rng.pick(&ALL_ARCHS);
-        let variant = *rng.pick(&ALL_VARIANTS);
+        let variant = *rng.pick(&Variant::ALL);
         let size = *rng.pick(&[4usize, 8, 16]);
         let tcu = Tcu::new(arch, size, variant);
         let (cap_m, cap_k, cap_n) = tcu.tile_caps();

@@ -4,7 +4,7 @@
 //! invisible** — logits and generated tokens bit-identical to the
 //! unified single-pool scheduler (and, transitively through
 //! `serve_equivalence.rs`, to sequential decode) across all five TCU
-//! architectures and all three PE variants. The handoff between pools
+//! architectures and all four PE variants. The handoff between pools
 //! moves paged `KvBlock` Arcs plus their `PackedCode` sidecars and
 //! nothing else, so it must charge **zero encode events**: the pooled
 //! run's KV-residency counters equal the unified run's exactly.
@@ -75,7 +75,7 @@ fn pooled_serving_bit_identical_to_unified_grid() {
     let generating = requests.iter().filter(|&&(_, g)| g > 0).count() as u64;
     let handoff_rows: u64 = requests.iter().filter(|&&(_, g)| g > 0).map(|&(p, _)| p as u64).sum();
     for arch in ALL_ARCHS {
-        for variant in [Variant::Baseline, Variant::EntMbe, Variant::EntOurs] {
+        for variant in Variant::ALL {
             let label = format!("{}/{}", arch.name(), variant.name());
             let (pooled, unified) = pair(arch, variant);
             for (coord, which) in [(&pooled, "pooled"), (&unified, "unified")] {

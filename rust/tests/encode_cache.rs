@@ -1,6 +1,6 @@
 //! Cache-equivalence suite for the encoded-weight cache
 //! (`encoding::prepacked`): logits must be bit-identical with the cache
-//! on or off across the full 5-architecture × 3-variant grid, under
+//! on or off across the full 5-architecture × 4-variant grid, under
 //! forced eviction (a budget below one entry), and after a mid-serve
 //! weight swap — and with the cache resident, the planner must charge
 //! **zero** weight-encode events per steady-state decode step.
@@ -12,7 +12,7 @@ use ent::coordinator::{Config, Coordinator, TokenRequest};
 use ent::encoding::prepacked::{CachedWeight, EncodeCache, PrePackedMatrix};
 use ent::nn::forward::QuantCnn;
 use ent::nn::transformer::QuantTransformer;
-use ent::pe::{Variant, ALL_VARIANTS};
+use ent::pe::Variant;
 use ent::sim::planner::TilePlan;
 use ent::sim::GemmShape;
 use ent::soc::energy::{frame_energy, frame_energy_with, EnergyOpts};
@@ -31,7 +31,7 @@ fn transformer_logits_identical_with_cache_across_grid() {
     let plain = QuantTransformer::tiny_native();
     for arch in ALL_ARCHS {
         let size = if arch == ArchKind::Cube3d { 4 } else { 8 };
-        for variant in ALL_VARIANTS {
+        for variant in Variant::ALL {
             let eng = Tcu::new(arch, size, variant).engine();
             let cache = Arc::new(EncodeCache::new(16 << 20));
             let cached = QuantTransformer::tiny_native().with_encode_cache(cache.clone());
@@ -40,7 +40,7 @@ fn transformer_logits_identical_with_cache_across_grid() {
             assert_eq!(got_logits, want_logits, "{} {}", arch.name(), variant.name());
             assert_eq!(got_toks, want_toks, "{} {}", arch.name(), variant.name());
             let st = cache.stats();
-            if variant == Variant::EntOurs {
+            if variant.consumes_codes() {
                 assert!(st.misses > 0, "cache untouched on {}", arch.name());
                 assert_eq!(st.evictions, 0, "budget must hold the tiny model");
             } else {
@@ -82,7 +82,7 @@ fn cnn_logits_identical_with_cache_across_grid() {
     let img = rng.i8_vec(plain.input_len());
     for arch in [ArchKind::Matrix2d, ArchKind::SystolicWs, ArchKind::Cube3d] {
         let size = if arch == ArchKind::Cube3d { 4 } else { 8 };
-        for variant in ALL_VARIANTS {
+        for variant in Variant::ALL {
             let eng = Tcu::new(arch, size, variant).engine();
             let cache = Arc::new(EncodeCache::new(16 << 20));
             let cached = QuantCnn::tiny_native().with_encode_cache(cache);

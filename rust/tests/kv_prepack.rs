@@ -1,7 +1,7 @@
 //! Equivalence + accounting suite for the **append-only prepacked KV
 //! cache** (`nn::attention::KvCache`'s code sidecar): decode with
 //! kv-prepack on must be bit-identical to the plain path across the
-//! full 5-architecture × 3-variant grid, `truncate()` must invalidate
+//! full 5-architecture × 4-variant grid, `truncate()` must invalidate
 //! exactly the dropped suffix, and — the acceptance criterion — a
 //! decode step with the cache resident must charge **O(1)**
 //! weight+activation encode events through the planner, independent of
@@ -10,7 +10,7 @@
 use ent::arch::{ArchKind, Tcu, ALL_ARCHS};
 use ent::coordinator::{Config, Coordinator, TokenRequest};
 use ent::nn::transformer::{QuantTransformer, TransformerSpec};
-use ent::pe::{Variant, ALL_VARIANTS};
+use ent::pe::Variant;
 use ent::soc::energy::{frame_energy_with, EnergyOpts};
 use ent::soc::Soc;
 
@@ -28,7 +28,7 @@ fn decode_bit_identical_with_kv_prepack_across_grid() {
     let prepacked = QuantTransformer::tiny_native().with_kv_prepack(true);
     for arch in ALL_ARCHS {
         let size = if arch == ArchKind::Cube3d { 4 } else { 8 };
-        for variant in ALL_VARIANTS {
+        for variant in Variant::ALL {
             let eng = Tcu::new(arch, size, variant).engine();
             let (want_logits, want_toks) = plain.generate(&eng, &prompt(5), 3);
             let (got_logits, got_toks) = prepacked.generate(&eng, &prompt(5), 3);
@@ -128,7 +128,7 @@ fn decode_step_encodes_are_o1_with_kv_prepack() {
 fn kv_prepack_is_inert_on_non_consuming_variants() {
     let spec = TransformerSpec::tiny();
     let net = spec.decode_network(17);
-    for variant in [Variant::Baseline, Variant::EntMbe] {
+    for variant in Variant::non_code_consuming() {
         let soc = Soc::paper_config(ArchKind::SystolicOs, variant);
         let plain = frame_energy_with(&soc, &net, EnergyOpts::default()).0;
         let pp = frame_energy_with(

@@ -2,7 +2,7 @@
 //! (`nn::kvpool::KvPool` — paged K/V blocks behind a radix prefix
 //! index): a warm-prefix run adopting pool-resident blocks must be
 //! bit-identical to a cold run across the full 5-architecture ×
-//! 3-variant grid, copy-on-write forks must match their solo runs, LRU
+//! 4-variant grid, copy-on-write forks must match their solo runs, LRU
 //! eviction under a one-entry budget must never invalidate blocks a
 //! live sequence holds, and — the acceptance criterion — resident rows
 //! must charge **0** encode events and **0** prefill MACs through the
@@ -12,7 +12,7 @@ use ent::arch::{ArchKind, Tcu, ALL_ARCHS};
 use ent::coordinator::{Config, Coordinator, TokenRequest};
 use ent::nn::kvpool::{shareable_rows, KvPool, BLOCK_ROWS};
 use ent::nn::transformer::{QuantTransformer, TransformerSpec};
-use ent::pe::{Variant, ALL_VARIANTS};
+use ent::pe::Variant;
 use ent::sim::{GemmShape, TilePlan};
 use ent::soc::energy::{frame_energy_with, EnergyOpts};
 use ent::soc::Soc;
@@ -32,7 +32,7 @@ fn warm_prefix_decode_bit_identical_across_grid() {
     let toks = prompt(9);
     for arch in ALL_ARCHS {
         let size = if arch == ArchKind::Cube3d { 4 } else { 8 };
-        for variant in ALL_VARIANTS {
+        for variant in Variant::ALL {
             let eng = Tcu::new(arch, size, variant).engine();
             let tag = format!("{} {}", arch.name(), variant.name());
             // Cold reference run.
@@ -173,7 +173,7 @@ fn warm_prefix_admission_charges_zero_encodes_for_resident_rows() {
     assert_eq!(warm.cycles, plain.cycles);
     assert_eq!(warm.a_reads, plain.a_reads);
     assert_eq!(warm.b_reads, plain.b_reads);
-    for v in [Variant::Baseline, Variant::EntMbe] {
+    for v in Variant::non_code_consuming() {
         let t = Tcu::new(ArchKind::SystolicOs, 8, v);
         let p = TilePlan::new(&t, GemmShape::new(1, 8, 17));
         assert_eq!(p.stats_kv_shared(17).encodes, p.stats_attention().encodes);

@@ -18,20 +18,29 @@ fn prompt(len: usize, salt: usize) -> Vec<u16> {
 
 /// Sequential ground truth on one engine of the same geometry the
 /// native backend shards use (size 16; cube edge 8).
-fn sequential(arch: ArchKind, tokens: &[u16], max_new: usize) -> (Vec<f32>, Vec<u16>) {
+fn sequential_on(
+    arch: ArchKind,
+    variant: Variant,
+    tokens: &[u16],
+    max_new: usize,
+) -> (Vec<f32>, Vec<u16>) {
     let model = QuantTransformer::tiny_native();
     let size = if arch == ArchKind::Cube3d { 8 } else { 16 };
-    let eng = Tcu::new(arch, size, Variant::EntOurs).engine();
+    let eng = Tcu::new(arch, size, variant).engine();
     model.generate(&eng, tokens, max_new)
 }
 
-/// A continuous coordinator on `arch` with a small prefill chunk, so
-/// prompts are force-chunked and sequences progress through mixed
-/// prefill/decode steps.
-fn continuous_coordinator(arch: ArchKind, shards: usize) -> Coordinator {
+fn sequential(arch: ArchKind, tokens: &[u16], max_new: usize) -> (Vec<f32>, Vec<u16>) {
+    sequential_on(arch, Variant::EntOurs, tokens, max_new)
+}
+
+/// A continuous coordinator on `arch` × `variant` with a small prefill
+/// chunk, so prompts are force-chunked and sequences progress through
+/// mixed prefill/decode steps.
+fn continuous_coordinator_on(arch: ArchKind, variant: Variant, shards: usize) -> Coordinator {
     let cfg = Config::builder()
         .continuous(shards)
-        .twin(arch, Variant::EntOurs)
+        .twin(arch, variant)
         .policy(ContinuousPolicy {
             prefill_chunk: 3,
             ..ContinuousPolicy::default()
@@ -39,6 +48,10 @@ fn continuous_coordinator(arch: ArchKind, shards: usize) -> Coordinator {
         .build()
         .expect("config");
     Coordinator::start(cfg).expect("continuous coordinator")
+}
+
+fn continuous_coordinator(arch: ArchKind, shards: usize) -> Coordinator {
+    continuous_coordinator_on(arch, Variant::EntOurs, shards)
 }
 
 /// The acceptance criterion: concurrent requests with different prompt
@@ -57,39 +70,71 @@ fn continuous_decode_bit_identical_to_sequential_all_archs() {
             .enumerate()
             .map(|(salt, &(plen, gen))| sequential(arch, &prompt(plen, salt), gen))
             .collect();
-        // Submit everything up front so the step loop sees all four in
-        // flight at once.
-        let rxs: Vec<_> = requests
+        run_grid_point(arch, coord, &requests, &expected);
+    }
+}
+
+/// The same acceptance criterion swept over the variant axis on one
+/// architecture (the arch grid above covers the rest at EN-T(Ours)):
+/// every variant in [`Variant::ALL`] — Baseline, EN-T(MBE),
+/// EN-T(Ours), and BW-T — serves bit-identically to its own
+/// sequential decode through the continuous scheduler.
+#[test]
+fn continuous_decode_bit_identical_to_sequential_all_variants() {
+    let requests: [(usize, usize); 4] = [(5, 3), (8, 1), (3, 4), (7, 0)];
+    let arch = ArchKind::SystolicOs;
+    for variant in Variant::ALL {
+        let coord = continuous_coordinator_on(arch, variant, 2);
+        let expected: Vec<_> = requests
             .iter()
             .enumerate()
-            .map(|(salt, &(plen, gen))| {
-                coord.submit_tokens(TokenRequest::generate(prompt(plen, salt), gen))
-            })
+            .map(|(salt, &(plen, gen))| sequential_on(arch, variant, &prompt(plen, salt), gen))
             .collect();
-        for (i, (rx, (want_logits, want_gen))) in rxs.into_iter().zip(&expected).enumerate() {
-            let r = rx
-                .recv()
-                .expect("scheduler alive")
-                .unwrap_or_else(|e| panic!("{} request {i}: {e}", arch.name()));
-            assert_eq!(
-                &r.logits, want_logits,
-                "{} request {i}: continuous logits diverged",
-                arch.name()
-            );
-            assert_eq!(
-                &r.generated, want_gen,
-                "{} request {i}: continuous generation diverged",
-                arch.name()
-            );
-        }
-        let m = coord.metrics();
-        assert_eq!(m.errors, 0);
-        assert_eq!(m.requests, requests.len() as u64);
-        // Every prompt position and decode step was counted.
-        let want_tokens: usize = requests.iter().map(|&(p, g)| p + g).sum();
-        assert_eq!(m.tokens, want_tokens as u64);
-        coord.shutdown();
+        run_grid_point(arch, coord, &requests, &expected);
     }
+}
+
+/// Shared body of the arch- and variant-grid acceptance tests: submit
+/// everything up front, compare each reply to its sequential
+/// expectation, and check the step-loop counters.
+fn run_grid_point(
+    arch: ArchKind,
+    coord: Coordinator,
+    requests: &[(usize, usize)],
+    expected: &[(Vec<f32>, Vec<u16>)],
+) {
+    // Submit everything up front so the step loop sees all four in
+    // flight at once.
+    let rxs: Vec<_> = requests
+        .iter()
+        .enumerate()
+        .map(|(salt, &(plen, gen))| {
+            coord.submit_tokens(TokenRequest::generate(prompt(plen, salt), gen))
+        })
+        .collect();
+    for (i, (rx, (want_logits, want_gen))) in rxs.into_iter().zip(expected).enumerate() {
+        let r = rx
+            .recv()
+            .expect("scheduler alive")
+            .unwrap_or_else(|e| panic!("{} request {i}: {e}", arch.name()));
+        assert_eq!(
+            &r.logits, want_logits,
+            "{} request {i}: continuous logits diverged",
+            arch.name()
+        );
+        assert_eq!(
+            &r.generated, want_gen,
+            "{} request {i}: continuous generation diverged",
+            arch.name()
+        );
+    }
+    let m = coord.metrics();
+    assert_eq!(m.errors, 0);
+    assert_eq!(m.requests, requests.len() as u64);
+    // Every prompt position and decode step was counted.
+    let want_tokens: usize = requests.iter().map(|&(p, g)| p + g).sum();
+    assert_eq!(m.tokens, want_tokens as u64);
+    coord.shutdown();
 }
 
 /// Window-mode generation matches continuous-mode generation (and both

@@ -2,7 +2,7 @@
 //! ahead and verifying the window in one coalesced multi-row pass must
 //! be **observationally invisible** — logits and generated tokens
 //! bit-identical to plain sequential greedy decode — across all five
-//! TCU architectures, all three PE variants, every window size, and
+//! TCU architectures, all four PE variants, every window size, and
 //! both forced-acceptance (oracle) and forced-rejection (anti-oracle)
 //! draft stubs. Greedy speculative decoding is exact by construction:
 //! every emitted token is the target's argmax given exactly the tokens
@@ -109,7 +109,7 @@ fn assert_equivalent(
 fn speculative_decode_bit_identical_to_sequential_grid() {
     let requests: [(usize, usize); 4] = [(5, 3), (8, 4), (3, 6), (7, 0)];
     for arch in ALL_ARCHS {
-        for variant in [Variant::Baseline, Variant::EntMbe, Variant::EntOurs] {
+        for variant in Variant::ALL {
             let label = format!("{}/{}", arch.name(), variant.name());
             let coord = spec_coordinator(arch, variant, 4, DraftKind::Tiny);
             assert_equivalent(&coord, arch, variant, &requests, &label);

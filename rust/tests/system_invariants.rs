@@ -3,7 +3,7 @@
 
 use ent::arch::{gemm_ref, ArchKind, Scale, Tcu, ALL_ARCHS, ALL_SCALES};
 use ent::nn::zoo;
-use ent::pe::{Variant, ALL_VARIANTS};
+use ent::pe::Variant;
 use ent::sim::{gemm_stats, tiled_matmul, GemmShape};
 use ent::soc::{energy, Soc};
 use ent::util::check::{check, Config};
@@ -24,7 +24,7 @@ fn ent_is_functionally_invisible() {
             let a = rng.i8_vec(m * k);
             let b = rng.i8_vec(k * n);
             let want = gemm_ref(&a, &b, m, k, n);
-            for variant in ALL_VARIANTS {
+            for variant in Variant::ALL {
                 let tcu = Tcu::new(arch, size, variant);
                 let got = tiled_matmul(&tcu, &a, &b, m, k, n);
                 if got != want {

@@ -6,7 +6,7 @@
 use ent::arch::{ArchKind, Tcu, ALL_ARCHS};
 use ent::coordinator::{Config, Coordinator, TokenRequest};
 use ent::nn::transformer::{QuantTransformer, TransformerSpec};
-use ent::pe::{Variant, ALL_VARIANTS};
+use ent::pe::Variant;
 use ent::soc::{energy, Soc};
 
 fn prompt(n: usize) -> Vec<u16> {
@@ -14,9 +14,10 @@ fn prompt(n: usize) -> Vec<u16> {
 }
 
 /// The paper's functional-transparency claim at transformer scope:
-/// every architecture × {Baseline, EN-T(MBE), EN-T(Ours)} produces
-/// bit-identical next-token logits, through every GEMM of the encoder
-/// stack (projections, per-head attention contractions, MLP, head).
+/// every architecture × every variant in [`Variant::ALL`] (Baseline,
+/// EN-T(MBE), EN-T(Ours), BW-T) produces bit-identical next-token
+/// logits, through every GEMM of the encoder stack (projections,
+/// per-head attention contractions, MLP, head).
 #[test]
 fn transformer_logits_identical_across_all_arch_variants() {
     let model = QuantTransformer::tiny_native();
@@ -28,7 +29,7 @@ fn transformer_logits_identical_across_all_arch_variants() {
     assert!(reference.iter().any(|&x| x != reference[0]), "degenerate");
     for arch in ALL_ARCHS {
         let size = if arch == ArchKind::Cube3d { 4 } else { 8 };
-        for variant in ALL_VARIANTS {
+        for variant in Variant::ALL {
             let eng = Tcu::new(arch, size, variant).engine();
             assert_eq!(
                 model.logits(&eng, &toks),
